@@ -1,0 +1,53 @@
+//! Chat tuning (paper §4, ultrachat substitute) with the *adaptive*
+//! T_interval scheduler — the paper's §7 future-work extension: shrink the
+//! SGD interval while FF stages stay productive, grow it when they fizzle.
+//!
+//! Compares fixed T_interval=6 (the paper's setting) against the adaptive
+//! schedule on the multi-turn dialogue corpus.
+//!
+//! Run: `cargo run --release --example chat_tuning`
+
+use std::path::PathBuf;
+
+use fastforward::config::{presets, FfConfig};
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::{StopRule, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    fastforward::util::logging::init();
+    let artifacts = PathBuf::from("artifacts");
+    let rt = Runtime::cpu()?;
+    let base = ensure_pretrained(&rt, &artifacts, "ff-tiny", None)?;
+
+    let mut results = Vec::new();
+    for (label, adaptive) in [("fixed T_interval=6", false), ("adaptive interval", true)] {
+        let mut cfg = presets::train_config("ff-tiny_lora_r8", "chat", 2)?;
+        cfg.train_examples = 2048;
+        cfg.test_examples = 256;
+        cfg.ff = FfConfig { adaptive_interval: adaptive, ..FfConfig::default() };
+        let steps = cfg.max_steps;
+        let mut t = Trainer::new(&rt, &artifacts, cfg, Some(&base))?;
+        let sum = t.run(&StopRule::MaxSteps(steps))?;
+        println!(
+            "{label:<20} loss {:.4} | {} adam + {} sim steps | {:.2e} FLOPs | final interval {}",
+            sum.final_test_loss,
+            sum.adam_steps,
+            sum.sim_steps,
+            sum.flops.total() as f64,
+            t.ffc.interval()
+        );
+        let taus: Vec<usize> = t.ffc.stages.iter().map(|s| s.tau_star).collect();
+        println!("  τ* per stage: {taus:?}");
+        results.push((label, sum.final_test_loss, sum.flops.total()));
+    }
+
+    let (_, l_fixed, f_fixed) = results[0];
+    let (_, l_adapt, f_adapt) = results[1];
+    println!(
+        "\nadaptive vs fixed: Δloss {:+.4}, FLOPs ratio {:.2}×",
+        l_adapt - l_fixed,
+        f_adapt as f64 / f_fixed as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the smallest complete Fast Forward run.
+//!
+//! Pretrains (or loads the cached) tiny base model, finetunes it on the
+//! medical task twice — plain Adam vs Fast Forward — and prints the FLOPs
+//! and wall-clock savings at matched test loss, i.e. the paper's headline
+//! measurement on one grid cell.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+use std::path::PathBuf;
+
+use fastforward::config::{presets, FfConfig};
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::{StopRule, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    fastforward::util::logging::init();
+    let artifacts = PathBuf::from("artifacts");
+    let rt = Runtime::cpu()?;
+
+    // 1. A pretrained starting point (cached under artifacts/checkpoints).
+    let base = ensure_pretrained(&rt, &artifacts, "ff-tiny", None)?;
+
+    // 2. Baseline: 2 epochs of plain Adam on the medical task.
+    let mut cfg = presets::train_config("ff-tiny_lora_r8", "medical", 2)?;
+    cfg.test_examples = 256;
+    cfg.ff = FfConfig { enabled: false, ..FfConfig::default() };
+    let steps = cfg.max_steps;
+    let mut baseline = Trainer::new(&rt, &artifacts, cfg.clone(), Some(&base))?;
+    let b = baseline.run(&StopRule::MaxSteps(steps))?;
+    println!(
+        "baseline: loss {:.4} | {} steps | {:.2e} FLOPs | {:.1}s",
+        b.final_test_loss, b.adam_steps, b.flops.total() as f64, b.train_seconds
+    );
+
+    // 3. Fast Forward: same data, run until the baseline loss is matched.
+    cfg.ff = FfConfig::default();
+    let mut ff = Trainer::new(&rt, &artifacts, cfg, Some(&base))?;
+    let f = ff.run(&StopRule::TargetLoss {
+        target: b.final_test_loss,
+        eps: 3e-3,
+        eval_every: 4,
+        max_steps: steps * 3,
+    })?;
+    println!(
+        "fast-fwd: loss {:.4} | {} adam + {} simulated steps | {:.2e} FLOPs | {:.1}s",
+        f.final_test_loss, f.adam_steps, f.sim_steps, f.flops.total() as f64, f.train_seconds
+    );
+
+    println!(
+        "\nFLOPs saved: {:.1}%   train time saved: {:.1}%   (paper Fig 2/3: 41–87%)",
+        100.0 * (1.0 - f.flops.total() as f64 / b.flops.total() as f64),
+        100.0 * (1.0 - f.train_seconds / b.train_seconds),
+    );
+    for s in &ff.ffc.stages {
+        println!(
+            "  ff stage {:>2} @step {:>3}: τ*={:<3} val {:.4}→{:.4}",
+            s.stage, s.at_step, s.tau_star, s.baseline_loss, s.final_loss
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Rank sweep (paper Fig 7 as a library-API walkthrough): train LoRA
+//! adapters at ranks 1–64 on the medical task and print how Fast Forward
+//! behaviour (τ* and FLOPs) scales with rank — including rank 64, which
+//! equals d_model for ff-tiny, i.e. the paper's "LoRA full rank" setting.
+//!
+//! Run: `cargo run --release --example rank_sweep -- [--steps N]`
+
+use std::path::PathBuf;
+
+use fastforward::config::presets;
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::{StopRule, Trainer};
+use fastforward::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    fastforward::util::logging::init();
+    let mut args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let steps = args.opt_usize("steps", 40).map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let artifacts = PathBuf::from("artifacts");
+    let rt = Runtime::cpu()?;
+    let base = ensure_pretrained(&rt, &artifacts, "ff-tiny", None)?;
+
+    println!("{:>5} {:>10} {:>8} {:>9} {:>12}", "rank", "trainable", "sim", "loss", "FLOPs");
+    for rank in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut cfg = presets::train_config(&format!("ff-tiny_lora_r{rank}"), "medical", 1)?;
+        cfg.max_steps = steps;
+        cfg.train_examples = 1024;
+        cfg.test_examples = 128;
+        let mut t = Trainer::new(&rt, &artifacts, cfg, Some(&base))?;
+        let sum = t.run(&StopRule::MaxSteps(steps))?;
+        println!(
+            "{:>5} {:>10} {:>8} {:>9.4} {:>12.3e}{}",
+            rank,
+            fastforward::model::spec::n_trainable(&t.art.manifest.config),
+            sum.sim_steps,
+            sum.final_test_loss,
+            sum.flops.total() as f64,
+            if rank == 64 { "   <- rank == d_model (\"LoRA full rank\", §6.1)" } else { "" }
+        );
+    }
+    Ok(())
+}

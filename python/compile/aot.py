@@ -1,0 +1,161 @@
+"""AOT pipeline: lower every (config, program) pair to HLO text + manifest.
+
+HLO *text* (not ``lowered.compile().serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the
+runtime's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser on the rust side reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts            # default set
+    python -m compile.aot --out-dir ../artifacts --smoke    # CI-fast set
+    python -m compile.aot --out-dir ../artifacts --only ff-tiny_lora_r8
+
+Incremental: a (config, program) is re-lowered only if its .hlo.txt is
+missing or any compile/ source is newer (make drives this at the directory
+level too). ``index.json`` lists every emitted artifact so the rust side can
+enumerate what exists without globbing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from compile import configs, model
+from compile.configs import (ADAM_BETA1, ADAM_BETA2, ADAM_EPS, ArtifactConfig,
+                             PROGRAMS, frozen_spec, trainable_spec)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def manifest_for(ac: ArtifactConfig) -> dict:
+    m = ac.model
+    return {
+        "format_version": 1,
+        "key": ac.key,
+        "config": {
+            "model": m.name,
+            "vocab_size": m.vocab_size,
+            "d_model": m.d_model,
+            "n_layers": m.n_layers,
+            "n_heads": m.n_heads,
+            "seq_len": m.seq_len,
+            "micro_batch": m.micro_batch,
+            "eval_batch": m.eval_batch,
+            "train_mode": ac.train_mode,
+            "lora_rank": ac.lora_rank,
+            "lora_alpha": ac.lora_alpha,
+            "lora_scale": ac.lora_scale,
+            "use_pallas": ac.use_pallas,
+        },
+        "adam": {"beta1": ADAM_BETA1, "beta2": ADAM_BETA2, "eps": ADAM_EPS},
+        "trainable": [{"name": p.name, "shape": list(p.shape)}
+                      for p in trainable_spec(ac)],
+        "frozen": [{"name": p.name, "shape": list(p.shape)}
+                   for p in frozen_spec(ac)],
+        "programs": {},
+    }
+
+
+def emit_artifact(ac: ArtifactConfig, out_dir: str, force: bool = False) -> dict:
+    """Lower all programs for one config; returns its index entry."""
+    adir = os.path.join(out_dir, ac.key)
+    os.makedirs(adir, exist_ok=True)
+    manifest = manifest_for(ac)
+    src_mtime = max(
+        os.path.getmtime(os.path.join(os.path.dirname(__file__), f))
+        for f in ("model.py", "configs.py", "aot.py",
+                  os.path.join("kernels", "lora_matmul.py"),
+                  os.path.join("kernels", "ref.py")))
+
+    for program in PROGRAMS:
+        hlo_path = os.path.join(adir, f"{program}.hlo.txt")
+        ins, outs = model.program_io(ac, program)
+        manifest["programs"][program] = {
+            "file": f"{program}.hlo.txt",
+            "inputs": ins,
+            "outputs": outs,
+        }
+        if (not force and os.path.exists(hlo_path)
+                and os.path.getmtime(hlo_path) >= src_mtime):
+            print(f"  [cached] {ac.key}/{program}")
+            continue
+        t0 = time.time()
+        fn, args = model.PROGRAM_FACTORIES[program](ac)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        # Cross-check: the flattened lowering arity must match the manifest.
+        n_in = sum(len(a) if isinstance(a, (list, tuple)) else 1 for a in args)
+        assert n_in == len(ins), (ac.key, program, n_in, len(ins))
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        print(f"  [lowered] {ac.key}/{program} "
+              f"({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)")
+
+    with open(os.path.join(adir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return {"key": ac.key, "dir": ac.key, "model": ac.model.name,
+            "train_mode": ac.train_mode, "lora_rank": ac.lora_rank,
+            "use_pallas": ac.use_pallas,
+            "n_params": ac.model.n_params(),
+            "n_trainable": configs.n_trainable(ac)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--smoke", action="store_true",
+                    help="emit only the CI-fast artifact set")
+    ap.add_argument("--only", action="append", default=None,
+                    help="emit only artifact keys matching this substring")
+    ap.add_argument("--force", action="store_true", help="ignore mtime cache")
+    args = ap.parse_args()
+
+    acs = (configs.smoke_artifact_set() if args.smoke
+           else configs.default_artifact_set())
+    if args.only:
+        acs = [ac for ac in acs
+               if any(pat in ac.key for pat in args.only)]
+        if not acs:
+            print(f"no artifact matches {args.only}", file=sys.stderr)
+            sys.exit(1)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+    index = []
+    for ac in acs:
+        print(f"[config] {ac.key}: {ac.model.n_params() / 1e6:.2f}M params, "
+              f"{configs.n_trainable(ac) / 1e3:.1f}K trainable")
+        index.append(emit_artifact(ac, args.out_dir, force=args.force))
+
+    # Merge with any pre-existing index entries (incremental --only runs).
+    index_path = os.path.join(args.out_dir, "index.json")
+    merged = {e["key"]: e for e in index}
+    if os.path.exists(index_path):
+        with open(index_path) as f:
+            for e in json.load(f)["artifacts"]:
+                merged.setdefault(e["key"], e)
+    with open(index_path, "w") as f:
+        json.dump({"format_version": 1,
+                   "artifacts": sorted(merged.values(), key=lambda e: e["key"])},
+                  f, indent=1)
+    print(f"done: {len(index)} artifact configs in {time.time() - t0:.1f}s "
+          f"→ {index_path}")
+
+
+if __name__ == "__main__":
+    main()

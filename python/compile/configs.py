@@ -1,0 +1,215 @@
+"""Model / training configurations and the artifact registry.
+
+This file is the single source of truth on the python side for:
+  * model architecture hyper-parameters (``ModelConfig``),
+  * which (config, train-mode, rank) artifacts ``aot.py`` must emit,
+  * program names and batch shapes.
+
+The rust side derives the identical parameter spec in
+``rust/src/model/spec.rs`` and cross-checks it against each artifact's
+``manifest.json`` at load time, so any drift between the two languages is
+caught before a single step runs.
+
+Paper mapping (DESIGN.md §Substitutions): ff-tiny ↔ Pythia-1.4B,
+ff-small ↔ Pythia-2.8B, ff-medium ↔ Pythia-6.9B, ff-large ↔ Llama-3-8B.
+``ff-xl`` (~110M params) exists for the end-to-end example driver only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+TRAIN_MODES = ("lora", "dora", "full_attn", "full_all")
+
+# Adam hyper-parameters (paper Appendix E uses framework defaults).
+ADAM_BETA1 = 0.9
+ADAM_BETA2 = 0.999
+ADAM_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one GPT-style model.
+
+    All matmul weights are stored as ``[d_in, d_out]`` and applied as
+    ``y = x @ W`` (no biases outside LayerNorm).
+    """
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    micro_batch: int
+    eval_batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def n_params(self) -> int:
+        """Total base parameter count (embeddings + blocks + head)."""
+        d, v, t = self.d_model, self.vocab_size, self.seq_len
+        per_layer = (
+            4 * d * d          # wq wk wv wo
+            + 2 * d * self.d_ff  # mlp in/out
+            + 4 * d            # 2 LayerNorms (scale+bias)
+        )
+        return v * d + t * d + self.n_layers * per_layer + 2 * d + d * v
+
+
+MODELS: Dict[str, ModelConfig] = {
+    m.name: m
+    for m in [
+        ModelConfig("ff-tiny", vocab_size=512, d_model=64, n_layers=2,
+                    n_heads=2, seq_len=64, micro_batch=8),
+        ModelConfig("ff-small", vocab_size=1024, d_model=128, n_layers=4,
+                    n_heads=4, seq_len=64, micro_batch=8),
+        ModelConfig("ff-medium", vocab_size=2048, d_model=256, n_layers=6,
+                    n_heads=8, seq_len=128, micro_batch=4),
+        ModelConfig("ff-large", vocab_size=4096, d_model=384, n_layers=8,
+                    n_heads=8, seq_len=128, micro_batch=2),
+        ModelConfig("ff-xl", vocab_size=8192, d_model=768, n_layers=12,
+                    n_heads=12, seq_len=256, micro_batch=1),
+    ]
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactConfig:
+    """One artifact directory == one (model, train-mode, rank) triple."""
+
+    model: ModelConfig
+    train_mode: str  # lora | dora | full_attn | full_all
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    use_pallas: bool = False
+
+    @property
+    def key(self) -> str:
+        """Directory name under artifacts/."""
+        parts = [self.model.name, self.train_mode]
+        if self.train_mode in ("lora", "dora"):
+            parts.append(f"r{self.lora_rank}")
+        if self.use_pallas:
+            parts.append("pallas")
+        return "_".join(parts)
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / float(self.lora_rank)
+
+
+PROGRAMS = ("train_step", "grad_step", "adam_apply", "eval_loss")
+
+
+def _ac(model: str, mode: str, rank: int = 8, pallas: bool = False) -> ArtifactConfig:
+    return ArtifactConfig(MODELS[model], mode, lora_rank=rank, use_pallas=pallas)
+
+
+def default_artifact_set() -> List[ArtifactConfig]:
+    """Every artifact the experiment suite needs (DESIGN.md experiment index)."""
+    out: List[ArtifactConfig] = []
+    # fig2/3/4/9: model-size grid, LoRA + DoRA at r=8.
+    for m in ("ff-tiny", "ff-small", "ff-medium", "ff-large"):
+        out.append(_ac(m, "lora"))
+        out.append(_ac(m, "dora"))
+    # fig7: rank sweep on the smallest model (paper: Pythia-1.4B, r=1..64).
+    for r in (1, 2, 4, 8, 16, 32, 64):
+        if r != 8:
+            out.append(_ac("ff-tiny", "lora", rank=r))
+    # full-rank LoRA (r = d_model) note in §6.1.
+    out.append(_ac("ff-tiny", "lora", rank=MODELS["ff-tiny"].d_model))
+    # fig8: full-rank attention-only; pretraining substrate: full_all.
+    out.append(_ac("ff-tiny", "full_attn"))
+    for m in ("ff-tiny", "ff-small", "ff-medium", "ff-large"):
+        out.append(_ac(m, "full_all"))
+    # Pallas-kernel variant: proves the L1 kernel composes into the same HLO.
+    out.append(_ac("ff-tiny", "lora", pallas=True))
+    # e2e driver model.
+    out.append(_ac("ff-xl", "lora"))
+    return out
+
+
+def smoke_artifact_set() -> List[ArtifactConfig]:
+    """Minimal set for fast CI: tiny model, one low-rank + pallas variant."""
+    return [_ac("ff-tiny", "lora"), _ac("ff-tiny", "lora", pallas=True)]
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec — mirrored by rust/src/model/spec.rs.
+# ---------------------------------------------------------------------------
+
+ADAPTED_MATRICES = ("wq", "wk", "wv", "wo")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    name: str
+    shape: Tuple[int, ...]
+    trainable: bool
+
+
+def param_spec(ac: ArtifactConfig) -> List[ParamInfo]:
+    """Canonical ordered parameter list for one artifact config.
+
+    Order: embeddings, then per-layer (ln1, attention [+ adapters], ln2,
+    mlp), then final LN and unembedding. Adapter params sit directly after
+    the matrix they adapt. Programs take trainables first (in this order),
+    then frozen params (in this order); ``manifest.json`` records both lists.
+    """
+    m = ac.model
+    d, v, t, r = m.d_model, m.vocab_size, m.seq_len, ac.lora_rank
+    mode = ac.train_mode
+    full_all = mode == "full_all"
+    out: List[ParamInfo] = []
+
+    def p(name: str, *shape: int, trainable: bool = False) -> None:
+        out.append(ParamInfo(name, tuple(shape), trainable or full_all))
+
+    p("embed.tok", v, d)
+    p("embed.pos", t, d)
+    for i in range(m.n_layers):
+        pre = f"layer{i}"
+        p(f"{pre}.ln1.scale", d)
+        p(f"{pre}.ln1.bias", d)
+        for w in ADAPTED_MATRICES:
+            p(f"{pre}.attn.{w}", d, d, trainable=(mode == "full_attn"))
+            if mode in ("lora", "dora"):
+                p(f"{pre}.attn.{w}.lora_a", d, r, trainable=True)
+                p(f"{pre}.attn.{w}.lora_b", r, d, trainable=True)
+            if mode == "dora":
+                p(f"{pre}.attn.{w}.dora_m", d, trainable=True)
+        p(f"{pre}.ln2.scale", d)
+        p(f"{pre}.ln2.bias", d)
+        p(f"{pre}.mlp.w_in", d, m.d_ff)
+        p(f"{pre}.mlp.w_out", m.d_ff, d)
+    p("final_ln.scale", d)
+    p("final_ln.bias", d)
+    p("unembed", d, v)
+    return out
+
+
+def trainable_spec(ac: ArtifactConfig) -> List[ParamInfo]:
+    return [p for p in param_spec(ac) if p.trainable]
+
+
+def frozen_spec(ac: ArtifactConfig) -> List[ParamInfo]:
+    return [p for p in param_spec(ac) if not p.trainable]
+
+
+def n_trainable(ac: ArtifactConfig) -> int:
+    total = 0
+    for p in trainable_spec(ac):
+        n = 1
+        for s in p.shape:
+            n *= s
+        total += n
+    return total

@@ -1,0 +1,108 @@
+"""Pallas fused LoRA matmul kernel — the paper's compute hot-spot.
+
+The LoRA forward is ``y = x @ w0 + scale * (x @ a) @ b``. On GPU (the
+paper's hardware) this is two tensor-core GEMMs with the rank-r update
+resident in L2. The TPU restructuring (DESIGN.md §Hardware-Adaptation):
+
+  * output-stationary grid over (M/bm, N/bn) tiles with a K-reduction axis;
+  * ``w0`` tiles stream HBM→VMEM block by block via BlockSpec;
+  * the low-rank factors ``a`` (K×r) and ``b`` (r×N) are *VMEM-resident*
+    per grid step — for r ≤ 64 a (bk×r) + (r×bn) slice is a few KB, so the
+    rank-r update rides along with the streaming GEMM for free;
+  * block sizes default to MXU-shaped multiples (≤128) clamped to the
+    problem size; accumulation is f32 regardless of input dtype.
+
+Identity used for fusion: ``(x @ a) @ b == Σ_k (x_k @ a_k) @ b`` — the
+K-reduction distributes over the first matmul only, so each grid step can
+add its own ``(x_blk @ a_blk) @ b_blk`` partial into the accumulator.
+
+``interpret=True`` is mandatory on CPU: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ preferred (MXU-friendly)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel(x_ref, w0_ref, a_ref, b_ref, o_ref, *, scale: float, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w0 = w0_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    # Streaming GEMM partial + the fused low-rank partial for this K block.
+    acc = x @ w0 + scale * ((x @ a) @ b)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def lora_matmul(x, w0, a, b, scale, *, block_m: int = 128, block_n: int = 128,
+                block_k: int = 128, interpret: bool = True):
+    """Fused ``x @ w0 + scale * (x @ a) @ b`` as a Pallas kernel.
+
+    Shapes: x ``[M, K]``, w0 ``[K, N]``, a ``[K, r]``, b ``[r, N]`` → ``[M, N]``.
+    Block sizes are clamped to divisors of the problem dims so arbitrary
+    (hypothesis-generated) shapes work without padding.
+    """
+    m, k = x.shape
+    k2, n = w0.shape
+    assert k == k2, (x.shape, w0.shape)
+    r = a.shape[1]
+    assert a.shape == (k, r) and b.shape == (r, n), (a.shape, b.shape)
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=float(scale), k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # x: stream K
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # w0: stream K
+            pl.BlockSpec((bk, r), lambda i, j, kk: (kk, 0)),    # a: K slice, resident r
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),     # b: resident r
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w0, a, b)
+
+
+def lora_matmul_batched(x, w0, a, b, scale, **kw):
+    """Apply :func:`lora_matmul` to ``x`` of shape ``[..., K]`` by flattening
+    the leading dims into M — the form the L2 model uses."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    y = lora_matmul(x.reshape((-1, k)), w0, a, b, scale, **kw)
+    return y.reshape(lead + (w0.shape[1],))
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int, r: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set for one grid step (DESIGN.md §Perf):
+    x, w0 tiles + resident a, b slices + f32 accumulator."""
+    tiles = block_m * block_k + block_k * block_n + block_k * r + r * block_n
+    return tiles * dtype_bytes + block_m * block_n * 4
+
+
+def mxu_utilization_estimate(block_m: int, block_n: int, block_k: int) -> float:
+    """Fraction of 128×128 MXU lanes occupied by the chosen tile shape."""
+    return min(block_m, 128) * min(block_n, 128) / (128.0 * 128.0) * min(
+        block_k, 128) / 128.0

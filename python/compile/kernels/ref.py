@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest (``tests/test_kernel.py``
+sweeps shapes and dtypes with hypothesis). They are also the default compute
+path for model artifacts — XLA:CPU fuses the two matmuls well, while the
+Pallas kernel exists to express the TPU HBM→VMEM schedule (DESIGN.md
+§Hardware-Adaptation) and is lowered with ``interpret=True`` for CPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w0, a, b, scale):
+    """``y = x @ w0 + scale * (x @ a) @ b``.
+
+    Shapes: x ``[M, K]``, w0 ``[K, N]``, a ``[K, r]``, b ``[r, N]``.
+    The low-rank product is evaluated as two skinny matmuls — never
+    materializing ``w0 + scale * a @ b`` — which is the whole point of LoRA.
+    """
+    return x @ w0 + scale * ((x @ a) @ b)
+
+
+def dora_matmul_ref(x, w0, a, b, m, scale, eps: float = 1e-6):
+    """DoRA (Liu et al., 2024): magnitude/direction decomposition.
+
+    ``W' = m ⊙ column_normalize(w0 + scale * a @ b)`` with the column norm
+    taken over the input dimension (axis 0), then ``y = x @ W'``.
+    """
+    w = w0 + scale * (a @ b)
+    norm = jnp.sqrt(jnp.sum(w * w, axis=0, keepdims=True)) + eps
+    return x @ (w * (m[None, :] / norm))
+
+
+def causal_attention_ref(q, k, v):
+    """Plain causal attention for one head: softmax(qkᵀ/√dh + mask) v.
+
+    Shapes: q, k, v ``[T, dh]``; returns ``[T, dh]``.
+    """
+    t, dh = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return probs @ v

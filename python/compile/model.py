@@ -1,0 +1,301 @@
+"""L2: GPT-style transformer forward/backward in JAX.
+
+One function family per artifact config (see ``configs.ArtifactConfig``):
+
+  * ``train_step``  — fused loss + grads + Adam update (fast path when the
+    micro batch equals the global batch),
+  * ``grad_step``   — loss + grads only (gradient-accumulation path; also
+    the probe used by the Fig 6/12/13 analyses),
+  * ``adam_apply``  — Adam update from pre-accumulated grads,
+  * ``eval_loss``   — mask-weighted mean loss (FF line search, test loss,
+    Fig 5/8/10 loss-surface probes).
+
+Parameters are passed as *flat ordered lists* (trainables first, then
+frozen), in exactly the order of ``configs.param_spec`` — the same order the
+rust coordinator derives in ``rust/src/model/spec.rs`` and the manifest
+records. No pytree magic crosses the language boundary.
+
+Train modes:
+  * ``lora``      — rank-r adapters on wq/wk/wv/wo (Hu et al., 2021); the
+    adapted projection is ``x@W0 + s·(x@A)@B`` with s = α/r.
+  * ``dora``      — magnitude/direction decomposition (Liu et al., 2024).
+  * ``full_attn`` — attention matrices trained directly (paper Fig 8).
+  * ``full_all``  — everything trainable (standard finetuning; also the
+    pretraining substrate that manufactures W0 for the finetuning runs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import (ADAM_BETA1, ADAM_BETA2, ADAM_EPS, ArtifactConfig,
+                             frozen_spec, trainable_spec)
+from compile.kernels.lora_matmul import lora_matmul_batched
+from compile.kernels.ref import dora_matmul_ref
+
+DORA_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Parameter packing
+# ---------------------------------------------------------------------------
+
+def pack_params(ac: ArtifactConfig, trainables: List[jax.Array],
+                frozen: List[jax.Array]) -> Dict[str, jax.Array]:
+    """Rebuild the name→array dict from the two flat lists."""
+    tspec, fspec = trainable_spec(ac), frozen_spec(ac)
+    assert len(trainables) == len(tspec), (len(trainables), len(tspec))
+    assert len(frozen) == len(fspec), (len(frozen), len(fspec))
+    params = {}
+    for info, arr in zip(tspec, trainables):
+        params[info.name] = arr
+    for info, arr in zip(fspec, frozen):
+        params[info.name] = arr
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Pallas-forward LoRA projection with a reference-math backward.
+#
+# interpret-mode pallas_call does not define transpose rules for every
+# kernel shape, so the differentiable artifact uses a custom VJP: forward
+# through the Pallas kernel, backward through the (mathematically identical)
+# jnp formulation — the flash-attention pattern.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _lora_proj_pallas(x, w0, a, b, scale):
+    return lora_matmul_batched(x, w0, a, b, scale)
+
+
+def _lora_proj_fwd(x, w0, a, b, scale):
+    return _lora_proj_pallas(x, w0, a, b, scale), (x, w0, a, b)
+
+
+def _lora_proj_bwd(scale, res, g):
+    x, w0, a, b = res
+    x2 = x.reshape((-1, x.shape[-1]))
+    g2 = g.reshape((-1, g.shape[-1]))
+    dx2 = g2 @ w0.T + scale * ((g2 @ b.T) @ a.T)
+    dw0 = x2.T @ g2
+    da = scale * (x2.T @ (g2 @ b.T))
+    db = scale * ((x2 @ a).T @ g2)
+    return dx2.reshape(x.shape), dw0, da, db
+
+
+_lora_proj_pallas.defvjp(_lora_proj_fwd, _lora_proj_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _proj(ac: ArtifactConfig, params, name: str, x):
+    """Apply one (possibly adapted) attention projection: x [B,T,d] → [B,T,d]."""
+    w0 = params[name]
+    mode = ac.train_mode
+    if mode in ("full_attn", "full_all"):
+        return x @ w0
+    a, b = params[f"{name}.lora_a"], params[f"{name}.lora_b"]
+    if mode == "lora":
+        if ac.use_pallas:
+            return _lora_proj_pallas(x, w0, a, b, ac.lora_scale)
+        return x @ w0 + ac.lora_scale * ((x @ a) @ b)
+    assert mode == "dora"
+    m = params[f"{name}.dora_m"]
+    lead = x.shape[:-1]
+    y = dora_matmul_ref(x.reshape((-1, x.shape[-1])), w0, a, b, m,
+                        ac.lora_scale, eps=DORA_EPS)
+    return y.reshape(lead + (w0.shape[1],))
+
+
+def _attention(ac: ArtifactConfig, params, pre: str, x):
+    bsz, t, d = x.shape
+    h, dh = ac.model.n_heads, ac.model.d_head
+    q = _proj(ac, params, f"{pre}.wq", x).reshape(bsz, t, h, dh)
+    k = _proj(ac, params, f"{pre}.wk", x).reshape(bsz, t, h, dh)
+    v = _proj(ac, params, f"{pre}.wv", x).reshape(bsz, t, h, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(dh, x.dtype))
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, jnp.asarray(-1e30, x.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(bsz, t, d)
+    return _proj(ac, params, f"{pre}.wo", out)
+
+
+def forward(ac: ArtifactConfig, params: Dict[str, jax.Array], tokens):
+    """tokens i32[B,T] → logits f32[B,T,V]."""
+    t = tokens.shape[1]
+    x = params["embed.tok"][tokens] + params["embed.pos"][None, :t]
+    for i in range(ac.model.n_layers):
+        pre = f"layer{i}"
+        h = _layer_norm(x, params[f"{pre}.ln1.scale"], params[f"{pre}.ln1.bias"])
+        x = x + _attention(ac, params, f"{pre}.attn", h)
+        h = _layer_norm(x, params[f"{pre}.ln2.scale"], params[f"{pre}.ln2.bias"])
+        x = x + jax.nn.gelu(h @ params[f"{pre}.mlp.w_in"]) @ params[f"{pre}.mlp.w_out"]
+    x = _layer_norm(x, params["final_ln.scale"], params["final_ln.bias"])
+    return x @ params["unembed"]
+
+
+def masked_loss(logits, targets, mask):
+    """Mask-weighted mean token cross-entropy (response-only loss for the
+    instruction task arrives as zeros in the prompt region of ``mask``)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return -(ll * mask).sum() / denom
+
+
+def loss_fn(ac: ArtifactConfig, trainables, frozen, tokens, targets, mask):
+    params = pack_params(ac, trainables, frozen)
+    return masked_loss(forward(ac, params, tokens), targets, mask)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def adam_update(trainables, m, v, step, grads, lr):
+    """One Adam step with bias correction; ``step`` is the f32 count of
+    steps already taken (the HLO mirrors rust/src/optim/adam.rs exactly)."""
+    step1 = step + 1.0
+    bc1 = 1.0 - jnp.power(jnp.asarray(ADAM_BETA1, jnp.float32), step1)
+    bc2 = 1.0 - jnp.power(jnp.asarray(ADAM_BETA2, jnp.float32), step1)
+    new_t, new_m, new_v = [], [], []
+    for w, mm, vv, g in zip(trainables, m, v, grads):
+        mm = ADAM_BETA1 * mm + (1.0 - ADAM_BETA1) * g
+        vv = ADAM_BETA2 * vv + (1.0 - ADAM_BETA2) * (g * g)
+        update = lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS)
+        new_t.append(w - update)
+        new_m.append(mm)
+        new_v.append(vv)
+    return new_t, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Program factories — each returns (fn, example_args) ready for jax.jit(...).lower
+# ---------------------------------------------------------------------------
+
+def _batch_examples(ac: ArtifactConfig, batch_size: int):
+    t = ac.model.seq_len
+    return (
+        jax.ShapeDtypeStruct((batch_size, t), jnp.int32),   # tokens
+        jax.ShapeDtypeStruct((batch_size, t), jnp.int32),   # targets
+        jax.ShapeDtypeStruct((batch_size, t), jnp.float32),  # mask
+    )
+
+
+def _param_examples(spec):
+    return [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in spec]
+
+
+def make_train_step(ac: ArtifactConfig):
+    def train_step(trainables, m, v, step, frozen, tokens, targets, mask, lr):
+        loss, grads = jax.value_and_grad(
+            lambda tr: loss_fn(ac, tr, frozen, tokens, targets, mask))(trainables)
+        new_t, new_m, new_v = adam_update(trainables, m, v, step, grads, lr)
+        return (loss, *new_t, *new_m, *new_v)
+
+    tex = _param_examples(trainable_spec(ac))
+    fex = _param_examples(frozen_spec(ac))
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    args = (tex, list(tex), list(tex), scalar, fex,
+            *_batch_examples(ac, ac.model.micro_batch), scalar)
+    return train_step, args
+
+
+def make_grad_step(ac: ArtifactConfig):
+    def grad_step(trainables, frozen, tokens, targets, mask):
+        loss, grads = jax.value_and_grad(
+            lambda tr: loss_fn(ac, tr, frozen, tokens, targets, mask))(trainables)
+        return (loss, *grads)
+
+    args = (_param_examples(trainable_spec(ac)),
+            _param_examples(frozen_spec(ac)),
+            *_batch_examples(ac, ac.model.micro_batch))
+    return grad_step, args
+
+
+def make_adam_apply(ac: ArtifactConfig):
+    def adam_apply(trainables, m, v, step, grads, lr):
+        new_t, new_m, new_v = adam_update(trainables, m, v, step, grads, lr)
+        return (*new_t, *new_m, *new_v)
+
+    tex = _param_examples(trainable_spec(ac))
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    args = (tex, list(tex), list(tex), scalar, list(tex), scalar)
+    return adam_apply, args
+
+
+def make_eval_loss(ac: ArtifactConfig):
+    def eval_loss(trainables, frozen, tokens, targets, mask):
+        return (loss_fn(ac, trainables, frozen, tokens, targets, mask),)
+
+    args = (_param_examples(trainable_spec(ac)),
+            _param_examples(frozen_spec(ac)),
+            *_batch_examples(ac, ac.model.eval_batch))
+    return eval_loss, args
+
+
+PROGRAM_FACTORIES = {
+    "train_step": make_train_step,
+    "grad_step": make_grad_step,
+    "adam_apply": make_adam_apply,
+    "eval_loss": make_eval_loss,
+}
+
+
+# ---------------------------------------------------------------------------
+# Manifest I/O description (what the rust runtime cross-checks)
+# ---------------------------------------------------------------------------
+
+def _named(prefix, spec):
+    return [{"name": f"{prefix}:{p.name}", "shape": list(p.shape),
+             "dtype": "f32"} for p in spec]
+
+
+def _batch_io(ac, batch):
+    t = ac.model.seq_len
+    return [
+        {"name": "batch:tokens", "shape": [batch, t], "dtype": "i32"},
+        {"name": "batch:targets", "shape": [batch, t], "dtype": "i32"},
+        {"name": "batch:mask", "shape": [batch, t], "dtype": "f32"},
+    ]
+
+
+def program_io(ac: ArtifactConfig, program: str):
+    """(inputs, outputs) descriptors, in exact flattened order."""
+    ts, fs = trainable_spec(ac), frozen_spec(ac)
+    scalar_f = lambda n: {"name": n, "shape": [], "dtype": "f32"}
+    loss = {"name": "loss", "shape": [], "dtype": "f32"}
+    if program == "train_step":
+        ins = (_named("t", ts) + _named("m", ts) + _named("v", ts)
+               + [scalar_f("step")] + _named("f", fs)
+               + _batch_io(ac, ac.model.micro_batch) + [scalar_f("lr")])
+        outs = [loss] + _named("t", ts) + _named("m", ts) + _named("v", ts)
+    elif program == "grad_step":
+        ins = (_named("t", ts) + _named("f", fs)
+               + _batch_io(ac, ac.model.micro_batch))
+        outs = [loss] + _named("g", ts)
+    elif program == "adam_apply":
+        ins = (_named("t", ts) + _named("m", ts) + _named("v", ts)
+               + [scalar_f("step")] + _named("g", ts) + [scalar_f("lr")])
+        outs = _named("t", ts) + _named("m", ts) + _named("v", ts)
+    elif program == "eval_loss":
+        ins = (_named("t", ts) + _named("f", fs)
+               + _batch_io(ac, ac.model.eval_batch))
+        outs = [loss]
+    else:
+        raise ValueError(program)
+    return ins, outs

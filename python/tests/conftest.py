@@ -1,0 +1,43 @@
+"""Shared fixtures/helpers for the python test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import configs
+
+
+def init_params(spec, rng, std=0.05):
+    """Host-side reference initializer (mirrors rust/src/model/init.rs):
+    lora_b → zeros, LN scale → ones, LN bias → zeros, else normal(0, std)."""
+    out = []
+    for p in spec:
+        if p.name.endswith("lora_b"):
+            arr = np.zeros(p.shape, np.float32)
+        elif ".ln" in p.name or p.name.startswith("final_ln"):
+            if p.name.endswith("scale"):
+                arr = np.ones(p.shape, np.float32)
+            else:
+                arr = np.zeros(p.shape, np.float32)
+        elif p.name.endswith("dora_m"):
+            arr = np.ones(p.shape, np.float32)  # overwritten by col-norms in real init
+        else:
+            arr = rng.normal(0, std, p.shape).astype(np.float32)
+        out.append(jnp.asarray(arr))
+    return out
+
+
+def make_batch(ac, rng, batch=None):
+    b = batch or ac.model.micro_batch
+    t = ac.model.seq_len
+    v = ac.model.vocab_size
+    tok = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    tgt = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    msk = jnp.ones((b, t), jnp.float32)
+    return tok, tgt, msk
+
+
+def tiny_ac(mode="lora", rank=4, pallas=False):
+    return configs.ArtifactConfig(configs.MODELS["ff-tiny"], mode,
+                                  lora_rank=rank, use_pallas=pallas)

@@ -1,0 +1,63 @@
+"""Adam math: the L2 update must match an independent numpy implementation
+(the same math rust/src/optim/adam.rs implements)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import ADAM_BETA1, ADAM_BETA2, ADAM_EPS
+from compile.model import adam_update
+
+
+def numpy_adam(w, m, v, step, g, lr):
+    step1 = step + 1.0
+    m2 = ADAM_BETA1 * m + (1 - ADAM_BETA1) * g
+    v2 = ADAM_BETA2 * v + (1 - ADAM_BETA2) * g * g
+    mhat = m2 / (1 - ADAM_BETA1 ** step1)
+    vhat = v2 / (1 - ADAM_BETA2 ** step1)
+    return w - lr * mhat / (np.sqrt(vhat) + ADAM_EPS), m2, v2
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 64), step=st.integers(0, 10000),
+       lr=st.floats(1e-6, 1e-1), seed=st.integers(0, 2**31))
+def test_adam_matches_numpy(n, step, lr, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, n).astype(np.float32)
+    m = rng.normal(0, 0.1, n).astype(np.float32)
+    v = np.abs(rng.normal(0, 0.01, n)).astype(np.float32)
+    g = rng.normal(0, 1, n).astype(np.float32)
+    got_w, got_m, got_v = adam_update(
+        [jnp.asarray(w)], [jnp.asarray(m)], [jnp.asarray(v)],
+        jnp.asarray(float(step), jnp.float32), [jnp.asarray(g)],
+        jnp.asarray(lr, jnp.float32))
+    want_w, want_m, want_v = numpy_adam(
+        w.astype(np.float64), m.astype(np.float64), v.astype(np.float64),
+        float(step), g.astype(np.float64), lr)
+    np.testing.assert_allclose(np.asarray(got_m[0]), want_m, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_v[0]), want_v, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(got_w[0]), want_w, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_adam_first_step_is_sign_sgd_scaled():
+    """At step 0 with zero state, Adam ≈ lr·sign(g) (bias correction)."""
+    g = np.array([0.5, -2.0, 3.0], np.float32)
+    w = np.zeros(3, np.float32)
+    got_w, _, _ = adam_update(
+        [jnp.asarray(w)], [jnp.zeros(3)], [jnp.zeros(3)],
+        jnp.asarray(0.0, jnp.float32), [jnp.asarray(g)],
+        jnp.asarray(0.1, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got_w[0]), -0.1 * np.sign(g),
+                               rtol=1e-3)
+
+
+def test_adam_zero_grad_keeps_weights_when_state_zero():
+    w = np.array([1.0, -1.0], np.float32)
+    got_w, got_m, got_v = adam_update(
+        [jnp.asarray(w)], [jnp.zeros(2)], [jnp.zeros(2)],
+        jnp.asarray(5.0, jnp.float32), [jnp.zeros(2)],
+        jnp.asarray(0.1, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got_w[0]), w, atol=1e-7)

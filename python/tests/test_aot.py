@@ -1,0 +1,76 @@
+"""AOT artifact smoke tests: lowering emits parseable HLO + a coherent manifest."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, configs, model
+from compile.configs import ArtifactConfig, MODELS
+
+
+@pytest.fixture(scope="module")
+def smoke_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    ac = ArtifactConfig(MODELS["ff-tiny"], "lora", lora_rank=2)
+    aot.emit_artifact(ac, str(out))
+    return out, ac
+
+
+def test_hlo_text_has_entry(smoke_dir):
+    out, ac = smoke_dir
+    for program in configs.PROGRAMS:
+        text = (out / ac.key / f"{program}.hlo.txt").read_text()
+        assert "ENTRY" in text and "HloModule" in text, program
+
+
+def test_manifest_matches_spec(smoke_dir):
+    out, ac = smoke_dir
+    man = json.loads((out / ac.key / "manifest.json").read_text())
+    assert man["key"] == ac.key
+    assert man["config"]["lora_rank"] == 2
+    assert [p["name"] for p in man["trainable"]] == [
+        p.name for p in configs.trainable_spec(ac)]
+    assert [p["name"] for p in man["frozen"]] == [
+        p.name for p in configs.frozen_spec(ac)]
+    for program in configs.PROGRAMS:
+        ins, outs = model.program_io(ac, program)
+        assert man["programs"][program]["inputs"] == ins
+        assert man["programs"][program]["outputs"] == outs
+
+
+def test_hlo_parameter_count_matches_manifest(smoke_dir):
+    """The lowered module must declare exactly the inputs the manifest lists.
+
+    The ENTRY computation is the last one in jax-emitted HLO text, so every
+    ``parameter(N)`` declaration after the ENTRY marker is a program input.
+    """
+    out, ac = smoke_dir
+    for program in configs.PROGRAMS:
+        text = (out / ac.key / f"{program}.hlo.txt").read_text()
+        ins, _ = model.program_io(ac, program)
+        entry = text[text.index("ENTRY"):]
+        n_args = entry.count(" parameter(")
+        assert n_args == len(ins), (program, n_args, len(ins))
+
+
+def test_emit_is_incremental(smoke_dir, capsys):
+    out, ac = smoke_dir
+    aot.emit_artifact(ac, str(out))
+    captured = capsys.readouterr().out
+    assert "[cached]" in captured and "[lowered]" not in captured
+
+
+def test_index_merge(tmp_path):
+    """--only runs must not clobber unrelated index entries."""
+    import subprocess, sys
+    env = dict(os.environ)
+    cwd = os.path.join(os.path.dirname(__file__), "..")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--only", "no-such-artifact-key"],  # no match → exit 1
+        capture_output=True, cwd=cwd, env=env)
+    assert r.returncode == 1

@@ -1,0 +1,136 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal for the kernel layer (DESIGN.md §L1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lora_matmul import (lora_matmul, lora_matmul_batched,
+                                         mxu_utilization_estimate,
+                                         vmem_footprint_bytes)
+from compile.kernels.ref import (causal_attention_ref, dora_matmul_ref,
+                                 lora_matmul_ref)
+
+DIMS = st.integers(min_value=1, max_value=96)
+RANKS = st.integers(min_value=1, max_value=16)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(0, 1, shape), dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, r=RANKS, scale=st.floats(0.0, 4.0))
+def test_lora_matmul_matches_ref_f32(m, k, n, r, scale):
+    rng = np.random.default_rng(m * 7919 + k * 104729 + n * 31 + r)
+    x, w0 = _rand(rng, m, k), _rand(rng, k, n)
+    a, b = _rand(rng, k, r), _rand(rng, r, n)
+    got = lora_matmul(x, w0, a, b, scale)
+    want = lora_matmul_ref(x, w0, a, b, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 48), k=st.integers(1, 48), n=st.integers(1, 48),
+       r=st.integers(1, 8))
+def test_lora_matmul_matches_ref_bf16(m, k, n, r):
+    rng = np.random.default_rng(m + 1000 * k + n)
+    x, w0 = _rand(rng, m, k, dtype=jnp.bfloat16), _rand(rng, k, n, dtype=jnp.bfloat16)
+    a, b = _rand(rng, k, r, dtype=jnp.bfloat16), _rand(rng, r, n, dtype=jnp.bfloat16)
+    got = np.asarray(lora_matmul(x, w0, a, b, 1.0), np.float32)
+    want = np.asarray(lora_matmul_ref(x.astype(jnp.float32), w0.astype(jnp.float32),
+                                      a.astype(jnp.float32), b.astype(jnp.float32),
+                                      1.0))
+    # bf16 inputs, f32 accumulate: tolerance scales with K.
+    np.testing.assert_allclose(got, want, rtol=0.1, atol=0.1 * np.sqrt(k))
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (128, 128, 128),
+                                    (7, 13, 5)])
+def test_lora_matmul_block_shapes(blocks):
+    """Result must be independent of the tiling schedule."""
+    bm, bn, bk = blocks
+    rng = np.random.default_rng(42)
+    x, w0 = _rand(rng, 32, 48), _rand(rng, 48, 64)
+    a, b = _rand(rng, 48, 8), _rand(rng, 8, 64)
+    got = lora_matmul(x, w0, a, b, 2.0, block_m=bm, block_n=bn, block_k=bk)
+    want = lora_matmul_ref(x, w0, a, b, 2.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_lora_matmul_zero_b_is_base_matmul():
+    rng = np.random.default_rng(0)
+    x, w0 = _rand(rng, 16, 32), _rand(rng, 32, 24)
+    a = _rand(rng, 32, 4)
+    b = jnp.zeros((4, 24), jnp.float32)
+    got = lora_matmul(x, w0, a, b, 2.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lora_matmul_batched_flattens_leading_dims():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 2, 3, 16)
+    w0, a, b = _rand(rng, 16, 8), _rand(rng, 16, 2), _rand(rng, 2, 8)
+    got = lora_matmul_batched(x, w0, a, b, 0.5)
+    assert got.shape == (2, 3, 8)
+    want = lora_matmul_ref(np.asarray(x).reshape(6, 16), w0, a, b, 0.5)
+    np.testing.assert_allclose(np.asarray(got).reshape(6, 8), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lora_matmul_under_jit_and_grad_via_ref_parity():
+    """The kernel must be usable inside jit (as the L2 model uses it)."""
+    rng = np.random.default_rng(3)
+    x, w0 = _rand(rng, 8, 16), _rand(rng, 16, 16)
+    a, b = _rand(rng, 16, 4), _rand(rng, 4, 16)
+    f = jax.jit(lambda *args: lora_matmul(*args, 1.0))
+    np.testing.assert_allclose(np.asarray(f(x, w0, a, b)),
+                               np.asarray(lora_matmul_ref(x, w0, a, b, 1.0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dora_ref_reduces_to_base_when_b_zero_and_m_colnorm():
+    """DoRA with B=0 and m=||W0||_col must equal the base projection."""
+    rng = np.random.default_rng(5)
+    x, w0 = _rand(rng, 8, 16), _rand(rng, 16, 12)
+    a = _rand(rng, 16, 4)
+    b = jnp.zeros((4, 12), jnp.float32)
+    m = jnp.sqrt(jnp.sum(w0 * w0, axis=0)) + 1e-6
+    got = dora_matmul_ref(x, w0, a, b, m, 2.0, eps=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_causal_attention_ref_is_causal():
+    rng = np.random.default_rng(7)
+    q, k, v = _rand(rng, 8, 4), _rand(rng, 8, 4), _rand(rng, 8, 4)
+    base = causal_attention_ref(q, k, v)
+    k2 = k.at[-1].set(99.0)
+    v2 = v.at[-1].set(99.0)
+    pert = causal_attention_ref(q, k2, v2)
+    # all rows except the last must be unchanged
+    np.testing.assert_allclose(np.asarray(base[:-1]), np.asarray(pert[:-1]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_vmem_footprint_monotone_in_blocks():
+    small = vmem_footprint_bytes(32, 32, 32, 8)
+    big = vmem_footprint_bytes(128, 128, 128, 8)
+    assert small < big
+    # r=64 LoRA tile set must fit VMEM (~16 MiB/core budget, use half)
+    assert vmem_footprint_bytes(128, 128, 128, 64) < 8 * 1024 * 1024
+
+
+def test_mxu_utilization_estimate_full_tiles():
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert mxu_utilization_estimate(64, 128, 128) == 0.5

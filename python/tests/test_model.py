@@ -1,0 +1,205 @@
+"""L2 model invariants: adapter algebra, causality, masking, mode parity."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model
+from tests.conftest import init_params, make_batch, tiny_ac
+
+
+def _forward(ac, tr, fr, tok):
+    return model.forward(ac, model.pack_params(ac, tr, fr), tok)
+
+
+def test_lora_with_zero_b_matches_full_attn_forward():
+    """Freshly-initialized LoRA (B=0) must compute exactly the base model."""
+    rng = np.random.default_rng(0)
+    ac_l = tiny_ac("lora")
+    ac_f = tiny_ac("full_attn")
+    tr_l = init_params(configs.trainable_spec(ac_l), rng)
+    fr_l = init_params(configs.frozen_spec(ac_l), np.random.default_rng(1))
+    tok, _, _ = make_batch(ac_l, rng, batch=2)
+
+    # Build the full_attn param lists holding identical values.
+    d_l = model.pack_params(ac_l, tr_l, fr_l)
+    tr_f = [jnp.asarray(d_l[p.name]) for p in configs.trainable_spec(ac_f)]
+    fr_f = [jnp.asarray(d_l[p.name]) for p in configs.frozen_spec(ac_f)]
+
+    out_l = _forward(ac_l, tr_l, fr_l, tok)
+    out_f = _forward(ac_f, tr_f, fr_f, tok)
+    np.testing.assert_allclose(np.asarray(out_l), np.asarray(out_f),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lora_equals_merged_weights():
+    """x@W0 + s(x@A)@B == x@(W0 + s·A@B) applied through the whole model."""
+    rng = np.random.default_rng(2)
+    ac = tiny_ac("lora")
+    tr = init_params(configs.trainable_spec(ac), rng)
+    # non-zero B so the adapters actually contribute
+    tr = [t + jnp.asarray(np.random.default_rng(9).normal(0, 0.02, t.shape),
+                          jnp.float32) for t in tr]
+    fr = init_params(configs.frozen_spec(ac), np.random.default_rng(3))
+    tok, _, _ = make_batch(ac, rng, batch=2)
+    out = _forward(ac, tr, fr, tok)
+
+    # merge adapters into the frozen weights, then run full_attn
+    ac_f = tiny_ac("full_attn")
+    d = model.pack_params(ac, tr, fr)
+    merged = dict(d)
+    for i in range(ac.model.n_layers):
+        for w in configs.ADAPTED_MATRICES:
+            nm = f"layer{i}.attn.{w}"
+            merged[nm] = d[nm] + ac.lora_scale * (d[f"{nm}.lora_a"] @ d[f"{nm}.lora_b"])
+    tr_f = [merged[p.name] for p in configs.trainable_spec(ac_f)]
+    fr_f = [merged[p.name] for p in configs.frozen_spec(ac_f)]
+    out_m = _forward(ac_f, tr_f, fr_f, tok)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_m),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_model_matches_jnp_model():
+    """The use_pallas artifact variant computes the same function."""
+    rng = np.random.default_rng(4)
+    ac_j = tiny_ac("lora")
+    ac_p = tiny_ac("lora", pallas=True)
+    tr = init_params(configs.trainable_spec(ac_j), rng)
+    tr = [t + 0.01 for t in tr]  # non-trivial adapters
+    fr = init_params(configs.frozen_spec(ac_j), np.random.default_rng(5))
+    tok, tgt, msk = make_batch(ac_j, rng, batch=2)
+    out_j = _forward(ac_j, tr, fr, tok)
+    out_p = _forward(ac_p, tr, fr, tok)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p),
+                               rtol=1e-4, atol=1e-4)
+    # gradients too (custom VJP path)
+    g_j = jax.grad(lambda t: model.loss_fn(ac_j, t, fr, tok, tgt, msk))(tr)
+    g_p = jax.grad(lambda t: model.loss_fn(ac_p, t, fr, tok, tgt, msk))(tr)
+    for a, b in zip(g_j, g_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_dora_init_matches_base_forward():
+    """DoRA with B=0 and m=colnorm(W0) equals the base model."""
+    rng = np.random.default_rng(6)
+    ac = tiny_ac("dora")
+    fr = init_params(configs.frozen_spec(ac), np.random.default_rng(7))
+    d_frozen = {p.name: arr for p, arr in zip(configs.frozen_spec(ac), fr)}
+    tr = []
+    for p in configs.trainable_spec(ac):
+        if p.name.endswith("lora_b"):
+            tr.append(jnp.zeros(p.shape, jnp.float32))
+        elif p.name.endswith("dora_m"):
+            w0 = d_frozen[p.name.rsplit(".", 1)[0]]
+            tr.append(jnp.sqrt(jnp.sum(w0 * w0, axis=0)) + model.DORA_EPS)
+        else:
+            tr.append(jnp.asarray(rng.normal(0, 0.05, p.shape), jnp.float32))
+    tok, _, _ = make_batch(ac, rng, batch=2)
+    out = _forward(ac, tr, fr, tok)
+
+    ac_f = tiny_ac("full_attn")
+    dd = model.pack_params(ac, tr, fr)
+    tr_f = [dd[p.name] for p in configs.trainable_spec(ac_f)]
+    fr_f = [dd[p.name] for p in configs.frozen_spec(ac_f)]
+    out_f = _forward(ac_f, tr_f, fr_f, tok)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_f),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_model_is_causal():
+    rng = np.random.default_rng(8)
+    ac = tiny_ac("lora")
+    tr = init_params(configs.trainable_spec(ac), rng)
+    fr = init_params(configs.frozen_spec(ac), np.random.default_rng(9))
+    tok, _, _ = make_batch(ac, rng, batch=1)
+    out = _forward(ac, tr, fr, tok)
+    tok2 = tok.at[0, -1].set((int(tok[0, -1]) + 1) % ac.model.vocab_size)
+    out2 = _forward(ac, tr, fr, tok2)
+    np.testing.assert_allclose(np.asarray(out[0, :-1]), np.asarray(out2[0, :-1]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(out[0, -1]), np.asarray(out2[0, -1]))
+
+
+def test_masked_loss_ignores_masked_positions():
+    rng = np.random.default_rng(10)
+    ac = tiny_ac("lora")
+    tr = init_params(configs.trainable_spec(ac), rng)
+    fr = init_params(configs.frozen_spec(ac), np.random.default_rng(11))
+    tok, tgt, msk = make_batch(ac, rng, batch=2)
+    half = msk.at[:, : ac.model.seq_len // 2].set(0.0)
+    l1 = model.loss_fn(ac, tr, fr, tok, tgt, half)
+    # changing targets in the masked region must not change the loss
+    tgt2 = tgt.at[:, 0].set((tgt[:, 0] + 3) % ac.model.vocab_size)
+    l2 = model.loss_fn(ac, tr, fr, tok, tgt2, half)
+    assert float(jnp.abs(l1 - l2)) < 1e-7
+
+
+def test_masked_loss_all_zero_mask_is_finite():
+    logits = jnp.zeros((1, 4, 8), jnp.float32)
+    tgt = jnp.zeros((1, 4), jnp.int32)
+    msk = jnp.zeros((1, 4), jnp.float32)
+    assert float(model.masked_loss(logits, tgt, msk)) == 0.0
+
+
+def test_uniform_logits_loss_is_log_vocab():
+    ac = tiny_ac("lora")
+    v = ac.model.vocab_size
+    logits = jnp.zeros((2, 3, v), jnp.float32)
+    tgt = jnp.zeros((2, 3), jnp.int32)
+    msk = jnp.ones((2, 3), jnp.float32)
+    np.testing.assert_allclose(float(model.masked_loss(logits, tgt, msk)),
+                               np.log(v), rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", configs.TRAIN_MODES)
+def test_grad_step_plus_adam_apply_equals_train_step(mode):
+    """The accumulation path and the fused path must agree bit-for-bit-ish."""
+    rng = np.random.default_rng(12)
+    ac = tiny_ac(mode)
+    tr = init_params(configs.trainable_spec(ac), rng)
+    fr = init_params(configs.frozen_spec(ac), np.random.default_rng(13))
+    m = [jnp.zeros_like(t) for t in tr]
+    v = [jnp.zeros_like(t) for t in tr]
+    tok, tgt, msk = make_batch(ac, rng)
+    step = jnp.asarray(3.0, jnp.float32)
+    lr = jnp.asarray(1e-3, jnp.float32)
+
+    ts_fn, _ = model.make_train_step(ac)
+    gs_fn, _ = model.make_grad_step(ac)
+    aa_fn, _ = model.make_adam_apply(ac)
+    fused = jax.jit(ts_fn)(tr, m, v, step, fr, tok, tgt, msk, lr)
+    g_out = jax.jit(gs_fn)(tr, fr, tok, tgt, msk)
+    grads = list(g_out[1:])
+    split = jax.jit(aa_fn)(tr, m, v, step, grads, lr)
+    n = len(tr)
+    np.testing.assert_allclose(float(fused[0]), float(g_out[0]), rtol=1e-6)
+    for a, b in zip(split[:n], fused[1:1 + n]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_training_reduces_loss_all_modes():
+    for mode in configs.TRAIN_MODES:
+        rng = np.random.default_rng(14)
+        ac = tiny_ac(mode)
+        tr = init_params(configs.trainable_spec(ac), rng)
+        fr = init_params(configs.frozen_spec(ac), np.random.default_rng(15))
+        m = [jnp.zeros_like(t) for t in tr]
+        v = [jnp.zeros_like(t) for t in tr]
+        tok, tgt, msk = make_batch(ac, rng)
+        fn = jax.jit(model.make_train_step(ac)[0])
+        lr = jnp.asarray(1e-2, jnp.float32)
+        losses = []
+        for i in range(6):
+            out = fn(tr, m, v, jnp.asarray(float(i), jnp.float32), fr,
+                     tok, tgt, msk, lr)
+            losses.append(float(out[0]))
+            n = len(tr)
+            tr = list(out[1:1 + n])
+            m = list(out[1 + n:1 + 2 * n])
+            v = list(out[1 + 2 * n:1 + 3 * n])
+        assert losses[-1] < losses[0], (mode, losses)

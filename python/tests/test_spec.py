@@ -1,0 +1,115 @@
+"""Parameter-spec and manifest-schema invariants.
+
+These guard the python↔rust contract: the rust coordinator re-derives the
+identical spec in rust/src/model/spec.rs and refuses artifacts that drift.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from compile import configs, model
+from compile.configs import (ArtifactConfig, MODELS, PROGRAMS, frozen_spec,
+                             n_trainable, param_spec, trainable_spec)
+
+
+@pytest.mark.parametrize("mode", configs.TRAIN_MODES)
+@pytest.mark.parametrize("mname", ["ff-tiny", "ff-small"])
+def test_spec_names_unique_and_ordered(mode, mname):
+    ac = ArtifactConfig(MODELS[mname], mode)
+    spec = param_spec(ac)
+    names = [p.name for p in spec]
+    assert len(names) == len(set(names))
+    # trainables-then-frozen partition preserves relative order
+    t_names = [p.name for p in trainable_spec(ac)]
+    f_names = [p.name for p in frozen_spec(ac)]
+    assert [n for n in names if n in set(t_names)] == t_names
+    assert [n for n in names if n in set(f_names)] == f_names
+
+
+def test_lora_trainable_counts():
+    ac = ArtifactConfig(MODELS["ff-tiny"], "lora", lora_rank=8)
+    m = ac.model
+    # 4 matrices × (A: d·r + B: r·d) per layer
+    expect = m.n_layers * 4 * 2 * m.d_model * 8
+    assert n_trainable(ac) == expect
+
+
+def test_dora_adds_magnitude_vectors():
+    lo = ArtifactConfig(MODELS["ff-tiny"], "lora", lora_rank=8)
+    do = ArtifactConfig(MODELS["ff-tiny"], "dora", lora_rank=8)
+    m = lo.model
+    assert n_trainable(do) - n_trainable(lo) == m.n_layers * 4 * m.d_model
+
+
+def test_full_attn_trainables_are_attention_matrices():
+    ac = ArtifactConfig(MODELS["ff-tiny"], "full_attn")
+    t = trainable_spec(ac)
+    assert all(".attn.w" in p.name for p in t)
+    assert len(t) == ac.model.n_layers * 4
+
+
+def test_full_all_has_no_frozen():
+    ac = ArtifactConfig(MODELS["ff-tiny"], "full_all")
+    assert frozen_spec(ac) == []
+    assert n_trainable(ac) == ac.model.n_params()
+
+
+def test_n_params_matches_spec_product():
+    for name, mc in MODELS.items():
+        ac = ArtifactConfig(mc, "full_all")
+        total = 0
+        for p in param_spec(ac):
+            n = 1
+            for s in p.shape:
+                n *= s
+            total += n
+        assert total == mc.n_params(), name
+
+
+def test_model_size_ladder():
+    """Substitution ladder (DESIGN.md): sizes strictly increase, xl ≈ 100M."""
+    sizes = [MODELS[n].n_params() for n in
+             ("ff-tiny", "ff-small", "ff-medium", "ff-large", "ff-xl")]
+    assert sizes == sorted(sizes)
+    assert sizes[-1] > 80e6
+
+
+@pytest.mark.parametrize("program", PROGRAMS)
+def test_program_io_arity_matches_factories(program):
+    ac = ArtifactConfig(MODELS["ff-tiny"], "lora")
+    ins, outs = model.program_io(ac, program)
+    _, args = model.PROGRAM_FACTORIES[program](ac)
+    n_in = sum(len(a) if isinstance(a, (list, tuple)) else 1 for a in args)
+    assert n_in == len(ins)
+    nt = len(trainable_spec(ac))
+    expect_out = {"train_step": 1 + 3 * nt, "grad_step": 1 + nt,
+                  "adam_apply": 3 * nt, "eval_loss": 1}[program]
+    assert len(outs) == expect_out
+
+
+def test_artifact_keys_stable():
+    assert _key("ff-tiny", "lora", 8) == "ff-tiny_lora_r8"
+    assert _key("ff-tiny", "full_attn", 8) == "ff-tiny_full_attn"
+    ac = ArtifactConfig(MODELS["ff-tiny"], "lora", lora_rank=8, use_pallas=True)
+    assert ac.key == "ff-tiny_lora_r8_pallas"
+
+
+def _key(m, mode, r):
+    return ArtifactConfig(MODELS[m], mode, lora_rank=r).key
+
+
+def test_default_artifact_set_covers_experiments():
+    keys = {ac.key for ac in configs.default_artifact_set()}
+    # fig2 grid
+    for m in ("ff-tiny", "ff-small", "ff-medium", "ff-large"):
+        assert f"{m}_lora_r8" in keys
+        assert f"{m}_dora_r8" in keys
+        assert f"{m}_full_all" in keys  # pretraining substrate
+    # fig7 rank sweep
+    for r in (1, 2, 4, 16, 32, 64):
+        assert f"ff-tiny_lora_r{r}" in keys
+    assert "ff-tiny_full_attn" in keys           # fig8
+    assert "ff-tiny_lora_r64" in keys
+    assert "ff-tiny_lora_r8_pallas" in keys      # L1 composition proof
+    assert "ff-xl_lora_r8" in keys               # e2e driver

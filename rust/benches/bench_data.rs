@@ -1,0 +1,32 @@
+//! Bench: data substrate throughput — corpus generation, batch assembly,
+//! and the threaded prefetch pipeline. The data path must never be the
+//! bottleneck next to an optimizer step (DESIGN.md §Perf: L3 overhead <5%).
+
+use std::time::Duration;
+
+use fastforward::data::batcher::Batcher;
+use fastforward::data::corpus::make_dataset;
+use fastforward::data::pipeline::Pipeline;
+use fastforward::util::bench::{bench, throughput};
+
+fn main() {
+    for task in ["medical", "instruct", "chat", "pile"] {
+        let s = bench(&format!("corpus_gen/{task}/256ex"), 1, 5, Duration::from_millis(500), || {
+            make_dataset(task, 512, 64, 256, 0, 0, 42).unwrap();
+        });
+        println!("{}  ({:.0} examples/s)", s.report(), throughput(&s, 256.0));
+    }
+
+    let ds = make_dataset("chat", 512, 64, 2048, 0, 0, 7).unwrap();
+    let mut batcher = Batcher::new(&ds.train, 8, 32, 0);
+    let s = bench("batcher/global32(micro8)", 2, 50, Duration::from_millis(500), || {
+        std::hint::black_box(batcher.next_global());
+    });
+    println!("{}  ({:.0} batches/s)", s.report(), throughput(&s, 1.0));
+
+    let mut pipe = Pipeline::spawn(ds.train.clone(), 8, 32, 0, 4);
+    let s = bench("pipeline/prefetch_depth4", 2, 50, Duration::from_millis(500), || {
+        std::hint::black_box(pipe.next());
+    });
+    println!("{}  ({:.0} batches/s)", s.report(), throughput(&s, 1.0));
+}

@@ -1,0 +1,61 @@
+//! Bench: Fast Forward stage economics (paper Fig 2's mechanism). Compares
+//! the cost of one SGD step against one FF simulated step (host axpy + val
+//! forward) and reports the break-even τ — how few simulated steps already
+//! beat an SGD step on wall-clock.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use fastforward::config::{presets, FfConfig};
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::Trainer;
+use fastforward::util::bench::bench;
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() -> anyhow::Result<()> {
+    fastforward::util::logging::init();
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+    let model = "ff-tiny";
+    let base = ensure_pretrained(&rt, &root, model, None)?;
+    let mut cfg = presets::train_config(&format!("{model}_lora_r8"), "medical", 1)?;
+    cfg.train_examples = 512;
+    cfg.test_examples = 64;
+    cfg.ff = FfConfig { warmup_steps: 2, t_interval: 2, ..FfConfig::default() };
+    let mut t = Trainer::new(&rt, &root, cfg, Some(&base))?;
+    for _ in 0..4 {
+        t.sgd_step()?;
+    }
+
+    let sgd = bench("sgd_step", 1, 8, Duration::from_secs(3), || {
+        t.sgd_step().unwrap();
+    });
+    println!("{}", sgd.report());
+
+    // One simulated step = host axpy over trainables + 32-example forward.
+    let sim = bench("ff_simulated_step(axpy+val_fwd)", 1, 8, Duration::from_secs(2), || {
+        let delta = t.trainables(); // same size as Δ_W
+        t.tr_axpy_for_bench(&delta, 1e-9);
+        t.eval_val().unwrap();
+    });
+    println!("{}", sim.report());
+
+    let ratio = sgd.mean_secs() / sim.mean_secs();
+    println!(
+        "\none SGD step costs {ratio:.1}× a simulated step → any FF stage with τ* ≥ {} \
+         already saves wall-clock (paper finds τ* up to dozens early in training)",
+        (1.0 / ratio).ceil().max(1.0) as usize
+    );
+
+    // full FF stage (line search) timing
+    let stage = bench("ff_stage(full_line_search)", 0, 4, Duration::from_secs(2), || {
+        t.sgd_step().unwrap();
+        t.ff_stage().unwrap();
+    });
+    println!("{}", stage.report());
+    Ok(())
+}

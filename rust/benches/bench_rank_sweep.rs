@@ -1,0 +1,46 @@
+//! Bench: per-step cost vs LoRA rank (the compute axis of paper Fig 7).
+//! Confirms the analytic FLOPs model's prediction that adapter rank barely
+//! moves the per-step cost while it strongly moves FF's effectiveness.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use fastforward::config::{presets, FfConfig};
+use fastforward::flops::FlopsModel;
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::Trainer;
+use fastforward::util::bench::bench;
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() -> anyhow::Result<()> {
+    fastforward::util::logging::init();
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", None)?;
+
+    println!("{:>5} {:>14} {:>14} {:>12}", "rank", "mean step", "tokens/s", "fwd GFLOP");
+    for rank in [1usize, 8, 64] {
+        let mut cfg = presets::train_config(&format!("ff-tiny_lora_r{rank}"), "medical", 1)?;
+        cfg.train_examples = 512;
+        cfg.test_examples = 64;
+        cfg.ff = FfConfig { enabled: false, ..FfConfig::default() };
+        let tokens = (cfg.global_batch * 64) as f64;
+        let mut t = Trainer::new(&rt, &root, cfg, Some(&base))?;
+        let fm = FlopsModel::for_artifact(&t.art.manifest.config);
+        let s = bench(&format!("sgd_step/r{rank}"), 1, 8, Duration::from_secs(2), || {
+            t.sgd_step().unwrap();
+        });
+        println!(
+            "{:>5} {:>14.3?} {:>14.0} {:>12.3}",
+            rank,
+            s.mean,
+            tokens / s.mean_secs(),
+            fm.forward_flops(1) as f64 * tokens / 1e9
+        );
+    }
+    Ok(())
+}

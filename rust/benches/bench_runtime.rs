@@ -1,0 +1,62 @@
+//! Bench: PJRT runtime layer — artifact compile time, host↔device upload,
+//! and raw program dispatch overhead (execute with cached inputs). This is
+//! the floor under every training step; §Perf tracks the coordinator
+//! overhead = (sgd_step wall) − (program execute wall).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use fastforward::model::init::init_params;
+use fastforward::runtime::{Artifact, ParamSet, Runtime};
+use fastforward::util::bench::bench;
+use fastforward::util::rng::Rng;
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+
+    // compile latency (fresh Artifact each iteration)
+    let s = bench("compile/ff-tiny_lora_r8/eval_loss", 0, 3, Duration::from_secs(2), || {
+        let art = Artifact::load(&rt, &root.join("ff-tiny_lora_r8")).unwrap();
+        art.program("eval_loss").unwrap();
+    });
+    println!("{}", s.report());
+
+    let art = Artifact::load(&rt, &root.join("ff-tiny_lora_r8"))?;
+    let man = &art.manifest;
+    let vals = init_params(&man.config, 3);
+    let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals)?;
+    let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals)?;
+    let prog = art.program("eval_loss")?;
+    let (b, t) = (man.config.model.eval_batch, man.config.model.seq_len);
+    let mut rng = Rng::new(1);
+    let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(512) as i32).collect();
+    let mask = vec![1.0f32; b * t];
+
+    // upload cost for the full frozen set (dominates bytes)
+    let s = bench("upload/frozen_params(~160K f32)", 1, 10, Duration::from_secs(1), || {
+        let snap = fr.snapshot();
+        fr.restore(&snap); // mark all dirty
+        fr.device_buffers().unwrap();
+    });
+    println!("{}", s.report());
+
+    // dispatch with everything cached except the batch
+    let s = bench("execute/eval_loss(cached params)", 2, 20, Duration::from_secs(2), || {
+        let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+        let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(fr.device_buffers().unwrap());
+        inputs.push(&tok);
+        inputs.push(&tok);
+        inputs.push(&msk);
+        std::hint::black_box(prog.execute_buffers(&inputs).unwrap());
+    });
+    println!("{}", s.report());
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Bench: end-to-end optimizer-step latency (the paper's train-time axis,
+//! Fig 3). Measures the fused-vs-accumulated paths and per-micro-batch
+//! grad_step latency on the tiny and small models.
+//!
+//! Run: `cargo bench --offline` (after `make artifacts`).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use fastforward::config::{presets, FfConfig};
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::Trainer;
+use fastforward::util::bench::bench;
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() -> anyhow::Result<()> {
+    fastforward::util::logging::init();
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+
+    for model in ["ff-tiny", "ff-small"] {
+        let base = ensure_pretrained(&rt, &root, model, None)?;
+        let mut cfg = presets::train_config(&format!("{model}_lora_r8"), "medical", 1)?;
+        cfg.train_examples = 512;
+        cfg.test_examples = 64;
+        cfg.ff = FfConfig { enabled: false, ..FfConfig::default() };
+        let mut t = Trainer::new(&rt, &root, cfg.clone(), Some(&base))?;
+
+        let tokens_per_step = (cfg.global_batch * t.art.manifest.config.model.seq_len) as f64;
+        let s = bench(
+            &format!("sgd_step/{model}/global{}", cfg.global_batch),
+            2,
+            10,
+            Duration::from_secs(3),
+            || {
+                t.sgd_step().unwrap();
+            },
+        );
+        println!(
+            "{}  ({:.0} tokens/s)",
+            s.report(),
+            tokens_per_step / s.mean_secs()
+        );
+
+        // val-set inference = one FF probe's cost
+        let s = bench(
+            &format!("ff_val_probe/{model}/32ex"),
+            2,
+            10,
+            Duration::from_secs(2),
+            || {
+                t.eval_val().unwrap();
+            },
+        );
+        println!("{}", s.report());
+    }
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Gradient-history probes (paper Fig 6 & Fig 13, Appendix C):
+//! cosine similarity of the current gradient against every previously
+//! saved gradient, and batch-wise gradient consistency measured right
+//! before a Fast Forward stage.
+
+use crate::model::tensor::{cosine_similarity, Tensor};
+
+/// Rolling store of gradient snapshots taken every `every` optimizer steps.
+#[derive(Debug)]
+pub struct GradHistory {
+    every: usize,
+    max_kept: usize,
+    saved: Vec<(usize, Vec<Tensor>)>,
+    /// (step, mean similarity vs all previous, per-history sims) series.
+    pub series: Vec<(usize, f64, Vec<f64>)>,
+}
+
+impl GradHistory {
+    pub fn new(every: usize, max_kept: usize) -> GradHistory {
+        GradHistory { every: every.max(1), max_kept, saved: Vec::new(), series: Vec::new() }
+    }
+
+    /// Observe the gradient at `step`; records similarity vs history and
+    /// (every `every` steps) saves a snapshot.
+    pub fn observe(&mut self, step: usize, grads: &[Tensor]) {
+        if !self.saved.is_empty() {
+            let sims: Vec<f64> =
+                self.saved.iter().map(|(_, g)| cosine_similarity(grads, g)).collect();
+            let mean = sims.iter().sum::<f64>() / sims.len() as f64;
+            self.series.push((step, mean, sims));
+        }
+        if step % self.every == 0 {
+            if self.saved.len() == self.max_kept {
+                self.saved.remove(0);
+            }
+            self.saved.push((step, grads.to_vec()));
+        }
+    }
+
+    pub fn n_saved(&self) -> usize {
+        self.saved.len()
+    }
+}
+
+/// Batch-wise gradient consistency (Fig 13): mean pairwise cosine
+/// similarity between per-micro-batch gradients.
+pub fn batch_consistency(per_batch_grads: &[Vec<Tensor>]) -> f64 {
+    let n = per_batch_grads.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut sum = 0.0;
+    let mut cnt = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            sum += cosine_similarity(&per_batch_grads[i], &per_batch_grads[j]);
+            cnt += 1;
+        }
+    }
+    sum / cnt as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g(v: &[f32]) -> Vec<Tensor> {
+        vec![Tensor::from_vec(&[v.len()], v.to_vec())]
+    }
+
+    #[test]
+    fn records_similarity_vs_history() {
+        let mut h = GradHistory::new(1, 10);
+        h.observe(0, &g(&[1.0, 0.0]));
+        assert!(h.series.is_empty()); // nothing to compare against yet
+        h.observe(1, &g(&[1.0, 0.0]));
+        assert!((h.series[0].1 - 1.0).abs() < 1e-12);
+        h.observe(2, &g(&[0.0, 1.0]));
+        // vs [1,0] and [1,0]: mean 0
+        assert!(h.series[1].1.abs() < 1e-12);
+        assert_eq!(h.series[1].2.len(), 2);
+        assert_eq!(h.n_saved(), 3);
+    }
+
+    #[test]
+    fn respects_every_and_max_kept() {
+        let mut h = GradHistory::new(2, 2);
+        for step in 0..8 {
+            h.observe(step, &g(&[step as f32 + 1.0, 0.0]));
+        }
+        assert_eq!(h.n_saved(), 2); // bounded
+    }
+
+    #[test]
+    fn batch_consistency_extremes() {
+        let same = vec![g(&[1.0, 1.0]), g(&[2.0, 2.0]), g(&[0.5, 0.5])];
+        assert!((batch_consistency(&same) - 1.0).abs() < 1e-12);
+        let ortho = vec![g(&[1.0, 0.0]), g(&[0.0, 1.0])];
+        assert!(batch_consistency(&ortho).abs() < 1e-12);
+        assert_eq!(batch_consistency(&[g(&[1.0])]), 1.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Dense linear algebra for analysis probes: one-sided Jacobi SVD (enough
+//! for the small LoRA gradient matrices, d×r with r ≤ 64) and the
+//! condition-number measurement of paper Fig 12b.
+
+use crate::model::tensor::Tensor;
+
+/// Singular values of a [rows, cols] matrix via one-sided Jacobi on AᵀA
+/// column rotations. Returns values sorted descending. O(rows·cols²·sweeps);
+/// intended for cols ≤ ~128.
+pub fn singular_values(t: &Tensor) -> Vec<f64> {
+    assert_eq!(t.shape.len(), 2, "singular_values expects a matrix");
+    let (rows, cols) = (t.shape[0], t.shape[1]);
+    // Work on the thinner orientation: Jacobi cost scales with cols².
+    if cols > rows {
+        let mut tt = Tensor::zeros(&[cols, rows]);
+        for r in 0..rows {
+            for c in 0..cols {
+                tt.data[c * rows + r] = t.data[r * cols + c];
+            }
+        }
+        return singular_values(&tt);
+    }
+    // columns as f64 vectors
+    let mut a: Vec<Vec<f64>> = (0..cols)
+        .map(|c| (0..rows).map(|r| t.data[r * cols + c] as f64).collect())
+        .collect();
+
+    let dot = |x: &[f64], y: &[f64]| -> f64 { x.iter().zip(y).map(|(a, b)| a * b).sum() };
+    let eps = 1e-12;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                let (app, aqq) = (dot(&a[p], &a[p]), dot(&a[q], &a[q]));
+                let apq = {
+                    let (cp, cq) = (&a[p], &a[q]);
+                    dot(cp, cq)
+                };
+                off += apq.abs();
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t_rot = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t_rot * t_rot).sqrt();
+                let s = c * t_rot;
+                for r in 0..rows {
+                    let (vp, vq) = (a[p][r], a[q][r]);
+                    a[p][r] = c * vp - s * vq;
+                    a[q][r] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+    let mut sv: Vec<f64> = a.iter().map(|col| dot(col, col).sqrt()).collect();
+    sv.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    sv
+}
+
+/// σ_max / σ_min over the numerically non-zero spectrum (Fig 12b's
+/// "condition number of the gradients").
+pub fn condition_number(t: &Tensor) -> f64 {
+    let sv = singular_values(t);
+    let smax = sv.first().copied().unwrap_or(0.0);
+    if smax <= 0.0 {
+        return f64::INFINITY;
+    }
+    let floor = smax * 1e-9;
+    let smin = sv.iter().rev().find(|&&s| s > floor).copied().unwrap_or(smax);
+    smax / smin
+}
+
+/// Mean condition number over all ≥2-D tensors (grad lists mix matrices
+/// with DoRA magnitude vectors; vectors are skipped).
+pub fn mean_condition_number(grads: &[Tensor]) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for g in grads {
+        if g.shape.len() == 2 && g.shape[0] > 1 && g.shape[1] > 1 {
+            let c = condition_number(g);
+            if c.is_finite() {
+                sum += c;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_svs_are_abs_diagonal() {
+        let t = Tensor::from_vec(&[3, 3], vec![3.0, 0.0, 0.0, 0.0, -5.0, 0.0, 0.0, 0.0, 1.0]);
+        let sv = singular_values(&t);
+        assert!((sv[0] - 5.0).abs() < 1e-9, "{sv:?}");
+        assert!((sv[1] - 3.0).abs() < 1e-9);
+        assert!((sv[2] - 1.0).abs() < 1e-9);
+        assert!((condition_number(&t) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rectangular_and_transpose_agree() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let data: Vec<f32> = (0..6 * 3).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let a = Tensor::from_vec(&[6, 3], data.clone());
+        let mut tr = Tensor::zeros(&[3, 6]);
+        for r in 0..6 {
+            for c in 0..3 {
+                tr.data[c * 6 + r] = data[r * 3 + c];
+            }
+        }
+        let sa = singular_values(&a);
+        let st = singular_values(&tr);
+        for (x, y) in sa.iter().zip(st.iter()) {
+            assert!((x - y).abs() < 1e-8, "{sa:?} vs {st:?}");
+        }
+    }
+
+    #[test]
+    fn frobenius_norm_preserved() {
+        // Σ σ² must equal ‖A‖_F² (orthogonal invariance sanity).
+        crate::util::prop::check(15, |g| {
+            let rows = g.usize_in(2, 12);
+            let cols = g.usize_in(2, 8);
+            let t = Tensor::from_vec(&[rows, cols], g.vec_f32(rows * cols, 1.0));
+            let fro2: f64 = t.data.iter().map(|v| (*v as f64).powi(2)).sum();
+            let sv2: f64 = singular_values(&t).iter().map(|s| s * s).sum();
+            if (fro2 - sv2).abs() > 1e-6 * fro2.max(1.0) {
+                return Err(format!("fro²={fro2} vs Σσ²={sv2}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rank_one_condition_over_nonzero_spectrum_is_one() {
+        // outer product u vᵀ → rank 1; σ₂ ≈ 0 falls below the floor, so the
+        // condition number is taken over the non-negligible spectrum: 1.
+        let u = [1.0f32, 2.0, 3.0];
+        let v = [1.0f32, -1.0];
+        let mut t = Tensor::zeros(&[3, 2]);
+        for r in 0..3 {
+            for c in 0..2 {
+                t.data[r * 2 + c] = u[r] * v[c];
+            }
+        }
+        assert!((condition_number(&t) - 1.0).abs() < 1e-6);
+        // a genuinely ill-conditioned (but full-rank) matrix is large:
+        let ill = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1e-6]);
+        assert!(condition_number(&ill) > 1e5);
+    }
+
+    #[test]
+    fn mean_condition_skips_vectors() {
+        let m = Tensor::from_vec(&[2, 2], vec![2.0, 0.0, 0.0, 1.0]);
+        let vec1 = Tensor::ones(&[5]);
+        let got = mean_condition_number(&[m, vec1]);
+        assert!((got - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! Analysis substrate for the paper's §6 / appendix measurements:
+//! condition numbers (Fig 12b), gradient-history cosine similarity (Fig 6,
+//! Fig 13), and the loss-plane scan (Fig 5).
+
+pub mod grads;
+pub mod linalg;
+pub mod plane;
+
+pub use grads::GradHistory;
+pub use linalg::{condition_number, singular_values};
+pub use plane::{plane_grid, PlanePoint};

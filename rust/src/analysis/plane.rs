@@ -1,0 +1,155 @@
+//! Loss-plane scan (paper Fig 5): evaluate test loss on the 2-D plane
+//! through three parameter settings — the pretrained W0, the Adam-SGD
+//! finetuned W_SGD, and the Fast-Forward finetuned W_FF.
+//!
+//! Basis construction: e₁ = (W_SGD − W0)/‖·‖; e₂ = orthonormalized
+//! (W_FF − W0). A grid point (α, β) corresponds to W0 + α·u·e₁ + β·u·e₂
+//! where u = ‖W_FF − W0‖ (the paper's axis scale).
+
+use crate::model::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct PlanePoint {
+    pub alpha: f64,
+    pub beta: f64,
+    pub loss: f32,
+}
+
+/// Orthonormal in-plane coordinates for the three anchors.
+pub struct PlaneBasis {
+    pub origin: Vec<Tensor>,
+    pub e1: Vec<Tensor>,
+    pub e2: Vec<Tensor>,
+    /// Axis scale u = ‖W_FF − W0‖ (paper's normalization).
+    pub unit: f64,
+    /// (α, β) of W_SGD and W_FF in these coordinates.
+    pub sgd_coords: (f64, f64),
+    pub ff_coords: (f64, f64),
+}
+
+fn sub(a: &[Tensor], b: &[Tensor]) -> Vec<Tensor> {
+    a.iter().zip(b).map(|(x, y)| Tensor::sub_from(x, y)).collect()
+}
+
+fn dot(a: &[Tensor], b: &[Tensor]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x.dot(y)).sum()
+}
+
+fn scale(a: &mut [Tensor], s: f32) {
+    a.iter_mut().for_each(|t| t.scale(s));
+}
+
+impl PlaneBasis {
+    pub fn new(w0: &[Tensor], w_sgd: &[Tensor], w_ff: &[Tensor]) -> anyhow::Result<PlaneBasis> {
+        let d_sgd = sub(w_sgd, w0);
+        let d_ff = sub(w_ff, w0);
+        let n_sgd = dot(&d_sgd, &d_sgd).sqrt();
+        let unit = dot(&d_ff, &d_ff).sqrt();
+        if n_sgd < 1e-12 || unit < 1e-12 {
+            anyhow::bail!("degenerate plane: anchors coincide");
+        }
+        let mut e1 = d_sgd.clone();
+        scale(&mut e1, (1.0 / n_sgd) as f32);
+        // Gram–Schmidt
+        let proj = dot(&d_ff, &e1);
+        let mut e2 = d_ff.clone();
+        for (t, b) in e2.iter_mut().zip(e1.iter()) {
+            t.axpy(-proj as f32, b);
+        }
+        let n2 = dot(&e2, &e2).sqrt();
+        if n2 < 1e-9 * unit {
+            anyhow::bail!("W_FF − W0 is collinear with W_SGD − W0; plane undefined");
+        }
+        scale(&mut e2, (1.0 / n2) as f32);
+        Ok(PlaneBasis {
+            origin: w0.to_vec(),
+            sgd_coords: (n_sgd / unit, 0.0),
+            ff_coords: (proj / unit, n2 / unit),
+            e1,
+            e2,
+            unit,
+        })
+    }
+
+    /// Materialize the parameters at plane coordinates (α, β).
+    pub fn point(&self, alpha: f64, beta: f64) -> Vec<Tensor> {
+        let mut w = self.origin.clone();
+        for ((t, b1), b2) in w.iter_mut().zip(self.e1.iter()).zip(self.e2.iter()) {
+            t.axpy((alpha * self.unit) as f32, b1);
+            t.axpy((beta * self.unit) as f32, b2);
+        }
+        w
+    }
+}
+
+/// Scan an (α, β) grid, evaluating `eval` at each materialized point.
+pub fn plane_grid(
+    basis: &PlaneBasis,
+    alphas: &[f64],
+    betas: &[f64],
+    mut eval: impl FnMut(&[Tensor]) -> anyhow::Result<f32>,
+) -> anyhow::Result<Vec<PlanePoint>> {
+    let mut out = Vec::with_capacity(alphas.len() * betas.len());
+    for &b in betas {
+        for &a in alphas {
+            let w = basis.point(a, b);
+            out.push(PlanePoint { alpha: a, beta: b, loss: eval(&w)? });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> Vec<Tensor> {
+        vec![Tensor::from_vec(&[v.len()], v.to_vec())]
+    }
+
+    #[test]
+    fn anchors_recovered_at_their_coordinates() {
+        let w0 = t(&[0.0, 0.0, 0.0]);
+        let ws = t(&[2.0, 0.0, 0.0]);
+        let wf = t(&[1.0, 2.0, 0.0]);
+        let basis = PlaneBasis::new(&w0, &ws, &wf).unwrap();
+        let (a, b) = basis.sgd_coords;
+        let got = basis.point(a, b);
+        for (x, y) in got[0].data.iter().zip(ws[0].data.iter()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        let (a, b) = basis.ff_coords;
+        let got = basis.point(a, b);
+        for (x, y) in got[0].data.iter().zip(wf[0].data.iter()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // unit is ‖W_FF − W0‖ = √5
+        assert!((basis.unit - 5.0f64.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_anchors_rejected() {
+        let w0 = t(&[0.0, 0.0]);
+        assert!(PlaneBasis::new(&w0, &w0, &t(&[1.0, 0.0])).is_err());
+        // collinear
+        assert!(PlaneBasis::new(&w0, &t(&[1.0, 0.0]), &t(&[2.0, 0.0])).is_err());
+    }
+
+    #[test]
+    fn grid_scan_on_quadratic_bowl() {
+        let w0 = t(&[0.0, 0.0]);
+        let ws = t(&[1.0, 0.0]);
+        let wf = t(&[0.0, 1.0]);
+        let basis = PlaneBasis::new(&w0, &ws, &wf).unwrap();
+        // loss = ‖w − (0.5, 0.5)‖²
+        let pts = plane_grid(&basis, &[0.0, 0.5, 1.0], &[0.0, 0.5, 1.0], |w| {
+            let loss: f32 =
+                w[0].data.iter().map(|x| (x - 0.5) * (x - 0.5)).sum();
+            Ok(loss)
+        })
+        .unwrap();
+        assert_eq!(pts.len(), 9);
+        let min = pts.iter().min_by(|a, b| a.loss.partial_cmp(&b.loss).unwrap()).unwrap();
+        assert_eq!((min.alpha, min.beta), (0.5, 0.5));
+    }
+}

@@ -1,0 +1,269 @@
+//! Configuration system: model architectures, training hyper-parameters
+//! (paper Appendix E, Tables 1–3), task definitions, and FF schedules.
+//!
+//! `ModelConfig` mirrors `python/compile/configs.py` exactly — the runtime
+//! cross-checks the derived parameter spec against every artifact's
+//! manifest, so a drift between the two definitions fails loudly at load.
+
+pub mod presets;
+
+use crate::util::json::Json;
+
+/// Which parameters train (mirrors `configs.TRAIN_MODES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrainMode {
+    Lora,
+    Dora,
+    FullAttn,
+    FullAll,
+}
+
+impl TrainMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrainMode::Lora => "lora",
+            TrainMode::Dora => "dora",
+            TrainMode::FullAttn => "full_attn",
+            TrainMode::FullAll => "full_all",
+        }
+    }
+
+    pub fn from_str(s: &str) -> anyhow::Result<TrainMode> {
+        Ok(match s {
+            "lora" => TrainMode::Lora,
+            "dora" => TrainMode::Dora,
+            "full_attn" => TrainMode::FullAttn,
+            "full_all" => TrainMode::FullAll,
+            other => anyhow::bail!("unknown train mode '{other}'"),
+        })
+    }
+
+    pub fn is_low_rank(&self) -> bool {
+        matches!(self, TrainMode::Lora | TrainMode::Dora)
+    }
+}
+
+/// Architecture of one GPT-style model (mirror of python `ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelConfig {
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total base parameter count (must equal python `n_params`).
+    pub fn n_params(&self) -> usize {
+        let (d, v, t) = (self.d_model, self.vocab_size, self.seq_len);
+        let per_layer = 4 * d * d + 2 * d * self.d_ff() + 4 * d;
+        v * d + t * d + self.n_layers * per_layer + 2 * d + d * v
+    }
+
+    pub fn from_manifest(cfg: &Json) -> anyhow::Result<ModelConfig> {
+        let need = |k: &str| -> anyhow::Result<usize> {
+            cfg.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing '{k}'"))
+        };
+        Ok(ModelConfig {
+            name: cfg
+                .get("model")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest config missing 'model'"))?
+                .to_string(),
+            vocab_size: need("vocab_size")?,
+            d_model: need("d_model")?,
+            n_layers: need("n_layers")?,
+            n_heads: need("n_heads")?,
+            seq_len: need("seq_len")?,
+            micro_batch: need("micro_batch")?,
+            eval_batch: need("eval_batch")?,
+        })
+    }
+}
+
+/// One artifact = (model, mode, rank); mirrors python `ArtifactConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactConfig {
+    pub model: ModelConfig,
+    pub train_mode: TrainMode,
+    pub lora_rank: usize,
+    pub lora_alpha: f32,
+    pub use_pallas: bool,
+}
+
+impl ArtifactConfig {
+    pub fn key(&self) -> String {
+        let mut parts = vec![self.model.name.clone(), self.train_mode.as_str().to_string()];
+        if self.train_mode.is_low_rank() {
+            parts.push(format!("r{}", self.lora_rank));
+        }
+        if self.use_pallas {
+            parts.push("pallas".to_string());
+        }
+        parts.join("_")
+    }
+
+    pub fn lora_scale(&self) -> f32 {
+        self.lora_alpha / self.lora_rank as f32
+    }
+}
+
+/// Adam hyper-parameters (fixed across the paper).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Fast Forward schedule (paper §3 + §5.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FfConfig {
+    /// Run FF at all (false = vanilla Adam SGD baseline).
+    pub enabled: bool,
+    /// Adam steps between FF stages (paper: T_interval = 6).
+    pub t_interval: usize,
+    /// Plain Adam steps before the first FF stage.
+    pub warmup_steps: usize,
+    /// Maximum simulated steps per stage (safety bound; paper Fig 10 probes 100).
+    pub max_tau: usize,
+    /// Stop training after this many consecutive FF stages fail to improve
+    /// the tiny-val loss at τ=1 (paper §5.1 uses 3); None = never.
+    pub convergence_patience: Option<usize>,
+    /// Adaptive T_interval (paper §7 future work): shrink the interval when
+    /// FF stages are long, grow it when they fizzle.
+    pub adaptive_interval: bool,
+    /// Tiny validation set size (paper: 32 examples).
+    pub val_examples: usize,
+    /// A simulated step must improve val loss by at least this *relative*
+    /// amount to continue the stage. The paper stops on any increase
+    /// (threshold 0); our default 1e-3 guards against overfitting the
+    /// 32-sample val set at this substrate's compressed scale (the paper's
+    /// §7 notes the risk; DESIGN.md §Substitutions documents the choice).
+    pub min_rel_improvement: f32,
+}
+
+impl Default for FfConfig {
+    fn default() -> Self {
+        FfConfig {
+            enabled: true,
+            t_interval: 6,
+            warmup_steps: 6,
+            max_tau: 200,
+            convergence_patience: None,
+            adaptive_interval: false,
+            val_examples: 32,
+            min_rel_improvement: 1e-3,
+        }
+    }
+}
+
+/// Full training-run description (what `Trainer::new` consumes).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact key, e.g. "ff-tiny_lora_r8".
+    pub artifact: String,
+    /// Task name: medical | instruct | chat | pile (pretrain mix).
+    pub task: String,
+    pub lr: f32,
+    pub global_batch: usize,
+    /// Number of optimizer steps (or epochs via `epochs`).
+    pub max_steps: usize,
+    pub seed: u64,
+    pub ff: FfConfig,
+    pub adam: AdamConfig,
+    /// Training examples to generate for the corpus.
+    pub train_examples: usize,
+    /// Held-out test examples (paper: 1K).
+    pub test_examples: usize,
+}
+
+impl TrainConfig {
+    /// JSON round-trip used by `reports/` and checkpoint metadata.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("artifact", self.artifact.as_str())
+            .set("task", self.task.as_str())
+            .set("lr", self.lr as f64)
+            .set("global_batch", self.global_batch)
+            .set("max_steps", self.max_steps)
+            .set("seed", self.seed as i64)
+            .set("train_examples", self.train_examples)
+            .set("test_examples", self.test_examples)
+            .set(
+                "ff",
+                Json::obj()
+                    .set("enabled", self.ff.enabled)
+                    .set("t_interval", self.ff.t_interval)
+                    .set("warmup_steps", self.ff.warmup_steps)
+                    .set("max_tau", self.ff.max_tau)
+                    .set("adaptive_interval", self.ff.adaptive_interval)
+                    .set("val_examples", self.ff.val_examples),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_params_matches_python_values() {
+        // Golden values printed by `python -m compile.aot` (index.json).
+        let tiny = presets::model("ff-tiny").unwrap();
+        assert_eq!(tiny.n_params(), 168_576);
+        let xl = presets::model("ff-xl").unwrap();
+        assert!(xl.n_params() > 80_000_000, "{}", xl.n_params());
+    }
+
+    #[test]
+    fn artifact_keys_match_python() {
+        let ac = ArtifactConfig {
+            model: presets::model("ff-tiny").unwrap(),
+            train_mode: TrainMode::Lora,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            use_pallas: false,
+        };
+        assert_eq!(ac.key(), "ff-tiny_lora_r8");
+        let ac2 = ArtifactConfig { train_mode: TrainMode::FullAttn, ..ac.clone() };
+        assert_eq!(ac2.key(), "ff-tiny_full_attn");
+        let ac3 = ArtifactConfig { use_pallas: true, ..ac };
+        assert_eq!(ac3.key(), "ff-tiny_lora_r8_pallas");
+    }
+
+    #[test]
+    fn train_mode_round_trip() {
+        for m in [TrainMode::Lora, TrainMode::Dora, TrainMode::FullAttn, TrainMode::FullAll] {
+            assert_eq!(TrainMode::from_str(m.as_str()).unwrap(), m);
+        }
+        assert!(TrainMode::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn ff_defaults_match_paper() {
+        let ff = FfConfig::default();
+        assert_eq!(ff.t_interval, 6); // paper §3
+        assert_eq!(ff.val_examples, 32); // paper §4
+    }
+}

@@ -1,0 +1,249 @@
+//! Batch assembly: examples → micro-batches → global batches.
+//!
+//! The coordinator implements the paper's micro/global batch structure
+//! (Appendix E tables): a *global* optimizer batch is split into
+//! `global/micro` micro-batches whose gradients the trainer accumulates
+//! before one Adam application. Epoch order is a seeded shuffle, identical
+//! between the baseline and FF runs.
+
+use crate::data::corpus::Example;
+use crate::util::rng::Rng;
+
+/// One device-shaped batch: flattened `[b, t]` row-major buffers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub b: usize,
+    pub t: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl Batch {
+    pub fn from_examples(examples: &[&Example]) -> Batch {
+        assert!(!examples.is_empty());
+        let t = examples[0].mask.len();
+        let b = examples.len();
+        let mut batch = Batch {
+            b,
+            t,
+            tokens: Vec::with_capacity(b * t),
+            targets: Vec::with_capacity(b * t),
+            mask: Vec::with_capacity(b * t),
+        };
+        for ex in examples {
+            assert_eq!(ex.mask.len(), t, "ragged example lengths");
+            batch.tokens.extend_from_slice(ex.tokens());
+            batch.targets.extend_from_slice(ex.targets());
+            batch.mask.extend_from_slice(&ex.mask);
+        }
+        batch
+    }
+
+    /// Non-pad target tokens — the denominator in FLOPs/token accounting.
+    pub fn loss_tokens(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Total token positions (padding included) — what the forward pass
+    /// actually computes over, hence what FLOPs accounting charges.
+    pub fn total_tokens(&self) -> usize {
+        self.b * self.t
+    }
+}
+
+/// One optimizer step's worth of data.
+#[derive(Debug, Clone)]
+pub struct GlobalBatch {
+    pub micro: Vec<Batch>,
+}
+
+impl GlobalBatch {
+    pub fn total_tokens(&self) -> usize {
+        self.micro.iter().map(|m| m.total_tokens()).sum()
+    }
+}
+
+/// Deterministic epoch iterator over a dataset split.
+pub struct Batcher<'a> {
+    examples: &'a [Example],
+    micro_batch: usize,
+    global_batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: usize,
+    rng: Rng,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(
+        examples: &'a [Example],
+        micro_batch: usize,
+        global_batch: usize,
+        seed: u64,
+    ) -> Batcher<'a> {
+        assert!(global_batch % micro_batch == 0, "global must be a multiple of micro");
+        assert!(
+            examples.len() >= global_batch,
+            "dataset smaller than one global batch"
+        );
+        let mut b = Batcher {
+            examples,
+            micro_batch,
+            global_batch,
+            order: (0..examples.len()).collect(),
+            cursor: 0,
+            epoch: 0,
+            rng: Rng::new(seed ^ 0xba7c4),
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn steps_per_epoch(&self) -> usize {
+        self.examples.len() / self.global_batch
+    }
+
+    /// Next global batch; rolls into a fresh shuffled epoch when exhausted
+    /// (partial trailing batches are dropped, like the paper's loader).
+    pub fn next_global(&mut self) -> GlobalBatch {
+        if self.cursor + self.global_batch > self.examples.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let idxs = &self.order[self.cursor..self.cursor + self.global_batch];
+        self.cursor += self.global_batch;
+        let micro = idxs
+            .chunks(self.micro_batch)
+            .map(|chunk| {
+                let refs: Vec<&Example> =
+                    chunk.iter().map(|&i| &self.examples[i]).collect();
+                Batch::from_examples(&refs)
+            })
+            .collect();
+        GlobalBatch { micro }
+    }
+}
+
+/// Chunk a fixed evaluation split into `eval_batch`-sized batches, padding
+/// the tail by repeating the first examples (extra rows get zero masks so
+/// they do not contribute to the mean — handled by the caller via weights).
+pub fn eval_batches(examples: &[Example], eval_batch: usize) -> Vec<(Batch, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < examples.len() {
+        let end = (i + eval_batch).min(examples.len());
+        let real = end - i;
+        let mut refs: Vec<&Example> = examples[i..end].iter().collect();
+        let mut fill = 0;
+        while refs.len() < eval_batch {
+            refs.push(&examples[fill % examples.len()]);
+            fill += 1;
+        }
+        let mut batch = Batch::from_examples(&refs);
+        // zero the mask of padding rows so the batch loss ignores them
+        for row in real..eval_batch {
+            for m in &mut batch.mask[row * batch.t..(row + 1) * batch.t] {
+                *m = 0.0;
+            }
+        }
+        out.push((batch, real));
+        i = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::make_dataset;
+
+    fn examples() -> Vec<Example> {
+        make_dataset("medical", 512, 64, 64, 8, 4, 1).unwrap().train
+    }
+
+    #[test]
+    fn batch_layout_row_major() {
+        let exs = examples();
+        let refs: Vec<&Example> = exs[..4].iter().collect();
+        let b = Batch::from_examples(&refs);
+        assert_eq!((b.b, b.t), (4, 64));
+        assert_eq!(&b.tokens[..64], exs[0].tokens());
+        assert_eq!(&b.tokens[64..128], exs[1].tokens());
+        assert_eq!(&b.targets[..64], exs[0].targets());
+    }
+
+    #[test]
+    fn global_batch_structure() {
+        let exs = examples();
+        let mut bt = Batcher::new(&exs, 8, 32, 0);
+        let g = bt.next_global();
+        assert_eq!(g.micro.len(), 4);
+        assert!(g.micro.iter().all(|m| m.b == 8));
+        assert_eq!(g.total_tokens(), 32 * 64);
+        assert_eq!(bt.steps_per_epoch(), 2);
+    }
+
+    #[test]
+    fn epochs_reshuffle_deterministically() {
+        let exs = examples();
+        let collect = |seed| {
+            let mut bt = Batcher::new(&exs, 8, 32, seed);
+            (0..6).map(|_| bt.next_global().micro[0].tokens.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(collect(5), collect(5));
+        assert_ne!(collect(5), collect(6));
+        let mut bt = Batcher::new(&exs, 8, 32, 5);
+        for _ in 0..2 {
+            bt.next_global();
+        }
+        assert_eq!(bt.epoch(), 0);
+        bt.next_global();
+        assert_eq!(bt.epoch(), 1);
+    }
+
+    #[test]
+    fn every_example_seen_once_per_epoch() {
+        let exs = examples();
+        let mut bt = Batcher::new(&exs, 8, 32, 2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2 {
+            for m in bt.next_global().micro {
+                for row in 0..m.b {
+                    seen.insert(m.tokens[row * m.t..(row + 1) * m.t].to_vec());
+                }
+            }
+        }
+        assert_eq!(seen.len(), 64); // all distinct examples covered
+    }
+
+    #[test]
+    fn eval_batches_cover_and_pad() {
+        let exs = examples();
+        let chunks = eval_batches(&exs[..10], 8);
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].1, 8);
+        assert_eq!(chunks[1].1, 2);
+        // padded rows have zero mask
+        let (tail, real) = &chunks[1];
+        for row in *real..8 {
+            assert!(tail.mask[row * tail.t..(row + 1) * tail.t].iter().all(|&m| m == 0.0));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn global_not_multiple_of_micro_panics() {
+        let exs = examples();
+        Batcher::new(&exs, 8, 12, 0);
+    }
+}

@@ -1,0 +1,347 @@
+//! Synthetic corpus generators (the dataset substitutes — DESIGN.md
+//! §Substitutions).
+//!
+//! Every example is a `seq_len + 1` token sequence plus a per-target loss
+//! mask; `tokens = seq[..T]`, `targets = seq[1..]`. Generators are seeded
+//! and deterministic: the baseline and FF runs of an experiment must see
+//! byte-identical data order, as in the paper's protocol.
+//!
+//! * `medical`  — narrow-domain first-order Markov chain (sparse learned
+//!   transitions over ¼ of the content vocab) ↔ Clinical Guidelines.
+//! * `instruct` — prompt → response with the response a *deterministic
+//!   per-token function* of the prompt (so it is learnable) and loss only
+//!   on response positions ↔ decontaminated Evol.
+//! * `chat`     — multi-turn dialogues with a per-dialogue topic region and
+//!   USR/ASST speaker tags ↔ filtered ultrachat.
+//! * `pile`     — wide-vocab Markov mix, the pretraining substrate that
+//!   manufactures W0 before finetuning experiments.
+
+use crate::data::vocab::{self, Vocab};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    /// seq_len + 1 token ids.
+    pub seq: Vec<i32>,
+    /// seq_len loss-mask entries aligned with targets = seq[1..].
+    pub mask: Vec<f32>,
+}
+
+impl Example {
+    pub fn tokens(&self) -> &[i32] {
+        &self.seq[..self.seq.len() - 1]
+    }
+
+    pub fn targets(&self) -> &[i32] {
+        &self.seq[1..]
+    }
+}
+
+/// A generated split set: train / test (1K, paper §4) / tiny val (32).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub task: String,
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+    pub val: Vec<Example>,
+}
+
+/// Sparse first-order Markov chain over a content-id range: each state has
+/// `branch` successors with random weights — low-entropy enough that a tiny
+/// LM learns it, high-entropy enough that loss stays non-trivial.
+struct Markov {
+    range: std::ops::Range<usize>,
+    succ: Vec<Vec<(usize, f64)>>,
+}
+
+impl Markov {
+    fn new(range: std::ops::Range<usize>, branch: usize, rng: &mut Rng) -> Markov {
+        let n = range.len();
+        let succ = (0..n)
+            .map(|_| {
+                (0..branch)
+                    .map(|_| (rng.below(n), 0.25 + rng.next_f64()))
+                    .collect()
+            })
+            .collect();
+        Markov { range, succ }
+    }
+
+    fn start(&self, rng: &mut Rng) -> usize {
+        self.range.start + rng.below(self.range.len())
+    }
+
+    fn next(&self, state: usize, rng: &mut Rng) -> usize {
+        let local = state - self.range.start;
+        let choices = &self.succ[local];
+        let weights: Vec<f64> = choices.iter().map(|(_, w)| *w).collect();
+        self.range.start + choices[rng.categorical(&weights)].0
+    }
+
+    fn walk(&self, len: usize, rng: &mut Rng, v: &Vocab, out: &mut Vec<i32>) {
+        let mut s = self.start(rng);
+        for _ in 0..len {
+            out.push(v.content(s));
+            s = self.next(s, rng);
+        }
+    }
+}
+
+fn pad_to(seq: &mut Vec<i32>, mask: &mut Vec<f32>, seq_len: usize) {
+    seq.truncate(seq_len + 1);
+    mask.truncate(seq_len);
+    while seq.len() < seq_len + 1 {
+        seq.push(vocab::PAD);
+    }
+    while mask.len() < seq_len {
+        mask.push(0.0);
+    }
+    // positions predicting PAD carry no loss
+    for i in 0..seq_len {
+        if seq[i + 1] == vocab::PAD {
+            mask[i] = 0.0;
+        }
+    }
+}
+
+/// Medical: BOS + one long narrow-domain Markov walk.
+fn gen_medical(v: &Vocab, seq_len: usize, chain: &Markov, rng: &mut Rng) -> Example {
+    let mut seq = vec![vocab::BOS];
+    chain.walk(seq_len, rng, v, &mut seq);
+    let mut mask = vec![1.0; seq_len];
+    pad_to(&mut seq, &mut mask, seq_len);
+    Example { seq, mask }
+}
+
+/// Instruct: BOS prompt SEP response EOS; response token i is a fixed
+/// per-position permutation of prompt token i (learnable mapping); loss
+/// only on response+EOS positions — exercising the same loss-mask path the
+/// paper uses ("loss is only based on response completion").
+fn gen_instruct(v: &Vocab, seq_len: usize, perm: &[usize], rng: &mut Rng) -> Example {
+    let pd = v.instruct_prompt_domain();
+    let rd = v.instruct_response_domain();
+    let max_prompt = (seq_len - 2) / 2;
+    let plen = 3 + rng.below(max_prompt.saturating_sub(3).max(1));
+    let prompt: Vec<usize> = (0..plen).map(|_| pd.start + rng.below(pd.len())).collect();
+
+    let mut seq = vec![vocab::BOS];
+    let mut mask = vec![0.0]; // target of BOS is first prompt token: no loss
+    for &p in &prompt {
+        seq.push(v.content(p));
+        mask.push(0.0);
+    }
+    seq.push(vocab::SEP);
+    mask.pop(); // mask aligns with targets; rebuild below instead
+    // Rebuild mask precisely: mask[i] governs target seq[i+1].
+    let mut mask = vec![0.0; seq.len() - 1]; // predicting prompt+SEP: no loss
+    for &p in &prompt {
+        let local = p - pd.start;
+        let resp = rd.start + perm[local % perm.len()] % rd.len();
+        seq.push(v.content(resp));
+        mask.push(1.0); // predicting this response token: loss
+    }
+    seq.push(vocab::EOS);
+    mask.push(1.0);
+    pad_to(&mut seq, &mut mask, seq_len);
+    Example { seq, mask }
+}
+
+/// Chat: alternating USR/ASST utterances, all drawn from one per-dialogue
+/// topic chain; loss on every non-pad position (as in ultrachat tuning).
+fn gen_chat(
+    v: &Vocab,
+    seq_len: usize,
+    topics: &[Markov],
+    rng: &mut Rng,
+) -> Example {
+    let topic = rng.below(topics.len());
+    let chain = &topics[topic];
+    let mut seq = vec![vocab::BOS];
+    let mut who = 0;
+    while seq.len() < seq_len + 1 {
+        seq.push(if who == 0 { vocab::USR } else { vocab::ASST });
+        let ulen = 4 + rng.below(12);
+        chain.walk(ulen, rng, v, &mut seq);
+        who ^= 1;
+    }
+    let mut mask = vec![1.0; seq_len];
+    pad_to(&mut seq, &mut mask, seq_len);
+    Example { seq, mask }
+}
+
+/// Pile mix: wide Markov chain across the whole content vocab.
+fn gen_pile(v: &Vocab, seq_len: usize, chain: &Markov, rng: &mut Rng) -> Example {
+    let mut seq = vec![vocab::BOS];
+    chain.walk(seq_len, rng, v, &mut seq);
+    let mut mask = vec![1.0; seq_len];
+    pad_to(&mut seq, &mut mask, seq_len);
+    Example { seq, mask }
+}
+
+/// Generate a full dataset for (task, vocab, seq_len). Streams are split
+/// per purpose so e.g. growing the train set never changes test examples.
+pub fn make_dataset(
+    task: &str,
+    vocab_size: usize,
+    seq_len: usize,
+    n_train: usize,
+    n_test: usize,
+    n_val: usize,
+    seed: u64,
+) -> anyhow::Result<Dataset> {
+    let v = Vocab::new(vocab_size);
+    let root = Rng::new(seed ^ 0xda7a);
+    let mut structure_rng = root.fork(&format!("{task}-structure"));
+
+    // Task structure (transition tables, permutation) is fixed per task+seed.
+    let medical_chain = Markov::new(v.medical_domain(), 6, &mut structure_rng);
+    let pile_chain = Markov::new(0..v.n_content(), 12, &mut structure_rng);
+    let n_topics = 4;
+    let topics: Vec<Markov> = (0..n_topics)
+        .map(|t| Markov::new(v.chat_topic_domain(t, n_topics), 6, &mut structure_rng))
+        .collect();
+    let perm: Vec<usize> = {
+        let mut p: Vec<usize> = (0..v.instruct_prompt_domain().len()).collect();
+        structure_rng.shuffle(&mut p);
+        p
+    };
+
+    let gen_split = |name: &str, n: usize| -> anyhow::Result<Vec<Example>> {
+        let mut rng = root.fork(&format!("{task}-{name}"));
+        (0..n)
+            .map(|_| {
+                Ok(match task {
+                    "medical" => gen_medical(&v, seq_len, &medical_chain, &mut rng),
+                    "instruct" => gen_instruct(&v, seq_len, &perm, &mut rng),
+                    "chat" => gen_chat(&v, seq_len, &topics, &mut rng),
+                    "pile" => gen_pile(&v, seq_len, &pile_chain, &mut rng),
+                    other => anyhow::bail!("unknown task '{other}'"),
+                })
+            })
+            .collect()
+    };
+
+    Ok(Dataset {
+        task: task.to_string(),
+        train: gen_split("train", n_train)?,
+        test: gen_split("test", n_test)?,
+        val: gen_split("val", n_val)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds(task: &str) -> Dataset {
+        make_dataset(task, 512, 64, 32, 16, 8, 7).unwrap()
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        for task in ["medical", "instruct", "chat", "pile"] {
+            let a = ds(task);
+            let b = ds(task);
+            assert_eq!(a.train, b.train, "{task}");
+            assert_eq!(a.train.len(), 32);
+            assert_eq!(a.test.len(), 16);
+            assert_eq!(a.val.len(), 8);
+            for ex in a.train.iter().chain(&a.test).chain(&a.val) {
+                assert_eq!(ex.seq.len(), 65);
+                assert_eq!(ex.mask.len(), 64);
+                assert!(ex.seq.iter().all(|t| (0..512).contains(t)));
+            }
+        }
+        assert!(make_dataset("nope", 512, 64, 1, 1, 1, 0).is_err());
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let a = ds("medical");
+        assert_ne!(a.train[0], a.test[0]);
+        // growing train must not perturb test
+        let bigger = make_dataset("medical", 512, 64, 64, 16, 8, 7).unwrap();
+        assert_eq!(a.test, bigger.test);
+        assert_eq!(a.train[..32], bigger.train[..32]);
+    }
+
+    #[test]
+    fn medical_is_narrow_domain() {
+        let v = Vocab::new(512);
+        let a = ds("medical");
+        let dom = v.medical_domain();
+        for ex in &a.train {
+            for &t in ex.seq.iter().filter(|&&t| t >= vocab::N_RESERVED as i32) {
+                let idx = t as usize - vocab::N_RESERVED;
+                assert!(dom.contains(&idx), "token {t} outside medical domain");
+            }
+        }
+    }
+
+    #[test]
+    fn instruct_masks_prompt_only() {
+        let a = ds("instruct");
+        for ex in &a.train {
+            let sep = ex.seq.iter().position(|&t| t == vocab::SEP).unwrap();
+            // loss starts only after SEP (mask[i] governs target seq[i+1])
+            for i in 0..sep {
+                assert_eq!(ex.mask[i], 0.0, "loss on prompt at {i}");
+            }
+            assert!(ex.mask.iter().sum::<f32>() > 0.0, "no loss at all");
+            // the masked-in positions predict response-domain or EOS tokens
+            let v = Vocab::new(512);
+            let rd = v.instruct_response_domain();
+            for i in 0..ex.mask.len() {
+                if ex.mask[i] == 1.0 {
+                    let t = ex.seq[i + 1];
+                    let ok = t == vocab::EOS
+                        || rd.contains(&((t as usize).saturating_sub(vocab::N_RESERVED)));
+                    assert!(ok, "masked-in target {t} not response/EOS");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn instruct_response_is_function_of_prompt() {
+        // identical prompts ⇒ identical responses (learnability guarantee)
+        let a = make_dataset("instruct", 512, 64, 256, 1, 1, 3).unwrap();
+        use std::collections::HashMap;
+        let mut seen: HashMap<Vec<i32>, Vec<i32>> = HashMap::new();
+        for ex in &a.train {
+            let sep = ex.seq.iter().position(|&t| t == vocab::SEP).unwrap();
+            let prompt = ex.seq[1..sep].to_vec();
+            let resp: Vec<i32> = ex.seq[sep + 1..].iter().copied()
+                .take_while(|&t| t != vocab::EOS && t != vocab::PAD)
+                .collect();
+            if let Some(prev) = seen.get(&prompt) {
+                assert_eq!(prev, &resp);
+            } else {
+                seen.insert(prompt, resp);
+            }
+        }
+    }
+
+    #[test]
+    fn chat_has_speaker_structure_and_topics() {
+        let a = ds("chat");
+        let mut any_usr = false;
+        for ex in &a.train {
+            any_usr |= ex.seq.contains(&vocab::USR);
+            assert!(ex.seq.contains(&vocab::ASST) || ex.seq.contains(&vocab::USR));
+        }
+        assert!(any_usr);
+    }
+
+    #[test]
+    fn pad_positions_carry_no_loss() {
+        let a = ds("instruct");
+        for ex in &a.train {
+            for i in 0..ex.mask.len() {
+                if ex.seq[i + 1] == vocab::PAD {
+                    assert_eq!(ex.mask[i], 0.0);
+                }
+            }
+        }
+    }
+}

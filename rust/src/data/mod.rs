@@ -1,0 +1,18 @@
+//! Data substrate: synthetic corpora, batching, and the streaming
+//! prefetch pipeline.
+//!
+//! The paper finetunes on three real corpora (Clinical Guidelines, Evol
+//! code-instructions, ultrachat). None are available in this offline
+//! environment, so `corpus.rs` generates seeded synthetic equivalents that
+//! exercise the same code paths (DESIGN.md §Substitutions): a narrow-domain
+//! Markov corpus (medical), instruction→response pairs with response-only
+//! loss (instruct), and multi-turn topic-coherent dialogues (chat).
+
+pub mod batcher;
+pub mod corpus;
+pub mod pipeline;
+pub mod vocab;
+
+pub use batcher::{Batch, Batcher, GlobalBatch};
+pub use corpus::{make_dataset, Dataset, Example};
+pub use vocab::Vocab;

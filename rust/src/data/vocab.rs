@@ -1,0 +1,100 @@
+//! Vocabulary layout shared by all synthetic corpora.
+//!
+//! Ids 0..8 are reserved control tokens; content ids partition into a
+//! general region plus per-task "domain" regions so the three finetuning
+//! tasks have genuinely different token distributions (the medical corpus
+//! is narrow-domain, chat dialogues are topic-clustered, etc.).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Vocab {
+    pub size: usize,
+}
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// Instruction/response boundary.
+pub const SEP: i32 = 3;
+/// Chat speaker tags.
+pub const USR: i32 = 4;
+pub const ASST: i32 = 5;
+/// QA answer markers (yes/no/maybe candidates for the §5.2 benchmark).
+pub const ANS_YES: i32 = 6;
+pub const ANS_NO: i32 = 7;
+pub const ANS_MAYBE: i32 = 8;
+
+pub const N_RESERVED: usize = 9;
+
+impl Vocab {
+    pub fn new(size: usize) -> Vocab {
+        assert!(size > 4 * N_RESERVED, "vocab too small: {size}");
+        Vocab { size }
+    }
+
+    /// Number of content (non-reserved) ids.
+    pub fn n_content(&self) -> usize {
+        self.size - N_RESERVED
+    }
+
+    /// Content token id from a dense index in [0, n_content).
+    pub fn content(&self, idx: usize) -> i32 {
+        debug_assert!(idx < self.n_content());
+        (N_RESERVED + idx) as i32
+    }
+
+    /// The "medical" domain: the first quarter of content ids (narrow).
+    pub fn medical_domain(&self) -> std::ops::Range<usize> {
+        0..self.n_content() / 4
+    }
+
+    /// Instruction vocab (second quarter) / response vocab (third quarter).
+    pub fn instruct_prompt_domain(&self) -> std::ops::Range<usize> {
+        self.n_content() / 4..self.n_content() / 2
+    }
+
+    pub fn instruct_response_domain(&self) -> std::ops::Range<usize> {
+        self.n_content() / 2..3 * self.n_content() / 4
+    }
+
+    /// Chat topics: k disjoint slices of the last quarter.
+    pub fn chat_topic_domain(&self, topic: usize, n_topics: usize) -> std::ops::Range<usize> {
+        let lo = 3 * self.n_content() / 4;
+        let width = (self.n_content() - lo) / n_topics;
+        let start = lo + topic * width;
+        start..start + width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domains_are_disjoint() {
+        let v = Vocab::new(512);
+        let med = v.medical_domain();
+        let ip = v.instruct_prompt_domain();
+        let ir = v.instruct_response_domain();
+        assert!(med.end <= ip.start);
+        assert!(ip.end <= ir.start);
+        let c0 = v.chat_topic_domain(0, 4);
+        let c1 = v.chat_topic_domain(1, 4);
+        assert!(ir.end <= c0.start);
+        assert!(c0.end <= c1.start);
+        assert!(c1.end <= v.n_content());
+    }
+
+    #[test]
+    fn content_ids_above_reserved() {
+        let v = Vocab::new(512);
+        assert_eq!(v.content(0), N_RESERVED as i32);
+        assert_eq!(v.n_content(), 512 - N_RESERVED);
+        assert!(v.content(v.n_content() - 1) < 512);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        Vocab::new(16);
+    }
+}

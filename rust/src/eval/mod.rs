@@ -1,0 +1,12 @@
+//! Evaluation: the few-shot QA benchmark of paper §5.2.
+//!
+//! The paper evaluates medical-finetuned Llama-3 models on PubMedQA with a
+//! 3-shot prompt (one yes / one no / one maybe example in arbitrary order)
+//! and reports that FF training does not harm accuracy. Our substitute: a
+//! synthetic 3-way cloze task over the medical token domain where the
+//! answer is a deterministic function of the "symptom" tokens — scored the
+//! same way (argmin candidate loss on the answer position).
+
+pub mod qa;
+
+pub use qa::{qa_accuracy, QaBenchmark, QaItem};

@@ -1,0 +1,185 @@
+//! Synthetic few-shot QA benchmark (§5.2 substitute for PubMedQA).
+//!
+//! Item structure (token ids): each *shot* is `BOS? s₁ … s_k SEP answer`,
+//! shots concatenated; the query repeats the pattern and the candidate
+//! answer occupies the final position. The ground-truth answer is
+//! `(Σ symptom ids) mod 3 → {yes, no, maybe}` — deterministic, so a model
+//! that reads the context can in principle learn it, and two equally good
+//! models (regular vs FF) score equivalently, which is the claim under
+//! test.
+
+use crate::data::corpus::Example;
+use crate::data::vocab::{self, Vocab};
+use crate::util::rng::Rng;
+
+pub const ANSWERS: [i32; 3] = [vocab::ANS_YES, vocab::ANS_NO, vocab::ANS_MAYBE];
+
+#[derive(Debug, Clone)]
+pub struct QaItem {
+    /// Prefix tokens: 3 shots + query symptoms + SEP.
+    pub prefix: Vec<i32>,
+    /// Index into ANSWERS of the true answer.
+    pub truth: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct QaBenchmark {
+    pub items: Vec<QaItem>,
+    pub seq_len: usize,
+}
+
+fn answer_of(symptoms: &[i32]) -> usize {
+    (symptoms.iter().map(|&t| t as u64).sum::<u64>() % 3) as usize
+}
+
+fn gen_symptoms(v: &Vocab, rng: &mut Rng, len: usize) -> Vec<i32> {
+    let dom = v.medical_domain();
+    (0..len).map(|_| v.content(dom.start + rng.below(dom.len()))).collect()
+}
+
+impl QaBenchmark {
+    /// Build `n` items. Every prompt carries one shot per answer class in
+    /// shuffled order (the paper's protocol).
+    pub fn generate(vocab_size: usize, seq_len: usize, n: usize, seed: u64) -> QaBenchmark {
+        let v = Vocab::new(vocab_size);
+        let mut rng = Rng::new(seed ^ 0x9a);
+        let sym_len = 4;
+        let mut items = Vec::with_capacity(n);
+        while items.len() < n {
+            // one exemplar per class, then shuffle
+            let mut shots: Vec<(Vec<i32>, usize)> = Vec::new();
+            for class in 0..3 {
+                // rejection-sample symptoms whose answer == class
+                loop {
+                    let s = gen_symptoms(&v, &mut rng, sym_len);
+                    if answer_of(&s) == class {
+                        shots.push((s, class));
+                        break;
+                    }
+                }
+            }
+            rng.shuffle(&mut shots);
+            let query = gen_symptoms(&v, &mut rng, sym_len);
+            let truth = answer_of(&query);
+            let mut prefix = vec![vocab::BOS];
+            for (s, class) in &shots {
+                prefix.extend_from_slice(s);
+                prefix.push(vocab::SEP);
+                prefix.push(ANSWERS[*class]);
+            }
+            prefix.extend_from_slice(&query);
+            prefix.push(vocab::SEP);
+            if prefix.len() + 1 > seq_len + 1 {
+                continue; // doesn't fit; regenerate (shouldn't happen at T≥64)
+            }
+            items.push(QaItem { prefix, truth });
+        }
+        QaBenchmark { items, seq_len }
+    }
+
+    /// Render (item, candidate) as a padded `Example` whose mask covers
+    /// exactly the answer position.
+    pub fn render(&self, item: &QaItem, candidate: usize) -> Example {
+        let t = self.seq_len;
+        let mut seq = item.prefix.clone();
+        seq.push(ANSWERS[candidate]);
+        let answer_target_pos = seq.len() - 2; // mask[i] governs seq[i+1]
+        while seq.len() < t + 1 {
+            seq.push(vocab::PAD);
+        }
+        seq.truncate(t + 1);
+        let mut mask = vec![0.0f32; t];
+        mask[answer_target_pos] = 1.0;
+        Example { seq, mask }
+    }
+}
+
+/// Score the benchmark with an arbitrary loss oracle (the experiment wires
+/// this to the trainer's eval program): accuracy of argmin-loss candidates.
+pub fn qa_accuracy(
+    bench: &QaBenchmark,
+    mut loss_of: impl FnMut(&Example) -> anyhow::Result<f32>,
+) -> anyhow::Result<f64> {
+    let mut correct = 0usize;
+    for item in &bench.items {
+        let mut best = (f32::INFINITY, 0usize);
+        for cand in 0..ANSWERS.len() {
+            let ex = bench.render(item, cand);
+            let loss = loss_of(&ex)?;
+            if loss < best.0 {
+                best = (loss, cand);
+            }
+        }
+        if best.1 == item.truth {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / bench.items.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn items_fit_and_are_deterministic() {
+        let a = QaBenchmark::generate(512, 64, 50, 1);
+        let b = QaBenchmark::generate(512, 64, 50, 1);
+        assert_eq!(a.items.len(), 50);
+        for (x, y) in a.items.iter().zip(b.items.iter()) {
+            assert_eq!(x.prefix, y.prefix);
+            assert_eq!(x.truth, y.truth);
+        }
+        // roughly balanced classes
+        let mut counts = [0usize; 3];
+        for it in &a.items {
+            counts[it.truth] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 5), "{counts:?}");
+    }
+
+    #[test]
+    fn every_prompt_shows_all_three_answers() {
+        let b = QaBenchmark::generate(512, 64, 20, 2);
+        for it in &b.items {
+            for ans in ANSWERS {
+                assert!(it.prefix.contains(&ans), "missing answer {ans} in shot prompt");
+            }
+        }
+    }
+
+    #[test]
+    fn render_masks_exactly_the_answer() {
+        let b = QaBenchmark::generate(512, 64, 5, 3);
+        let ex = b.render(&b.items[0], 1);
+        assert_eq!(ex.seq.len(), 65);
+        assert_eq!(ex.mask.iter().filter(|&&m| m > 0.0).count(), 1);
+        let pos = ex.mask.iter().position(|&m| m > 0.0).unwrap();
+        assert_eq!(ex.seq[pos + 1], ANSWERS[1]); // target at mask is the candidate
+        assert_eq!(ex.seq[pos], vocab::SEP); // preceded by the query SEP
+    }
+
+    #[test]
+    fn oracle_scoring_yields_perfect_accuracy() {
+        // a loss oracle that knows the rule must score 100%
+        let b = QaBenchmark::generate(512, 64, 30, 4);
+        let acc = qa_accuracy(&b, |ex| {
+            let pos = ex.mask.iter().position(|&m| m > 0.0).unwrap();
+            let cand = ex.seq[pos + 1];
+            // recover query symptoms: the sym_len tokens before final SEP
+            let sym = &ex.seq[pos - 4..pos];
+            let truth = ANSWERS[(sym.iter().map(|&t| t as u64).sum::<u64>() % 3) as usize];
+            Ok(if cand == truth { 0.0 } else { 1.0 })
+        })
+        .unwrap();
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn random_guessing_scores_near_third() {
+        let b = QaBenchmark::generate(512, 64, 300, 5);
+        let mut rng = Rng::new(9);
+        let acc = qa_accuracy(&b, |_| Ok(rng.next_f32())).unwrap();
+        assert!((acc - 1.0 / 3.0).abs() < 0.12, "acc {acc}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Fig 12 (Appendix B): potential predictors of τ* — the norm (12a) and
+//! condition number (12b) of the gradients right before each FF stage.
+//! The paper finds both correlate with τ* but only through the confounder
+//! of training time.
+
+use anyhow::Result;
+
+use crate::config::FfConfig;
+use crate::experiments::common::run_config;
+use crate::experiments::ExpContext;
+use crate::metrics::{write_report, TextTable};
+use crate::train::pretrain::ensure_pretrained;
+use crate::train::trainer::{StopRule, Trainer};
+use crate::util::json::Json;
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt() + 1e-300)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let model = "ff-tiny"; // paper: Pythia-1.4B, medical task
+    let artifact = format!("{model}_lora_r8");
+    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let mut cfg = run_config(ctx, &artifact, "medical", FfConfig::default())?;
+    cfg.max_steps = if ctx.scale.full { 120 } else { 60 };
+    let max_steps = cfg.max_steps;
+    let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+    t.run(&StopRule::MaxSteps(max_steps))?;
+
+    let stages = &t.ffc.stages;
+    let taus: Vec<f64> = stages.iter().map(|s| s.tau_star as f64).collect();
+    let norms: Vec<f64> = stages.iter().map(|s| s.grad_norm).collect();
+    let conds: Vec<f64> = stages.iter().map(|s| s.grad_cond).collect();
+    let steps: Vec<f64> = stages.iter().map(|s| s.at_step as f64).collect();
+
+    let r_norm = pearson(&norms, &taus);
+    let r_cond = pearson(&conds, &taus);
+    let r_step = pearson(&steps, &taus);
+
+    let rows: Vec<Json> = stages
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .set("stage", s.stage)
+                .set("at_step", s.at_step)
+                .set("tau_star", s.tau_star)
+                .set("grad_norm", s.grad_norm)
+                .set("grad_cond", s.grad_cond)
+        })
+        .collect();
+    let json = Json::obj()
+        .set("id", "fig12")
+        .set("stages", Json::Arr(rows))
+        .set("pearson_norm_tau", r_norm)
+        .set("pearson_cond_tau", r_cond)
+        .set("pearson_step_tau", r_step);
+
+    let mut table = TextTable::new(&["stage", "at step", "τ*", "‖grad‖", "cond(grad)"]);
+    for s in stages {
+        table.row(&[
+            s.stage.to_string(),
+            s.at_step.to_string(),
+            s.tau_star.to_string(),
+            format!("{:.4}", s.grad_norm),
+            format!("{:.1}", s.grad_cond),
+        ]);
+    }
+    let text = format!(
+        "Fig 12 — factors in the optimal FF step count (medical, {model})\n\n{}\n\
+         Pearson(‖grad‖, τ*)   = {r_norm:+.3}   (12a)\n\
+         Pearson(cond, τ*)     = {r_cond:+.3}   (12b)\n\
+         Pearson(step, τ*)     = {r_step:+.3}   (the confounder)\n\n\
+         paper reading: both factors correlate with τ* but neither adds\n\
+         predictive power beyond the training timestep.\n",
+        table.render()
+    );
+    write_report(&ctx.reports_dir, "fig12", &json, &text)
+}

@@ -1,0 +1,71 @@
+//! Fig 13 (Appendix C): batch-wise gradient consistency (mean pairwise
+//! cosine similarity between micro-batch gradients, measured immediately
+//! before a FF stage) vs that stage's τ*. The paper finds *no significant
+//! correlation* — "wide" directions aren't necessarily "long".
+
+use anyhow::Result;
+
+use crate::analysis::grads::batch_consistency;
+use crate::config::FfConfig;
+use crate::experiments::common::run_config;
+use crate::experiments::ExpContext;
+use crate::experiments::fig12_factors::pearson;
+use crate::ff::controller::FfDecision;
+use crate::metrics::{write_report, TextTable};
+use crate::train::pretrain::ensure_pretrained;
+use crate::train::trainer::Trainer;
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let model = "ff-tiny";
+    let artifact = format!("{model}_lora_r8");
+    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let mut cfg = run_config(ctx, &artifact, "medical", FfConfig::default())?;
+    cfg.max_steps = if ctx.scale.full { 120 } else { 60 };
+    let max_steps = cfg.max_steps;
+    let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+    t.keep_micro_grads = true;
+
+    let mut samples: Vec<(f64, usize, usize)> = Vec::new(); // (consistency, τ*, stage)
+    while t.adam_steps() < max_steps {
+        match t.ffc.next() {
+            FfDecision::Sgd => {
+                t.sgd_step()?;
+            }
+            FfDecision::FastForward => {
+                // consistency of the most recent global batch's micro grads
+                let consistency = batch_consistency(&t.last_micro_grads);
+                let stats = t.ff_stage()?;
+                samples.push((consistency, stats.tau_star, stats.stage));
+            }
+        }
+    }
+
+    let xs: Vec<f64> = samples.iter().map(|(c, _, _)| *c).collect();
+    let ys: Vec<f64> = samples.iter().map(|(_, t, _)| *t as f64).collect();
+    let r = pearson(&xs, &ys);
+
+    let rows: Vec<Json> = samples
+        .iter()
+        .map(|(c, tau, stage)| {
+            Json::obj().set("stage", *stage).set("consistency", *c).set("tau_star", *tau)
+        })
+        .collect();
+    let json = Json::obj()
+        .set("id", "fig13")
+        .set("samples", Json::Arr(rows))
+        .set("pearson", r);
+
+    let mut table = TextTable::new(&["stage", "batch grad consistency", "τ*"]);
+    for (c, tau, stage) in &samples {
+        table.row(&[stage.to_string(), format!("{c:.4}"), tau.to_string()]);
+    }
+    let text = format!(
+        "Fig 13 — batch-wise gradient consistency vs optimal FF length\n\n{}\n\
+         Pearson(consistency, τ*) = {r:+.3}\n\
+         paper reading: no significant correlation — even broadly applicable\n\
+         gradient directions may be useful only briefly.\n",
+        table.render()
+    );
+    write_report(&ctx.reports_dir, "fig13", &json, &text)
+}

@@ -1,0 +1,97 @@
+//! Fig 2a/2b + Fig 3: the headline grid — % FLOPs (and train time) saved
+//! by Fast Forward to match the N-epoch Adam baseline's test loss, for
+//! LoRA and DoRA across the model ladder and the three tasks.
+
+use anyhow::Result;
+
+use crate::config::presets;
+use crate::experiments::common::{artifact_key, run_pair};
+use crate::experiments::ExpContext;
+use crate::metrics::{write_report, TextTable};
+use crate::util::json::Json;
+
+fn run_grid(ctx: &ExpContext, mode: &str, id: &str) -> Result<Json> {
+    let mut rows = Vec::new();
+    for model in &ctx.scale.models {
+        for task in presets::TASKS {
+            let artifact = artifact_key(model, mode, task);
+            let pair = run_pair(ctx, &artifact, model, task)?;
+            rows.push(
+                Json::obj()
+                    .set("model", model.as_str())
+                    .set("paper_model", presets::paper_model(model))
+                    .set("task", task)
+                    .set("mode", mode)
+                    .set("flops_saved_pct", 100.0 * pair.flops_saved())
+                    .set("time_saved_pct", 100.0 * pair.time_saved())
+                    .set("baseline_flops", pair.baseline.flops.total() as f64)
+                    .set("ff_flops", pair.ff.flops.total() as f64)
+                    .set("baseline_seconds", pair.baseline.train_seconds)
+                    .set("ff_seconds", pair.ff.train_seconds)
+                    .set("baseline_loss", pair.baseline.final_test_loss as f64)
+                    .set("ff_loss", pair.ff.final_test_loss as f64)
+                    .set("ff_adam_steps", pair.ff.adam_steps)
+                    .set("ff_sim_steps", pair.ff.sim_steps)
+                    .set("reached_target", pair.ff.reached_target),
+            );
+        }
+    }
+    let json = Json::obj().set("id", id).set("mode", mode).set("rows", Json::Arr(rows));
+    Ok(json)
+}
+
+fn render(json: &Json, metric: &str, title: &str) -> String {
+    let mut table = TextTable::new(&["model", "(paper)", "task", metric, "ff steps (adam+sim)", "matched"]);
+    for row in json.get("rows").as_arr().unwrap_or(&[]) {
+        let key = if metric == "time saved %" { "time_saved_pct" } else { "flops_saved_pct" };
+        table.row(&[
+            row.get("model").as_str().unwrap_or("?").to_string(),
+            row.get("paper_model").as_str().unwrap_or("?").to_string(),
+            row.get("task").as_str().unwrap_or("?").to_string(),
+            format!("{:.1}", row.get(key).as_f64().unwrap_or(f64::NAN)),
+            format!(
+                "{}+{}",
+                row.get("ff_adam_steps").as_i64().unwrap_or(0),
+                row.get("ff_sim_steps").as_i64().unwrap_or(0)
+            ),
+            row.get("reached_target").as_bool().unwrap_or(false).to_string(),
+        ]);
+    }
+    format!("{title}\n\n{}", table.render())
+}
+
+pub fn run_fig2a(ctx: &ExpContext) -> Result<()> {
+    let json = run_grid(ctx, "lora", "fig2a")?;
+    let text = render(&json, "flops saved %",
+        "Fig 2a — % FLOPs saved by Fast Forward (LoRA), matching N-epoch Adam test loss\n\
+         paper: 41–66% (Llama-3 8B) to 65–86% (Pythia 1.4B)");
+    write_report(&ctx.reports_dir, "fig2a", &json, &text)
+}
+
+pub fn run_fig2b(ctx: &ExpContext) -> Result<()> {
+    let json = run_grid(ctx, "dora", "fig2b")?;
+    let text = render(&json, "flops saved %",
+        "Fig 2b — % FLOPs saved by Fast Forward (DoRA)\n\
+         paper: 42–69% (Llama-3 8B) to 66–85% (Pythia 1.4B)");
+    write_report(&ctx.reports_dir, "fig2b", &json, &text)
+}
+
+/// Fig 3 re-renders fig2a's runs on the train-time axis (re-running the
+/// grid if fig2a.json is absent).
+pub fn run_fig3(ctx: &ExpContext) -> Result<()> {
+    let path = ctx.reports_dir.join("fig2a.json");
+    let json = if path.exists() {
+        let mut j = Json::parse(&std::fs::read_to_string(&path)?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Json::Obj(ref mut o) = j {
+            o.insert("id".into(), Json::Str("fig3".into()));
+        }
+        j
+    } else {
+        run_grid(ctx, "lora", "fig3")?
+    };
+    let text = render(&json, "time saved %",
+        "Fig 3 — % train time saved by Fast Forward (LoRA)\n\
+         paper: 41–65% (Llama-3 8B) to 63–78% (Pythia 1.4B)");
+    write_report(&ctx.reports_dir, "fig3", &json, &text)
+}

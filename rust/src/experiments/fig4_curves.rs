@@ -1,0 +1,95 @@
+//! Fig 4 / Fig 9 (Appendix A): the training trajectory — loss at every
+//! step, with SGD steps (paper: red dots) and FF simulated steps (green
+//! dots), against the vanilla Adam curve, on the chat task.
+
+use anyhow::Result;
+
+use crate::config::FfConfig;
+use crate::experiments::common::run_config;
+use crate::experiments::ExpContext;
+use crate::metrics::{write_report, StepKind};
+use crate::train::pretrain::ensure_pretrained;
+use crate::train::trainer::{StopRule, Trainer};
+use crate::util::json::Json;
+
+fn curve_for_model(ctx: &ExpContext, model: &str) -> Result<Json> {
+    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let artifact = format!("{model}_lora_r8");
+
+    let mut series = Vec::new();
+    for (label, ff) in [
+        ("vanilla", FfConfig { enabled: false, ..FfConfig::default() }),
+        ("fast_forward", FfConfig::default()),
+    ] {
+        let cfg = run_config(ctx, &artifact, "chat", ff)?;
+        let max_steps = cfg.max_steps;
+        let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+        t.run(&StopRule::MaxSteps(max_steps))?;
+        let pts: Vec<Json> = t
+            .log
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("step", r.step)
+                    .set("loss", r.loss as f64)
+                    .set("kind", match r.kind {
+                        StepKind::Sgd => "sgd",
+                        StepKind::FastForward => "ff",
+                    })
+                    .set("flops", r.flops as f64)
+            })
+            .collect();
+        series.push(Json::obj().set("label", label).set("points", Json::Arr(pts)));
+    }
+    Ok(Json::obj().set("model", model).set("series", Json::Arr(series)))
+}
+
+fn render(models: &[Json]) -> String {
+    let mut out = String::from(
+        "Fig 4/9 — chat-task training curves; FF simulated steps marked 'F', SGD '.'\n",
+    );
+    for m in models {
+        out.push_str(&format!("\nmodel {}:\n", m.get("model").as_str().unwrap_or("?")));
+        for s in m.get("series").as_arr().unwrap_or(&[]) {
+            let pts = s.get("points").as_arr().unwrap_or(&[]);
+            let first = pts.first().map(|p| p.get("loss").as_f64().unwrap_or(0.0)).unwrap_or(0.0);
+            let last = pts.last().map(|p| p.get("loss").as_f64().unwrap_or(0.0)).unwrap_or(0.0);
+            let n_ff = pts.iter().filter(|p| p.get("kind").as_str() == Some("ff")).count();
+            let marks: String = pts
+                .iter()
+                .map(|p| if p.get("kind").as_str() == Some("ff") { 'F' } else { '.' })
+                .collect();
+            out.push_str(&format!(
+                "  {:<13} loss {first:.4} → {last:.4} over {} steps ({n_ff} simulated)\n    [{marks}]\n",
+                s.get("label").as_str().unwrap_or("?"),
+                pts.len(),
+            ));
+        }
+    }
+    out
+}
+
+pub fn run_fig4(ctx: &ExpContext) -> Result<()> {
+    // Paper plots Pythia-6.9B ↔ ff-medium; in quick mode use the largest
+    // model in scale.models.
+    let model = if ctx.scale.models.iter().any(|m| m == "ff-medium") {
+        "ff-medium".to_string()
+    } else {
+        ctx.scale.models.last().cloned().unwrap_or_else(|| "ff-tiny".into())
+    };
+    let m = curve_for_model(ctx, &model)?;
+    let text = render(std::slice::from_ref(&m));
+    let json = Json::obj().set("id", "fig4").set("models", Json::Arr(vec![m]));
+    write_report(&ctx.reports_dir, "fig4", &json, &text)
+}
+
+pub fn run_fig9(ctx: &ExpContext) -> Result<()> {
+    let mut models = Vec::new();
+    for model in &ctx.scale.models {
+        models.push(curve_for_model(ctx, model)?);
+    }
+    let text = render(&models);
+    let json = Json::obj().set("id", "fig9").set("models", Json::Arr(models));
+    write_report(&ctx.reports_dir, "fig9", &json, &text)
+}

@@ -1,0 +1,104 @@
+//! Experiment harnesses: one module per paper figure/table (see DESIGN.md
+//! experiment index). Every harness writes `reports/<id>.{json,txt}` with
+//! the same rows/series the paper plots, and EXPERIMENTS.md records
+//! paper-vs-measured.
+
+pub mod common;
+pub mod convergence;
+pub mod fig10_convexity;
+pub mod fig11_tau;
+pub mod fig12_factors;
+pub mod fig13_consistency;
+pub mod fig14_interval;
+pub mod fig2_flops;
+pub mod fig4_curves;
+pub mod fig5_plane;
+pub mod fig6_cosine;
+pub mod fig7_rank;
+pub mod fig8_fullrank;
+pub mod qa_benchmark;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+/// Scale knobs: `quick` (default; minutes on one core) vs `full`
+/// (the complete model grid and 5-epoch protocol).
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub full: bool,
+    /// Baseline epochs (paper: 5).
+    pub epochs: usize,
+    /// Models in grid experiments.
+    pub models: Vec<String>,
+    /// Held-out test examples used for target matching (paper: 1000).
+    pub test_examples: usize,
+    /// Test-loss check cadence for the FF run (adam steps).
+    pub eval_every: usize,
+}
+
+impl Scale {
+    pub fn quick() -> Scale {
+        Scale {
+            full: false,
+            epochs: 2,
+            models: vec!["ff-tiny".into(), "ff-small".into()],
+            test_examples: 128,
+            eval_every: 4,
+        }
+    }
+
+    pub fn full() -> Scale {
+        Scale {
+            full: true,
+            epochs: 5,
+            models: vec!["ff-tiny".into(), "ff-small".into(), "ff-medium".into(), "ff-large".into()],
+            test_examples: 512,
+            eval_every: 4,
+        }
+    }
+}
+
+pub struct ExpContext {
+    pub rt: Rc<Runtime>,
+    pub artifacts_root: PathBuf,
+    pub reports_dir: PathBuf,
+    pub scale: Scale,
+}
+
+impl ExpContext {
+    pub fn new(artifacts_root: PathBuf, reports_dir: PathBuf, scale: Scale) -> Result<ExpContext> {
+        Ok(ExpContext { rt: Runtime::cpu()?, artifacts_root, reports_dir, scale })
+    }
+}
+
+pub type ExpFn = fn(&ExpContext) -> Result<()>;
+
+/// Registry mapping experiment ids to harnesses (DESIGN.md experiment index).
+pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
+    vec![
+        ("fig2a", "% FLOPs saved, FF-LoRA vs 5-epoch Adam (models × tasks)", fig2_flops::run_fig2a),
+        ("fig2b", "% FLOPs saved, FF-DoRA vs 5-epoch Adam (models × tasks)", fig2_flops::run_fig2b),
+        ("fig3", "% train time saved, FF-LoRA (models × tasks)", fig2_flops::run_fig3),
+        ("fig4", "loss curve with SGD/FF markers vs vanilla (chat task)", fig4_curves::run_fig4),
+        ("fig9", "fig4 across every grid model (Appendix A)", fig4_curves::run_fig9),
+        ("fig5", "test-loss plane through W0, W_SGD, W_FF", fig5_plane::run),
+        ("fig6", "gradient cosine similarity vs history, FF vs regular", fig6_cosine::run),
+        ("fig7", "total FLOPs vs LoRA rank 1–64 (+ full-rank LoRA note)", fig7_rank::run),
+        ("fig8", "full-rank attention-only FF fails (loss ↑ at τ=1)", fig8_fullrank::run),
+        ("fig10", "val loss vs τ for the first FF stage (convexity)", fig10_convexity::run),
+        ("fig11", "optimal τ* vs FF stage index", fig11_tau::run),
+        ("fig12", "τ* vs gradient norm / condition number", fig12_factors::run),
+        ("fig13", "batch-wise gradient consistency vs τ*", fig13_consistency::run),
+        ("fig14", "τ* at 2nd FF stage vs T_interval 1–10 (Appendix D)", fig14_interval::run),
+        ("convergence", "§5.1: FF to convergence — no long-term harm", convergence::run),
+        ("qa", "§5.2: few-shot QA accuracy, FF vs regular", qa_benchmark::run),
+    ]
+}
+
+pub fn find(id: &str) -> Option<(&'static str, &'static str, ExpFn)> {
+    registry().into_iter().find(|(name, _, _)| *name == id)
+}

@@ -1,0 +1,236 @@
+//! The Fast Forward schedule controller (paper Fig 1):
+//!
+//! ```text
+//!  warmup ─► SGD × T_interval ─► FF stage ─► SGD × T_interval ─► FF …
+//! ```
+//!
+//! The controller owns *when* to Fast Forward; the trainer owns *how*
+//! (line search over Δ_W). It also implements:
+//!   * the §5.1 convergence rule — after `convergence_patience` consecutive
+//!     FF stages with τ* = 0, Fast Forward is permanently disabled;
+//!   * the §7-future-work adaptive interval — shrink T_interval while FF
+//!     stages are productive, grow it when they fizzle (ablation bench).
+
+use crate::config::FfConfig;
+
+/// What the trainer should do next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfDecision {
+    /// Run a regular Adam SGD step.
+    Sgd,
+    /// Run a Fast Forward stage now.
+    FastForward,
+}
+
+/// Outcome summary of one FF stage, fed back into the controller and kept
+/// for the Fig 11/12/13/14 analyses.
+#[derive(Debug, Clone)]
+pub struct FfStageStats {
+    /// Index of this stage (0-based) over the run.
+    pub stage: usize,
+    /// Adam step count when the stage ran.
+    pub at_step: usize,
+    pub tau_star: usize,
+    pub probes: usize,
+    pub baseline_loss: f32,
+    pub final_loss: f32,
+    /// ‖Δ_W‖ and gradient stats recorded just before the stage (Fig 12).
+    pub grad_norm: f64,
+    pub grad_cond: f64,
+}
+
+#[derive(Debug)]
+pub struct FfController {
+    cfg: FfConfig,
+    sgd_since_ff: usize,
+    total_sgd: usize,
+    /// Current interval (== cfg.t_interval unless adaptive).
+    interval: usize,
+    consecutive_failures: usize,
+    permanently_off: bool,
+    pub stages: Vec<FfStageStats>,
+}
+
+impl FfController {
+    pub fn new(cfg: FfConfig) -> FfController {
+        let interval = cfg.t_interval;
+        FfController {
+            cfg,
+            sgd_since_ff: 0,
+            total_sgd: 0,
+            interval,
+            consecutive_failures: 0,
+            permanently_off: false,
+        stages: Vec::new(),
+        }
+    }
+
+    pub fn interval(&self) -> usize {
+        self.interval
+    }
+
+    pub fn is_permanently_off(&self) -> bool {
+        self.permanently_off
+    }
+
+    /// Decide the next action. FF requires: enabled, not disabled by the
+    /// convergence rule, warmup complete, a full interval of SGD steps run
+    /// since the last stage (so Δ_W reflects a *recent* optimizer step).
+    pub fn next(&self) -> FfDecision {
+        if !self.cfg.enabled || self.permanently_off {
+            return FfDecision::Sgd;
+        }
+        if self.total_sgd < self.cfg.warmup_steps {
+            return FfDecision::Sgd;
+        }
+        if self.sgd_since_ff >= self.interval {
+            FfDecision::FastForward
+        } else {
+            FfDecision::Sgd
+        }
+    }
+
+    /// Record a completed SGD step.
+    pub fn on_sgd_step(&mut self) {
+        self.total_sgd += 1;
+        self.sgd_since_ff += 1;
+    }
+
+    /// Record a completed FF stage; applies the convergence + adaptive rules.
+    pub fn on_ff_stage(&mut self, stats: FfStageStats) {
+        self.sgd_since_ff = 0;
+        if stats.tau_star == 0 {
+            self.consecutive_failures += 1;
+            if let Some(patience) = self.cfg.convergence_patience {
+                if self.consecutive_failures >= patience {
+                    self.permanently_off = true;
+                    crate::info!(
+                        "FF permanently off after {} consecutive empty stages (§5.1 rule)",
+                        self.consecutive_failures
+                    );
+                }
+            }
+        } else {
+            self.consecutive_failures = 0;
+        }
+        if self.cfg.adaptive_interval {
+            // §7 future work: productive stages → FF sooner; fizzles → later.
+            if stats.tau_star >= 4 {
+                self.interval = (self.interval.saturating_sub(1)).max(2);
+            } else if stats.tau_star == 0 {
+                self.interval = (self.interval + 2).min(4 * self.cfg.t_interval);
+            }
+        }
+        self.stages.push(stats);
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(stage: usize, tau: usize) -> FfStageStats {
+        FfStageStats {
+            stage,
+            at_step: 0,
+            tau_star: tau,
+            probes: tau + 1,
+            baseline_loss: 1.0,
+            final_loss: 0.9,
+            grad_norm: 0.0,
+            grad_cond: 0.0,
+        }
+    }
+
+    fn cfg() -> FfConfig {
+        FfConfig { warmup_steps: 3, t_interval: 2, ..FfConfig::default() }
+    }
+
+    #[test]
+    fn warmup_then_interval_schedule() {
+        let mut c = FfController::new(cfg());
+        // warmup: 3 SGD steps, no FF even though interval elapsed
+        for _ in 0..3 {
+            assert_eq!(c.next(), FfDecision::Sgd);
+            c.on_sgd_step();
+        }
+        // after warmup the accumulated interval triggers FF
+        assert_eq!(c.next(), FfDecision::FastForward);
+        c.on_ff_stage(stats(0, 5));
+        // then T_interval SGD steps before the next stage
+        assert_eq!(c.next(), FfDecision::Sgd);
+        c.on_sgd_step();
+        assert_eq!(c.next(), FfDecision::Sgd);
+        c.on_sgd_step();
+        assert_eq!(c.next(), FfDecision::FastForward);
+    }
+
+    #[test]
+    fn disabled_controller_never_fast_forwards() {
+        let mut c = FfController::new(FfConfig { enabled: false, ..cfg() });
+        for _ in 0..20 {
+            assert_eq!(c.next(), FfDecision::Sgd);
+            c.on_sgd_step();
+        }
+    }
+
+    #[test]
+    fn convergence_patience_disables_ff() {
+        let mut c = FfController::new(FfConfig {
+            convergence_patience: Some(3),
+            ..cfg()
+        });
+        for _ in 0..3 {
+            c.on_sgd_step();
+        }
+        for i in 0..3 {
+            assert_eq!(c.next(), FfDecision::FastForward, "stage {i}");
+            c.on_ff_stage(stats(i, 0)); // empty stage
+            for _ in 0..2 {
+                c.on_sgd_step();
+            }
+        }
+        assert!(c.is_permanently_off());
+        assert_eq!(c.next(), FfDecision::Sgd);
+    }
+
+    #[test]
+    fn success_resets_failure_count() {
+        let mut c = FfController::new(FfConfig {
+            convergence_patience: Some(2),
+            ..cfg()
+        });
+        for _ in 0..3 {
+            c.on_sgd_step();
+        }
+        c.on_ff_stage(stats(0, 0));
+        c.on_ff_stage(stats(1, 3)); // success resets
+        c.on_ff_stage(stats(2, 0));
+        assert!(!c.is_permanently_off());
+        c.on_ff_stage(stats(3, 0));
+        assert!(c.is_permanently_off());
+    }
+
+    #[test]
+    fn adaptive_interval_shrinks_and_grows() {
+        let mut c = FfController::new(FfConfig {
+            adaptive_interval: true,
+            t_interval: 6,
+            ..FfConfig::default()
+        });
+        assert_eq!(c.interval(), 6);
+        c.on_ff_stage(stats(0, 10));
+        assert_eq!(c.interval(), 5); // productive → sooner
+        c.on_ff_stage(stats(1, 0));
+        c.on_ff_stage(stats(2, 0));
+        assert_eq!(c.interval(), 9); // fizzles → later
+        for i in 0..40 {
+            c.on_ff_stage(stats(3 + i, 0));
+        }
+        assert!(c.interval() <= 24); // bounded
+    }
+}

@@ -1,0 +1,186 @@
+//! The Fast Forward line search (paper §3):
+//!
+//! > The direction Δ_W is used to iteratively update W_t. In the τ-th Fast
+//! > Forward step, the updated weight matrix is given by W_t + τΔ_W. The
+//! > recursive updates continue until the model's loss on a small
+//! > validation set stops improving. When a Fast Forward step causes this
+//! > validation loss to increase, the Fast Forward stage concludes.
+//!
+//! Generic over a [`SearchTarget`] so the same search drives the real
+//! ParamSet+PJRT path in the trainer, host-only unit tests, and the Fig 10
+//! convexity probe.
+
+use anyhow::Result;
+
+/// The state a line search extrapolates: `apply` moves W by +Δ, `revert`
+/// by −Δ, `eval` measures the tiny-validation-set loss at the current W.
+pub trait SearchTarget {
+    fn apply(&mut self) -> Result<()>;
+    fn revert(&mut self) -> Result<()>;
+    fn eval(&mut self) -> Result<f32>;
+}
+
+#[derive(Debug, Clone)]
+pub struct LineSearchResult {
+    /// Number of simulated steps *kept* (τ*). 0 = the very first simulated
+    /// step already increased val loss (the Fig 8 full-rank failure mode).
+    pub tau_star: usize,
+    /// Validation-loss evaluations performed (each costs one val forward).
+    pub probes: usize,
+    /// Val loss at entry (τ=0).
+    pub baseline_loss: f32,
+    /// Val loss at the kept endpoint.
+    pub final_loss: f32,
+    /// Loss at each probed τ = 1, 2, … (including the rejected last one).
+    pub losses: Vec<f32>,
+}
+
+impl LineSearchResult {
+    pub fn improved(&self) -> bool {
+        self.tau_star > 0
+    }
+}
+
+/// Run the FF line search. `baseline` is the val loss at τ=0 (the caller
+/// usually already has it); `max_tau` bounds runaway extrapolation.
+/// Postcondition: the target's W sits at `W_t + τ*·Δ`.
+pub fn line_search(
+    target: &mut impl SearchTarget,
+    baseline: f32,
+    max_tau: usize,
+) -> Result<LineSearchResult> {
+    line_search_thresholded(target, baseline, max_tau, 0.0)
+}
+
+/// Like [`line_search`] but requiring each kept step to improve the val
+/// loss by at least `min_rel` relative to the best so far (0 = paper rule).
+pub fn line_search_thresholded(
+    target: &mut impl SearchTarget,
+    baseline: f32,
+    max_tau: usize,
+    min_rel: f32,
+) -> Result<LineSearchResult> {
+    let mut best = baseline;
+    let mut losses = Vec::new();
+    let mut tau = 0usize;
+    while tau < max_tau {
+        target.apply()?;
+        let loss = target.eval()?;
+        losses.push(loss);
+        if !loss.is_finite() || loss >= best * (1.0 - min_rel) {
+            // this simulated step made things worse — undo it and stop
+            target.revert()?;
+            break;
+        }
+        best = loss;
+        tau += 1;
+    }
+    Ok(LineSearchResult {
+        tau_star: tau,
+        probes: losses.len(),
+        baseline_loss: baseline,
+        final_loss: best,
+        losses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic val loss in τ: L(τ) = (τ − vertex)² + 1.
+    struct Quad {
+        tau: i64,
+        vertex: f64,
+        nan: bool,
+    }
+
+    impl Quad {
+        fn new(vertex: f64) -> Quad {
+            Quad { tau: 0, vertex, nan: false }
+        }
+
+        fn loss(&self) -> f32 {
+            ((self.tau as f64 - self.vertex).powi(2) + 1.0) as f32
+        }
+    }
+
+    impl SearchTarget for Quad {
+        fn apply(&mut self) -> Result<()> {
+            self.tau += 1;
+            Ok(())
+        }
+        fn revert(&mut self) -> Result<()> {
+            self.tau -= 1;
+            Ok(())
+        }
+        fn eval(&mut self) -> Result<f32> {
+            Ok(if self.nan { f32::NAN } else { self.loss() })
+        }
+    }
+
+    #[test]
+    fn stops_at_vertex_of_convex_loss() {
+        let mut q = Quad::new(7.3);
+        let base = q.loss();
+        let r = line_search(&mut q, base, 100).unwrap();
+        assert_eq!(r.tau_star, 7);
+        assert!(r.improved());
+        // probes = kept steps + the one rejected probe
+        assert_eq!(r.probes, 8);
+        assert!(r.final_loss < r.baseline_loss);
+        // postcondition: target parked at τ*
+        assert_eq!(q.tau, 7);
+    }
+
+    #[test]
+    fn immediate_increase_gives_tau_zero() {
+        // vertex at 0 ⇒ the first simulated step already worsens loss —
+        // exactly the paper's full-rank failure (Fig 8).
+        let mut q = Quad::new(0.0);
+        let base = q.loss();
+        let r = line_search(&mut q, base, 100).unwrap();
+        assert_eq!(r.tau_star, 0);
+        assert!(!r.improved());
+        assert_eq!(r.probes, 1);
+        assert_eq!(r.final_loss, r.baseline_loss);
+        assert_eq!(q.tau, 0);
+    }
+
+    #[test]
+    fn respects_max_tau_bound() {
+        let mut q = Quad::new(1000.0);
+        let base = q.loss();
+        let r = line_search(&mut q, base, 10).unwrap();
+        assert_eq!(r.tau_star, 10);
+        assert_eq!(r.probes, 10);
+    }
+
+    #[test]
+    fn plateau_counts_as_stop() {
+        struct Flat;
+        impl SearchTarget for Flat {
+            fn apply(&mut self) -> Result<()> {
+                Ok(())
+            }
+            fn revert(&mut self) -> Result<()> {
+                Ok(())
+            }
+            fn eval(&mut self) -> Result<f32> {
+                Ok(1.0)
+            }
+        }
+        let r = line_search(&mut Flat, 1.0, 50).unwrap();
+        assert_eq!(r.tau_star, 0);
+    }
+
+    #[test]
+    fn nan_loss_stops_and_reverts() {
+        let mut q = Quad::new(50.0);
+        q.nan = true;
+        let base = 1.0;
+        let r = line_search(&mut q, base, 50).unwrap();
+        assert_eq!(r.tau_star, 0);
+        assert_eq!(q.tau, 0, "must revert the NaN step");
+    }
+}

@@ -1,0 +1,9 @@
+//! Fast Forward (paper §3): the controller that alternates regular Adam
+//! SGD intervals with line-search extrapolation stages, and the line
+//! search itself.
+
+pub mod controller;
+pub mod line_search;
+
+pub use controller::{FfController, FfDecision, FfStageStats};
+pub use line_search::{line_search, LineSearchResult};

@@ -1,0 +1,33 @@
+//! # fastforward
+//!
+//! Production-grade reproduction of **"Fast Forwarding Low-Rank Training"**
+//! (Rahamim, Kangaslahti, Saphra, Belinkov — EMNLP 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: data pipeline, micro-
+//!   batch scheduler with gradient accumulation, the Fast Forward controller
+//!   (interval scheduling + line search on a tiny validation set), FLOPs
+//!   accounting, experiments, and the PJRT runtime that executes AOT-
+//!   compiled artifacts.
+//! * **L2 (python/compile/model.py)** — the transformer fwd/bwd in JAX with
+//!   LoRA / DoRA / full-rank train modes, lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — the fused LoRA-matmul Pallas kernel,
+//!   lowered (interpret mode) into the same HLO.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! `fastforward` binary is self-contained. See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod analysis;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod ff;
+pub mod flops;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod train;
+pub mod util;

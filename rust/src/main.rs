@@ -1,0 +1,248 @@
+//! `fastforward` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train        one training run (artifact × task, FF on/off)
+//!   experiment   run one paper-figure harness (or --all)
+//!   pretrain     (re)build the cached W0 checkpoint for a model
+//!   list         artifacts, experiments, presets
+//!   selftest     fast end-to-end smoke check of the whole stack
+//!
+//! Examples:
+//!   fastforward experiment fig2a
+//!   fastforward experiment --all --full
+//!   fastforward train --artifact ff-tiny_lora_r8 --task medical --epochs 2
+//!   fastforward train --artifact ff-tiny_lora_r8 --task medical --no-ff
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fastforward::config::{presets, FfConfig};
+use fastforward::experiments::{self, ExpContext, Scale};
+use fastforward::runtime::{ArtifactIndex, Runtime};
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::{StopRule, Trainer};
+use fastforward::util::args::Args;
+use fastforward::{info, warn_};
+
+fn main() -> ExitCode {
+    fastforward::util::logging::init();
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: fastforward <train|experiment|pretrain|list|selftest> [options]\n\
+     common options: --artifacts DIR (default ./artifacts) --reports DIR (default ./reports)\n\
+     train:      --artifact KEY --task medical|instruct|chat [--epochs N] [--no-ff]\n\
+                 [--steps N] [--seed S] [--t-interval N] [--adaptive] [--no-pretrain]\n\
+     experiment: <id>|--all [--full]   (ids: fastforward list --experiments)\n\
+     pretrain:   --model NAME [--steps N]\n"
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let artifacts = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+    let reports = PathBuf::from(args.opt_or("reports", "reports"));
+
+    match args.subcommand.clone().as_deref() {
+        Some("train") => cmd_train(&mut args, artifacts),
+        Some("experiment") => cmd_experiment(&mut args, artifacts, reports),
+        Some("pretrain") => cmd_pretrain(&mut args, artifacts),
+        Some("list") => cmd_list(&mut args, artifacts),
+        Some("selftest") => cmd_selftest(&mut args, artifacts),
+        _ => {
+            print!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
+    let artifact = args
+        .opt("artifact")
+        .ok_or_else(|| anyhow::anyhow!("--artifact required (see: fastforward list)"))?;
+    let task = args.opt_or("task", "medical");
+    let epochs = args.opt_usize("epochs", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let no_ff = args.flag("no-ff");
+    let adaptive = args.flag("adaptive");
+    let no_pretrain = args.flag("no-pretrain");
+    let seed = args.opt_u64("seed", 0x5eed).map_err(|e| anyhow::anyhow!(e))?;
+    let t_interval = args.opt_usize("t-interval", 6).map_err(|e| anyhow::anyhow!(e))?;
+    let steps_override = args.opt_usize("steps", 0).map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut cfg = presets::train_config(&artifact, &task, epochs)?;
+    cfg.seed = seed;
+    cfg.ff = FfConfig {
+        enabled: !no_ff,
+        t_interval,
+        adaptive_interval: adaptive,
+        ..FfConfig::default()
+    };
+    if steps_override > 0 {
+        cfg.max_steps = steps_override;
+    }
+    let max_steps = cfg.max_steps;
+
+    let rt = Runtime::cpu()?;
+    let model = artifact.split('_').next().unwrap_or("ff-tiny").to_string();
+    let base = if no_pretrain {
+        None
+    } else {
+        Some(ensure_pretrained(&rt, &artifacts, &model, None)?)
+    };
+    let mut t = Trainer::new(&rt, &artifacts, cfg, base.as_ref())?;
+    info!("training {artifact} on {task}: {max_steps} optimizer steps, FF={}", !no_ff);
+    let sum = t.run(&StopRule::MaxSteps(max_steps))?;
+    println!(
+        "done: test loss {:.4} | {} adam + {} simulated steps | {:.3e} FLOPs | {:.1}s train time",
+        sum.final_test_loss,
+        sum.adam_steps,
+        sum.sim_steps,
+        sum.flops.total() as f64,
+        sum.train_seconds
+    );
+    for s in &t.ffc.stages {
+        println!(
+            "  ff stage {:>2} @step {:>4}: τ*={:<3} val {:.4}→{:.4}",
+            s.stage, s.at_step, s.tau_star, s.baseline_loss, s.final_loss
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyhow::Result<()> {
+    let all = args.flag("all");
+    let full = args.flag("full");
+    let id = args.positional.first().cloned();
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let scale = if full { Scale::full() } else { Scale::quick() };
+    let ctx = ExpContext::new(artifacts, reports, scale)?;
+    if all {
+        let mut failed = Vec::new();
+        for (name, desc, f) in experiments::registry() {
+            info!("=== experiment {name}: {desc}");
+            if let Err(e) = f(&ctx) {
+                warn_!("experiment {name} failed: {e:#}");
+                failed.push(name);
+            }
+        }
+        anyhow::ensure!(failed.is_empty(), "failed experiments: {failed:?}");
+        return Ok(());
+    }
+    let id = id.ok_or_else(|| anyhow::anyhow!("experiment id required (or --all)"))?;
+    let (_, desc, f) = experiments::find(&id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (see: fastforward list --experiments)"))?;
+    info!("experiment {id}: {desc}");
+    f(&ctx)
+}
+
+fn cmd_pretrain(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
+    let model = args.opt_or("model", "ff-tiny");
+    let steps = args.opt_usize("steps", 0).map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::cpu()?;
+    let ckpt = fastforward::train::pretrain::checkpoint_path(&artifacts, &model);
+    if ckpt.exists() {
+        std::fs::remove_file(&ckpt)?;
+        info!("removed cached {}", ckpt.display());
+    }
+    let steps = if steps > 0 { Some(steps) } else { None };
+    ensure_pretrained(&rt, &artifacts, &model, steps)?;
+    println!("pretrained checkpoint: {}", ckpt.display());
+    Ok(())
+}
+
+fn cmd_list(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
+    let experiments_only = args.flag("experiments");
+    let presets_only = args.flag("presets");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    if !experiments_only && !presets_only {
+        match ArtifactIndex::load(&artifacts) {
+            Ok(idx) => {
+                println!("artifacts ({}):", idx.entries.len());
+                for e in &idx.entries {
+                    println!(
+                        "  {:<28} {:>10} params {:>9} trainable",
+                        e.key, e.n_params, e.n_trainable
+                    );
+                }
+            }
+            Err(e) => warn_!("no artifact index: {e}"),
+        }
+        println!("\nmodels (paper substitutes):");
+        for m in presets::GRID_MODELS.iter().chain(["ff-xl"].iter()) {
+            let mc = presets::model(m)?;
+            println!(
+                "  {:<10} {:>10} params  ↔ {}",
+                m,
+                mc.n_params(),
+                presets::paper_model(m)
+            );
+        }
+    }
+    if presets_only {
+        println!("task presets (paper Tables 1–3, scaled — see DESIGN.md):");
+        for t in presets::TASKS {
+            let p = presets::task_preset(t)?;
+            println!(
+                "  {:<9} lr={:<8} global_batch={:<4} lora_r={:<3} examples={}",
+                t, p.lr, p.global_batch, p.lora_rank, p.train_examples
+            );
+        }
+    }
+    if !presets_only {
+        println!("\nexperiments:");
+        for (name, desc, _) in experiments::registry() {
+            println!("  {name:<12} {desc}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::cpu()?;
+    println!("[1/4] artifact index + manifest cross-check");
+    let idx = ArtifactIndex::load(&artifacts)?;
+    let man = idx.manifest("ff-tiny_lora_r8")?;
+    println!("      ok: {} artifacts, checked '{}'", idx.entries.len(), man.key);
+
+    println!("[2/4] pretrain (cached) + 12 SGD steps");
+    let base = ensure_pretrained(&rt, &artifacts, "ff-tiny", Some(60))?;
+    let mut cfg = presets::train_config("ff-tiny_lora_r8", "medical", 1)?;
+    cfg.train_examples = 256;
+    cfg.test_examples = 64;
+    cfg.ff = FfConfig { warmup_steps: 4, t_interval: 4, ..FfConfig::default() };
+    let mut t = Trainer::new(&rt, &artifacts, cfg, Some(&base))?;
+    // compare held-out loss before/after (per-batch train loss is noisy)
+    let first = t.eval_test()?;
+    for _ in 0..12 {
+        t.sgd_step()?;
+    }
+    let last = t.eval_test()?;
+    anyhow::ensure!(last < first, "test loss did not decrease ({first} → {last})");
+    println!("      ok: test loss {first:.4} → {last:.4}");
+
+    println!("[3/4] fast-forward stage");
+    let stats = t.ff_stage()?;
+    println!(
+        "      ok: τ*={} probes={} val {:.4}→{:.4}",
+        stats.tau_star, stats.probes, stats.baseline_loss, stats.final_loss
+    );
+
+    println!("[4/4] pallas artifact parity");
+    let art = fastforward::runtime::Artifact::load(&rt, &artifacts.join("ff-tiny_lora_r8_pallas"))?;
+    anyhow::ensure!(art.manifest.config.use_pallas);
+    art.program("eval_loss")?;
+    println!("      ok: pallas eval_loss compiled");
+    println!("selftest passed");
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! Run metrics: step records, loss curves, wall-clock timers, and report
+//! writers (JSON via the in-repo codec + aligned plain text for the
+//! paper-figure reports under reports/).
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// What kind of update produced a step record (paper Fig 4 colors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// Regular Adam step (red dots).
+    Sgd,
+    /// FF simulated step (green dots).
+    FastForward,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    /// Monotone step index counting SGD + simulated steps (Fig 4 x-axis).
+    pub step: usize,
+    pub kind: StepKind,
+    pub loss: f32,
+    /// Cumulative chargeable FLOPs after this step.
+    pub flops: u64,
+    /// Elapsed train seconds after this step.
+    pub seconds: f64,
+}
+
+/// Accumulates the full trajectory of one training run.
+#[derive(Debug, Default)]
+pub struct RunLog {
+    pub records: Vec<StepRecord>,
+    /// (test loss, step, flops, seconds) measurements.
+    pub test_evals: Vec<(f32, usize, u64, f64)>,
+}
+
+impl RunLog {
+    pub fn push(&mut self, rec: StepRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn n_sgd(&self) -> usize {
+        self.records.iter().filter(|r| r.kind == StepKind::Sgd).count()
+    }
+
+    pub fn n_ff(&self) -> usize {
+        self.records.iter().filter(|r| r.kind == StepKind::FastForward).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let recs: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("step", r.step)
+                    .set("kind", match r.kind {
+                        StepKind::Sgd => "sgd",
+                        StepKind::FastForward => "ff",
+                    })
+                    .set("loss", r.loss as f64)
+                    .set("flops", r.flops as f64)
+                    .set("seconds", r.seconds)
+            })
+            .collect();
+        let evals: Vec<Json> = self
+            .test_evals
+            .iter()
+            .map(|(l, s, f, t)| {
+                Json::obj()
+                    .set("loss", *l as f64)
+                    .set("step", *s)
+                    .set("flops", *f as f64)
+                    .set("seconds", *t)
+            })
+            .collect();
+        Json::obj().set("records", Json::Arr(recs)).set("test_evals", Json::Arr(evals))
+    }
+}
+
+/// Wall-clock stopwatch that can exclude measurement-only sections
+/// (test-set evals don't count as train time, matching the paper).
+#[derive(Debug)]
+pub struct TrainTimer {
+    started: Instant,
+    excluded: f64,
+    pause_at: Option<Instant>,
+}
+
+impl TrainTimer {
+    pub fn start() -> TrainTimer {
+        TrainTimer { started: Instant::now(), excluded: 0.0, pause_at: None }
+    }
+
+    pub fn pause(&mut self) {
+        assert!(self.pause_at.is_none(), "already paused");
+        self.pause_at = Some(Instant::now());
+    }
+
+    pub fn resume(&mut self) {
+        let p = self.pause_at.take().expect("not paused");
+        self.excluded += p.elapsed().as_secs_f64();
+    }
+
+    /// Train seconds so far, net of excluded sections.
+    pub fn elapsed(&self) -> f64 {
+        let gross = self.started.elapsed().as_secs_f64();
+        let pending = self.pause_at.map(|p| p.elapsed().as_secs_f64()).unwrap_or(0.0);
+        gross - self.excluded - pending
+    }
+}
+
+/// Write a report as both pretty JSON and aligned text under `reports/`.
+pub fn write_report(dir: &Path, name: &str, json: &Json, text: &str) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut jf = std::fs::File::create(dir.join(format!("{name}.json")))?;
+    jf.write_all(json.to_string_pretty().as_bytes())?;
+    let mut tf = std::fs::File::create(dir.join(format!("{name}.txt")))?;
+    tf.write_all(text.as_bytes())?;
+    crate::info!("wrote reports/{name}.{{json,txt}}");
+    Ok(())
+}
+
+/// Simple fixed-width table builder for the text reports.
+#[derive(Debug, Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> TextTable {
+        TextTable { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(widths.iter())
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runlog_counts_kinds() {
+        let mut log = RunLog::default();
+        log.push(StepRecord { step: 0, kind: StepKind::Sgd, loss: 2.0, flops: 10, seconds: 0.1 });
+        log.push(StepRecord { step: 1, kind: StepKind::FastForward, loss: 1.9, flops: 12, seconds: 0.2 });
+        log.push(StepRecord { step: 2, kind: StepKind::FastForward, loss: 1.8, flops: 14, seconds: 0.3 });
+        assert_eq!(log.n_sgd(), 1);
+        assert_eq!(log.n_ff(), 2);
+        assert_eq!(log.last_loss(), Some(1.8));
+        let j = log.to_json();
+        assert_eq!(j.get("records").as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("records").idx(1).get("kind").as_str(), Some("ff"));
+    }
+
+    #[test]
+    fn timer_excludes_paused_sections() {
+        let mut t = TrainTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        t.pause();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        t.resume();
+        let e = t.elapsed();
+        assert!(e >= 0.025 && e < 0.06, "elapsed {e}");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(&["model", "saved%"]);
+        t.row(&["ff-tiny".into(), "63.0".into()]);
+        t.row(&["ff-large".into(), "41.5".into()]);
+        let s = t.render();
+        assert!(s.contains("model"));
+        assert!(s.lines().count() == 4);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn write_report_creates_files() {
+        let dir = std::env::temp_dir().join(format!("ffrep-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_report(&dir, "t", &Json::obj().set("a", 1i64), "hello").unwrap();
+        assert!(dir.join("t.json").exists());
+        assert_eq!(std::fs::read_to_string(dir.join("t.txt")).unwrap(), "hello");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

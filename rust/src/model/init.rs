@@ -1,0 +1,173 @@
+//! Host-side parameter initialization (python never runs at training time,
+//! so the "pretrained" W0 and adapter inits are produced here).
+//!
+//! Rules (mirrored by `python/tests/conftest.init_params` for the L2 tests):
+//!   * `lora_b`  → zeros (standard LoRA: adapters start as the identity),
+//!   * `lora_a`  → N(0, 0.02),
+//!   * `dora_m`  → column norms of the matrix it decorates (Liu et al. 2024),
+//!   * LN scale  → ones, LN bias → zeros,
+//!   * matmuls   → N(0, 0.5/√d_in) (residual-scaled), embeddings N(0, 0.02).
+
+use std::collections::BTreeMap;
+
+use crate::config::ArtifactConfig;
+use crate::model::spec::{param_spec, ParamInfo};
+use crate::model::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const LORA_A_STD: f32 = 0.02;
+pub const EMBED_STD: f32 = 0.02;
+pub const DORA_EPS: f32 = 1e-6; // must equal python model.DORA_EPS
+
+/// Initialize every parameter for an artifact config. Deterministic in
+/// (seed, parameter name) — adding/removing parameters does not shift the
+/// streams of the others.
+pub fn init_params(ac: &ArtifactConfig, seed: u64) -> BTreeMap<String, Tensor> {
+    let root = Rng::new(seed);
+    let spec = param_spec(ac);
+    let mut out: BTreeMap<String, Tensor> = BTreeMap::new();
+
+    for p in &spec {
+        let t = init_one(p, &root);
+        out.insert(p.name.clone(), t);
+    }
+    // DoRA magnitudes decorate the *current* base matrix.
+    for p in &spec {
+        if let Some(base_name) = p.name.strip_suffix(".dora_m") {
+            let norms: Vec<f32> = out[base_name]
+                .col_norms()
+                .into_iter()
+                .map(|n| n + DORA_EPS)
+                .collect();
+            out.insert(p.name.clone(), Tensor::from_vec(&p.shape.clone(), norms));
+        }
+    }
+    out
+}
+
+/// Like [`init_params`] but overriding base weights from a pretrained
+/// checkpoint (the W0 the finetuning experiments start from). Adapter
+/// params (`lora_a/b`) still come from the seeded init; DoRA magnitudes
+/// are recomputed against the *pretrained* matrices.
+pub fn init_with_base(
+    ac: &ArtifactConfig,
+    seed: u64,
+    base: &BTreeMap<String, Tensor>,
+) -> BTreeMap<String, Tensor> {
+    let mut out = init_params(ac, seed);
+    for (name, t) in base {
+        if let Some(slot) = out.get_mut(name) {
+            assert_eq!(slot.shape, t.shape, "checkpoint shape mismatch for {name}");
+            *slot = t.clone();
+        }
+    }
+    // Recompute DoRA magnitudes over the pretrained weights.
+    let names: Vec<String> = out.keys().cloned().collect();
+    for name in names {
+        if let Some(base_name) = name.strip_suffix(".dora_m").map(str::to_string) {
+            let norms: Vec<f32> =
+                out[&base_name].col_norms().into_iter().map(|n| n + DORA_EPS).collect();
+            let shape = out[&name].shape.clone();
+            out.insert(name, Tensor::from_vec(&shape, norms));
+        }
+    }
+    out
+}
+
+fn init_one(p: &ParamInfo, root: &Rng) -> Tensor {
+    let mut rng = root.fork(&p.name);
+    let name = p.name.as_str();
+    if name.ends_with(".lora_b") {
+        return Tensor::zeros(&p.shape);
+    }
+    if name.ends_with(".dora_m") {
+        return Tensor::ones(&p.shape); // replaced by col-norms above
+    }
+    if name.contains(".ln") || name.starts_with("final_ln") {
+        return if name.ends_with(".scale") {
+            Tensor::ones(&p.shape)
+        } else {
+            Tensor::zeros(&p.shape)
+        };
+    }
+    let std = if name.ends_with(".lora_a") {
+        LORA_A_STD
+    } else if name.starts_with("embed.") {
+        EMBED_STD
+    } else {
+        // matmul weight [d_in, d_out]
+        0.5 / (p.shape[0] as f32).sqrt()
+    };
+    let mut t = Tensor::zeros(&p.shape);
+    for v in &mut t.data {
+        *v = rng.normal_f32(0.0, std);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{presets, TrainMode};
+
+    fn ac(mode: TrainMode) -> ArtifactConfig {
+        ArtifactConfig {
+            model: presets::model("ff-tiny").unwrap(),
+            train_mode: mode,
+            lora_rank: 8,
+            lora_alpha: 16.0,
+            use_pallas: false,
+        }
+    }
+
+    #[test]
+    fn deterministic_and_name_keyed() {
+        let a = init_params(&ac(TrainMode::Lora), 7);
+        let b = init_params(&ac(TrainMode::Lora), 7);
+        assert_eq!(a, b);
+        let c = init_params(&ac(TrainMode::Lora), 8);
+        assert_ne!(a["embed.tok"], c["embed.tok"]);
+        // same name ⇒ same stream even under a different mode
+        let d = init_params(&ac(TrainMode::Dora), 7);
+        assert_eq!(a["embed.tok"], d["embed.tok"]);
+        assert_eq!(a["layer0.attn.wq"], d["layer0.attn.wq"]);
+    }
+
+    #[test]
+    fn lora_b_zero_ln_identity() {
+        let p = init_params(&ac(TrainMode::Lora), 1);
+        assert!(p["layer0.attn.wq.lora_b"].data.iter().all(|v| *v == 0.0));
+        assert!(p["layer0.ln1.scale"].data.iter().all(|v| *v == 1.0));
+        assert!(p["layer0.ln1.bias"].data.iter().all(|v| *v == 0.0));
+        assert!(p["layer0.attn.wq.lora_a"].data.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn dora_m_equals_col_norms_of_base() {
+        let p = init_params(&ac(TrainMode::Dora), 3);
+        let norms = p["layer1.attn.wv"].col_norms();
+        let m = &p["layer1.attn.wv.dora_m"];
+        for (a, b) in norms.iter().zip(m.data.iter()) {
+            assert!((a + DORA_EPS - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weight_std_in_expected_range() {
+        let p = init_params(&ac(TrainMode::Lora), 5);
+        let w = &p["layer0.mlp.w_in"]; // [64, 256], std = 0.5/8 = 0.0625
+        let n = w.data.len() as f64;
+        let var: f64 = w.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>() / n;
+        assert!((var.sqrt() - 0.0625).abs() < 0.005, "{}", var.sqrt());
+    }
+
+    #[test]
+    fn covers_entire_spec() {
+        let a = ac(TrainMode::Dora);
+        let p = init_params(&a, 0);
+        assert_eq!(p.len(), param_spec(&a).len());
+        for info in param_spec(&a) {
+            assert_eq!(p[&info.name].shape, info.shape, "{}", info.name);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Model-side substrate: host tensors, the parameter spec (mirroring
+//! `python/compile/configs.param_spec`), and host-side initialization.
+
+pub mod init;
+pub mod spec;
+pub mod tensor;
+
+pub use spec::{param_spec, ParamInfo};
+pub use tensor::Tensor;

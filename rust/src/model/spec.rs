@@ -1,0 +1,132 @@
+//! Canonical parameter spec — the rust mirror of
+//! `python/compile/configs.param_spec`. The runtime cross-checks this
+//! derivation against every artifact's manifest at load time; if the two
+//! languages ever disagree on a name, shape, or ordering, loading fails
+//! before any step executes.
+
+use crate::config::{ArtifactConfig, TrainMode};
+
+pub const ADAPTED_MATRICES: [&str; 4] = ["wq", "wk", "wv", "wo"];
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub trainable: bool,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered parameter list: embeddings, per-layer (ln1, attn + adapters,
+/// ln2, mlp), final LN, unembedding — adapters directly after their matrix.
+pub fn param_spec(ac: &ArtifactConfig) -> Vec<ParamInfo> {
+    let m = &ac.model;
+    let (d, v, t, r) = (m.d_model, m.vocab_size, m.seq_len, ac.lora_rank);
+    let full_all = ac.train_mode == TrainMode::FullAll;
+    let low_rank = ac.train_mode.is_low_rank();
+    let mut out = Vec::new();
+    let mut p = |name: String, shape: Vec<usize>, trainable: bool| {
+        out.push(ParamInfo { name, shape, trainable: trainable || full_all });
+    };
+
+    p("embed.tok".into(), vec![v, d], false);
+    p("embed.pos".into(), vec![t, d], false);
+    for i in 0..m.n_layers {
+        p(format!("layer{i}.ln1.scale"), vec![d], false);
+        p(format!("layer{i}.ln1.bias"), vec![d], false);
+        for w in ADAPTED_MATRICES {
+            p(
+                format!("layer{i}.attn.{w}"),
+                vec![d, d],
+                ac.train_mode == TrainMode::FullAttn,
+            );
+            if low_rank {
+                p(format!("layer{i}.attn.{w}.lora_a"), vec![d, r], true);
+                p(format!("layer{i}.attn.{w}.lora_b"), vec![r, d], true);
+            }
+            if ac.train_mode == TrainMode::Dora {
+                p(format!("layer{i}.attn.{w}.dora_m"), vec![d], true);
+            }
+        }
+        p(format!("layer{i}.ln2.scale"), vec![d], false);
+        p(format!("layer{i}.ln2.bias"), vec![d], false);
+        p(format!("layer{i}.mlp.w_in"), vec![d, m.d_ff()], false);
+        p(format!("layer{i}.mlp.w_out"), vec![m.d_ff(), d], false);
+    }
+    p("final_ln.scale".into(), vec![d], false);
+    p("final_ln.bias".into(), vec![d], false);
+    p("unembed".into(), vec![d, v], false);
+    out
+}
+
+pub fn trainable_spec(ac: &ArtifactConfig) -> Vec<ParamInfo> {
+    param_spec(ac).into_iter().filter(|p| p.trainable).collect()
+}
+
+pub fn frozen_spec(ac: &ArtifactConfig) -> Vec<ParamInfo> {
+    param_spec(ac).into_iter().filter(|p| !p.trainable).collect()
+}
+
+pub fn n_trainable(ac: &ArtifactConfig) -> usize {
+    trainable_spec(ac).iter().map(|p| p.numel()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn ac(mode: TrainMode, rank: usize) -> ArtifactConfig {
+        ArtifactConfig {
+            model: presets::model("ff-tiny").unwrap(),
+            train_mode: mode,
+            lora_rank: rank,
+            lora_alpha: 16.0,
+            use_pallas: false,
+        }
+    }
+
+    #[test]
+    fn lora_trainable_count_matches_python_index() {
+        // golden values from artifacts/index.json
+        assert_eq!(n_trainable(&ac(TrainMode::Lora, 8)), 8192);
+        assert_eq!(n_trainable(&ac(TrainMode::Lora, 1)), 1024);
+        assert_eq!(n_trainable(&ac(TrainMode::Dora, 8)), 8704);
+        assert_eq!(n_trainable(&ac(TrainMode::FullAttn, 8)), 32768);
+        assert_eq!(n_trainable(&ac(TrainMode::FullAll, 8)), 168_576);
+    }
+
+    #[test]
+    fn names_unique_and_partition_ordered() {
+        let spec = param_spec(&ac(TrainMode::Dora, 4));
+        let names: Vec<&String> = spec.iter().map(|p| &p.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+        // total numel equals model n_params + adapter params
+        let total: usize = spec.iter().map(|p| p.numel()).sum();
+        let m = presets::model("ff-tiny").unwrap();
+        let adapters = m.n_layers * 4 * (2 * m.d_model * 4 + m.d_model);
+        assert_eq!(total, m.n_params() + adapters);
+    }
+
+    #[test]
+    fn full_all_has_no_frozen() {
+        assert!(frozen_spec(&ac(TrainMode::FullAll, 8)).is_empty());
+    }
+
+    #[test]
+    fn adapter_order_is_a_then_b_then_m() {
+        let spec = param_spec(&ac(TrainMode::Dora, 8));
+        let idx = |n: &str| spec.iter().position(|p| p.name == n).unwrap();
+        let base = idx("layer0.attn.wq");
+        assert_eq!(idx("layer0.attn.wq.lora_a"), base + 1);
+        assert_eq!(idx("layer0.attn.wq.lora_b"), base + 2);
+        assert_eq!(idx("layer0.attn.wq.dora_m"), base + 3);
+    }
+}

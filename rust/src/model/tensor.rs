@@ -1,0 +1,160 @@
+//! Host-side dense f32 tensor: the unit of parameter state the coordinator
+//! manipulates (Δ_W arithmetic, gradient accumulation, checkpoints).
+//!
+//! Deliberately minimal — all heavy compute runs inside the AOT-compiled
+//! XLA programs; the host only needs elementwise ops over flat buffers.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// self += alpha * other (the Δ_W application `W_t + τΔ_W` runs through
+    /// this; it is the FF hot path on the host side).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self = a - b (builds Δ_W = W_t − W_{t−1}).
+    pub fn sub_from(a: &Tensor, b: &Tensor) -> Tensor {
+        debug_assert_eq!(a.shape, b.shape);
+        Tensor {
+            shape: a.shape.clone(),
+            data: a.data.iter().zip(b.data.iter()).map(|(x, y)| x - y).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    /// Column L2 norms of a [rows, cols] matrix (DoRA magnitude init).
+    pub fn col_norms(&self) -> Vec<f32> {
+        assert_eq!(self.shape.len(), 2);
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f64; cols];
+        for r in 0..rows {
+            let row = &self.data[r * cols..(r + 1) * cols];
+            for (o, v) in out.iter_mut().zip(row.iter()) {
+                *o += (*v as f64) * (*v as f64);
+            }
+        }
+        out.into_iter().map(|v| v.sqrt() as f32).collect()
+    }
+}
+
+/// Cosine similarity between two same-shape tensor lists viewed as one
+/// flattened vector (paper Fig 6 / Fig 13 measurements).
+pub fn cosine_similarity(a: &[Tensor], b: &[Tensor]) -> f64 {
+    let mut dot = 0.0;
+    let mut na = 0.0;
+    let mut nb = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        dot += x.dot(y);
+        na += x.dot(x);
+        nb += y.dot(y);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Flattened L2 norm over a tensor list (gradient-norm probe, Fig 12a).
+pub fn list_norm(a: &[Tensor]) -> f64 {
+    a.iter().map(|t| t.dot(t)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_sub() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![0.5, 0.5, 0.5, 0.5]);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c.data, vec![2.0, 3.0, 4.0, 5.0]);
+        let d = Tensor::sub_from(&c, &a);
+        assert_eq!(d.data, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn col_norms_matrix() {
+        // [[3, 0], [4, 0]] → col norms [5, 0]
+        let t = Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 4.0, 0.0]);
+        assert_eq!(t.col_norms(), vec![5.0, 0.0]);
+    }
+
+    #[test]
+    fn cosine_of_parallel_and_orthogonal() {
+        let a = vec![Tensor::from_vec(&[2], vec![1.0, 0.0])];
+        let b = vec![Tensor::from_vec(&[2], vec![2.0, 0.0])];
+        let c = vec![Tensor::from_vec(&[2], vec![0.0, 1.0])];
+        assert!((cosine_similarity(&a, &b) - 1.0).abs() < 1e-12);
+        assert!(cosine_similarity(&a, &c).abs() < 1e-12);
+        assert!((cosine_similarity(&a, &vec![Tensor::from_vec(&[2], vec![-1.0, 0.0])]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_vector_cosine_is_zero() {
+        let a = vec![Tensor::zeros(&[3])];
+        let b = vec![Tensor::ones(&[3])];
+        assert_eq!(cosine_similarity(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn list_norm_pythagoras() {
+        let a = vec![
+            Tensor::from_vec(&[1], vec![3.0]),
+            Tensor::from_vec(&[1], vec![4.0]),
+        ];
+        assert!((list_norm(&a) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,99 @@
+//! Gradient accumulation across micro-batches — the coordinator's
+//! micro-batch scheduler sums `grad_step` outputs here and hands the mean
+//! to one `adam_apply` per *global* batch (paper Appendix E batch shapes).
+
+use crate::model::tensor::Tensor;
+
+#[derive(Debug)]
+pub struct GradAccumulator {
+    sum: Vec<Tensor>,
+    count: usize,
+    /// Mean loss across accumulated micro-batches.
+    loss_sum: f64,
+}
+
+impl GradAccumulator {
+    pub fn new(shapes: &[Vec<usize>]) -> GradAccumulator {
+        GradAccumulator {
+            sum: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            count: 0,
+            loss_sum: 0.0,
+        }
+    }
+
+    pub fn zeros_like(params: &[Tensor]) -> GradAccumulator {
+        Self::new(&params.iter().map(|t| t.shape.clone()).collect::<Vec<_>>())
+    }
+
+    /// Add one micro-batch's gradients (flat slices in param order).
+    pub fn add_flat(&mut self, grads: &[&[f32]], loss: f32) {
+        assert_eq!(grads.len(), self.sum.len());
+        for (acc, g) in self.sum.iter_mut().zip(grads.iter()) {
+            debug_assert_eq!(acc.data.len(), g.len());
+            for (a, x) in acc.data.iter_mut().zip(g.iter()) {
+                *a += x;
+            }
+        }
+        self.loss_sum += loss as f64;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Mean gradients + mean loss; resets the accumulator.
+    pub fn take_mean(&mut self) -> (Vec<Tensor>, f32) {
+        assert!(self.count > 0, "take_mean on empty accumulator");
+        let scale = 1.0 / self.count as f32;
+        let mut out = Vec::with_capacity(self.sum.len());
+        for t in self.sum.iter_mut() {
+            let mut g = Tensor::zeros(&t.shape);
+            for (o, s) in g.data.iter_mut().zip(t.data.iter()) {
+                *o = s * scale;
+            }
+            t.fill(0.0);
+            out.push(g);
+        }
+        let loss = (self.loss_sum / self.count as f64) as f32;
+        self.loss_sum = 0.0;
+        self.count = 0;
+        (out, loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_two_micro_batches() {
+        let mut acc = GradAccumulator::new(&[vec![2]]);
+        acc.add_flat(&[&[1.0, 2.0]], 1.0);
+        acc.add_flat(&[&[3.0, 4.0]], 3.0);
+        assert_eq!(acc.count(), 2);
+        let (g, loss) = acc.take_mean();
+        assert_eq!(g[0].data, vec![2.0, 3.0]);
+        assert_eq!(loss, 2.0);
+        // reset: accumulating again starts fresh
+        acc.add_flat(&[&[10.0, 10.0]], 5.0);
+        let (g2, loss2) = acc.take_mean();
+        assert_eq!(g2[0].data, vec![10.0, 10.0]);
+        assert_eq!(loss2, 5.0);
+    }
+
+    #[test]
+    fn single_micro_batch_is_identity() {
+        let mut acc = GradAccumulator::new(&[vec![3]]);
+        acc.add_flat(&[&[1.0, -1.0, 0.5]], 2.5);
+        let (g, loss) = acc.take_mean();
+        assert_eq!(g[0].data, vec![1.0, -1.0, 0.5]);
+        assert_eq!(loss, 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty accumulator")]
+    fn empty_take_mean_panics() {
+        GradAccumulator::new(&[vec![1]]).take_mean();
+    }
+}

@@ -1,0 +1,139 @@
+//! Reference host-side Adam — the same math as the HLO `adam_apply`
+//! program (`python/compile/model.adam_update`). The training loop runs
+//! Adam *on device* through the artifact; this host implementation exists
+//! (a) as an independent oracle the integration tests compare against, and
+//! (b) for host-only experiments (e.g. unit-testing the FF controller with
+//! a synthetic quadratic objective, no XLA involved).
+
+use crate::config::AdamConfig;
+use crate::model::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub cfg: AdamConfig,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// Steps already applied (f32 on the HLO side; u64 here).
+    pub step: u64,
+}
+
+impl AdamState {
+    pub fn new(cfg: AdamConfig, shapes: &[Vec<usize>]) -> AdamState {
+        AdamState {
+            cfg,
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            step: 0,
+        }
+    }
+
+    pub fn zeros_like(cfg: AdamConfig, params: &[Tensor]) -> AdamState {
+        AdamState::new(cfg, &params.iter().map(|t| t.shape.clone()).collect::<Vec<_>>())
+    }
+
+    /// One Adam update, in place on `params`.
+    pub fn apply(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        let (b1, b2, eps) = (self.cfg.beta1, self.cfg.beta2, self.cfg.eps);
+        let step1 = (self.step + 1) as f32;
+        let bc1 = 1.0 - b1.powf(step1);
+        let bc2 = 1.0 - b2.powf(step1);
+        for ((w, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads.iter())
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            for i in 0..w.data.len() {
+                let gi = g.data[i];
+                m.data[i] = b1 * m.data[i] + (1.0 - b1) * gi;
+                v.data[i] = b2 * v.data[i] + (1.0 - b2) * gi * gi;
+                let update = lr * (m.data[i] / bc1) / ((v.data[i] / bc2).sqrt() + eps);
+                w.data[i] -= update;
+            }
+        }
+        self.step += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(v: &[f32]) -> Vec<Tensor> {
+        vec![Tensor::from_vec(&[v.len()], v.to_vec())]
+    }
+
+    #[test]
+    fn first_step_is_lr_times_sign() {
+        let mut p = one(&[0.0, 0.0, 0.0]);
+        let g = one(&[0.5, -2.0, 3.0]);
+        let mut st = AdamState::zeros_like(AdamConfig::default(), &p);
+        st.apply(&mut p, &g, 0.1);
+        for (w, gi) in p[0].data.iter().zip(g[0].data.iter()) {
+            assert!((w + 0.1 * gi.signum()).abs() < 1e-3, "{w} vs {gi}");
+        }
+        assert_eq!(st.step, 1);
+    }
+
+    #[test]
+    fn zero_grad_keeps_weights_with_zero_state() {
+        let mut p = one(&[1.0, -1.0]);
+        let g = one(&[0.0, 0.0]);
+        let mut st = AdamState::zeros_like(AdamConfig::default(), &p);
+        st.apply(&mut p, &g, 0.1);
+        assert_eq!(p[0].data, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(x) = Σ (x_i - c_i)^2 — Adam must land near c.
+        let c = [3.0f32, -2.0, 0.5];
+        let mut p = one(&[0.0, 0.0, 0.0]);
+        let mut st = AdamState::zeros_like(AdamConfig::default(), &p);
+        for _ in 0..800 {
+            let g: Vec<f32> =
+                p[0].data.iter().zip(c.iter()).map(|(x, ci)| 2.0 * (x - ci)).collect();
+            let g = one(&g);
+            st.apply(&mut p, &g, 0.05);
+        }
+        for (x, ci) in p[0].data.iter().zip(c.iter()) {
+            assert!((x - ci).abs() < 0.05, "{x} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn matches_double_precision_reference() {
+        // Property: repeated updates track an f64 reference within f32 tol.
+        crate::util::prop::check(20, |gen| {
+            let n = gen.usize_in(1, 16);
+            let mut w32 = Tensor::from_vec(&[n], gen.vec_f32(n, 1.0));
+            let mut w64: Vec<f64> = w32.data.iter().map(|x| *x as f64).collect();
+            let mut st = AdamState::zeros_like(AdamConfig::default(), std::slice::from_ref(&w32));
+            let (mut m64, mut v64) = (vec![0.0f64; n], vec![0.0f64; n]);
+            let lr = gen.f32_in(1e-4, 1e-2);
+            for step in 0..10u64 {
+                let g = Tensor::from_vec(&[n], gen.vec_f32(n, 1.0));
+                let mut ws = [w32.clone()];
+                st.apply(&mut ws, std::slice::from_ref(&g), lr);
+                w32 = ws[0].clone();
+                let (b1, b2, eps) = (0.9f64, 0.999f64, 1e-8f64);
+                let bc1 = 1.0 - b1.powi(step as i32 + 1);
+                let bc2 = 1.0 - b2.powi(step as i32 + 1);
+                for i in 0..n {
+                    let gi = g.data[i] as f64;
+                    m64[i] = b1 * m64[i] + (1.0 - b1) * gi;
+                    v64[i] = b2 * v64[i] + (1.0 - b2) * gi * gi;
+                    w64[i] -= lr as f64 * (m64[i] / bc1) / ((v64[i] / bc2).sqrt() + eps);
+                }
+            }
+            for i in 0..n {
+                let d = (w32.data[i] as f64 - w64[i]).abs();
+                if d > 1e-4 {
+                    return Err(format!("drift {d} at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

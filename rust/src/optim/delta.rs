@@ -1,0 +1,91 @@
+//! Δ_W tracking — the heart of Fast Forward (paper Eq. 2):
+//!
+//! > During a Fast Forward stage, for each trainable parameter, the
+//! > difference between weights in the current and previous timesteps is
+//! > calculated: Δ_W = W_t − W_{t−1}.
+//!
+//! The tracker snapshots W before each optimizer step and can emit the
+//! resulting Δ after it — exactly "the most recent optimizer step".
+
+use crate::model::tensor::Tensor;
+
+#[derive(Debug, Default)]
+pub struct DeltaTracker {
+    prev: Option<Vec<Tensor>>,
+    delta: Option<Vec<Tensor>>,
+}
+
+impl DeltaTracker {
+    pub fn new() -> DeltaTracker {
+        DeltaTracker::default()
+    }
+
+    /// Record W_{t−1} (call immediately before an optimizer step).
+    pub fn snapshot_before(&mut self, params: &[Tensor]) {
+        self.prev = Some(params.to_vec());
+    }
+
+    /// Compute Δ_W = W_t − W_{t−1} (call immediately after the step).
+    pub fn compute_after(&mut self, params: &[Tensor]) {
+        let prev = self.prev.as_ref().expect("snapshot_before not called");
+        let delta = params
+            .iter()
+            .zip(prev.iter())
+            .map(|(now, before)| Tensor::sub_from(now, before))
+            .collect();
+        self.delta = Some(delta);
+    }
+
+    /// The most recent optimizer step direction, if any.
+    pub fn delta(&self) -> Option<&[Tensor]> {
+        self.delta.as_deref()
+    }
+
+    /// ‖Δ_W‖₂ over all trainables.
+    pub fn delta_norm(&self) -> Option<f64> {
+        self.delta.as_ref().map(|d| crate::model::tensor::list_norm(d))
+    }
+
+    pub fn clear(&mut self) {
+        self.prev = None;
+        self.delta = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_one_step() {
+        let w0 = vec![Tensor::from_vec(&[2], vec![1.0, 2.0])];
+        let w1 = vec![Tensor::from_vec(&[2], vec![1.5, 1.0])];
+        let mut d = DeltaTracker::new();
+        assert!(d.delta().is_none());
+        d.snapshot_before(&w0);
+        d.compute_after(&w1);
+        assert_eq!(d.delta().unwrap()[0].data, vec![0.5, -1.0]);
+        let norm = d.delta_norm().unwrap();
+        assert!((norm - (0.25f64 + 1.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_steps_keep_latest() {
+        let mut d = DeltaTracker::new();
+        for i in 0..3 {
+            let before = vec![Tensor::from_vec(&[1], vec![i as f32])];
+            let after = vec![Tensor::from_vec(&[1], vec![i as f32 + (i + 1) as f32])];
+            d.snapshot_before(&before);
+            d.compute_after(&after);
+        }
+        assert_eq!(d.delta().unwrap()[0].data, vec![3.0]);
+        d.clear();
+        assert!(d.delta().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshot_before")]
+    fn compute_without_snapshot_panics() {
+        DeltaTracker::new().compute_after(&[Tensor::zeros(&[1])]);
+    }
+}

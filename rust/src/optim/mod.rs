@@ -1,0 +1,11 @@
+//! Host-side optimizer substrate: reference Adam (cross-checked against
+//! the HLO `adam_apply` by integration test), gradient accumulation, and
+//! the Δ_W tracking FF extrapolates along.
+
+pub mod accum;
+pub mod adam;
+pub mod delta;
+
+pub use accum::GradAccumulator;
+pub use adam::AdamState;
+pub use delta::DeltaTracker;

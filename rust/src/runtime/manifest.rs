@@ -1,0 +1,274 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and this
+//! runtime. Each artifact directory carries `manifest.json` describing the
+//! exact flattened input/output ordering of every program; we parse it and
+//! cross-check it against the spec derived in `model::spec` so any drift
+//! between the python and rust parameter derivations aborts at load time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{AdamConfig, ArtifactConfig, ModelConfig, TrainMode};
+use crate::model::spec;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn from_str(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype '{other}'"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSlot {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub inputs: Vec<IoSlot>,
+    pub outputs: Vec<IoSlot>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub key: String,
+    pub dir: PathBuf,
+    pub config: ArtifactConfig,
+    pub adam: AdamConfig,
+    /// (name, shape) of every trainable / frozen param, in program order.
+    pub trainable: Vec<(String, Vec<usize>)>,
+    pub frozen: Vec<(String, Vec<usize>)>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+fn parse_slots(v: &Json) -> Result<Vec<IoSlot>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of io slots"))?
+        .iter()
+        .map(|s| {
+            Ok(IoSlot {
+                name: s.get("name").as_str().ok_or_else(|| anyhow!("slot missing name"))?.into(),
+                shape: s
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("slot missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                    .collect::<Result<_>>()?,
+                dtype: Dtype::from_str(s.get("dtype").as_str().unwrap_or("f32"))?,
+            })
+        })
+        .collect()
+}
+
+fn parse_named_shapes(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of params"))?
+        .iter()
+        .map(|p| {
+            Ok((
+                p.get("name").as_str().ok_or_else(|| anyhow!("param missing name"))?.to_string(),
+                p.get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<usize>>>()?,
+            ))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let cfg = j.get("config");
+        let model = ModelConfig::from_manifest(cfg)?;
+        let config = ArtifactConfig {
+            model,
+            train_mode: TrainMode::from_str(
+                cfg.get("train_mode").as_str().ok_or_else(|| anyhow!("missing train_mode"))?,
+            )?,
+            lora_rank: cfg.get("lora_rank").as_usize().unwrap_or(8),
+            lora_alpha: cfg.get("lora_alpha").as_f64().unwrap_or(16.0) as f32,
+            use_pallas: cfg.get("use_pallas").as_bool().unwrap_or(false),
+        };
+        let adam = AdamConfig {
+            beta1: j.get("adam").get("beta1").as_f64().unwrap_or(0.9) as f32,
+            beta2: j.get("adam").get("beta2").as_f64().unwrap_or(0.999) as f32,
+            eps: j.get("adam").get("eps").as_f64().unwrap_or(1e-8) as f32,
+        };
+
+        let mut programs = BTreeMap::new();
+        let progs = j.get("programs").as_obj().ok_or_else(|| anyhow!("missing programs"))?;
+        for (name, p) in progs {
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    file: p.get("file").as_str().ok_or_else(|| anyhow!("program missing file"))?.into(),
+                    inputs: parse_slots(p.get("inputs"))?,
+                    outputs: parse_slots(p.get("outputs"))?,
+                },
+            );
+        }
+
+        let man = Manifest {
+            key: j.get("key").as_str().unwrap_or_default().to_string(),
+            dir: dir.to_path_buf(),
+            config,
+            adam,
+            trainable: parse_named_shapes(j.get("trainable"))?,
+            frozen: parse_named_shapes(j.get("frozen"))?,
+            programs,
+        };
+        man.cross_check()?;
+        Ok(man)
+    }
+
+    /// Verify the manifest agrees with the rust-side spec derivation.
+    fn cross_check(&self) -> Result<()> {
+        if self.key != self.config.key() {
+            bail!("manifest key '{}' != derived key '{}'", self.key, self.config.key());
+        }
+        let want_t: Vec<(String, Vec<usize>)> = spec::trainable_spec(&self.config)
+            .into_iter()
+            .map(|p| (p.name, p.shape))
+            .collect();
+        let want_f: Vec<(String, Vec<usize>)> = spec::frozen_spec(&self.config)
+            .into_iter()
+            .map(|p| (p.name, p.shape))
+            .collect();
+        if self.trainable != want_t {
+            bail!(
+                "trainable spec drift for '{}': manifest has {} params, rust derives {}",
+                self.key,
+                self.trainable.len(),
+                want_t.len()
+            );
+        }
+        if self.frozen != want_f {
+            bail!("frozen spec drift for '{}'", self.key);
+        }
+        for name in ["train_step", "grad_step", "adam_apply", "eval_loss"] {
+            let p = self
+                .programs
+                .get(name)
+                .ok_or_else(|| anyhow!("manifest missing program '{name}'"))?;
+            if p.inputs.is_empty() || p.outputs.is_empty() {
+                bail!("program '{name}' has empty io spec");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs.get(name).ok_or_else(|| anyhow!("no program '{name}' in '{}'", self.key))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.program(name)?.file))
+    }
+}
+
+/// Artifact index (artifacts/index.json): what exists, without globbing.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub root: PathBuf,
+    pub entries: Vec<IndexEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct IndexEntry {
+    pub key: String,
+    pub model: String,
+    pub train_mode: String,
+    pub lora_rank: usize,
+    pub n_params: usize,
+    pub n_trainable: usize,
+}
+
+impl ArtifactIndex {
+    pub fn load(root: &Path) -> Result<ArtifactIndex> {
+        let path = root.join("index.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        let j = Json::parse(&text)?;
+        let entries = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("index.json missing 'artifacts'"))?
+            .iter()
+            .map(|e| {
+                Ok(IndexEntry {
+                    key: e.get("key").as_str().unwrap_or_default().into(),
+                    model: e.get("model").as_str().unwrap_or_default().into(),
+                    train_mode: e.get("train_mode").as_str().unwrap_or_default().into(),
+                    lora_rank: e.get("lora_rank").as_usize().unwrap_or(0),
+                    n_params: e.get("n_params").as_usize().unwrap_or(0),
+                    n_trainable: e.get("n_trainable").as_usize().unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactIndex { root: root.to_path_buf(), entries })
+    }
+
+    pub fn manifest(&self, key: &str) -> Result<Manifest> {
+        if !self.entries.iter().any(|e| e.key == key) {
+            bail!(
+                "artifact '{key}' not in index (have: {})",
+                self.entries.iter().map(|e| e.key.as_str()).collect::<Vec<_>>().join(", ")
+            );
+        }
+        Manifest::load(&self.root.join(key))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests against real artifacts live in rust/tests/ (they need
+    /// `make artifacts`); here we exercise the parsing layer only.
+    #[test]
+    fn parse_slots_happy_and_sad() {
+        let ok = Json::parse(r#"[{"name":"x","shape":[2,3],"dtype":"i32"}]"#).unwrap();
+        let slots = parse_slots(&ok).unwrap();
+        assert_eq!(slots[0].numel(), 6);
+        assert_eq!(slots[0].dtype, Dtype::I32);
+        let bad = Json::parse(r#"[{"shape":[2]}]"#).unwrap();
+        assert!(parse_slots(&bad).is_err());
+        let bad_dtype = Json::parse(r#"[{"name":"x","shape":[],"dtype":"f64"}]"#).unwrap();
+        assert!(parse_slots(&bad_dtype).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_contextual_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest.json"));
+    }
+}

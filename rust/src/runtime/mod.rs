@@ -1,0 +1,218 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! This is the only module that touches the `xla` crate. The flow per
+//! program (see /opt/xla-example/load_hlo for the reference wiring):
+//!
+//! ```text
+//! HloModuleProto::from_text_file → XlaComputation::from_proto
+//!     → PjRtClient::compile → PjRtLoadedExecutable
+//! ```
+//!
+//! Programs were lowered with `return_tuple=True`, so execution returns a
+//! single tuple buffer; we download it synchronously and decompose into
+//! per-output literals. Inputs are passed as device buffers (`execute_b`)
+//! so large frozen parameter sets upload once and are reused across steps
+//! (see `params::ParamSet` buffer caching).
+
+pub mod manifest;
+pub mod params;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactIndex, Dtype, IoSlot, Manifest, ProgramSpec};
+pub use params::ParamSet;
+
+use crate::model::tensor::Tensor;
+
+/// Shared PJRT CPU client. `Rc` because buffers hold a client handle and the
+/// coordinator is single-threaded around the device (XLA:CPU parallelizes
+/// internally).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Rc<Runtime>> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Rc::new(Runtime { client }))
+    }
+
+    /// Compile one program of an artifact. Compilation is cached per
+    /// (artifact, program) by `ProgramCache`.
+    pub fn load_program(self: &Rc<Self>, man: &Manifest, name: &str) -> Result<Program> {
+        let path = man.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        crate::debug!(
+            "compiled {}/{} in {:.2?}",
+            man.key,
+            name,
+            t0.elapsed()
+        );
+        Ok(Program {
+            rt: Rc::clone(self),
+            name: name.to_string(),
+            spec: man.program(name)?.clone(),
+            exe,
+        })
+    }
+
+    // -- host<->device helpers ------------------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("upload f32{shape:?}: {e}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow!("upload i32{shape:?}: {e}"))
+    }
+
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(&[v], &[])
+    }
+
+    pub fn upload_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(&t.data, &t.shape)
+    }
+}
+
+/// One compiled executable plus its manifest I/O spec.
+pub struct Program {
+    rt: Rc<Runtime>,
+    pub name: String,
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Decoded program outputs, aligned with `spec.outputs`.
+pub struct Outputs {
+    pub slots: Vec<IoSlot>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl Outputs {
+    pub fn by_name(&self, name: &str) -> Result<&[f32]> {
+        self.slots
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| self.values[i].as_slice())
+            .ok_or_else(|| anyhow!("no output '{name}'"))
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        let v = self.by_name(name)?;
+        if v.len() != 1 {
+            bail!("output '{name}' is not a scalar ({} elems)", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+impl Program {
+    /// Execute with pre-uploaded device buffers (hot path).
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Outputs> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program '{}' expects {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let out = self
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("executing '{}': {e}", self.name))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading '{}' result: {e}", self.name))?;
+        self.decode(tuple)
+    }
+
+    fn decode(&self, tuple: xla::Literal) -> Result<Outputs> {
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing '{}' tuple: {e}", self.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "program '{}' returned {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut values = Vec::with_capacity(parts.len());
+        for (lit, slot) in parts.into_iter().zip(self.spec.outputs.iter()) {
+            let v: Vec<f32> = match slot.dtype {
+                Dtype::F32 => lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("output '{}': {e}", slot.name))?,
+                Dtype::I32 => lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("output '{}': {e}", slot.name))?
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect(),
+            };
+            if v.len() != slot.numel() {
+                bail!(
+                    "output '{}' has {} elems, expected {}",
+                    slot.name,
+                    v.len(),
+                    slot.numel()
+                );
+            }
+            values.push(v);
+        }
+        Ok(Outputs { slots: self.spec.outputs.clone(), values })
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.rt
+    }
+}
+
+/// Lazy per-artifact program cache: an `Artifact` owns its manifest plus the
+/// compiled executables, compiling each program on first use (fig-grid
+/// experiments touch many artifacts but rarely all four programs of each).
+pub struct Artifact {
+    pub manifest: Manifest,
+    rt: Rc<Runtime>,
+    programs: std::cell::RefCell<BTreeMap<String, Rc<Program>>>,
+}
+
+impl Artifact {
+    pub fn load(rt: &Rc<Runtime>, dir: &Path) -> Result<Artifact> {
+        let manifest =
+            Manifest::load(dir).with_context(|| format!("loading artifact {}", dir.display()))?;
+        Ok(Artifact { manifest, rt: Rc::clone(rt), programs: Default::default() })
+    }
+
+    pub fn program(&self, name: &str) -> Result<Rc<Program>> {
+        if let Some(p) = self.programs.borrow().get(name) {
+            return Ok(Rc::clone(p));
+        }
+        let p = Rc::new(self.rt.load_program(&self.manifest, name)?);
+        self.programs.borrow_mut().insert(name.to_string(), Rc::clone(&p));
+        Ok(p)
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.rt
+    }
+}

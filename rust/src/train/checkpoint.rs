@@ -1,0 +1,111 @@
+//! Checkpoint format ("FFCK1"): a JSON header (name/shape table, via the
+//! in-repo codec) followed by raw little-endian f32 payloads. Used for the
+//! cached pretrained W0 per model size and for trainer save/restore.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 6] = b"FFCK1\n";
+
+pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let entries: Vec<Json> = params
+        .iter()
+        .map(|(name, t)| {
+            Json::obj()
+                .set("name", name.as_str())
+                .set("shape", t.shape.iter().map(|&d| d as i64).collect::<Vec<i64>>())
+        })
+        .collect();
+    let header = Json::obj().set("params", Json::Arr(entries)).to_string();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for t in params.values() {
+        // params is a BTreeMap → iteration order == header order
+        let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_params(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an FFCK1 checkpoint", path.display());
+    }
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    if hlen > 64 << 20 {
+        bail!("implausible header length {hlen}");
+    }
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+
+    let mut out = BTreeMap::new();
+    for e in header.get("params").as_arr().unwrap_or(&[]) {
+        let name = e.get("name").as_str().unwrap_or_default().to_string();
+        let shape: Vec<usize> = e
+            .get("shape")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect();
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("payload for '{name}'"))?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, Tensor::from_vec(&shape, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_exactly() {
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::from_vec(&[2, 3], vec![1.5, -2.0, 0.0, 3.25, f32::MIN_POSITIVE, 1e30]));
+        params.insert("b".to_string(), Tensor::from_vec(&[1], vec![-0.125]));
+        let dir = std::env::temp_dir().join(format!("ffck-{}", std::process::id()));
+        let path = dir.join("test.ffck");
+        save_params(&path, &params).unwrap();
+        let loaded = load_params(&path).unwrap();
+        assert_eq!(params, loaded);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("ffck2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ffck");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_params(&path).is_err());
+        assert!(load_params(&dir.join("missing.ffck")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,8 @@
+//! Training coordination: the `Trainer` run loop, checkpointing, and the
+//! pretraining substrate that manufactures W0 for finetuning experiments.
+
+pub mod checkpoint;
+pub mod pretrain;
+pub mod trainer;
+
+pub use trainer::{RunSummary, StopRule, Trainer};

@@ -1,0 +1,75 @@
+//! Pretraining substrate: the paper finetunes *pretrained* LMs (Pythia,
+//! Llama-3). No checkpoints exist for our substitute models, so we
+//! manufacture W0 by briefly training each model full-rank (`full_all`
+//! artifact) on the wide-distribution "pile" task, then cache the result
+//! under `artifacts/checkpoints/`. Every finetuning experiment starts from
+//! this cached W0 — the baseline and FF runs of an experiment therefore
+//! share their starting point exactly, as in the paper.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{presets, FfConfig, TrainConfig};
+use crate::model::tensor::Tensor;
+use crate::runtime::Runtime;
+use crate::train::checkpoint::{load_params, save_params};
+use crate::train::trainer::{StopRule, Trainer};
+
+pub fn checkpoint_path(artifacts_root: &Path, model: &str) -> PathBuf {
+    artifacts_root.join("checkpoints").join(format!("{model}_w0.ffck"))
+}
+
+/// Default pretraining length per model (steps of global batch 32). Scaled
+/// so the tiny grid models pretrain in seconds-to-minutes on one core.
+pub fn default_pretrain_steps(model: &str) -> usize {
+    match model {
+        "ff-tiny" => 120,
+        "ff-small" => 80,
+        "ff-medium" => 50,
+        "ff-large" => 30,
+        _ => 20,
+    }
+}
+
+/// Load the cached pretrained W0 for `model`, training and caching it on
+/// first use. Returns all base parameters by name.
+pub fn ensure_pretrained(
+    rt: &Rc<Runtime>,
+    artifacts_root: &Path,
+    model: &str,
+    steps: Option<usize>,
+) -> Result<BTreeMap<String, Tensor>> {
+    let path = checkpoint_path(artifacts_root, model);
+    if path.exists() {
+        return load_params(&path).with_context(|| format!("cached W0 for {model}"));
+    }
+    let steps = steps.unwrap_or_else(|| default_pretrain_steps(model));
+    crate::info!("pretraining {model} for {steps} steps (full_all on 'pile') → {}", path.display());
+
+    let tp = presets::task_preset("pile")?;
+    let cfg = TrainConfig {
+        artifact: format!("{model}_full_all"),
+        task: "pile".into(),
+        lr: tp.lr,
+        global_batch: tp.global_batch,
+        max_steps: steps,
+        seed: 0x11e, // fixed: W0 must be identical across experiments
+        ff: FfConfig { enabled: false, ..FfConfig::default() },
+        adam: Default::default(),
+        train_examples: tp.train_examples,
+        test_examples: 64,
+    };
+    let mut t = Trainer::new(rt, artifacts_root, cfg, None)?;
+    let summary = t.run(&StopRule::MaxSteps(steps))?;
+    crate::info!(
+        "pretrained {model}: test loss {:.4} after {} steps",
+        summary.final_test_loss,
+        summary.adam_steps
+    );
+    let params = t.all_params();
+    save_params(&path, &params)?;
+    Ok(params)
+}

@@ -1,0 +1,567 @@
+//! The training coordinator: wires the data pipeline, PJRT runtime,
+//! micro-batch gradient accumulation, Adam, and the Fast Forward
+//! controller into the paper's training protocol.
+//!
+//! One `Trainer` = one run (one artifact, one task, one FfConfig). The
+//! experiment harnesses construct pairs of trainers (baseline vs FF) over
+//! identical data and compare FLOPs/time to matched test loss.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::analysis::linalg::mean_condition_number;
+use crate::config::TrainConfig;
+use crate::data::batcher::{eval_batches, Batch};
+use crate::data::corpus::{make_dataset, Dataset};
+use crate::data::pipeline::Pipeline;
+use crate::ff::controller::{FfController, FfDecision, FfStageStats};
+use crate::ff::line_search::{line_search_thresholded, LineSearchResult, SearchTarget};
+use crate::flops::{FlopsCounter, FlopsModel};
+use crate::metrics::{RunLog, StepKind, StepRecord, TrainTimer};
+use crate::model::init::{init_params, init_with_base};
+use crate::model::tensor::{list_norm, Tensor};
+use crate::optim::accum::GradAccumulator;
+use crate::optim::delta::DeltaTracker;
+use crate::runtime::{Artifact, ParamSet, Program, Runtime};
+
+/// When to stop a training run.
+#[derive(Debug, Clone)]
+pub enum StopRule {
+    /// Fixed number of Adam steps (the 5-epoch baseline protocol).
+    MaxSteps(usize),
+    /// Stop once test loss ≤ target + eps, checking every `eval_every`
+    /// Adam steps (the FF run's "match the baseline" protocol, §4).
+    TargetLoss { target: f32, eps: f32, eval_every: usize, max_steps: usize },
+    /// Run until the controller turns FF off permanently (§5.1), then a
+    /// final `tail` SGD steps.
+    Convergence { max_steps: usize, tail: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub final_test_loss: f32,
+    pub adam_steps: usize,
+    pub sim_steps: usize,
+    pub flops: FlopsCounter,
+    pub train_seconds: f64,
+    pub reached_target: bool,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub art: Rc<Artifact>,
+    rt: Rc<Runtime>,
+    // parameter state
+    pub tr: ParamSet,
+    pub fr: ParamSet,
+    m: ParamSet,
+    v: ParamSet,
+    adam_steps: usize,
+    // data
+    pub dataset: Dataset,
+    pipeline: Pipeline,
+    val_batches: Vec<(Batch, usize)>,
+    test_batches: Vec<(Batch, usize)>,
+    // programs
+    grad_prog: Rc<Program>,
+    adam_prog: Rc<Program>,
+    eval_prog: Rc<Program>,
+    // ff machinery
+    pub ffc: FfController,
+    delta: DeltaTracker,
+    /// Mean gradient of the last global batch (analysis probes).
+    pub last_grads: Vec<Tensor>,
+    /// Per-micro-batch gradients of the last global batch (Fig 13).
+    pub last_micro_grads: Vec<Vec<Tensor>>,
+    /// Keep per-micro grads around (costs memory; off by default).
+    pub keep_micro_grads: bool,
+    // accounting
+    pub fm: FlopsModel,
+    pub flops: FlopsCounter,
+    pub timer: TrainTimer,
+    pub log: RunLog,
+    /// Initial trainable snapshot (W0 side of Fig 5 / distance probes).
+    pub w0_trainables: Vec<Tensor>,
+}
+
+impl Trainer {
+    /// Build a trainer. `base` optionally carries pretrained weights for
+    /// every base parameter (see `pretrain::ensure_pretrained`).
+    pub fn new(
+        rt: &Rc<Runtime>,
+        artifacts_root: &Path,
+        cfg: TrainConfig,
+        base: Option<&BTreeMap<String, Tensor>>,
+    ) -> Result<Trainer> {
+        let art = Rc::new(
+            Artifact::load(rt, &artifacts_root.join(&cfg.artifact))
+                .with_context(|| format!("artifact '{}'", cfg.artifact))?,
+        );
+        Self::with_artifact(rt, art, cfg, base)
+    }
+
+    pub fn with_artifact(
+        rt: &Rc<Runtime>,
+        art: Rc<Artifact>,
+        cfg: TrainConfig,
+        base: Option<&BTreeMap<String, Tensor>>,
+    ) -> Result<Trainer> {
+        let man = &art.manifest;
+        let ac = &man.config;
+        if cfg.global_batch % ac.model.micro_batch != 0 {
+            bail!(
+                "global batch {} not a multiple of artifact micro batch {}",
+                cfg.global_batch,
+                ac.model.micro_batch
+            );
+        }
+        let values = match base {
+            Some(b) => init_with_base(ac, cfg.seed, b),
+            None => init_params(ac, cfg.seed),
+        };
+        let tr = ParamSet::from_spec(rt, &man.trainable, &values)?;
+        let fr = ParamSet::from_spec(rt, &man.frozen, &values)?;
+        let m = ParamSet::zeros_like(rt, &tr);
+        let v = ParamSet::zeros_like(rt, &tr);
+
+        let dataset = make_dataset(
+            &cfg.task,
+            ac.model.vocab_size,
+            ac.model.seq_len,
+            cfg.train_examples,
+            cfg.test_examples,
+            cfg.ff.val_examples,
+            cfg.seed,
+        )?;
+        let pipeline = Pipeline::spawn(
+            dataset.train.clone(),
+            ac.model.micro_batch,
+            cfg.global_batch,
+            cfg.seed ^ 0xb47c,
+            4,
+        );
+        let val_batches = eval_batches(&dataset.val, ac.model.eval_batch);
+        let test_batches = eval_batches(&dataset.test, ac.model.eval_batch);
+
+        let grad_prog = art.program("grad_step")?;
+        let adam_prog = art.program("adam_apply")?;
+        let eval_prog = art.program("eval_loss")?;
+        let fm = FlopsModel::for_artifact(ac);
+        let ffc = FfController::new(cfg.ff.clone());
+        let w0_trainables = tr.snapshot();
+
+        Ok(Trainer {
+            cfg,
+            rt: Rc::clone(rt),
+            art,
+            tr,
+            fr,
+            m,
+            v,
+            adam_steps: 0,
+            dataset,
+            pipeline,
+            val_batches,
+            test_batches,
+            grad_prog,
+            adam_prog,
+            eval_prog,
+            ffc,
+            delta: DeltaTracker::new(),
+            last_grads: Vec::new(),
+            last_micro_grads: Vec::new(),
+            keep_micro_grads: false,
+            fm,
+            flops: FlopsCounter::default(),
+            timer: TrainTimer::start(),
+            log: RunLog::default(),
+            w0_trainables,
+        })
+    }
+
+    pub fn adam_steps(&self) -> usize {
+        self.adam_steps
+    }
+
+    /// Monotone step index counting SGD + simulated steps (Fig 4 x-axis).
+    pub fn total_steps(&self) -> usize {
+        self.adam_steps + self.log.n_ff()
+    }
+
+    // ---------------------------------------------------------------------
+    // Core steps
+    // ---------------------------------------------------------------------
+
+    /// One Adam optimizer step over a full global batch (micro-batch
+    /// gradient accumulation → one `adam_apply`).
+    pub fn sgd_step(&mut self) -> Result<f32> {
+        let global = self.pipeline.next();
+        let n = self.tr.len();
+        let mut acc = GradAccumulator::zeros_like(self.tr.tensors());
+        if self.keep_micro_grads {
+            self.last_micro_grads.clear();
+        }
+        for micro in &global.micro {
+            let tok = self.rt.upload_i32(&micro.tokens, &[micro.b, micro.t])?;
+            let tgt = self.rt.upload_i32(&micro.targets, &[micro.b, micro.t])?;
+            let msk = self.rt.upload_f32(&micro.mask, &[micro.b, micro.t])?;
+            let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+                self.grad_prog.spec.inputs.len(),
+            );
+            inputs.extend(self.tr.device_buffers()?);
+            inputs.extend(self.fr.device_buffers()?);
+            inputs.push(&tok);
+            inputs.push(&tgt);
+            inputs.push(&msk);
+            let out = self.grad_prog.execute_buffers(&inputs)?;
+            let loss = out.values[0][0];
+            let grads: Vec<&[f32]> =
+                (0..n).map(|i| out.values[1 + i].as_slice()).collect();
+            acc.add_flat(&grads, loss);
+            if self.keep_micro_grads {
+                self.last_micro_grads.push(
+                    (0..n)
+                        .map(|i| {
+                            Tensor::from_vec(
+                                &self.tr.tensors()[i].shape,
+                                out.values[1 + i].clone(),
+                            )
+                        })
+                        .collect(),
+                );
+            }
+        }
+        let (mean_grads, mean_loss) = acc.take_mean();
+
+        // Adam apply on device.
+        self.delta.snapshot_before(self.tr.tensors());
+        let step_buf = self.rt.upload_scalar(self.adam_steps as f32)?;
+        let lr_buf = self.rt.upload_scalar(self.cfg.lr)?;
+        let g_bufs: Vec<xla::PjRtBuffer> = mean_grads
+            .iter()
+            .map(|g| self.rt.upload_tensor(g))
+            .collect::<Result<_>>()?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.adam_prog.spec.inputs.len());
+        inputs.extend(self.tr.device_buffers()?);
+        inputs.extend(self.m.device_buffers()?);
+        inputs.extend(self.v.device_buffers()?);
+        inputs.push(&step_buf);
+        inputs.extend(g_bufs.iter());
+        inputs.push(&lr_buf);
+        let out = self.adam_prog.execute_buffers(&inputs)?;
+        for i in 0..n {
+            self.tr.set_flat(i, &out.values[i]);
+            self.m.set_flat(i, &out.values[n + i]);
+            self.v.set_flat(i, &out.values[2 * n + i]);
+        }
+        self.delta.compute_after(self.tr.tensors());
+        self.last_grads = mean_grads;
+        self.adam_steps += 1;
+        self.ffc.on_sgd_step();
+        self.flops.sgd_step(&self.fm, global.total_tokens());
+        self.log.push(StepRecord {
+            step: self.total_steps(),
+            kind: StepKind::Sgd,
+            loss: mean_loss,
+            flops: self.flops.total(),
+            seconds: self.timer.elapsed(),
+        });
+        Ok(mean_loss)
+    }
+
+    /// Evaluate mask-weighted mean loss over a batch list (token-weighted
+    /// across chunks, matching the in-graph masked mean exactly).
+    fn eval_batches_loss(
+        &mut self,
+        which: EvalSet,
+        charge_ff: bool,
+    ) -> Result<f32> {
+        let batches: &[(Batch, usize)] = match which {
+            EvalSet::Val => &self.val_batches,
+            EvalSet::Test => &self.test_batches,
+        };
+        let mut total = 0.0f64;
+        let mut weight = 0.0f64;
+        let mut tokens = 0usize;
+        // Split borrows: copy out the data we need before &mut self calls.
+        let chunks: Vec<Batch> = batches.iter().map(|(b, _)| b.clone()).collect();
+        for batch in &chunks {
+            let mask_sum: f32 = batch.mask.iter().sum();
+            if mask_sum == 0.0 {
+                continue;
+            }
+            let tok = self.rt.upload_i32(&batch.tokens, &[batch.b, batch.t])?;
+            let tgt = self.rt.upload_i32(&batch.targets, &[batch.b, batch.t])?;
+            let msk = self.rt.upload_f32(&batch.mask, &[batch.b, batch.t])?;
+            let mut inputs: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(self.eval_prog.spec.inputs.len());
+            inputs.extend(self.tr.device_buffers()?);
+            inputs.extend(self.fr.device_buffers()?);
+            inputs.push(&tok);
+            inputs.push(&tgt);
+            inputs.push(&msk);
+            let out = self.eval_prog.execute_buffers(&inputs)?;
+            total += out.values[0][0] as f64 * mask_sum as f64;
+            weight += mask_sum as f64;
+            tokens += batch.total_tokens();
+        }
+        if charge_ff {
+            self.flops.ff_probe(&self.fm, tokens);
+        } else {
+            self.flops.test_eval(&self.fm, tokens);
+        }
+        Ok((total / weight.max(1.0)) as f32)
+    }
+
+    /// Tiny-validation-set loss (charged as FF inference per the paper).
+    pub fn eval_val(&mut self) -> Result<f32> {
+        self.eval_batches_loss(EvalSet::Val, true)
+    }
+
+    /// Held-out test loss (measurement only: excluded from train time and
+    /// chargeable FLOPs).
+    pub fn eval_test(&mut self) -> Result<f32> {
+        self.timer.pause();
+        let loss = self.eval_batches_loss(EvalSet::Test, false);
+        self.timer.resume();
+        if let Ok(l) = loss {
+            let (s, f, t) = (self.total_steps(), self.flops.total(), self.timer.elapsed());
+            self.log.test_evals.push((l, s, f, t));
+        }
+        loss
+    }
+
+    /// Run one Fast Forward stage (paper §3): line search along the most
+    /// recent Δ_W, stopping when tiny-val loss stops improving.
+    pub fn ff_stage(&mut self) -> Result<FfStageStats> {
+        let delta = match self.delta.delta() {
+            Some(d) => d.to_vec(),
+            None => bail!("ff_stage before any optimizer step"),
+        };
+        let grad_norm = list_norm(&self.last_grads);
+        let grad_cond = mean_condition_number(&self.last_grads);
+        let baseline = self.eval_val()?;
+
+        let max_tau = self.cfg.ff.max_tau;
+        let min_rel = self.cfg.ff.min_rel_improvement;
+        let result = {
+            let mut target = TrainerSearchTarget { trainer: self, delta: &delta };
+            line_search_thresholded(&mut target, baseline, max_tau, min_rel)?
+        };
+        self.record_ff(&result, grad_norm, grad_cond)
+    }
+
+    /// Fig 10 probe: run exactly `n_steps` simulated steps with *no* stop
+    /// rule, recording val loss at each τ, then restore W_t.
+    pub fn ff_probe_fixed(&mut self, n_steps: usize) -> Result<Vec<f32>> {
+        let delta = match self.delta.delta() {
+            Some(d) => d.to_vec(),
+            None => bail!("ff_probe before any optimizer step"),
+        };
+        let snap = self.tr.snapshot();
+        let mut losses = Vec::with_capacity(n_steps + 1);
+        losses.push(self.eval_val()?);
+        for _ in 0..n_steps {
+            self.tr.axpy(1.0, &delta);
+            losses.push(self.eval_val()?);
+        }
+        self.tr.restore(&snap);
+        Ok(losses)
+    }
+
+    fn record_ff(
+        &mut self,
+        r: &LineSearchResult,
+        grad_norm: f64,
+        grad_cond: f64,
+    ) -> Result<FfStageStats> {
+        // Each kept simulated step is a step record (Fig 4 green dots).
+        for (i, loss) in r.losses.iter().take(r.tau_star).enumerate() {
+            let _ = i;
+            self.log.push(StepRecord {
+                step: self.total_steps() + 1,
+                kind: StepKind::FastForward,
+                loss: *loss,
+                flops: self.flops.total(),
+                seconds: self.timer.elapsed(),
+            });
+        }
+        let stats = FfStageStats {
+            stage: self.ffc.n_stages(),
+            at_step: self.adam_steps,
+            tau_star: r.tau_star,
+            probes: r.probes,
+            baseline_loss: r.baseline_loss,
+            final_loss: r.final_loss,
+            grad_norm,
+            grad_cond,
+        };
+        self.ffc.on_ff_stage(stats.clone());
+        crate::debug!(
+            "FF stage {}: τ*={} probes={} val {:.4}→{:.4}",
+            stats.stage,
+            stats.tau_star,
+            stats.probes,
+            stats.baseline_loss,
+            stats.final_loss
+        );
+        Ok(stats)
+    }
+
+    // ---------------------------------------------------------------------
+    // Run loops
+    // ---------------------------------------------------------------------
+
+    /// Drive the controller until the stop rule fires; returns the summary.
+    pub fn run(&mut self, stop: &StopRule) -> Result<RunSummary> {
+        let mut reached = false;
+        loop {
+            let max = match stop {
+                StopRule::MaxSteps(n) => *n,
+                StopRule::TargetLoss { max_steps, .. } => *max_steps,
+                StopRule::Convergence { max_steps, .. } => *max_steps,
+            };
+            if self.adam_steps >= max {
+                break;
+            }
+            let did_ff = match self.ffc.next() {
+                FfDecision::Sgd => {
+                    self.sgd_step()?;
+                    false
+                }
+                FfDecision::FastForward => {
+                    self.ff_stage()?;
+                    true
+                }
+            };
+            if let StopRule::TargetLoss { target, eps, eval_every, .. } = stop {
+                // Check after every FF stage (a single stage can jump far
+                // past the target) and on the SGD cadence otherwise.
+                if did_ff || self.adam_steps % eval_every == 0 {
+                    let test = self.eval_test()?;
+                    if test <= *target + *eps {
+                        reached = true;
+                        break;
+                    }
+                }
+            }
+            if let StopRule::Convergence { tail, .. } = stop {
+                if self.ffc.is_permanently_off() {
+                    for _ in 0..*tail {
+                        self.sgd_step()?;
+                    }
+                    break;
+                }
+            }
+        }
+        let final_test_loss = self.eval_test()?;
+        Ok(RunSummary {
+            final_test_loss,
+            adam_steps: self.adam_steps,
+            sim_steps: self.log.n_ff(),
+            flops: self.flops,
+            train_seconds: self.timer.elapsed(),
+            reached_target: reached,
+        })
+    }
+
+    // ---------------------------------------------------------------------
+    // Analysis hooks
+    // ---------------------------------------------------------------------
+
+    /// Evaluate test loss at arbitrary trainable values (Fig 5 plane scan);
+    /// restores the current trainables afterwards.
+    pub fn eval_test_at(&mut self, trainables: &[Tensor]) -> Result<f32> {
+        let snap = self.tr.snapshot();
+        self.tr.restore(trainables);
+        let loss = self.eval_batches_loss(EvalSet::Test, false);
+        self.tr.restore(&snap);
+        loss
+    }
+
+    /// Loss of one example through the eval program (QA scoring). The
+    /// example is padded to the eval batch shape with zero-mask rows, so
+    /// the in-graph masked mean equals the single example's loss.
+    pub fn eval_example_loss(&mut self, ex: &crate::data::corpus::Example) -> Result<f32> {
+        let man = &self.art.manifest;
+        let (b, t) = (man.config.model.eval_batch, man.config.model.seq_len);
+        anyhow::ensure!(ex.mask.len() == t, "example seq_len {} != model {}", ex.mask.len(), t);
+        let mut tokens = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        let mut mask = vec![0.0f32; b * t];
+        for _ in 0..b {
+            tokens.extend_from_slice(ex.tokens());
+            targets.extend_from_slice(ex.targets());
+        }
+        mask[..t].copy_from_slice(&ex.mask);
+        let tok = self.rt.upload_i32(&tokens, &[b, t])?;
+        let tgt = self.rt.upload_i32(&targets, &[b, t])?;
+        let msk = self.rt.upload_f32(&mask, &[b, t])?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.eval_prog.spec.inputs.len());
+        inputs.extend(self.tr.device_buffers()?);
+        inputs.extend(self.fr.device_buffers()?);
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        let out = self.eval_prog.execute_buffers(&inputs)?;
+        self.flops.test_eval(&self.fm, b * t);
+        Ok(out.values[0][0])
+    }
+
+    /// Current trainable snapshot (W_t).
+    pub fn trainables(&self) -> Vec<Tensor> {
+        self.tr.snapshot()
+    }
+
+    /// Apply `W += alpha·delta` on the live trainables (bench/probe hook —
+    /// the same host axpy a FF simulated step performs).
+    pub fn tr_axpy_for_bench(&mut self, delta: &[Tensor], alpha: f32) {
+        self.tr.axpy(alpha, delta);
+    }
+
+    /// All current parameters by name (checkpointing).
+    pub fn all_params(&self) -> BTreeMap<String, Tensor> {
+        let mut out = BTreeMap::new();
+        for (name, t) in self.tr.names().iter().zip(self.tr.tensors()) {
+            out.insert(name.clone(), t.clone());
+        }
+        for (name, t) in self.fr.names().iter().zip(self.fr.tensors()) {
+            out.insert(name.clone(), t.clone());
+        }
+        out
+    }
+}
+
+#[derive(Clone, Copy)]
+enum EvalSet {
+    Val,
+    Test,
+}
+
+/// Line-search target over the live trainer (paper Eq. 2 applied to the
+/// real ParamSet, evaluated through the AOT eval program).
+struct TrainerSearchTarget<'a> {
+    trainer: &'a mut Trainer,
+    delta: &'a [Tensor],
+}
+
+impl SearchTarget for TrainerSearchTarget<'_> {
+    fn apply(&mut self) -> Result<()> {
+        self.trainer.tr.axpy(1.0, self.delta);
+        Ok(())
+    }
+
+    fn revert(&mut self) -> Result<()> {
+        self.trainer.tr.axpy(-1.0, self.delta);
+        Ok(())
+    }
+
+    fn eval(&mut self) -> Result<f32> {
+        self.trainer.eval_val()
+    }
+}

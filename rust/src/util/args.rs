@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (clap replacement for this offline environment).
+//!
+//! Grammar: `binary <subcommand> [positional...] [--flag] [--key value]`.
+//! `--key=value` is also accepted. Unknown flags are an error so typos
+//! surface instead of silently running a default experiment.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.known.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&mut self, name: &str) -> Option<String> {
+        self.known.push(name.to_string());
+        self.opts.get(name).cloned()
+    }
+
+    pub fn opt_or(&mut self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_usize(&mut self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&mut self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&mut self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Call after all `flag`/`opt` lookups: rejects anything unrecognized.
+    pub fn finish(&self) -> Result<(), String> {
+        for k in self.opts.keys() {
+            if !self.known.contains(k) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                return Err(format!("unknown flag --{f}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("experiment fig2a extra");
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig2a", "extra"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let mut a = parse("train --model ff-tiny --steps=100 --verbose");
+        assert_eq!(a.opt("model").as_deref(), Some("ff-tiny"));
+        assert_eq!(a.opt_usize("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse("train --oops 1");
+        let _ = a.opt("model");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn numeric_parse_errors() {
+        let mut a = parse("x --steps abc");
+        assert!(a.opt_usize("steps", 0).is_err());
+        let mut b = parse("x --lr 4e-5");
+        assert_eq!(b.opt_f64("lr", 0.0).unwrap(), 4e-5);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let mut a = parse("x --fast --model ff-tiny");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("model").as_deref(), Some("ff-tiny"));
+    }
+}

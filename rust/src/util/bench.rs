@@ -1,0 +1,111 @@
+//! Measurement harness (criterion replacement): warmup + timed iterations,
+//! reporting mean / p50 / p95 / min. Used by the `rust/benches/*` targets
+//! (compiled with `harness = false`) and the §Perf profiling pass.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:>10.3?} p50={:>10.3?} p95={:>10.3?} min={:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed passes, then timed passes until both
+/// `min_iters` iterations and `min_time` wall time have elapsed.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
+                         min_time: Duration, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(min_iters.max(8));
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break; // pathological fast function; enough samples
+        }
+    }
+    stats_from(name, samples)
+}
+
+/// Quick preset: 2 warmups, ≥10 iters, ≥300 ms.
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchStats {
+    bench(name, 2, 10, Duration::from_millis(300), f)
+}
+
+fn stats_from(name: &str, mut samples: Vec<Duration>) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let n = samples.len();
+    let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: pct(0.50),
+        p95: pct(0.95),
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Throughput helper: items/sec given a per-iteration item count.
+pub fn throughput(stats: &BenchStats, items_per_iter: f64) -> f64 {
+    items_per_iter / stats.mean_secs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_at_least_min_iters() {
+        let s = bench("noop", 1, 25, Duration::from_millis(1), || {});
+        assert!(s.iters >= 25);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+    }
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let s = bench("sleep", 0, 3, Duration::from_millis(1), || {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert!(s.mean >= Duration::from_millis(4), "{:?}", s.mean);
+        assert!(s.mean < Duration::from_millis(80), "{:?}", s.mean);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            p50: Duration::from_millis(100),
+            p95: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+            max: Duration::from_millis(100),
+        };
+        assert!((throughput(&s, 50.0) - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-repo substrates replacing unavailable crates (see DESIGN.md
+//! §Substrates): JSON codec, CLI args, PRNG, bench harness, property-test
+//! driver, and a leveled logger.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

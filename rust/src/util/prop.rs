@@ -1,0 +1,96 @@
+//! Seeded property-test driver (proptest replacement).
+//!
+//! `check(cases, |g| { ... })` runs the closure against `cases` generated
+//! inputs; on failure it reports the failing case's seed so the case can be
+//! replayed exactly with `replay(seed, |g| ...)`. No shrinking — cases are
+//! kept small by construction instead.
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn vec_f32(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32(0.0, std)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `body` against `cases` seeded inputs; panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(cases: usize, mut body: F) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfa57f0_u64 ^ 0x5eed);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = body(&mut g) {
+            panic!("property failed (replay with PROP_SEED={base}, case {i}, seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by its seed.
+pub fn replay<F: FnMut(&mut Gen) -> Result<(), String>>(seed: u64, mut body: F) {
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    if let Err(msg) = body(&mut g) {
+        panic!("replayed property failed (seed {seed}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |g| {
+            let n = g.usize_in(1, 10);
+            let v = g.vec_f32(n, 1.0);
+            if v.len() == n { Ok(()) } else { Err("len".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        check(10, |g| {
+            if g.usize_in(0, 100) <= 100 {
+                Err("always fails".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        check(100, |g| {
+            let x = g.usize_in(3, 7);
+            if !(3..=7).contains(&x) {
+                return Err(format!("usize_in out of range: {x}"));
+            }
+            let f = g.f32_in(-1.0, 1.0);
+            if !(-1.0..=1.0).contains(&f) {
+                return Err(format!("f32_in out of range: {f}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Cross-module data-path integration: corpora → batcher → pipeline →
+//! device upload shapes, and QA benchmark scoring through a live model.
+
+use std::path::{Path, PathBuf};
+
+use fastforward::config::presets;
+use fastforward::data::batcher::{eval_batches, Batcher};
+use fastforward::data::corpus::make_dataset;
+use fastforward::data::pipeline::Pipeline;
+use fastforward::eval::qa::{qa_accuracy, QaBenchmark};
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::Trainer;
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn batches_match_artifact_shapes_for_all_tasks() {
+    let rt = Runtime::cpu().unwrap();
+    let idx = fastforward::runtime::ArtifactIndex::load(&artifacts_root()).unwrap();
+    let man = idx.manifest("ff-tiny_lora_r8").unwrap();
+    let m = &man.config.model;
+    for task in presets::TASKS {
+        let ds = make_dataset(task, m.vocab_size, m.seq_len, 128, 32, 32, 1).unwrap();
+        let mut b = Batcher::new(&ds.train, m.micro_batch, 32, 0);
+        let g = b.next_global();
+        for micro in &g.micro {
+            assert_eq!(micro.b, m.micro_batch);
+            assert_eq!(micro.t, m.seq_len);
+            // uploads must succeed with the manifest shapes
+            rt.upload_i32(&micro.tokens, &[micro.b, micro.t]).unwrap();
+            rt.upload_f32(&micro.mask, &[micro.b, micro.t]).unwrap();
+        }
+        let chunks = eval_batches(&ds.val, m.eval_batch);
+        assert_eq!(chunks.len(), 32 / m.eval_batch);
+    }
+}
+
+#[test]
+fn pipeline_feeds_a_real_training_step() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut cfg = presets::train_config("ff-tiny_lora_r8", "chat", 1).unwrap();
+    cfg.train_examples = 256;
+    cfg.test_examples = 32;
+    let mut t = Trainer::new(&rt, &root, cfg, Some(&base)).unwrap();
+    let l1 = t.sgd_step().unwrap();
+    let l2 = t.sgd_step().unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+}
+
+#[test]
+fn pipeline_outlives_many_epochs() {
+    let ds = make_dataset("pile", 512, 64, 96, 0, 0, 5).unwrap();
+    let mut pipe = Pipeline::spawn(ds.train, 8, 32, 1, 2);
+    // 96 examples / 32 per global = 3 steps/epoch; pull 20 → ~7 epochs
+    for _ in 0..20 {
+        let g = pipe.next();
+        assert_eq!(g.micro.len(), 4);
+    }
+}
+
+#[test]
+fn qa_scoring_through_live_model_is_valid_probability_range() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut cfg = presets::train_config("ff-tiny_lora_r8", "medical", 1).unwrap();
+    cfg.train_examples = 256;
+    cfg.test_examples = 32;
+    let mut t = Trainer::new(&rt, &root, cfg, Some(&base)).unwrap();
+    let bench = QaBenchmark::generate(512, 64, 12, 3);
+    let acc = qa_accuracy(&bench, |ex| t.eval_example_loss(ex)).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}

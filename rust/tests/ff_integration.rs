@@ -1,0 +1,117 @@
+//! FF-specific integration (requires `make artifacts`): the line search on
+//! the real loss surface, the Fig 10 fixed-τ probe, and the full-rank
+//! failure mode (Fig 8) at the trainer level.
+
+use std::path::{Path, PathBuf};
+
+use fastforward::config::{presets, FfConfig, TrainConfig};
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::Trainer;
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn cfg(artifact: &str, task: &str) -> TrainConfig {
+    let mut cfg = presets::train_config(artifact, task, 1).unwrap();
+    cfg.train_examples = 512;
+    cfg.test_examples = 64;
+    cfg.ff = FfConfig { warmup_steps: 4, t_interval: 4, ..FfConfig::default() };
+    cfg
+}
+
+#[test]
+fn ff_stage_improves_val_loss_early_in_training() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut c = cfg("ff-tiny_lora_r8", "medical");
+    // exercise the paper's exact stop rule (any increase ends the stage)
+    c.ff.min_rel_improvement = 0.0;
+    let mut t = Trainer::new(&rt, &root, c, Some(&base)).unwrap();
+    for _ in 0..6 {
+        t.sgd_step().unwrap();
+    }
+    let stats = t.ff_stage().unwrap();
+    assert!(stats.tau_star > 0, "early FF stage found no extrapolation: {stats:?}");
+    assert!(stats.final_loss < stats.baseline_loss);
+    assert_eq!(stats.probes, stats.tau_star + 1); // one rejected probe
+    assert!(stats.grad_norm > 0.0);
+}
+
+#[test]
+fn fixed_probe_is_convex_ish_and_restores_params() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut t = Trainer::new(&rt, &root, cfg("ff-tiny_lora_r8", "medical"), Some(&base)).unwrap();
+    for _ in 0..6 {
+        t.sgd_step().unwrap();
+    }
+    let before = t.trainables();
+    let losses = t.ff_probe_fixed(30).unwrap();
+    let after = t.trainables();
+    // probe must not move the weights
+    for (a, b) in before.iter().zip(after.iter()) {
+        assert_eq!(a.data, b.data);
+    }
+    assert_eq!(losses.len(), 31);
+    // the minimum should not be at τ=0 (there is something to gain) and
+    // the curve should rise after its vertex (stop rule is meaningful)
+    let argmin = losses
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert!(argmin > 0, "losses: {losses:?}");
+    assert!(losses[30] >= losses[argmin]);
+}
+
+#[test]
+fn full_rank_ff_fizzles_while_lora_extrapolates() {
+    // Paper Fig 8: at full rank (attention-only), FF dies at/immediately
+    // after the first simulated step at the mode's well-tuned lr, while
+    // LoRA at its operating point extrapolates for several steps.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+
+    let mean_tau = |artifact: &str, lr_override: Option<f32>| -> f64 {
+        let mut c = cfg(artifact, "medical");
+        if let Some(lr) = lr_override {
+            c.lr = lr;
+        }
+        let mut t = Trainer::new(&rt, &root, c, Some(&base)).unwrap();
+        let mut total = 0usize;
+        for _ in 0..3 {
+            for _ in 0..6 {
+                t.sgd_step().unwrap();
+            }
+            total += t.ff_stage().unwrap().tau_star;
+        }
+        total as f64 / 3.0
+    };
+
+    let full = mean_tau("ff-tiny_full_attn", Some(1.2e-2)); // full-rank operating point
+    let lora = mean_tau("ff-tiny_lora_r8", None); // preset operating point
+    assert!(full <= 1.5, "full-rank FF extrapolated too much: mean τ* {full}");
+    assert!(
+        lora > full,
+        "LoRA FF should out-extrapolate full rank: {lora} vs {full}"
+    );
+}
+
+#[test]
+fn dora_ff_also_extrapolates() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut t = Trainer::new(&rt, &root, cfg("ff-tiny_dora_r8", "medical"), Some(&base)).unwrap();
+    for _ in 0..6 {
+        t.sgd_step().unwrap();
+    }
+    let stats = t.ff_stage().unwrap();
+    assert!(stats.tau_star > 0, "DoRA FF stage empty: {stats:?}");
+}

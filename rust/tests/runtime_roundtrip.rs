@@ -1,0 +1,245 @@
+//! Integration: load real AOT artifacts (requires `make artifacts`), run
+//! every program on the PJRT CPU client, and validate training numerics
+//! end-to-end across the language boundary.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use fastforward::model::init::init_params;
+use fastforward::model::tensor::Tensor;
+use fastforward::runtime::{Artifact, ArtifactIndex, ParamSet, Runtime};
+
+fn artifacts_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load(key: &str) -> (Rc<Runtime>, Artifact) {
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let art = Artifact::load(&rt, &artifacts_root().join(key)).expect("artifact");
+    (rt, art)
+}
+
+fn mk_batch(b: usize, t: usize, vocab: usize, seed: u64) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let mut rng = fastforward::util::rng::Rng::new(seed);
+    let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(vocab) as i32).collect();
+    let targets: Vec<i32> = (0..b * t).map(|_| rng.below(vocab) as i32).collect();
+    (tokens, targets, vec![1.0; b * t])
+}
+
+#[test]
+fn index_lists_smoke_artifacts() {
+    let idx = ArtifactIndex::load(&artifacts_root()).expect("index.json");
+    assert!(idx.entries.iter().any(|e| e.key == "ff-tiny_lora_r8"));
+    let man = idx.manifest("ff-tiny_lora_r8").expect("manifest cross-check");
+    assert_eq!(man.config.model.d_model, 64);
+    assert!(idx.manifest("bogus_key").is_err());
+}
+
+#[test]
+fn eval_loss_of_fresh_model_is_log_vocab() {
+    let (rt, art) = load("ff-tiny_lora_r8");
+    let man = &art.manifest;
+    let vals = init_params(&man.config, 7);
+    // Zero the unembed so logits are uniform → loss must be ln(V) exactly.
+    let mut vals2: BTreeMap<String, Tensor> = vals.clone();
+    vals2.insert("unembed".into(), Tensor::zeros(&[64, 512]));
+    let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals2).unwrap();
+    let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals2).unwrap();
+
+    let prog = art.program("eval_loss").unwrap();
+    let (b, t) = (man.config.model.eval_batch, man.config.model.seq_len);
+    let (tokens, targets, mask) = mk_batch(b, t, 512, 1);
+    let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+    let tgt = rt.upload_i32(&targets, &[b, t]).unwrap();
+    let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+
+    let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+    inputs.extend(tr.device_buffers().unwrap());
+    // careful: can't hold two mutable borrows; collect frozen separately
+    let fr_bufs = fr.device_buffers().unwrap();
+    inputs.extend(fr_bufs);
+    inputs.push(&tok);
+    inputs.push(&tgt);
+    inputs.push(&msk);
+
+    let out = prog.execute_buffers(&inputs).unwrap();
+    let loss = out.scalar("loss").unwrap();
+    let want = (512.0f32).ln();
+    assert!(
+        (loss - want).abs() < 1e-3,
+        "fresh-model loss {loss} != ln(512) = {want}"
+    );
+}
+
+#[test]
+fn train_step_decreases_loss_over_iterations() {
+    let (rt, art) = load("ff-tiny_lora_r8");
+    let man = &art.manifest;
+    let vals = init_params(&man.config, 42);
+    let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals).unwrap();
+    let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals).unwrap();
+    let mut m = ParamSet::zeros_like(&rt, &tr);
+    let mut v = ParamSet::zeros_like(&rt, &tr);
+
+    let prog = art.program("train_step").unwrap();
+    let (b, t) = (man.config.model.micro_batch, man.config.model.seq_len);
+    let (tokens, targets, mask) = mk_batch(b, t, 512, 2);
+    let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+    let tgt = rt.upload_i32(&targets, &[b, t]).unwrap();
+    let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+    let lr = rt.upload_scalar(1e-2).unwrap();
+
+    let n = tr.len();
+    let mut losses = Vec::new();
+    for step in 0..6 {
+        let step_buf = rt.upload_scalar(step as f32).unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        let tr_b = tr.device_buffers().unwrap();
+        inputs.extend(tr_b);
+        inputs.extend(m.device_buffers().unwrap());
+        inputs.extend(v.device_buffers().unwrap());
+        inputs.push(&step_buf);
+        inputs.extend(fr.device_buffers().unwrap());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        inputs.push(&lr);
+        let out = prog.execute_buffers(&inputs).unwrap();
+        losses.push(out.scalar("loss").unwrap());
+        for i in 0..n {
+            tr.set_flat(i, &out.values[1 + i]);
+            m.set_flat(i, &out.values[1 + n + i]);
+            v.set_flat(i, &out.values[1 + 2 * n + i]);
+        }
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    // The L1 composition proof: identical params + batch through the
+    // pallas-kernel artifact and the jnp artifact give the same loss.
+    let rt = Runtime::cpu().unwrap();
+    let a_jnp = Artifact::load(&rt, &artifacts_root().join("ff-tiny_lora_r8")).unwrap();
+    let a_pal =
+        Artifact::load(&rt, &artifacts_root().join("ff-tiny_lora_r8_pallas")).unwrap();
+
+    let vals = init_params(&a_jnp.manifest.config, 11);
+    let (b, t) = (8, 64);
+    let (tokens, targets, mask) = mk_batch(b, t, 512, 3);
+
+    let mut losses = Vec::new();
+    for art in [&a_jnp, &a_pal] {
+        let man = &art.manifest;
+        let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals).unwrap();
+        let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals).unwrap();
+        // Perturb adapters so the LoRA path actually contributes.
+        let delta: Vec<Tensor> =
+            tr.tensors().iter().map(|x| Tensor::ones(&x.shape)).collect();
+        tr.axpy(0.01, &delta);
+        let prog = art.program("eval_loss").unwrap();
+        let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+        let tgt = rt.upload_i32(&targets, &[b, t]).unwrap();
+        let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(fr.device_buffers().unwrap());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        losses.push(prog.execute_buffers(&inputs).unwrap().scalar("loss").unwrap());
+    }
+    assert!(
+        (losses[0] - losses[1]).abs() < 1e-4,
+        "jnp={} pallas={}",
+        losses[0],
+        losses[1]
+    );
+}
+
+#[test]
+fn grad_step_plus_adam_apply_matches_train_step() {
+    let (rt, art) = load("ff-tiny_lora_r8");
+    let man = &art.manifest;
+    let vals = init_params(&man.config, 5);
+    let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals).unwrap();
+    let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals).unwrap();
+    let mut m = ParamSet::zeros_like(&rt, &tr);
+    let mut v = ParamSet::zeros_like(&rt, &tr);
+    let (b, t) = (man.config.model.micro_batch, man.config.model.seq_len);
+    let (tokens, targets, mask) = mk_batch(b, t, 512, 4);
+    let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+    let tgt = rt.upload_i32(&targets, &[b, t]).unwrap();
+    let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+    let lr = rt.upload_scalar(1e-3).unwrap();
+    let step_buf = rt.upload_scalar(0.0).unwrap();
+    let n = tr.len();
+
+    // fused
+    let fused = {
+        let prog = art.program("train_step").unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(m.device_buffers().unwrap());
+        inputs.extend(v.device_buffers().unwrap());
+        inputs.push(&step_buf);
+        inputs.extend(fr.device_buffers().unwrap());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        inputs.push(&lr);
+        prog.execute_buffers(&inputs).unwrap()
+    };
+
+    // split
+    let grads = {
+        let prog = art.program("grad_step").unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(fr.device_buffers().unwrap());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        prog.execute_buffers(&inputs).unwrap()
+    };
+    let split = {
+        let prog = art.program("adam_apply").unwrap();
+        let g_bufs: Vec<xla::PjRtBuffer> = (0..n)
+            .map(|i| {
+                rt.upload_f32(&grads.values[1 + i], &tr.tensors()[i].shape).unwrap()
+            })
+            .collect();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(m.device_buffers().unwrap());
+        inputs.extend(v.device_buffers().unwrap());
+        inputs.push(&step_buf);
+        inputs.extend(g_bufs.iter());
+        inputs.push(&lr);
+        prog.execute_buffers(&inputs).unwrap()
+    };
+
+    assert!((fused.scalar("loss").unwrap() - grads.scalar("loss").unwrap()).abs() < 1e-6);
+    for i in 0..n {
+        let a = &split.values[i];
+        let b = &fused.values[1 + i];
+        let max_d = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_d < 1e-6, "param {i}: max delta {max_d}");
+    }
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let (_rt, art) = load("ff-tiny_lora_r8");
+    let prog = art.program("eval_loss").unwrap();
+    let err = prog.execute_buffers(&[]).err().expect("should fail");
+    assert!(format!("{err}").contains("expects"));
+}

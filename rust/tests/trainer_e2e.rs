@@ -1,0 +1,128 @@
+//! End-to-end trainer integration (requires `make artifacts`): pretrain a
+//! tiny base model, finetune with plain Adam vs Fast Forward, and verify
+//! the paper's core claim holds on this substrate — FF matches the
+//! baseline's test loss with fewer FLOPs.
+
+use std::path::{Path, PathBuf};
+
+use fastforward::config::{presets, FfConfig, TrainConfig};
+use fastforward::runtime::Runtime;
+use fastforward::train::pretrain::ensure_pretrained;
+use fastforward::train::trainer::{StopRule, Trainer};
+
+fn artifacts_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tiny_cfg(ff_enabled: bool, steps: usize) -> TrainConfig {
+    let mut cfg = presets::train_config("ff-tiny_lora_r8", "medical", 1).unwrap();
+    cfg.max_steps = steps;
+    cfg.train_examples = 512; // small corpus: fast epochs
+    cfg.test_examples = 128;
+    cfg.ff = FfConfig { enabled: ff_enabled, warmup_steps: 4, t_interval: 4, ..FfConfig::default() };
+    cfg
+}
+
+#[test]
+fn ff_matches_baseline_loss_with_fewer_flops() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+
+    // Baseline: fixed-step plain Adam run.
+    let steps = 48;
+    let mut baseline = Trainer::new(&rt, &root, tiny_cfg(false, steps), Some(&base)).unwrap();
+    let bsum = baseline.run(&StopRule::MaxSteps(steps)).unwrap();
+    assert!(bsum.final_test_loss.is_finite());
+    assert_eq!(bsum.adam_steps, steps);
+    assert_eq!(bsum.sim_steps, 0);
+
+    // FF: run until it matches the baseline's final test loss.
+    let mut ff = Trainer::new(&rt, &root, tiny_cfg(true, steps), Some(&base)).unwrap();
+    let fsum = ff
+        .run(&StopRule::TargetLoss {
+            target: bsum.final_test_loss,
+            eps: 1e-3,
+            eval_every: 4,
+            max_steps: steps * 3,
+        })
+        .unwrap();
+
+    assert!(fsum.reached_target, "FF never matched baseline loss: {} vs {}",
+            fsum.final_test_loss, bsum.final_test_loss);
+    assert!(fsum.sim_steps > 0, "FF never simulated a step");
+    let saved = 1.0 - fsum.flops.total() as f64 / bsum.flops.total() as f64;
+    println!(
+        "baseline: {} steps, {:.3e} FLOPs; FF: {} adam + {} sim steps, {:.3e} FLOPs ({:.0}% saved)",
+        bsum.adam_steps,
+        bsum.flops.total() as f64,
+        fsum.adam_steps,
+        fsum.sim_steps,
+        fsum.flops.total() as f64,
+        saved * 100.0
+    );
+    assert!(
+        fsum.flops.total() < bsum.flops.total(),
+        "FF used more FLOPs: {} vs {}",
+        fsum.flops.total(),
+        bsum.flops.total()
+    );
+}
+
+#[test]
+fn pretraining_is_cached_and_reduces_loss() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let a = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    // second call loads the cache and must be identical
+    let b = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    assert_eq!(a, b);
+    assert!(a.contains_key("embed.tok"));
+    assert!(a.contains_key("layer1.mlp.w_out"));
+}
+
+#[test]
+fn trainer_logs_and_flops_are_consistent() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut t = Trainer::new(&rt, &root, tiny_cfg(true, 16), Some(&base)).unwrap();
+    let sum = t.run(&StopRule::MaxSteps(16)).unwrap();
+    assert_eq!(sum.adam_steps, 16);
+    // log records: one per SGD step + one per kept simulated step
+    assert_eq!(t.log.n_sgd(), 16);
+    assert_eq!(t.log.n_ff(), sum.sim_steps);
+    // flops monotone over records
+    let mut prev = 0u64;
+    for r in &t.log.records {
+        assert!(r.flops >= prev);
+        prev = r.flops;
+    }
+    // FF stage stats recorded when FF ran
+    if sum.sim_steps > 0 {
+        assert!(!t.ffc.stages.is_empty());
+        assert!(t.ffc.stages.iter().any(|s| s.tau_star > 0));
+    }
+    // train-time timer excludes test evals but is positive
+    assert!(sum.train_seconds > 0.0);
+}
+
+#[test]
+fn convergence_rule_disables_ff_eventually() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut cfg = tiny_cfg(true, 400);
+    cfg.ff.convergence_patience = Some(3);
+    let mut t = Trainer::new(&rt, &root, cfg, Some(&base)).unwrap();
+    let sum = t
+        .run(&StopRule::Convergence { max_steps: 400, tail: 6 })
+        .unwrap();
+    // Either FF shut itself off (paper §5.1 behaviour) or we hit max_steps;
+    // on this tiny task it should shut off well before 400 steps.
+    assert!(
+        t.ffc.is_permanently_off() || sum.adam_steps >= 400,
+        "neither converged nor exhausted: {} steps",
+        sum.adam_steps
+    );
+}
