@@ -38,8 +38,8 @@ fn main() -> anyhow::Result<()> {
 
     // One simulated step = host axpy over trainables + 32-example forward.
     let sim = bench("ff_simulated_step(axpy+val_fwd)", 1, 8, Duration::from_secs(2), || {
-        let delta = t.trainables(); // same size as Δ_W
-        t.tr_axpy_for_bench(&delta, 1e-9);
+        let delta = t.trainables().unwrap(); // same size as Δ_W
+        t.tr_axpy_for_bench(&delta, 1e-9).unwrap();
         t.eval_val().unwrap();
     });
     println!("{}", sim.report());

@@ -1,7 +1,9 @@
 //! Bench: PJRT runtime layer — artifact compile time, host↔device upload,
 //! and raw program dispatch overhead (execute with cached inputs). This is
 //! the floor under every training step; §Perf tracks the coordinator
-//! overhead = (sgd_step wall) − (program execute wall).
+//! overhead = (sgd_step wall) − (program execute wall). Each section also
+//! reports the uploaded/downloaded bytes it moved per iteration, using the
+//! runtime's transfer meters.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -38,14 +40,18 @@ fn main() -> anyhow::Result<()> {
     let mask = vec![1.0f32; b * t];
 
     // upload cost for the full frozen set (dominates bytes)
+    let t0 = rt.stats.snapshot();
     let s = bench("upload/frozen_params(~160K f32)", 1, 10, Duration::from_secs(1), || {
         let snap = fr.snapshot();
-        fr.restore(&snap); // mark all dirty
+        fr.restore(&snap); // mark all host-ahead
         fr.device_buffers().unwrap();
     });
+    let per = rt.stats.snapshot().since(&t0).per_iter(s.iters as u64 + 1);
     println!("{}", s.report());
+    println!("    transfers/iter: {}", per.report());
 
     // dispatch with everything cached except the batch
+    let t0 = rt.stats.snapshot();
     let s = bench("execute/eval_loss(cached params)", 2, 20, Duration::from_secs(2), || {
         let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
         let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
@@ -57,6 +63,49 @@ fn main() -> anyhow::Result<()> {
         inputs.push(&msk);
         std::hint::black_box(prog.execute_buffers(&inputs).unwrap());
     });
+    let per = rt.stats.snapshot().since(&t0).per_iter(s.iters as u64 + 2);
     println!("{}", s.report());
+    println!("    transfers/iter: {}", per.report());
+
+    // device-resident adam_apply: outputs retained as raw buffers, only
+    // the trainable set synced back — the trainer's steady-state step.
+    let adam = art.program("adam_apply")?;
+    let mut m = ParamSet::zeros_like(&rt, &tr);
+    let mut v = ParamSet::zeros_like(&rt, &tr);
+    let grads: Vec<xla::PjRtBuffer> = tr
+        .tensors()
+        .iter()
+        .map(|x| rt.upload_f32(&vec![1e-4f32; x.len()], &x.shape).unwrap())
+        .collect();
+    let lr = rt.upload_scalar(1e-3)?;
+    let mut step = 0f32;
+    let t0 = rt.stats.snapshot();
+    let s = bench("adam_apply/device_resident(sync tr only)", 2, 10, Duration::from_secs(2), || {
+        let step_buf = rt.upload_scalar(step).unwrap();
+        step += 1.0;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(m.device_buffers().unwrap());
+        inputs.extend(v.device_buffers().unwrap());
+        inputs.push(&step_buf);
+        inputs.extend(grads.iter());
+        inputs.push(&lr);
+        let outs = adam.execute_raw(&inputs).unwrap();
+        drop(inputs);
+        let mut outs = outs.into_iter();
+        tr.adopt_all(&mut outs).unwrap();
+        m.adopt_all(&mut outs).unwrap();
+        v.adopt_all(&mut outs).unwrap();
+        tr.sync_host().unwrap(); // Δ_W host view; m/v stay device-only
+    });
+    let per = rt.stats.snapshot().since(&t0).per_iter(s.iters as u64 + 2);
+    println!("{}", s.report());
+    println!("    transfers/adam_step: {}", per.report());
+    println!(
+        "    param uploads after warmup: tr={} m={} v={} (flat = no re-upload)",
+        tr.upload_count(),
+        m.upload_count(),
+        v.upload_count()
+    );
     Ok(())
 }

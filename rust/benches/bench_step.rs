@@ -1,6 +1,8 @@
 //! Bench: end-to-end optimizer-step latency (the paper's train-time axis,
-//! Fig 3). Measures the fused-vs-accumulated paths and per-micro-batch
-//! grad_step latency on the tiny and small models.
+//! Fig 3) plus the host↔device traffic behind it. Measures per-step wall
+//! time, uploaded/downloaded **bytes per Adam step** and **per FF probe**,
+//! and asserts-by-printing that device-resident state keeps the param/
+//! optimizer upload counters flat across steady-state steps.
 //!
 //! Run: `cargo bench --offline` (after `make artifacts`).
 
@@ -31,6 +33,10 @@ fn main() -> anyhow::Result<()> {
         let mut t = Trainer::new(&rt, &root, cfg.clone(), Some(&base))?;
 
         let tokens_per_step = (cfg.global_batch * t.art.manifest.config.model.seq_len) as f64;
+        // warm the device-resident state before measuring steady state
+        t.sgd_step()?;
+        let (state_ups_0, _) = t.state_transfer_counts();
+        let tr0 = t.transfers();
         let s = bench(
             &format!("sgd_step/{model}/global{}", cfg.global_batch),
             2,
@@ -40,13 +46,27 @@ fn main() -> anyhow::Result<()> {
                 t.sgd_step().unwrap();
             },
         );
+        let per_step = t.transfers().since(&tr0).per_iter(s.iters as u64 + 2);
+        let (state_ups_1, state_downs) = t.state_transfer_counts();
         println!(
             "{}  ({:.0} tokens/s)",
             s.report(),
             tokens_per_step / s.mean_secs()
         );
+        println!("    transfers/adam_step: {}", per_step.report());
+        println!(
+            "    state uploads {} → {} across {} steps ({}), state downloads {}",
+            state_ups_0,
+            state_ups_1,
+            s.iters + 2,
+            if state_ups_1 == state_ups_0 { "flat: device-resident" } else { "NOT FLAT" },
+            state_downs,
+        );
 
-        // val-set inference = one FF probe's cost
+        // val-set inference = one FF probe's cost; batch buffers cached
+        // after the first call, so steady-state probes upload nothing.
+        t.eval_val()?; // builds the EvalCache
+        let tr0 = t.transfers();
         let s = bench(
             &format!("ff_val_probe/{model}/32ex"),
             2,
@@ -56,7 +76,9 @@ fn main() -> anyhow::Result<()> {
                 t.eval_val().unwrap();
             },
         );
+        let per_probe = t.transfers().since(&tr0).per_iter(s.iters as u64 + 2);
         println!("{}", s.report());
+        println!("    transfers/ff_probe (fixed W): {}", per_probe.report());
     }
     Ok(())
 }

@@ -31,8 +31,8 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     t_ff.run(&StopRule::MaxSteps(steps))?;
 
     let w0 = t_sgd.w0_trainables.clone();
-    let w_sgd = t_sgd.trainables();
-    let w_ff = t_ff.trainables();
+    let w_sgd = t_sgd.trainables()?;
+    let w_ff = t_ff.trainables()?;
     let basis = PlaneBasis::new(&w0, &w_sgd, &w_ff)?;
 
     // Grid in plane coordinates (units of ‖W_FF − W0‖, paper's axis scale).

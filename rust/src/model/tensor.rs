@@ -4,6 +4,12 @@
 //! Deliberately minimal — all heavy compute runs inside the AOT-compiled
 //! XLA programs; the host only needs elementwise ops over flat buffers.
 
+/// Fixed lane width for the chunked elementwise kernels below. Eight f32
+/// lanes = one 256-bit vector register; the fixed-size inner loops compile
+/// to branch-free straight-line code LLVM auto-vectorizes, which matters
+/// because `axpy` *is* the host side of every FF simulated step.
+const LANES: usize = 8;
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
@@ -33,21 +39,44 @@ impl Tensor {
     }
 
     /// self += alpha * other (the Δ_W application `W_t + τΔ_W` runs through
-    /// this; it is the FF hot path on the host side).
+    /// this; it is the FF hot path on the host side). Chunked into
+    /// [`LANES`]-wide blocks with a scalar tail; per-element arithmetic is
+    /// identical to the scalar loop.
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
         debug_assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        let mut av = self.data.chunks_exact_mut(LANES);
+        let mut bv = other.data.chunks_exact(LANES);
+        for (a, b) in (&mut av).zip(&mut bv) {
+            for k in 0..LANES {
+                a[k] += alpha * b[k];
+            }
+        }
+        for (a, b) in av.into_remainder().iter_mut().zip(bv.remainder()) {
             *a += alpha * b;
         }
     }
 
-    /// self = a - b (builds Δ_W = W_t − W_{t−1}).
+    /// self = a - b (builds Δ_W = W_t − W_{t−1}). Chunked like `axpy`.
     pub fn sub_from(a: &Tensor, b: &Tensor) -> Tensor {
         debug_assert_eq!(a.shape, b.shape);
-        Tensor {
-            shape: a.shape.clone(),
-            data: a.data.iter().zip(b.data.iter()).map(|(x, y)| x - y).collect(),
+        let mut data = vec![0.0f32; a.data.len()];
+        let mut ov = data.chunks_exact_mut(LANES);
+        let mut av = a.data.chunks_exact(LANES);
+        let mut bv = b.data.chunks_exact(LANES);
+        for ((o, x), y) in (&mut ov).zip(&mut av).zip(&mut bv) {
+            for k in 0..LANES {
+                o[k] = x[k] - y[k];
+            }
         }
+        for ((o, x), y) in ov
+            .into_remainder()
+            .iter_mut()
+            .zip(av.remainder())
+            .zip(bv.remainder())
+        {
+            *o = x - y;
+        }
+        Tensor { shape: a.shape.clone(), data }
     }
 
     pub fn scale(&mut self, s: f32) {
@@ -60,13 +89,23 @@ impl Tensor {
         self.data.iter_mut().for_each(|x| *x = v);
     }
 
+    /// Dot product in f64. [`LANES`] independent accumulators break the
+    /// serial add-dependency chain so the loop vectorizes; the summation
+    /// order therefore differs from the naive scalar loop by O(ulp).
     pub fn dot(&self, other: &Tensor) -> f64 {
         debug_assert_eq!(self.shape, other.shape);
-        self.data
-            .iter()
-            .zip(other.data.iter())
-            .map(|(a, b)| *a as f64 * *b as f64)
-            .sum()
+        let mut acc = [0.0f64; LANES];
+        let mut av = self.data.chunks_exact(LANES);
+        let mut bv = other.data.chunks_exact(LANES);
+        for (a, b) in (&mut av).zip(&mut bv) {
+            for k in 0..LANES {
+                acc[k] += a[k] as f64 * b[k] as f64;
+            }
+        }
+        for (k, (a, b)) in av.remainder().iter().zip(bv.remainder()).enumerate() {
+            acc[k] += *a as f64 * *b as f64;
+        }
+        acc.iter().sum()
     }
 
     pub fn norm(&self) -> f64 {
@@ -156,5 +195,78 @@ mod tests {
             Tensor::from_vec(&[1], vec![4.0]),
         ];
         assert!((list_norm(&a) - 5.0).abs() < 1e-12);
+    }
+
+    // -- chunked kernels vs scalar reference ---------------------------------
+    //
+    // The lane-chunked axpy/sub_from/dot must agree with the obvious scalar
+    // loops on arbitrary lengths — in particular lengths that exercise the
+    // remainder path (n % LANES ≠ 0) and the empty tensor.
+
+    use crate::util::prop::check;
+
+    fn ref_axpy(a: &[f32], alpha: f32, b: &[f32]) -> Vec<f32> {
+        a.iter().zip(b).map(|(x, y)| x + alpha * y).collect()
+    }
+
+    fn ref_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+    }
+
+    #[test]
+    fn prop_chunked_axpy_matches_scalar_reference() {
+        check(200, |g| {
+            let n = g.usize_in(0, 67); // straddles several lane boundaries
+            let alpha = g.f32_in(-2.0, 2.0);
+            let a = g.vec_f32(n, 1.0);
+            let b = g.vec_f32(n, 1.0);
+            let want = ref_axpy(&a, alpha, &b);
+            let mut t = Tensor::from_vec(&[n], a);
+            t.axpy(alpha, &Tensor::from_vec(&[n], b));
+            for (i, (got, want)) in t.data.iter().zip(&want).enumerate() {
+                if (got - want).abs() > 1e-6 {
+                    return Err(format!("axpy[{i}] (n={n}): {got} != {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_chunked_sub_from_matches_scalar_reference() {
+        check(200, |g| {
+            let n = g.usize_in(0, 67);
+            let a = g.vec_f32(n, 1.0);
+            let b = g.vec_f32(n, 1.0);
+            let want: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x - y).collect();
+            let d = Tensor::sub_from(
+                &Tensor::from_vec(&[n], a),
+                &Tensor::from_vec(&[n], b),
+            );
+            for (i, (got, want)) in d.data.iter().zip(&want).enumerate() {
+                if (got - want).abs() > 1e-6 {
+                    return Err(format!("sub_from[{i}] (n={n}): {got} != {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_chunked_dot_matches_scalar_reference() {
+        check(200, |g| {
+            let n = g.usize_in(0, 67);
+            let a = g.vec_f32(n, 1.0);
+            let b = g.vec_f32(n, 1.0);
+            let want = ref_dot(&a, &b);
+            let got = Tensor::from_vec(&[n], a).dot(&Tensor::from_vec(&[n], b));
+            // only the summation order differs; the f64 accumulators keep
+            // the discrepancy far below the 1e-6 contract
+            let tol = 1e-6 * want.abs().max(1.0);
+            if (got - want).abs() > tol {
+                return Err(format!("dot (n={n}): {got} != {want}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -6,8 +6,17 @@
 //!
 //! The tracker snapshots W before each optimizer step and can emit the
 //! resulting Δ after it — exactly "the most recent optimizer step".
+//!
+//! With device-resident training state the optimizer's outputs live on the
+//! device until first host access; [`DeltaTracker::begin_step`] /
+//! [`DeltaTracker::end_step`] wrap the raw slice API with a
+//! `ParamSet::sync_host` so Δ_W is always computed from *synced* host
+//! views, never stale ones.
+
+use anyhow::Result;
 
 use crate::model::tensor::Tensor;
+use crate::runtime::ParamSet;
 
 #[derive(Debug, Default)]
 pub struct DeltaTracker {
@@ -23,6 +32,22 @@ impl DeltaTracker {
     /// Record W_{t−1} (call immediately before an optimizer step).
     pub fn snapshot_before(&mut self, params: &[Tensor]) {
         self.prev = Some(params.to_vec());
+    }
+
+    /// Record W_{t−1} from a ParamSet, downloading any device-ahead
+    /// tensors first (call immediately before an optimizer step).
+    pub fn begin_step(&mut self, params: &mut ParamSet) -> Result<()> {
+        params.sync_host()?;
+        self.snapshot_before(params.tensors());
+        Ok(())
+    }
+
+    /// Compute Δ_W = W_t − W_{t−1} from a ParamSet, downloading any
+    /// device-ahead tensors first (call immediately after the step).
+    pub fn end_step(&mut self, params: &mut ParamSet) -> Result<()> {
+        params.sync_host()?;
+        self.compute_after(params.tensors());
+        Ok(())
     }
 
     /// Compute Δ_W = W_t − W_{t−1} (call immediately after the step).
@@ -87,5 +112,27 @@ mod tests {
     #[should_panic(expected = "snapshot_before")]
     fn compute_without_snapshot_panics() {
         DeltaTracker::new().compute_after(&[Tensor::zeros(&[1])]);
+    }
+
+    #[test]
+    fn begin_end_step_sync_device_ahead_state() {
+        use crate::runtime::Runtime;
+        use std::collections::BTreeMap;
+        let rt = Runtime::cpu().unwrap();
+        let spec = vec![("w".to_string(), vec![2])];
+        let mut vals = BTreeMap::new();
+        vals.insert("w".into(), Tensor::from_vec(&[2], vec![1.0, 2.0]));
+        let mut ps = ParamSet::from_spec(&rt, &spec, &vals).unwrap();
+
+        let mut d = DeltaTracker::new();
+        d.begin_step(&mut ps).unwrap();
+        // simulate an optimizer step whose output stays on the device
+        let buf = rt.upload_f32(&[1.5, 1.0], &[2]).unwrap();
+        ps.adopt_device(0, buf);
+        d.end_step(&mut ps).unwrap();
+        // Δ_W computed from the synced host view, not the stale one
+        assert_eq!(d.delta().unwrap()[0].data, vec![0.5, -1.0]);
+        assert!(ps.host_in_sync());
+        assert_eq!(ps.download_count(), 1);
     }
 }

@@ -8,15 +8,37 @@
 //!     → PjRtClient::compile → PjRtLoadedExecutable
 //! ```
 //!
-//! Programs were lowered with `return_tuple=True`, so execution returns a
-//! single tuple buffer; we download it synchronously and decompose into
-//! per-output literals. Inputs are passed as device buffers (`execute_b`)
-//! so large frozen parameter sets upload once and are reused across steps
-//! (see `params::ParamSet` buffer caching).
+//! Programs were lowered with `return_tuple=True`; PJRT untuples the root
+//! tuple at execution time, so `execute_b` hands back one device buffer per
+//! output leaf. That gives two output modes:
+//!
+//! * **decoded** ([`Program::execute_buffers`]) — download every leaf into
+//!   host `Vec<f32>`s (the original path, still used where the coordinator
+//!   needs all outputs host-side, e.g. per-micro-batch gradients);
+//! * **raw** ([`Program::execute_raw`]) — keep every leaf as a device
+//!   buffer. The trainer's Adam step retains its updated trainable/m/v
+//!   outputs this way and feeds them straight back in on the next step,
+//!   eliminating the per-step host↔device round-trip of the full parameter
+//!   + optimizer state. Individual leaves (the loss scalar) can still be
+//!   pulled selectively with [`Program::download_output`].
+//!
+//! Inputs are passed as device buffers (`execute_b`) so large frozen
+//! parameter sets upload once and are reused across steps (see
+//! `params::ParamSet` and its sync-state machine).
+//!
+//! # Perf counters
+//!
+//! Every host→device upload and device→host download that flows through
+//! this module is metered in [`Runtime::stats`] ([`TransferStats`]): call
+//! counts and **bytes** in each direction. `bench_runtime`/`bench_step`
+//! report these per Adam step and per FF probe, and `RunSummary` carries a
+//! per-run [`TransferSnapshot`] — the device-residency win is measured, not
+//! asserted.
 
 pub mod manifest;
 pub mod params;
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -25,21 +47,115 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 pub use manifest::{ArtifactIndex, Dtype, IoSlot, Manifest, ProgramSpec};
-pub use params::ParamSet;
+pub use params::{ParamSet, SyncState};
 
 use crate::model::tensor::Tensor;
+
+/// Host↔device traffic meters, shared by every upload/download helper on a
+/// [`Runtime`]. Interior-mutable (`Cell`) because the client handle is held
+/// behind an `Rc` by buffers and programs.
+#[derive(Debug, Default)]
+pub struct TransferStats {
+    uploads: Cell<u64>,
+    uploaded_bytes: Cell<u64>,
+    downloads: Cell<u64>,
+    downloaded_bytes: Cell<u64>,
+}
+
+impl TransferStats {
+    pub fn record_upload(&self, bytes: usize) {
+        self.uploads.set(self.uploads.get() + 1);
+        self.uploaded_bytes.set(self.uploaded_bytes.get() + bytes as u64);
+    }
+
+    pub fn record_download(&self, bytes: usize) {
+        self.downloads.set(self.downloads.get() + 1);
+        self.downloaded_bytes.set(self.downloaded_bytes.get() + bytes as u64);
+    }
+
+    /// Point-in-time copy of the counters; diff two with
+    /// [`TransferSnapshot::since`] to attribute traffic to a code region.
+    pub fn snapshot(&self) -> TransferSnapshot {
+        TransferSnapshot {
+            uploads: self.uploads.get(),
+            uploaded_bytes: self.uploaded_bytes.get(),
+            downloads: self.downloads.get(),
+            downloaded_bytes: self.downloaded_bytes.get(),
+        }
+    }
+}
+
+/// Immutable copy of [`TransferStats`] at one instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransferSnapshot {
+    pub uploads: u64,
+    pub uploaded_bytes: u64,
+    pub downloads: u64,
+    pub downloaded_bytes: u64,
+}
+
+impl TransferSnapshot {
+    /// Traffic since an earlier snapshot.
+    pub fn since(&self, earlier: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            uploads: self.uploads.saturating_sub(earlier.uploads),
+            uploaded_bytes: self.uploaded_bytes.saturating_sub(earlier.uploaded_bytes),
+            downloads: self.downloads.saturating_sub(earlier.downloads),
+            downloaded_bytes: self.downloaded_bytes.saturating_sub(earlier.downloaded_bytes),
+        }
+    }
+
+    /// Mean traffic per iteration (bench reporting).
+    pub fn per_iter(&self, iters: u64) -> TransferSnapshot {
+        let n = iters.max(1);
+        TransferSnapshot {
+            uploads: self.uploads / n,
+            uploaded_bytes: self.uploaded_bytes / n,
+            downloads: self.downloads / n,
+            downloaded_bytes: self.downloaded_bytes / n,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "up {} ({} calls), down {} ({} calls)",
+            human_bytes(self.uploaded_bytes),
+            self.uploads,
+            human_bytes(self.downloaded_bytes),
+            self.downloads
+        )
+    }
+}
+
+/// `1234567` → `"1.18 MiB"` (bench/report formatting).
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
 
 /// Shared PJRT CPU client. `Rc` because buffers hold a client handle and the
 /// coordinator is single-threaded around the device (XLA:CPU parallelizes
 /// internally).
 pub struct Runtime {
     pub client: xla::PjRtClient,
+    /// Host↔device traffic meters (see module docs, §Perf counters).
+    pub stats: TransferStats,
 }
 
 impl Runtime {
     pub fn cpu() -> Result<Rc<Runtime>> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        Ok(Rc::new(Runtime { client }))
+        Ok(Rc::new(Runtime { client, stats: TransferStats::default() }))
     }
 
     /// Compile one program of an artifact. Compilation is cached per
@@ -71,15 +187,21 @@ impl Runtime {
     // -- host<->device helpers ------------------------------------------------
 
     pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
+        let buf = self
+            .client
             .buffer_from_host_buffer(data, shape, None)
-            .map_err(|e| anyhow!("upload f32{shape:?}: {e}"))
+            .map_err(|e| anyhow!("upload f32{shape:?}: {e}"))?;
+        self.stats.record_upload(std::mem::size_of_val(data));
+        Ok(buf)
     }
 
     pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
+        let buf = self
+            .client
             .buffer_from_host_buffer(data, shape, None)
-            .map_err(|e| anyhow!("upload i32{shape:?}: {e}"))
+            .map_err(|e| anyhow!("upload i32{shape:?}: {e}"))?;
+        self.stats.record_upload(std::mem::size_of_val(data));
+        Ok(buf)
     }
 
     pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
@@ -88,6 +210,16 @@ impl Runtime {
 
     pub fn upload_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
         self.upload_f32(&t.data, &t.shape)
+    }
+
+    /// Download one f32 device buffer into a host vector (metered).
+    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download f32 buffer: {e}"))?;
+        let v = lit.to_vec::<f32>().map_err(|e| anyhow!("decode f32 buffer: {e}"))?;
+        self.stats.record_download(v.len() * 4);
+        Ok(v)
     }
 }
 
@@ -124,27 +256,151 @@ impl Outputs {
 }
 
 impl Program {
-    /// Execute with pre-uploaded device buffers (hot path).
-    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Outputs> {
-        if inputs.len() != self.spec.inputs.len() {
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.spec.inputs.len() {
             bail!(
                 "program '{}' expects {} inputs, got {}",
                 self.name,
                 self.spec.inputs.len(),
-                inputs.len()
+                got
             );
         }
-        let out = self
+        Ok(())
+    }
+
+    /// Execute with pre-uploaded device buffers, downloading every output
+    /// (hot path for programs whose outputs the coordinator consumes
+    /// host-side, e.g. per-micro-batch gradients).
+    pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Outputs> {
+        self.check_arity(inputs.len())?;
+        let mut out = self
             .exe
             .execute_b(inputs)
             .map_err(|e| anyhow!("executing '{}': {e}", self.name))?;
-        let tuple = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("downloading '{}' result: {e}", self.name))?;
-        self.decode(tuple)
+        let mut bufs = out.swap_remove(0);
+        if bufs.len() == self.spec.outputs.len() {
+            // untupled root: one buffer per output leaf. For single-output
+            // programs the count can't distinguish a leaf from a whole root
+            // tuple, so a failed leaf decode there falls through to the
+            // tuple path instead of erroring.
+            let mut values = Vec::with_capacity(bufs.len());
+            let mut leaf_decode_ok = true;
+            for (i, buf) in bufs.iter().enumerate() {
+                match self.download_output(buf, i) {
+                    Ok(v) => values.push(v),
+                    Err(e) if bufs.len() == 1 => {
+                        crate::debug!(
+                            "program '{}': leaf decode failed ({e:#}), \
+                             retrying as whole root tuple",
+                            self.name
+                        );
+                        leaf_decode_ok = false;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if leaf_decode_ok {
+                return Ok(Outputs { slots: self.spec.outputs.clone(), values });
+            }
+        }
+        if bufs.len() == 1 {
+            // legacy path: root tuple kept whole — download + decompose
+            let tuple = bufs
+                .pop()
+                .unwrap()
+                .to_literal_sync()
+                .map_err(|e| anyhow!("downloading '{}' result: {e}", self.name))?;
+            return self.decode_tuple(tuple);
+        }
+        bail!(
+            "program '{}' returned {} output buffers, manifest says {}",
+            self.name,
+            bufs.len(),
+            self.spec.outputs.len()
+        )
     }
 
-    fn decode(&self, tuple: xla::Literal) -> Result<Outputs> {
+    /// Execute with pre-uploaded device buffers, keeping every output as a
+    /// raw device buffer — nothing is downloaded. Buffers align with
+    /// `spec.outputs`; use [`Program::download_output`] to pull individual
+    /// leaves (the loss scalar) and `ParamSet::adopt_device` to retain
+    /// updated state device-side.
+    ///
+    /// Requires the runtime to untuple the root (every multi-output
+    /// program on this backend does); for single-output programs the
+    /// buffer count cannot distinguish leaf from root tuple — raw-mode
+    /// callers are all multi-output, and `execute_buffers` handles the
+    /// single-output fallback.
+    pub fn execute_raw(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        self.check_arity(inputs.len())?;
+        let mut out = self
+            .exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow!("executing '{}': {e}", self.name))?;
+        let bufs = out.swap_remove(0);
+        if bufs.len() != self.spec.outputs.len() {
+            bail!(
+                "program '{}' returned {} output buffers, manifest says {} — \
+                 raw output mode requires untupled results",
+                self.name,
+                bufs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(bufs)
+    }
+
+    /// Position of a named output in `spec.outputs` (and thus in the buffer
+    /// list returned by [`Program::execute_raw`]).
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("program '{}' has no output '{name}'", self.name))
+    }
+
+    /// Selectively download one raw output buffer (index into
+    /// `spec.outputs`) as f32s, validating dtype and element count.
+    pub fn download_output(&self, buf: &xla::PjRtBuffer, index: usize) -> Result<Vec<f32>> {
+        let slot = self
+            .spec
+            .outputs
+            .get(index)
+            .ok_or_else(|| anyhow!("program '{}' has no output #{index}", self.name))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading output '{}': {e}", slot.name))?;
+        let v = Self::literal_to_f32(lit, slot)?;
+        self.rt.stats.record_download(v.len() * 4);
+        Ok(v)
+    }
+
+    fn literal_to_f32(lit: xla::Literal, slot: &IoSlot) -> Result<Vec<f32>> {
+        let v: Vec<f32> = match slot.dtype {
+            Dtype::F32 => lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output '{}': {e}", slot.name))?,
+            Dtype::I32 => lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("output '{}': {e}", slot.name))?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+        };
+        if v.len() != slot.numel() {
+            bail!(
+                "output '{}' has {} elems, expected {}",
+                slot.name,
+                v.len(),
+                slot.numel()
+            );
+        }
+        Ok(v)
+    }
+
+    fn decode_tuple(&self, tuple: xla::Literal) -> Result<Outputs> {
         let parts = tuple
             .to_tuple()
             .map_err(|e| anyhow!("decomposing '{}' tuple: {e}", self.name))?;
@@ -158,25 +414,8 @@ impl Program {
         }
         let mut values = Vec::with_capacity(parts.len());
         for (lit, slot) in parts.into_iter().zip(self.spec.outputs.iter()) {
-            let v: Vec<f32> = match slot.dtype {
-                Dtype::F32 => lit
-                    .to_vec::<f32>()
-                    .map_err(|e| anyhow!("output '{}': {e}", slot.name))?,
-                Dtype::I32 => lit
-                    .to_vec::<i32>()
-                    .map_err(|e| anyhow!("output '{}': {e}", slot.name))?
-                    .into_iter()
-                    .map(|x| x as f32)
-                    .collect(),
-            };
-            if v.len() != slot.numel() {
-                bail!(
-                    "output '{}' has {} elems, expected {}",
-                    slot.name,
-                    v.len(),
-                    slot.numel()
-                );
-            }
+            let v = Self::literal_to_f32(lit, slot)?;
+            self.rt.stats.record_download(v.len() * 4);
             values.push(v);
         }
         Ok(Outputs { slots: self.spec.outputs.clone(), values })
@@ -214,5 +453,68 @@ impl Artifact {
 
     pub fn runtime(&self) -> &Rc<Runtime> {
         &self.rt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_stats_meter_both_directions() {
+        let s = TransferStats::default();
+        s.record_upload(1024);
+        s.record_upload(512);
+        s.record_download(4);
+        let snap = s.snapshot();
+        assert_eq!(snap.uploads, 2);
+        assert_eq!(snap.uploaded_bytes, 1536);
+        assert_eq!(snap.downloads, 1);
+        assert_eq!(snap.downloaded_bytes, 4);
+    }
+
+    #[test]
+    fn snapshot_since_and_per_iter() {
+        let a = TransferSnapshot { uploads: 10, uploaded_bytes: 4000, downloads: 2, downloaded_bytes: 80 };
+        let b = TransferSnapshot { uploads: 4, uploaded_bytes: 1000, downloads: 2, downloaded_bytes: 80 };
+        let d = a.since(&b);
+        assert_eq!(d.uploads, 6);
+        assert_eq!(d.uploaded_bytes, 3000);
+        assert_eq!(d.downloads, 0);
+        let p = d.per_iter(3);
+        assert_eq!(p.uploads, 2);
+        assert_eq!(p.uploaded_bytes, 1000);
+        // per_iter never divides by zero
+        assert_eq!(d.per_iter(0).uploads, 6);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn uploads_are_metered_through_the_client() {
+        let rt = Runtime::cpu().unwrap();
+        let base = rt.stats.snapshot();
+        let _b = rt.upload_f32(&[1.0; 16], &[4, 4]).unwrap();
+        let _c = rt.upload_i32(&[1; 8], &[8]).unwrap();
+        let d = rt.stats.snapshot().since(&base);
+        assert_eq!(d.uploads, 2);
+        assert_eq!(d.uploaded_bytes, 16 * 4 + 8 * 4);
+    }
+
+    #[test]
+    fn download_roundtrips_and_meters() {
+        let rt = Runtime::cpu().unwrap();
+        let buf = rt.upload_f32(&[1.0, 2.0, 3.0], &[3]).unwrap();
+        let base = rt.stats.snapshot();
+        let v = rt.download_f32(&buf).unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+        let d = rt.stats.snapshot().since(&base);
+        assert_eq!(d.downloads, 1);
+        assert_eq!(d.downloaded_bytes, 12);
     }
 }

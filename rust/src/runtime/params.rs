@@ -1,12 +1,39 @@
-//! `ParamSet`: an ordered collection of named host tensors with cached
-//! device buffers.
+//! `ParamSet`: an ordered collection of named parameter tensors whose
+//! authoritative copy moves between host and device under a per-tensor
+//! **sync-state machine**.
 //!
-//! The coordinator owns parameters host-side (FF's `W_t + τΔ_W` arithmetic,
-//! gradient accumulation, checkpointing all happen on the host), and the
-//! runtime needs them device-side for every program call. A `ParamSet`
-//! tracks a dirty bit per tensor so *unchanged* parameters upload exactly
-//! once — in particular the frozen base weights, which dominate bytes but
-//! never change during low-rank finetuning.
+//! The coordinator needs parameters host-side for FF's `W_t + τΔ_W`
+//! arithmetic, checkpointing, and analysis probes, and device-side for
+//! every program call. Rather than round-tripping the full state through
+//! host memory on every optimizer step, each tensor carries one of three
+//! states:
+//!
+//! | state         | authoritative copy | how it is entered                         |
+//! |---------------|--------------------|-------------------------------------------|
+//! | `HostAhead`   | host               | construction, `set_flat`, `axpy`, `restore` |
+//! | `DeviceAhead` | device             | `adopt_device` (a program output retained as a buffer) |
+//! | `InSync`      | both (identical)   | upload (`device_buffers`) or download (`sync_host`) |
+//!
+//! Transitions:
+//!
+//! * [`ParamSet::device_buffers`] uploads only `HostAhead` (or never-
+//!   uploaded) tensors → `InSync`; `DeviceAhead`/`InSync` buffers are
+//!   reused as-is. The frozen base weights therefore upload exactly once,
+//!   and device-resident optimizer state is **never** re-uploaded.
+//! * [`ParamSet::adopt_device`] installs a program output buffer as the new
+//!   authoritative value → `DeviceAhead`, with **no** host copy. This is
+//!   how `adam_apply` outputs stay on the device between steps.
+//! * [`ParamSet::sync_host`] lazily downloads every `DeviceAhead` tensor →
+//!   `InSync`. Host reads (`tensors`, `snapshot`, …) assert that no tensor
+//!   is `DeviceAhead`, so a missing `sync_host()` is a loud bug, not a
+//!   silent stale read. Host read-modify-writes (`axpy`) carry the same
+//!   assertion; whole-tensor overwrites (`set_flat`, `restore`) are safe
+//!   from any state.
+//!
+//! Uploads and downloads are counted per set (`upload_count` /
+//! `download_count`) and metered in bytes on the shared
+//! [`Runtime::stats`](crate::runtime::TransferStats) — see the runtime
+//! module docs, §Perf counters.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -16,14 +43,26 @@ use anyhow::{anyhow, bail, Result};
 use crate::model::tensor::Tensor;
 use crate::runtime::Runtime;
 
+/// Which copy of a tensor is authoritative (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncState {
+    /// Host and device hold the same value.
+    InSync,
+    /// Host was written; the device buffer (if any) is stale.
+    HostAhead,
+    /// A program output buffer is authoritative; the host tensor is stale.
+    DeviceAhead,
+}
+
 pub struct ParamSet {
     rt: Rc<Runtime>,
     names: Vec<String>,
     index: BTreeMap<String, usize>,
     host: Vec<Tensor>,
     device: Vec<Option<xla::PjRtBuffer>>,
-    dirty: Vec<bool>,
+    state: Vec<SyncState>,
     uploads: std::cell::Cell<u64>,
+    downloads: std::cell::Cell<u64>,
 }
 
 impl ParamSet {
@@ -64,8 +103,9 @@ impl ParamSet {
             index,
             host,
             device: (0..n).map(|_| None).collect(),
-            dirty: vec![true; n],
+            state: vec![SyncState::HostAhead; n],
             uploads: std::cell::Cell::new(0),
+            downloads: std::cell::Cell::new(0),
         }
     }
 
@@ -85,68 +125,159 @@ impl ParamSet {
         &self.names
     }
 
+    /// Shape of tensor `i`. Valid in any sync state — shapes are fixed at
+    /// construction, so no host sync is required (unlike value reads).
+    pub fn shape(&self, i: usize) -> &[usize] {
+        &self.host[i].shape
+    }
+
+    /// True when no tensor is `DeviceAhead` — host reads are valid.
+    pub fn host_in_sync(&self) -> bool {
+        !self.state.iter().any(|s| *s == SyncState::DeviceAhead)
+    }
+
+    fn assert_host_fresh(&self, op: &str) {
+        assert!(
+            self.host_in_sync(),
+            "{op} on a device-ahead ParamSet — call sync_host() first"
+        );
+    }
+
     pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.assert_host_fresh("tensor()");
         let i = *self.index.get(name).ok_or_else(|| anyhow!("no param '{name}'"))?;
         Ok(&self.host[i])
     }
 
     pub fn tensors(&self) -> &[Tensor] {
+        self.assert_host_fresh("tensors()");
         &self.host
     }
 
     /// Snapshot all host tensors (W_{t-1} for Δ_W).
     pub fn snapshot(&self) -> Vec<Tensor> {
+        self.assert_host_fresh("snapshot()");
         self.host.clone()
     }
 
-    /// Overwrite every tensor from a snapshot; marks all dirty.
+    /// Overwrite every tensor from a snapshot; host becomes authoritative.
     pub fn restore(&mut self, snap: &[Tensor]) {
         assert_eq!(snap.len(), self.host.len());
         for (i, t) in snap.iter().enumerate() {
             self.host[i] = t.clone();
-            self.dirty[i] = true;
+            self.state[i] = SyncState::HostAhead;
             self.device[i] = None;
         }
     }
 
-    /// Overwrite tensor `i` from a flat f32 slice (program outputs).
+    /// Overwrite tensor `i` from a flat f32 slice; host becomes
+    /// authoritative (safe from any state — the whole tensor is replaced).
     pub fn set_flat(&mut self, i: usize, data: &[f32]) {
         debug_assert_eq!(self.host[i].len(), data.len());
         self.host[i].data.copy_from_slice(data);
-        self.dirty[i] = true;
+        self.state[i] = SyncState::HostAhead;
         self.device[i] = None;
     }
 
     /// In-place axpy on every tensor: `self += alpha * delta` — the FF
     /// simulated step `W_t + τΔ_W` applies this with alpha=1 per τ.
+    /// Read-modify-write: requires the host view to be fresh.
     pub fn axpy(&mut self, alpha: f32, delta: &[Tensor]) {
+        self.assert_host_fresh("axpy()");
         assert_eq!(delta.len(), self.host.len());
         for (i, d) in delta.iter().enumerate() {
             self.host[i].axpy(alpha, d);
-            self.dirty[i] = true;
+            self.state[i] = SyncState::HostAhead;
             self.device[i] = None;
         }
     }
 
-    /// Ensure device buffers exist for all tensors; uploads only dirty ones.
+    /// Ensure device buffers exist for all tensors; uploads only host-ahead
+    /// (or never-uploaded) ones. `DeviceAhead` buffers are reused as-is —
+    /// steady-state optimizer steps perform zero uploads here.
     pub fn device_buffers(&mut self) -> Result<Vec<&xla::PjRtBuffer>> {
         for i in 0..self.host.len() {
-            if self.dirty[i] || self.device[i].is_none() {
+            let stale = self.state[i] == SyncState::HostAhead || self.device[i].is_none();
+            if stale {
+                debug_assert_ne!(
+                    self.state[i],
+                    SyncState::DeviceAhead,
+                    "device-ahead tensor lost its buffer"
+                );
                 self.device[i] = Some(self.rt.upload_tensor(&self.host[i])?);
-                self.dirty[i] = false;
+                self.state[i] = SyncState::InSync;
                 self.uploads.set(self.uploads.get() + 1);
             }
         }
         Ok(self.device.iter().map(|b| b.as_ref().unwrap()).collect())
     }
 
-    /// Total device uploads performed (perf counter; see EXPERIMENTS §Perf).
+    /// Install a program output buffer as tensor `i`'s authoritative value
+    /// (`DeviceAhead`). No host copy is made; the host view goes stale
+    /// until [`ParamSet::sync_host`].
+    pub fn adopt_device(&mut self, i: usize, buf: xla::PjRtBuffer) {
+        assert!(i < self.host.len(), "adopt_device: no param #{i}");
+        self.device[i] = Some(buf);
+        self.state[i] = SyncState::DeviceAhead;
+    }
+
+    /// Adopt the next `len()` buffers of a raw program-output stream as
+    /// this set's device state, in spec order — the single place that
+    /// encodes the `[.., tr.., m.., v..]` output-layout walk: callers
+    /// chain `tr.adopt_all(&mut outs)?; m.adopt_all(&mut outs)?; …`.
+    pub fn adopt_all(
+        &mut self,
+        outs: &mut impl Iterator<Item = xla::PjRtBuffer>,
+    ) -> Result<()> {
+        for i in 0..self.host.len() {
+            let buf = outs.next().ok_or_else(|| {
+                anyhow!("adopt_all: raw output stream exhausted at param '{}'", self.names[i])
+            })?;
+            self.adopt_device(i, buf);
+        }
+        Ok(())
+    }
+
+    /// Download every `DeviceAhead` tensor into its host view (→ `InSync`).
+    /// No-op for sets that are already host-fresh; each device-side step is
+    /// paid for by at most one download per tensor on first host access.
+    pub fn sync_host(&mut self) -> Result<()> {
+        for i in 0..self.host.len() {
+            if self.state[i] != SyncState::DeviceAhead {
+                continue;
+            }
+            let buf = self.device[i]
+                .as_ref()
+                .expect("device-ahead tensor without a buffer");
+            let v = self.rt.download_f32(buf)?;
+            if v.len() != self.host[i].len() {
+                bail!(
+                    "param '{}': device buffer has {} elems, host expects {}",
+                    self.names[i],
+                    v.len(),
+                    self.host[i].len()
+                );
+            }
+            self.host[i].data.copy_from_slice(&v);
+            self.state[i] = SyncState::InSync;
+            self.downloads.set(self.downloads.get() + 1);
+        }
+        Ok(())
+    }
+
+    /// Total device uploads performed (perf counter; see runtime §Perf).
     pub fn upload_count(&self) -> u64 {
         self.uploads.get()
     }
 
+    /// Total device→host downloads performed by `sync_host`.
+    pub fn download_count(&self) -> u64 {
+        self.downloads.get()
+    }
+
     /// L2 norm over the whole set (‖W_FF − W_0‖ probes, Fig 5 axes).
     pub fn norm(&self) -> f64 {
+        self.assert_host_fresh("norm()");
         crate::model::tensor::list_norm(&self.host)
     }
 }
@@ -154,7 +285,7 @@ impl ParamSet {
 #[cfg(test)]
 mod tests {
     //! Device-dependent behaviour is covered by rust/tests/runtime_roundtrip
-    //! (requires artifacts); here we test the host-side bookkeeping via a
+    //! (requires artifacts); here we test the sync-state bookkeeping via a
     //! real CPU client, which is cheap to create.
     use super::*;
     use std::collections::BTreeMap;
@@ -220,5 +351,98 @@ mod tests {
         let z = ParamSet::zeros_like(&rt, &ps);
         assert_eq!(z.numel(), ps.numel());
         assert!(z.tensor("a").unwrap().data.iter().all(|v| *v == 0.0));
+    }
+
+    // -- sync-state machine ---------------------------------------------------
+
+    #[test]
+    fn device_ahead_host_read_downloads_exactly_once() {
+        let (rt, mut ps) = mk();
+        ps.device_buffers().unwrap(); // both InSync
+        let buf = rt.upload_f32(&[9., 8., 7., 6.], &[2, 2]).unwrap();
+        ps.adopt_device(0, buf);
+        assert!(!ps.host_in_sync());
+        assert_eq!(ps.download_count(), 0);
+        ps.sync_host().unwrap(); // first host access: one download
+        assert_eq!(ps.download_count(), 1);
+        assert!(ps.host_in_sync());
+        assert_eq!(ps.tensor("a").unwrap().data, vec![9., 8., 7., 6.]);
+        ps.sync_host().unwrap(); // already in sync: no second download
+        assert_eq!(ps.download_count(), 1);
+    }
+
+    #[test]
+    fn adopted_buffer_is_reused_without_reupload() {
+        let (rt, mut ps) = mk();
+        ps.device_buffers().unwrap();
+        let before = ps.upload_count();
+        let buf = rt.upload_f32(&[0.5; 4], &[2, 2]).unwrap();
+        ps.adopt_device(0, buf);
+        // device read straight after adoption: the adopted buffer serves it
+        ps.device_buffers().unwrap();
+        assert_eq!(ps.upload_count(), before);
+        // and host sync afterwards still leaves the buffer reusable
+        ps.sync_host().unwrap();
+        ps.device_buffers().unwrap();
+        assert_eq!(ps.upload_count(), before);
+    }
+
+    #[test]
+    fn host_axpy_then_device_read_uploads_exactly_once_per_tensor() {
+        let (_rt, mut ps) = mk();
+        ps.device_buffers().unwrap();
+        let before = ps.upload_count();
+        let delta = vec![Tensor::ones(&[2, 2]), Tensor::ones(&[3])];
+        ps.axpy(1.0, &delta); // host write: both tensors go HostAhead
+        ps.device_buffers().unwrap();
+        assert_eq!(ps.upload_count(), before + 2);
+        ps.device_buffers().unwrap(); // clean again
+        assert_eq!(ps.upload_count(), before + 2);
+    }
+
+    #[test]
+    fn adopt_all_walks_spec_order_and_detects_exhaustion() {
+        let (rt, mut ps) = mk();
+        let bufs = vec![
+            rt.upload_f32(&[9.; 4], &[2, 2]).unwrap(),
+            rt.upload_f32(&[8.; 3], &[3]).unwrap(),
+        ];
+        let mut it = bufs.into_iter();
+        ps.adopt_all(&mut it).unwrap();
+        ps.sync_host().unwrap();
+        assert_eq!(ps.tensor("a").unwrap().data, vec![9.; 4]);
+        assert_eq!(ps.tensor("b").unwrap().data, vec![8.; 3]);
+        // an exhausted stream is a loud error naming the missing param
+        let err = ps.adopt_all(&mut std::iter::empty()).unwrap_err();
+        assert!(format!("{err}").contains("exhausted"));
+    }
+
+    #[test]
+    fn set_flat_overwrite_is_legal_from_device_ahead() {
+        let (rt, mut ps) = mk();
+        let buf = rt.upload_f32(&[0.; 4], &[2, 2]).unwrap();
+        ps.adopt_device(0, buf);
+        ps.set_flat(0, &[1., 1., 1., 1.]); // full overwrite: no stale read
+        assert!(ps.host_in_sync());
+        assert_eq!(ps.tensor("a").unwrap().data, vec![1., 1., 1., 1.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "device-ahead")]
+    fn host_read_of_device_ahead_panics() {
+        let (rt, mut ps) = mk();
+        let buf = rt.upload_f32(&[0.; 4], &[2, 2]).unwrap();
+        ps.adopt_device(0, buf);
+        let _ = ps.tensors();
+    }
+
+    #[test]
+    #[should_panic(expected = "device-ahead")]
+    fn host_axpy_of_device_ahead_panics() {
+        let (rt, mut ps) = mk();
+        let buf = rt.upload_f32(&[0.; 4], &[2, 2]).unwrap();
+        ps.adopt_device(0, buf);
+        let delta = vec![Tensor::ones(&[2, 2]), Tensor::ones(&[3])];
+        ps.axpy(1.0, &delta);
     }
 }

@@ -1,0 +1,205 @@
+//! Cached device-side evaluation inputs.
+//!
+//! The FF line search calls `eval_val()` at every probed τ, and the
+//! TargetLoss stop rule evaluates the test set on a fixed cadence — but the
+//! underlying batches never change within a run. [`EvalCache`] uploads each
+//! batch's tokens/targets/mask device buffers **once** and reuses them
+//! across every subsequent probe, turning the hottest upload site of an FF
+//! stage into zero-upload steady state (only the loss scalar crosses the
+//! host↔device boundary per probe).
+//!
+//! [`ExampleScratch`] is the companion for per-example QA scoring: the eval
+//! program wants a full `[eval_batch, seq_len]` input, so a single example
+//! is replicated `b` times with a zero mask on every padding row. The
+//! scratch owns those replicated rows and is refilled in place per example
+//! instead of reallocating three fresh `Vec`s per call.
+
+use anyhow::Result;
+
+use crate::data::batcher::Batch;
+use crate::data::corpus::Example;
+use crate::runtime::Runtime;
+
+/// One eval batch resident on the device, plus the host-side scalars the
+/// loss aggregation needs (mask weight, FLOPs token count).
+pub struct EvalChunk {
+    pub tokens: xla::PjRtBuffer,
+    pub targets: xla::PjRtBuffer,
+    pub mask: xla::PjRtBuffer,
+    /// Σ mask — the chunk's weight in the token-weighted mean loss.
+    pub mask_sum: f32,
+    /// b·t positions the forward pass computes over (FLOPs charging).
+    pub total_tokens: usize,
+}
+
+/// Device-resident copy of a fixed eval split (val or test), built once per
+/// trainer and reused across all probes.
+pub struct EvalCache {
+    chunks: Vec<EvalChunk>,
+}
+
+impl EvalCache {
+    /// Upload every batch of a split. `batches` is the `(batch, real_rows)`
+    /// list produced by `data::batcher::eval_batches`. Batches whose mask
+    /// is entirely zero contribute nothing to the weighted mean and are
+    /// skipped outright — they never cross the host↔device boundary.
+    pub fn build(rt: &Runtime, batches: &[(Batch, usize)]) -> Result<EvalCache> {
+        let mut chunks = Vec::with_capacity(batches.len());
+        for (batch, _real) in batches {
+            let mask_sum: f32 = batch.mask.iter().sum();
+            if mask_sum == 0.0 {
+                continue;
+            }
+            chunks.push(EvalChunk {
+                tokens: rt.upload_i32(&batch.tokens, &[batch.b, batch.t])?,
+                targets: rt.upload_i32(&batch.targets, &[batch.b, batch.t])?,
+                mask: rt.upload_f32(&batch.mask, &[batch.b, batch.t])?,
+                mask_sum,
+                total_tokens: batch.total_tokens(),
+            });
+        }
+        Ok(EvalCache { chunks })
+    }
+
+    pub fn chunks(&self) -> &[EvalChunk] {
+        &self.chunks
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+}
+
+/// Reusable host staging buffers for single-example eval (QA scoring).
+/// Rows 1..b of the mask are zeroed once at construction and never written
+/// again; `fill` only rewrites the replicated token/target rows and the
+/// first mask row.
+pub struct ExampleScratch {
+    b: usize,
+    t: usize,
+    tokens: Vec<i32>,
+    targets: Vec<i32>,
+    mask: Vec<f32>,
+}
+
+impl ExampleScratch {
+    pub fn new(b: usize, t: usize) -> ExampleScratch {
+        ExampleScratch {
+            b,
+            t,
+            tokens: vec![0; b * t],
+            targets: vec![0; b * t],
+            mask: vec![0.0; b * t],
+        }
+    }
+
+    /// Stage `ex` into the batch shape: every row carries the example's
+    /// tokens/targets (valid ids everywhere), only row 0 carries its mask,
+    /// so the in-graph masked mean equals the single example's loss.
+    pub fn fill(&mut self, ex: &Example) {
+        let t = self.t;
+        debug_assert_eq!(ex.mask.len(), t, "example seq_len mismatch");
+        for r in 0..self.b {
+            self.tokens[r * t..(r + 1) * t].copy_from_slice(ex.tokens());
+            self.targets[r * t..(r + 1) * t].copy_from_slice(ex.targets());
+        }
+        self.mask[..t].copy_from_slice(&ex.mask);
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.b, self.t)
+    }
+
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn targets(&self) -> &[i32] {
+        &self.targets
+    }
+
+    pub fn mask(&self) -> &[f32] {
+        &self.mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batcher::eval_batches;
+    use crate::data::corpus::make_dataset;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn cache_uploads_each_batch_exactly_once() {
+        let rt = Runtime::cpu().unwrap();
+        let ds = make_dataset("medical", 512, 64, 64, 8, 4, 1).unwrap();
+        let batches = eval_batches(&ds.val, 8);
+        assert!(batches.iter().all(|(b, _)| b.mask.iter().sum::<f32>() > 0.0));
+        let before = rt.stats.snapshot();
+        let cache = EvalCache::build(&rt, &batches).unwrap();
+        let d = rt.stats.snapshot().since(&before);
+        assert_eq!(cache.len(), batches.len());
+        // three uploads per chunk (tokens, targets, mask), and no more
+        assert_eq!(d.uploads, 3 * batches.len() as u64);
+        let expect_bytes: u64 = batches
+            .iter()
+            .map(|(b, _)| (b.tokens.len() + b.targets.len() + b.mask.len()) as u64 * 4)
+            .sum();
+        assert_eq!(d.uploaded_bytes, expect_bytes);
+        // mask weights match the host batches
+        for (chunk, (batch, _)) in cache.chunks().iter().zip(&batches) {
+            let want: f32 = batch.mask.iter().sum();
+            assert_eq!(chunk.mask_sum, want);
+            assert_eq!(chunk.total_tokens, batch.total_tokens());
+        }
+    }
+
+    #[test]
+    fn all_padding_batches_are_never_uploaded() {
+        let rt = Runtime::cpu().unwrap();
+        let dead = Batch {
+            b: 2,
+            t: 4,
+            tokens: vec![0; 8],
+            targets: vec![0; 8],
+            mask: vec![0.0; 8],
+        };
+        let live = Batch {
+            b: 2,
+            t: 4,
+            tokens: vec![1; 8],
+            targets: vec![1; 8],
+            mask: vec![1.0; 8],
+        };
+        let before = rt.stats.snapshot();
+        let cache = EvalCache::build(&rt, &[(dead, 0), (live, 2)]).unwrap();
+        let d = rt.stats.snapshot().since(&before);
+        assert_eq!(cache.len(), 1, "zero-mask chunk must be dropped at build");
+        assert_eq!(d.uploads, 3);
+    }
+
+    #[test]
+    fn scratch_replicates_rows_and_masks_only_row_zero() {
+        let ds = make_dataset("medical", 512, 64, 64, 8, 4, 1).unwrap();
+        let ex = &ds.test[0];
+        let (b, t) = (4, ex.mask.len());
+        let mut s = ExampleScratch::new(b, t);
+        s.fill(ex);
+        for r in 0..b {
+            assert_eq!(&s.tokens()[r * t..(r + 1) * t], ex.tokens());
+            assert_eq!(&s.targets()[r * t..(r + 1) * t], ex.targets());
+        }
+        assert_eq!(&s.mask()[..t], &ex.mask[..]);
+        assert!(s.mask()[t..].iter().all(|&m| m == 0.0));
+        // refill with a different example reuses the same buffers
+        let ex2 = &ds.test[1];
+        s.fill(ex2);
+        assert_eq!(&s.tokens()[..t], ex2.tokens());
+        assert!(s.mask()[t..].iter().all(|&m| m == 0.0));
+    }
+}

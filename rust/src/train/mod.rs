@@ -2,7 +2,9 @@
 //! pretraining substrate that manufactures W0 for finetuning experiments.
 
 pub mod checkpoint;
+pub mod eval_cache;
 pub mod pretrain;
 pub mod trainer;
 
+pub use eval_cache::{EvalCache, ExampleScratch};
 pub use trainer::{RunSummary, StopRule, Trainer};

@@ -69,7 +69,7 @@ pub fn ensure_pretrained(
         summary.final_test_loss,
         summary.adam_steps
     );
-    let params = t.all_params();
+    let params = t.all_params()?;
     save_params(&path, &params)?;
     Ok(params)
 }

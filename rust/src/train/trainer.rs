@@ -5,6 +5,19 @@
 //! One `Trainer` = one run (one artifact, one task, one FfConfig). The
 //! experiment harnesses construct pairs of trainers (baseline vs FF) over
 //! identical data and compare FLOPs/time to matched test loss.
+//!
+//! # Data flow: device buffers are the source of truth
+//!
+//! During training the authoritative parameter/optimizer state lives on
+//! the device. Each Adam step retains the `adam_apply` outputs as raw
+//! device buffers (`ParamSet::adopt_device`) and feeds them straight back
+//! in on the next step — trainable, m, and v are **never re-uploaded** in
+//! steady state, and m/v are never downloaded at all. Host tensors are
+//! synchronized lazily: the only per-step download is the trainable set
+//! (needed for Δ_W = W_t − W_{t−1}), pulled by the `DeltaTracker` sync
+//! API. Eval batches are uploaded once into an `EvalCache` and reused by
+//! every FF probe and test eval. All remaining traffic is metered in
+//! `Runtime::stats` and surfaced per run in `RunSummary::transfers`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -25,7 +38,8 @@ use crate::model::init::{init_params, init_with_base};
 use crate::model::tensor::{list_norm, Tensor};
 use crate::optim::accum::GradAccumulator;
 use crate::optim::delta::DeltaTracker;
-use crate::runtime::{Artifact, ParamSet, Program, Runtime};
+use crate::runtime::{Artifact, ParamSet, Program, Runtime, TransferSnapshot};
+use crate::train::eval_cache::{EvalCache, ExampleScratch};
 
 /// When to stop a training run.
 #[derive(Debug, Clone)]
@@ -48,6 +62,9 @@ pub struct RunSummary {
     pub flops: FlopsCounter,
     pub train_seconds: f64,
     pub reached_target: bool,
+    /// Host↔device traffic attributable to this trainer since construction
+    /// (uploads/downloads, calls and bytes) — see runtime §Perf counters.
+    pub transfers: TransferSnapshot,
 }
 
 pub struct Trainer {
@@ -65,10 +82,17 @@ pub struct Trainer {
     pipeline: Pipeline,
     val_batches: Vec<(Batch, usize)>,
     test_batches: Vec<(Batch, usize)>,
+    // device-resident eval inputs (built lazily on first eval of a split)
+    val_cache: Option<EvalCache>,
+    test_cache: Option<EvalCache>,
+    qa_scratch: Option<ExampleScratch>,
     // programs
     grad_prog: Rc<Program>,
     adam_prog: Rc<Program>,
     eval_prog: Rc<Program>,
+    /// Cached learning-rate scalar buffer, keyed by the lr value it holds
+    /// so mid-run mutation of `cfg.lr` (lr sweeps) re-uploads.
+    lr_buf: Option<(f32, xla::PjRtBuffer)>,
     // ff machinery
     pub ffc: FfController,
     delta: DeltaTracker,
@@ -83,6 +107,7 @@ pub struct Trainer {
     pub flops: FlopsCounter,
     pub timer: TrainTimer,
     pub log: RunLog,
+    transfers_at_start: TransferSnapshot,
     /// Initial trainable snapshot (W0 side of Fig 5 / distance probes).
     pub w0_trainables: Vec<Tensor>,
 }
@@ -152,6 +177,7 @@ impl Trainer {
         let fm = FlopsModel::for_artifact(ac);
         let ffc = FfController::new(cfg.ff.clone());
         let w0_trainables = tr.snapshot();
+        let transfers_at_start = rt.stats.snapshot();
 
         Ok(Trainer {
             cfg,
@@ -166,9 +192,13 @@ impl Trainer {
             pipeline,
             val_batches,
             test_batches,
+            val_cache: None,
+            test_cache: None,
+            qa_scratch: None,
             grad_prog,
             adam_prog,
             eval_prog,
+            lr_buf: None,
             ffc,
             delta: DeltaTracker::new(),
             last_grads: Vec::new(),
@@ -178,6 +208,7 @@ impl Trainer {
             flops: FlopsCounter::default(),
             timer: TrainTimer::start(),
             log: RunLog::default(),
+            transfers_at_start,
             w0_trainables,
         })
     }
@@ -191,16 +222,39 @@ impl Trainer {
         self.adam_steps + self.log.n_ff()
     }
 
+    /// Host↔device traffic attributable to this trainer so far.
+    pub fn transfers(&self) -> TransferSnapshot {
+        self.rt.stats.snapshot().since(&self.transfers_at_start)
+    }
+
+    /// (uploads, downloads) summed over the trainable/m/v ParamSets. With
+    /// device-resident state the upload count goes flat after the first
+    /// Adam step and downloads grow only by |trainable| per step (Δ_W).
+    pub fn state_transfer_counts(&self) -> (u64, u64) {
+        (
+            self.tr.upload_count() + self.m.upload_count() + self.v.upload_count(),
+            self.tr.download_count() + self.m.download_count() + self.v.download_count(),
+        )
+    }
+
     // ---------------------------------------------------------------------
     // Core steps
     // ---------------------------------------------------------------------
 
     /// One Adam optimizer step over a full global batch (micro-batch
-    /// gradient accumulation → one `adam_apply`).
+    /// gradient accumulation → one `adam_apply`, whose outputs stay on the
+    /// device as the next step's inputs).
     pub fn sgd_step(&mut self) -> Result<f32> {
         let global = self.pipeline.next();
         let n = self.tr.len();
-        let mut acc = GradAccumulator::zeros_like(self.tr.tensors());
+        // Δ_W is only consumed by FF (ff_stage / ff_probe_fixed). Baseline
+        // runs — and tail steps after the convergence rule permanently
+        // disables FF — skip the tracking, so their steady-state steps
+        // move *zero* parameter/optimizer bytes in either direction.
+        let track_delta = self.cfg.ff.enabled && !self.ffc.is_permanently_off();
+        let shapes: Vec<Vec<usize>> =
+            (0..n).map(|i| self.tr.shape(i).to_vec()).collect();
+        let mut acc = GradAccumulator::new(&shapes);
         if self.keep_micro_grads {
             self.last_micro_grads.clear();
         }
@@ -216,6 +270,8 @@ impl Trainer {
             inputs.push(&tok);
             inputs.push(&tgt);
             inputs.push(&msk);
+            // Gradients are consumed host-side (accumulation), so the
+            // decoded path is the right one here.
             let out = self.grad_prog.execute_buffers(&inputs)?;
             let loss = out.values[0][0];
             let grads: Vec<&[f32]> =
@@ -225,10 +281,7 @@ impl Trainer {
                 self.last_micro_grads.push(
                     (0..n)
                         .map(|i| {
-                            Tensor::from_vec(
-                                &self.tr.tensors()[i].shape,
-                                out.values[1 + i].clone(),
-                            )
+                            Tensor::from_vec(&shapes[i], out.values[1 + i].clone())
                         })
                         .collect(),
                 );
@@ -236,10 +289,16 @@ impl Trainer {
         }
         let (mean_grads, mean_loss) = acc.take_mean();
 
-        // Adam apply on device.
-        self.delta.snapshot_before(self.tr.tensors());
+        // Adam apply on device. W_{t−1} comes from the host view, which the
+        // sync API pulls fresh on demand.
+        if track_delta {
+            self.delta.begin_step(&mut self.tr)?;
+        }
         let step_buf = self.rt.upload_scalar(self.adam_steps as f32)?;
-        let lr_buf = self.rt.upload_scalar(self.cfg.lr)?;
+        let lr = self.cfg.lr;
+        if self.lr_buf.as_ref().map(|(v, _)| *v) != Some(lr) {
+            self.lr_buf = Some((lr, self.rt.upload_scalar(lr)?));
+        }
         let g_bufs: Vec<xla::PjRtBuffer> = mean_grads
             .iter()
             .map(|g| self.rt.upload_tensor(g))
@@ -251,14 +310,25 @@ impl Trainer {
         inputs.extend(self.v.device_buffers()?);
         inputs.push(&step_buf);
         inputs.extend(g_bufs.iter());
-        inputs.push(&lr_buf);
-        let out = self.adam_prog.execute_buffers(&inputs)?;
-        for i in 0..n {
-            self.tr.set_flat(i, &out.values[i]);
-            self.m.set_flat(i, &out.values[n + i]);
-            self.v.set_flat(i, &out.values[2 * n + i]);
+        inputs.push(&self.lr_buf.as_ref().unwrap().1);
+        let outs = self.adam_prog.execute_raw(&inputs)?;
+        drop(inputs);
+        // Retain the updated state as raw device buffers: nothing is
+        // downloaded here, and nothing will be re-uploaded next step.
+        let mut outs = outs.into_iter();
+        self.tr.adopt_all(&mut outs)?;
+        self.m.adopt_all(&mut outs)?;
+        self.v.adopt_all(&mut outs)?;
+        // Δ_W = W_t − W_{t−1} needs W_t host-side: lazily sync just the
+        // trainables (m/v stay device-only for the life of the run). With
+        // FF off even the trainables stay device-resident until something
+        // (checkpointing, analysis) actually asks for them.
+        if track_delta {
+            self.delta.end_step(&mut self.tr)?;
+        } else {
+            // a Δ from before FF shut off must not be served later
+            self.delta.clear();
         }
-        self.delta.compute_after(self.tr.tensors());
         self.last_grads = mean_grads;
         self.adam_steps += 1;
         self.ffc.on_sgd_step();
@@ -273,41 +343,56 @@ impl Trainer {
         Ok(mean_loss)
     }
 
-    /// Evaluate mask-weighted mean loss over a batch list (token-weighted
-    /// across chunks, matching the in-graph masked mean exactly).
+    /// Evaluate mask-weighted mean loss over a cached batch list
+    /// (token-weighted across chunks, matching the in-graph masked mean
+    /// exactly). The device buffers for each split upload once, on the
+    /// first call, and are reused by every later probe.
     fn eval_batches_loss(
         &mut self,
         which: EvalSet,
         charge_ff: bool,
     ) -> Result<f32> {
-        let batches: &[(Batch, usize)] = match which {
-            EvalSet::Val => &self.val_batches,
-            EvalSet::Test => &self.test_batches,
+        // Detach the cache from `self` so iterating it doesn't pin a borrow
+        // across the &mut self program calls; re-attached below.
+        let cache = match which {
+            EvalSet::Val => self.val_cache.take(),
+            EvalSet::Test => self.test_cache.take(),
         };
+        let cache = match cache {
+            Some(c) => c,
+            None => {
+                let batches = match which {
+                    EvalSet::Val => &self.val_batches,
+                    EvalSet::Test => &self.test_batches,
+                };
+                EvalCache::build(&self.rt, batches)?
+            }
+        };
+        let result = self.eval_cached_loss(&cache, charge_ff);
+        match which {
+            EvalSet::Val => self.val_cache = Some(cache),
+            EvalSet::Test => self.test_cache = Some(cache),
+        }
+        result
+    }
+
+    fn eval_cached_loss(&mut self, cache: &EvalCache, charge_ff: bool) -> Result<f32> {
         let mut total = 0.0f64;
         let mut weight = 0.0f64;
         let mut tokens = 0usize;
-        // Split borrows: copy out the data we need before &mut self calls.
-        let chunks: Vec<Batch> = batches.iter().map(|(b, _)| b.clone()).collect();
-        for batch in &chunks {
-            let mask_sum: f32 = batch.mask.iter().sum();
-            if mask_sum == 0.0 {
-                continue;
-            }
-            let tok = self.rt.upload_i32(&batch.tokens, &[batch.b, batch.t])?;
-            let tgt = self.rt.upload_i32(&batch.targets, &[batch.b, batch.t])?;
-            let msk = self.rt.upload_f32(&batch.mask, &[batch.b, batch.t])?;
+        for chunk in cache.chunks() {
+            debug_assert!(chunk.mask_sum > 0.0, "EvalCache::build drops zero-mask chunks");
             let mut inputs: Vec<&xla::PjRtBuffer> =
                 Vec::with_capacity(self.eval_prog.spec.inputs.len());
             inputs.extend(self.tr.device_buffers()?);
             inputs.extend(self.fr.device_buffers()?);
-            inputs.push(&tok);
-            inputs.push(&tgt);
-            inputs.push(&msk);
+            inputs.push(&chunk.tokens);
+            inputs.push(&chunk.targets);
+            inputs.push(&chunk.mask);
             let out = self.eval_prog.execute_buffers(&inputs)?;
-            total += out.values[0][0] as f64 * mask_sum as f64;
-            weight += mask_sum as f64;
-            tokens += batch.total_tokens();
+            total += out.values[0][0] as f64 * chunk.mask_sum as f64;
+            weight += chunk.mask_sum as f64;
+            tokens += chunk.total_tokens;
         }
         if charge_ff {
             self.flops.ff_probe(&self.fm, tokens);
@@ -340,6 +425,13 @@ impl Trainer {
     pub fn ff_stage(&mut self) -> Result<FfStageStats> {
         let delta = match self.delta.delta() {
             Some(d) => d.to_vec(),
+            None if !self.cfg.ff.enabled => bail!(
+                "ff_stage on an FF-disabled trainer: Δ_W tracking is gated \
+                 on cfg.ff.enabled (baseline steps stay device-resident)"
+            ),
+            None if self.ffc.is_permanently_off() => bail!(
+                "ff_stage after the convergence rule permanently disabled FF"
+            ),
             None => bail!("ff_stage before any optimizer step"),
         };
         let grad_norm = list_norm(&self.last_grads);
@@ -360,6 +452,13 @@ impl Trainer {
     pub fn ff_probe_fixed(&mut self, n_steps: usize) -> Result<Vec<f32>> {
         let delta = match self.delta.delta() {
             Some(d) => d.to_vec(),
+            None if !self.cfg.ff.enabled => bail!(
+                "ff_probe on an FF-disabled trainer: Δ_W tracking is gated \
+                 on cfg.ff.enabled (baseline steps stay device-resident)"
+            ),
+            None if self.ffc.is_permanently_off() => bail!(
+                "ff_probe after the convergence rule permanently disabled FF"
+            ),
             None => bail!("ff_probe before any optimizer step"),
         };
         let snap = self.tr.snapshot();
@@ -466,6 +565,7 @@ impl Trainer {
             flops: self.flops,
             train_seconds: self.timer.elapsed(),
             reached_target: reached,
+            transfers: self.transfers(),
         })
     }
 
@@ -476,6 +576,7 @@ impl Trainer {
     /// Evaluate test loss at arbitrary trainable values (Fig 5 plane scan);
     /// restores the current trainables afterwards.
     pub fn eval_test_at(&mut self, trainables: &[Tensor]) -> Result<f32> {
+        self.tr.sync_host()?;
         let snap = self.tr.snapshot();
         self.tr.restore(trainables);
         let loss = self.eval_batches_loss(EvalSet::Test, false);
@@ -484,23 +585,18 @@ impl Trainer {
     }
 
     /// Loss of one example through the eval program (QA scoring). The
-    /// example is padded to the eval batch shape with zero-mask rows, so
-    /// the in-graph masked mean equals the single example's loss.
+    /// example is padded to the eval batch shape with zero-mask rows; the
+    /// replicated rows live in a per-trainer scratch that is refilled in
+    /// place, so scoring a benchmark allocates nothing per example.
     pub fn eval_example_loss(&mut self, ex: &crate::data::corpus::Example) -> Result<f32> {
         let man = &self.art.manifest;
         let (b, t) = (man.config.model.eval_batch, man.config.model.seq_len);
         anyhow::ensure!(ex.mask.len() == t, "example seq_len {} != model {}", ex.mask.len(), t);
-        let mut tokens = Vec::with_capacity(b * t);
-        let mut targets = Vec::with_capacity(b * t);
-        let mut mask = vec![0.0f32; b * t];
-        for _ in 0..b {
-            tokens.extend_from_slice(ex.tokens());
-            targets.extend_from_slice(ex.targets());
-        }
-        mask[..t].copy_from_slice(&ex.mask);
-        let tok = self.rt.upload_i32(&tokens, &[b, t])?;
-        let tgt = self.rt.upload_i32(&targets, &[b, t])?;
-        let msk = self.rt.upload_f32(&mask, &[b, t])?;
+        let scratch = self.qa_scratch.get_or_insert_with(|| ExampleScratch::new(b, t));
+        scratch.fill(ex);
+        let tok = self.rt.upload_i32(scratch.tokens(), &[b, t])?;
+        let tgt = self.rt.upload_i32(scratch.targets(), &[b, t])?;
+        let msk = self.rt.upload_f32(scratch.mask(), &[b, t])?;
         let mut inputs: Vec<&xla::PjRtBuffer> =
             Vec::with_capacity(self.eval_prog.spec.inputs.len());
         inputs.extend(self.tr.device_buffers()?);
@@ -513,19 +609,25 @@ impl Trainer {
         Ok(out.values[0][0])
     }
 
-    /// Current trainable snapshot (W_t).
-    pub fn trainables(&self) -> Vec<Tensor> {
-        self.tr.snapshot()
+    /// Current trainable snapshot (W_t), syncing any device-ahead state
+    /// first — the one download a baseline run ever pays for its params.
+    pub fn trainables(&mut self) -> Result<Vec<Tensor>> {
+        self.tr.sync_host()?;
+        Ok(self.tr.snapshot())
     }
 
     /// Apply `W += alpha·delta` on the live trainables (bench/probe hook —
     /// the same host axpy a FF simulated step performs).
-    pub fn tr_axpy_for_bench(&mut self, delta: &[Tensor], alpha: f32) {
+    pub fn tr_axpy_for_bench(&mut self, delta: &[Tensor], alpha: f32) -> Result<()> {
+        self.tr.sync_host()?;
         self.tr.axpy(alpha, delta);
+        Ok(())
     }
 
-    /// All current parameters by name (checkpointing).
-    pub fn all_params(&self) -> BTreeMap<String, Tensor> {
+    /// All current parameters by name (checkpointing). Syncs device-ahead
+    /// trainables first; frozen params are never device-written.
+    pub fn all_params(&mut self) -> Result<BTreeMap<String, Tensor>> {
+        self.tr.sync_host()?;
         let mut out = BTreeMap::new();
         for (name, t) in self.tr.names().iter().zip(self.tr.tensors()) {
             out.insert(name.clone(), t.clone());
@@ -533,7 +635,7 @@ impl Trainer {
         for (name, t) in self.fr.names().iter().zip(self.fr.tensors()) {
             out.insert(name.clone(), t.clone());
         }
-        out
+        Ok(out)
     }
 }
 

@@ -49,9 +49,9 @@ fn fixed_probe_is_convex_ish_and_restores_params() {
     for _ in 0..6 {
         t.sgd_step().unwrap();
     }
-    let before = t.trainables();
+    let before = t.trainables().unwrap();
     let losses = t.ff_probe_fixed(30).unwrap();
-    let after = t.trainables();
+    let after = t.trainables().unwrap();
     // probe must not move the weights
     for (a, b) in before.iter().zip(after.iter()) {
         assert_eq!(a.data, b.data);

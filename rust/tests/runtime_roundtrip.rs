@@ -237,6 +237,105 @@ fn grad_step_plus_adam_apply_matches_train_step() {
 }
 
 #[test]
+fn device_resident_train_steps_skip_reupload_and_download() {
+    // The tentpole contract: retain train_step outputs as raw device
+    // buffers, download only the loss scalar, and verify the param/m/v
+    // upload counters stay flat after the first step while loss still
+    // decreases.
+    let (rt, art) = load("ff-tiny_lora_r8");
+    let man = &art.manifest;
+    let vals = init_params(&man.config, 9);
+    let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals).unwrap();
+    let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals).unwrap();
+    let mut m = ParamSet::zeros_like(&rt, &tr);
+    let mut v = ParamSet::zeros_like(&rt, &tr);
+
+    let prog = art.program("train_step").unwrap();
+    let (b, t) = (man.config.model.micro_batch, man.config.model.seq_len);
+    let (tokens, targets, mask) = mk_batch(b, t, 512, 8);
+    let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+    let tgt = rt.upload_i32(&targets, &[b, t]).unwrap();
+    let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+    let lr = rt.upload_scalar(1e-2).unwrap();
+    let loss_i = prog.output_index("loss").unwrap();
+    assert_eq!(loss_i, 0, "train_step outputs are [loss, tr.., m.., v..]");
+
+    let n = tr.len();
+    let mut losses = Vec::new();
+    let mut uploads_after_first = 0;
+    for step in 0..6 {
+        let step_buf = rt.upload_scalar(step as f32).unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(m.device_buffers().unwrap());
+        inputs.extend(v.device_buffers().unwrap());
+        inputs.push(&step_buf);
+        inputs.extend(fr.device_buffers().unwrap());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        inputs.push(&lr);
+        let outs = prog.execute_raw(&inputs).unwrap();
+        drop(inputs);
+        // selective download: just the loss scalar crosses to the host
+        losses.push(prog.download_output(&outs[loss_i], loss_i).unwrap()[0]);
+        let mut it = outs.into_iter();
+        drop(it.next().unwrap()); // loss buffer, already decoded
+        tr.adopt_all(&mut it).unwrap();
+        m.adopt_all(&mut it).unwrap();
+        v.adopt_all(&mut it).unwrap();
+        if step == 0 {
+            uploads_after_first = tr.upload_count() + m.upload_count() + v.upload_count();
+        }
+    }
+    let uploads_final = tr.upload_count() + m.upload_count() + v.upload_count();
+    assert_eq!(
+        uploads_final, uploads_after_first,
+        "steady-state adam steps must not re-upload trainable/m/v"
+    );
+    assert_eq!(tr.download_count() + m.download_count() + v.download_count(), 0);
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+    // host views stay reachable on demand: one download per trainable
+    tr.sync_host().unwrap();
+    assert_eq!(tr.download_count(), n as u64);
+    assert!(tr.tensors().iter().all(|t| t.data.iter().all(|x| x.is_finite())));
+}
+
+#[test]
+fn decoded_and_raw_execution_agree() {
+    let (rt, art) = load("ff-tiny_lora_r8");
+    let man = &art.manifest;
+    let vals = init_params(&man.config, 13);
+    let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals).unwrap();
+    let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals).unwrap();
+    let prog = art.program("eval_loss").unwrap();
+    let (b, t) = (man.config.model.eval_batch, man.config.model.seq_len);
+    let (tokens, targets, mask) = mk_batch(b, t, 512, 21);
+    let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+    let tgt = rt.upload_i32(&targets, &[b, t]).unwrap();
+    let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+
+    let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+    inputs.extend(tr.device_buffers().unwrap());
+    inputs.extend(fr.device_buffers().unwrap());
+    inputs.push(&tok);
+    inputs.push(&tgt);
+    inputs.push(&msk);
+
+    let decoded = prog.execute_buffers(&inputs).unwrap().scalar("loss").unwrap();
+    let raw_bufs = prog.execute_raw(&inputs).unwrap();
+    let loss_i = prog.output_index("loss").unwrap();
+    let raw = prog.download_output(&raw_bufs[loss_i], loss_i).unwrap()[0];
+    assert!(
+        (decoded - raw).abs() < 1e-7,
+        "decoded {decoded} != raw {raw}"
+    );
+}
+
+#[test]
 fn wrong_arity_is_rejected() {
     let (_rt, art) = load("ff-tiny_lora_r8");
     let prog = art.program("eval_loss").unwrap();

@@ -108,6 +108,48 @@ fn trainer_logs_and_flops_are_consistent() {
 }
 
 #[test]
+fn device_residency_keeps_state_uploads_flat_and_eval_cached() {
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut t = Trainer::new(&rt, &root, tiny_cfg(true, 32), Some(&base)).unwrap();
+
+    // warm up: the first step uploads trainable/m/v once
+    t.sgd_step().unwrap();
+    t.sgd_step().unwrap();
+    let (ups0, downs0) = t.state_transfer_counts();
+    for _ in 0..3 {
+        t.sgd_step().unwrap();
+    }
+    let (ups1, downs1) = t.state_transfer_counts();
+    assert_eq!(
+        ups1, ups0,
+        "steady-state Adam steps re-uploaded param/optimizer state"
+    );
+    // lazy host sync downloads exactly the trainable set per step (Δ_W)
+    let n = t.tr.len() as u64;
+    assert_eq!(downs1 - downs0, 3 * n, "expected one Δ_W sync per step");
+
+    // eval buffers cache: after the first eval, repeated probes at fixed W
+    // perform zero uploads (only loss scalars come back)
+    t.eval_val().unwrap(); // builds the val cache
+    let tr0 = t.transfers();
+    let l1 = t.eval_val().unwrap();
+    let l2 = t.eval_val().unwrap();
+    let d = t.transfers().since(&tr0);
+    assert_eq!(
+        d.uploads, 0,
+        "repeated eval_val at fixed W must not upload anything: {d:?}"
+    );
+    assert!((l1 - l2).abs() < 1e-7, "eval_val not deterministic: {l1} vs {l2}");
+
+    // run summary surfaces the transfer accounting
+    let sum = t.run(&StopRule::MaxSteps(8)).unwrap();
+    assert!(sum.transfers.uploaded_bytes > 0);
+    assert!(sum.transfers.downloaded_bytes > 0);
+}
+
+#[test]
 fn convergence_rule_disables_ff_eventually() {
     let rt = Runtime::cpu().unwrap();
     let root = artifacts_root();
