@@ -24,6 +24,7 @@ import json
 import os
 import sys
 import time
+import warnings
 
 import jax
 
@@ -40,6 +41,12 @@ def to_hlo_text(lowered) -> str:
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
         str(mlir_mod), use_tuple_args=False, return_tuple=True)
     return comp.as_hlo_text()
+
+
+def alias_count(hlo_text: str) -> int:
+    """Entries in the module's ``input_output_alias`` map (one
+    ``may-alias``/``must-alias`` marker per aliased output)."""
+    return hlo_text.count("may-alias") + hlo_text.count("must-alias")
 
 
 def manifest_for(ac: ArtifactConfig) -> dict:
@@ -85,19 +92,50 @@ def emit_artifact(ac: ArtifactConfig, out_dir: str, force: bool = False) -> dict
     for program in PROGRAMS:
         hlo_path = os.path.join(adir, f"{program}.hlo.txt")
         ins, outs = model.program_io(ac, program)
+        donated = model.donated_input_slots(ac, program)
         manifest["programs"][program] = {
             "file": f"{program}.hlo.txt",
             "inputs": ins,
             "outputs": outs,
+            # Flattened input-slot indices the executable donates. The rust
+            # runtime rejects borrowed-input execution of donating programs
+            # and requires these slots to be passed by value.
+            "donated_inputs": donated,
         }
+        # Every donated slot with a matching output must survive as an
+        # alias map entry; adam_apply donates n more inputs (the grads)
+        # than it has outputs, so its expectation caps at the output count.
+        expect_aliases = min(len(donated), len(outs))
         if (not force and os.path.exists(hlo_path)
                 and os.path.getmtime(hlo_path) >= src_mtime):
-            print(f"  [cached] {ac.key}/{program}")
-            continue
+            # The manifest above claims `donated` for this executable —
+            # trust the cache only if the HLO on disk actually aliases what
+            # the claim implies (guards against artifacts copied/touched
+            # across checkouts with a different PROGRAM_DONATE).
+            with open(hlo_path) as f:
+                cached_aliases = alias_count(f.read())
+            if cached_aliases == expect_aliases:
+                print(f"  [cached] {ac.key}/{program}")
+                continue
+            print(f"  [stale-alias] {ac.key}/{program}: HLO has "
+                  f"{cached_aliases} aliases, manifest implies "
+                  f"{expect_aliases} — re-lowering")
         t0 = time.time()
         fn, args = model.PROGRAM_FACTORIES[program](ac)
-        lowered = jax.jit(fn).lower(*args)
+        donate = model.PROGRAM_DONATE.get(program, ())
+        with warnings.catch_warnings():
+            if len(donated) > len(outs):
+                # adam_apply only: more donated inputs (t/m/v/g) than
+                # outputs, so the unused-donation warning is expected. For
+                # every other program that warning is a real lowering bug
+                # and stays fatal via the alias-count assert below.
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
         text = to_hlo_text(lowered)
+        assert alias_count(text) == expect_aliases, (
+            ac.key, program, alias_count(text), expect_aliases,
+            "donation did not fully survive HLO-text lowering")
         # Cross-check: the flattened lowering arity must match the manifest.
         n_in = sum(len(a) if isinstance(a, (list, tuple)) else 1 for a in args)
         assert n_in == len(ins), (ac.key, program, n_in, len(ins))

@@ -107,7 +107,8 @@ class ArtifactConfig:
         return self.lora_alpha / float(self.lora_rank)
 
 
-PROGRAMS = ("train_step", "grad_step", "adam_apply", "eval_loss")
+PROGRAMS = ("train_step", "grad_step", "grad_accum", "grad_finalize",
+            "adam_apply", "eval_loss")
 
 
 def _ac(model: str, mode: str, rank: int = 8, pallas: bool = False) -> ArtifactConfig:

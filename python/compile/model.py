@@ -2,13 +2,28 @@
 
 One function family per artifact config (see ``configs.ArtifactConfig``):
 
-  * ``train_step``  — fused loss + grads + Adam update (fast path when the
+  * ``train_step``    — fused loss + grads + Adam update (fast path when the
     micro batch equals the global batch),
-  * ``grad_step``   — loss + grads only (gradient-accumulation path; also
+  * ``grad_step``     — loss + grads only (gradient-accumulation path; also
     the probe used by the Fig 6/12/13 analyses),
-  * ``adam_apply``  — Adam update from pre-accumulated grads,
-  * ``eval_loss``   — mask-weighted mean loss (FF line search, test loss,
+  * ``grad_accum``    — elementwise ``acc + g`` over the trainable set: the
+    device-side micro-batch accumulator (per-micro gradients never visit
+    the host),
+  * ``grad_finalize`` — ``acc * inv_n``: scales the accumulated sum to the
+    mean before ``adam_apply``,
+  * ``adam_apply``    — Adam update from pre-accumulated grads,
+  * ``eval_loss``     — mask-weighted mean loss (FF line search, test loss,
     Fig 5/8/10 loss-surface probes).
+
+Buffer donation: the programs in ``PROGRAM_DONATE`` are lowered with
+``donate_argnums`` so the HLO carries an ``input_output_alias`` map and PJRT
+reuses the donated input allocations for the aliased outputs in place (one
+generation of accumulator/Adam state live per step instead of two). The
+rust runtime mirrors the contract: donated inputs are consumed
+(``Program::execute_raw_donated``) and must never be touched after the
+call. ``train_step``/``grad_step``/``eval_loss`` are deliberately *not*
+donated — their parameter inputs are long-lived device buffers that the
+coordinator reuses across calls (see docs/transfer-contract.md).
 
 Parameters are passed as *flat ordered lists* (trainables first, then
 frozen), in exactly the order of ``configs.param_spec`` — the same order the
@@ -227,6 +242,25 @@ def make_grad_step(ac: ArtifactConfig):
     return grad_step, args
 
 
+def make_grad_accum(ac: ArtifactConfig):
+    def grad_accum(acc, g):
+        return tuple(a + b for a, b in zip(acc, g))
+
+    tex = _param_examples(trainable_spec(ac))
+    args = (tex, list(tex))
+    return grad_accum, args
+
+
+def make_grad_finalize(ac: ArtifactConfig):
+    def grad_finalize(acc, inv_n):
+        return tuple(a * inv_n for a in acc)
+
+    tex = _param_examples(trainable_spec(ac))
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    args = (tex, scalar)
+    return grad_finalize, args
+
+
 def make_adam_apply(ac: ArtifactConfig):
     def adam_apply(trainables, m, v, step, grads, lr):
         new_t, new_m, new_v = adam_update(trainables, m, v, step, grads, lr)
@@ -251,9 +285,39 @@ def make_eval_loss(ac: ArtifactConfig):
 PROGRAM_FACTORIES = {
     "train_step": make_train_step,
     "grad_step": make_grad_step,
+    "grad_accum": make_grad_accum,
+    "grad_finalize": make_grad_finalize,
     "adam_apply": make_adam_apply,
     "eval_loss": make_eval_loss,
 }
+
+# donate_argnums per program — *function-argument* positions (jax.jit
+# semantics: a donated pytree argument donates all its leaves), NOT
+# flattened leaf indices; ``donated_input_slots`` derives those for the
+# manifest. Donating the grads into adam_apply frees their allocations
+# during execution even though the greedy aliaser pairs the outputs with
+# the matching t/m/v inputs first.
+PROGRAM_DONATE = {
+    "grad_accum": (0,),           # acc
+    "grad_finalize": (0,),        # acc
+    "adam_apply": (0, 1, 2, 4),   # trainables, m, v, grads
+}
+
+
+def donated_input_slots(ac: ArtifactConfig, program: str):
+    """Flattened input-slot indices donated by ``program`` (manifest form
+    of ``PROGRAM_DONATE``: argument positions expanded to leaf positions)."""
+    donate = PROGRAM_DONATE.get(program, ())
+    if not donate:
+        return []
+    _, args = PROGRAM_FACTORIES[program](ac)
+    slots, off = [], 0
+    for i, a in enumerate(args):
+        k = len(a) if isinstance(a, (list, tuple)) else 1
+        if i in donate:
+            slots.extend(range(off, off + k))
+        off += k
+    return slots
 
 
 # ---------------------------------------------------------------------------
@@ -288,6 +352,12 @@ def program_io(ac: ArtifactConfig, program: str):
         ins = (_named("t", ts) + _named("f", fs)
                + _batch_io(ac, ac.model.micro_batch))
         outs = [loss] + _named("g", ts)
+    elif program == "grad_accum":
+        ins = _named("acc", ts) + _named("g", ts)
+        outs = _named("acc", ts)
+    elif program == "grad_finalize":
+        ins = _named("acc", ts) + [scalar_f("inv_n")]
+        outs = _named("g", ts)
     elif program == "adam_apply":
         ins = (_named("t", ts) + _named("m", ts) + _named("v", ts)
                + [scalar_f("step")] + _named("g", ts) + [scalar_f("lr")])

@@ -57,11 +57,81 @@ def test_hlo_parameter_count_matches_manifest(smoke_dir):
         assert n_args == len(ins), (program, n_args, len(ins))
 
 
+def test_donated_programs_carry_input_output_alias(smoke_dir):
+    """Donation must survive the StableHLO → HLO-text lowering: the rust
+    runtime relies on the alias map both for in-place buffer reuse and for
+    the donated-inputs-are-invalidated contract."""
+    out, ac = smoke_dir
+    for program in configs.PROGRAMS:
+        text = (out / ac.key / f"{program}.hlo.txt").read_text()
+        aliased = "input_output_alias" in text
+        if program in model.PROGRAM_DONATE:
+            assert aliased, f"{program}: donation lost in lowering"
+        else:
+            # non-donated programs keep their inputs valid across calls
+            # (the coordinator reuses parameter buffers between steps)
+            assert not aliased, f"{program}: unexpected aliasing"
+
+
+def test_manifest_donated_slots_expand_argnums(smoke_dir):
+    """donate_argnums are function-argument positions; the manifest records
+    the flattened leaf slots the rust runtime validates against."""
+    out, ac = smoke_dir
+    man = json.loads((out / ac.key / "manifest.json").read_text())
+    nt = len(configs.trainable_spec(ac))
+    # adam_apply inputs: [t..nt, m..nt, v..nt, step, g..nt, lr]
+    want_adam = list(range(3 * nt)) + list(range(3 * nt + 1, 4 * nt + 1))
+    assert man["programs"]["adam_apply"]["donated_inputs"] == want_adam
+    assert man["programs"]["grad_accum"]["donated_inputs"] == list(range(nt))
+    assert man["programs"]["grad_finalize"]["donated_inputs"] == list(range(nt))
+    assert man["programs"]["grad_step"]["donated_inputs"] == []
+    assert man["programs"]["train_step"]["donated_inputs"] == []
+
+
+def test_grad_accum_and_finalize_compute_the_mean(smoke_dir):
+    """acc/finalize chained over micro-batch grads == the arithmetic mean
+    (mirrors rust/src/optim/accum.rs and the trainer's device path)."""
+    import numpy as np
+
+    _, ac = smoke_dir
+    accum_fn, _ = model.PROGRAM_FACTORIES["grad_accum"](ac)
+    fin_fn, _ = model.PROGRAM_FACTORIES["grad_finalize"](ac)
+    rng = np.random.default_rng(0)
+    shapes = [p.shape for p in configs.trainable_spec(ac)]
+    micros = [[rng.normal(size=s).astype(np.float32) for s in shapes]
+              for _ in range(3)]
+    acc = list(micros[0])
+    for g in micros[1:]:
+        acc = list(accum_fn(acc, g))
+    mean = fin_fn(acc, np.float32(1.0 / 3.0))
+    for i, s in enumerate(shapes):
+        want = (micros[0][i] + micros[1][i] + micros[2][i]) / 3.0
+        np.testing.assert_allclose(np.asarray(mean[i]), want, rtol=1e-6,
+                                   atol=1e-6)
+
+
 def test_emit_is_incremental(smoke_dir, capsys):
     out, ac = smoke_dir
     aot.emit_artifact(ac, str(out))
     captured = capsys.readouterr().out
     assert "[cached]" in captured and "[lowered]" not in captured
+
+
+def test_stale_alias_hlo_is_relowered(smoke_dir, capsys):
+    """A cached HLO whose alias map disagrees with what the manifest will
+    claim (e.g. artifacts from a checkout with different PROGRAM_DONATE)
+    must be re-lowered, not trusted — otherwise the rust runtime's
+    donation guards validate against the wrong executable."""
+    out, ac = smoke_dir
+    p = out / ac.key / "adam_apply.hlo.txt"
+    original = p.read_text()
+    stripped = original.replace("may-alias", "no-alias")
+    assert aot.alias_count(stripped) == 0 < aot.alias_count(original)
+    p.write_text(stripped)  # mtime is now fresh: plain cache would keep it
+    aot.emit_artifact(ac, str(out))
+    captured = capsys.readouterr().out
+    assert "[stale-alias]" in captured
+    assert aot.alias_count(p.read_text()) == aot.alias_count(original)
 
 
 def test_index_merge(tmp_path):

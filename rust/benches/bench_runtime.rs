@@ -1,15 +1,17 @@
 //! Bench: PJRT runtime layer — artifact compile time, host↔device upload,
-//! and raw program dispatch overhead (execute with cached inputs). This is
-//! the floor under every training step; §Perf tracks the coordinator
-//! overhead = (sgd_step wall) − (program execute wall). Each section also
-//! reports the uploaded/downloaded bytes it moved per iteration, using the
-//! runtime's transfer meters.
+//! raw program dispatch overhead (execute with cached inputs), and the
+//! donated steady-state optimizer step (grad_step → adam_apply with every
+//! state/gradient buffer aliased in place). This is the floor under every
+//! training step; §Perf tracks the coordinator overhead = (sgd_step wall)
+//! − (program execute wall). Each section also reports the uploaded/
+//! downloaded/donated bytes it moved per iteration, using the runtime's
+//! transfer meters.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use fastforward::model::init::init_params;
-use fastforward::runtime::{Artifact, ParamSet, Runtime};
+use fastforward::runtime::{Artifact, InputBuf, ParamSet, Runtime};
 use fastforward::util::bench::bench;
 use fastforward::util::rng::Rng;
 
@@ -67,45 +69,65 @@ fn main() -> anyhow::Result<()> {
     println!("{}", s.report());
     println!("    transfers/iter: {}", per.report());
 
-    // device-resident adam_apply: outputs retained as raw buffers, only
-    // the trainable set synced back — the trainer's steady-state step.
+    // donated steady-state step: grad_step (raw) feeds adam_apply with
+    // every state/gradient buffer donated in place — the trainer's hot
+    // loop with a single micro-batch. Nothing but the 4-byte step scalar
+    // is uploaded per iteration; gradients never exist host-side.
+    let grad = art.program("grad_step")?;
     let adam = art.program("adam_apply")?;
     let mut m = ParamSet::zeros_like(&rt, &tr);
     let mut v = ParamSet::zeros_like(&rt, &tr);
-    let grads: Vec<xla::PjRtBuffer> = tr
-        .tensors()
-        .iter()
-        .map(|x| rt.upload_f32(&vec![1e-4f32; x.len()], &x.shape).unwrap())
-        .collect();
+    let (mb, t2) = (man.config.model.micro_batch, man.config.model.seq_len);
+    let mtokens: Vec<i32> = (0..mb * t2).map(|_| rng.below(512) as i32).collect();
+    let mtok = rt.upload_i32(&mtokens, &[mb, t2])?;
+    let mmask = rt.upload_f32(&vec![1.0f32; mb * t2], &[mb, t2])?;
     let lr = rt.upload_scalar(1e-3)?;
     let mut step = 0f32;
     let t0 = rt.stats.snapshot();
-    let s = bench("adam_apply/device_resident(sync tr only)", 2, 10, Duration::from_secs(2), || {
-        let step_buf = rt.upload_scalar(step).unwrap();
-        step += 1.0;
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
-        inputs.extend(tr.device_buffers().unwrap());
-        inputs.extend(m.device_buffers().unwrap());
-        inputs.extend(v.device_buffers().unwrap());
-        inputs.push(&step_buf);
-        inputs.extend(grads.iter());
-        inputs.push(&lr);
-        let outs = adam.execute_raw(&inputs).unwrap();
-        drop(inputs);
-        let mut outs = outs.into_iter();
-        tr.adopt_all(&mut outs).unwrap();
-        m.adopt_all(&mut outs).unwrap();
-        v.adopt_all(&mut outs).unwrap();
-        tr.sync_host().unwrap(); // Δ_W host view; m/v stay device-only
-    });
+    let s = bench(
+        "grad_step+adam_apply/donated(device-resident)",
+        2,
+        10,
+        Duration::from_secs(2),
+        || {
+            let step_buf = rt.upload_scalar(step).unwrap();
+            step += 1.0;
+            let mut ginputs: Vec<&xla::PjRtBuffer> = Vec::new();
+            ginputs.extend(tr.device_buffers().unwrap());
+            ginputs.extend(fr.device_buffers().unwrap());
+            ginputs.push(&mtok);
+            ginputs.push(&mtok);
+            ginputs.push(&mmask);
+            let gouts = grad.execute_raw(&ginputs).unwrap();
+            drop(ginputs);
+            let grads = gouts.into_iter().skip(1); // drop the loss leaf
+            let tr_b = tr.take_device_buffers().unwrap();
+            let m_b = m.take_device_buffers().unwrap();
+            let v_b = v.take_device_buffers().unwrap();
+            let mut inputs: Vec<InputBuf> = Vec::new();
+            inputs.extend(tr_b.into_iter().map(InputBuf::Donated));
+            inputs.extend(m_b.into_iter().map(InputBuf::Donated));
+            inputs.extend(v_b.into_iter().map(InputBuf::Donated));
+            inputs.push(InputBuf::Borrowed(&step_buf));
+            inputs.extend(grads.map(InputBuf::Donated));
+            inputs.push(InputBuf::Borrowed(&lr));
+            let outs = adam.execute_raw_donated(inputs).unwrap();
+            let mut outs = outs.into_iter();
+            tr.adopt_all(&mut outs).unwrap();
+            m.adopt_all(&mut outs).unwrap();
+            v.adopt_all(&mut outs).unwrap();
+        },
+    );
     let per = rt.stats.snapshot().since(&t0).per_iter(s.iters as u64 + 2);
     println!("{}", s.report());
     println!("    transfers/adam_step: {}", per.report());
     println!(
-        "    param uploads after warmup: tr={} m={} v={} (flat = no re-upload)",
+        "    param uploads after warmup: tr={} m={} v={} (flat = no re-upload); \
+         donated {} per step (state + grads reused in place)",
         tr.upload_count(),
         m.upload_count(),
-        v.upload_count()
+        v.upload_count(),
+        fastforward::runtime::human_bytes(per.donated_bytes),
     );
     Ok(())
 }

@@ -1,8 +1,11 @@
 //! Bench: end-to-end optimizer-step latency (the paper's train-time axis,
 //! Fig 3) plus the host↔device traffic behind it. Measures per-step wall
 //! time, uploaded/downloaded **bytes per Adam step** and **per FF probe**,
-//! and asserts-by-printing that device-resident state keeps the param/
-//! optimizer upload counters flat across steady-state steps.
+//! and asserts-by-printing the steady-state transfer contract
+//! (docs/transfer-contract.md): param/optimizer upload counters stay flat,
+//! and with device-side gradient accumulation the *only* bytes uploaded
+//! per Adam step are the batch (tokens/targets/mask) plus the 4-byte step
+//! scalar — no O(|trainable|) gradient upload.
 //!
 //! Run: `cargo bench --offline` (after `make artifacts`).
 
@@ -61,6 +64,26 @@ fn main() -> anyhow::Result<()> {
             s.iters + 2,
             if state_ups_1 == state_ups_0 { "flat: device-resident" } else { "NOT FLAT" },
             state_downs,
+        );
+        // The transfer contract's acceptance line: with device-side
+        // accumulation the per-step upload is the batch plus one 4-byte
+        // step scalar — gradients (4·|trainable| bytes) never cross.
+        let mc = &t.art.manifest.config.model;
+        let n_micro = cfg.global_batch / mc.micro_batch;
+        let batch_bytes =
+            (n_micro * 3 * mc.micro_batch * mc.seq_len * 4 + 4) as u64;
+        let grad_bytes = 4 * t.tr.numel() as u64;
+        println!(
+            "    upload/adam_step = {} vs batch-only expectation {} ({}); \
+             host-path gradient upload would add {}",
+            per_step.uploaded_bytes,
+            batch_bytes,
+            if per_step.uploaded_bytes == batch_bytes {
+                "EXACT: batch data only"
+            } else {
+                "MISMATCH"
+            },
+            fastforward::runtime::human_bytes(grad_bytes),
         );
 
         // val-set inference = one FF probe's cost; batch buffers cached

@@ -22,6 +22,9 @@ fn series(ctx: &ExpContext, ff_on: bool, steps: usize) -> Result<(Vec<(usize, f6
     let ff = if ff_on { FfConfig::default() } else { FfConfig { enabled: false, ..FfConfig::default() } };
     let cfg = run_config(ctx, &artifact, "medical", ff)?;
     let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+    // The cosine history reads the mean gradient after every step; with
+    // device-side accumulation that download only happens on request.
+    t.keep_host_grads = true;
 
     let mut hist = GradHistory::new(2, 64);
     while t.adam_steps() < steps {

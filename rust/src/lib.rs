@@ -5,18 +5,21 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the training coordinator: data pipeline, micro-
-//!   batch scheduler with gradient accumulation, the Fast Forward controller
+//!   batch scheduler with device-side gradient accumulation (per-micro
+//!   gradients never visit the host), the Fast Forward controller
 //!   (interval scheduling + line search on a tiny validation set), FLOPs
-//!   accounting, experiments, and the PJRT runtime that executes AOT-
-//!   compiled artifacts.
+//!   and transfer accounting, experiments, and the PJRT runtime that
+//!   executes AOT-compiled artifacts with buffer donation on the optimizer
+//!   path.
 //! * **L2 (python/compile/model.py)** — the transformer fwd/bwd in JAX with
 //!   LoRA / DoRA / full-rank train modes, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — the fused LoRA-matmul Pallas kernel,
 //!   lowered (interpret mode) into the same HLO.
 //!
 //! Python never runs on the training path: after `make artifacts` the
-//! `fastforward` binary is self-contained. See DESIGN.md for the system
-//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//! `fastforward` binary is self-contained. See README.md for the repo
+//! tour and docs/transfer-contract.md for the host↔device movement rules
+//! (the ParamSet sync machine, donation, steady-state expectations).
 
 pub mod analysis;
 pub mod config;

@@ -1,8 +1,107 @@
-//! Gradient accumulation across micro-batches — the coordinator's
-//! micro-batch scheduler sums `grad_step` outputs here and hands the mean
-//! to one `adam_apply` per *global* batch (paper Appendix E batch shapes).
+//! Gradient accumulation across micro-batches — two implementations of the
+//! same contract (sum `grad_step` outputs, hand the mean to one
+//! `adam_apply` per *global* batch, paper Appendix E batch shapes):
+//!
+//! * [`DeviceGradAccumulator`] — the trainer's default. Per-micro gradient
+//!   buffers stay on the device: the first micro-batch's `grad_step`
+//!   outputs *become* the accumulator (no zeros upload), later micros run
+//!   the AOT `grad_accum` program (`acc + g`) donating the previous
+//!   accumulator so the allocation is reused in place, and
+//!   [`DeviceGradAccumulator::finalize`] scales by `1/n` through
+//!   `grad_finalize` (also donated). Only the per-micro loss scalar (4
+//!   bytes) ever crosses to the host — the last O(|trainable|) per-step
+//!   upload (the mean-gradient upload into `adam_apply`) is gone.
+//! * [`GradAccumulator`] — the host-side reference path. Kept for
+//!   artifacts that predate the `grad_accum` program and for
+//!   `Trainer::keep_micro_grads` runs (Fig 13 needs every micro gradient
+//!   host-side anyway); also the numeric cross-check for the device path
+//!   in `rust/tests/runtime_roundtrip.rs`.
+
+use anyhow::{ensure, Result};
 
 use crate::model::tensor::Tensor;
+use crate::runtime::{InputBuf, Program};
+
+/// Device-resident micro-batch gradient accumulator (see module docs).
+///
+/// State machine per optimizer step: empty → (first `add_raw` adopts the
+/// gradient buffers) → (later `add_raw`s fold them through `grad_accum`,
+/// donating the old accumulator) → `finalize` returns the mean-gradient
+/// buffers (ready to donate into `adam_apply`) and resets to empty.
+#[derive(Default)]
+pub struct DeviceGradAccumulator {
+    acc: Vec<xla::PjRtBuffer>,
+    count: usize,
+    loss_sum: f64,
+}
+
+impl DeviceGradAccumulator {
+    pub fn new() -> DeviceGradAccumulator {
+        Self::default()
+    }
+
+    /// Micro-batches folded in since the last `finalize`.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Fold in one micro-batch: `grads` are the raw `grad_step` output
+    /// buffers (loss leaf already stripped), `loss` its decoded scalar.
+    /// The first call adopts the buffers as the accumulator outright;
+    /// later calls dispatch `accum_prog` (`acc + g`), donating the
+    /// previous accumulator so its allocation is reused for the new sum.
+    pub fn add_raw(
+        &mut self,
+        accum_prog: &Program,
+        grads: Vec<xla::PjRtBuffer>,
+        loss: f32,
+    ) -> Result<()> {
+        if self.acc.is_empty() {
+            self.acc = grads;
+        } else {
+            ensure!(
+                grads.len() == self.acc.len(),
+                "grad_accum arity: {} grads vs {} accumulated",
+                grads.len(),
+                self.acc.len()
+            );
+            let mut inputs: Vec<InputBuf> = Vec::with_capacity(2 * grads.len());
+            inputs.extend(std::mem::take(&mut self.acc).into_iter().map(InputBuf::Donated));
+            inputs.extend(grads.iter().map(InputBuf::Borrowed));
+            self.acc = accum_prog.execute_raw_donated(inputs)?;
+            // `grads` buffers die here: their allocations free immediately
+        }
+        self.loss_sum += loss as f64;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Scale the accumulated sum to the mean (`grad_finalize`, donated) and
+    /// return the mean-gradient buffers plus the mean micro-batch loss,
+    /// resetting the accumulator. `inv_n` must hold `1.0 / count()` as a
+    /// device scalar; a single-micro step skips the dispatch entirely (the
+    /// mean of one gradient is itself).
+    pub fn finalize(
+        &mut self,
+        finalize_prog: &Program,
+        inv_n: &xla::PjRtBuffer,
+    ) -> Result<(Vec<xla::PjRtBuffer>, f32)> {
+        assert!(self.count > 0, "finalize on empty accumulator");
+        let mean_loss = (self.loss_sum / self.count as f64) as f32;
+        let acc = std::mem::take(&mut self.acc);
+        let mean = if self.count == 1 {
+            acc
+        } else {
+            let mut inputs: Vec<InputBuf> = Vec::with_capacity(acc.len() + 1);
+            inputs.extend(acc.into_iter().map(InputBuf::Donated));
+            inputs.push(InputBuf::Borrowed(inv_n));
+            finalize_prog.execute_raw_donated(inputs)?
+        };
+        self.count = 0;
+        self.loss_sum = 0.0;
+        Ok((mean, mean_loss))
+    }
+}
 
 #[derive(Debug)]
 pub struct GradAccumulator {

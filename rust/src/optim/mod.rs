@@ -1,11 +1,12 @@
-//! Host-side optimizer substrate: reference Adam (cross-checked against
-//! the HLO `adam_apply` by integration test), gradient accumulation, and
-//! the Δ_W tracking FF extrapolates along.
+//! Optimizer substrate: reference Adam (cross-checked against the HLO
+//! `adam_apply` by integration test), micro-batch gradient accumulation
+//! (device-resident by default, host-side as fallback/reference), and the
+//! Δ_W tracking FF extrapolates along.
 
 pub mod accum;
 pub mod adam;
 pub mod delta;
 
-pub use accum::GradAccumulator;
+pub use accum::{DeviceGradAccumulator, GradAccumulator};
 pub use adam::AdamState;
 pub use delta::DeltaTracker;

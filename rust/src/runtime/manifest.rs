@@ -40,6 +40,11 @@ impl IoSlot {
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
+
+    /// Device-buffer size of this slot (both supported dtypes are 4-byte).
+    pub fn byte_len(&self) -> usize {
+        self.numel() * 4
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -47,6 +52,12 @@ pub struct ProgramSpec {
     pub file: String,
     pub inputs: Vec<IoSlot>,
     pub outputs: Vec<IoSlot>,
+    /// Input-slot indices the executable donates (its HLO
+    /// `input_output_alias` map reuses these allocations for outputs).
+    /// Non-empty ⇒ the program must be run through
+    /// `Program::execute_raw_donated` with exactly these slots passed by
+    /// value; empty for manifests that predate donation.
+    pub donated_inputs: Vec<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -132,6 +143,18 @@ impl Manifest {
                     file: p.get("file").as_str().ok_or_else(|| anyhow!("program missing file"))?.into(),
                     inputs: parse_slots(p.get("inputs"))?,
                     outputs: parse_slots(p.get("outputs"))?,
+                    donated_inputs: p
+                        .get("donated_inputs")
+                        .as_arr()
+                        .map(|a| {
+                            a.iter()
+                                .map(|d| {
+                                    d.as_usize().ok_or_else(|| anyhow!("bad donated slot"))
+                                })
+                                .collect::<Result<Vec<usize>>>()
+                        })
+                        .transpose()?
+                        .unwrap_or_default(),
                 },
             );
         }
@@ -173,6 +196,10 @@ impl Manifest {
         if self.frozen != want_f {
             bail!("frozen spec drift for '{}'", self.key);
         }
+        // The original four programs are mandatory; `grad_accum` and
+        // `grad_finalize` (device-side accumulation, donated) are optional
+        // so artifacts emitted before they existed keep loading — the
+        // trainer falls back to host-side accumulation when they're absent.
         for name in ["train_step", "grad_step", "adam_apply", "eval_loss"] {
             let p = self
                 .programs
@@ -183,6 +210,12 @@ impl Manifest {
             }
         }
         Ok(())
+    }
+
+    /// Whether this artifact carries an (optional) program, e.g. the
+    /// device-side accumulation pair `grad_accum`/`grad_finalize`.
+    pub fn has_program(&self, name: &str) -> bool {
+        self.programs.contains_key(name)
     }
 
     pub fn program(&self, name: &str) -> Result<&ProgramSpec> {

@@ -20,20 +20,34 @@
 //!   outputs this way and feeds them straight back in on the next step,
 //!   eliminating the per-step host↔device round-trip of the full parameter
 //!   + optimizer state. Individual leaves (the loss scalar) can still be
-//!   pulled selectively with [`Program::download_output`].
+//!   pulled selectively with [`Program::download_output`];
+//! * **raw + donated** ([`Program::execute_raw_donated`]) — like raw, but
+//!   some inputs are passed by value ([`InputBuf::Donated`]) and consumed.
+//!   Programs lowered with `donate_argnums` (see
+//!   `python/compile/model.py`, `PROGRAM_DONATE`) carry an
+//!   `input_output_alias` map in their HLO, so PJRT reuses the donated
+//!   input allocations for the aliased outputs *in place* — one generation
+//!   of accumulator/optimizer state lives per step instead of two. A
+//!   donated buffer is invalid after the call; the ownership transfer into
+//!   this API is what makes reuse-after-donation a compile error rather
+//!   than a runtime one.
 //!
 //! Inputs are passed as device buffers (`execute_b`) so large frozen
 //! parameter sets upload once and are reused across steps (see
-//! `params::ParamSet` and its sync-state machine).
+//! `params::ParamSet` and its sync-state machine). The full host↔device
+//! movement rules — which programs donate, which buffers are long-lived,
+//! and the steady-state traffic expectations — are documented in
+//! `docs/transfer-contract.md`.
 //!
 //! # Perf counters
 //!
 //! Every host→device upload and device→host download that flows through
 //! this module is metered in [`Runtime::stats`] ([`TransferStats`]): call
-//! counts and **bytes** in each direction. `bench_runtime`/`bench_step`
-//! report these per Adam step and per FF probe, and `RunSummary` carries a
-//! per-run [`TransferSnapshot`] — the device-residency win is measured, not
-//! asserted.
+//! counts and **bytes** in each direction, plus the bytes of device memory
+//! handed back to the allocator through donation. `bench_runtime`/
+//! `bench_step` report these per Adam step and per FF probe, and
+//! `RunSummary` carries a per-run [`TransferSnapshot`] — the
+//! device-residency win is measured, not asserted.
 
 pub mod manifest;
 pub mod params;
@@ -60,6 +74,8 @@ pub struct TransferStats {
     uploaded_bytes: Cell<u64>,
     downloads: Cell<u64>,
     downloaded_bytes: Cell<u64>,
+    donations: Cell<u64>,
+    donated_bytes: Cell<u64>,
 }
 
 impl TransferStats {
@@ -73,6 +89,14 @@ impl TransferStats {
         self.downloaded_bytes.set(self.downloaded_bytes.get() + bytes as u64);
     }
 
+    /// One input buffer donated into a program call: its allocation is
+    /// either reused in place for an aliased output or freed immediately —
+    /// bytes the allocator does *not* have to hold a second generation of.
+    pub fn record_donation(&self, bytes: usize) {
+        self.donations.set(self.donations.get() + 1);
+        self.donated_bytes.set(self.donated_bytes.get() + bytes as u64);
+    }
+
     /// Point-in-time copy of the counters; diff two with
     /// [`TransferSnapshot::since`] to attribute traffic to a code region.
     pub fn snapshot(&self) -> TransferSnapshot {
@@ -81,6 +105,8 @@ impl TransferStats {
             uploaded_bytes: self.uploaded_bytes.get(),
             downloads: self.downloads.get(),
             downloaded_bytes: self.downloaded_bytes.get(),
+            donations: self.donations.get(),
+            donated_bytes: self.donated_bytes.get(),
         }
     }
 }
@@ -92,6 +118,8 @@ pub struct TransferSnapshot {
     pub uploaded_bytes: u64,
     pub downloads: u64,
     pub downloaded_bytes: u64,
+    pub donations: u64,
+    pub donated_bytes: u64,
 }
 
 impl TransferSnapshot {
@@ -102,6 +130,8 @@ impl TransferSnapshot {
             uploaded_bytes: self.uploaded_bytes.saturating_sub(earlier.uploaded_bytes),
             downloads: self.downloads.saturating_sub(earlier.downloads),
             downloaded_bytes: self.downloaded_bytes.saturating_sub(earlier.downloaded_bytes),
+            donations: self.donations.saturating_sub(earlier.donations),
+            donated_bytes: self.donated_bytes.saturating_sub(earlier.donated_bytes),
         }
     }
 
@@ -113,17 +143,27 @@ impl TransferSnapshot {
             uploaded_bytes: self.uploaded_bytes / n,
             downloads: self.downloads / n,
             downloaded_bytes: self.downloaded_bytes / n,
+            donations: self.donations / n,
+            donated_bytes: self.donated_bytes / n,
         }
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "up {} ({} calls), down {} ({} calls)",
             human_bytes(self.uploaded_bytes),
             self.uploads,
             human_bytes(self.downloaded_bytes),
             self.downloads
-        )
+        );
+        if self.donations > 0 {
+            s.push_str(&format!(
+                ", donated {} ({} bufs)",
+                human_bytes(self.donated_bytes),
+                self.donations
+            ));
+        }
+        s
     }
 }
 
@@ -223,6 +263,27 @@ impl Runtime {
     }
 }
 
+/// One input to a donated program execution ([`Program::execute_raw_donated`]).
+///
+/// `Donated` passes ownership: the buffer is handed to the executable,
+/// which (per its `input_output_alias` map) may reuse the allocation in
+/// place for an output, and is dropped after the call — it cannot be
+/// touched again. `Borrowed` inputs stay valid across the call (frozen
+/// params, cached batch buffers, scalars).
+pub enum InputBuf<'a> {
+    Borrowed(&'a xla::PjRtBuffer),
+    Donated(xla::PjRtBuffer),
+}
+
+impl InputBuf<'_> {
+    fn buffer(&self) -> &xla::PjRtBuffer {
+        match self {
+            InputBuf::Borrowed(b) => b,
+            InputBuf::Donated(b) => b,
+        }
+    }
+}
+
 /// One compiled executable plus its manifest I/O spec.
 pub struct Program {
     rt: Rc<Runtime>,
@@ -268,11 +329,33 @@ impl Program {
         Ok(())
     }
 
+    /// Donation is a property of the *executable* (its `input_output_alias`
+    /// map), not of the call API — every execution mode funnels into the
+    /// same PJRT execute, which invalidates donatable inputs regardless of
+    /// how the rust side borrowed them. The borrowed-input modes therefore
+    /// refuse donating programs outright: silently invalidating buffers the
+    /// caller still holds (and that a `ParamSet` may still track as
+    /// `InSync`) is exactly the bug class `execute_raw_donated`'s ownership
+    /// transfer exists to prevent.
+    fn check_not_donating(&self) -> Result<()> {
+        if !self.spec.donated_inputs.is_empty() {
+            bail!(
+                "program '{}' donates {} input slots (input_output_alias): \
+                 borrowed-input execution would leave the caller holding \
+                 invalidated buffers — use execute_raw_donated",
+                self.name,
+                self.spec.donated_inputs.len()
+            );
+        }
+        Ok(())
+    }
+
     /// Execute with pre-uploaded device buffers, downloading every output
     /// (hot path for programs whose outputs the coordinator consumes
     /// host-side, e.g. per-micro-batch gradients).
     pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Outputs> {
         self.check_arity(inputs.len())?;
+        self.check_not_donating()?;
         let mut out = self
             .exe
             .execute_b(inputs)
@@ -334,10 +417,73 @@ impl Program {
     /// single-output fallback.
     pub fn execute_raw(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
         self.check_arity(inputs.len())?;
+        self.check_not_donating()?;
         let mut out = self
             .exe
             .execute_b(inputs)
             .map_err(|e| anyhow!("executing '{}': {e}", self.name))?;
+        let bufs = out.swap_remove(0);
+        if bufs.len() != self.spec.outputs.len() {
+            bail!(
+                "program '{}' returned {} output buffers, manifest says {} — \
+                 raw output mode requires untupled results",
+                self.name,
+                bufs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(bufs)
+    }
+
+    /// Execute keeping every output as a raw device buffer, *consuming* the
+    /// [`InputBuf::Donated`] inputs. Use for programs lowered with
+    /// `donate_argnums` (`grad_accum`, `grad_finalize`, `adam_apply`): the
+    /// executable's `input_output_alias` map lets PJRT reuse the donated
+    /// allocations for the aliased outputs in place, so steady-state
+    /// optimizer steps keep one generation of state live instead of two.
+    ///
+    /// Donated buffers are invalid after this call whether or not the
+    /// backend chose to alias them (PJRT invalidates every donatable
+    /// input); taking them by value makes reuse impossible by
+    /// construction. Each donation is metered in [`Runtime::stats`] with
+    /// the byte size the manifest records for that input slot.
+    pub fn execute_raw_donated(&self, inputs: Vec<InputBuf>) -> Result<Vec<xla::PjRtBuffer>> {
+        self.check_arity(inputs.len())?;
+        // Every slot the executable donates must be passed by value: a
+        // borrowed buffer there would be invalidated while its owner still
+        // holds (and might reuse) it. The converse is allowed — passing a
+        // buffer as Donated on a slot the manifest doesn't declare (e.g. a
+        // pre-donation artifact) just drops it after the call.
+        for &i in &self.spec.donated_inputs {
+            match inputs.get(i) {
+                Some(InputBuf::Donated(_)) => {}
+                Some(InputBuf::Borrowed(_)) => bail!(
+                    "program '{}' donates input #{i} ('{}') — pass it by \
+                     value (InputBuf::Donated), not borrowed",
+                    self.name,
+                    self.spec.inputs[i].name
+                ),
+                None => bail!(
+                    "program '{}': manifest donates input #{i} but the \
+                     program only has {} inputs",
+                    self.name,
+                    self.spec.inputs.len()
+                ),
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = inputs.iter().map(InputBuf::buffer).collect();
+        let mut out = self
+            .exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("executing '{}' (donated): {e}", self.name))?;
+        drop(refs);
+        // Meter only the slots the executable actually donates: on
+        // pre-donation artifacts a Donated input is merely dropped, not
+        // reused in place, and must not count as saved bytes.
+        for &i in &self.spec.donated_inputs {
+            self.rt.stats.record_donation(self.spec.inputs[i].byte_len());
+        }
+        drop(inputs); // donated inputs are dead from here on
         let bufs = out.swap_remove(0);
         if bufs.len() != self.spec.outputs.len() {
             bail!(
@@ -475,8 +621,20 @@ mod tests {
 
     #[test]
     fn snapshot_since_and_per_iter() {
-        let a = TransferSnapshot { uploads: 10, uploaded_bytes: 4000, downloads: 2, downloaded_bytes: 80 };
-        let b = TransferSnapshot { uploads: 4, uploaded_bytes: 1000, downloads: 2, downloaded_bytes: 80 };
+        let a = TransferSnapshot {
+            uploads: 10,
+            uploaded_bytes: 4000,
+            downloads: 2,
+            downloaded_bytes: 80,
+            ..Default::default()
+        };
+        let b = TransferSnapshot {
+            uploads: 4,
+            uploaded_bytes: 1000,
+            downloads: 2,
+            downloaded_bytes: 80,
+            ..Default::default()
+        };
         let d = a.since(&b);
         assert_eq!(d.uploads, 6);
         assert_eq!(d.uploaded_bytes, 3000);
@@ -486,6 +644,21 @@ mod tests {
         assert_eq!(p.uploaded_bytes, 1000);
         // per_iter never divides by zero
         assert_eq!(d.per_iter(0).uploads, 6);
+    }
+
+    #[test]
+    fn donation_meters_and_reports() {
+        let s = TransferStats::default();
+        s.record_upload(64);
+        let before = s.snapshot();
+        assert!(!before.report().contains("donated"), "no donations yet");
+        s.record_donation(4096);
+        s.record_donation(4096);
+        let d = s.snapshot().since(&before);
+        assert_eq!(d.donations, 2);
+        assert_eq!(d.donated_bytes, 8192);
+        assert_eq!(d.uploads, 0, "donation is not an upload");
+        assert!(d.report().contains("donated 8.00 KiB (2 bufs)"));
     }
 
     #[test]

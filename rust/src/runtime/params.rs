@@ -5,7 +5,7 @@
 //! The coordinator needs parameters host-side for FF's `W_t + τΔ_W`
 //! arithmetic, checkpointing, and analysis probes, and device-side for
 //! every program call. Rather than round-tripping the full state through
-//! host memory on every optimizer step, each tensor carries one of three
+//! host memory on every optimizer step, each tensor carries one of four
 //! states:
 //!
 //! | state         | authoritative copy | how it is entered                         |
@@ -13,6 +13,7 @@
 //! | `HostAhead`   | host               | construction, `set_flat`, `axpy`, `restore` |
 //! | `DeviceAhead` | device             | `adopt_device` (a program output retained as a buffer) |
 //! | `InSync`      | both (identical)   | upload (`device_buffers`) or download (`sync_host`) |
+//! | `Donated`     | *none* (transient) | `take_device_buffers` (buffer donated into a program) |
 //!
 //! Transitions:
 //!
@@ -23,17 +24,27 @@
 //! * [`ParamSet::adopt_device`] installs a program output buffer as the new
 //!   authoritative value → `DeviceAhead`, with **no** host copy. This is
 //!   how `adam_apply` outputs stay on the device between steps.
+//! * [`ParamSet::take_device_buffers`] removes the device buffers so the
+//!   caller can donate them into a program call
+//!   ([`Program::execute_raw_donated`](crate::runtime::Program::execute_raw_donated))
+//!   → `Donated`. The state is transient and one-way: the set has **no**
+//!   authoritative copy until the program's outputs are adopted back
+//!   (`adopt_all`/`adopt_device` → `DeviceAhead`) or the tensor is wholly
+//!   overwritten from the host (`set_flat`/`restore` → `HostAhead`). Every
+//!   read — host *or* device — panics in between, so a donation that is
+//!   not immediately repaid by adoption is a loud bug.
 //! * [`ParamSet::sync_host`] lazily downloads every `DeviceAhead` tensor →
 //!   `InSync`. Host reads (`tensors`, `snapshot`, …) assert that no tensor
-//!   is `DeviceAhead`, so a missing `sync_host()` is a loud bug, not a
-//!   silent stale read. Host read-modify-writes (`axpy`) carry the same
-//!   assertion; whole-tensor overwrites (`set_flat`, `restore`) are safe
-//!   from any state.
+//!   is `DeviceAhead`/`Donated`, so a missing `sync_host()` is a loud bug,
+//!   not a silent stale read. Host read-modify-writes (`axpy`) carry the
+//!   same assertion; whole-tensor overwrites (`set_flat`, `restore`) are
+//!   safe from any state.
 //!
 //! Uploads and downloads are counted per set (`upload_count` /
 //! `download_count`) and metered in bytes on the shared
 //! [`Runtime::stats`](crate::runtime::TransferStats) — see the runtime
-//! module docs, §Perf counters.
+//! module docs, §Perf counters, and `docs/transfer-contract.md` for the
+//! full movement rules.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -52,6 +63,11 @@ pub enum SyncState {
     HostAhead,
     /// A program output buffer is authoritative; the host tensor is stale.
     DeviceAhead,
+    /// The device buffer was donated into a program call and no
+    /// authoritative copy exists; only `adopt_device`/`adopt_all` (program
+    /// outputs) or a whole-tensor host overwrite may follow. Transient
+    /// within one optimizer step.
+    Donated,
 }
 
 pub struct ParamSet {
@@ -131,12 +147,20 @@ impl ParamSet {
         &self.host[i].shape
     }
 
-    /// True when no tensor is `DeviceAhead` — host reads are valid.
+    /// True when no tensor is `DeviceAhead` or `Donated` — host reads are
+    /// valid.
     pub fn host_in_sync(&self) -> bool {
-        !self.state.iter().any(|s| *s == SyncState::DeviceAhead)
+        !self
+            .state
+            .iter()
+            .any(|s| matches!(s, SyncState::DeviceAhead | SyncState::Donated))
     }
 
     fn assert_host_fresh(&self, op: &str) {
+        assert!(
+            !self.state.contains(&SyncState::Donated),
+            "{op} on a donated ParamSet — adopt the program outputs first"
+        );
         assert!(
             self.host_in_sync(),
             "{op} on a device-ahead ParamSet — call sync_host() first"
@@ -197,6 +221,13 @@ impl ParamSet {
     /// steady-state optimizer steps perform zero uploads here.
     pub fn device_buffers(&mut self) -> Result<Vec<&xla::PjRtBuffer>> {
         for i in 0..self.host.len() {
+            assert_ne!(
+                self.state[i],
+                SyncState::Donated,
+                "device_buffers() on donated param '{}' — adopt the program \
+                 outputs first",
+                self.names[i]
+            );
             let stale = self.state[i] == SyncState::HostAhead || self.device[i].is_none();
             if stale {
                 debug_assert_ne!(
@@ -210,6 +241,24 @@ impl ParamSet {
             }
         }
         Ok(self.device.iter().map(|b| b.as_ref().unwrap()).collect())
+    }
+
+    /// Remove every device buffer for donation into a program call
+    /// ([`Program::execute_raw_donated`](crate::runtime::Program::execute_raw_donated)),
+    /// uploading any host-ahead tensors first so a buffer exists to donate
+    /// (first step) and reusing resident buffers otherwise (steady state —
+    /// zero uploads). Every tensor transitions to [`SyncState::Donated`]:
+    /// the set holds **no** authoritative value until the program's outputs
+    /// are adopted back with [`ParamSet::adopt_all`]; any read in between
+    /// panics.
+    pub fn take_device_buffers(&mut self) -> Result<Vec<xla::PjRtBuffer>> {
+        self.device_buffers()?; // materialize + meter uploads for host-ahead
+        let mut out = Vec::with_capacity(self.device.len());
+        for i in 0..self.device.len() {
+            out.push(self.device[i].take().expect("buffer materialized above"));
+            self.state[i] = SyncState::Donated;
+        }
+        Ok(out)
     }
 
     /// Install a program output buffer as tensor `i`'s authoritative value
@@ -243,6 +292,13 @@ impl ParamSet {
     /// paid for by at most one download per tensor on first host access.
     pub fn sync_host(&mut self) -> Result<()> {
         for i in 0..self.host.len() {
+            if self.state[i] == SyncState::Donated {
+                bail!(
+                    "sync_host: param '{}' was donated and has no \
+                     authoritative copy — adopt the program outputs first",
+                    self.names[i]
+                );
+            }
             if self.state[i] != SyncState::DeviceAhead {
                 continue;
             }
@@ -425,6 +481,80 @@ mod tests {
         ps.set_flat(0, &[1., 1., 1., 1.]); // full overwrite: no stale read
         assert!(ps.host_in_sync());
         assert_eq!(ps.tensor("a").unwrap().data, vec![1., 1., 1., 1.]);
+    }
+
+    // -- donation -------------------------------------------------------------
+
+    #[test]
+    fn take_device_buffers_then_adopt_keeps_uploads_flat() {
+        let (rt, mut ps) = mk();
+        ps.device_buffers().unwrap(); // first (and only) upload
+        let before = ps.upload_count();
+        for _ in 0..3 {
+            // steady-state donated step: take → (program) → adopt outputs
+            let taken = ps.take_device_buffers().unwrap();
+            assert_eq!(taken.len(), 2);
+            assert!(!ps.host_in_sync());
+            // stand-in for the program's aliased outputs
+            let outs = vec![
+                rt.upload_f32(&[2.; 4], &[2, 2]).unwrap(),
+                rt.upload_f32(&[3.; 3], &[3]).unwrap(),
+            ];
+            let mut it = outs.into_iter();
+            ps.adopt_all(&mut it).unwrap();
+            assert_eq!(ps.state[0], SyncState::DeviceAhead);
+        }
+        assert_eq!(
+            ps.upload_count(),
+            before,
+            "donated steps must not re-upload through the ParamSet"
+        );
+        ps.sync_host().unwrap();
+        assert_eq!(ps.tensor("a").unwrap().data, vec![2.; 4]);
+    }
+
+    #[test]
+    fn take_device_buffers_uploads_host_ahead_first() {
+        let (_rt, mut ps) = mk();
+        // never uploaded: taking must materialize buffers from the host
+        let taken = ps.take_device_buffers().unwrap();
+        assert_eq!(taken.len(), 2);
+        assert_eq!(ps.upload_count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "donated")]
+    fn device_read_of_donated_panics() {
+        let (_rt, mut ps) = mk();
+        ps.take_device_buffers().unwrap();
+        let _ = ps.device_buffers();
+    }
+
+    #[test]
+    #[should_panic(expected = "donated")]
+    fn host_read_of_donated_panics() {
+        let (_rt, mut ps) = mk();
+        ps.take_device_buffers().unwrap();
+        let _ = ps.tensors();
+    }
+
+    #[test]
+    fn sync_host_of_donated_is_loud_error() {
+        let (_rt, mut ps) = mk();
+        ps.take_device_buffers().unwrap();
+        let err = ps.sync_host().unwrap_err();
+        assert!(format!("{err}").contains("donated"));
+    }
+
+    #[test]
+    fn whole_tensor_overwrite_recovers_from_donated() {
+        let (_rt, mut ps) = mk();
+        ps.take_device_buffers().unwrap();
+        ps.set_flat(0, &[1., 2., 3., 4.]);
+        let snap = vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[3])];
+        ps.restore(&snap);
+        assert!(ps.host_in_sync());
+        ps.device_buffers().unwrap(); // re-upload from the restored host view
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The training coordinator: wires the data pipeline, PJRT runtime,
-//! micro-batch gradient accumulation, Adam, and the Fast Forward
-//! controller into the paper's training protocol.
+//! device-side micro-batch gradient accumulation, Adam, and the Fast
+//! Forward controller into the paper's training protocol.
 //!
 //! One `Trainer` = one run (one artifact, one task, one FfConfig). The
 //! experiment harnesses construct pairs of trainers (baseline vs FF) over
@@ -9,15 +9,36 @@
 //! # Data flow: device buffers are the source of truth
 //!
 //! During training the authoritative parameter/optimizer state lives on
-//! the device. Each Adam step retains the `adam_apply` outputs as raw
-//! device buffers (`ParamSet::adopt_device`) and feeds them straight back
-//! in on the next step — trainable, m, and v are **never re-uploaded** in
-//! steady state, and m/v are never downloaded at all. Host tensors are
-//! synchronized lazily: the only per-step download is the trainable set
-//! (needed for Δ_W = W_t − W_{t−1}), pulled by the `DeltaTracker` sync
-//! API. Eval batches are uploaded once into an `EvalCache` and reused by
-//! every FF probe and test eval. All remaining traffic is metered in
-//! `Runtime::stats` and surfaced per run in `RunSummary::transfers`.
+//! the device, and so does the gradient pipeline between micro-batches:
+//!
+//! * **Accumulation** — each micro-batch's `grad_step` runs in raw mode;
+//!   only its loss scalar (4 bytes) is downloaded. The gradient buffers
+//!   fold into a [`DeviceGradAccumulator`] (`grad_accum` / `grad_finalize`
+//!   AOT programs, donated in place), so per-micro gradients never visit
+//!   the host and the mean gradient is never uploaded. The host
+//!   [`GradAccumulator`] path survives behind
+//!   [`Trainer::keep_micro_grads`] (Fig 13 needs every micro gradient
+//!   host-side) and for artifacts that predate the accumulation programs.
+//! * **Adam** — the accumulated mean-gradient buffers feed straight into
+//!   `adam_apply` together with the trainable/m/v state, all **donated**
+//!   (`ParamSet::take_device_buffers` → `Program::execute_raw_donated`):
+//!   PJRT reuses the input allocations for the aliased outputs, keeping
+//!   one generation of state live per step instead of two. The outputs
+//!   are adopted straight back (`ParamSet::adopt_all`) — trainable, m,
+//!   and v are **never re-uploaded** in steady state, and m/v are never
+//!   downloaded at all.
+//! * **Host syncs** — lazy. The only per-step download beyond loss
+//!   scalars is the trainable set (Δ_W = W_t − W_{t−1}, `DeltaTracker`)
+//!   plus, when FF or an analysis consumer needs it, the mean gradient
+//!   ([`Trainer::keep_host_grads`]). Baseline (FF-off) runs move zero
+//!   state or gradient bytes in either direction: their steady-state
+//!   uploads are batch tokens/targets/mask and two 4-byte scalars.
+//! * **Eval** — batches upload once into an `EvalCache` and are reused by
+//!   every FF probe and test eval.
+//!
+//! All traffic is metered in `Runtime::stats` and surfaced per run in
+//! `RunSummary::transfers`; `docs/transfer-contract.md` spells out the
+//! full contract and the steady-state expectations `bench_step` verifies.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -27,7 +48,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::analysis::linalg::mean_condition_number;
 use crate::config::TrainConfig;
-use crate::data::batcher::{eval_batches, Batch};
+use crate::data::batcher::{eval_batches, Batch, GlobalBatch};
 use crate::data::corpus::{make_dataset, Dataset};
 use crate::data::pipeline::Pipeline;
 use crate::ff::controller::{FfController, FfDecision, FfStageStats};
@@ -36,9 +57,9 @@ use crate::flops::{FlopsCounter, FlopsModel};
 use crate::metrics::{RunLog, StepKind, StepRecord, TrainTimer};
 use crate::model::init::{init_params, init_with_base};
 use crate::model::tensor::{list_norm, Tensor};
-use crate::optim::accum::GradAccumulator;
+use crate::optim::accum::{DeviceGradAccumulator, GradAccumulator};
 use crate::optim::delta::DeltaTracker;
-use crate::runtime::{Artifact, ParamSet, Program, Runtime, TransferSnapshot};
+use crate::runtime::{Artifact, InputBuf, ParamSet, Program, Runtime, TransferSnapshot};
 use crate::train::eval_cache::{EvalCache, ExampleScratch};
 
 /// When to stop a training run.
@@ -90,9 +111,17 @@ pub struct Trainer {
     grad_prog: Rc<Program>,
     adam_prog: Rc<Program>,
     eval_prog: Rc<Program>,
+    /// Device-side accumulation programs (`grad_accum`/`grad_finalize`).
+    /// `None` for artifacts emitted before they existed — the trainer then
+    /// falls back to the host [`GradAccumulator`] path.
+    grad_accum_prog: Option<Rc<Program>>,
+    grad_finalize_prog: Option<Rc<Program>>,
     /// Cached learning-rate scalar buffer, keyed by the lr value it holds
     /// so mid-run mutation of `cfg.lr` (lr sweeps) re-uploads.
     lr_buf: Option<(f32, xla::PjRtBuffer)>,
+    /// Cached `1/n_micro` scalar for `grad_finalize`, keyed by the micro
+    /// count it encodes (constant per run: global_batch / micro_batch).
+    inv_n_buf: Option<(usize, xla::PjRtBuffer)>,
     // ff machinery
     pub ffc: FfController,
     delta: DeltaTracker,
@@ -100,8 +129,15 @@ pub struct Trainer {
     pub last_grads: Vec<Tensor>,
     /// Per-micro-batch gradients of the last global batch (Fig 13).
     pub last_micro_grads: Vec<Vec<Tensor>>,
-    /// Keep per-micro grads around (costs memory; off by default).
+    /// Keep per-micro grads around (costs memory; off by default). Forces
+    /// the host accumulation path — the only remaining consumer of the
+    /// host [`GradAccumulator`] during training.
     pub keep_micro_grads: bool,
+    /// Download the mean gradient host-side after each step (Fig 6's
+    /// cosine history). FF-tracked steps download it regardless — the FF
+    /// stage stats need ‖g‖ — so this flag matters only for FF-off runs,
+    /// which otherwise leave [`Trainer::last_grads`] empty.
+    pub keep_host_grads: bool,
     // accounting
     pub fm: FlopsModel,
     pub flops: FlopsCounter,
@@ -174,6 +210,15 @@ impl Trainer {
         let grad_prog = art.program("grad_step")?;
         let adam_prog = art.program("adam_apply")?;
         let eval_prog = art.program("eval_loss")?;
+        // Optional device-side accumulation pair (see sgd_step): both or
+        // neither — a manifest with only one of them is malformed enough
+        // to fall back to the host path rather than half-commit.
+        let (grad_accum_prog, grad_finalize_prog) =
+            if man.has_program("grad_accum") && man.has_program("grad_finalize") {
+                (Some(art.program("grad_accum")?), Some(art.program("grad_finalize")?))
+            } else {
+                (None, None)
+            };
         let fm = FlopsModel::for_artifact(ac);
         let ffc = FfController::new(cfg.ff.clone());
         let w0_trainables = tr.snapshot();
@@ -198,12 +243,16 @@ impl Trainer {
             grad_prog,
             adam_prog,
             eval_prog,
+            grad_accum_prog,
+            grad_finalize_prog,
             lr_buf: None,
+            inv_n_buf: None,
             ffc,
             delta: DeltaTracker::new(),
             last_grads: Vec::new(),
             last_micro_grads: Vec::new(),
             keep_micro_grads: false,
+            keep_host_grads: false,
             fm,
             flops: FlopsCounter::default(),
             timer: TrainTimer::start(),
@@ -228,8 +277,10 @@ impl Trainer {
     }
 
     /// (uploads, downloads) summed over the trainable/m/v ParamSets. With
-    /// device-resident state the upload count goes flat after the first
-    /// Adam step and downloads grow only by |trainable| per step (Δ_W).
+    /// device-resident, donated state the upload count goes flat after the
+    /// first Adam step; downloads grow by |trainable| per step only while
+    /// FF tracks Δ_W, and not at all on baseline runs (see
+    /// docs/transfer-contract.md §3).
     pub fn state_transfer_counts(&self) -> (u64, u64) {
         (
             self.tr.upload_count() + self.m.upload_count() + self.v.upload_count(),
@@ -241,17 +292,145 @@ impl Trainer {
     // Core steps
     // ---------------------------------------------------------------------
 
-    /// One Adam optimizer step over a full global batch (micro-batch
-    /// gradient accumulation → one `adam_apply`, whose outputs stay on the
-    /// device as the next step's inputs).
+    /// One Adam optimizer step over a full global batch: micro-batch
+    /// gradient accumulation **on the device** (`grad_accum` /
+    /// `grad_finalize`, see module docs) → one donated `adam_apply`, whose
+    /// outputs stay on the device as the next step's inputs. Per-micro
+    /// gradients never visit the host unless [`Trainer::keep_micro_grads`]
+    /// forces the reference host path.
     pub fn sgd_step(&mut self) -> Result<f32> {
         let global = self.pipeline.next();
-        let n = self.tr.len();
         // Δ_W is only consumed by FF (ff_stage / ff_probe_fixed). Baseline
         // runs — and tail steps after the convergence rule permanently
         // disables FF — skip the tracking, so their steady-state steps
         // move *zero* parameter/optimizer bytes in either direction.
         let track_delta = self.cfg.ff.enabled && !self.ffc.is_permanently_off();
+        let use_device_accum =
+            self.grad_accum_prog.is_some() && !self.keep_micro_grads;
+        let (g_bufs, mean_loss) = if use_device_accum {
+            // micro grads stay on the device — don't leave a previous
+            // keep_micro_grads run's tensors looking current
+            self.last_micro_grads.clear();
+            let (bufs, loss) = self.accumulate_device(&global)?;
+            // ff_stage stats need ‖g‖ host-side; Fig 6 asks via
+            // keep_host_grads. Everyone else skips the download and
+            // last_grads stays empty.
+            if track_delta || self.keep_host_grads {
+                self.last_grads = self.download_grads(&bufs)?;
+            } else {
+                self.last_grads.clear();
+            }
+            (bufs, loss)
+        } else {
+            let (mean_grads, loss) = self.accumulate_host(&global)?;
+            let bufs: Vec<xla::PjRtBuffer> = mean_grads
+                .iter()
+                .map(|g| self.rt.upload_tensor(g))
+                .collect::<Result<_>>()?;
+            self.last_grads = mean_grads;
+            (bufs, loss)
+        };
+
+        // Adam apply on device. W_{t−1} comes from the host view, which the
+        // sync API pulls fresh on demand.
+        if track_delta {
+            self.delta.begin_step(&mut self.tr)?;
+        }
+        let step_buf = self.rt.upload_scalar(self.adam_steps as f32)?;
+        let lr = self.cfg.lr;
+        if self.lr_buf.as_ref().map(|(v, _)| *v) != Some(lr) {
+            self.lr_buf = Some((lr, self.rt.upload_scalar(lr)?));
+        }
+        // Donated dispatch: trainable/m/v and the mean gradient hand their
+        // buffers over; adam_apply's alias map reuses the allocations in
+        // place and the outputs are adopted straight back, so one
+        // generation of state is live instead of two and nothing is
+        // re-uploaded next step.
+        let tr_bufs = self.tr.take_device_buffers()?;
+        let m_bufs = self.m.take_device_buffers()?;
+        let v_bufs = self.v.take_device_buffers()?;
+        let mut inputs: Vec<InputBuf> =
+            Vec::with_capacity(self.adam_prog.spec.inputs.len());
+        inputs.extend(tr_bufs.into_iter().map(InputBuf::Donated));
+        inputs.extend(m_bufs.into_iter().map(InputBuf::Donated));
+        inputs.extend(v_bufs.into_iter().map(InputBuf::Donated));
+        inputs.push(InputBuf::Borrowed(&step_buf));
+        inputs.extend(g_bufs.into_iter().map(InputBuf::Donated));
+        inputs.push(InputBuf::Borrowed(&self.lr_buf.as_ref().unwrap().1));
+        let outs = self.adam_prog.execute_raw_donated(inputs)?;
+        let mut outs = outs.into_iter();
+        self.tr.adopt_all(&mut outs)?;
+        self.m.adopt_all(&mut outs)?;
+        self.v.adopt_all(&mut outs)?;
+        // Δ_W = W_t − W_{t−1} needs W_t host-side: lazily sync just the
+        // trainables (m/v stay device-only for the life of the run). With
+        // FF off even the trainables stay device-resident until something
+        // (checkpointing, analysis) actually asks for them.
+        if track_delta {
+            self.delta.end_step(&mut self.tr)?;
+        } else {
+            // a Δ from before FF shut off must not be served later
+            self.delta.clear();
+        }
+        self.adam_steps += 1;
+        self.ffc.on_sgd_step();
+        self.flops.sgd_step(&self.fm, global.total_tokens());
+        self.log.push(StepRecord {
+            step: self.total_steps(),
+            kind: StepKind::Sgd,
+            loss: mean_loss,
+            flops: self.flops.total(),
+            seconds: self.timer.elapsed(),
+        });
+        Ok(mean_loss)
+    }
+
+    /// Device path: run `grad_step` in raw mode per micro-batch (only the
+    /// loss scalar is downloaded), fold the gradient buffers into a
+    /// [`DeviceGradAccumulator`], and return the finalized mean-gradient
+    /// buffers ready to donate into `adam_apply`.
+    fn accumulate_device(
+        &mut self,
+        global: &GlobalBatch,
+    ) -> Result<(Vec<xla::PjRtBuffer>, f32)> {
+        let accum_prog =
+            Rc::clone(self.grad_accum_prog.as_ref().expect("checked by sgd_step"));
+        let finalize_prog =
+            Rc::clone(self.grad_finalize_prog.as_ref().expect("checked by sgd_step"));
+        let n = self.tr.len();
+        let mut acc = DeviceGradAccumulator::new();
+        for micro in &global.micro {
+            let (tok, tgt, msk) = self.upload_micro(micro)?;
+            let inputs = param_batch_inputs(
+                &mut self.tr,
+                &mut self.fr,
+                self.grad_prog.spec.inputs.len(),
+                [&tok, &tgt, &msk],
+            )?;
+            let outs = self.grad_prog.execute_raw(&inputs)?;
+            drop(inputs);
+            let mut outs = outs.into_iter();
+            let loss_buf = outs.next().expect("grad_step outputs [loss, g..]");
+            let loss = self.grad_prog.download_output(&loss_buf, 0)?[0];
+            let grads: Vec<xla::PjRtBuffer> = outs.collect();
+            debug_assert_eq!(grads.len(), n, "grad_step output arity");
+            acc.add_raw(&accum_prog, grads, loss)?;
+        }
+        let count = acc.count();
+        if self.inv_n_buf.as_ref().map(|(c, _)| *c) != Some(count) {
+            self.inv_n_buf =
+                Some((count, self.rt.upload_scalar(1.0 / count as f32)?));
+        }
+        acc.finalize(&finalize_prog, &self.inv_n_buf.as_ref().unwrap().1)
+    }
+
+    /// Host reference path (`keep_micro_grads`, or artifacts without the
+    /// accumulation programs): decode every micro gradient, accumulate in
+    /// the host [`GradAccumulator`], and return the mean tensors — which
+    /// `sgd_step` then uploads, the O(|trainable|) per-step upload the
+    /// device path exists to remove.
+    fn accumulate_host(&mut self, global: &GlobalBatch) -> Result<(Vec<Tensor>, f32)> {
+        let n = self.tr.len();
         let shapes: Vec<Vec<usize>> =
             (0..n).map(|i| self.tr.shape(i).to_vec()).collect();
         let mut acc = GradAccumulator::new(&shapes);
@@ -259,19 +438,15 @@ impl Trainer {
             self.last_micro_grads.clear();
         }
         for micro in &global.micro {
-            let tok = self.rt.upload_i32(&micro.tokens, &[micro.b, micro.t])?;
-            let tgt = self.rt.upload_i32(&micro.targets, &[micro.b, micro.t])?;
-            let msk = self.rt.upload_f32(&micro.mask, &[micro.b, micro.t])?;
-            let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            let (tok, tgt, msk) = self.upload_micro(micro)?;
+            let inputs = param_batch_inputs(
+                &mut self.tr,
+                &mut self.fr,
                 self.grad_prog.spec.inputs.len(),
-            );
-            inputs.extend(self.tr.device_buffers()?);
-            inputs.extend(self.fr.device_buffers()?);
-            inputs.push(&tok);
-            inputs.push(&tgt);
-            inputs.push(&msk);
-            // Gradients are consumed host-side (accumulation), so the
-            // decoded path is the right one here.
+                [&tok, &tgt, &msk],
+            )?;
+            // Gradients are consumed host-side here, so the decoded path
+            // is the right one.
             let out = self.grad_prog.execute_buffers(&inputs)?;
             let loss = out.values[0][0];
             let grads: Vec<&[f32]> =
@@ -287,60 +462,31 @@ impl Trainer {
                 );
             }
         }
-        let (mean_grads, mean_loss) = acc.take_mean();
+        Ok(acc.take_mean())
+    }
 
-        // Adam apply on device. W_{t−1} comes from the host view, which the
-        // sync API pulls fresh on demand.
-        if track_delta {
-            self.delta.begin_step(&mut self.tr)?;
+    /// Upload one micro-batch's tokens/targets/mask — the only per-step
+    /// uploads a steady-state device-accumulation step performs.
+    fn upload_micro(
+        &self,
+        micro: &Batch,
+    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)> {
+        Ok((
+            self.rt.upload_i32(&micro.tokens, &[micro.b, micro.t])?,
+            self.rt.upload_i32(&micro.targets, &[micro.b, micro.t])?,
+            self.rt.upload_f32(&micro.mask, &[micro.b, micro.t])?,
+        ))
+    }
+
+    /// Download mean-gradient buffers into host tensors (analysis
+    /// consumers only — the training path never needs this).
+    fn download_grads(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(bufs.len());
+        for (i, b) in bufs.iter().enumerate() {
+            let v = self.rt.download_f32(b)?;
+            out.push(Tensor::from_vec(self.tr.shape(i), v));
         }
-        let step_buf = self.rt.upload_scalar(self.adam_steps as f32)?;
-        let lr = self.cfg.lr;
-        if self.lr_buf.as_ref().map(|(v, _)| *v) != Some(lr) {
-            self.lr_buf = Some((lr, self.rt.upload_scalar(lr)?));
-        }
-        let g_bufs: Vec<xla::PjRtBuffer> = mean_grads
-            .iter()
-            .map(|g| self.rt.upload_tensor(g))
-            .collect::<Result<_>>()?;
-        let mut inputs: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(self.adam_prog.spec.inputs.len());
-        inputs.extend(self.tr.device_buffers()?);
-        inputs.extend(self.m.device_buffers()?);
-        inputs.extend(self.v.device_buffers()?);
-        inputs.push(&step_buf);
-        inputs.extend(g_bufs.iter());
-        inputs.push(&self.lr_buf.as_ref().unwrap().1);
-        let outs = self.adam_prog.execute_raw(&inputs)?;
-        drop(inputs);
-        // Retain the updated state as raw device buffers: nothing is
-        // downloaded here, and nothing will be re-uploaded next step.
-        let mut outs = outs.into_iter();
-        self.tr.adopt_all(&mut outs)?;
-        self.m.adopt_all(&mut outs)?;
-        self.v.adopt_all(&mut outs)?;
-        // Δ_W = W_t − W_{t−1} needs W_t host-side: lazily sync just the
-        // trainables (m/v stay device-only for the life of the run). With
-        // FF off even the trainables stay device-resident until something
-        // (checkpointing, analysis) actually asks for them.
-        if track_delta {
-            self.delta.end_step(&mut self.tr)?;
-        } else {
-            // a Δ from before FF shut off must not be served later
-            self.delta.clear();
-        }
-        self.last_grads = mean_grads;
-        self.adam_steps += 1;
-        self.ffc.on_sgd_step();
-        self.flops.sgd_step(&self.fm, global.total_tokens());
-        self.log.push(StepRecord {
-            step: self.total_steps(),
-            kind: StepKind::Sgd,
-            loss: mean_loss,
-            flops: self.flops.total(),
-            seconds: self.timer.elapsed(),
-        });
-        Ok(mean_loss)
+        Ok(out)
     }
 
     /// Evaluate mask-weighted mean loss over a cached batch list
@@ -382,13 +528,12 @@ impl Trainer {
         let mut tokens = 0usize;
         for chunk in cache.chunks() {
             debug_assert!(chunk.mask_sum > 0.0, "EvalCache::build drops zero-mask chunks");
-            let mut inputs: Vec<&xla::PjRtBuffer> =
-                Vec::with_capacity(self.eval_prog.spec.inputs.len());
-            inputs.extend(self.tr.device_buffers()?);
-            inputs.extend(self.fr.device_buffers()?);
-            inputs.push(&chunk.tokens);
-            inputs.push(&chunk.targets);
-            inputs.push(&chunk.mask);
+            let inputs = param_batch_inputs(
+                &mut self.tr,
+                &mut self.fr,
+                self.eval_prog.spec.inputs.len(),
+                [&chunk.tokens, &chunk.targets, &chunk.mask],
+            )?;
             let out = self.eval_prog.execute_buffers(&inputs)?;
             total += out.values[0][0] as f64 * chunk.mask_sum as f64;
             weight += chunk.mask_sum as f64;
@@ -597,13 +742,12 @@ impl Trainer {
         let tok = self.rt.upload_i32(scratch.tokens(), &[b, t])?;
         let tgt = self.rt.upload_i32(scratch.targets(), &[b, t])?;
         let msk = self.rt.upload_f32(scratch.mask(), &[b, t])?;
-        let mut inputs: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(self.eval_prog.spec.inputs.len());
-        inputs.extend(self.tr.device_buffers()?);
-        inputs.extend(self.fr.device_buffers()?);
-        inputs.push(&tok);
-        inputs.push(&tgt);
-        inputs.push(&msk);
+        let inputs = param_batch_inputs(
+            &mut self.tr,
+            &mut self.fr,
+            self.eval_prog.spec.inputs.len(),
+            [&tok, &tgt, &msk],
+        )?;
         let out = self.eval_prog.execute_buffers(&inputs)?;
         self.flops.test_eval(&self.fm, b * t);
         Ok(out.values[0][0])
@@ -643,6 +787,25 @@ impl Trainer {
 enum EvalSet {
     Val,
     Test,
+}
+
+/// Assemble the `[trainables.., frozen.., tokens, targets, mask]` input
+/// list shared by every `grad_step`/`eval_loss` dispatch, uploading any
+/// stale parameter tensors first. A free function over the two ParamSets
+/// (not a `&mut self` method) so the returned borrows stay field-scoped
+/// and the caller can still dispatch through the trainer's program
+/// handles.
+fn param_batch_inputs<'a>(
+    tr: &'a mut ParamSet,
+    fr: &'a mut ParamSet,
+    arity: usize,
+    batch: [&'a xla::PjRtBuffer; 3],
+) -> Result<Vec<&'a xla::PjRtBuffer>> {
+    let mut inputs = Vec::with_capacity(arity);
+    inputs.extend(tr.device_buffers()?);
+    inputs.extend(fr.device_buffers()?);
+    inputs.extend(batch);
+    Ok(inputs)
 }
 
 /// Line-search target over the live trainer (paper Eq. 2 applied to the

@@ -150,6 +150,92 @@ fn device_residency_keeps_state_uploads_flat_and_eval_cached() {
 }
 
 #[test]
+fn device_accumulation_uploads_batch_bytes_only() {
+    // PR-2 acceptance: a steady-state baseline Adam step uploads the batch
+    // (tokens/targets/mask per micro) plus one 4-byte step scalar —
+    // nothing else. The O(|trainable|) mean-gradient upload is gone, and
+    // state/gradient buffers are donated in place.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let cfg = tiny_cfg(false, 8);
+    let global_batch = cfg.global_batch;
+    let mut t = Trainer::new(&rt, &root, cfg, Some(&base)).unwrap();
+    if !t.art.manifest.has_program("grad_accum") {
+        eprintln!("skipping: artifact predates grad_accum (regenerate with make artifacts)");
+        return;
+    }
+
+    // warm up twice: first step uploads state, lr and 1/n scalars
+    t.sgd_step().unwrap();
+    t.sgd_step().unwrap();
+    let tr0 = t.transfers();
+    let steps = 3u64;
+    for _ in 0..steps {
+        t.sgd_step().unwrap();
+    }
+    let d = t.transfers().since(&tr0);
+    let mc = t.art.manifest.config.model.clone();
+    let n_micro = global_batch / mc.micro_batch;
+    let batch_bytes = (n_micro * 3 * mc.micro_batch * mc.seq_len * 4 + 4) as u64;
+    assert_eq!(
+        d.uploaded_bytes,
+        steps * batch_bytes,
+        "steady-state uploads must be batch data + step scalar only: {d:?}"
+    );
+    // each step donates t/m/v + the accumulated gradient (4·|trainable|)
+    // plus the grad_accum/grad_finalize accumulator generations
+    assert!(d.donations >= steps * 4 * t.tr.len() as u64, "donation metering: {d:?}");
+    // baseline runs download only the per-micro loss scalars
+    assert_eq!(d.downloaded_bytes, steps * n_micro as u64 * 4, "{d:?}");
+    assert!(t.last_grads.is_empty(), "baseline step must not download grads");
+}
+
+#[test]
+fn host_and_device_accumulation_paths_agree() {
+    // keep_micro_grads forces the host GradAccumulator path (Fig 13's
+    // setting); it must reproduce the device path's training trajectory.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut dev = Trainer::new(&rt, &root, tiny_cfg(false, 8), Some(&base)).unwrap();
+    if !dev.art.manifest.has_program("grad_accum") {
+        eprintln!("skipping: artifact predates grad_accum (regenerate with make artifacts)");
+        return;
+    }
+    let mut host = Trainer::new(&rt, &root, tiny_cfg(false, 8), Some(&base)).unwrap();
+    host.keep_micro_grads = true;
+
+    let n_micro = dev.cfg.global_batch / dev.art.manifest.config.model.micro_batch;
+    for step in 0..4 {
+        let dl = dev.sgd_step().unwrap();
+        let hl = host.sgd_step().unwrap();
+        assert!(
+            (dl - hl).abs() < 1e-5,
+            "step {step}: device loss {dl} != host loss {hl}"
+        );
+        // Fig 13 inputs: every micro gradient of the last global batch
+        assert_eq!(host.last_micro_grads.len(), n_micro);
+        let consistency =
+            fastforward::analysis::grads::batch_consistency(&host.last_micro_grads);
+        assert!(consistency.is_finite());
+        // host path keeps the mean gradient; device baseline path skips it
+        assert!(!host.last_grads.is_empty());
+    }
+    let dw = dev.trainables().unwrap();
+    let hw = host.trainables().unwrap();
+    for (a, b) in dw.iter().zip(hw.iter()) {
+        let max_d = a
+            .data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_d < 1e-5, "weights diverged between paths: {max_d}");
+    }
+}
+
+#[test]
 fn convergence_rule_disables_ff_eventually() {
     let rt = Runtime::cpu().unwrap();
     let root = artifacts_root();
