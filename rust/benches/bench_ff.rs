@@ -37,8 +37,15 @@ fn main() -> anyhow::Result<()> {
     println!("{}", sgd.report());
 
     // One simulated step = host axpy over trainables + 32-example forward.
+    // The probe direction only needs Δ_W's *geometry*: build it from the
+    // sync-free shapes API instead of forcing a device→host snapshot of
+    // the live weights every iteration.
+    let delta: Vec<fastforward::model::tensor::Tensor> = t
+        .trainable_shapes()
+        .iter()
+        .map(|s| fastforward::model::tensor::Tensor::ones(s))
+        .collect();
     let sim = bench("ff_simulated_step(axpy+val_fwd)", 1, 8, Duration::from_secs(2), || {
-        let delta = t.trainables().unwrap(); // same size as Δ_W
         t.tr_axpy_for_bench(&delta, 1e-9).unwrap();
         t.eval_val().unwrap();
     });

@@ -5,7 +5,8 @@
 //! training step; §Perf tracks the coordinator overhead = (sgd_step wall)
 //! − (program execute wall). Each section also reports the uploaded/
 //! downloaded/donated bytes it moved per iteration, using the runtime's
-//! transfer meters.
+//! transfer meters, and the whole run lands in `BENCH_runtime.json`
+//! (next to Cargo.toml) so the perf trajectory is tracked across PRs.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -13,6 +14,7 @@ use std::time::Duration;
 use fastforward::model::init::init_params;
 use fastforward::runtime::{Artifact, InputBuf, ParamSet, Runtime};
 use fastforward::util::bench::bench;
+use fastforward::util::json::Json;
 use fastforward::util::rng::Rng;
 
 fn artifacts_root() -> PathBuf {
@@ -22,6 +24,7 @@ fn artifacts_root() -> PathBuf {
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::cpu()?;
     let root = artifacts_root();
+    let mut report = Json::obj();
 
     // compile latency (fresh Artifact each iteration)
     let s = bench("compile/ff-tiny_lora_r8/eval_loss", 0, 3, Duration::from_secs(2), || {
@@ -29,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         art.program("eval_loss").unwrap();
     });
     println!("{}", s.report());
+    report = report.set("compile_eval_loss", s.to_json());
 
     let art = Artifact::load(&rt, &root.join("ff-tiny_lora_r8"))?;
     let man = &art.manifest;
@@ -51,6 +55,9 @@ fn main() -> anyhow::Result<()> {
     let per = rt.stats.snapshot().since(&t0).per_iter(s.iters as u64 + 1);
     println!("{}", s.report());
     println!("    transfers/iter: {}", per.report());
+    report = report
+        .set("upload_frozen", s.to_json())
+        .set("upload_frozen_transfers_per_iter", per.to_json());
 
     // dispatch with everything cached except the batch
     let t0 = rt.stats.snapshot();
@@ -68,6 +75,9 @@ fn main() -> anyhow::Result<()> {
     let per = rt.stats.snapshot().since(&t0).per_iter(s.iters as u64 + 2);
     println!("{}", s.report());
     println!("    transfers/iter: {}", per.report());
+    report = report
+        .set("execute_eval_loss", s.to_json())
+        .set("execute_eval_loss_transfers_per_iter", per.to_json());
 
     // donated steady-state step: grad_step (raw) feeds adam_apply with
     // every state/gradient buffer donated in place — the trainer's hot
@@ -129,5 +139,16 @@ fn main() -> anyhow::Result<()> {
         v.upload_count(),
         fastforward::runtime::human_bytes(per.donated_bytes),
     );
+    report = report
+        .set("donated_step", s.to_json())
+        .set("donated_step_transfers_per_iter", per.to_json())
+        .set(
+            "donated_step_state_uploads",
+            (tr.upload_count() + m.upload_count() + v.upload_count()) as i64,
+        );
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime.json");
+    std::fs::write(&out, report.to_string_pretty())?;
+    println!("wrote {}", out.display());
     Ok(())
 }

@@ -1,31 +1,46 @@
 //! Bench: end-to-end optimizer-step latency (the paper's train-time axis,
-//! Fig 3) plus the host↔device traffic behind it. Measures per-step wall
-//! time, uploaded/downloaded **bytes per Adam step** and **per FF probe**,
-//! and asserts-by-printing the steady-state transfer contract
-//! (docs/transfer-contract.md): param/optimizer upload counters stay flat,
-//! and with device-side gradient accumulation the *only* bytes uploaded
-//! per Adam step are the batch (tokens/targets/mask) plus the 4-byte step
-//! scalar — no O(|trainable|) gradient upload.
+//! Fig 3) plus the host↔device traffic behind it — in **both** step modes:
 //!
-//! Run: `cargo bench --offline` (after `make artifacts`).
+//! * `sync`      — drain interval 1: every step blocks on its loss
+//!   download (the pre-pipeline behaviour);
+//! * `pipelined` — the engine's deferred-readback ring + batch prefetch:
+//!   dispatch returns immediately, losses drain every K steps, and the
+//!   next batch uploads while the current step executes.
+//!
+//! The pipelined mode must be no slower per step; the wall-clock delta is
+//! the synchronization overhead the stream layer removed. Also measures
+//! uploaded/downloaded **bytes per Adam step** and **per FF probe**, and
+//! asserts-by-printing the steady-state transfer contract
+//! (docs/transfer-contract.md): with device-side gradient accumulation the
+//! *only* bytes uploaded per Adam step are the batch (tokens/targets/mask)
+//! plus the 4-byte step scalar — prefetch moves the upload one step
+//! earlier but does not change the total.
+//!
+//! Results additionally land in `BENCH_step.json` (next to Cargo.toml) so
+//! the perf trajectory is tracked across PRs instead of living only in
+//! stdout. Run: `cargo bench --offline` (after `make artifacts`).
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use fastforward::config::{presets, FfConfig};
-use fastforward::runtime::Runtime;
+use fastforward::runtime::{Runtime, SyncReason};
 use fastforward::train::pretrain::ensure_pretrained;
 use fastforward::train::trainer::Trainer;
 use fastforward::util::bench::bench;
+use fastforward::util::json::Json;
 
 fn artifacts_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+const PIPELINE_DRAIN: usize = 8;
+
 fn main() -> anyhow::Result<()> {
     fastforward::util::logging::init();
     let rt = Runtime::cpu()?;
     let root = artifacts_root();
+    let mut report = Json::obj();
 
     for model in ["ff-tiny", "ff-small"] {
         let base = ensure_pretrained(&rt, &root, model, None)?;
@@ -36,12 +51,15 @@ fn main() -> anyhow::Result<()> {
         let mut t = Trainer::new(&rt, &root, cfg.clone(), Some(&base))?;
 
         let tokens_per_step = (cfg.global_batch * t.art.manifest.config.model.seq_len) as f64;
+
+        // -- sync mode: drain-every-1, the old blocking behaviour --------
+        t.set_drain_interval(1);
         // warm the device-resident state before measuring steady state
         t.sgd_step()?;
         let (state_ups_0, _) = t.state_transfer_counts();
         let tr0 = t.transfers();
-        let s = bench(
-            &format!("sgd_step/{model}/global{}", cfg.global_batch),
+        let s_sync = bench(
+            &format!("sgd_step/sync/{model}/global{}", cfg.global_batch),
             2,
             10,
             Duration::from_secs(3),
@@ -49,48 +67,77 @@ fn main() -> anyhow::Result<()> {
                 t.sgd_step().unwrap();
             },
         );
-        let per_step = t.transfers().since(&tr0).per_iter(s.iters as u64 + 2);
+        let per_step = t.transfers().since(&tr0).per_iter(s_sync.iters as u64 + 2);
         let (state_ups_1, state_downs) = t.state_transfer_counts();
         println!(
             "{}  ({:.0} tokens/s)",
-            s.report(),
-            tokens_per_step / s.mean_secs()
+            s_sync.report(),
+            tokens_per_step / s_sync.mean_secs()
         );
         println!("    transfers/adam_step: {}", per_step.report());
         println!(
             "    state uploads {} → {} across {} steps ({}), state downloads {}",
             state_ups_0,
             state_ups_1,
-            s.iters + 2,
+            s_sync.iters + 2,
             if state_ups_1 == state_ups_0 { "flat: device-resident" } else { "NOT FLAT" },
             state_downs,
         );
         // The transfer contract's acceptance line: with device-side
         // accumulation the per-step upload is the batch plus one 4-byte
         // step scalar — gradients (4·|trainable| bytes) never cross.
-        let mc = &t.art.manifest.config.model;
+        let mc = t.art.manifest.config.model.clone();
         let n_micro = cfg.global_batch / mc.micro_batch;
-        let batch_bytes =
-            (n_micro * 3 * mc.micro_batch * mc.seq_len * 4 + 4) as u64;
-        let grad_bytes = 4 * t.tr.numel() as u64;
+        let batch_bytes = (n_micro * 3 * mc.micro_batch * mc.seq_len * 4 + 4) as u64;
+        let grad_bytes = 4 * t.trainable_numel() as u64;
+        let batch_only = per_step.uploaded_bytes == batch_bytes;
         println!(
             "    upload/adam_step = {} vs batch-only expectation {} ({}); \
              host-path gradient upload would add {}",
             per_step.uploaded_bytes,
             batch_bytes,
-            if per_step.uploaded_bytes == batch_bytes {
-                "EXACT: batch data only"
-            } else {
-                "MISMATCH"
-            },
+            if batch_only { "EXACT: batch data only" } else { "MISMATCH" },
             fastforward::runtime::human_bytes(grad_bytes),
+        );
+
+        // -- pipelined mode: deferred readback + prefetch ----------------
+        // Fresh trainer so the comparison starts from the same state.
+        let mut tp = Trainer::new(&rt, &root, cfg.clone(), Some(&base))?;
+        tp.set_drain_interval(PIPELINE_DRAIN);
+        tp.sgd_step()?; // warm state; also primes the prefetch slot
+        let tr0 = tp.transfers();
+        let s_pipe = bench(
+            &format!("sgd_step/pipelined-K{PIPELINE_DRAIN}/{model}/global{}", cfg.global_batch),
+            2,
+            10,
+            Duration::from_secs(3),
+            || {
+                tp.dispatch_sgd_step().unwrap();
+            },
+        );
+        // retire in-flight steps outside the timed region, then attribute
+        // transfers over the dispatched count
+        tp.drain_pending(SyncReason::Shutdown)?;
+        let per_step_pipe = tp.transfers().since(&tr0).per_iter(s_pipe.iters as u64 + 2);
+        println!(
+            "{}  ({:.0} tokens/s)",
+            s_pipe.report(),
+            tokens_per_step / s_pipe.mean_secs()
+        );
+        println!("    transfers/adam_step: {}", per_step_pipe.report());
+        println!("    stream: {}", tp.stream_stats().report());
+        let speedup = s_sync.mean_secs() / s_pipe.mean_secs();
+        println!(
+            "    pipelined vs sync: {:.2}x per step ({})",
+            speedup,
+            if speedup >= 1.0 { "no slower: OK" } else { "SLOWER — pipeline regression" },
         );
 
         // val-set inference = one FF probe's cost; batch buffers cached
         // after the first call, so steady-state probes upload nothing.
         t.eval_val()?; // builds the EvalCache
         let tr0 = t.transfers();
-        let s = bench(
+        let s_probe = bench(
             &format!("ff_val_probe/{model}/32ex"),
             2,
             10,
@@ -99,9 +146,31 @@ fn main() -> anyhow::Result<()> {
                 t.eval_val().unwrap();
             },
         );
-        let per_probe = t.transfers().since(&tr0).per_iter(s.iters as u64 + 2);
-        println!("{}", s.report());
+        let per_probe = t.transfers().since(&tr0).per_iter(s_probe.iters as u64 + 2);
+        println!("{}", s_probe.report());
         println!("    transfers/ff_probe (fixed W): {}", per_probe.report());
+
+        report = report.set(
+            model,
+            Json::obj()
+                .set("tokens_per_step", tokens_per_step)
+                .set("sync", s_sync.to_json())
+                .set("pipelined", s_pipe.to_json())
+                .set("pipelined_drain_interval", PIPELINE_DRAIN)
+                .set("pipelined_speedup", speedup)
+                .set("transfers_per_step_sync", per_step.to_json())
+                .set("transfers_per_step_pipelined", per_step_pipe.to_json())
+                .set("batch_bytes_expected", batch_bytes as i64)
+                .set("upload_is_batch_only", batch_only)
+                .set("state_uploads_flat", state_ups_1 == state_ups_0)
+                .set("donations_per_step", per_step.donations as i64)
+                .set("ff_probe", s_probe.to_json())
+                .set("transfers_per_probe", per_probe.to_json()),
+        );
     }
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_step.json");
+    std::fs::write(&out, report.to_string_pretty())?;
+    println!("wrote {}", out.display());
     Ok(())
 }

@@ -1,12 +1,27 @@
-//! Batch assembly: examples → micro-batches → global batches.
+//! Batch assembly: examples → micro-batches → global batches, plus the
+//! device-side staging half of the step pipeline.
 //!
 //! The coordinator implements the paper's micro/global batch structure
 //! (Appendix E tables): a *global* optimizer batch is split into
 //! `global/micro` micro-batches whose gradients the trainer accumulates
 //! before one Adam application. Epoch order is a seeded shuffle, identical
 //! between the baseline and FF runs.
+//!
+//! [`BatchStager`] is the upload side of the pipelined step engine
+//! (`train::engine`): a double buffer of device-resident global batches.
+//! While step *N* executes on the device, the stager uploads step *N+1*'s
+//! tokens/targets/mask — PJRT uploads are asynchronous, so the copy
+//! overlaps the in-flight computation instead of serializing in front of
+//! the next dispatch. Byte totals are unchanged (each batch uploads
+//! exactly once); only the *when* moves one step earlier. See
+//! `docs/step-pipeline.md`.
+
+use std::rc::Rc;
+
+use anyhow::Result;
 
 use crate::data::corpus::Example;
+use crate::runtime::Runtime;
 use crate::util::rng::Rng;
 
 /// One device-shaped batch: flattened `[b, t]` row-major buffers.
@@ -134,6 +149,97 @@ impl<'a> Batcher<'a> {
     }
 }
 
+/// One micro-batch resident on the device: the three input buffers every
+/// `grad_step`/`eval_loss` dispatch consumes, uploaded by [`BatchStager`].
+pub struct StagedMicro {
+    pub tokens: xla::PjRtBuffer,
+    pub targets: xla::PjRtBuffer,
+    pub mask: xla::PjRtBuffer,
+}
+
+/// One optimizer step's worth of device-resident input data, plus the
+/// host-side scalars the coordinator still needs (FLOPs charging).
+pub struct StagedBatch {
+    pub micro: Vec<StagedMicro>,
+    /// Σ b·t over micro-batches (what the forward pass computes over).
+    pub total_tokens: usize,
+}
+
+impl StagedBatch {
+    /// Upload every micro-batch of `global` (tokens/targets/mask each).
+    pub fn upload(rt: &Runtime, global: &GlobalBatch) -> Result<StagedBatch> {
+        let mut micro = Vec::with_capacity(global.micro.len());
+        for mb in &global.micro {
+            micro.push(StagedMicro {
+                tokens: rt.upload_i32(&mb.tokens, &[mb.b, mb.t])?,
+                targets: rt.upload_i32(&mb.targets, &[mb.b, mb.t])?,
+                mask: rt.upload_f32(&mb.mask, &[mb.b, mb.t])?,
+            });
+        }
+        Ok(StagedBatch { micro, total_tokens: global.total_tokens() })
+    }
+}
+
+/// Double-buffered batch staging (see module docs): holds at most one
+/// pre-uploaded global batch. The step engine calls
+/// [`BatchStager::take_or_stage`] at the top of each step (hit in steady
+/// state — the batch was uploaded while the previous step executed) and
+/// [`BatchStager::prefetch`] right after dispatching, while the device is
+/// busy.
+pub struct BatchStager {
+    rt: Rc<Runtime>,
+    staged: Option<StagedBatch>,
+    /// Steps that found their batch already staged (pipeline hit rate).
+    hits: u64,
+    misses: u64,
+}
+
+impl BatchStager {
+    pub fn new(rt: &Rc<Runtime>) -> BatchStager {
+        BatchStager { rt: Rc::clone(rt), staged: None, hits: 0, misses: 0 }
+    }
+
+    /// The batch for the step starting now: the prefetched one when
+    /// available (steady state), otherwise staged on the spot from `next`
+    /// (first step, or a consumer that skipped `prefetch`).
+    pub fn take_or_stage(
+        &mut self,
+        mut next: impl FnMut() -> GlobalBatch,
+    ) -> Result<StagedBatch> {
+        match self.staged.take() {
+            Some(b) => {
+                self.hits += 1;
+                Ok(b)
+            }
+            None => {
+                self.misses += 1;
+                StagedBatch::upload(&self.rt, &next())
+            }
+        }
+    }
+
+    /// Stage the *next* step's batch now, so its upload overlaps the
+    /// current step's in-flight device work. No-op if a batch is already
+    /// staged.
+    pub fn prefetch(&mut self, mut next: impl FnMut() -> GlobalBatch) -> Result<()> {
+        if self.staged.is_none() {
+            self.staged = Some(StagedBatch::upload(&self.rt, &next())?);
+        }
+        Ok(())
+    }
+
+    /// Whether a batch is currently staged ahead.
+    pub fn is_primed(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    /// (steps served from the prefetched slot, steps that had to upload
+    /// inline).
+    pub fn hit_counts(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
 /// Chunk a fixed evaluation split into `eval_batch`-sized batches, padding
 /// the tail by repeating the first examples (extra rows get zero masks so
 /// they do not contribute to the mean — handled by the caller via weights).
@@ -245,5 +351,55 @@ mod tests {
     fn global_not_multiple_of_micro_panics() {
         let exs = examples();
         Batcher::new(&exs, 8, 12, 0);
+    }
+
+    #[test]
+    fn stager_double_buffers_without_extra_uploads() {
+        let rt = Runtime::cpu().unwrap();
+        let exs = examples();
+        let mut bt = Batcher::new(&exs, 8, 16, 4);
+        let mut stager = BatchStager::new(&rt);
+        assert!(!stager.is_primed());
+
+        // first step: nothing staged — uploads inline (miss)
+        let before = rt.stats.snapshot();
+        let b0 = stager.take_or_stage(|| bt.next_global()).unwrap();
+        let d0 = rt.stats.snapshot().since(&before);
+        assert_eq!(b0.micro.len(), 2);
+        assert_eq!(b0.total_tokens, 16 * 64);
+        assert_eq!(d0.uploads, 3 * 2, "tokens/targets/mask per micro");
+
+        // prefetch fills the slot once; a second prefetch is free
+        let before = rt.stats.snapshot();
+        stager.prefetch(|| bt.next_global()).unwrap();
+        assert!(stager.is_primed());
+        stager.prefetch(|| bt.next_global()).unwrap();
+        let d1 = rt.stats.snapshot().since(&before);
+        assert_eq!(d1.uploads, 3 * 2, "double prefetch must not re-upload");
+
+        // steady state: the staged batch is served with zero uploads
+        let before = rt.stats.snapshot();
+        let b1 = stager.take_or_stage(|| panic!("staged batch must be served")).unwrap();
+        assert_eq!(rt.stats.snapshot().since(&before).uploads, 0);
+        assert_eq!(b1.micro.len(), 2);
+        assert_eq!(stager.hit_counts(), (1, 1));
+    }
+
+    #[test]
+    fn staged_batch_bytes_match_host_batch() {
+        let rt = Runtime::cpu().unwrap();
+        let exs = examples();
+        let mut bt = Batcher::new(&exs, 8, 32, 7);
+        let g = bt.next_global();
+        let want: u64 = g
+            .micro
+            .iter()
+            .map(|m| (m.tokens.len() + m.targets.len() + m.mask.len()) as u64 * 4)
+            .sum();
+        let before = rt.stats.snapshot();
+        let staged = StagedBatch::upload(&rt, &g).unwrap();
+        let d = rt.stats.snapshot().since(&before);
+        assert_eq!(d.uploaded_bytes, want, "prefetch moves the same bytes");
+        assert_eq!(staged.total_tokens, g.total_tokens());
     }
 }

@@ -13,6 +13,6 @@ pub mod corpus;
 pub mod pipeline;
 pub mod vocab;
 
-pub use batcher::{Batch, Batcher, GlobalBatch};
+pub use batcher::{Batch, BatchStager, Batcher, GlobalBatch, StagedBatch, StagedMicro};
 pub use corpus::{make_dataset, Dataset, Example};
 pub use vocab::Vocab;

@@ -76,6 +76,13 @@ pub fn run_pair(ctx: &ExpContext, artifact: &str, model: &str, task: &str) -> Re
         eval_every: ctx.scale.eval_every,
         max_steps: max_steps * 3,
     })?;
+    // Both runs drove the same pipelined engine path (Trainer::run →
+    // Engine::dispatch_step); surface how the readback ring behaved.
+    crate::debug!(
+        "[{model}/{task}] step pipeline: baseline [{}] vs ff [{}]",
+        baseline_trainer.stream_stats().report(),
+        ff_trainer.stream_stats().report(),
+    );
     crate::info!(
         "[{model}/{task}] baseline {:.4} @{} steps vs FF {:.4} @{}+{} steps → {:.1}% FLOPs, {:.1}% time saved",
         baseline.final_test_loss,

@@ -61,7 +61,7 @@ impl FfController {
             interval,
             consecutive_failures: 0,
             permanently_off: false,
-        stages: Vec::new(),
+            stages: Vec::new(),
         }
     }
 
@@ -114,9 +114,14 @@ impl FfController {
             self.consecutive_failures = 0;
         }
         if self.cfg.adaptive_interval {
-            // §7 future work: productive stages → FF sooner; fizzles → later.
+            // §7 future work: productive stages → FF sooner; fizzles →
+            // later. The interval is clamped to [1, 4·t_interval]: it can
+            // never shrink below one SGD step (Δ_W must reflect at least
+            // one fresh optimizer step between stages) and growth is
+            // capped so a long fizzle streak cannot push FF out of a run
+            // entirely before the §5.1 convergence rule gets to decide.
             if stats.tau_star >= 4 {
-                self.interval = (self.interval.saturating_sub(1)).max(2);
+                self.interval = (self.interval.saturating_sub(1)).max(1);
             } else if stats.tau_star == 0 {
                 self.interval = (self.interval + 2).min(4 * self.cfg.t_interval);
             }
@@ -232,5 +237,86 @@ mod tests {
             c.on_ff_stage(stats(3 + i, 0));
         }
         assert!(c.interval() <= 24); // bounded
+    }
+
+    #[test]
+    fn adaptive_interval_never_shrinks_below_one() {
+        // A long streak of highly productive stages drives the interval
+        // down, but never below one SGD step between stages — and an
+        // interval of 1 stays 1 rather than bouncing back up.
+        let mut c = FfController::new(FfConfig {
+            adaptive_interval: true,
+            t_interval: 3,
+            ..FfConfig::default()
+        });
+        for i in 0..20 {
+            c.on_ff_stage(stats(i, 10));
+            assert!(c.interval() >= 1, "interval hit {} at stage {i}", c.interval());
+        }
+        assert_eq!(c.interval(), 1);
+        c.on_ff_stage(stats(20, 10));
+        assert_eq!(c.interval(), 1, "floor must be stable, not oscillating");
+    }
+
+    #[test]
+    fn adaptive_interval_growth_is_capped_at_4x_base() {
+        for t_interval in [1usize, 2, 6] {
+            let mut c = FfController::new(FfConfig {
+                adaptive_interval: true,
+                t_interval,
+                ..FfConfig::default()
+            });
+            for i in 0..100 {
+                c.on_ff_stage(stats(i, 0));
+                assert!(
+                    c.interval() <= 4 * t_interval,
+                    "interval {} exceeds cap {} (base {t_interval})",
+                    c.interval(),
+                    4 * t_interval
+                );
+            }
+            assert_eq!(c.interval(), 4 * t_interval, "cap is reached exactly");
+        }
+    }
+
+    #[test]
+    fn mid_tau_stages_leave_adaptive_interval_unchanged() {
+        // τ* in 1..=3 is neither "productive" (≥4) nor a fizzle (0):
+        // the interval must hold steady.
+        let mut c = FfController::new(FfConfig {
+            adaptive_interval: true,
+            t_interval: 5,
+            ..FfConfig::default()
+        });
+        for i in 0..10 {
+            c.on_ff_stage(stats(i, 1 + (i % 3)));
+        }
+        assert_eq!(c.interval(), 5);
+    }
+
+    #[test]
+    fn convergence_rule_still_fires_with_adaptive_interval_on() {
+        // §5.1: consecutive empty stages permanently disable FF even while
+        // the adaptive rule is simultaneously growing the interval.
+        let mut c = FfController::new(FfConfig {
+            adaptive_interval: true,
+            t_interval: 2,
+            warmup_steps: 0,
+            convergence_patience: Some(3),
+            ..FfConfig::default()
+        });
+        for i in 0..3 {
+            assert!(!c.is_permanently_off(), "disabled too early at stage {i}");
+            c.on_ff_stage(stats(i, 0));
+        }
+        assert!(c.is_permanently_off());
+        assert_eq!(c.next(), FfDecision::Sgd);
+        // further stats must not resurrect FF, whatever the interval says
+        c.on_ff_stage(stats(3, 10));
+        assert!(c.is_permanently_off());
+        for _ in 0..50 {
+            c.on_sgd_step();
+            assert_eq!(c.next(), FfDecision::Sgd);
+        }
     }
 }

@@ -14,7 +14,16 @@ use anyhow::Result;
 
 /// The state a line search extrapolates: `apply` moves W by +Δ, `revert`
 /// by −Δ, `eval` measures the tiny-validation-set loss at the current W.
+///
+/// `begin` runs once before the first simulated step. Targets backed by
+/// the pipelined step engine use it to drain the deferred-readback ring —
+/// a line search moves W host-side, so every dispatched optimizer step
+/// must retire first (see `docs/step-pipeline.md`). The default is a
+/// no-op for host-only targets.
 pub trait SearchTarget {
+    fn begin(&mut self) -> Result<()> {
+        Ok(())
+    }
     fn apply(&mut self) -> Result<()>;
     fn revert(&mut self) -> Result<()>;
     fn eval(&mut self) -> Result<f32>;
@@ -60,6 +69,7 @@ pub fn line_search_thresholded(
     max_tau: usize,
     min_rel: f32,
 ) -> Result<LineSearchResult> {
+    target.begin()?;
     let mut best = baseline;
     let mut losses = Vec::new();
     let mut tau = 0usize;
@@ -172,6 +182,39 @@ mod tests {
         }
         let r = line_search(&mut Flat, 1.0, 50).unwrap();
         assert_eq!(r.tau_star, 0);
+    }
+
+    #[test]
+    fn begin_runs_once_before_the_first_apply() {
+        struct Tracked {
+            inner: Quad,
+            begun: usize,
+            applied_before_begin: bool,
+        }
+        impl SearchTarget for Tracked {
+            fn begin(&mut self) -> Result<()> {
+                self.begun += 1;
+                Ok(())
+            }
+            fn apply(&mut self) -> Result<()> {
+                if self.begun == 0 {
+                    self.applied_before_begin = true;
+                }
+                self.inner.apply()
+            }
+            fn revert(&mut self) -> Result<()> {
+                self.inner.revert()
+            }
+            fn eval(&mut self) -> Result<f32> {
+                self.inner.eval()
+            }
+        }
+        let mut t = Tracked { inner: Quad::new(3.0), begun: 0, applied_before_begin: false };
+        let base = t.inner.loss();
+        let r = line_search(&mut t, base, 10).unwrap();
+        assert_eq!(r.tau_star, 3);
+        assert_eq!(t.begun, 1, "begin is a once-per-search boundary hook");
+        assert!(!t.applied_before_begin, "W must not move before begin()");
     }
 
     #[test]

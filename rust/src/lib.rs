@@ -4,13 +4,15 @@
 //! (Rahamim, Kangaslahti, Saphra, Belinkov — EMNLP 2024) as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the training coordinator: data pipeline, micro-
-//!   batch scheduler with device-side gradient accumulation (per-micro
-//!   gradients never visit the host), the Fast Forward controller
-//!   (interval scheduling + line search on a tiny validation set), FLOPs
-//!   and transfer accounting, experiments, and the PJRT runtime that
-//!   executes AOT-compiled artifacts with buffer donation on the optimizer
-//!   path.
+//! * **L3 (this crate)** — the training coordinator, itself split into a
+//!   pipelined three-layer step stack (`docs/step-pipeline.md`): a
+//!   schedule-policy `Trainer` (Fast Forward controller, stop rules, eval
+//!   cadence, FLOPs/transfer accounting) over a `StepEngine` dispatch
+//!   layer (device-side gradient accumulation with buffer donation, batch
+//!   prefetch, Δ_W tracking) over an `ExecStream` deferred-readback ring
+//!   (loss scalars drain every K steps instead of blocking each
+//!   micro-batch), plus the data pipeline, experiments, and the PJRT
+//!   runtime that executes AOT-compiled artifacts.
 //! * **L2 (python/compile/model.py)** — the transformer fwd/bwd in JAX with
 //!   LoRA / DoRA / full-rank train modes, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — the fused LoRA-matmul Pallas kernel,

@@ -108,6 +108,7 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
         sum.train_seconds
     );
     println!("host↔device: {}", sum.transfers.report());
+    println!("step pipeline: {}", t.stream_stats().report());
     for s in &t.ffc.stages {
         println!(
             "  ff stage {:>2} @step {:>4}: τ*={:<3} val {:.4}→{:.4}",

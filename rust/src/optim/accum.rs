@@ -45,16 +45,17 @@ impl DeviceGradAccumulator {
         self.count
     }
 
-    /// Fold in one micro-batch: `grads` are the raw `grad_step` output
-    /// buffers (loss leaf already stripped), `loss` its decoded scalar.
-    /// The first call adopts the buffers as the accumulator outright;
-    /// later calls dispatch `accum_prog` (`acc + g`), donating the
-    /// previous accumulator so its allocation is reused for the new sum.
-    pub fn add_raw(
+    /// Fold in one micro-batch's gradient buffers **without** a decoded
+    /// loss — the pipelined step engine keeps the loss scalar deferred on
+    /// the device (`runtime::stream::PendingLoss`) and never sees its
+    /// value. The first call adopts the buffers as the accumulator
+    /// outright; later calls dispatch `accum_prog` (`acc + g`), donating
+    /// the previous accumulator so its allocation is reused for the new
+    /// sum.
+    pub fn add_raw_bufs(
         &mut self,
         accum_prog: &Program,
         grads: Vec<xla::PjRtBuffer>,
-        loss: f32,
     ) -> Result<()> {
         if self.acc.is_empty() {
             self.acc = grads;
@@ -71,23 +72,36 @@ impl DeviceGradAccumulator {
             self.acc = accum_prog.execute_raw_donated(inputs)?;
             // `grads` buffers die here: their allocations free immediately
         }
-        self.loss_sum += loss as f64;
         self.count += 1;
         Ok(())
     }
 
-    /// Scale the accumulated sum to the mean (`grad_finalize`, donated) and
-    /// return the mean-gradient buffers plus the mean micro-batch loss,
-    /// resetting the accumulator. `inv_n` must hold `1.0 / count()` as a
-    /// device scalar; a single-micro step skips the dispatch entirely (the
-    /// mean of one gradient is itself).
-    pub fn finalize(
+    /// Fold in one micro-batch: `grads` are the raw `grad_step` output
+    /// buffers (loss leaf already stripped), `loss` its decoded scalar.
+    /// Synchronous-readback variant of [`Self::add_raw_bufs`], kept for
+    /// callers that already hold the loss host-side.
+    pub fn add_raw(
+        &mut self,
+        accum_prog: &Program,
+        grads: Vec<xla::PjRtBuffer>,
+        loss: f32,
+    ) -> Result<()> {
+        self.add_raw_bufs(accum_prog, grads)?;
+        self.loss_sum += loss as f64;
+        Ok(())
+    }
+
+    /// Scale the accumulated sum to the mean (`grad_finalize`, donated)
+    /// and return the mean-gradient buffers, resetting the accumulator.
+    /// `inv_n` must hold `1.0 / count()` as a device scalar; a
+    /// single-micro step skips the dispatch entirely (the mean of one
+    /// gradient is itself).
+    pub fn finalize_bufs(
         &mut self,
         finalize_prog: &Program,
         inv_n: &xla::PjRtBuffer,
-    ) -> Result<(Vec<xla::PjRtBuffer>, f32)> {
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         assert!(self.count > 0, "finalize on empty accumulator");
-        let mean_loss = (self.loss_sum / self.count as f64) as f32;
         let acc = std::mem::take(&mut self.acc);
         let mean = if self.count == 1 {
             acc
@@ -99,6 +113,19 @@ impl DeviceGradAccumulator {
         };
         self.count = 0;
         self.loss_sum = 0.0;
+        Ok(mean)
+    }
+
+    /// [`Self::finalize_bufs`] plus the mean of the losses fed through
+    /// [`Self::add_raw`] (the synchronous-readback pairing).
+    pub fn finalize(
+        &mut self,
+        finalize_prog: &Program,
+        inv_n: &xla::PjRtBuffer,
+    ) -> Result<(Vec<xla::PjRtBuffer>, f32)> {
+        assert!(self.count > 0, "finalize on empty accumulator");
+        let mean_loss = (self.loss_sum / self.count as f64) as f32;
+        let mean = self.finalize_bufs(finalize_prog, inv_n)?;
         Ok((mean, mean_loss))
     }
 }

@@ -51,6 +51,7 @@
 
 pub mod manifest;
 pub mod params;
+pub mod stream;
 
 use std::cell::Cell;
 use std::collections::BTreeMap;
@@ -62,6 +63,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 pub use manifest::{ArtifactIndex, Dtype, IoSlot, Manifest, ProgramSpec};
 pub use params::{ParamSet, SyncState};
+pub use stream::{ExecStream, PendingLoss, PendingStep, ResolvedStep, StreamStats, SyncReason};
 
 use crate::model::tensor::Tensor;
 
@@ -164,6 +166,18 @@ impl TransferSnapshot {
             ));
         }
         s
+    }
+
+    /// JSON form for the machine-readable bench outputs
+    /// (`BENCH_step.json` / `BENCH_runtime.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("uploads", self.uploads as i64)
+            .set("uploaded_bytes", self.uploaded_bytes as i64)
+            .set("downloads", self.downloads as i64)
+            .set("downloaded_bytes", self.downloaded_bytes as i64)
+            .set("donations", self.donations as i64)
+            .set("donated_bytes", self.donated_bytes as i64)
     }
 }
 

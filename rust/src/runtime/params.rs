@@ -147,6 +147,14 @@ impl ParamSet {
         &self.host[i].shape
     }
 
+    /// All tensor shapes in spec order. Like [`ParamSet::shape`], valid in
+    /// any sync state: callers that only need the *geometry* of the set
+    /// (Δ_W-sized probe directions, log lines, size accounting) must not
+    /// pay a device→host sync for it.
+    pub fn shapes(&self) -> Vec<Vec<usize>> {
+        self.host.iter().map(|t| t.shape.clone()).collect()
+    }
+
     /// True when no tensor is `DeviceAhead` or `Donated` — host reads are
     /// valid.
     pub fn host_in_sync(&self) -> bool {

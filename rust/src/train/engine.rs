@@ -1,0 +1,613 @@
+//! The step engine: program dispatch, donated-buffer chaining, batch
+//! prefetch, and deferred loss readback — everything between the schedule
+//! policy ([`crate::train::trainer::Trainer`]) and the PJRT runtime.
+//!
+//! The training stack is three layers (see `docs/step-pipeline.md`):
+//!
+//! ```text
+//!   Trainer (policy)      — FF decisions, stop rules, eval cadence, logs
+//!      │  Engine trait (narrow: dispatch / sync / eval / snapshot)
+//!   StepEngine (dispatch) — micro-batch loop, donation chains, prefetch,
+//!      │                    TransferStats bookkeeping, Δ_W tracking
+//!   ExecStream (stream)   — deferred loss readback ring
+//! ```
+//!
+//! [`Engine::dispatch_step`] runs one Adam step *without* waiting for
+//! its loss: `grad_step` executes in raw mode per micro-batch, loss
+//! scalars stay on the device as [`PendingLoss`] handles, gradients fold
+//! into the donated [`DeviceGradAccumulator`], and `adam_apply` retires
+//! the step with every state buffer donated in place. Before returning,
+//! the engine **prefetches** the next global batch through
+//! [`BatchStager`] so its upload overlaps the in-flight device work, then
+//! pushes the step's pending losses into the [`ExecStream`] ring — which
+//! drains every K steps or at any forced boundary (FF stage, eval,
+//! snapshot, shutdown). Dispatching this way removes every per-micro-batch
+//! host synchronization from the steady-state hot loop while keeping the
+//! transfer contract unchanged: batch bytes + one 4-byte step scalar up,
+//! one 4-byte loss per micro back (later), zero state bytes either way.
+//!
+//! The [`Engine`] trait is the narrow surface the policy layer is written
+//! against; FF line-search probes, analysis snapshots, and the experiment
+//! pair-runs all reach the device through it, so there is exactly one
+//! dispatch path to keep correct.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{ensure, Result};
+
+use crate::data::batcher::{Batch, BatchStager, StagedBatch};
+use crate::data::corpus::Example;
+use crate::data::pipeline::Pipeline;
+use crate::model::tensor::Tensor;
+use crate::optim::accum::{DeviceGradAccumulator, GradAccumulator};
+use crate::optim::delta::DeltaTracker;
+use crate::runtime::{
+    Artifact, ExecStream, InputBuf, ParamSet, PendingLoss, PendingStep, Program, ResolvedStep,
+    Runtime, StreamStats, SyncReason, TransferSnapshot,
+};
+use crate::train::eval_cache::{EvalCache, ExampleScratch, LossAccum};
+
+/// Default deferred-readback ring depth: losses are drained every K
+/// dispatched steps unless a boundary forces an earlier sync.
+pub const DEFAULT_DRAIN_INTERVAL: usize = 8;
+
+/// Per-step knobs the policy layer passes down — the engine itself holds
+/// no schedule state beyond the step counter.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOptions {
+    /// Learning rate for this step (the cached device scalar re-uploads
+    /// when it changes — lr sweeps mutate it mid-run).
+    pub lr: f32,
+    /// Track Δ_W = W_t − W_{t−1} across this step (FF needs it; costs one
+    /// trainable-set download per step).
+    pub track_delta: bool,
+    /// Keep every per-micro gradient host-side (Fig 13) — forces the host
+    /// accumulation reference path.
+    pub keep_micro_grads: bool,
+    /// Download the mean gradient even when Δ_W tracking doesn't require
+    /// it (Fig 6 cosine history).
+    pub keep_host_grads: bool,
+}
+
+/// What one `dispatch_step` produced. The step's own loss is usually still
+/// on the device — `resolved` carries whichever *earlier* steps the ring
+/// chose to drain (possibly including this one, when the drain interval
+/// was reached or the host path resolved synchronously).
+pub struct StepDispatch {
+    /// Monotone step id (the pre-step Adam counter); resolution is FIFO.
+    pub ticket: u64,
+    /// b·t token positions this step computed over (FLOPs charging).
+    pub tokens: usize,
+    /// Steps drained by this dispatch, in ticket order.
+    pub resolved: Vec<ResolvedStep>,
+    /// Mean gradient, host-side — non-empty iff the step downloaded it
+    /// (host path, `track_delta`, or `keep_host_grads`).
+    pub mean_grads: Vec<Tensor>,
+    /// Per-micro gradients — non-empty iff `keep_micro_grads`.
+    pub micro_grads: Vec<Vec<Tensor>>,
+}
+
+/// Which cached evaluation split to measure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalSplit {
+    Val,
+    Test,
+}
+
+/// One split (or example) evaluation: the token-weighted mean loss plus
+/// the token positions computed over. FLOPs charging stays with the
+/// policy layer — val probes bill as FF inference, test evals as
+/// measurement — so the engine reports raw counts only.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalMeasure {
+    pub loss: f32,
+    pub tokens: usize,
+}
+
+/// The narrow dispatch surface the policy layer (and everything above it:
+/// line-search probes, experiments, benches) uses to reach the device.
+pub trait Engine {
+    /// Dispatch one Adam step over the next global batch. Does **not**
+    /// wait for the step's loss unless the ring drains.
+    fn dispatch_step(&mut self, opts: &StepOptions) -> Result<StepDispatch>;
+    /// Force the deferred-readback ring to drain (FF boundary, eval,
+    /// snapshot, shutdown, or a caller that needs a loss value now).
+    fn sync(&mut self, reason: SyncReason) -> Result<Vec<ResolvedStep>>;
+    /// Steps currently awaiting readback.
+    fn pending_depth(&self) -> usize;
+    /// Set the ring's drain interval (1 = fully synchronous).
+    fn set_drain_interval(&mut self, k: usize);
+    fn stream_stats(&self) -> &StreamStats;
+    /// Adam steps dispatched so far.
+    fn adam_steps(&self) -> usize;
+    /// Token-weighted mean loss over a cached split (buffers upload once,
+    /// on the first call, and are reused by every later probe).
+    fn eval_split(&mut self, split: EvalSplit) -> Result<EvalMeasure>;
+    /// Loss of a single example through the eval program (QA scoring).
+    fn eval_example(&mut self, ex: &Example) -> Result<EvalMeasure>;
+    /// Δ_W of the most recent tracked step, if any.
+    fn delta(&self) -> Option<&[Tensor]>;
+    /// `W += alpha·delta` on the live trainables (FF simulated step).
+    fn axpy_trainables(&mut self, alpha: f32, delta: &[Tensor]) -> Result<()>;
+    /// Trainable tensor shapes — **no** device→host sync (geometry is
+    /// fixed at construction). Callers that only need sizes for probe
+    /// directions or log lines must use this, not a snapshot.
+    fn trainable_shapes(&self) -> Vec<Vec<usize>>;
+    /// Number of trainable tensors (sync-free).
+    fn trainable_count(&self) -> usize;
+    /// Total trainable elements (sync-free).
+    fn trainable_numel(&self) -> usize;
+    /// Current trainable values (W_t), lazily downloading only the
+    /// device-ahead tensors of the trainable set.
+    fn trainable_snapshot(&mut self) -> Result<Vec<Tensor>>;
+    /// Overwrite the trainables from a snapshot (host becomes
+    /// authoritative).
+    fn restore_trainables(&mut self, snap: &[Tensor]);
+    /// All parameters by name (checkpointing). Downloads lazily and only
+    /// the trainable set — frozen params are never device-written.
+    fn named_params(&mut self) -> Result<BTreeMap<String, Tensor>>;
+    /// Host↔device traffic attributable to this engine since construction.
+    fn transfers(&self) -> TransferSnapshot;
+    /// (uploads, downloads) summed over the trainable/m/v ParamSets.
+    fn state_transfer_counts(&self) -> (u64, u64);
+}
+
+/// How a step's micro losses come back: deferred device buffers (device
+/// accumulation) or values the decoded host path already holds.
+enum StepLosses {
+    Deferred(Vec<PendingLoss>),
+    Immediate { mean_loss: f32, micro_losses: Vec<f32> },
+}
+
+/// The concrete engine (see module docs).
+pub struct StepEngine {
+    rt: Rc<Runtime>,
+    art: Rc<Artifact>,
+    // parameter + optimizer state
+    tr: ParamSet,
+    fr: ParamSet,
+    m: ParamSet,
+    v: ParamSet,
+    adam_steps: usize,
+    // programs
+    grad_prog: Rc<Program>,
+    adam_prog: Rc<Program>,
+    eval_prog: Rc<Program>,
+    /// Device-side accumulation pair (`grad_accum`/`grad_finalize`);
+    /// `None` for artifacts that predate them — the engine then falls back
+    /// to the host [`GradAccumulator`] path.
+    grad_accum_prog: Option<Rc<Program>>,
+    grad_finalize_prog: Option<Rc<Program>>,
+    /// Cached learning-rate scalar buffer, keyed by the lr value it holds.
+    lr_buf: Option<(f32, xla::PjRtBuffer)>,
+    /// Cached `1/n_micro` scalar for `grad_finalize`, keyed by micro count.
+    inv_n_buf: Option<(usize, xla::PjRtBuffer)>,
+    // pipeline
+    pipeline: Pipeline,
+    stager: BatchStager,
+    stream: ExecStream,
+    delta: DeltaTracker,
+    // eval
+    val_batches: Vec<(Batch, usize)>,
+    test_batches: Vec<(Batch, usize)>,
+    val_cache: Option<EvalCache>,
+    test_cache: Option<EvalCache>,
+    qa_scratch: Option<ExampleScratch>,
+    // accounting
+    transfers_at_start: TransferSnapshot,
+}
+
+impl StepEngine {
+    /// Build an engine over an artifact: parameter sets from `values`,
+    /// compiled programs, an empty stager/ring. `pipeline` is the batch
+    /// producer the stager pulls from.
+    pub fn new(
+        rt: &Rc<Runtime>,
+        art: Rc<Artifact>,
+        values: &BTreeMap<String, Tensor>,
+        pipeline: Pipeline,
+        val_batches: Vec<(Batch, usize)>,
+        test_batches: Vec<(Batch, usize)>,
+    ) -> Result<StepEngine> {
+        let man = &art.manifest;
+        let tr = ParamSet::from_spec(rt, &man.trainable, values)?;
+        let fr = ParamSet::from_spec(rt, &man.frozen, values)?;
+        let m = ParamSet::zeros_like(rt, &tr);
+        let v = ParamSet::zeros_like(rt, &tr);
+        let grad_prog = art.program("grad_step")?;
+        let adam_prog = art.program("adam_apply")?;
+        let eval_prog = art.program("eval_loss")?;
+        // Optional device-side accumulation pair: both or neither — a
+        // manifest with only one of them is malformed enough to fall back
+        // to the host path rather than half-commit.
+        let (grad_accum_prog, grad_finalize_prog) =
+            if man.has_program("grad_accum") && man.has_program("grad_finalize") {
+                (Some(art.program("grad_accum")?), Some(art.program("grad_finalize")?))
+            } else {
+                (None, None)
+            };
+        let transfers_at_start = rt.stats.snapshot();
+        let stager = BatchStager::new(rt);
+        Ok(StepEngine {
+            rt: Rc::clone(rt),
+            art,
+            tr,
+            fr,
+            m,
+            v,
+            adam_steps: 0,
+            grad_prog,
+            adam_prog,
+            eval_prog,
+            grad_accum_prog,
+            grad_finalize_prog,
+            lr_buf: None,
+            inv_n_buf: None,
+            pipeline,
+            stager,
+            stream: ExecStream::new(DEFAULT_DRAIN_INTERVAL),
+            delta: DeltaTracker::new(),
+            val_batches,
+            test_batches,
+            val_cache: None,
+            test_cache: None,
+            qa_scratch: None,
+            transfers_at_start,
+        })
+    }
+
+    /// Device path: `grad_step` in raw mode per micro-batch — the loss
+    /// scalar stays on the device as a [`PendingLoss`], the gradient
+    /// buffers fold into the donated [`DeviceGradAccumulator`] — then one
+    /// `grad_finalize` returns the mean-gradient buffers ready to donate
+    /// into `adam_apply`.
+    fn accumulate_device(
+        &mut self,
+        staged: &StagedBatch,
+    ) -> Result<(Vec<xla::PjRtBuffer>, Vec<PendingLoss>)> {
+        let accum_prog =
+            Rc::clone(self.grad_accum_prog.as_ref().expect("checked by dispatch_step"));
+        let finalize_prog =
+            Rc::clone(self.grad_finalize_prog.as_ref().expect("checked by dispatch_step"));
+        let n = self.tr.len();
+        let mut acc = DeviceGradAccumulator::new();
+        let mut pending = Vec::with_capacity(staged.micro.len());
+        for micro in &staged.micro {
+            let inputs = param_batch_inputs(
+                &mut self.tr,
+                &mut self.fr,
+                self.grad_prog.spec.inputs.len(),
+                [&micro.tokens, &micro.targets, &micro.mask],
+            )?;
+            let outs = self.grad_prog.execute_raw(&inputs)?;
+            drop(inputs);
+            let mut outs = outs.into_iter();
+            let loss_buf = outs.next().expect("grad_step outputs [loss, g..]");
+            pending.push(PendingLoss::new(&self.grad_prog, loss_buf, 0));
+            let grads: Vec<xla::PjRtBuffer> = outs.collect();
+            debug_assert_eq!(grads.len(), n, "grad_step output arity");
+            acc.add_raw_bufs(&accum_prog, grads)?;
+        }
+        let count = acc.count();
+        if self.inv_n_buf.as_ref().map(|(c, _)| *c) != Some(count) {
+            self.inv_n_buf = Some((count, self.rt.upload_scalar(1.0 / count as f32)?));
+        }
+        let bufs = acc.finalize_bufs(&finalize_prog, &self.inv_n_buf.as_ref().unwrap().1)?;
+        Ok((bufs, pending))
+    }
+
+    /// Host reference path (`keep_micro_grads`, or artifacts without the
+    /// accumulation programs): decode every micro gradient, accumulate in
+    /// the host [`GradAccumulator`]. Losses resolve synchronously here —
+    /// the decoded execution downloads everything anyway.
+    fn accumulate_host(
+        &mut self,
+        staged: &StagedBatch,
+        keep_micro_grads: bool,
+    ) -> Result<(Vec<Tensor>, Vec<Vec<Tensor>>, f32, Vec<f32>)> {
+        let n = self.tr.len();
+        let shapes = self.tr.shapes();
+        let mut acc = GradAccumulator::new(&shapes);
+        let mut micro_grads = Vec::new();
+        let mut micro_losses = Vec::with_capacity(staged.micro.len());
+        for micro in &staged.micro {
+            let inputs = param_batch_inputs(
+                &mut self.tr,
+                &mut self.fr,
+                self.grad_prog.spec.inputs.len(),
+                [&micro.tokens, &micro.targets, &micro.mask],
+            )?;
+            // Gradients are consumed host-side here, so the decoded path
+            // is the right one.
+            let out = self.grad_prog.execute_buffers(&inputs)?;
+            let loss = out.values[0][0];
+            micro_losses.push(loss);
+            let grads: Vec<&[f32]> =
+                (0..n).map(|i| out.values[1 + i].as_slice()).collect();
+            acc.add_flat(&grads, loss);
+            if keep_micro_grads {
+                micro_grads.push(
+                    (0..n)
+                        .map(|i| Tensor::from_vec(&shapes[i], out.values[1 + i].clone()))
+                        .collect(),
+                );
+            }
+        }
+        let (mean, mean_loss) = acc.take_mean();
+        Ok((mean, micro_grads, mean_loss, micro_losses))
+    }
+
+    /// Download mean-gradient buffers into host tensors (Δ_W stats and
+    /// analysis consumers only — the dispatch path never needs this).
+    fn download_grads(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(bufs.len());
+        for (i, b) in bufs.iter().enumerate() {
+            let v = self.rt.download_f32(b)?;
+            out.push(Tensor::from_vec(self.tr.shape(i), v));
+        }
+        Ok(out)
+    }
+
+    fn eval_cached(&mut self, cache: &EvalCache) -> Result<EvalMeasure> {
+        let mut acc = LossAccum::new();
+        for chunk in cache.chunks() {
+            debug_assert!(chunk.mask_sum > 0.0, "EvalCache::build drops zero-mask chunks");
+            let inputs = param_batch_inputs(
+                &mut self.tr,
+                &mut self.fr,
+                self.eval_prog.spec.inputs.len(),
+                [&chunk.tokens, &chunk.targets, &chunk.mask],
+            )?;
+            let out = self.eval_prog.execute_buffers(&inputs)?;
+            acc.add(out.values[0][0], chunk);
+        }
+        Ok(EvalMeasure { loss: acc.mean(), tokens: acc.tokens() })
+    }
+}
+
+impl Engine for StepEngine {
+    fn dispatch_step(&mut self, opts: &StepOptions) -> Result<StepDispatch> {
+        // The batch for this step: prefetched during the previous step in
+        // steady state, staged inline on the first step.
+        let staged = {
+            let stager = &mut self.stager;
+            let pipeline = &mut self.pipeline;
+            stager.take_or_stage(|| pipeline.next())?
+        };
+        let ticket = self.adam_steps as u64;
+        let use_device_accum = self.grad_accum_prog.is_some() && !opts.keep_micro_grads;
+
+        let mut mean_grads: Vec<Tensor> = Vec::new();
+        let mut micro_grads: Vec<Vec<Tensor>> = Vec::new();
+        let (g_bufs, losses) = if use_device_accum {
+            let (bufs, pending) = self.accumulate_device(&staged)?;
+            // FF stage stats need ‖g‖ host-side; Fig 6 asks via
+            // keep_host_grads. Everyone else skips the download.
+            if opts.track_delta || opts.keep_host_grads {
+                mean_grads = self.download_grads(&bufs)?;
+            }
+            (bufs, StepLosses::Deferred(pending))
+        } else {
+            let (mean, micros, mean_loss, micro_losses) =
+                self.accumulate_host(&staged, opts.keep_micro_grads)?;
+            let bufs: Vec<xla::PjRtBuffer> = mean
+                .iter()
+                .map(|g| self.rt.upload_tensor(g))
+                .collect::<Result<_>>()?;
+            mean_grads = mean;
+            micro_grads = micros;
+            (bufs, StepLosses::Immediate { mean_loss, micro_losses })
+        };
+
+        // Adam apply on device. W_{t−1} comes from the host view, which
+        // the sync API pulls fresh on demand.
+        if opts.track_delta {
+            self.delta.begin_step(&mut self.tr)?;
+        }
+        let step_buf = self.rt.upload_scalar(self.adam_steps as f32)?;
+        if self.lr_buf.as_ref().map(|(v, _)| *v) != Some(opts.lr) {
+            self.lr_buf = Some((opts.lr, self.rt.upload_scalar(opts.lr)?));
+        }
+        // Donated dispatch: trainable/m/v and the mean gradient hand their
+        // buffers over; adam_apply's alias map reuses the allocations in
+        // place and the outputs are adopted straight back.
+        let tr_bufs = self.tr.take_device_buffers()?;
+        let m_bufs = self.m.take_device_buffers()?;
+        let v_bufs = self.v.take_device_buffers()?;
+        let mut inputs: Vec<InputBuf> = Vec::with_capacity(self.adam_prog.spec.inputs.len());
+        inputs.extend(tr_bufs.into_iter().map(InputBuf::Donated));
+        inputs.extend(m_bufs.into_iter().map(InputBuf::Donated));
+        inputs.extend(v_bufs.into_iter().map(InputBuf::Donated));
+        inputs.push(InputBuf::Borrowed(&step_buf));
+        inputs.extend(g_bufs.into_iter().map(InputBuf::Donated));
+        inputs.push(InputBuf::Borrowed(&self.lr_buf.as_ref().unwrap().1));
+        let outs = self.adam_prog.execute_raw_donated(inputs)?;
+        let mut outs = outs.into_iter();
+        self.tr.adopt_all(&mut outs)?;
+        self.m.adopt_all(&mut outs)?;
+        self.v.adopt_all(&mut outs)?;
+        // Δ_W = W_t − W_{t−1} needs W_t host-side: lazily sync just the
+        // trainables (m/v stay device-only for the life of the run).
+        if opts.track_delta {
+            self.delta.end_step(&mut self.tr)?;
+        } else {
+            // a Δ from before FF shut off must not be served later
+            self.delta.clear();
+        }
+        self.adam_steps += 1;
+
+        // Prefetch: upload the *next* step's batch while this step's
+        // programs are still retiring on the device.
+        {
+            let stager = &mut self.stager;
+            let pipeline = &mut self.pipeline;
+            stager.prefetch(|| pipeline.next())?;
+        }
+
+        let mut resolved = Vec::new();
+        match losses {
+            StepLosses::Deferred(pending) => {
+                resolved.extend(self.stream.push(PendingStep::new(ticket, pending))?);
+            }
+            StepLosses::Immediate { mean_loss, micro_losses } => {
+                // The host path already holds its loss: retire any older
+                // deferred steps first so tickets stay FIFO, then append.
+                // The step never enters the ring but still counts.
+                resolved.extend(self.stream.sync(SyncReason::StepResult)?);
+                self.stream.record_passthrough();
+                resolved.push(ResolvedStep { ticket, mean_loss, micro_losses });
+            }
+        }
+
+        Ok(StepDispatch {
+            ticket,
+            tokens: staged.total_tokens,
+            resolved,
+            mean_grads,
+            micro_grads,
+        })
+    }
+
+    fn sync(&mut self, reason: SyncReason) -> Result<Vec<ResolvedStep>> {
+        self.stream.sync(reason)
+    }
+
+    fn pending_depth(&self) -> usize {
+        self.stream.depth()
+    }
+
+    fn set_drain_interval(&mut self, k: usize) {
+        self.stream.set_drain_interval(k);
+    }
+
+    fn stream_stats(&self) -> &StreamStats {
+        self.stream.stats()
+    }
+
+    fn adam_steps(&self) -> usize {
+        self.adam_steps
+    }
+
+    fn eval_split(&mut self, split: EvalSplit) -> Result<EvalMeasure> {
+        // Detach the cache from `self` so iterating it doesn't pin a
+        // borrow across the &mut self program calls; re-attached below.
+        let cache = match split {
+            EvalSplit::Val => self.val_cache.take(),
+            EvalSplit::Test => self.test_cache.take(),
+        };
+        let cache = match cache {
+            Some(c) => c,
+            None => {
+                let batches = match split {
+                    EvalSplit::Val => &self.val_batches,
+                    EvalSplit::Test => &self.test_batches,
+                };
+                EvalCache::build(&self.rt, batches)?
+            }
+        };
+        let result = self.eval_cached(&cache);
+        match split {
+            EvalSplit::Val => self.val_cache = Some(cache),
+            EvalSplit::Test => self.test_cache = Some(cache),
+        }
+        result
+    }
+
+    fn eval_example(&mut self, ex: &Example) -> Result<EvalMeasure> {
+        let (b, t) = {
+            let mc = &self.art.manifest.config.model;
+            (mc.eval_batch, mc.seq_len)
+        };
+        ensure!(ex.mask.len() == t, "example seq_len {} != model {}", ex.mask.len(), t);
+        let scratch = self.qa_scratch.get_or_insert_with(|| ExampleScratch::new(b, t));
+        scratch.fill(ex);
+        let tok = self.rt.upload_i32(scratch.tokens(), &[b, t])?;
+        let tgt = self.rt.upload_i32(scratch.targets(), &[b, t])?;
+        let msk = self.rt.upload_f32(scratch.mask(), &[b, t])?;
+        let inputs = param_batch_inputs(
+            &mut self.tr,
+            &mut self.fr,
+            self.eval_prog.spec.inputs.len(),
+            [&tok, &tgt, &msk],
+        )?;
+        let out = self.eval_prog.execute_buffers(&inputs)?;
+        Ok(EvalMeasure { loss: out.values[0][0], tokens: b * t })
+    }
+
+    fn delta(&self) -> Option<&[Tensor]> {
+        self.delta.delta()
+    }
+
+    fn axpy_trainables(&mut self, alpha: f32, delta: &[Tensor]) -> Result<()> {
+        // Read-modify-write: make the host view fresh first (no-op when
+        // the previous step already synced it for Δ_W).
+        self.tr.sync_host()?;
+        self.tr.axpy(alpha, delta);
+        Ok(())
+    }
+
+    fn trainable_shapes(&self) -> Vec<Vec<usize>> {
+        self.tr.shapes()
+    }
+
+    fn trainable_count(&self) -> usize {
+        self.tr.len()
+    }
+
+    fn trainable_numel(&self) -> usize {
+        self.tr.numel()
+    }
+
+    fn trainable_snapshot(&mut self) -> Result<Vec<Tensor>> {
+        self.tr.sync_host()?;
+        Ok(self.tr.snapshot())
+    }
+
+    fn restore_trainables(&mut self, snap: &[Tensor]) {
+        self.tr.restore(snap);
+    }
+
+    fn named_params(&mut self) -> Result<BTreeMap<String, Tensor>> {
+        // Only the trainable set can be device-ahead; frozen params are
+        // never device-written, so no sync (hence no download) for them.
+        self.tr.sync_host()?;
+        let mut out = BTreeMap::new();
+        for (name, t) in self.tr.names().iter().zip(self.tr.tensors()) {
+            out.insert(name.clone(), t.clone());
+        }
+        for (name, t) in self.fr.names().iter().zip(self.fr.tensors()) {
+            out.insert(name.clone(), t.clone());
+        }
+        Ok(out)
+    }
+
+    fn transfers(&self) -> TransferSnapshot {
+        self.rt.stats.snapshot().since(&self.transfers_at_start)
+    }
+
+    fn state_transfer_counts(&self) -> (u64, u64) {
+        (
+            self.tr.upload_count() + self.m.upload_count() + self.v.upload_count(),
+            self.tr.download_count() + self.m.download_count() + self.v.download_count(),
+        )
+    }
+}
+
+/// Assemble the `[trainables.., frozen.., tokens, targets, mask]` input
+/// list shared by every `grad_step`/`eval_loss` dispatch, uploading any
+/// stale parameter tensors first. A free function over the two ParamSets
+/// (not a `&mut self` method) so the returned borrows stay field-scoped
+/// and the caller can still dispatch through the engine's program handles.
+fn param_batch_inputs<'a>(
+    tr: &'a mut ParamSet,
+    fr: &'a mut ParamSet,
+    arity: usize,
+    batch: [&'a xla::PjRtBuffer; 3],
+) -> Result<Vec<&'a xla::PjRtBuffer>> {
+    let mut inputs = Vec::with_capacity(arity);
+    inputs.extend(tr.device_buffers()?);
+    inputs.extend(fr.device_buffers()?);
+    inputs.extend(batch);
+    Ok(inputs)
+}

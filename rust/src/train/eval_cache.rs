@@ -74,6 +74,41 @@ impl EvalCache {
     }
 }
 
+/// Token-weighted mean-loss aggregation over [`EvalChunk`]s — the reduction
+/// every split evaluation performs, factored out so the step engine's eval
+/// path and any future consumer share one definition. Weighting by Σ mask
+/// per chunk makes the chunked mean equal the in-graph masked mean over the
+/// whole split exactly.
+#[derive(Debug, Default)]
+pub struct LossAccum {
+    total: f64,
+    weight: f64,
+    tokens: usize,
+}
+
+impl LossAccum {
+    pub fn new() -> LossAccum {
+        LossAccum::default()
+    }
+
+    /// Fold in one chunk's mean loss.
+    pub fn add(&mut self, chunk_loss: f32, chunk: &EvalChunk) {
+        self.total += chunk_loss as f64 * chunk.mask_sum as f64;
+        self.weight += chunk.mask_sum as f64;
+        self.tokens += chunk.total_tokens;
+    }
+
+    /// Total b·t positions evaluated (FLOPs charging).
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// The weighted mean loss (0.0 for an empty accumulation).
+    pub fn mean(&self) -> f32 {
+        (self.total / self.weight.max(1.0)) as f32
+    }
+}
+
 /// Reusable host staging buffers for single-example eval (QA scoring).
 /// Rows 1..b of the mask are zeroed once at construction and never written
 /// again; `fill` only rewrites the replicated token/target rows and the
@@ -181,6 +216,27 @@ mod tests {
         let d = rt.stats.snapshot().since(&before);
         assert_eq!(cache.len(), 1, "zero-mask chunk must be dropped at build");
         assert_eq!(d.uploads, 3);
+    }
+
+    #[test]
+    fn loss_accum_weights_by_mask_sum() {
+        let rt = Runtime::cpu().unwrap();
+        let mk = |mask: Vec<f32>| EvalChunk {
+            tokens: rt.upload_i32(&[0; 4], &[2, 2]).unwrap(),
+            targets: rt.upload_i32(&[0; 4], &[2, 2]).unwrap(),
+            mask: rt.upload_f32(&mask, &[2, 2]).unwrap(),
+            mask_sum: mask.iter().sum(),
+            total_tokens: 4,
+        };
+        let a = mk(vec![1.0; 4]); // weight 4
+        let b = mk(vec![1.0, 0.0, 0.0, 0.0]); // weight 1
+        let mut acc = LossAccum::new();
+        acc.add(2.0, &a);
+        acc.add(7.0, &b);
+        assert_eq!(acc.tokens(), 8);
+        let want = (2.0 * 4.0 + 7.0 * 1.0) / 5.0;
+        assert!((acc.mean() as f64 - want).abs() < 1e-6, "{}", acc.mean());
+        assert_eq!(LossAccum::new().mean(), 0.0, "empty accum is 0, not NaN");
     }
 
     #[test]

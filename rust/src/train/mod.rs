@@ -1,10 +1,15 @@
-//! Training coordination: the `Trainer` run loop, checkpointing, and the
+//! Training coordination, split into policy over dispatch: the `Trainer`
+//! schedule/run-loop policy, the `StepEngine` dispatch layer it drives
+//! (program execution, donation chains, batch prefetch, deferred loss
+//! readback — see `docs/step-pipeline.md`), checkpointing, and the
 //! pretraining substrate that manufactures W0 for finetuning experiments.
 
 pub mod checkpoint;
+pub mod engine;
 pub mod eval_cache;
 pub mod pretrain;
 pub mod trainer;
 
-pub use eval_cache::{EvalCache, ExampleScratch};
+pub use engine::{Engine, EvalSplit, StepEngine, StepOptions};
+pub use eval_cache::{EvalCache, ExampleScratch, LossAccum};
 pub use trainer::{RunSummary, StopRule, Trainer};

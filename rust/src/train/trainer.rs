@@ -1,54 +1,45 @@
-//! The training coordinator: wires the data pipeline, PJRT runtime,
-//! device-side micro-batch gradient accumulation, Adam, and the Fast
-//! Forward controller into the paper's training protocol.
+//! The training **policy** layer: Fast Forward scheduling, stop rules,
+//! eval cadence, FLOPs/time accounting, and the run log.
 //!
 //! One `Trainer` = one run (one artifact, one task, one FfConfig). The
 //! experiment harnesses construct pairs of trainers (baseline vs FF) over
 //! identical data and compare FLOPs/time to matched test loss.
 //!
-//! # Data flow: device buffers are the source of truth
+//! # Three layers (see `docs/step-pipeline.md`)
 //!
-//! During training the authoritative parameter/optimizer state lives on
-//! the device, and so does the gradient pipeline between micro-batches:
+//! Everything that touches the device lives below this file:
 //!
-//! * **Accumulation** — each micro-batch's `grad_step` runs in raw mode;
-//!   only its loss scalar (4 bytes) is downloaded. The gradient buffers
-//!   fold into a [`DeviceGradAccumulator`] (`grad_accum` / `grad_finalize`
-//!   AOT programs, donated in place), so per-micro gradients never visit
-//!   the host and the mean gradient is never uploaded. The host
-//!   [`GradAccumulator`] path survives behind
-//!   [`Trainer::keep_micro_grads`] (Fig 13 needs every micro gradient
-//!   host-side) and for artifacts that predate the accumulation programs.
-//! * **Adam** — the accumulated mean-gradient buffers feed straight into
-//!   `adam_apply` together with the trainable/m/v state, all **donated**
-//!   (`ParamSet::take_device_buffers` → `Program::execute_raw_donated`):
-//!   PJRT reuses the input allocations for the aliased outputs, keeping
-//!   one generation of state live per step instead of two. The outputs
-//!   are adopted straight back (`ParamSet::adopt_all`) — trainable, m,
-//!   and v are **never re-uploaded** in steady state, and m/v are never
-//!   downloaded at all.
-//! * **Host syncs** — lazy. The only per-step download beyond loss
-//!   scalars is the trainable set (Δ_W = W_t − W_{t−1}, `DeltaTracker`)
-//!   plus, when FF or an analysis consumer needs it, the mean gradient
-//!   ([`Trainer::keep_host_grads`]). Baseline (FF-off) runs move zero
-//!   state or gradient bytes in either direction: their steady-state
-//!   uploads are batch tokens/targets/mask and two 4-byte scalars.
-//! * **Eval** — batches upload once into an `EvalCache` and are reused by
-//!   every FF probe and test eval.
+//! * [`StepEngine`](crate::train::engine::StepEngine) owns program
+//!   dispatch, donated-buffer chaining, batch prefetch, Δ_W tracking, the
+//!   eval caches, and all `TransferStats` bookkeeping. The trainer calls
+//!   it exclusively through the narrow [`Engine`] trait, so FF line-search
+//!   probes and the experiment pair-runs go through the same dispatch
+//!   path as the run loop.
+//! * The engine's [`ExecStream`](crate::runtime::ExecStream) defers loss
+//!   readback: a dispatched step's per-micro loss scalars stay on the
+//!   device until the ring drains — every K steps, or at a forced
+//!   boundary (FF stage, eval, snapshot, shutdown). The trainer keeps a
+//!   FIFO of *pending step records* and backfills each one's loss into
+//!   [`RunLog`] when its step resolves, so the log is identical to the
+//!   synchronous one, just written later.
 //!
-//! All traffic is metered in `Runtime::stats` and surfaced per run in
-//! `RunSummary::transfers`; `docs/transfer-contract.md` spells out the
-//! full contract and the steady-state expectations `bench_step` verifies.
+//! [`Trainer::sgd_step`] is the synchronous wrapper (dispatch + immediate
+//! drain — the old behaviour, bit-for-bit); [`Trainer::dispatch_sgd_step`]
+//! is the pipelined half that [`Trainer::run`] and the benches use to keep
+//! several steps in flight. The host↔device movement rules are documented
+//! in `docs/transfer-contract.md`; the steady-state contract (batch bytes
+//! + one 4-byte step scalar up, one 4-byte loss per micro down) is
+//! unchanged by pipelining — only *when* the loss bytes cross moves.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analysis::linalg::mean_condition_number;
 use crate::config::TrainConfig;
-use crate::data::batcher::{eval_batches, Batch, GlobalBatch};
+use crate::data::batcher::eval_batches;
 use crate::data::corpus::{make_dataset, Dataset};
 use crate::data::pipeline::Pipeline;
 use crate::ff::controller::{FfController, FfDecision, FfStageStats};
@@ -57,10 +48,8 @@ use crate::flops::{FlopsCounter, FlopsModel};
 use crate::metrics::{RunLog, StepKind, StepRecord, TrainTimer};
 use crate::model::init::{init_params, init_with_base};
 use crate::model::tensor::{list_norm, Tensor};
-use crate::optim::accum::{DeviceGradAccumulator, GradAccumulator};
-use crate::optim::delta::DeltaTracker;
-use crate::runtime::{Artifact, InputBuf, ParamSet, Program, Runtime, TransferSnapshot};
-use crate::train::eval_cache::{EvalCache, ExampleScratch};
+use crate::runtime::{Artifact, ResolvedStep, Runtime, StreamStats, SyncReason, TransferSnapshot};
+use crate::train::engine::{Engine, EvalSplit, StepEngine, StepOptions};
 
 /// When to stop a training run.
 #[derive(Debug, Clone)]
@@ -88,50 +77,32 @@ pub struct RunSummary {
     pub transfers: TransferSnapshot,
 }
 
+/// A dispatched step whose loss has not come back yet: everything the
+/// [`StepRecord`] needs except the loss, stamped at dispatch time.
+struct PendingRecord {
+    ticket: u64,
+    step: usize,
+    flops: u64,
+    seconds: f64,
+}
+
 pub struct Trainer {
     pub cfg: TrainConfig,
     pub art: Rc<Artifact>,
-    rt: Rc<Runtime>,
-    // parameter state
-    pub tr: ParamSet,
-    pub fr: ParamSet,
-    m: ParamSet,
-    v: ParamSet,
-    adam_steps: usize,
+    /// The dispatch layer (device state, programs, prefetch, readback
+    /// ring). Policy code goes through the [`Engine`] trait only.
+    engine: StepEngine,
     // data
     pub dataset: Dataset,
-    pipeline: Pipeline,
-    val_batches: Vec<(Batch, usize)>,
-    test_batches: Vec<(Batch, usize)>,
-    // device-resident eval inputs (built lazily on first eval of a split)
-    val_cache: Option<EvalCache>,
-    test_cache: Option<EvalCache>,
-    qa_scratch: Option<ExampleScratch>,
-    // programs
-    grad_prog: Rc<Program>,
-    adam_prog: Rc<Program>,
-    eval_prog: Rc<Program>,
-    /// Device-side accumulation programs (`grad_accum`/`grad_finalize`).
-    /// `None` for artifacts emitted before they existed — the trainer then
-    /// falls back to the host [`GradAccumulator`] path.
-    grad_accum_prog: Option<Rc<Program>>,
-    grad_finalize_prog: Option<Rc<Program>>,
-    /// Cached learning-rate scalar buffer, keyed by the lr value it holds
-    /// so mid-run mutation of `cfg.lr` (lr sweeps) re-uploads.
-    lr_buf: Option<(f32, xla::PjRtBuffer)>,
-    /// Cached `1/n_micro` scalar for `grad_finalize`, keyed by the micro
-    /// count it encodes (constant per run: global_batch / micro_batch).
-    inv_n_buf: Option<(usize, xla::PjRtBuffer)>,
     // ff machinery
     pub ffc: FfController,
-    delta: DeltaTracker,
     /// Mean gradient of the last global batch (analysis probes).
     pub last_grads: Vec<Tensor>,
     /// Per-micro-batch gradients of the last global batch (Fig 13).
     pub last_micro_grads: Vec<Vec<Tensor>>,
     /// Keep per-micro grads around (costs memory; off by default). Forces
     /// the host accumulation path — the only remaining consumer of the
-    /// host [`GradAccumulator`] during training.
+    /// host `GradAccumulator` during training.
     pub keep_micro_grads: bool,
     /// Download the mean gradient host-side after each step (Fig 6's
     /// cosine history). FF-tracked steps download it regardless — the FF
@@ -143,7 +114,11 @@ pub struct Trainer {
     pub flops: FlopsCounter,
     pub timer: TrainTimer,
     pub log: RunLog,
-    transfers_at_start: TransferSnapshot,
+    /// Dispatched-but-unresolved step records, FIFO by ticket; losses are
+    /// backfilled into [`RunLog`] as the engine's readback ring drains.
+    pending_records: VecDeque<PendingRecord>,
+    /// Mean loss of the most recently resolved step.
+    last_loss: Option<f32>,
     /// Initial trainable snapshot (W0 side of Fig 5 / distance probes).
     pub w0_trainables: Vec<Tensor>,
 }
@@ -170,8 +145,7 @@ impl Trainer {
         cfg: TrainConfig,
         base: Option<&BTreeMap<String, Tensor>>,
     ) -> Result<Trainer> {
-        let man = &art.manifest;
-        let ac = &man.config;
+        let ac = &art.manifest.config;
         if cfg.global_batch % ac.model.micro_batch != 0 {
             bail!(
                 "global batch {} not a multiple of artifact micro batch {}",
@@ -183,10 +157,6 @@ impl Trainer {
             Some(b) => init_with_base(ac, cfg.seed, b),
             None => init_params(ac, cfg.seed),
         };
-        let tr = ParamSet::from_spec(rt, &man.trainable, &values)?;
-        let fr = ParamSet::from_spec(rt, &man.frozen, &values)?;
-        let m = ParamSet::zeros_like(rt, &tr);
-        let v = ParamSet::zeros_like(rt, &tr);
 
         let dataset = make_dataset(
             &cfg.task,
@@ -207,48 +177,25 @@ impl Trainer {
         let val_batches = eval_batches(&dataset.val, ac.model.eval_batch);
         let test_batches = eval_batches(&dataset.test, ac.model.eval_batch);
 
-        let grad_prog = art.program("grad_step")?;
-        let adam_prog = art.program("adam_apply")?;
-        let eval_prog = art.program("eval_loss")?;
-        // Optional device-side accumulation pair (see sgd_step): both or
-        // neither — a manifest with only one of them is malformed enough
-        // to fall back to the host path rather than half-commit.
-        let (grad_accum_prog, grad_finalize_prog) =
-            if man.has_program("grad_accum") && man.has_program("grad_finalize") {
-                (Some(art.program("grad_accum")?), Some(art.program("grad_finalize")?))
-            } else {
-                (None, None)
-            };
         let fm = FlopsModel::for_artifact(ac);
         let ffc = FfController::new(cfg.ff.clone());
-        let w0_trainables = tr.snapshot();
-        let transfers_at_start = rt.stats.snapshot();
-
-        Ok(Trainer {
-            cfg,
-            rt: Rc::clone(rt),
-            art,
-            tr,
-            fr,
-            m,
-            v,
-            adam_steps: 0,
-            dataset,
+        let mut engine = StepEngine::new(
+            rt,
+            Rc::clone(&art),
+            &values,
             pipeline,
             val_batches,
             test_batches,
-            val_cache: None,
-            test_cache: None,
-            qa_scratch: None,
-            grad_prog,
-            adam_prog,
-            eval_prog,
-            grad_accum_prog,
-            grad_finalize_prog,
-            lr_buf: None,
-            inv_n_buf: None,
+        )?;
+        // host-fresh at construction: this snapshot downloads nothing
+        let w0_trainables = engine.trainable_snapshot()?;
+
+        Ok(Trainer {
+            cfg,
+            art,
+            engine,
+            dataset,
             ffc,
-            delta: DeltaTracker::new(),
             last_grads: Vec::new(),
             last_micro_grads: Vec::new(),
             keep_micro_grads: false,
@@ -257,23 +204,24 @@ impl Trainer {
             flops: FlopsCounter::default(),
             timer: TrainTimer::start(),
             log: RunLog::default(),
-            transfers_at_start,
+            pending_records: VecDeque::new(),
+            last_loss: None,
             w0_trainables,
         })
     }
 
     pub fn adam_steps(&self) -> usize {
-        self.adam_steps
+        self.engine.adam_steps()
     }
 
     /// Monotone step index counting SGD + simulated steps (Fig 4 x-axis).
     pub fn total_steps(&self) -> usize {
-        self.adam_steps + self.log.n_ff()
+        self.engine.adam_steps() + self.log.n_ff()
     }
 
     /// Host↔device traffic attributable to this trainer so far.
     pub fn transfers(&self) -> TransferSnapshot {
-        self.rt.stats.snapshot().since(&self.transfers_at_start)
+        self.engine.transfers()
     }
 
     /// (uploads, downloads) summed over the trainable/m/v ParamSets. With
@@ -282,293 +230,148 @@ impl Trainer {
     /// FF tracks Δ_W, and not at all on baseline runs (see
     /// docs/transfer-contract.md §3).
     pub fn state_transfer_counts(&self) -> (u64, u64) {
-        (
-            self.tr.upload_count() + self.m.upload_count() + self.v.upload_count(),
-            self.tr.download_count() + self.m.download_count() + self.v.download_count(),
-        )
+        self.engine.state_transfer_counts()
+    }
+
+    /// Number of trainable tensors (sync-free).
+    pub fn trainable_count(&self) -> usize {
+        self.engine.trainable_count()
+    }
+
+    /// Total trainable elements (sync-free).
+    pub fn trainable_numel(&self) -> usize {
+        self.engine.trainable_numel()
+    }
+
+    /// Trainable tensor shapes without any device→host sync — the right
+    /// call when only the geometry is needed (probe directions, logging).
+    pub fn trainable_shapes(&self) -> Vec<Vec<usize>> {
+        self.engine.trainable_shapes()
+    }
+
+    /// Deferred-readback ring counters (drains by reason, max depth).
+    pub fn stream_stats(&self) -> &StreamStats {
+        self.engine.stream_stats()
+    }
+
+    /// Steps dispatched but not yet resolved.
+    pub fn pending_steps(&self) -> usize {
+        self.engine.pending_depth()
+    }
+
+    /// Set the readback ring's drain interval (1 = fully synchronous; the
+    /// default is `engine::DEFAULT_DRAIN_INTERVAL`).
+    pub fn set_drain_interval(&mut self, k: usize) {
+        self.engine.set_drain_interval(k);
     }
 
     // ---------------------------------------------------------------------
     // Core steps
     // ---------------------------------------------------------------------
 
-    /// One Adam optimizer step over a full global batch: micro-batch
-    /// gradient accumulation **on the device** (`grad_accum` /
-    /// `grad_finalize`, see module docs) → one donated `adam_apply`, whose
-    /// outputs stay on the device as the next step's inputs. Per-micro
-    /// gradients never visit the host unless [`Trainer::keep_micro_grads`]
-    /// forces the reference host path.
+    /// One Adam optimizer step, synchronously: dispatch through the engine
+    /// then drain the readback ring and return this step's mean
+    /// micro-batch loss. Equivalent to the pipelined path with a drain
+    /// interval of 1 — `deferred_readback_matches_synchronous_losses`
+    /// (trainer_e2e) holds the two bit-for-bit equal.
     pub fn sgd_step(&mut self) -> Result<f32> {
-        let global = self.pipeline.next();
+        self.dispatch_sgd_step()?;
+        let resolved = self.engine.sync(SyncReason::StepResult)?;
+        self.absorb_resolved(resolved);
+        debug_assert!(self.pending_records.is_empty(), "sync left records pending");
+        self.last_loss
+            .ok_or_else(|| anyhow!("step dispatched but no loss resolved"))
+    }
+
+    /// The pipelined half: dispatch one Adam step and return without
+    /// waiting for its loss. The step's record enters a pending FIFO and
+    /// its loss is backfilled into the log when the engine's ring drains —
+    /// every K steps, or at the next boundary ([`Trainer::drain_pending`],
+    /// eval, FF stage, end of run).
+    pub fn dispatch_sgd_step(&mut self) -> Result<()> {
         // Δ_W is only consumed by FF (ff_stage / ff_probe_fixed). Baseline
         // runs — and tail steps after the convergence rule permanently
         // disables FF — skip the tracking, so their steady-state steps
         // move *zero* parameter/optimizer bytes in either direction.
         let track_delta = self.cfg.ff.enabled && !self.ffc.is_permanently_off();
-        let use_device_accum =
-            self.grad_accum_prog.is_some() && !self.keep_micro_grads;
-        let (g_bufs, mean_loss) = if use_device_accum {
-            // micro grads stay on the device — don't leave a previous
-            // keep_micro_grads run's tensors looking current
-            self.last_micro_grads.clear();
-            let (bufs, loss) = self.accumulate_device(&global)?;
-            // ff_stage stats need ‖g‖ host-side; Fig 6 asks via
-            // keep_host_grads. Everyone else skips the download and
-            // last_grads stays empty.
-            if track_delta || self.keep_host_grads {
-                self.last_grads = self.download_grads(&bufs)?;
-            } else {
-                self.last_grads.clear();
-            }
-            (bufs, loss)
-        } else {
-            let (mean_grads, loss) = self.accumulate_host(&global)?;
-            let bufs: Vec<xla::PjRtBuffer> = mean_grads
-                .iter()
-                .map(|g| self.rt.upload_tensor(g))
-                .collect::<Result<_>>()?;
-            self.last_grads = mean_grads;
-            (bufs, loss)
+        let opts = StepOptions {
+            lr: self.cfg.lr,
+            track_delta,
+            keep_micro_grads: self.keep_micro_grads,
+            keep_host_grads: self.keep_host_grads,
         };
-
-        // Adam apply on device. W_{t−1} comes from the host view, which the
-        // sync API pulls fresh on demand.
-        if track_delta {
-            self.delta.begin_step(&mut self.tr)?;
-        }
-        let step_buf = self.rt.upload_scalar(self.adam_steps as f32)?;
-        let lr = self.cfg.lr;
-        if self.lr_buf.as_ref().map(|(v, _)| *v) != Some(lr) {
-            self.lr_buf = Some((lr, self.rt.upload_scalar(lr)?));
-        }
-        // Donated dispatch: trainable/m/v and the mean gradient hand their
-        // buffers over; adam_apply's alias map reuses the allocations in
-        // place and the outputs are adopted straight back, so one
-        // generation of state is live instead of two and nothing is
-        // re-uploaded next step.
-        let tr_bufs = self.tr.take_device_buffers()?;
-        let m_bufs = self.m.take_device_buffers()?;
-        let v_bufs = self.v.take_device_buffers()?;
-        let mut inputs: Vec<InputBuf> =
-            Vec::with_capacity(self.adam_prog.spec.inputs.len());
-        inputs.extend(tr_bufs.into_iter().map(InputBuf::Donated));
-        inputs.extend(m_bufs.into_iter().map(InputBuf::Donated));
-        inputs.extend(v_bufs.into_iter().map(InputBuf::Donated));
-        inputs.push(InputBuf::Borrowed(&step_buf));
-        inputs.extend(g_bufs.into_iter().map(InputBuf::Donated));
-        inputs.push(InputBuf::Borrowed(&self.lr_buf.as_ref().unwrap().1));
-        let outs = self.adam_prog.execute_raw_donated(inputs)?;
-        let mut outs = outs.into_iter();
-        self.tr.adopt_all(&mut outs)?;
-        self.m.adopt_all(&mut outs)?;
-        self.v.adopt_all(&mut outs)?;
-        // Δ_W = W_t − W_{t−1} needs W_t host-side: lazily sync just the
-        // trainables (m/v stay device-only for the life of the run). With
-        // FF off even the trainables stay device-resident until something
-        // (checkpointing, analysis) actually asks for them.
-        if track_delta {
-            self.delta.end_step(&mut self.tr)?;
-        } else {
-            // a Δ from before FF shut off must not be served later
-            self.delta.clear();
-        }
-        self.adam_steps += 1;
+        let d = self.engine.dispatch_step(&opts)?;
+        self.last_grads = d.mean_grads;
+        self.last_micro_grads = d.micro_grads;
         self.ffc.on_sgd_step();
-        self.flops.sgd_step(&self.fm, global.total_tokens());
-        self.log.push(StepRecord {
+        self.flops.sgd_step(&self.fm, d.tokens);
+        self.pending_records.push_back(PendingRecord {
+            ticket: d.ticket,
             step: self.total_steps(),
-            kind: StepKind::Sgd,
-            loss: mean_loss,
             flops: self.flops.total(),
             seconds: self.timer.elapsed(),
         });
-        Ok(mean_loss)
+        self.absorb_resolved(d.resolved);
+        Ok(())
     }
 
-    /// Device path: run `grad_step` in raw mode per micro-batch (only the
-    /// loss scalar is downloaded), fold the gradient buffers into a
-    /// [`DeviceGradAccumulator`], and return the finalized mean-gradient
-    /// buffers ready to donate into `adam_apply`.
-    fn accumulate_device(
-        &mut self,
-        global: &GlobalBatch,
-    ) -> Result<(Vec<xla::PjRtBuffer>, f32)> {
-        let accum_prog =
-            Rc::clone(self.grad_accum_prog.as_ref().expect("checked by sgd_step"));
-        let finalize_prog =
-            Rc::clone(self.grad_finalize_prog.as_ref().expect("checked by sgd_step"));
-        let n = self.tr.len();
-        let mut acc = DeviceGradAccumulator::new();
-        for micro in &global.micro {
-            let (tok, tgt, msk) = self.upload_micro(micro)?;
-            let inputs = param_batch_inputs(
-                &mut self.tr,
-                &mut self.fr,
-                self.grad_prog.spec.inputs.len(),
-                [&tok, &tgt, &msk],
-            )?;
-            let outs = self.grad_prog.execute_raw(&inputs)?;
-            drop(inputs);
-            let mut outs = outs.into_iter();
-            let loss_buf = outs.next().expect("grad_step outputs [loss, g..]");
-            let loss = self.grad_prog.download_output(&loss_buf, 0)?[0];
-            let grads: Vec<xla::PjRtBuffer> = outs.collect();
-            debug_assert_eq!(grads.len(), n, "grad_step output arity");
-            acc.add_raw(&accum_prog, grads, loss)?;
-        }
-        let count = acc.count();
-        if self.inv_n_buf.as_ref().map(|(c, _)| *c) != Some(count) {
-            self.inv_n_buf =
-                Some((count, self.rt.upload_scalar(1.0 / count as f32)?));
-        }
-        acc.finalize(&finalize_prog, &self.inv_n_buf.as_ref().unwrap().1)
+    /// Force the engine to retire every in-flight step and backfill the
+    /// run log. No-op when nothing is pending.
+    pub fn drain_pending(&mut self, reason: SyncReason) -> Result<()> {
+        let resolved = self.engine.sync(reason)?;
+        self.absorb_resolved(resolved);
+        Ok(())
     }
 
-    /// Host reference path (`keep_micro_grads`, or artifacts without the
-    /// accumulation programs): decode every micro gradient, accumulate in
-    /// the host [`GradAccumulator`], and return the mean tensors — which
-    /// `sgd_step` then uploads, the O(|trainable|) per-step upload the
-    /// device path exists to remove.
-    fn accumulate_host(&mut self, global: &GlobalBatch) -> Result<(Vec<Tensor>, f32)> {
-        let n = self.tr.len();
-        let shapes: Vec<Vec<usize>> =
-            (0..n).map(|i| self.tr.shape(i).to_vec()).collect();
-        let mut acc = GradAccumulator::new(&shapes);
-        if self.keep_micro_grads {
-            self.last_micro_grads.clear();
+    /// Match resolved steps (FIFO by ticket) to their pending records and
+    /// write the completed [`StepRecord`]s.
+    fn absorb_resolved(&mut self, resolved: Vec<ResolvedStep>) {
+        for r in resolved {
+            let rec = self
+                .pending_records
+                .pop_front()
+                .expect("resolved step without a pending record");
+            debug_assert_eq!(rec.ticket, r.ticket, "deferred readback out of order");
+            self.log.push(StepRecord {
+                step: rec.step,
+                kind: StepKind::Sgd,
+                loss: r.mean_loss,
+                flops: rec.flops,
+                seconds: rec.seconds,
+            });
+            self.last_loss = Some(r.mean_loss);
         }
-        for micro in &global.micro {
-            let (tok, tgt, msk) = self.upload_micro(micro)?;
-            let inputs = param_batch_inputs(
-                &mut self.tr,
-                &mut self.fr,
-                self.grad_prog.spec.inputs.len(),
-                [&tok, &tgt, &msk],
-            )?;
-            // Gradients are consumed host-side here, so the decoded path
-            // is the right one.
-            let out = self.grad_prog.execute_buffers(&inputs)?;
-            let loss = out.values[0][0];
-            let grads: Vec<&[f32]> =
-                (0..n).map(|i| out.values[1 + i].as_slice()).collect();
-            acc.add_flat(&grads, loss);
-            if self.keep_micro_grads {
-                self.last_micro_grads.push(
-                    (0..n)
-                        .map(|i| {
-                            Tensor::from_vec(&shapes[i], out.values[1 + i].clone())
-                        })
-                        .collect(),
-                );
-            }
-        }
-        Ok(acc.take_mean())
-    }
-
-    /// Upload one micro-batch's tokens/targets/mask — the only per-step
-    /// uploads a steady-state device-accumulation step performs.
-    fn upload_micro(
-        &self,
-        micro: &Batch,
-    ) -> Result<(xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer)> {
-        Ok((
-            self.rt.upload_i32(&micro.tokens, &[micro.b, micro.t])?,
-            self.rt.upload_i32(&micro.targets, &[micro.b, micro.t])?,
-            self.rt.upload_f32(&micro.mask, &[micro.b, micro.t])?,
-        ))
-    }
-
-    /// Download mean-gradient buffers into host tensors (analysis
-    /// consumers only — the training path never needs this).
-    fn download_grads(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
-        let mut out = Vec::with_capacity(bufs.len());
-        for (i, b) in bufs.iter().enumerate() {
-            let v = self.rt.download_f32(b)?;
-            out.push(Tensor::from_vec(self.tr.shape(i), v));
-        }
-        Ok(out)
-    }
-
-    /// Evaluate mask-weighted mean loss over a cached batch list
-    /// (token-weighted across chunks, matching the in-graph masked mean
-    /// exactly). The device buffers for each split upload once, on the
-    /// first call, and are reused by every later probe.
-    fn eval_batches_loss(
-        &mut self,
-        which: EvalSet,
-        charge_ff: bool,
-    ) -> Result<f32> {
-        // Detach the cache from `self` so iterating it doesn't pin a borrow
-        // across the &mut self program calls; re-attached below.
-        let cache = match which {
-            EvalSet::Val => self.val_cache.take(),
-            EvalSet::Test => self.test_cache.take(),
-        };
-        let cache = match cache {
-            Some(c) => c,
-            None => {
-                let batches = match which {
-                    EvalSet::Val => &self.val_batches,
-                    EvalSet::Test => &self.test_batches,
-                };
-                EvalCache::build(&self.rt, batches)?
-            }
-        };
-        let result = self.eval_cached_loss(&cache, charge_ff);
-        match which {
-            EvalSet::Val => self.val_cache = Some(cache),
-            EvalSet::Test => self.test_cache = Some(cache),
-        }
-        result
-    }
-
-    fn eval_cached_loss(&mut self, cache: &EvalCache, charge_ff: bool) -> Result<f32> {
-        let mut total = 0.0f64;
-        let mut weight = 0.0f64;
-        let mut tokens = 0usize;
-        for chunk in cache.chunks() {
-            debug_assert!(chunk.mask_sum > 0.0, "EvalCache::build drops zero-mask chunks");
-            let inputs = param_batch_inputs(
-                &mut self.tr,
-                &mut self.fr,
-                self.eval_prog.spec.inputs.len(),
-                [&chunk.tokens, &chunk.targets, &chunk.mask],
-            )?;
-            let out = self.eval_prog.execute_buffers(&inputs)?;
-            total += out.values[0][0] as f64 * chunk.mask_sum as f64;
-            weight += chunk.mask_sum as f64;
-            tokens += chunk.total_tokens;
-        }
-        if charge_ff {
-            self.flops.ff_probe(&self.fm, tokens);
-        } else {
-            self.flops.test_eval(&self.fm, tokens);
-        }
-        Ok((total / weight.max(1.0)) as f32)
     }
 
     /// Tiny-validation-set loss (charged as FF inference per the paper).
+    /// An eval is a pipeline boundary: pending steps retire first.
     pub fn eval_val(&mut self) -> Result<f32> {
-        self.eval_batches_loss(EvalSet::Val, true)
+        self.drain_pending(SyncReason::Eval)?;
+        let m = self.engine.eval_split(EvalSplit::Val)?;
+        self.flops.ff_probe(&self.fm, m.tokens);
+        Ok(m.loss)
     }
 
     /// Held-out test loss (measurement only: excluded from train time and
     /// chargeable FLOPs).
     pub fn eval_test(&mut self) -> Result<f32> {
+        self.drain_pending(SyncReason::Eval)?;
         self.timer.pause();
-        let loss = self.eval_batches_loss(EvalSet::Test, false);
+        let r = self.engine.eval_split(EvalSplit::Test);
         self.timer.resume();
-        if let Ok(l) = loss {
-            let (s, f, t) = (self.total_steps(), self.flops.total(), self.timer.elapsed());
-            self.log.test_evals.push((l, s, f, t));
-        }
-        loss
+        let m = r?;
+        self.flops.test_eval(&self.fm, m.tokens);
+        let (s, f, t) = (self.total_steps(), self.flops.total(), self.timer.elapsed());
+        self.log.test_evals.push((m.loss, s, f, t));
+        Ok(m.loss)
     }
 
     /// Run one Fast Forward stage (paper §3): line search along the most
-    /// recent Δ_W, stopping when tiny-val loss stops improving.
+    /// recent Δ_W, stopping when tiny-val loss stops improving. A stage is
+    /// a hard pipeline boundary — every dispatched step retires first.
     pub fn ff_stage(&mut self) -> Result<FfStageStats> {
-        let delta = match self.delta.delta() {
+        self.drain_pending(SyncReason::FfBoundary)?;
+        let delta = match self.engine.delta() {
             Some(d) => d.to_vec(),
             None if !self.cfg.ff.enabled => bail!(
                 "ff_stage on an FF-disabled trainer: Δ_W tracking is gated \
@@ -595,7 +398,8 @@ impl Trainer {
     /// Fig 10 probe: run exactly `n_steps` simulated steps with *no* stop
     /// rule, recording val loss at each τ, then restore W_t.
     pub fn ff_probe_fixed(&mut self, n_steps: usize) -> Result<Vec<f32>> {
-        let delta = match self.delta.delta() {
+        self.drain_pending(SyncReason::FfBoundary)?;
+        let delta = match self.engine.delta() {
             Some(d) => d.to_vec(),
             None if !self.cfg.ff.enabled => bail!(
                 "ff_probe on an FF-disabled trainer: Δ_W tracking is gated \
@@ -606,14 +410,14 @@ impl Trainer {
             ),
             None => bail!("ff_probe before any optimizer step"),
         };
-        let snap = self.tr.snapshot();
+        let snap = self.engine.trainable_snapshot()?;
         let mut losses = Vec::with_capacity(n_steps + 1);
         losses.push(self.eval_val()?);
         for _ in 0..n_steps {
-            self.tr.axpy(1.0, &delta);
+            self.engine.axpy_trainables(1.0, &delta)?;
             losses.push(self.eval_val()?);
         }
-        self.tr.restore(&snap);
+        self.engine.restore_trainables(&snap);
         Ok(losses)
     }
 
@@ -624,8 +428,7 @@ impl Trainer {
         grad_cond: f64,
     ) -> Result<FfStageStats> {
         // Each kept simulated step is a step record (Fig 4 green dots).
-        for (i, loss) in r.losses.iter().take(r.tau_star).enumerate() {
-            let _ = i;
+        for loss in r.losses.iter().take(r.tau_star) {
             self.log.push(StepRecord {
                 step: self.total_steps() + 1,
                 kind: StepKind::FastForward,
@@ -636,7 +439,7 @@ impl Trainer {
         }
         let stats = FfStageStats {
             stage: self.ffc.n_stages(),
-            at_step: self.adam_steps,
+            at_step: self.adam_steps(),
             tau_star: r.tau_star,
             probes: r.probes,
             baseline_loss: r.baseline_loss,
@@ -661,6 +464,11 @@ impl Trainer {
     // ---------------------------------------------------------------------
 
     /// Drive the controller until the stop rule fires; returns the summary.
+    ///
+    /// SGD steps go through the **pipelined** dispatch path: up to the
+    /// engine's drain interval of steps stay in flight, and the readback
+    /// ring drains at FF stages, evals, and the end of the run (the log
+    /// comes out identical to the synchronous path, just written later).
     pub fn run(&mut self, stop: &StopRule) -> Result<RunSummary> {
         let mut reached = false;
         loop {
@@ -669,12 +477,12 @@ impl Trainer {
                 StopRule::TargetLoss { max_steps, .. } => *max_steps,
                 StopRule::Convergence { max_steps, .. } => *max_steps,
             };
-            if self.adam_steps >= max {
+            if self.adam_steps() >= max {
                 break;
             }
             let did_ff = match self.ffc.next() {
                 FfDecision::Sgd => {
-                    self.sgd_step()?;
+                    self.dispatch_sgd_step()?;
                     false
                 }
                 FfDecision::FastForward => {
@@ -685,7 +493,7 @@ impl Trainer {
             if let StopRule::TargetLoss { target, eps, eval_every, .. } = stop {
                 // Check after every FF stage (a single stage can jump far
                 // past the target) and on the SGD cadence otherwise.
-                if did_ff || self.adam_steps % eval_every == 0 {
+                if did_ff || self.adam_steps() % eval_every == 0 {
                     let test = self.eval_test()?;
                     if test <= *target + *eps {
                         reached = true;
@@ -696,16 +504,17 @@ impl Trainer {
             if let StopRule::Convergence { tail, .. } = stop {
                 if self.ffc.is_permanently_off() {
                     for _ in 0..*tail {
-                        self.sgd_step()?;
+                        self.dispatch_sgd_step()?;
                     }
                     break;
                 }
             }
         }
+        self.drain_pending(SyncReason::Shutdown)?;
         let final_test_loss = self.eval_test()?;
         Ok(RunSummary {
             final_test_loss,
-            adam_steps: self.adam_steps,
+            adam_steps: self.adam_steps(),
             sim_steps: self.log.n_ff(),
             flops: self.flops,
             train_seconds: self.timer.elapsed(),
@@ -721,109 +530,71 @@ impl Trainer {
     /// Evaluate test loss at arbitrary trainable values (Fig 5 plane scan);
     /// restores the current trainables afterwards.
     pub fn eval_test_at(&mut self, trainables: &[Tensor]) -> Result<f32> {
-        self.tr.sync_host()?;
-        let snap = self.tr.snapshot();
-        self.tr.restore(trainables);
-        let loss = self.eval_batches_loss(EvalSet::Test, false);
-        self.tr.restore(&snap);
-        loss
+        self.drain_pending(SyncReason::Eval)?;
+        let snap = self.engine.trainable_snapshot()?;
+        self.engine.restore_trainables(trainables);
+        let r = self.engine.eval_split(EvalSplit::Test);
+        self.engine.restore_trainables(&snap);
+        let m = r?;
+        self.flops.test_eval(&self.fm, m.tokens);
+        Ok(m.loss)
     }
 
     /// Loss of one example through the eval program (QA scoring). The
-    /// example is padded to the eval batch shape with zero-mask rows; the
-    /// replicated rows live in a per-trainer scratch that is refilled in
-    /// place, so scoring a benchmark allocates nothing per example.
+    /// example is padded to the eval batch shape with zero-mask rows and
+    /// staged through a per-engine scratch, so scoring a benchmark
+    /// allocates nothing per example.
     pub fn eval_example_loss(&mut self, ex: &crate::data::corpus::Example) -> Result<f32> {
-        let man = &self.art.manifest;
-        let (b, t) = (man.config.model.eval_batch, man.config.model.seq_len);
-        anyhow::ensure!(ex.mask.len() == t, "example seq_len {} != model {}", ex.mask.len(), t);
-        let scratch = self.qa_scratch.get_or_insert_with(|| ExampleScratch::new(b, t));
-        scratch.fill(ex);
-        let tok = self.rt.upload_i32(scratch.tokens(), &[b, t])?;
-        let tgt = self.rt.upload_i32(scratch.targets(), &[b, t])?;
-        let msk = self.rt.upload_f32(scratch.mask(), &[b, t])?;
-        let inputs = param_batch_inputs(
-            &mut self.tr,
-            &mut self.fr,
-            self.eval_prog.spec.inputs.len(),
-            [&tok, &tgt, &msk],
-        )?;
-        let out = self.eval_prog.execute_buffers(&inputs)?;
-        self.flops.test_eval(&self.fm, b * t);
-        Ok(out.values[0][0])
+        self.drain_pending(SyncReason::Eval)?;
+        let m = self.engine.eval_example(ex)?;
+        self.flops.test_eval(&self.fm, m.tokens);
+        Ok(m.loss)
     }
 
     /// Current trainable snapshot (W_t), syncing any device-ahead state
     /// first — the one download a baseline run ever pays for its params.
+    /// Callers that only need shapes should use
+    /// [`Trainer::trainable_shapes`] (sync-free) instead.
     pub fn trainables(&mut self) -> Result<Vec<Tensor>> {
-        self.tr.sync_host()?;
-        Ok(self.tr.snapshot())
+        self.drain_pending(SyncReason::Snapshot)?;
+        self.engine.trainable_snapshot()
     }
 
     /// Apply `W += alpha·delta` on the live trainables (bench/probe hook —
     /// the same host axpy a FF simulated step performs).
     pub fn tr_axpy_for_bench(&mut self, delta: &[Tensor], alpha: f32) -> Result<()> {
-        self.tr.sync_host()?;
-        self.tr.axpy(alpha, delta);
-        Ok(())
+        self.engine.axpy_trainables(alpha, delta)
     }
 
-    /// All current parameters by name (checkpointing). Syncs device-ahead
-    /// trainables first; frozen params are never device-written.
+    /// All current parameters by name (checkpointing). Downloads lazily —
+    /// only device-ahead trainables; frozen params are never
+    /// device-written.
     pub fn all_params(&mut self) -> Result<BTreeMap<String, Tensor>> {
-        self.tr.sync_host()?;
-        let mut out = BTreeMap::new();
-        for (name, t) in self.tr.names().iter().zip(self.tr.tensors()) {
-            out.insert(name.clone(), t.clone());
-        }
-        for (name, t) in self.fr.names().iter().zip(self.fr.tensors()) {
-            out.insert(name.clone(), t.clone());
-        }
-        Ok(out)
+        self.drain_pending(SyncReason::Snapshot)?;
+        self.engine.named_params()
     }
-}
-
-#[derive(Clone, Copy)]
-enum EvalSet {
-    Val,
-    Test,
-}
-
-/// Assemble the `[trainables.., frozen.., tokens, targets, mask]` input
-/// list shared by every `grad_step`/`eval_loss` dispatch, uploading any
-/// stale parameter tensors first. A free function over the two ParamSets
-/// (not a `&mut self` method) so the returned borrows stay field-scoped
-/// and the caller can still dispatch through the trainer's program
-/// handles.
-fn param_batch_inputs<'a>(
-    tr: &'a mut ParamSet,
-    fr: &'a mut ParamSet,
-    arity: usize,
-    batch: [&'a xla::PjRtBuffer; 3],
-) -> Result<Vec<&'a xla::PjRtBuffer>> {
-    let mut inputs = Vec::with_capacity(arity);
-    inputs.extend(tr.device_buffers()?);
-    inputs.extend(fr.device_buffers()?);
-    inputs.extend(batch);
-    Ok(inputs)
 }
 
 /// Line-search target over the live trainer (paper Eq. 2 applied to the
-/// real ParamSet, evaluated through the AOT eval program).
+/// real ParamSet through the engine's axpy/eval path).
 struct TrainerSearchTarget<'a> {
     trainer: &'a mut Trainer,
     delta: &'a [Tensor],
 }
 
 impl SearchTarget for TrainerSearchTarget<'_> {
+    fn begin(&mut self) -> Result<()> {
+        // A line search is a pipeline boundary: every dispatched step must
+        // retire before W starts moving host-side.
+        self.trainer.drain_pending(SyncReason::FfBoundary)
+    }
+
     fn apply(&mut self) -> Result<()> {
-        self.trainer.tr.axpy(1.0, self.delta);
-        Ok(())
+        self.trainer.engine.axpy_trainables(1.0, self.delta)
     }
 
     fn revert(&mut self) -> Result<()> {
-        self.trainer.tr.axpy(-1.0, self.delta);
-        Ok(())
+        self.trainer.engine.axpy_trainables(-1.0, self.delta)
     }
 
     fn eval(&mut self) -> Result<f32> {

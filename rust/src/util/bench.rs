@@ -26,12 +26,31 @@ impl BenchStats {
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
     }
+
+    /// JSON form for the machine-readable bench outputs
+    /// (`BENCH_step.json` / `BENCH_runtime.json`) — durations in seconds,
+    /// so cross-PR diffs don't have to parse `Duration` debug strings.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_secs", self.mean.as_secs_f64())
+            .set("p50_secs", self.p50.as_secs_f64())
+            .set("p95_secs", self.p95.as_secs_f64())
+            .set("min_secs", self.min.as_secs_f64())
+            .set("max_secs", self.max.as_secs_f64())
+    }
 }
 
 /// Run `f` repeatedly: `warmup` untimed passes, then timed passes until both
 /// `min_iters` iterations and `min_time` wall time have elapsed.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize,
-                         min_time: Duration, mut f: F) -> BenchStats {
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    min_time: Duration,
+    mut f: F,
+) -> BenchStats {
     for _ in 0..warmup {
         f();
     }
@@ -93,6 +112,24 @@ mod tests {
         });
         assert!(s.mean >= Duration::from_millis(4), "{:?}", s.mean);
         assert!(s.mean < Duration::from_millis(80), "{:?}", s.mean);
+    }
+
+    #[test]
+    fn to_json_reports_seconds() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 4,
+            mean: Duration::from_millis(250),
+            p50: Duration::from_millis(240),
+            p95: Duration::from_millis(300),
+            min: Duration::from_millis(200),
+            max: Duration::from_millis(310),
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("name").as_str(), Some("x"));
+        assert_eq!(j.get("iters").as_usize(), Some(4));
+        assert!((j.get("mean_secs").as_f64().unwrap() - 0.25).abs() < 1e-12);
+        assert!((j.get("p95_secs").as_f64().unwrap() - 0.30).abs() < 1e-12);
     }
 
     #[test]

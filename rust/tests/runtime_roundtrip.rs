@@ -8,7 +8,10 @@ use std::rc::Rc;
 
 use fastforward::model::init::init_params;
 use fastforward::model::tensor::Tensor;
-use fastforward::runtime::{Artifact, ArtifactIndex, InputBuf, ParamSet, Runtime};
+use fastforward::runtime::{
+    Artifact, ArtifactIndex, ExecStream, InputBuf, ParamSet, PendingLoss, PendingStep, Runtime,
+    SyncReason,
+};
 
 fn artifacts_root() -> std::path::PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -490,6 +493,72 @@ fn decoded_and_raw_execution_agree() {
         (decoded - raw).abs() < 1e-7,
         "decoded {decoded} != raw {raw}"
     );
+}
+
+#[test]
+fn deferred_loss_readback_equals_sync_download() {
+    // Stream-layer contract: a loss scalar held as a PendingLoss in the
+    // ExecStream ring and drained later decodes to exactly the bits the
+    // synchronous download produced — and no loss bytes cross the
+    // host↔device boundary until the ring drains.
+    let (rt, art) = load("ff-tiny_lora_r8");
+    let man = &art.manifest;
+    let vals = init_params(&man.config, 29);
+    let mut tr = ParamSet::from_spec(&rt, &man.trainable, &vals).unwrap();
+    let mut fr = ParamSet::from_spec(&rt, &man.frozen, &vals).unwrap();
+    let prog = art.program("eval_loss").unwrap();
+    let (b, t) = (man.config.model.eval_batch, man.config.model.seq_len);
+    let loss_i = prog.output_index("loss").unwrap();
+
+    let mut stream = ExecStream::new(3);
+    let mut sync_losses = Vec::new();
+    let mut resolved = Vec::new();
+    for ticket in 0..5u64 {
+        let (tokens, targets, mask) = mk_batch(b, t, 512, 200 + ticket);
+        let tok = rt.upload_i32(&tokens, &[b, t]).unwrap();
+        let tgt = rt.upload_i32(&targets, &[b, t]).unwrap();
+        let msk = rt.upload_f32(&mask, &[b, t]).unwrap();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        inputs.extend(tr.device_buffers().unwrap());
+        inputs.extend(fr.device_buffers().unwrap());
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        // synchronous reference download
+        let raw = prog.execute_raw(&inputs).unwrap();
+        sync_losses.push(prog.download_output(&raw[loss_i], loss_i).unwrap()[0]);
+        // deferred copy of the same dispatch
+        let mut raw2 = prog.execute_raw(&inputs).unwrap();
+        let loss_buf = raw2.swap_remove(loss_i);
+        let deferred_window = rt.stats.snapshot(); // after this round's sync download
+        let pending = PendingStep::new(ticket, vec![PendingLoss::new(&prog, loss_buf, loss_i)]);
+        let depth_before = stream.depth();
+        let drained = stream.push(pending).unwrap();
+        if drained.is_empty() {
+            // nothing crossed the boundary for the deferred dispatch
+            let d = rt.stats.snapshot().since(&deferred_window);
+            assert_eq!(d.downloads, 0, "deferred loss downloaded early: {d:?}");
+            assert_eq!(stream.depth(), depth_before + 1);
+        }
+        resolved.extend(drained);
+    }
+    resolved.extend(stream.sync(SyncReason::Shutdown).unwrap());
+    assert_eq!(resolved.len(), 5);
+    for (r, want) in resolved.iter().zip(sync_losses.iter()) {
+        assert_eq!(
+            r.mean_loss.to_bits(),
+            want.to_bits(),
+            "deferred {} != sync {want}",
+            r.mean_loss
+        );
+        assert_eq!(r.micro_losses.len(), 1);
+    }
+    // FIFO tickets
+    assert_eq!(resolved.iter().map(|r| r.ticket).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    let stats = stream.stats();
+    assert_eq!(stats.steps, 5);
+    assert_eq!(stats.interval_drains, 1, "5 pushes at K=3 → one interval drain");
+    assert_eq!(stats.forced_drains.get("shutdown"), Some(&1));
 }
 
 #[test]

@@ -6,7 +6,8 @@
 use std::path::{Path, PathBuf};
 
 use fastforward::config::{presets, FfConfig, TrainConfig};
-use fastforward::runtime::Runtime;
+use fastforward::metrics::StepKind;
+use fastforward::runtime::{Runtime, SyncReason};
 use fastforward::train::pretrain::ensure_pretrained;
 use fastforward::train::trainer::{StopRule, Trainer};
 
@@ -127,7 +128,7 @@ fn device_residency_keeps_state_uploads_flat_and_eval_cached() {
         "steady-state Adam steps re-uploaded param/optimizer state"
     );
     // lazy host sync downloads exactly the trainable set per step (Δ_W)
-    let n = t.tr.len() as u64;
+    let n = t.trainable_count() as u64;
     assert_eq!(downs1 - downs0, 3 * n, "expected one Δ_W sync per step");
 
     // eval buffers cache: after the first eval, repeated probes at fixed W
@@ -185,7 +186,10 @@ fn device_accumulation_uploads_batch_bytes_only() {
     );
     // each step donates t/m/v + the accumulated gradient (4·|trainable|)
     // plus the grad_accum/grad_finalize accumulator generations
-    assert!(d.donations >= steps * 4 * t.tr.len() as u64, "donation metering: {d:?}");
+    assert!(
+        d.donations >= steps * 4 * t.trainable_count() as u64,
+        "donation metering: {d:?}"
+    );
     // baseline runs download only the per-micro loss scalars
     assert_eq!(d.downloaded_bytes, steps * n_micro as u64 * 4, "{d:?}");
     assert!(t.last_grads.is_empty(), "baseline step must not download grads");
@@ -233,6 +237,115 @@ fn host_and_device_accumulation_paths_agree() {
             .fold(0.0f32, f32::max);
         assert!(max_d < 1e-5, "weights diverged between paths: {max_d}");
     }
+}
+
+#[test]
+fn deferred_readback_matches_synchronous_losses() {
+    // The pipeline's correctness contract: dispatching steps through the
+    // deferred-readback ring (drain every K) must produce bit-for-bit the
+    // same losses, in the same order, as the synchronous path (drain
+    // every 1) — deferral changes *when* the 4-byte scalars cross, never
+    // their values. Same seed + same config ⇒ identical batch streams.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+
+    let steps = 10;
+    let mut sync = Trainer::new(&rt, &root, tiny_cfg(false, steps), Some(&base)).unwrap();
+    sync.set_drain_interval(1);
+    let mut sync_losses = Vec::new();
+    for _ in 0..steps {
+        sync_losses.push(sync.sgd_step().unwrap());
+    }
+
+    let mut pipe = Trainer::new(&rt, &root, tiny_cfg(false, steps), Some(&base)).unwrap();
+    pipe.set_drain_interval(4);
+    for _ in 0..steps {
+        pipe.dispatch_sgd_step().unwrap();
+    }
+    // 10 dispatches with K=4: two interval drains have fired, two steps
+    // are still in flight until the boundary sync retires them.
+    assert_eq!(pipe.pending_steps(), 2, "ring should still hold 10 mod 4 steps");
+    pipe.drain_pending(SyncReason::Shutdown).unwrap();
+    assert_eq!(pipe.pending_steps(), 0);
+
+    let pipe_losses: Vec<f32> = pipe
+        .log
+        .records
+        .iter()
+        .filter(|r| r.kind == StepKind::Sgd)
+        .map(|r| r.loss)
+        .collect();
+    assert_eq!(pipe_losses.len(), steps);
+    for (i, (a, b)) in sync_losses.iter().zip(pipe_losses.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "step {i}: sync {a} != deferred {b}");
+    }
+    // the deferred log carries the same step indices, in order
+    let steps_logged: Vec<usize> = pipe.log.records.iter().map(|r| r.step).collect();
+    assert_eq!(steps_logged, (1..=steps).collect::<Vec<_>>());
+    // and the stream actually deferred: 2 interval drains + 1 forced
+    let ss = pipe.stream_stats();
+    assert_eq!(ss.interval_drains, 2, "{}", ss.report());
+    assert_eq!(ss.forced_total(), 1, "{}", ss.report());
+    assert!(ss.max_depth >= 4, "{}", ss.report());
+
+    // weights agree too: pipelining must not change the trajectory
+    let ws = sync.trainables().unwrap();
+    let wp = pipe.trainables().unwrap();
+    for (a, b) in ws.iter().zip(wp.iter()) {
+        let max_d = a
+            .data
+            .iter()
+            .zip(b.data.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_d <= 1e-7, "weights diverged under deferred readback: {max_d}");
+    }
+}
+
+#[test]
+fn pipelined_steps_keep_batch_only_upload_contract() {
+    // PR-2's steady-state upload assertion must survive prefetch and
+    // deferred readback: each dispatched step still uploads exactly one
+    // global batch + one 4-byte step scalar (the batch is the *next*
+    // step's, staged while this one executes — same bytes, earlier).
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let cfg = tiny_cfg(false, 16);
+    let global_batch = cfg.global_batch;
+    let mut t = Trainer::new(&rt, &root, cfg, Some(&base)).unwrap();
+    if !t.art.manifest.has_program("grad_accum") {
+        eprintln!("skipping: artifact predates grad_accum (regenerate with make artifacts)");
+        return;
+    }
+    t.set_drain_interval(4);
+
+    // warm up: state uploads, lr/1-n scalars, and the prefetch slot
+    t.sgd_step().unwrap();
+    t.sgd_step().unwrap();
+    let tr0 = t.transfers();
+    let steps = 8u64;
+    for _ in 0..steps {
+        t.dispatch_sgd_step().unwrap();
+    }
+    t.drain_pending(SyncReason::Shutdown).unwrap();
+    let d = t.transfers().since(&tr0);
+    let mc = t.art.manifest.config.model.clone();
+    let n_micro = global_batch / mc.micro_batch;
+    let batch_bytes = (n_micro * 3 * mc.micro_batch * mc.seq_len * 4 + 4) as u64;
+    assert_eq!(
+        d.uploaded_bytes,
+        steps * batch_bytes,
+        "pipelined steady-state uploads must stay batch data + step scalar only: {d:?}"
+    );
+    // deferred readback moves loss downloads later, never changes them:
+    // one 4-byte scalar per micro-batch per step
+    assert_eq!(d.downloaded_bytes, steps * n_micro as u64 * 4, "{d:?}");
+    assert!(
+        d.donations >= steps * 4 * t.trainable_count() as u64,
+        "donation metering under pipelining: {d:?}"
+    );
 }
 
 #[test]
