@@ -81,18 +81,16 @@ impl Pipeline {
 
 impl Drop for Pipeline {
     fn drop(&mut self) {
-        // Closing the receiver unblocks the producer's send; then join.
-        let Pipeline { rx, handle, .. } = self;
-        // drop receiver first by replacing it is not possible; instead we
-        // rely on rx dropping as part of self. Join on a disconnected send.
-        let _ = rx;
-        if let Some(h) = handle.take() {
-            // The producer exits on the first send after disconnect; it may
-            // currently be blocked on a full channel — drain one item.
+        // The producer may be blocked mid-`send` on a full channel; drain
+        // whatever is buffered so it can complete that send, then detach
+        // (drop the JoinHandle without joining). Joining here could
+        // deadlock — the receiver is a field of `self` and only disconnects
+        // *after* this Drop returns, and the producer runs until a send
+        // fails. Once `self.rx` drops with the rest of the struct, the
+        // producer's next send errors and the detached thread exits.
+        if let Some(handle) = self.handle.take() {
             while self.rx.try_recv().is_ok() {}
-            let _ = h;
-            // Detach: joining here could deadlock if the producer is mid-
-            // send; the thread exits promptly once the channel disconnects.
+            drop(handle);
         }
     }
 }

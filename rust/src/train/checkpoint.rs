@@ -26,16 +26,23 @@ pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()>
         })
         .collect();
     let header = Json::obj().set("params", Json::Arr(entries)).to_string();
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u64).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
-    for t in params.values() {
-        // params is a BTreeMap → iteration order == header order
-        let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
-        f.write_all(&bytes)?;
+    // Write to a temp file and rename into place: a crash mid-write (or a
+    // concurrent reader) must never observe a truncated checkpoint.
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in params.values() {
+            // params is a BTreeMap → iteration order == header order
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
     }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("installing {}", path.display()))?;
     Ok(())
 }
 
