@@ -16,7 +16,7 @@
 //! exactly once); only the *when* moves one step earlier. See
 //! `docs/step-pipeline.md`.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -187,7 +187,7 @@ impl StagedBatch {
 /// [`BatchStager::prefetch`] right after dispatching, while the device is
 /// busy.
 pub struct BatchStager {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     staged: Option<StagedBatch>,
     /// Steps that found their batch already staged (pipeline hit rate).
     hits: u64,
@@ -195,8 +195,8 @@ pub struct BatchStager {
 }
 
 impl BatchStager {
-    pub fn new(rt: &Rc<Runtime>) -> BatchStager {
-        BatchStager { rt: Rc::clone(rt), staged: None, hits: 0, misses: 0 }
+    pub fn new(rt: &Arc<Runtime>) -> BatchStager {
+        BatchStager { rt: Arc::clone(rt), staged: None, hits: 0, misses: 0 }
     }
 
     /// The batch for the step starting now: the prefetched one when

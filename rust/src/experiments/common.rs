@@ -3,12 +3,60 @@
 //! final test loss as target → FF run until matching it), with the shared
 //! pretrained W0 guaranteeing both runs start identically.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::config::{presets, FfConfig, TrainConfig};
 use crate::experiments::ExpContext;
-use crate::train::pretrain::ensure_pretrained;
+use crate::model::tensor::Tensor;
 use crate::train::trainer::{RunSummary, StopRule, Trainer};
+use crate::util::json::Json;
+
+/// Guarded saving ratio `1 − num/den`: `None` when the denominator is
+/// zero or non-finite (degenerate quick-scale cells), where the raw
+/// division would print ±inf/NaN percentages into reports.
+pub fn saved_frac(num: f64, den: f64) -> Option<f64> {
+    (den > 0.0 && den.is_finite()).then(|| 1.0 - num / den)
+}
+
+/// `Some(finite fraction)` → `"42.0%"`, else `"n/a"` (log lines).
+pub fn pct_or_na(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{:.1}%", 100.0 * x),
+        _ => "n/a".to_string(),
+    }
+}
+
+/// `Some(finite fraction)` → percentage `Json::Num`, else `Json::Null`
+/// (report rows; render back with [`pct_cell`]).
+pub fn pct_json(v: Option<f64>) -> Json {
+    match v {
+        Some(x) if x.is_finite() => Json::Num(100.0 * x),
+        _ => Json::Null,
+    }
+}
+
+/// Table cell for a percentage written by [`pct_json`]: `"{:.1}"` for a
+/// finite number, `"n/a"` for null/non-finite.
+pub fn pct_cell(v: &Json) -> String {
+    match v.as_f64() {
+        Some(x) if x.is_finite() => format!("{x:.1}"),
+        _ => "n/a".to_string(),
+    }
+}
+
+/// Build a trainer through the context's shared [`crate::sched::ArtifactCache`]
+/// so concurrent harness cells over the same artifact share one compiled
+/// program set instead of each compiling their own.
+pub fn trainer_for(
+    ctx: &ExpContext,
+    cfg: TrainConfig,
+    base: Option<&BTreeMap<String, Tensor>>,
+) -> Result<Trainer> {
+    let art = ctx.artifacts.load(&ctx.rt, &cfg.artifact)?;
+    Trainer::with_artifact(&ctx.rt, art, cfg, base)
+}
 
 /// Scaled-down corpus sizes per task for quick mode (full keeps presets).
 pub fn train_examples_for(ctx: &ExpContext, task: &str) -> usize {
@@ -45,30 +93,48 @@ pub struct PairOutcome {
 }
 
 impl PairOutcome {
-    /// 1 − FF/baseline on chargeable FLOPs (paper Fig 2 y-axis).
-    pub fn flops_saved(&self) -> f64 {
-        1.0 - self.ff.flops.total() as f64 / self.baseline.flops.total() as f64
+    /// 1 − FF/baseline on chargeable FLOPs (paper Fig 2 y-axis). `None`
+    /// when the baseline charged zero FLOPs (degenerate quick-scale cells)
+    /// — the ratio would be ±inf/NaN, and reports must say `n/a`, not
+    /// print garbage percentages.
+    pub fn flops_saved(&self) -> Option<f64> {
+        saved_frac(self.ff.flops.total() as f64, self.baseline.flops.total() as f64)
     }
 
-    /// 1 − FF/baseline on train seconds (paper Fig 3 y-axis).
-    pub fn time_saved(&self) -> f64 {
-        1.0 - self.ff.train_seconds / self.baseline.train_seconds
+    /// 1 − FF/baseline on train seconds (paper Fig 3 y-axis). `None` when
+    /// the baseline's train time is zero or non-finite (sub-resolution
+    /// quick-scale runs), for the same reason as [`PairOutcome::flops_saved`].
+    pub fn time_saved(&self) -> Option<f64> {
+        saved_frac(self.ff.train_seconds, self.baseline.train_seconds)
     }
 }
 
 /// The paper's §4 protocol for one (model, task, mode) cell.
+///
+/// The two legs are inherently **sequential**: the FF leg's stop rule is
+/// `TargetLoss` at the baseline leg's final test loss, so the baseline
+/// must finish first — there is no legal baseline∥FF overlap within one
+/// pair. Concurrency across *cells* is what parallelizes the protocol:
+/// grid harnesses (fig2/fig7/qa) fan whole `run_pair` cells out through
+/// `ExpContext::pool`, so one cell's FF leg runs while another cell's
+/// baseline leg is still training. `run_pair` itself is thread-safe (the
+/// shared `W0` checkpoint build is serialized in `ensure_pretrained`).
 pub fn run_pair(ctx: &ExpContext, artifact: &str, model: &str, task: &str) -> Result<PairOutcome> {
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    // One Arc'd W0 per model per process — concurrent cells share it
+    // instead of each re-reading the checkpoint from disk.
+    let base = ctx.pretrained(model)?;
 
-    // Baseline: plain Adam for the full epoch budget.
+    // Baseline: plain Adam for the full epoch budget. Both legs go
+    // through the context's artifact cache so concurrent cells share one
+    // compiled program set per artifact.
     let cfg_b = run_config(ctx, artifact, task, FfConfig { enabled: false, ..FfConfig::default() })?;
     let max_steps = cfg_b.max_steps;
-    let mut baseline_trainer = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg_b, Some(&base))?;
+    let mut baseline_trainer = trainer_for(ctx, cfg_b, Some(base.as_ref()))?;
     let baseline = baseline_trainer.run(&StopRule::MaxSteps(max_steps))?;
 
     // FF: identical config + data, run to the baseline's final test loss.
     let cfg_f = run_config(ctx, artifact, task, FfConfig::default())?;
-    let mut ff_trainer = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg_f, Some(&base))?;
+    let mut ff_trainer = trainer_for(ctx, cfg_f, Some(base.as_ref()))?;
     let ff = ff_trainer.run(&StopRule::TargetLoss {
         target: baseline.final_test_loss,
         // quick-scale losses move more per step than the paper's ε=1e-4
@@ -83,17 +149,18 @@ pub fn run_pair(ctx: &ExpContext, artifact: &str, model: &str, task: &str) -> Re
         baseline_trainer.stream_stats().report(),
         ff_trainer.stream_stats().report(),
     );
+    let outcome = PairOutcome { baseline, ff, ff_trainer, baseline_trainer };
     crate::info!(
-        "[{model}/{task}] baseline {:.4} @{} steps vs FF {:.4} @{}+{} steps → {:.1}% FLOPs, {:.1}% time saved",
-        baseline.final_test_loss,
-        baseline.adam_steps,
-        ff.final_test_loss,
-        ff.adam_steps,
-        ff.sim_steps,
-        100.0 * (1.0 - ff.flops.total() as f64 / baseline.flops.total() as f64),
-        100.0 * (1.0 - ff.train_seconds / baseline.train_seconds),
+        "[{model}/{task}] baseline {:.4} @{} steps vs FF {:.4} @{}+{} steps → {} FLOPs, {} time saved",
+        outcome.baseline.final_test_loss,
+        outcome.baseline.adam_steps,
+        outcome.ff.final_test_loss,
+        outcome.ff.adam_steps,
+        outcome.ff.sim_steps,
+        pct_or_na(outcome.flops_saved()),
+        pct_or_na(outcome.time_saved()),
     );
-    Ok(PairOutcome { baseline, ff, ff_trainer, baseline_trainer })
+    Ok(outcome)
 }
 
 /// Artifact key for (model, mode, task-rank override).

@@ -7,41 +7,40 @@
 use anyhow::Result;
 
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{pct_json, pct_or_na, run_config, saved_frac, trainer_for};
 use crate::experiments::ExpContext;
 use crate::metrics::write_report;
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::{StopRule, Trainer};
+use crate::train::trainer::StopRule;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny"; // paper: Pythia-1.4B, medical task
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
     let budget = if ctx.scale.full { 300 } else { 150 };
 
     // FF to convergence (patience-3 rule), then 6 more SGD steps (paper).
     let ff_cfg = run_config(ctx, &artifact, "medical",
         FfConfig { convergence_patience: Some(3), ..FfConfig::default() })?;
-    let mut ff_t = Trainer::new(&ctx.rt, &ctx.artifacts_root, ff_cfg, Some(&base))?;
+    let mut ff_t = trainer_for(ctx, ff_cfg, Some(base.as_ref()))?;
     let ff = ff_t.run(&StopRule::Convergence { max_steps: budget, tail: 6 })?;
 
     // Baseline: plain Adam for the same optimizer-step count FF used.
     let b_cfg = run_config(ctx, &artifact, "medical",
         FfConfig { enabled: false, ..FfConfig::default() })?;
-    let mut b_t = Trainer::new(&ctx.rt, &ctx.artifacts_root, b_cfg, Some(&base))?;
+    let mut b_t = trainer_for(ctx, b_cfg, Some(base.as_ref()))?;
     // Match the *effective training progress* rather than steps: run the
     // baseline until its test loss stops improving too (same budget cap).
     let baseline = b_t.run(&StopRule::MaxSteps(budget))?;
 
-    let flops_saved = 1.0 - ff.flops.total() as f64 / baseline.flops.total() as f64;
+    let flops_saved = saved_frac(ff.flops.total() as f64, baseline.flops.total() as f64);
     let json = Json::obj()
         .set("id", "convergence")
         .set("ff_loss", ff.final_test_loss as f64)
         .set("baseline_loss", baseline.final_test_loss as f64)
         .set("ff_flops", ff.flops.total() as f64)
         .set("baseline_flops", baseline.flops.total() as f64)
-        .set("flops_saved_pct", 100.0 * flops_saved)
+        .set("flops_saved_pct", pct_json(flops_saved))
         .set("ff_adam_steps", ff.adam_steps)
         .set("ff_sim_steps", ff.sim_steps)
         .set("baseline_steps", baseline.adam_steps)
@@ -51,7 +50,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         "§5.1 — Fast Forward at loss convergence (medical, {model})\n\n\
          FF:       test loss {:.4} after {}+{} steps, {:.3e} FLOPs (converged: {})\n\
          baseline: test loss {:.4} after {} steps, {:.3e} FLOPs\n\
-         FLOPs saved: {:.1}%  (paper: 56% with slightly better final loss)\n\
+         FLOPs saved: {}  (paper: 56% with slightly better final loss)\n\
          final-loss delta (FF − baseline): {:+.4} (≤ 0 means FF no worse)\n",
         ff.final_test_loss,
         ff.adam_steps,
@@ -61,7 +60,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         baseline.final_test_loss,
         baseline.adam_steps,
         baseline.flops.total() as f64,
-        100.0 * flops_saved,
+        pct_or_na(flops_saved),
         ff.final_test_loss - baseline.final_test_loss,
     );
     write_report(&ctx.reports_dir, "convergence", &json, &text)

@@ -6,11 +6,10 @@
 use anyhow::Result;
 
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::metrics::{write_report, TextTable};
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::{StopRule, Trainer};
+use crate::train::trainer::StopRule;
 use crate::util::json::Json;
 
 /// Pearson correlation.
@@ -35,18 +34,32 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny"; // paper: Pythia-1.4B, medical task
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
-    let mut cfg = run_config(ctx, &artifact, "medical", FfConfig::default())?;
-    cfg.max_steps = if ctx.scale.full { 120 } else { 60 };
-    let max_steps = cfg.max_steps;
-    let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
-    t.run(&StopRule::MaxSteps(max_steps))?;
+    let base = ctx.pretrained(model)?;
 
-    let stages = &t.ffc.stages;
-    let taus: Vec<f64> = stages.iter().map(|s| s.tau_star as f64).collect();
-    let norms: Vec<f64> = stages.iter().map(|s| s.grad_norm).collect();
-    let conds: Vec<f64> = stages.iter().map(|s| s.grad_cond).collect();
-    let steps: Vec<f64> = stages.iter().map(|s| s.at_step as f64).collect();
+    // The paper pools stages from across training; a single quick-scale
+    // run yields only a handful. Run a small grid of seed replicas —
+    // independent runs fanned out through the scheduler pool — and pool
+    // every stage into the correlation estimates. Replica order is fixed,
+    // so the report is identical at any `--jobs` level.
+    let n_seeds: u64 = if ctx.scale.full { 3 } else { 2 };
+    let per_seed = ctx.pool().scatter((0..n_seeds).collect(), |_i, k| {
+        let mut cfg = run_config(ctx, &artifact, "medical", FfConfig::default())?;
+        cfg.max_steps = if ctx.scale.full { 120 } else { 60 };
+        cfg.seed = cfg.seed.wrapping_add(k);
+        let max_steps = cfg.max_steps;
+        let mut t = trainer_for(ctx, cfg.clone(), Some(base.as_ref()))?;
+        t.run(&StopRule::MaxSteps(max_steps))?;
+        Ok((cfg.seed, t.ffc.stages.clone()))
+    })?;
+
+    let stages: Vec<(u64, crate::ff::controller::FfStageStats)> = per_seed
+        .into_iter()
+        .flat_map(|(seed, stages)| stages.into_iter().map(move |s| (seed, s)))
+        .collect();
+    let taus: Vec<f64> = stages.iter().map(|(_, s)| s.tau_star as f64).collect();
+    let norms: Vec<f64> = stages.iter().map(|(_, s)| s.grad_norm).collect();
+    let conds: Vec<f64> = stages.iter().map(|(_, s)| s.grad_cond).collect();
+    let steps: Vec<f64> = stages.iter().map(|(_, s)| s.at_step as f64).collect();
 
     let r_norm = pearson(&norms, &taus);
     let r_cond = pearson(&conds, &taus);
@@ -54,8 +67,9 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
 
     let rows: Vec<Json> = stages
         .iter()
-        .map(|s| {
+        .map(|(seed, s)| {
             Json::obj()
+                .set("seed", *seed as i64)
                 .set("stage", s.stage)
                 .set("at_step", s.at_step)
                 .set("tau_star", s.tau_star)
@@ -65,14 +79,16 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         .collect();
     let json = Json::obj()
         .set("id", "fig12")
+        .set("n_seeds", n_seeds as i64)
         .set("stages", Json::Arr(rows))
         .set("pearson_norm_tau", r_norm)
         .set("pearson_cond_tau", r_cond)
         .set("pearson_step_tau", r_step);
 
-    let mut table = TextTable::new(&["stage", "at step", "τ*", "‖grad‖", "cond(grad)"]);
-    for s in stages {
+    let mut table = TextTable::new(&["seed", "stage", "at step", "τ*", "‖grad‖", "cond(grad)"]);
+    for (seed, s) in &stages {
         table.row(&[
+            seed.to_string(),
             s.stage.to_string(),
             s.at_step.to_string(),
             s.tau_star.to_string(),
@@ -81,7 +97,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         ]);
     }
     let text = format!(
-        "Fig 12 — factors in the optimal FF step count (medical, {model})\n\n{}\n\
+        "Fig 12 — factors in the optimal FF step count (medical, {model}, {n_seeds} seeds)\n\n{}\n\
          Pearson(‖grad‖, τ*)   = {r_norm:+.3}   (12a)\n\
          Pearson(cond, τ*)     = {r_cond:+.3}   (12b)\n\
          Pearson(step, τ*)     = {r_step:+.3}   (the confounder)\n\n\

@@ -5,37 +5,45 @@
 use anyhow::Result;
 
 use crate::config::presets;
-use crate::experiments::common::{artifact_key, run_pair};
+use crate::experiments::common::{artifact_key, pct_cell, pct_json, run_pair};
 use crate::experiments::ExpContext;
 use crate::metrics::{write_report, TextTable};
 use crate::util::json::Json;
 
 fn run_grid(ctx: &ExpContext, mode: &str, id: &str) -> Result<Json> {
-    let mut rows = Vec::new();
+    // Every (model, task) cell is an independent pair-run; fan them out
+    // through the scheduler pool. Pre-warm each model's W0 sequentially
+    // first so workers share the in-memory Arc'd copy instead of
+    // serializing on the pretrain build lock at fan-out time.
+    let mut cells: Vec<(String, &'static str)> = Vec::new();
     for model in &ctx.scale.models {
+        ctx.pretrained(model)?;
         for task in presets::TASKS {
-            let artifact = artifact_key(model, mode, task);
-            let pair = run_pair(ctx, &artifact, model, task)?;
-            rows.push(
-                Json::obj()
-                    .set("model", model.as_str())
-                    .set("paper_model", presets::paper_model(model))
-                    .set("task", task)
-                    .set("mode", mode)
-                    .set("flops_saved_pct", 100.0 * pair.flops_saved())
-                    .set("time_saved_pct", 100.0 * pair.time_saved())
-                    .set("baseline_flops", pair.baseline.flops.total() as f64)
-                    .set("ff_flops", pair.ff.flops.total() as f64)
-                    .set("baseline_seconds", pair.baseline.train_seconds)
-                    .set("ff_seconds", pair.ff.train_seconds)
-                    .set("baseline_loss", pair.baseline.final_test_loss as f64)
-                    .set("ff_loss", pair.ff.final_test_loss as f64)
-                    .set("ff_adam_steps", pair.ff.adam_steps)
-                    .set("ff_sim_steps", pair.ff.sim_steps)
-                    .set("reached_target", pair.ff.reached_target),
-            );
+            cells.push((model.clone(), task));
         }
     }
+    let rows = ctx.pool().scatter(cells, |_i, (model, task)| {
+        let artifact = artifact_key(&model, mode, task);
+        let pair = run_pair(ctx, &artifact, &model, task)?;
+        // The row is assembled on the worker: only plain JSON crosses back
+        // — both trainers (and all their device buffers) die here.
+        Ok(Json::obj()
+            .set("model", model.as_str())
+            .set("paper_model", presets::paper_model(&model))
+            .set("task", task)
+            .set("mode", mode)
+            .set("flops_saved_pct", pct_json(pair.flops_saved()))
+            .set("time_saved_pct", pct_json(pair.time_saved()))
+            .set("baseline_flops", pair.baseline.flops.total() as f64)
+            .set("ff_flops", pair.ff.flops.total() as f64)
+            .set("baseline_seconds", pair.baseline.train_seconds)
+            .set("ff_seconds", pair.ff.train_seconds)
+            .set("baseline_loss", pair.baseline.final_test_loss as f64)
+            .set("ff_loss", pair.ff.final_test_loss as f64)
+            .set("ff_adam_steps", pair.ff.adam_steps)
+            .set("ff_sim_steps", pair.ff.sim_steps)
+            .set("reached_target", pair.ff.reached_target))
+    })?;
     let json = Json::obj().set("id", id).set("mode", mode).set("rows", Json::Arr(rows));
     Ok(json)
 }
@@ -48,7 +56,8 @@ fn render(json: &Json, metric: &str, title: &str) -> String {
             row.get("model").as_str().unwrap_or("?").to_string(),
             row.get("paper_model").as_str().unwrap_or("?").to_string(),
             row.get("task").as_str().unwrap_or("?").to_string(),
-            format!("{:.1}", row.get(key).as_f64().unwrap_or(f64::NAN)),
+            // null ⇒ the baseline denominator was 0 at this scale: n/a
+            pct_cell(row.get(key)),
             format!(
                 "{}+{}",
                 row.get("ff_adam_steps").as_i64().unwrap_or(0),

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::common::run_pair;
+use crate::experiments::common::{pct_cell, pct_json, run_pair};
 use crate::experiments::ExpContext;
 use crate::metrics::{write_report, TextTable};
 use crate::util::json::Json;
@@ -14,20 +14,23 @@ pub const RANKS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny"; // paper: Pythia-1.4B
-    let mut rows = Vec::new();
-    for rank in RANKS {
+    // Each rank cell is an independent pair-run over its own artifact:
+    // fan the sweep out through the scheduler pool (`--jobs N`). Results
+    // come back in RANKS order regardless of completion order, so the
+    // report is byte-identical at any jobs level. W0 is pre-warmed once so
+    // workers share the in-memory Arc'd copy read-only.
+    ctx.pretrained(model)?;
+    let rows = ctx.pool().scatter(RANKS.to_vec(), |_i, rank| {
         let artifact = format!("{model}_lora_r{rank}");
         let pair = run_pair(ctx, &artifact, model, "medical")?;
-        rows.push(
-            Json::obj()
-                .set("rank", rank)
-                .set("baseline_flops", pair.baseline.flops.total() as f64)
-                .set("ff_flops", pair.ff.flops.total() as f64)
-                .set("flops_saved_pct", 100.0 * pair.flops_saved())
-                .set("reached_target", pair.ff.reached_target)
-                .set("full_rank", rank == 64), // r64 == d_model for ff-tiny
-        );
-    }
+        Ok(Json::obj()
+            .set("rank", rank)
+            .set("baseline_flops", pair.baseline.flops.total() as f64)
+            .set("ff_flops", pair.ff.flops.total() as f64)
+            .set("flops_saved_pct", pct_json(pair.flops_saved()))
+            .set("reached_target", pair.ff.reached_target)
+            .set("full_rank", rank == 64)) // r64 == d_model for ff-tiny
+    })?;
 
     let json = Json::obj().set("id", "fig7").set("rows", Json::Arr(rows.clone()));
     let mut table = TextTable::new(&["rank", "baseline FLOPs", "FF FLOPs", "saved %", "matched"]);
@@ -36,13 +39,21 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             r.get("rank").as_i64().unwrap_or(0).to_string(),
             format!("{:.3e}", r.get("baseline_flops").as_f64().unwrap_or(0.0)),
             format!("{:.3e}", r.get("ff_flops").as_f64().unwrap_or(0.0)),
-            format!("{:.1}", r.get("flops_saved_pct").as_f64().unwrap_or(0.0)),
+            pct_cell(r.get("flops_saved_pct")),
             r.get("reached_target").as_bool().unwrap_or(false).to_string(),
         ]);
     }
-    let saved: Vec<f64> =
-        rows.iter().map(|r| r.get("flops_saved_pct").as_f64().unwrap_or(0.0)).collect();
-    let trend = if saved.last() >= saved.first() { "non-decreasing (reproduced)" } else { "decreasing (NOT reproduced)" };
+    // Null cells (degenerate baselines) must not count as 0.0 savings —
+    // the trend verdict is only meaningful when both endpoints are real.
+    let saved: Vec<Option<f64>> = rows
+        .iter()
+        .map(|r| r.get("flops_saved_pct").as_f64().filter(|v| v.is_finite()))
+        .collect();
+    let trend = match (saved.first().copied().flatten(), saved.last().copied().flatten()) {
+        (Some(first), Some(last)) if last >= first => "non-decreasing (reproduced)",
+        (Some(_), Some(_)) => "decreasing (NOT reproduced)",
+        _ => "n/a (degenerate cells at this scale)",
+    };
     let text = format!(
         "Fig 7 — total FLOPs vs LoRA rank, medical task on {model} (paper: Pythia-1.4B)\n\
          note: rank 64 == d_model for {model}, i.e. the paper's 'LoRA full rank'\n\

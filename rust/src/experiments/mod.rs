@@ -18,12 +18,16 @@ pub mod fig7_rank;
 pub mod fig8_fullrank;
 pub mod qa_benchmark;
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::Result;
 
+use crate::model::tensor::Tensor;
 use crate::runtime::Runtime;
+use crate::sched::{ArtifactCache, WorkerPool};
+use crate::train::pretrain::ensure_pretrained;
 
 /// Scale knobs: `quick` (default; minutes on one core) vs `full`
 /// (the complete model grid and 5-epoch protocol).
@@ -63,15 +67,60 @@ impl Scale {
 }
 
 pub struct ExpContext {
-    pub rt: Rc<Runtime>,
+    pub rt: Arc<Runtime>,
     pub artifacts_root: PathBuf,
+    /// Shared per-key `Arc<Artifact>`s: concurrent harness cells over the
+    /// same artifact reuse one compiled program set
+    /// (`experiments::common::trainer_for`).
+    pub artifacts: ArtifactCache,
     pub reports_dir: PathBuf,
     pub scale: Scale,
+    /// Worker threads for grid-shaped harnesses (`--jobs N`; 1 = inline).
+    /// Independent cells fan out through [`ExpContext::pool`]; results are
+    /// submission-ordered, so reports are byte-identical at any level.
+    pub jobs: usize,
+    /// In-memory W0 cache: one `Arc`'d parameter map per model, so N
+    /// concurrent cells share one copy instead of each re-reading and
+    /// re-allocating the checkpoint from disk.
+    w0: Mutex<BTreeMap<String, Arc<BTreeMap<String, Tensor>>>>,
 }
 
 impl ExpContext {
-    pub fn new(artifacts_root: PathBuf, reports_dir: PathBuf, scale: Scale) -> Result<ExpContext> {
-        Ok(ExpContext { rt: Runtime::cpu()?, artifacts_root, reports_dir, scale })
+    pub fn new(
+        artifacts_root: PathBuf,
+        reports_dir: PathBuf,
+        scale: Scale,
+        jobs: usize,
+    ) -> Result<ExpContext> {
+        Ok(ExpContext {
+            rt: Runtime::cpu()?,
+            artifacts: ArtifactCache::new(artifacts_root.clone()),
+            artifacts_root,
+            reports_dir,
+            scale,
+            jobs: jobs.max(1),
+            w0: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// The worker pool grid harnesses fan out through.
+    pub fn pool(&self) -> WorkerPool {
+        WorkerPool::new(self.jobs)
+    }
+
+    /// The pretrained W0 for `model`, shared read-only across harness
+    /// cells: built (or loaded from the checkpoint cache) on first touch,
+    /// then served as one `Arc` per process. The lock is held across the
+    /// build deliberately — concurrent first-touches of the same model
+    /// must not each deserialize (or train) their own copy.
+    pub fn pretrained(&self, model: &str) -> Result<Arc<BTreeMap<String, Tensor>>> {
+        let mut w0 = self.w0.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(b) = w0.get(model) {
+            return Ok(Arc::clone(b));
+        }
+        let built = Arc::new(ensure_pretrained(&self.rt, &self.artifacts_root, model, None)?);
+        w0.insert(model.to_string(), Arc::clone(&built));
+        Ok(built)
     }
 }
 

@@ -8,35 +8,39 @@ use anyhow::Result;
 
 use crate::config::FfConfig;
 use crate::eval::qa::{qa_accuracy, QaBenchmark};
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::metrics::write_report;
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::{StopRule, Trainer};
+use crate::train::trainer::StopRule;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny"; // paper: Llama-3 8B, medical task
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
     let n_items = if ctx.scale.full { 500 } else { 150 }; // paper: 1000
 
-    let mut accs = Vec::new();
-    for ff_on in [false, true] {
-        let ff = if ff_on { FfConfig::default() } else { FfConfig { enabled: false, ..FfConfig::default() } };
+    // The two legs (regular vs FF finetune, then QA scoring) share nothing
+    // but the read-only W0 — fan them out through the scheduler pool. The
+    // result vector stays [regular, ff] by submission order.
+    let accs = ctx.pool().scatter(vec![false, true], |_i, ff_on| {
+        let ff = if ff_on {
+            FfConfig::default()
+        } else {
+            FfConfig { enabled: false, ..FfConfig::default() }
+        };
         let cfg = run_config(ctx, &artifact, "medical", ff)?;
         let steps = cfg.max_steps;
         let seq_len = 64;
-        let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+        let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
         t.run(&StopRule::MaxSteps(steps))?;
 
         let bench = QaBenchmark::generate(512, seq_len, n_items, 0x9a);
-        let acc = qa_accuracy(&bench, |ex| {
+        qa_accuracy(&bench, |ex| {
             // score through the trainer's eval machinery one example at a time
             t.eval_example_loss(ex)
-        })?;
-        accs.push(acc);
-    }
+        })
+    })?;
 
     let json = Json::obj()
         .set("id", "qa")

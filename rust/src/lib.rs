@@ -11,7 +11,9 @@
 //!   layer (device-side gradient accumulation with buffer donation, batch
 //!   prefetch, Δ_W tracking) over an `ExecStream` deferred-readback ring
 //!   (loss scalars drain every K steps instead of blocking each
-//!   micro-batch), plus the data pipeline, experiments, and the PJRT
+//!   micro-batch), the concurrent run scheduler (`sched` — a worker pool
+//!   that fans whole training runs out over host threads against one
+//!   shared runtime), plus the data pipeline, experiments, and the PJRT
 //!   runtime that executes AOT-compiled artifacts.
 //! * **L2 (python/compile/model.py)** — the transformer fwd/bwd in JAX with
 //!   LoRA / DoRA / full-rank train modes, lowered once to HLO text.
@@ -34,5 +36,6 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod sched;
 pub mod train;
 pub mod util;

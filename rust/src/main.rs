@@ -10,8 +10,10 @@
 //! Examples:
 //!   fastforward experiment fig2a
 //!   fastforward experiment --all --full
+//!   fastforward experiment fig7 --jobs 4
 //!   fastforward train --artifact ff-tiny_lora_r8 --task medical --epochs 2
 //!   fastforward train --artifact ff-tiny_lora_r8 --task medical --no-ff
+//!   fastforward train --artifact ff-tiny_lora_r8 --task medical --runs 4 --jobs 4
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -19,6 +21,7 @@ use std::process::ExitCode;
 use fastforward::config::{presets, FfConfig};
 use fastforward::experiments::{self, ExpContext, Scale};
 use fastforward::runtime::{ArtifactIndex, Runtime};
+use fastforward::sched::{ArtifactCache, RunSpec, WorkerPool};
 use fastforward::train::pretrain::ensure_pretrained;
 use fastforward::train::trainer::{StopRule, Trainer};
 use fastforward::util::args::Args;
@@ -40,8 +43,11 @@ fn usage() -> &'static str {
      common options: --artifacts DIR (default ./artifacts) --reports DIR (default ./reports)\n\
      train:      --artifact KEY --task medical|instruct|chat [--epochs N] [--no-ff]\n\
                  [--steps N] [--seed S] [--t-interval N] [--adaptive] [--no-pretrain]\n\
-     experiment: <id>|--all [--full]   (ids: fastforward list --experiments)\n\
-     pretrain:   --model NAME [--steps N]\n"
+                 [--runs K] [--jobs N]   (K seed-replica runs on N scheduler workers;\n\
+                 --jobs only applies when --runs > 1)\n\
+     experiment: <id>|--all [--full] [--jobs N]   (ids: fastforward list --experiments)\n\
+     pretrain:   --model NAME [--steps N]\n\
+     selftest:   [--jobs N]   (N > 1 also exercises the concurrent scheduler)\n"
 }
 
 fn run() -> anyhow::Result<()> {
@@ -74,6 +80,8 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     let seed = args.opt_u64("seed", 0x5eed).map_err(|e| anyhow::anyhow!(e))?;
     let t_interval = args.opt_usize("t-interval", 6).map_err(|e| anyhow::anyhow!(e))?;
     let steps_override = args.opt_usize("steps", 0).map_err(|e| anyhow::anyhow!(e))?;
+    let runs = args.opt_usize("runs", 1).map_err(|e| anyhow::anyhow!(e))?.max(1);
+    let jobs = args.opt_usize("jobs", 1).map_err(|e| anyhow::anyhow!(e))?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let mut cfg = presets::train_config(&artifact, &task, epochs)?;
@@ -96,6 +104,59 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     } else {
         Some(ensure_pretrained(&rt, &artifacts, &model, None)?)
     };
+
+    if runs > 1 {
+        // Seed-replica fan-out: `--runs K` independent runs (seeds
+        // seed..seed+K−1) on `--jobs N` scheduler workers, results in
+        // submission (seed) order.
+        let base = base.map(std::sync::Arc::new);
+        let specs: Vec<RunSpec> = (0..runs as u64)
+            .map(|k| {
+                let mut c = cfg.clone();
+                c.seed = seed.wrapping_add(k);
+                RunSpec {
+                    label: format!("seed{}", c.seed),
+                    cfg: c,
+                    stop: StopRule::MaxSteps(max_steps),
+                    base: base.clone(),
+                    drain_interval: None,
+                }
+            })
+            .collect();
+        info!(
+            "training {artifact} on {task}: {runs} seed replicas × {max_steps} steps on {} worker(s), FF={}",
+            jobs.max(1),
+            !no_ff
+        );
+        let cache = ArtifactCache::new(artifacts);
+        let batch = WorkerPool::new(jobs).run_all(&rt, &cache, specs)?;
+        for o in &batch.outputs {
+            println!(
+                "{:<10} test loss {:.4} | {} adam + {} simulated steps | {:.3e} FLOPs | {:.1}s",
+                o.label,
+                o.summary.final_test_loss,
+                o.summary.adam_steps,
+                o.summary.sim_steps,
+                o.summary.flops.total() as f64,
+                o.seconds
+            );
+        }
+        println!(
+            "batch: {} runs, {} adam steps in {:.1}s wall | host↔device {}",
+            batch.outputs.len(),
+            batch.total_adam_steps(),
+            batch.wall_seconds,
+            batch.transfers.report()
+        );
+        return Ok(());
+    }
+
+    if jobs > 1 {
+        warn_!(
+            "--jobs {jobs} has no effect on a single run — it schedules \
+             seed replicas; add --runs K (K > 1) to fan out"
+        );
+    }
     let mut t = Trainer::new(&rt, &artifacts, cfg, base.as_ref())?;
     info!("training {artifact} on {task}: {max_steps} optimizer steps, FF={}", !no_ff);
     let sum = t.run(&StopRule::MaxSteps(max_steps))?;
@@ -121,11 +182,15 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
 fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyhow::Result<()> {
     let all = args.flag("all");
     let full = args.flag("full");
+    let jobs = args.opt_usize("jobs", 1).map_err(|e| anyhow::anyhow!(e))?;
     let id = args.positional.first().cloned();
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let scale = if full { Scale::full() } else { Scale::quick() };
-    let ctx = ExpContext::new(artifacts, reports, scale)?;
+    let ctx = ExpContext::new(artifacts, reports, scale, jobs)?;
+    if ctx.jobs > 1 {
+        info!("grid harnesses fan out on {} scheduler workers (--jobs)", ctx.jobs);
+    }
     if all {
         let mut failed = Vec::new();
         for (name, desc, f) in experiments::registry() {
@@ -210,14 +275,15 @@ fn cmd_list(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
 }
 
 fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
+    let jobs = args.opt_usize("jobs", 2).map_err(|e| anyhow::anyhow!(e))?.max(1);
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     let rt = Runtime::cpu()?;
-    println!("[1/4] artifact index + manifest cross-check");
+    println!("[1/5] artifact index + manifest cross-check");
     let idx = ArtifactIndex::load(&artifacts)?;
     let man = idx.manifest("ff-tiny_lora_r8")?;
     println!("      ok: {} artifacts, checked '{}'", idx.entries.len(), man.key);
 
-    println!("[2/4] pretrain (cached) + 12 SGD steps");
+    println!("[2/5] pretrain (cached) + 12 SGD steps");
     let base = ensure_pretrained(&rt, &artifacts, "ff-tiny", Some(60))?;
     let mut cfg = presets::train_config("ff-tiny_lora_r8", "medical", 1)?;
     cfg.train_examples = 256;
@@ -233,18 +299,56 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     anyhow::ensure!(last < first, "test loss did not decrease ({first} → {last})");
     println!("      ok: test loss {first:.4} → {last:.4}");
 
-    println!("[3/4] fast-forward stage");
+    println!("[3/5] fast-forward stage");
     let stats = t.ff_stage()?;
     println!(
         "      ok: τ*={} probes={} val {:.4}→{:.4}",
         stats.tau_star, stats.probes, stats.baseline_loss, stats.final_loss
     );
 
-    println!("[4/4] pallas artifact parity");
+    println!("[4/5] pallas artifact parity");
     let art = fastforward::runtime::Artifact::load(&rt, &artifacts.join("ff-tiny_lora_r8_pallas"))?;
     anyhow::ensure!(art.manifest.config.use_pallas);
     art.program("eval_loss")?;
     println!("      ok: pallas eval_loss compiled");
+
+    println!("[5/5] concurrent scheduler determinism ({jobs} worker(s) vs 1)");
+    let base = std::sync::Arc::new(base);
+    let specs = |tag: &str| -> Vec<RunSpec> {
+        (0..2u64)
+            .map(|k| {
+                let mut c = presets::train_config("ff-tiny_lora_r8", "medical", 1).unwrap();
+                c.train_examples = 256;
+                c.test_examples = 32;
+                c.seed = 0x5eed + k;
+                c.ff = FfConfig { enabled: false, ..FfConfig::default() };
+                RunSpec {
+                    label: format!("{tag}/seed{}", c.seed),
+                    cfg: c,
+                    stop: StopRule::MaxSteps(4),
+                    base: Some(std::sync::Arc::clone(&base)),
+                    drain_interval: None,
+                }
+            })
+            .collect()
+    };
+    let cache = ArtifactCache::new(artifacts);
+    let seq = WorkerPool::new(1).run_all(&rt, &cache, specs("seq"))?;
+    let par = WorkerPool::new(jobs).run_all(&rt, &cache, specs("par"))?;
+    for (a, b) in seq.outputs.iter().zip(par.outputs.iter()) {
+        anyhow::ensure!(
+            a.bit_identical(b),
+            "scheduler changed a run's losses: {} vs {}",
+            a.label,
+            b.label
+        );
+    }
+    println!(
+        "      ok: {} runs bit-identical at jobs=1 and jobs={jobs} ({:.1}s vs {:.1}s wall)",
+        seq.outputs.len(),
+        seq.wall_seconds,
+        par.wall_seconds
+    );
     println!("selftest passed");
     Ok(())
 }

@@ -53,10 +53,10 @@ pub mod manifest;
 pub mod params;
 pub mod stream;
 
-use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -68,47 +68,55 @@ pub use stream::{ExecStream, PendingLoss, PendingStep, ResolvedStep, StreamStats
 use crate::model::tensor::Tensor;
 
 /// Host↔device traffic meters, shared by every upload/download helper on a
-/// [`Runtime`]. Interior-mutable (`Cell`) because the client handle is held
-/// behind an `Rc` by buffers and programs.
+/// [`Runtime`]. Atomic because one runtime is shared (`Arc`) across the
+/// scheduler's worker threads (`crate::sched`): concurrent runs meter into
+/// the same counters, and `fetch_add` keeps the totals **exact** — never
+/// lost-update approximate. `Relaxed` ordering is sufficient: these are
+/// pure tallies with no cross-thread happens-before obligations; snapshots
+/// taken while runs are in flight are a consistent-enough point-in-time
+/// view, and snapshots taken at quiescent points (before/after a
+/// `WorkerPool` batch) are exact aggregates.
 #[derive(Debug, Default)]
 pub struct TransferStats {
-    uploads: Cell<u64>,
-    uploaded_bytes: Cell<u64>,
-    downloads: Cell<u64>,
-    downloaded_bytes: Cell<u64>,
-    donations: Cell<u64>,
-    donated_bytes: Cell<u64>,
+    uploads: AtomicU64,
+    uploaded_bytes: AtomicU64,
+    downloads: AtomicU64,
+    downloaded_bytes: AtomicU64,
+    donations: AtomicU64,
+    donated_bytes: AtomicU64,
 }
 
 impl TransferStats {
     pub fn record_upload(&self, bytes: usize) {
-        self.uploads.set(self.uploads.get() + 1);
-        self.uploaded_bytes.set(self.uploaded_bytes.get() + bytes as u64);
+        self.uploads.fetch_add(1, Ordering::Relaxed);
+        self.uploaded_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
     pub fn record_download(&self, bytes: usize) {
-        self.downloads.set(self.downloads.get() + 1);
-        self.downloaded_bytes.set(self.downloaded_bytes.get() + bytes as u64);
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        self.downloaded_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
     /// One input buffer donated into a program call: its allocation is
     /// either reused in place for an aliased output or freed immediately —
     /// bytes the allocator does *not* have to hold a second generation of.
     pub fn record_donation(&self, bytes: usize) {
-        self.donations.set(self.donations.get() + 1);
-        self.donated_bytes.set(self.donated_bytes.get() + bytes as u64);
+        self.donations.fetch_add(1, Ordering::Relaxed);
+        self.donated_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
     /// Point-in-time copy of the counters; diff two with
     /// [`TransferSnapshot::since`] to attribute traffic to a code region.
+    /// Exact at quiescent points; see the struct docs for what a snapshot
+    /// means while other worker threads are mid-run.
     pub fn snapshot(&self) -> TransferSnapshot {
         TransferSnapshot {
-            uploads: self.uploads.get(),
-            uploaded_bytes: self.uploaded_bytes.get(),
-            downloads: self.downloads.get(),
-            downloaded_bytes: self.downloaded_bytes.get(),
-            donations: self.donations.get(),
-            donated_bytes: self.donated_bytes.get(),
+            uploads: self.uploads.load(Ordering::Relaxed),
+            uploaded_bytes: self.uploaded_bytes.load(Ordering::Relaxed),
+            downloads: self.downloads.load(Ordering::Relaxed),
+            downloaded_bytes: self.downloaded_bytes.load(Ordering::Relaxed),
+            donations: self.donations.load(Ordering::Relaxed),
+            donated_bytes: self.donated_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -197,24 +205,49 @@ pub fn human_bytes(b: u64) -> String {
     }
 }
 
-/// Shared PJRT CPU client. `Rc` because buffers hold a client handle and the
-/// coordinator is single-threaded around the device (XLA:CPU parallelizes
-/// internally).
+/// Shared PJRT CPU client. `Arc` because one client is shared by every
+/// concurrent run: buffers and programs hold a handle, and the scheduler
+/// (`crate::sched`) executes whole training runs on worker threads against
+/// the same runtime (XLA:CPU additionally parallelizes internally).
 pub struct Runtime {
     pub client: xla::PjRtClient,
     /// Host↔device traffic meters (see module docs, §Perf counters).
     pub stats: TransferStats,
 }
 
+// SAFETY: the PJRT C API requires implementations to be thread-safe —
+// clients, loaded executables, and buffers may be used concurrently from
+// multiple host threads (compile/execute/transfer all take internal locks;
+// XLA:CPU's client is explicitly multi-threaded). The `xla` crate's
+// wrappers are `!Send`/`!Sync` because they hold raw pointers to those
+// C++ objects, not because the objects themselves are thread-bound.
+// `TransferStats` is atomic. Everything else on `Runtime` is immutable
+// after construction. Each *run* owns its own buffers (ParamSets, staged
+// batches, pending losses) on the worker thread that created them; only
+// the client, compiled programs, and these counters are shared.
+//
+// ASSUMPTION (not verifiable in this environment — the `xla` dependency
+// is resolved by the build image, not vendored here): the wrapper types
+// must hold their C++ handles as plain pointers with no *non-atomic*
+// shared bookkeeping (e.g. an internal `Rc`'d client handle cloned into
+// every buffer/executable) — non-atomic refcounts cloned across worker
+// threads would be UB regardless of PJRT's own thread-safety. If the
+// resolved xla-rs revision violates this, these impls must be removed
+// and the scheduler pinned to one runtime per worker instead of a shared
+// `Arc<Runtime>`. The tier-1 suite exercises the shared path under real
+// concurrency (`tests/sched_pool.rs`, `selftest --jobs 2` in CI).
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
 impl Runtime {
-    pub fn cpu() -> Result<Rc<Runtime>> {
+    pub fn cpu() -> Result<Arc<Runtime>> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        Ok(Rc::new(Runtime { client, stats: TransferStats::default() }))
+        Ok(Arc::new(Runtime { client, stats: TransferStats::default() }))
     }
 
     /// Compile one program of an artifact. Compilation is cached per
-    /// (artifact, program) by `ProgramCache`.
-    pub fn load_program(self: &Rc<Self>, man: &Manifest, name: &str) -> Result<Program> {
+    /// (artifact, program) by [`Artifact::program`].
+    pub fn load_program(self: &Arc<Self>, man: &Manifest, name: &str) -> Result<Program> {
         let path = man.hlo_path(name)?;
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
@@ -231,7 +264,7 @@ impl Runtime {
             t0.elapsed()
         );
         Ok(Program {
-            rt: Rc::clone(self),
+            rt: Arc::clone(self),
             name: name.to_string(),
             spec: man.program(name)?.clone(),
             exe,
@@ -300,11 +333,18 @@ impl InputBuf<'_> {
 
 /// One compiled executable plus its manifest I/O spec.
 pub struct Program {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub name: String,
     pub spec: ProgramSpec,
     exe: xla::PjRtLoadedExecutable,
 }
+
+// SAFETY: see the `Runtime` impls — PJRT loaded executables are
+// thread-safe to execute concurrently per the PJRT API contract; `name`
+// and `spec` are immutable after construction. Compiled programs are the
+// read-only artifacts the scheduler shares across worker threads.
+unsafe impl Send for Program {}
+unsafe impl Sync for Program {}
 
 /// Decoded program outputs, aligned with `spec.outputs`.
 pub struct Outputs {
@@ -581,7 +621,7 @@ impl Program {
         Ok(Outputs { slots: self.spec.outputs.clone(), values })
     }
 
-    pub fn runtime(&self) -> &Rc<Runtime> {
+    pub fn runtime(&self) -> &Arc<Runtime> {
         &self.rt
     }
 }
@@ -589,29 +629,37 @@ impl Program {
 /// Lazy per-artifact program cache: an `Artifact` owns its manifest plus the
 /// compiled executables, compiling each program on first use (fig-grid
 /// experiments touch many artifacts but rarely all four programs of each).
+///
+/// The cache is lock-guarded so one `Arc<Artifact>` can be shared by every
+/// worker of a [`crate::sched::WorkerPool`]: concurrent runs over the same
+/// artifact compile each program exactly once and share the read-only
+/// executable. The lock is held across compilation deliberately — a second
+/// worker asking for the same program blocks briefly at warmup instead of
+/// compiling a duplicate.
 pub struct Artifact {
     pub manifest: Manifest,
-    rt: Rc<Runtime>,
-    programs: std::cell::RefCell<BTreeMap<String, Rc<Program>>>,
+    rt: Arc<Runtime>,
+    programs: Mutex<BTreeMap<String, Arc<Program>>>,
 }
 
 impl Artifact {
-    pub fn load(rt: &Rc<Runtime>, dir: &Path) -> Result<Artifact> {
+    pub fn load(rt: &Arc<Runtime>, dir: &Path) -> Result<Artifact> {
         let manifest =
             Manifest::load(dir).with_context(|| format!("loading artifact {}", dir.display()))?;
-        Ok(Artifact { manifest, rt: Rc::clone(rt), programs: Default::default() })
+        Ok(Artifact { manifest, rt: Arc::clone(rt), programs: Default::default() })
     }
 
-    pub fn program(&self, name: &str) -> Result<Rc<Program>> {
-        if let Some(p) = self.programs.borrow().get(name) {
-            return Ok(Rc::clone(p));
+    pub fn program(&self, name: &str) -> Result<Arc<Program>> {
+        let mut cache = self.programs.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(p) = cache.get(name) {
+            return Ok(Arc::clone(p));
         }
-        let p = Rc::new(self.rt.load_program(&self.manifest, name)?);
-        self.programs.borrow_mut().insert(name.to_string(), Rc::clone(&p));
+        let p = Arc::new(self.rt.load_program(&self.manifest, name)?);
+        cache.insert(name.to_string(), Arc::clone(&p));
         Ok(p)
     }
 
-    pub fn runtime(&self) -> &Rc<Runtime> {
+    pub fn runtime(&self) -> &Arc<Runtime> {
         &self.rt
     }
 }
@@ -673,6 +721,39 @@ mod tests {
         assert_eq!(d.donated_bytes, 8192);
         assert_eq!(d.uploads, 0, "donation is not an upload");
         assert!(d.report().contains("donated 8.00 KiB (2 bufs)"));
+    }
+
+    #[test]
+    fn concurrent_meter_updates_are_exact() {
+        // The scheduler shares one TransferStats across worker threads;
+        // totals must be exact under contention, not lost-update
+        // approximate. 8 threads × 10k records each, all tallied.
+        let s = std::sync::Arc::new(TransferStats::default());
+        let threads = 8u64;
+        let per = 10_000u64;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let s = std::sync::Arc::clone(&s);
+                scope.spawn(move || {
+                    for i in 0..per {
+                        s.record_upload(4);
+                        if (i + t) % 2 == 0 {
+                            s.record_download(8);
+                        }
+                        if i % 4 == 0 {
+                            s.record_donation(16);
+                        }
+                    }
+                });
+            }
+        });
+        let snap = s.snapshot();
+        assert_eq!(snap.uploads, threads * per);
+        assert_eq!(snap.uploaded_bytes, threads * per * 4);
+        assert_eq!(snap.downloads, threads * per / 2);
+        assert_eq!(snap.downloaded_bytes, threads * per / 2 * 8);
+        assert_eq!(snap.donations, threads * (per / 4), "10k/4 per thread");
+        assert_eq!(snap.donated_bytes, threads * (per / 4) * 16);
     }
 
     #[test]

@@ -47,7 +47,7 @@
 //! full movement rules.
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -70,21 +70,25 @@ pub enum SyncState {
     Donated,
 }
 
+/// A `ParamSet` is **per-run state**: it is created, used, and dropped on
+/// whichever scheduler worker thread owns the run, never shared between
+/// runs (see `docs/transfer-contract.md` §5). Only the `Arc<Runtime>`
+/// handle inside it is shared.
 pub struct ParamSet {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     names: Vec<String>,
     index: BTreeMap<String, usize>,
     host: Vec<Tensor>,
     device: Vec<Option<xla::PjRtBuffer>>,
     state: Vec<SyncState>,
-    uploads: std::cell::Cell<u64>,
-    downloads: std::cell::Cell<u64>,
+    uploads: u64,
+    downloads: u64,
 }
 
 impl ParamSet {
     /// Build from (name, shape) spec order, pulling tensors from `values`.
     pub fn from_spec(
-        rt: &Rc<Runtime>,
+        rt: &Arc<Runtime>,
         spec: &[(String, Vec<usize>)],
         values: &BTreeMap<String, Tensor>,
     ) -> Result<ParamSet> {
@@ -105,23 +109,23 @@ impl ParamSet {
 
     /// Build an all-zeros set with the same names/shapes as `like`
     /// (Adam m/v state, gradient accumulators).
-    pub fn zeros_like(rt: &Rc<Runtime>, like: &ParamSet) -> ParamSet {
+    pub fn zeros_like(rt: &Arc<Runtime>, like: &ParamSet) -> ParamSet {
         let host = like.host.iter().map(|t| Tensor::zeros(&t.shape)).collect();
         Self::from_tensors(rt, like.names.clone(), host)
     }
 
-    fn from_tensors(rt: &Rc<Runtime>, names: Vec<String>, host: Vec<Tensor>) -> ParamSet {
+    fn from_tensors(rt: &Arc<Runtime>, names: Vec<String>, host: Vec<Tensor>) -> ParamSet {
         let n = names.len();
         let index = names.iter().cloned().enumerate().map(|(i, n)| (n, i)).collect();
         ParamSet {
-            rt: Rc::clone(rt),
+            rt: Arc::clone(rt),
             names,
             index,
             host,
             device: (0..n).map(|_| None).collect(),
             state: vec![SyncState::HostAhead; n],
-            uploads: std::cell::Cell::new(0),
-            downloads: std::cell::Cell::new(0),
+            uploads: 0,
+            downloads: 0,
         }
     }
 
@@ -245,7 +249,7 @@ impl ParamSet {
                 );
                 self.device[i] = Some(self.rt.upload_tensor(&self.host[i])?);
                 self.state[i] = SyncState::InSync;
-                self.uploads.set(self.uploads.get() + 1);
+                self.uploads += 1;
             }
         }
         Ok(self.device.iter().map(|b| b.as_ref().unwrap()).collect())
@@ -324,19 +328,19 @@ impl ParamSet {
             }
             self.host[i].data.copy_from_slice(&v);
             self.state[i] = SyncState::InSync;
-            self.downloads.set(self.downloads.get() + 1);
+            self.downloads += 1;
         }
         Ok(())
     }
 
     /// Total device uploads performed (perf counter; see runtime §Perf).
     pub fn upload_count(&self) -> u64 {
-        self.uploads.get()
+        self.uploads
     }
 
     /// Total device→host downloads performed by `sync_host`.
     pub fn download_count(&self) -> u64 {
-        self.downloads.get()
+        self.downloads
     }
 
     /// L2 norm over the whole set (‖W_FF − W_0‖ probes, Fig 5 axes).
@@ -354,7 +358,7 @@ mod tests {
     use super::*;
     use std::collections::BTreeMap;
 
-    fn mk() -> (Rc<Runtime>, ParamSet) {
+    fn mk() -> (Arc<Runtime>, ParamSet) {
         let rt = Runtime::cpu().unwrap();
         let spec = vec![
             ("a".to_string(), vec![2, 2]),

@@ -30,7 +30,7 @@
 //! documented in `docs/transfer-contract.md` §4 and `docs/step-pipeline.md`.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -71,14 +71,14 @@ impl SyncReason {
 /// Holding the buffer keeps the value alive device-side; `wait` performs
 /// the (metered) download.
 pub struct PendingLoss {
-    prog: Rc<Program>,
+    prog: Arc<Program>,
     buf: xla::PjRtBuffer,
     slot: usize,
 }
 
 impl PendingLoss {
-    pub fn new(prog: &Rc<Program>, buf: xla::PjRtBuffer, slot: usize) -> PendingLoss {
-        PendingLoss { prog: Rc::clone(prog), buf, slot }
+    pub fn new(prog: &Arc<Program>, buf: xla::PjRtBuffer, slot: usize) -> PendingLoss {
+        PendingLoss { prog: Arc::clone(prog), buf, slot }
     }
 
     /// Download the scalar now (blocks until the producing computation has
@@ -182,9 +182,10 @@ impl StreamStats {
     }
 }
 
-/// The deferred-readback ring (see module docs). Single-threaded like the
-/// rest of the coordinator: "async" here means *device* work stays in
-/// flight between host syncs, not host threads.
+/// The deferred-readback ring (see module docs). Owned by exactly one run
+/// (one `StepEngine`), on whichever scheduler worker thread drives it —
+/// "async" here means *device* work stays in flight between host syncs;
+/// host-thread parallelism across runs lives in `crate::sched`.
 pub struct ExecStream {
     pending: VecDeque<PendingStep>,
     drain_interval: usize,

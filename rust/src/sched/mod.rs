@@ -1,0 +1,381 @@
+//! Concurrent run scheduler: execute many independent training runs on a
+//! bounded pool of host threads, against one shared [`Runtime`].
+//!
+//! The paper's protocol (§4, Figs 2/7/12) is an embarrassingly parallel
+//! grid of (model, task, FF-on/off, rank, seed) cells, and low-rank
+//! training is dispatch/overhead-bound at small ranks ("Run LoRA Run",
+//! "LoRA Is Slower Than You Think") — wall-clock wins come from keeping
+//! more independent runs in flight, not from bigger kernels. This module
+//! is the fan-out layer the figure harnesses and the `--jobs N` CLI use.
+//!
+//! # Ownership rules (see `docs/transfer-contract.md` §5)
+//!
+//! Shared **read-only** across workers:
+//! * the `Arc<Runtime>` (PJRT client + atomic
+//!   [`TransferStats`](crate::runtime::TransferStats) meters),
+//! * compiled `Arc<Program>`s via each artifact's lock-guarded cache
+//!   ([`ArtifactCache`] shares one `Arc<Artifact>` per key),
+//! * the pretrained `W0` value map (`Arc<BTreeMap<String, Tensor>>`).
+//!
+//! Owned **per run**, created and dropped on the worker thread that drives
+//! the run: the `Trainer` and its `StepEngine`, every `ParamSet`, the
+//! `ExecStream` readback ring, the `BatchStager` double buffer, eval
+//! caches, and all device buffers. Nothing device-resident ever crosses
+//! between runs, which is why same-seed runs are bit-identical at any
+//! `--jobs` level: each run's dispatch sequence is independent of how many
+//! sibling runs happen to be in flight.
+//!
+//! # Determinism
+//!
+//! [`WorkerPool::scatter`] pops work from a shared queue (completion order
+//! is whatever the OS scheduler does) but stores every result in its
+//! **submission slot** — callers always get results back in submission
+//! order, and `--jobs 1` vs `--jobs N` produce identical result vectors
+//! for deterministic jobs. `rust/tests/sched_pool.rs` asserts the losses
+//! are bit-identical and the shared transfer meters tally exactly.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::ff::controller::FfStageStats;
+use crate::metrics::StepKind;
+use crate::model::tensor::Tensor;
+use crate::runtime::{Artifact, Runtime, StreamStats, TransferSnapshot};
+use crate::train::trainer::{RunSummary, StopRule, Trainer};
+
+/// Worker-thread count to use when the caller has no opinion: one per
+/// available core (the PJRT CPU backend also parallelizes within a
+/// dispatch, so benches typically cap this lower).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One whole training run, as a schedulable unit: everything
+/// [`WorkerPool::run_all`] needs to construct a `Trainer` on a worker
+/// thread and drive it to completion.
+pub struct RunSpec {
+    /// Caller-facing tag carried into [`RunOutput`] (e.g. `"r8/seed3"`).
+    pub label: String,
+    pub cfg: TrainConfig,
+    pub stop: StopRule,
+    /// Pretrained W0, shared read-only across every run that uses it.
+    pub base: Option<Arc<BTreeMap<String, Tensor>>>,
+    /// Override the engine's deferred-readback drain interval (None keeps
+    /// `train::engine::DEFAULT_DRAIN_INTERVAL`).
+    pub drain_interval: Option<usize>,
+}
+
+/// What one scheduled run produced — plain host data only; every device
+/// buffer the run owned died with its trainer on the worker thread.
+pub struct RunOutput {
+    pub label: String,
+    pub summary: RunSummary,
+    /// The run's deferred-readback ring counters (per-run exact — the
+    /// ring is owned by the run).
+    pub stream: StreamStats,
+    /// SGD losses in dispatch order (the determinism surface: bit-equal
+    /// across `--jobs` levels for equal seeds).
+    pub sgd_losses: Vec<f32>,
+    /// FF stage stats, if the run fast-forwarded.
+    pub stages: Vec<FfStageStats>,
+    /// Wall-clock of this run on its worker, construction through summary.
+    pub seconds: f64,
+}
+
+impl RunOutput {
+    /// The scheduler's determinism contract, in one place: two runs of the
+    /// same spec are bit-identical when every SGD loss and the final test
+    /// loss match bit-for-bit. Used by the CLI selftest, the scaling
+    /// bench, and `tests/sched_pool.rs` to compare `--jobs` levels.
+    pub fn bit_identical(&self, other: &RunOutput) -> bool {
+        self.sgd_losses.len() == other.sgd_losses.len()
+            && self
+                .sgd_losses
+                .iter()
+                .zip(other.sgd_losses.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+            && self.summary.final_test_loss.to_bits()
+                == other.summary.final_test_loss.to_bits()
+    }
+}
+
+/// A completed [`WorkerPool::run_all`] batch: submission-ordered outputs
+/// plus batch-level aggregates.
+pub struct PoolRun {
+    pub outputs: Vec<RunOutput>,
+    /// Aggregate host↔device traffic of the whole batch, measured across
+    /// the shared atomic meters at the batch boundaries — exact at any
+    /// jobs level. (Per-run `summary.transfers` windows are only exact at
+    /// `--jobs 1`; concurrent runs meter into the same counters.)
+    pub transfers: TransferSnapshot,
+    /// Wall-clock of the whole batch (the speedup denominator).
+    pub wall_seconds: f64,
+}
+
+impl PoolRun {
+    /// Total Adam steps executed across the batch.
+    pub fn total_adam_steps(&self) -> usize {
+        self.outputs.iter().map(|o| o.summary.adam_steps).sum()
+    }
+}
+
+/// Process-local cache mapping artifact keys to shared `Arc<Artifact>`s so
+/// concurrent runs over the same artifact compile each program once.
+pub struct ArtifactCache {
+    root: PathBuf,
+    cached: Mutex<BTreeMap<String, Arc<Artifact>>>,
+}
+
+impl ArtifactCache {
+    pub fn new(root: PathBuf) -> ArtifactCache {
+        ArtifactCache { root, cached: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The shared artifact for `key`, loading its manifest on first use.
+    /// Programs compile lazily (and once) inside the artifact itself.
+    pub fn load(&self, rt: &Arc<Runtime>, key: &str) -> Result<Arc<Artifact>> {
+        let mut cached = lock(&self.cached);
+        if let Some(a) = cached.get(key) {
+            return Ok(Arc::clone(a));
+        }
+        let art = Arc::new(
+            Artifact::load(rt, &self.root.join(key))
+                .with_context(|| format!("artifact '{key}'"))?,
+        );
+        cached.insert(key.to_string(), Arc::clone(&art));
+        Ok(art)
+    }
+}
+
+/// A bounded pool of host worker threads with deterministic,
+/// submission-ordered result collection (see module docs).
+///
+/// Threads are scoped per call — a pool is a *policy* (how many jobs may
+/// be in flight), not a set of long-lived threads, so a `WorkerPool` is
+/// cheap to construct wherever a harness wants fan-out.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    jobs: usize,
+}
+
+impl WorkerPool {
+    /// `jobs` is clamped to at least 1. `jobs == 1` runs every item inline
+    /// on the calling thread (no spawn overhead, trivially ordered).
+    pub fn new(jobs: usize) -> WorkerPool {
+        WorkerPool { jobs: jobs.max(1) }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run `f` over every item on up to `jobs` worker threads. Items are
+    /// handed out in submission order from a shared queue; results come
+    /// back **in submission order** regardless of completion order. The
+    /// first failing item's error (by submission index) is returned after
+    /// all workers settle; later items may then be unexecuted.
+    pub fn scatter<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> Result<R> + Sync,
+    {
+        let n = items.len();
+        if self.jobs == 1 || n <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for (i, item) in items.into_iter().enumerate() {
+                out.push(f(i, item).with_context(|| format!("scheduled job #{i}"))?);
+            }
+            return Ok(out);
+        }
+
+        let queue: Mutex<VecDeque<(usize, T)>> =
+            Mutex::new(items.into_iter().enumerate().collect());
+        let slots: Mutex<Vec<Option<Result<R>>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let failed = std::sync::atomic::AtomicBool::new(false);
+        let workers = self.jobs.min(n);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let queue = &queue;
+                let slots = &slots;
+                let failed = &failed;
+                let f = &f;
+                s.spawn(move || loop {
+                    if failed.load(std::sync::atomic::Ordering::Relaxed) {
+                        return; // fail fast: leave the rest of the queue
+                    }
+                    let item = lock(queue).pop_front();
+                    let Some((i, item)) = item else { return };
+                    let r = f(i, item);
+                    if r.is_err() {
+                        failed.store(true, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    lock(slots)[i] = Some(r);
+                });
+            }
+        });
+
+        let slots = slots.into_inner().unwrap_or_else(PoisonError::into_inner);
+        // Report the lowest-index error first (deterministic), then demand
+        // every remaining slot is filled.
+        if let Some(i) = slots.iter().position(|s| matches!(s, Some(Err(_)))) {
+            let e = match slots.into_iter().nth(i).flatten() {
+                Some(Err(e)) => e,
+                _ => unreachable!("slot {i} held an error"),
+            };
+            return Err(e.context(format!("scheduled job #{i}")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(r)) => out.push(r),
+                Some(Err(_)) => unreachable!("errors returned above"),
+                None => bail!("scheduled job #{i} was never executed"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute whole `Trainer::run` jobs across the pool: one trainer per
+    /// spec, constructed and dropped on its worker thread, artifacts and
+    /// `W0` shared read-only. Results are submission-ordered; the batch's
+    /// aggregate transfer traffic is measured exactly across the shared
+    /// atomic meters.
+    pub fn run_all(
+        &self,
+        rt: &Arc<Runtime>,
+        artifacts: &ArtifactCache,
+        specs: Vec<RunSpec>,
+    ) -> Result<PoolRun> {
+        let before = rt.stats.snapshot();
+        let t0 = Instant::now();
+        let outputs = self.scatter(specs, |_i, spec| execute_run(rt, artifacts, spec))?;
+        Ok(PoolRun {
+            outputs,
+            transfers: rt.stats.snapshot().since(&before),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Drive one [`RunSpec`] to completion on the current thread.
+fn execute_run(rt: &Arc<Runtime>, artifacts: &ArtifactCache, spec: RunSpec) -> Result<RunOutput> {
+    let t0 = Instant::now();
+    let art = artifacts.load(rt, &spec.cfg.artifact)?;
+    let label = spec.label;
+    let mut t = Trainer::with_artifact(rt, art, spec.cfg, spec.base.as_deref())
+        .with_context(|| format!("run '{label}'"))?;
+    if let Some(k) = spec.drain_interval {
+        t.set_drain_interval(k);
+    }
+    let summary = t.run(&spec.stop).with_context(|| format!("run '{label}'"))?;
+    let sgd_losses = t
+        .log
+        .records
+        .iter()
+        .filter(|r| r.kind == StepKind::Sgd)
+        .map(|r| r.loss)
+        .collect();
+    Ok(RunOutput {
+        label,
+        summary,
+        stream: t.stream_stats().clone(),
+        sgd_losses,
+        stages: t.ffc.stages.clone(),
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    //! Pool mechanics only — running real trainers through the pool needs
+    //! AOT artifacts and lives in `rust/tests/sched_pool.rs`.
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_clamp_to_one() {
+        assert_eq!(WorkerPool::new(0).jobs(), 1);
+        assert_eq!(WorkerPool::new(3).jobs(), 3);
+    }
+
+    #[test]
+    fn scatter_returns_submission_order_at_any_width() {
+        // Jobs finish in reverse submission order (earlier items sleep
+        // longer); results must still come back in submission order.
+        for jobs in [1usize, 2, 4, 8] {
+            let pool = WorkerPool::new(jobs);
+            let items: Vec<usize> = (0..8).collect();
+            let out = pool
+                .scatter(items, |i, item| {
+                    assert_eq!(i, item);
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        (8 - item as u64) * 3,
+                    ));
+                    Ok(item * 10)
+                })
+                .unwrap();
+            assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70], "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn scatter_runs_every_item_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = WorkerPool::new(4)
+            .scatter((0..100usize).collect(), |_i, item| {
+                counter.fetch_add(1, Ordering::Relaxed);
+                Ok(item)
+            })
+            .unwrap();
+        assert_eq!(out.len(), 100);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scatter_propagates_the_lowest_index_error() {
+        let err = WorkerPool::new(4)
+            .scatter((0..16usize).collect(), |_i, item| {
+                if item == 3 || item == 11 {
+                    bail!("boom at {item}");
+                }
+                Ok(item)
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("scheduled job #3"), "{msg}");
+        assert!(msg.contains("boom at 3"), "{msg}");
+    }
+
+    #[test]
+    fn inline_path_short_circuits_on_error() {
+        let counter = AtomicUsize::new(0);
+        let err = WorkerPool::new(1)
+            .scatter((0..10usize).collect(), |_i, item| {
+                counter.fetch_add(1, Ordering::Relaxed);
+                if item == 2 {
+                    bail!("boom");
+                }
+                Ok(item)
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("scheduled job #2"));
+        assert_eq!(counter.load(Ordering::Relaxed), 3, "inline is fail-fast");
+    }
+
+}

@@ -32,7 +32,7 @@
 //! dispatch path to keep correct.
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
@@ -160,10 +160,14 @@ enum StepLosses {
     Immediate { mean_loss: f32, micro_losses: Vec<f32> },
 }
 
-/// The concrete engine (see module docs).
+/// The concrete engine (see module docs). One engine = one run: every
+/// mutable thing here (ParamSets, stager, ring, caches, scalar buffers) is
+/// owned by the run's worker thread; the `Arc`s (runtime, artifact,
+/// compiled programs) are the read-only state shared across concurrent
+/// runs by the scheduler (`docs/transfer-contract.md` §5).
 pub struct StepEngine {
-    rt: Rc<Runtime>,
-    art: Rc<Artifact>,
+    rt: Arc<Runtime>,
+    art: Arc<Artifact>,
     // parameter + optimizer state
     tr: ParamSet,
     fr: ParamSet,
@@ -171,14 +175,14 @@ pub struct StepEngine {
     v: ParamSet,
     adam_steps: usize,
     // programs
-    grad_prog: Rc<Program>,
-    adam_prog: Rc<Program>,
-    eval_prog: Rc<Program>,
+    grad_prog: Arc<Program>,
+    adam_prog: Arc<Program>,
+    eval_prog: Arc<Program>,
     /// Device-side accumulation pair (`grad_accum`/`grad_finalize`);
     /// `None` for artifacts that predate them — the engine then falls back
     /// to the host [`GradAccumulator`] path.
-    grad_accum_prog: Option<Rc<Program>>,
-    grad_finalize_prog: Option<Rc<Program>>,
+    grad_accum_prog: Option<Arc<Program>>,
+    grad_finalize_prog: Option<Arc<Program>>,
     /// Cached learning-rate scalar buffer, keyed by the lr value it holds.
     lr_buf: Option<(f32, xla::PjRtBuffer)>,
     /// Cached `1/n_micro` scalar for `grad_finalize`, keyed by micro count.
@@ -203,8 +207,8 @@ impl StepEngine {
     /// compiled programs, an empty stager/ring. `pipeline` is the batch
     /// producer the stager pulls from.
     pub fn new(
-        rt: &Rc<Runtime>,
-        art: Rc<Artifact>,
+        rt: &Arc<Runtime>,
+        art: Arc<Artifact>,
         values: &BTreeMap<String, Tensor>,
         pipeline: Pipeline,
         val_batches: Vec<(Batch, usize)>,
@@ -230,7 +234,7 @@ impl StepEngine {
         let transfers_at_start = rt.stats.snapshot();
         let stager = BatchStager::new(rt);
         Ok(StepEngine {
-            rt: Rc::clone(rt),
+            rt: Arc::clone(rt),
             art,
             tr,
             fr,
@@ -267,9 +271,9 @@ impl StepEngine {
         staged: &StagedBatch,
     ) -> Result<(Vec<xla::PjRtBuffer>, Vec<PendingLoss>)> {
         let accum_prog =
-            Rc::clone(self.grad_accum_prog.as_ref().expect("checked by dispatch_step"));
+            Arc::clone(self.grad_accum_prog.as_ref().expect("checked by dispatch_step"));
         let finalize_prog =
-            Rc::clone(self.grad_finalize_prog.as_ref().expect("checked by dispatch_step"));
+            Arc::clone(self.grad_finalize_prog.as_ref().expect("checked by dispatch_step"));
         let n = self.tr.len();
         let mut acc = DeviceGradAccumulator::new();
         let mut pending = Vec::with_capacity(staged.micro.len());

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::{Context, Result};
 
@@ -34,15 +34,31 @@ pub fn default_pretrain_steps(model: &str) -> usize {
     }
 }
 
+/// Serializes checkpoint builds: concurrent scheduler workers may reach
+/// `ensure_pretrained` for the same model at the same time; exactly one
+/// may train-and-cache while the rest wait and then read the cache. The
+/// pretraining run is itself a full training run, so serializing the whole
+/// build (rather than just the file write) also keeps it deterministic.
+static PRETRAIN_BUILD: Mutex<()> = Mutex::new(());
+
 /// Load the cached pretrained W0 for `model`, training and caching it on
-/// first use. Returns all base parameters by name.
+/// first use. Returns all base parameters by name. Safe to call from
+/// concurrent worker threads: the fast path is a lock-free cache read; the
+/// build path is serialized process-wide and the checkpoint file is
+/// written atomically (`save_params` writes temp-then-rename).
 pub fn ensure_pretrained(
-    rt: &Rc<Runtime>,
+    rt: &Arc<Runtime>,
     artifacts_root: &Path,
     model: &str,
     steps: Option<usize>,
 ) -> Result<BTreeMap<String, Tensor>> {
     let path = checkpoint_path(artifacts_root, model);
+    if path.exists() {
+        return load_params(&path).with_context(|| format!("cached W0 for {model}"));
+    }
+    // Cache miss: take the build lock, then re-check — another worker may
+    // have finished the identical build while we waited.
+    let _build = PRETRAIN_BUILD.lock().unwrap_or_else(PoisonError::into_inner);
     if path.exists() {
         return load_params(&path).with_context(|| format!("cached W0 for {model}"));
     }

@@ -33,9 +33,9 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::analysis::linalg::mean_condition_number;
 use crate::config::TrainConfig;
@@ -88,7 +88,7 @@ struct PendingRecord {
 
 pub struct Trainer {
     pub cfg: TrainConfig,
-    pub art: Rc<Artifact>,
+    pub art: Arc<Artifact>,
     /// The dispatch layer (device state, programs, prefetch, readback
     /// ring). Policy code goes through the [`Engine`] trait only.
     engine: StepEngine,
@@ -127,21 +127,24 @@ impl Trainer {
     /// Build a trainer. `base` optionally carries pretrained weights for
     /// every base parameter (see `pretrain::ensure_pretrained`).
     pub fn new(
-        rt: &Rc<Runtime>,
+        rt: &Arc<Runtime>,
         artifacts_root: &Path,
         cfg: TrainConfig,
         base: Option<&BTreeMap<String, Tensor>>,
     ) -> Result<Trainer> {
-        let art = Rc::new(
+        let art = Arc::new(
             Artifact::load(rt, &artifacts_root.join(&cfg.artifact))
                 .with_context(|| format!("artifact '{}'", cfg.artifact))?,
         );
         Self::with_artifact(rt, art, cfg, base)
     }
 
+    /// Build a trainer over an already-loaded artifact. Concurrent runs
+    /// (`crate::sched`) share one `Arc<Artifact>` per key so compiled
+    /// programs are reused read-only across workers.
     pub fn with_artifact(
-        rt: &Rc<Runtime>,
-        art: Rc<Artifact>,
+        rt: &Arc<Runtime>,
+        art: Arc<Artifact>,
         cfg: TrainConfig,
         base: Option<&BTreeMap<String, Tensor>>,
     ) -> Result<Trainer> {
@@ -181,7 +184,7 @@ impl Trainer {
         let ffc = FfController::new(cfg.ff.clone());
         let mut engine = StepEngine::new(
             rt,
-            Rc::clone(&art),
+            Arc::clone(&art),
             &values,
             pipeline,
             val_batches,
@@ -276,9 +279,7 @@ impl Trainer {
     /// (trainer_e2e) holds the two bit-for-bit equal.
     pub fn sgd_step(&mut self) -> Result<f32> {
         self.dispatch_sgd_step()?;
-        let resolved = self.engine.sync(SyncReason::StepResult)?;
-        self.absorb_resolved(resolved);
-        debug_assert!(self.pending_records.is_empty(), "sync left records pending");
+        self.drain_pending(SyncReason::StepResult)?;
         self.last_loss
             .ok_or_else(|| anyhow!("step dispatched but no loss resolved"))
     }
@@ -311,27 +312,46 @@ impl Trainer {
             flops: self.flops.total(),
             seconds: self.timer.elapsed(),
         });
-        self.absorb_resolved(d.resolved);
+        self.absorb_resolved(d.resolved)?;
         Ok(())
     }
 
     /// Force the engine to retire every in-flight step and backfill the
     /// run log. No-op when nothing is pending.
+    ///
+    /// Invariant (hard error, not debug-only): a forced sync drains the
+    /// whole readback ring, so afterwards **no** step record may still be
+    /// pending — a partial drain would silently drop run-log losses in
+    /// release builds, corrupting every loss-curve figure downstream.
     pub fn drain_pending(&mut self, reason: SyncReason) -> Result<()> {
         let resolved = self.engine.sync(reason)?;
-        self.absorb_resolved(resolved);
+        self.absorb_resolved(resolved)?;
+        ensure!(
+            self.pending_records.is_empty(),
+            "forced '{}' drain left {} dispatched step record(s) unresolved \
+             — their run-log losses would be dropped",
+            reason.as_str(),
+            self.pending_records.len()
+        );
         Ok(())
     }
 
     /// Match resolved steps (FIFO by ticket) to their pending records and
-    /// write the completed [`StepRecord`]s.
-    fn absorb_resolved(&mut self, resolved: Vec<ResolvedStep>) {
+    /// write the completed [`StepRecord`]s. Mismatches are hard errors:
+    /// the log must never silently lose or reorder a dispatched step.
+    fn absorb_resolved(&mut self, resolved: Vec<ResolvedStep>) -> Result<()> {
         for r in resolved {
             let rec = self
                 .pending_records
                 .pop_front()
-                .expect("resolved step without a pending record");
-            debug_assert_eq!(rec.ticket, r.ticket, "deferred readback out of order");
+                .ok_or_else(|| anyhow!("resolved step {} without a pending record", r.ticket))?;
+            ensure!(
+                rec.ticket == r.ticket,
+                "deferred readback out of order: resolved ticket {} but the \
+                 oldest pending record is {}",
+                r.ticket,
+                rec.ticket
+            );
             self.log.push(StepRecord {
                 step: rec.step,
                 kind: StepKind::Sgd,
@@ -341,6 +361,7 @@ impl Trainer {
             });
             self.last_loss = Some(r.mean_loss);
         }
+        Ok(())
     }
 
     /// Tiny-validation-set loss (charged as FF inference per the paper).

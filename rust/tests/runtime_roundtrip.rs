@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use fastforward::model::init::init_params;
 use fastforward::model::tensor::Tensor;
@@ -17,7 +17,7 @@ fn artifacts_root() -> std::path::PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn load(key: &str) -> (Rc<Runtime>, Artifact) {
+fn load(key: &str) -> (Arc<Runtime>, Artifact) {
     let rt = Runtime::cpu().expect("pjrt cpu client");
     let art = Artifact::load(&rt, &artifacts_root().join(key)).expect("artifact");
     (rt, art)

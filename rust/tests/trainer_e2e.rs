@@ -349,6 +349,52 @@ fn pipelined_steps_keep_batch_only_upload_contract() {
 }
 
 #[test]
+fn forced_drains_leave_no_pending_records() {
+    // The drain invariant is a *hard* error now, not a debug_assert: a
+    // forced sync that left records pending would silently drop run-log
+    // losses in release builds. Exercise every boundary that forces a
+    // drain — eval, FF stage, snapshot, shutdown — with steps in flight,
+    // and verify the log ends up complete each time.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let mut t = Trainer::new(&rt, &root, tiny_cfg(true, 64), Some(&base)).unwrap();
+    t.set_drain_interval(16); // large ring: boundaries do the draining
+
+    // eval boundary with 3 steps in flight
+    for _ in 0..3 {
+        t.dispatch_sgd_step().unwrap();
+    }
+    assert_eq!(t.pending_steps(), 3);
+    t.eval_val().unwrap();
+    assert_eq!(t.pending_steps(), 0, "eval must retire in-flight steps");
+    assert_eq!(t.log.n_sgd(), 3, "eval drain must backfill the log");
+
+    // FF boundary with steps in flight (warmup already satisfied)
+    for _ in 0..2 {
+        t.dispatch_sgd_step().unwrap();
+    }
+    t.ff_stage().unwrap();
+    assert_eq!(t.pending_steps(), 0, "ff_stage must retire in-flight steps");
+    assert_eq!(t.log.n_sgd(), 5);
+
+    // snapshot boundary
+    t.dispatch_sgd_step().unwrap();
+    t.trainables().unwrap();
+    assert_eq!(t.pending_steps(), 0, "snapshot must retire in-flight steps");
+    assert_eq!(t.log.n_sgd(), 6);
+
+    // shutdown boundary via the explicit drain
+    t.dispatch_sgd_step().unwrap();
+    t.dispatch_sgd_step().unwrap();
+    t.drain_pending(SyncReason::Shutdown).unwrap();
+    assert_eq!(t.pending_steps(), 0);
+    assert_eq!(t.log.n_sgd(), 8, "no dispatched step may drop from the log");
+    // every record carries a finite loss — none were dropped or zero-filled
+    assert!(t.log.records.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
 fn convergence_rule_disables_ff_eventually() {
     let rt = Runtime::cpu().unwrap();
     let root = artifacts_root();
