@@ -1,0 +1,85 @@
+#!/usr/bin/env bash
+# Thread-safety audit gate for the `xla-shared-client` cargo feature.
+#
+# The feature turns on `unsafe impl Send/Sync` for the PJRT wrappers and
+# real thread fan-out in the run scheduler. It is only sound against an
+# audited xla-rs revision (see rust/XLA_AUDIT). This script enforces:
+#
+#   1. the feature is never in the crate's default feature set;
+#   2. if CI (workflows/Makefiles/scripts) builds with the feature, then
+#      rust/Cargo.toml must pin `xla` to `rev = "<sha>"`, that sha must
+#      equal the audited sha recorded in rust/XLA_AUDIT, and — when a
+#      Cargo.lock is checked in — the lockfile must resolve xla to the
+#      same sha.
+#
+# Run from the repo root: ci/check_xla_audit.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+FEATURE="xla-shared-client"
+CARGO_TOML="rust/Cargo.toml"
+AUDIT_FILE="rust/XLA_AUDIT"
+
+fail() {
+    echo "xla audit gate: FAIL — $1" >&2
+    exit 1
+}
+
+[ -f "$CARGO_TOML" ] || fail "missing $CARGO_TOML"
+[ -f "$AUDIT_FILE" ] || fail "missing $AUDIT_FILE (see rust/Cargo.toml, thread-safety gate)"
+
+# 1. The feature must be strictly opt-in: never a default feature.
+if sed -n '/^\[features\]/,/^\[/p' "$CARGO_TOML" \
+    | grep -E '^default *=' | grep -q "$FEATURE"; then
+    fail "$FEATURE is in the crate's default features; it must stay opt-in"
+fi
+
+# Does anything under CI control enable the feature? Look at workflows and
+# any Makefile/scripts that invoke cargo. Compile-only `cargo check` lines
+# are exempt: type-checking the unsafe impls and the threaded scatter runs
+# nothing, so it is sound against any xla revision — and it is how CI keeps
+# the gated path from rotting while the feature stays off.
+enabled_by=""
+for f in .github/workflows/*.yml .github/workflows/*.yaml Makefile rust/Makefile ci/*.sh; do
+    [ -f "$f" ] || continue
+    case "$f" in */check_xla_audit.sh) continue ;; esac
+    # Match --features/--all-features and cargo's -F shorthand in all its
+    # spellings (-F feat, -F=feat, -Ffeat).
+    if grep -E -- "--all-features|(--features|[[:space:]'\"]-F)[= ]?[^#]*$FEATURE" "$f" \
+        | grep -vE "cargo +check" | grep -q .; then
+        enabled_by="$f"
+        break
+    fi
+done
+
+if [ -z "$enabled_by" ]; then
+    echo "xla audit gate: OK — $FEATURE not enabled anywhere in CI; default"
+    echo "builds compile the scheduler without thread fan-out (sound against"
+    echo "any xla revision)."
+    exit 0
+fi
+
+echo "xla audit gate: $enabled_by builds with $FEATURE — verifying the audit trail"
+
+# 2a. Cargo.toml must pin a rev (a floating branch cannot be audited).
+pinned=$(grep -E '^xla *=' "$CARGO_TOML" | grep -oE 'rev *= *"[0-9a-f]{7,40}"' \
+    | grep -oE '[0-9a-f]{7,40}' || true)
+[ -n "$pinned" ] || fail "$enabled_by enables $FEATURE but $CARGO_TOML does not pin xla to a rev (still floating on a branch)"
+
+# 2b. The pinned rev must be the audited one.
+audited=$(grep -vE '^\s*(#|$)' "$AUDIT_FILE" | head -n 1 | tr -d '[:space:]')
+[ -n "$audited" ] && [ "$audited" != "none" ] \
+    || fail "$enabled_by enables $FEATURE but $AUDIT_FILE records no audited rev"
+[ "$pinned" = "$audited" ] \
+    || fail "pinned xla rev ($pinned) != audited rev ($audited) in $AUDIT_FILE"
+
+# 2c. If a lockfile is checked in, it must resolve xla to the audited rev.
+for lock in rust/Cargo.lock Cargo.lock; do
+    [ -f "$lock" ] || continue
+    if ! grep -A2 '^name = "xla"' "$lock" | grep -q "$audited"; then
+        fail "$lock resolves xla to a different rev than the audited $audited"
+    fi
+done
+
+echo "xla audit gate: OK — $FEATURE is backed by audited rev $audited"

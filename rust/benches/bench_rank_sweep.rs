@@ -13,7 +13,8 @@ use std::time::Duration;
 use fastforward::config::{presets, FfConfig, TrainConfig};
 use fastforward::flops::FlopsModel;
 use fastforward::runtime::Runtime;
-use fastforward::sched::{default_jobs, ArtifactCache, RunSpec, WorkerPool};
+use fastforward::sched::{default_jobs, threads_enabled, ArtifactCache, RunSpec, WorkerPool};
+use fastforward::train::engine::required_programs;
 use fastforward::train::pretrain::ensure_pretrained;
 use fastforward::train::trainer::{StopRule, Trainer};
 use fastforward::util::bench::bench;
@@ -84,17 +85,18 @@ fn main() -> anyhow::Result<()> {
     // inside its timed window and inflate the reported speedup.
     for rank in [1usize, 8, 64] {
         let art = cache.load(&rt, &format!("ff-tiny_lora_r{rank}"))?;
-        for prog in ["grad_step", "adam_apply", "eval_loss"] {
+        for prog in required_programs(&art.manifest) {
             art.program(prog)?;
-        }
-        for prog in ["grad_accum", "grad_finalize"] {
-            if art.manifest.has_program(prog) {
-                art.program(prog)?;
-            }
         }
     }
     let jobs = default_jobs().min(4);
     println!("\nscheduler scaling: 6 runs × {steps} steps (ranks 1/8/64 × 2 seeds)");
+    if !threads_enabled() {
+        println!(
+            "  NOTE: built without --features xla-shared-client — the pool runs \
+             sequentially (expect speedup ~1.0x); see rust/XLA_AUDIT"
+        );
+    }
     let seq = WorkerPool::new(1).run_all(&rt, &cache, specs("seq")?)?;
     let par = WorkerPool::new(jobs).run_all(&rt, &cache, specs("par")?)?;
     let identical = seq

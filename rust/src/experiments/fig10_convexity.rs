@@ -5,11 +5,9 @@
 use anyhow::Result;
 
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::metrics::write_report;
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::Trainer;
 use crate::util::json::Json;
 
 /// Count strict sign changes of the discrete slope — a convex curve has at
@@ -33,10 +31,10 @@ fn slope_sign_changes(losses: &[f32]) -> usize {
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny";
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
     let cfg = run_config(ctx, &artifact, "chat", FfConfig::default())?;
     let warmup = cfg.ff.warmup_steps;
-    let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+    let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
     for _ in 0..warmup {
         t.sgd_step()?;
     }

@@ -4,11 +4,10 @@
 use anyhow::Result;
 
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::metrics::write_report;
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::{StopRule, Trainer};
+use crate::train::trainer::StopRule;
 use crate::util::json::Json;
 
 /// Kendall-style monotonicity score in [-1, 1] over (index, value) pairs.
@@ -34,12 +33,12 @@ fn trend(values: &[usize]) -> f64 {
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny";
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
     let mut cfg = run_config(ctx, &artifact, "medical", FfConfig::default())?;
     // Long enough run to watch τ* decay over many stages.
     cfg.max_steps = if ctx.scale.full { 120 } else { 60 };
     let max_steps = cfg.max_steps;
-    let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+    let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
     t.run(&StopRule::MaxSteps(max_steps))?;
 
     let taus: Vec<usize> = t.ffc.stages.iter().map(|s| s.tau_star).collect();

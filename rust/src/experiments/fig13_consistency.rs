@@ -7,23 +7,21 @@ use anyhow::Result;
 
 use crate::analysis::grads::batch_consistency;
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::experiments::fig12_factors::pearson;
 use crate::ff::controller::FfDecision;
 use crate::metrics::{write_report, TextTable};
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::Trainer;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny";
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
     let mut cfg = run_config(ctx, &artifact, "medical", FfConfig::default())?;
     cfg.max_steps = if ctx.scale.full { 120 } else { 60 };
     let max_steps = cfg.max_steps;
-    let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+    let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
     t.keep_micro_grads = true;
 
     let mut samples: Vec<(f64, usize, usize)> = Vec::new(); // (consistency, τ*, stage)

@@ -5,24 +5,22 @@
 use anyhow::Result;
 
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::ff::controller::FfDecision;
 use crate::metrics::{write_report, TextTable};
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::Trainer;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny";
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
 
     let mut rows = Vec::new();
     for t_interval in 1..=10usize {
         let ff = FfConfig { t_interval, warmup_steps: 6, ..FfConfig::default() };
         let cfg = run_config(ctx, &artifact, "medical", ff)?;
-        let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+        let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
         // drive until exactly two FF stages have run
         while t.ffc.n_stages() < 2 && t.adam_steps() < 100 {
             match t.ffc.next() {

@@ -5,15 +5,14 @@
 use anyhow::Result;
 
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::metrics::{write_report, StepKind};
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::{StopRule, Trainer};
+use crate::train::trainer::StopRule;
 use crate::util::json::Json;
 
 fn curve_for_model(ctx: &ExpContext, model: &str) -> Result<Json> {
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
     let artifact = format!("{model}_lora_r8");
 
     let mut series = Vec::new();
@@ -23,7 +22,7 @@ fn curve_for_model(ctx: &ExpContext, model: &str) -> Result<Json> {
     ] {
         let cfg = run_config(ctx, &artifact, "chat", ff)?;
         let max_steps = cfg.max_steps;
-        let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+        let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
         t.run(&StopRule::MaxSteps(max_steps))?;
         let pts: Vec<Json> = t
             .log

@@ -7,27 +7,26 @@ use anyhow::Result;
 
 use crate::analysis::plane::{plane_grid, PlaneBasis};
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::metrics::write_report;
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::{StopRule, Trainer};
+use crate::train::trainer::StopRule;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny";
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
 
     // Train the two anchors on the medical task.
     let cfg_sgd = run_config(ctx, &artifact, "medical",
         FfConfig { enabled: false, ..FfConfig::default() })?;
     let steps = cfg_sgd.max_steps;
-    let mut t_sgd = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg_sgd, Some(&base))?;
+    let mut t_sgd = trainer_for(ctx, cfg_sgd, Some(base.as_ref()))?;
     t_sgd.run(&StopRule::MaxSteps(steps))?;
 
     let cfg_ff = run_config(ctx, &artifact, "medical", FfConfig::default())?;
-    let mut t_ff = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg_ff, Some(&base))?;
+    let mut t_ff = trainer_for(ctx, cfg_ff, Some(base.as_ref()))?;
     t_ff.run(&StopRule::MaxSteps(steps))?;
 
     let w0 = t_sgd.w0_trainables.clone();

@@ -7,21 +7,19 @@ use anyhow::Result;
 
 use crate::analysis::grads::GradHistory;
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::ff::controller::FfDecision;
 use crate::metrics::write_report;
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::Trainer;
 use crate::util::json::Json;
 
 fn series(ctx: &ExpContext, ff_on: bool, steps: usize) -> Result<(Vec<(usize, f64)>, f64)> {
     let model = "ff-tiny";
     let artifact = format!("{model}_lora_r8");
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
     let ff = if ff_on { FfConfig::default() } else { FfConfig { enabled: false, ..FfConfig::default() } };
     let cfg = run_config(ctx, &artifact, "medical", ff)?;
-    let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+    let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
     // The cosine history reads the mean gradient after every step; with
     // device-side accumulation that download only happens on request.
     t.keep_host_grads = true;

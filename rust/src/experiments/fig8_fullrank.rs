@@ -5,17 +5,15 @@
 use anyhow::Result;
 
 use crate::config::FfConfig;
-use crate::experiments::common::run_config;
+use crate::experiments::common::{run_config, trainer_for};
 use crate::experiments::ExpContext;
 use crate::ff::controller::FfDecision;
 use crate::metrics::write_report;
-use crate::train::pretrain::ensure_pretrained;
-use crate::train::trainer::Trainer;
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny";
-    let base = ensure_pretrained(&ctx.rt, &ctx.artifacts_root, model, None)?;
+    let base = ctx.pretrained(model)?;
 
     let mut report_rows = Vec::new();
     let mut stages_summary = Vec::new();
@@ -33,7 +31,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             cfg.lr = 1.2e-2;
         }
         let steps = if ctx.scale.full { 40 } else { 24 };
-        let mut t = Trainer::new(&ctx.rt, &ctx.artifacts_root, cfg, Some(&base))?;
+        let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
         while t.adam_steps() < steps {
             match t.ffc.next() {
                 FfDecision::Sgd => {

@@ -66,6 +66,15 @@ impl Scale {
     }
 }
 
+/// One pretrained parameter map, shared read-only across harness cells.
+type W0Map = Arc<BTreeMap<String, Tensor>>;
+/// Per-model cache slot: locked independently of the map and of every
+/// other model's slot, so one model's first-touch build never blocks
+/// another model's *cached read*. (First-touch builds of different
+/// models still serialize on the process-wide `PRETRAIN_BUILD` lock
+/// inside `ensure_pretrained` — deliberately, for determinism.)
+type W0Slot = Arc<Mutex<Option<W0Map>>>;
+
 pub struct ExpContext {
     pub rt: Arc<Runtime>,
     pub artifacts_root: PathBuf,
@@ -75,14 +84,16 @@ pub struct ExpContext {
     pub artifacts: ArtifactCache,
     pub reports_dir: PathBuf,
     pub scale: Scale,
-    /// Worker threads for grid-shaped harnesses (`--jobs N`; 1 = inline).
-    /// Independent cells fan out through [`ExpContext::pool`]; results are
+    /// Effective worker width for grid-shaped harnesses (`--jobs N`;
+    /// 1 = inline; always 1 in builds without the `xla-shared-client`
+    /// feature — see `crate::sched`, §Thread-safety gate). Independent
+    /// cells fan out through [`ExpContext::pool`]; results are
     /// submission-ordered, so reports are byte-identical at any level.
     pub jobs: usize,
     /// In-memory W0 cache: one `Arc`'d parameter map per model, so N
     /// concurrent cells share one copy instead of each re-reading and
     /// re-allocating the checkpoint from disk.
-    w0: Mutex<BTreeMap<String, Arc<BTreeMap<String, Tensor>>>>,
+    w0: Mutex<BTreeMap<String, W0Slot>>,
 }
 
 impl ExpContext {
@@ -98,7 +109,7 @@ impl ExpContext {
             artifacts_root,
             reports_dir,
             scale,
-            jobs: jobs.max(1),
+            jobs: WorkerPool::new(jobs).jobs(),
             w0: Mutex::new(BTreeMap::new()),
         })
     }
@@ -110,16 +121,24 @@ impl ExpContext {
 
     /// The pretrained W0 for `model`, shared read-only across harness
     /// cells: built (or loaded from the checkpoint cache) on first touch,
-    /// then served as one `Arc` per process. The lock is held across the
-    /// build deliberately — concurrent first-touches of the same model
-    /// must not each deserialize (or train) their own copy.
-    pub fn pretrained(&self, model: &str) -> Result<Arc<BTreeMap<String, Tensor>>> {
-        let mut w0 = self.w0.lock().unwrap_or_else(PoisonError::into_inner);
-        if let Some(b) = w0.get(model) {
+    /// then served as one `Arc` per process. The map lock is held only to
+    /// fetch the model's entry; the build runs under that *entry's* lock,
+    /// so concurrent first-touches of the same model still build exactly
+    /// once while other models' *cached reads* proceed unblocked.
+    /// (First-touch *builds* of different models still serialize, on the
+    /// process-wide lock inside `ensure_pretrained`.) A failed build
+    /// leaves the slot empty, so a later caller retries.
+    pub fn pretrained(&self, model: &str) -> Result<W0Map> {
+        let entry: W0Slot = {
+            let mut map = self.w0.lock().unwrap_or_else(PoisonError::into_inner);
+            Arc::clone(map.entry(model.to_string()).or_default())
+        };
+        let mut slot = entry.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(b) = slot.as_ref() {
             return Ok(Arc::clone(b));
         }
         let built = Arc::new(ensure_pretrained(&self.rt, &self.artifacts_root, model, None)?);
-        w0.insert(model.to_string(), Arc::clone(&built));
+        *slot = Some(Arc::clone(&built));
         Ok(built)
     }
 }

@@ -215,28 +215,33 @@ pub struct Runtime {
     pub stats: TransferStats,
 }
 
-// SAFETY: the PJRT C API requires implementations to be thread-safe —
-// clients, loaded executables, and buffers may be used concurrently from
-// multiple host threads (compile/execute/transfer all take internal locks;
-// XLA:CPU's client is explicitly multi-threaded). The `xla` crate's
-// wrappers are `!Send`/`!Sync` because they hold raw pointers to those
-// C++ objects, not because the objects themselves are thread-bound.
-// `TransferStats` is atomic. Everything else on `Runtime` is immutable
-// after construction. Each *run* owns its own buffers (ParamSets, staged
-// batches, pending losses) on the worker thread that created them; only
-// the client, compiled programs, and these counters are shared.
+// SAFETY (compiled only under `--features xla-shared-client`): the PJRT
+// C API requires implementations to be thread-safe — clients, loaded
+// executables, and buffers may be used concurrently from multiple host
+// threads (compile/execute/transfer all take internal locks; XLA:CPU's
+// client is explicitly multi-threaded). `TransferStats` is atomic.
+// Everything else on `Runtime` is immutable after construction. Each
+// *run* owns its own buffers (ParamSets, staged batches, pending losses)
+// on the worker thread that created them; only the client, compiled
+// programs, and these counters are shared.
 //
-// ASSUMPTION (not verifiable in this environment — the `xla` dependency
-// is resolved by the build image, not vendored here): the wrapper types
-// must hold their C++ handles as plain pointers with no *non-atomic*
-// shared bookkeeping (e.g. an internal `Rc`'d client handle cloned into
-// every buffer/executable) — non-atomic refcounts cloned across worker
-// threads would be UB regardless of PJRT's own thread-safety. If the
-// resolved xla-rs revision violates this, these impls must be removed
-// and the scheduler pinned to one runtime per worker instead of a shared
-// `Arc<Runtime>`. The tier-1 suite exercises the shared path under real
-// concurrency (`tests/sched_pool.rs`, `selftest --jobs 2` in CI).
+// The load-bearing assumption is about the *wrapper* crate, not PJRT:
+// the `xla` wrapper types must hold their C++ handles as plain pointers
+// with no non-atomic shared bookkeeping. Upstream xla-rs wrappers keep
+// the client behind a non-atomic `Rc` cloned into every
+// `PjRtBuffer`/`PjRtLoadedExecutable` — cloning/dropping those across
+// worker threads races the refcount (UB: corruption, double-free)
+// regardless of PJRT's own thread-safety. Since Cargo.toml resolves
+// `xla` from a floating branch, these impls are therefore feature-gated
+// OFF by default; without them, cross-thread use of `Runtime`/`Program`
+// is a compile error and the scheduler (`crate::sched`) runs jobs
+// sequentially. Enabling the feature requires pinning `xla` to a `rev`
+// whose handle semantics have been audited as refcount-free (or
+// `Arc`-based) and recording it in rust/XLA_AUDIT —
+// ci/check_xla_audit.sh enforces that precondition in CI.
+#[cfg(feature = "xla-shared-client")]
 unsafe impl Send for Runtime {}
+#[cfg(feature = "xla-shared-client")]
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
@@ -339,11 +344,17 @@ pub struct Program {
     exe: xla::PjRtLoadedExecutable,
 }
 
-// SAFETY: see the `Runtime` impls — PJRT loaded executables are
-// thread-safe to execute concurrently per the PJRT API contract; `name`
-// and `spec` are immutable after construction. Compiled programs are the
-// read-only artifacts the scheduler shares across worker threads.
+// SAFETY (compiled only under `--features xla-shared-client`): see the
+// `Runtime` impls — PJRT loaded executables are thread-safe to execute
+// concurrently per the PJRT API contract; `name` and `spec` are immutable
+// after construction. Compiled programs are the read-only artifacts the
+// scheduler shares across worker threads. Gated for the same reason as
+// `Runtime`: the wrapper may clone a non-atomic client handle into each
+// executable/buffer, so the impls only exist once the resolved xla
+// revision is pinned and audited (rust/XLA_AUDIT).
+#[cfg(feature = "xla-shared-client")]
 unsafe impl Send for Program {}
+#[cfg(feature = "xla-shared-client")]
 unsafe impl Sync for Program {}
 
 /// Decoded program outputs, aligned with `spec.outputs`.
@@ -632,10 +643,11 @@ impl Program {
 ///
 /// The cache is lock-guarded so one `Arc<Artifact>` can be shared by every
 /// worker of a [`crate::sched::WorkerPool`]: concurrent runs over the same
-/// artifact compile each program exactly once and share the read-only
-/// executable. The lock is held across compilation deliberately — a second
-/// worker asking for the same program blocks briefly at warmup instead of
-/// compiling a duplicate.
+/// artifact share each read-only executable. Compilation happens *outside*
+/// the lock with a double-checked insert — a worker asking for a
+/// different, also-uncached program never blocks behind another program's
+/// XLA compile; two workers racing on the *same* program may rarely both
+/// compile it, and the first insert wins.
 pub struct Artifact {
     pub manifest: Manifest,
     rt: Arc<Runtime>,
@@ -650,13 +662,20 @@ impl Artifact {
     }
 
     pub fn program(&self, name: &str) -> Result<Arc<Program>> {
-        let mut cache = self.programs.lock().unwrap_or_else(PoisonError::into_inner);
-        if let Some(p) = cache.get(name) {
+        if let Some(p) = self
+            .programs
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(name)
+        {
             return Ok(Arc::clone(p));
         }
+        // Compile with the lock released so concurrent requests for
+        // *other* programs of this artifact proceed; re-check on insert
+        // (first finisher wins, a racing duplicate compile is dropped).
         let p = Arc::new(self.rt.load_program(&self.manifest, name)?);
-        cache.insert(name.to_string(), Arc::clone(&p));
-        Ok(p)
+        let mut cache = self.programs.lock().unwrap_or_else(PoisonError::into_inner);
+        Ok(Arc::clone(cache.entry(name.to_string()).or_insert(p)))
     }
 
     pub fn runtime(&self) -> &Arc<Runtime> {

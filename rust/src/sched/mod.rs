@@ -33,13 +33,32 @@
 //! order, and `--jobs 1` vs `--jobs N` produce identical result vectors
 //! for deterministic jobs. `rust/tests/sched_pool.rs` asserts the losses
 //! are bit-identical and the shared transfer meters tally exactly.
+//!
+//! # Thread-safety gate (`xla-shared-client` feature)
+//!
+//! Sharing one PJRT client and its executables across host threads needs
+//! `unsafe impl Send/Sync` on `Runtime`/`Program` (see the SAFETY
+//! comments in `crate::runtime`), and those impls are only sound against
+//! an xla-rs revision whose wrappers hold refcount-free handles — which
+//! the floating dependency cannot guarantee. Both the impls and the
+//! thread spawn below are therefore compiled out unless the crate is
+//! built with `--features xla-shared-client` (requires a pinned, audited
+//! rev — see `rust/XLA_AUDIT` and `ci/check_xla_audit.sh`). Without the
+//! feature, [`threads_enabled`] is `false`, [`WorkerPool::new`] clamps to
+//! one effective worker, and every batch runs inline in submission order:
+//! the results, reports, and determinism contract are identical — only
+//! the wall-clock overlap is lost.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
+#[cfg(feature = "xla-shared-client")]
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+#[cfg(any(test, feature = "xla-shared-client"))]
+use anyhow::bail;
+use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
 use crate::ff::controller::FfStageStats;
@@ -48,10 +67,22 @@ use crate::model::tensor::Tensor;
 use crate::runtime::{Artifact, Runtime, StreamStats, TransferSnapshot};
 use crate::train::trainer::{RunSummary, StopRule, Trainer};
 
+/// Whether this build may actually fan runs out over host threads. False
+/// in the default build (see module docs, §Thread-safety gate): the
+/// runtime wrappers carry no `Send`/`Sync` until the resolved xla
+/// revision is pinned and audited, so the pool executes inline.
+pub const fn threads_enabled() -> bool {
+    cfg!(feature = "xla-shared-client")
+}
+
 /// Worker-thread count to use when the caller has no opinion: one per
 /// available core (the PJRT CPU backend also parallelizes within a
-/// dispatch, so benches typically cap this lower).
+/// dispatch, so benches typically cap this lower). Always 1 when
+/// [`threads_enabled`] is false.
 pub fn default_jobs() -> usize {
+    if !threads_enabled() {
+        return 1;
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -172,10 +203,15 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// `jobs` is clamped to at least 1. `jobs == 1` runs every item inline
-    /// on the calling thread (no spawn overhead, trivially ordered).
+    /// `jobs` is clamped to at least 1 — and to exactly 1 when
+    /// [`threads_enabled`] is false, so [`WorkerPool::jobs`] always
+    /// reports the *effective* width (benches and the selftest print
+    /// honest numbers in gated builds). `jobs == 1` runs every item
+    /// inline on the calling thread (no spawn overhead, trivially
+    /// ordered).
     pub fn new(jobs: usize) -> WorkerPool {
-        WorkerPool { jobs: jobs.max(1) }
+        let jobs = if threads_enabled() { jobs.max(1) } else { 1 };
+        WorkerPool { jobs }
     }
 
     pub fn jobs(&self) -> usize {
@@ -187,6 +223,7 @@ impl WorkerPool {
     /// back **in submission order** regardless of completion order. The
     /// first failing item's error (by submission index) is returned after
     /// all workers settle; later items may then be unexecuted.
+    #[cfg(feature = "xla-shared-client")]
     pub fn scatter<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
     where
         T: Send,
@@ -195,11 +232,7 @@ impl WorkerPool {
     {
         let n = items.len();
         if self.jobs == 1 || n <= 1 {
-            let mut out = Vec::with_capacity(n);
-            for (i, item) in items.into_iter().enumerate() {
-                out.push(f(i, item).with_context(|| format!("scheduled job #{i}"))?);
-            }
-            return Ok(out);
+            return scatter_inline(items, f);
         }
 
         let queue: Mutex<VecDeque<(usize, T)>> =
@@ -250,6 +283,19 @@ impl WorkerPool {
         Ok(out)
     }
 
+    /// Sequential scatter: same signature and contract as the threaded
+    /// version minus `Send`/`Sync` bounds — without the
+    /// `xla-shared-client` feature the runtime wrappers are `!Send`/
+    /// `!Sync` (see module docs, §Thread-safety gate), so nothing may
+    /// cross threads and every batch runs inline in submission order.
+    #[cfg(not(feature = "xla-shared-client"))]
+    pub fn scatter<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
+    where
+        F: Fn(usize, T) -> Result<R>,
+    {
+        scatter_inline(items, f)
+    }
+
     /// Execute whole `Trainer::run` jobs across the pool: one trainer per
     /// spec, constructed and dropped on its worker thread, artifacts and
     /// `W0` shared read-only. Results are submission-ordered; the batch's
@@ -270,6 +316,19 @@ impl WorkerPool {
             wall_seconds: t0.elapsed().as_secs_f64(),
         })
     }
+}
+
+/// The inline execution path shared by both `scatter` variants:
+/// submission order, fail-fast on the first error.
+fn scatter_inline<T, R, F>(items: Vec<T>, f: F) -> Result<Vec<R>>
+where
+    F: Fn(usize, T) -> Result<R>,
+{
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.into_iter().enumerate() {
+        out.push(f(i, item).with_context(|| format!("scheduled job #{i}"))?);
+    }
+    Ok(out)
 }
 
 /// Drive one [`RunSpec`] to completion on the current thread.
@@ -310,7 +369,10 @@ mod tests {
     #[test]
     fn jobs_clamp_to_one() {
         assert_eq!(WorkerPool::new(0).jobs(), 1);
-        assert_eq!(WorkerPool::new(3).jobs(), 3);
+        // Builds without the xla-shared-client feature have no thread
+        // fan-out; the pool reports its effective (inline) width.
+        let expected = if threads_enabled() { 3 } else { 1 };
+        assert_eq!(WorkerPool::new(3).jobs(), expected);
     }
 
     #[test]

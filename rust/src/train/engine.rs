@@ -43,8 +43,8 @@ use crate::model::tensor::Tensor;
 use crate::optim::accum::{DeviceGradAccumulator, GradAccumulator};
 use crate::optim::delta::DeltaTracker;
 use crate::runtime::{
-    Artifact, ExecStream, InputBuf, ParamSet, PendingLoss, PendingStep, Program, ResolvedStep,
-    Runtime, StreamStats, SyncReason, TransferSnapshot,
+    Artifact, ExecStream, InputBuf, Manifest, ParamSet, PendingLoss, PendingStep, Program,
+    ResolvedStep, Runtime, StreamStats, SyncReason, TransferSnapshot,
 };
 use crate::train::eval_cache::{EvalCache, ExampleScratch, LossAccum};
 
@@ -202,10 +202,32 @@ pub struct StepEngine {
     transfers_at_start: TransferSnapshot,
 }
 
+/// Both halves of the optional device-side accumulation pair, or neither
+/// — a manifest with only one of them is malformed enough to fall back to
+/// the host path rather than half-commit.
+fn has_device_accum_pair(man: &Manifest) -> bool {
+    man.has_program("grad_accum") && man.has_program("grad_finalize")
+}
+
+/// Exactly the programs [`StepEngine::new`] compiles for `manifest`: the
+/// required trio plus the device-accumulation pair when the manifest
+/// carries both halves. Pre-warm loops (the scheduler-scaling section of
+/// `bench_rank_sweep`) iterate this so a shared program cache is primed
+/// with the same set a fresh engine will request — keep it in lockstep
+/// with [`StepEngine::new`] below.
+pub fn required_programs(manifest: &Manifest) -> Vec<&'static str> {
+    let mut progs = vec!["grad_step", "adam_apply", "eval_loss"];
+    if has_device_accum_pair(manifest) {
+        progs.extend(["grad_accum", "grad_finalize"]);
+    }
+    progs
+}
+
 impl StepEngine {
     /// Build an engine over an artifact: parameter sets from `values`,
-    /// compiled programs, an empty stager/ring. `pipeline` is the batch
-    /// producer the stager pulls from.
+    /// compiled programs (the set [`required_programs`] names), an empty
+    /// stager/ring. `pipeline` is the batch producer the stager pulls
+    /// from.
     pub fn new(
         rt: &Arc<Runtime>,
         art: Arc<Artifact>,
@@ -222,15 +244,11 @@ impl StepEngine {
         let grad_prog = art.program("grad_step")?;
         let adam_prog = art.program("adam_apply")?;
         let eval_prog = art.program("eval_loss")?;
-        // Optional device-side accumulation pair: both or neither — a
-        // manifest with only one of them is malformed enough to fall back
-        // to the host path rather than half-commit.
-        let (grad_accum_prog, grad_finalize_prog) =
-            if man.has_program("grad_accum") && man.has_program("grad_finalize") {
-                (Some(art.program("grad_accum")?), Some(art.program("grad_finalize")?))
-            } else {
-                (None, None)
-            };
+        let (grad_accum_prog, grad_finalize_prog) = if has_device_accum_pair(man) {
+            (Some(art.program("grad_accum")?), Some(art.program("grad_finalize")?))
+        } else {
+            (None, None)
+        };
         let transfers_at_start = rt.stats.snapshot();
         let stager = BatchStager::new(rt);
         Ok(StepEngine {

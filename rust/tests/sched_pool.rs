@@ -3,6 +3,12 @@
 //! sequentially — the shared runtime/program/W0 state is read-only, every
 //! run owns its own engine and stream, and the shared transfer meters are
 //! atomic, so totals stay exact (not approximate) under concurrency.
+//!
+//! In the default build (no `xla-shared-client` feature) the pool clamps
+//! to one inline worker — `run_batch(4)` then exercises the sequential
+//! fallback and every assertion here still holds; with the feature (and
+//! an audited xla rev, see `rust/XLA_AUDIT`) the same assertions cover
+//! real cross-thread execution.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
