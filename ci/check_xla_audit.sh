@@ -6,7 +6,12 @@
 # audited xla-rs revision (see rust/XLA_AUDIT). This script enforces:
 #
 #   1. the feature is never in the crate's default feature set;
-#   2. if CI (workflows/Makefiles/scripts) builds with the feature, then
+#   2. every scheduler entry point that spawns host threads over
+#      xla-backed state (the WorkerPool scatter in rust/src/sched/mod.rs
+#      and the RunQueue workers in rust/src/sched/queue.rs) carries the
+#      feature cfg-gate in its file, so new thread fan-out cannot land
+#      ungated;
+#   3. if CI (workflows/Makefiles/scripts) builds with the feature, then
 #      rust/Cargo.toml must pin `xla` to `rev = "<sha>"`, that sha must
 #      equal the audited sha recorded in rust/XLA_AUDIT, and — when a
 #      Cargo.lock is checked in — the lockfile must resolve xla to the
@@ -35,6 +40,28 @@ if sed -n '/^\[features\]/,/^\[/p' "$CARGO_TOML" \
     fail "$FEATURE is in the crate's default features; it must stay opt-in"
 fi
 
+# 2. Probe the scheduler's thread entry points — a *ratchet*, not just a
+# presence check: each scheduler file carries an audited count of
+# `thread::spawn`/`thread::scope` sites (all of which are cfg-gated on
+# the feature today). A new spawn site in either file fails CI until a
+# human verifies it is gated and bumps the count here, so ungated
+# fan-out over shared xla state cannot land silently. Audited sites:
+#   sched/mod.rs   1 — WorkerPool::scatter's thread::scope (cfg-gated)
+#   sched/queue.rs 2 — RunQueue worker thread::spawn (cfg-gated) + the
+#                      gated-only concurrent-submitters test's scope
+# (The data pipeline spawns plain host threads over host-only data; it
+# is deliberately not probed.)
+for spec in "rust/src/sched/mod.rs:1" "rust/src/sched/queue.rs:2"; do
+    f="${spec%%:*}"
+    want="${spec##*:}"
+    [ -f "$f" ] || fail "probe list out of date: missing $f"
+    got=$(grep -cE 'thread::(spawn|scope)' "$f" || true)
+    [ "$got" = "$want" ] || fail "$f has $got thread entry points, audited count is $want — \
+new spawn sites must be cfg-gated on $FEATURE and the audited count updated here"
+    grep -q "feature = \"$FEATURE\"" "$f" \
+        || fail "$f spawns threads but carries no $FEATURE cfg-gate"
+done
+
 # Does anything under CI control enable the feature? Look at workflows and
 # any Makefile/scripts that invoke cargo. Compile-only `cargo check` lines
 # are exempt: type-checking the unsafe impls and the threaded scatter runs
@@ -62,19 +89,19 @@ fi
 
 echo "xla audit gate: $enabled_by builds with $FEATURE — verifying the audit trail"
 
-# 2a. Cargo.toml must pin a rev (a floating branch cannot be audited).
+# 3a. Cargo.toml must pin a rev (a floating branch cannot be audited).
 pinned=$(grep -E '^xla *=' "$CARGO_TOML" | grep -oE 'rev *= *"[0-9a-f]{7,40}"' \
     | grep -oE '[0-9a-f]{7,40}' || true)
 [ -n "$pinned" ] || fail "$enabled_by enables $FEATURE but $CARGO_TOML does not pin xla to a rev (still floating on a branch)"
 
-# 2b. The pinned rev must be the audited one.
+# 3b. The pinned rev must be the audited one.
 audited=$(grep -vE '^\s*(#|$)' "$AUDIT_FILE" | head -n 1 | tr -d '[:space:]')
 [ -n "$audited" ] && [ "$audited" != "none" ] \
     || fail "$enabled_by enables $FEATURE but $AUDIT_FILE records no audited rev"
 [ "$pinned" = "$audited" ] \
     || fail "pinned xla rev ($pinned) != audited rev ($audited) in $AUDIT_FILE"
 
-# 2c. If a lockfile is checked in, it must resolve xla to the audited rev.
+# 3c. If a lockfile is checked in, it must resolve xla to the audited rev.
 for lock in rust/Cargo.lock Cargo.lock; do
     [ -f "$lock" ] || continue
     if ! grep -A2 '^name = "xla"' "$lock" | grep -q "$audited"; then

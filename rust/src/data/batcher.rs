@@ -21,7 +21,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::data::corpus::Example;
-use crate::runtime::Runtime;
+use crate::runtime::{upload_f32_opt, upload_i32_opt, Runtime, TransferMeter};
 use crate::util::rng::Rng;
 
 /// One device-shaped batch: flattened `[b, t]` row-major buffers.
@@ -168,12 +168,22 @@ pub struct StagedBatch {
 impl StagedBatch {
     /// Upload every micro-batch of `global` (tokens/targets/mask each).
     pub fn upload(rt: &Runtime, global: &GlobalBatch) -> Result<StagedBatch> {
+        Self::upload_metered(rt, None, global)
+    }
+
+    /// [`StagedBatch::upload`] that additionally tallies every uploaded
+    /// byte into the owning run's exact [`TransferMeter`].
+    pub fn upload_metered(
+        rt: &Runtime,
+        meter: Option<&TransferMeter>,
+        global: &GlobalBatch,
+    ) -> Result<StagedBatch> {
         let mut micro = Vec::with_capacity(global.micro.len());
         for mb in &global.micro {
             micro.push(StagedMicro {
-                tokens: rt.upload_i32(&mb.tokens, &[mb.b, mb.t])?,
-                targets: rt.upload_i32(&mb.targets, &[mb.b, mb.t])?,
-                mask: rt.upload_f32(&mb.mask, &[mb.b, mb.t])?,
+                tokens: upload_i32_opt(rt, meter, &mb.tokens, &[mb.b, mb.t])?,
+                targets: upload_i32_opt(rt, meter, &mb.targets, &[mb.b, mb.t])?,
+                mask: upload_f32_opt(rt, meter, &mb.mask, &[mb.b, mb.t])?,
             });
         }
         Ok(StagedBatch { micro, total_tokens: global.total_tokens() })
@@ -188,6 +198,9 @@ impl StagedBatch {
 /// busy.
 pub struct BatchStager {
     rt: Arc<Runtime>,
+    /// The owning run's exact per-run meter, if any (staged uploads are
+    /// that run's traffic, whichever step they overlap).
+    meter: Option<Arc<TransferMeter>>,
     staged: Option<StagedBatch>,
     /// Steps that found their batch already staged (pipeline hit rate).
     hits: u64,
@@ -196,7 +209,15 @@ pub struct BatchStager {
 
 impl BatchStager {
     pub fn new(rt: &Arc<Runtime>) -> BatchStager {
-        BatchStager { rt: Arc::clone(rt), staged: None, hits: 0, misses: 0 }
+        BatchStager { rt: Arc::clone(rt), meter: None, staged: None, hits: 0, misses: 0 }
+    }
+
+    /// A stager whose uploads also tally into the owning run's exact
+    /// [`TransferMeter`] (what `StepEngine` constructs).
+    pub fn with_meter(rt: &Arc<Runtime>, meter: &Arc<TransferMeter>) -> BatchStager {
+        let mut s = Self::new(rt);
+        s.meter = Some(Arc::clone(meter));
+        s
     }
 
     /// The batch for the step starting now: the prefetched one when
@@ -213,7 +234,7 @@ impl BatchStager {
             }
             None => {
                 self.misses += 1;
-                StagedBatch::upload(&self.rt, &next())
+                StagedBatch::upload_metered(&self.rt, self.meter.as_deref(), &next())
             }
         }
     }
@@ -223,7 +244,8 @@ impl BatchStager {
     /// staged.
     pub fn prefetch(&mut self, mut next: impl FnMut() -> GlobalBatch) -> Result<()> {
         if self.staged.is_none() {
-            self.staged = Some(StagedBatch::upload(&self.rt, &next())?);
+            self.staged =
+                Some(StagedBatch::upload_metered(&self.rt, self.meter.as_deref(), &next())?);
         }
         Ok(())
     }

@@ -3,6 +3,8 @@
 //! The paper finds both correlate with τ* but only through the confounder
 //! of training time.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::FfConfig;
@@ -38,16 +40,22 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
 
     // The paper pools stages from across training; a single quick-scale
     // run yields only a handful. Run a small grid of seed replicas —
-    // independent runs fanned out through the scheduler pool — and pool
-    // every stage into the correlation estimates. Replica order is fixed,
-    // so the report is identical at any `--jobs` level.
+    // independent runs fanned out through the scheduler (pool, or run
+    // queue under --queue) — and pool every stage into the correlation
+    // estimates. Replica order is fixed, so the report is identical at
+    // any `--jobs` level. The closure owns its captures (queue
+    // submissions outlive this frame).
     let n_seeds: u64 = if ctx.scale.full { 3 } else { 2 };
-    let per_seed = ctx.pool().scatter((0..n_seeds).collect(), |_i, k| {
-        let mut cfg = run_config(ctx, &artifact, "medical", FfConfig::default())?;
+    let cell_ctx = ctx.shared();
+    let cell_artifact = artifact.clone();
+    let cell_base = Arc::clone(&base);
+    let per_seed = ctx.scatter((0..n_seeds).collect(), move |_i, k| {
+        let ctx = &cell_ctx;
+        let mut cfg = run_config(ctx, &cell_artifact, "medical", FfConfig::default())?;
         cfg.max_steps = if ctx.scale.full { 120 } else { 60 };
         cfg.seed = cfg.seed.wrapping_add(k);
         let max_steps = cfg.max_steps;
-        let mut t = trainer_for(ctx, cfg.clone(), Some(base.as_ref()))?;
+        let mut t = trainer_for(ctx, cfg.clone(), Some(cell_base.as_ref()))?;
         t.run(&StopRule::MaxSteps(max_steps))?;
         Ok((cfg.seed, t.ffc.stages.clone()))
     })?;

@@ -12,9 +12,11 @@ use crate::util::json::Json;
 
 fn run_grid(ctx: &ExpContext, mode: &str, id: &str) -> Result<Json> {
     // Every (model, task) cell is an independent pair-run; fan them out
-    // through the scheduler pool. Pre-warm each model's W0 sequentially
-    // first so workers share the in-memory Arc'd copy instead of
-    // serializing on the pretrain build lock at fan-out time.
+    // through the scheduler (worker pool, or the run queue under
+    // --queue). Pre-warm each model's W0 sequentially first so workers
+    // share the in-memory Arc'd copy instead of serializing on the
+    // pretrain build lock at fan-out time. The closure owns its captures
+    // (Arc'd context, owned mode) — queue submissions outlive this frame.
     let mut cells: Vec<(String, &'static str)> = Vec::new();
     for model in &ctx.scale.models {
         ctx.pretrained(model)?;
@@ -22,7 +24,11 @@ fn run_grid(ctx: &ExpContext, mode: &str, id: &str) -> Result<Json> {
             cells.push((model.clone(), task));
         }
     }
-    let rows = ctx.pool().scatter(cells, |_i, (model, task)| {
+    let cell_ctx = ctx.shared();
+    let cell_mode = mode.to_string();
+    let rows = ctx.scatter(cells, move |_i, (model, task)| {
+        let ctx = &cell_ctx;
+        let mode = cell_mode.as_str();
         let artifact = artifact_key(&model, mode, task);
         let pair = run_pair(ctx, &artifact, &model, task)?;
         // The row is assembled on the worker: only plain JSON crosses back

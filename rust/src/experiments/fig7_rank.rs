@@ -15,12 +15,15 @@ pub const RANKS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let model = "ff-tiny"; // paper: Pythia-1.4B
     // Each rank cell is an independent pair-run over its own artifact:
-    // fan the sweep out through the scheduler pool (`--jobs N`). Results
-    // come back in RANKS order regardless of completion order, so the
-    // report is byte-identical at any jobs level. W0 is pre-warmed once so
-    // workers share the in-memory Arc'd copy read-only.
+    // fan the sweep out through the scheduler (`--jobs N`; `--queue`
+    // routes it through the run queue). Results come back in RANKS order
+    // regardless of completion order, so the report is byte-identical at
+    // any jobs level. W0 is pre-warmed once so workers share the
+    // in-memory Arc'd copy read-only.
     ctx.pretrained(model)?;
-    let rows = ctx.pool().scatter(RANKS.to_vec(), |_i, rank| {
+    let cell_ctx = ctx.shared();
+    let rows = ctx.scatter(RANKS.to_vec(), move |_i, rank| {
+        let ctx = &cell_ctx;
         let artifact = format!("{model}_lora_r{rank}");
         let pair = run_pair(ctx, &artifact, model, "medical")?;
         Ok(Json::obj()

@@ -20,13 +20,13 @@ pub mod qa_benchmark;
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError, Weak};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::model::tensor::Tensor;
 use crate::runtime::Runtime;
-use crate::sched::{ArtifactCache, WorkerPool};
+use crate::sched::{ArtifactCache, RunPoll, RunQueue, WorkerPool};
 use crate::train::pretrain::ensure_pretrained;
 
 /// Scale knobs: `quick` (default; minutes on one core) vs `full`
@@ -75,6 +75,90 @@ type W0Map = Arc<BTreeMap<String, Tensor>>;
 /// inside `ensure_pretrained` — deliberately, for determinism.)
 type W0Slot = Arc<Mutex<Option<W0Map>>>;
 
+/// Shared body of the two cfg-split [`ExpContext::scatter`] variants —
+/// they differ only in trait bounds (the thread-safety gate adds `Send`/
+/// `Sync`), so the routing logic lives once here and cannot diverge
+/// between builds.
+macro_rules! scatter_via_queue {
+    ($ctx:expr, $items:expr, $f:expr) => {{
+        let q = RunQueue::new($ctx.jobs);
+        let f = Arc::new($f);
+        let handles: Vec<_> = $items
+            .into_iter()
+            .enumerate()
+            .map(|(i, item)| {
+                let f = Arc::clone(&f);
+                q.submit("grid", 0, move |_| f(i, item))
+            })
+            .collect();
+        // Fail-fast, approximating `WorkerPool::scatter`: with real
+        // workers in flight, watch completions in *completion* order and
+        // cancel every sibling the moment any cell fails, instead of
+        // blocking straight into the submission-order joins (where an
+        // early long cell hides the failure while workers keep popping
+        // doomed ones). Cancel stops still-QUEUED cells outright; cells
+        // already mid-training finish (the grid closure has no hook into
+        // its trainers' cancel flags) and their results are discarded —
+        // weaker than the pool's stop-new-pops, stronger than nothing.
+        // (Inline-drain builds have no workers: cells only run inside
+        // `join`, which is already fail-fast there.)
+        if q.workers() > 0 {
+            loop {
+                if handles.iter().any(|h| h.poll() == RunPoll::Failed) {
+                    for h in &handles {
+                        h.cancel();
+                    }
+                    break;
+                }
+                let live = handles
+                    .iter()
+                    .any(|h| matches!(h.poll(), RunPoll::Queued | RunPoll::Running));
+                if !live {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+        // Join in submission order. The first error observed is the
+        // lowest-index failure (every earlier handle joined Ok or
+        // cancelled); everything after it is cancelled and reaped so the
+        // queue is quiescent before returning.
+        let mut out = Vec::with_capacity(handles.len());
+        let mut iter = handles.into_iter();
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut saw_cancelled = false;
+        for h in iter.by_ref() {
+            match h.join() {
+                Ok(r) => match r.done() {
+                    Some(x) => out.push(x),
+                    None => saw_cancelled = true,
+                },
+                Err(e) => {
+                    first_err = Some(e);
+                    break;
+                }
+            }
+        }
+        for rest in iter {
+            rest.cancel();
+            if let Err(e) = rest.join() {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            Err(e)
+        } else if saw_cancelled {
+            // no real failure, yet a cell was cancelled out from under
+            // the grid — surface it rather than return a short vector
+            Err(anyhow!("grid cell was cancelled before completing"))
+        } else {
+            Ok(out)
+        }
+    }};
+}
+
 pub struct ExpContext {
     pub rt: Arc<Runtime>,
     pub artifacts_root: PathBuf,
@@ -90,10 +174,19 @@ pub struct ExpContext {
     /// cells fan out through [`ExpContext::pool`]; results are
     /// submission-ordered, so reports are byte-identical at any level.
     pub jobs: usize,
+    /// Route grid fan-outs through the long-lived multi-tenant
+    /// [`RunQueue`] instead of a per-batch [`WorkerPool`] (`--queue` on
+    /// the experiment CLI) — exercises the serving-shaped scheduler path
+    /// end-to-end; results stay submission-ordered and byte-identical.
+    pub use_queue: bool,
     /// In-memory W0 cache: one `Arc`'d parameter map per model, so N
     /// concurrent cells share one copy instead of each re-reading and
     /// re-allocating the checkpoint from disk.
     w0: Mutex<BTreeMap<String, W0Slot>>,
+    /// Back-reference to the owning `Arc` (contexts are always
+    /// `Arc`-owned, see [`ExpContext::new`]): what [`ExpContext::shared`]
+    /// upgrades so queue-routed grid closures can own the context.
+    self_ref: Weak<ExpContext>,
 }
 
 impl ExpContext {
@@ -102,21 +195,71 @@ impl ExpContext {
         reports_dir: PathBuf,
         scale: Scale,
         jobs: usize,
-    ) -> Result<ExpContext> {
-        Ok(ExpContext {
-            rt: Runtime::cpu()?,
+        use_queue: bool,
+    ) -> Result<Arc<ExpContext>> {
+        let rt = Runtime::cpu()?;
+        Ok(Arc::new_cyclic(|weak| ExpContext {
+            rt,
             artifacts: ArtifactCache::new(artifacts_root.clone()),
             artifacts_root,
             reports_dir,
             scale,
             jobs: WorkerPool::new(jobs).jobs(),
+            use_queue,
             w0: Mutex::new(BTreeMap::new()),
-        })
+            self_ref: weak.clone(),
+        }))
     }
 
     /// The worker pool grid harnesses fan out through.
     pub fn pool(&self) -> WorkerPool {
         WorkerPool::new(self.jobs)
+    }
+
+    /// This context as an owning handle — always available because
+    /// [`ExpContext::new`] only ever hands out `Arc`s. Queue-routed grid
+    /// closures capture this (submissions to the long-lived [`RunQueue`]
+    /// must own everything they touch).
+    pub fn shared(&self) -> Arc<ExpContext> {
+        self.self_ref.upgrade().expect("ExpContext is always Arc-owned")
+    }
+
+    /// Fan independent grid cells out in submission order: through the
+    /// long-lived multi-tenant [`RunQueue`] when `--queue` is set (the
+    /// serving-shaped path — submissions under tenant `"grid"`, equal
+    /// priority, joined in submission order), otherwise through a
+    /// per-batch [`WorkerPool::scatter`]. Both routes return results in
+    /// submission order with the lowest-index error first, so reports
+    /// are byte-identical whichever scheduler ran them. Queue
+    /// submissions must own their captures (`'static`): closures clone
+    /// [`ExpContext::shared`] instead of borrowing the context.
+    #[cfg(feature = "xla-shared-client")]
+    pub fn scatter<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> Result<R> + Send + Sync + 'static,
+    {
+        if !self.use_queue {
+            return self.pool().scatter(items, f);
+        }
+        scatter_via_queue!(self, items, f)
+    }
+
+    /// Inline-drain variant (no `xla-shared-client` feature, hence no
+    /// `Send` bounds): identical routing and ordering contract — see the
+    /// gated variant above and `crate::sched`, §Thread-safety gate.
+    #[cfg(not(feature = "xla-shared-client"))]
+    pub fn scatter<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
+    where
+        T: 'static,
+        R: 'static,
+        F: Fn(usize, T) -> Result<R> + 'static,
+    {
+        if !self.use_queue {
+            return self.pool().scatter(items, f);
+        }
+        scatter_via_queue!(self, items, f)
     }
 
     /// The pretrained W0 for `model`, shared read-only across harness

@@ -21,18 +21,23 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     let n_items = if ctx.scale.full { 500 } else { 150 }; // paper: 1000
 
     // The two legs (regular vs FF finetune, then QA scoring) share nothing
-    // but the read-only W0 — fan them out through the scheduler pool. The
-    // result vector stays [regular, ff] by submission order.
-    let accs = ctx.pool().scatter(vec![false, true], |_i, ff_on| {
+    // but the read-only W0 — fan them out through the scheduler (pool, or
+    // run queue under --queue). The result vector stays [regular, ff] by
+    // submission order; the closure owns its captures.
+    let cell_ctx = ctx.shared();
+    let cell_artifact = artifact.clone();
+    let cell_base = std::sync::Arc::clone(&base);
+    let accs = ctx.scatter(vec![false, true], move |_i, ff_on| {
+        let ctx = &cell_ctx;
         let ff = if ff_on {
             FfConfig::default()
         } else {
             FfConfig { enabled: false, ..FfConfig::default() }
         };
-        let cfg = run_config(ctx, &artifact, "medical", ff)?;
+        let cfg = run_config(ctx, &cell_artifact, "medical", ff)?;
         let steps = cfg.max_steps;
         let seq_len = 64;
-        let mut t = trainer_for(ctx, cfg, Some(base.as_ref()))?;
+        let mut t = trainer_for(ctx, cfg, Some(cell_base.as_ref()))?;
         t.run(&StopRule::MaxSteps(steps))?;
 
         let bench = QaBenchmark::generate(512, seq_len, n_items, 0x9a);

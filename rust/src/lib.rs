@@ -13,7 +13,9 @@
 //!   (loss scalars drain every K steps instead of blocking each
 //!   micro-batch), the concurrent run scheduler (`sched` — a worker pool
 //!   that fans whole training runs out over host threads against one
-//!   shared runtime), plus the data pipeline, experiments, and the PJRT
+//!   shared runtime, and a long-lived multi-tenant `RunQueue` with
+//!   priorities, poll/join/cancel handles, and exact per-tenant transfer
+//!   accounting), plus the data pipeline, experiments, and the PJRT
 //!   runtime that executes AOT-compiled artifacts.
 //! * **L2 (python/compile/model.py)** — the transformer fwd/bwd in JAX with
 //!   LoRA / DoRA / full-rank train modes, lowered once to HLO text.

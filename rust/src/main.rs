@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   train        one training run (artifact × task, FF on/off)
 //!   experiment   run one paper-figure harness (or --all)
+//!   queue        long-lived multi-tenant run queue: submit a manifest of
+//!                runs (priorities + tenants), report each run as its
+//!                join returns, print per-tenant accounting
 //!   pretrain     (re)build the cached W0 checkpoint for a model
 //!   list         artifacts, experiments, presets
 //!   selftest     fast end-to-end smoke check of the whole stack
@@ -10,18 +13,22 @@
 //! Examples:
 //!   fastforward experiment fig2a
 //!   fastforward experiment --all --full
-//!   fastforward experiment fig7 --jobs 4
+//!   fastforward experiment fig7 --jobs 4 --queue
 //!   fastforward train --artifact ff-tiny_lora_r8 --task medical --epochs 2
 //!   fastforward train --artifact ff-tiny_lora_r8 --task medical --no-ff
 //!   fastforward train --artifact ff-tiny_lora_r8 --task medical --runs 4 --jobs 4
+//!   fastforward queue --manifest runs.txt --jobs 4
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use fastforward::config::{presets, FfConfig};
 use fastforward::experiments::{self, ExpContext, Scale};
+use fastforward::model::tensor::Tensor;
 use fastforward::runtime::{ArtifactIndex, Runtime};
-use fastforward::sched::{ArtifactCache, RunSpec, WorkerPool};
+use fastforward::sched::{self, ArtifactCache, RunQueue, RunResult, RunSpec, WorkerPool};
 use fastforward::train::pretrain::ensure_pretrained;
 use fastforward::train::trainer::{StopRule, Trainer};
 use fastforward::util::args::Args;
@@ -38,18 +45,31 @@ fn main() -> ExitCode {
     }
 }
 
+/// Model name encoded in an artifact key (`ff-tiny_lora_r8` → `ff-tiny`)
+/// — the single place the key naming scheme is parsed.
+fn model_of(artifact: &str) -> &str {
+    artifact.split('_').next().unwrap_or("ff-tiny")
+}
+
 fn usage() -> &'static str {
-    "usage: fastforward <train|experiment|pretrain|list|selftest> [options]\n\
+    "usage: fastforward <train|experiment|queue|pretrain|list|selftest> [options]\n\
      common options: --artifacts DIR (default ./artifacts) --reports DIR (default ./reports)\n\
      train:      --artifact KEY --task medical|instruct|chat [--epochs N] [--no-ff]\n\
                  [--steps N] [--seed S] [--t-interval N] [--adaptive] [--no-pretrain]\n\
                  [--runs K] [--jobs N]   (K seed-replica runs on N scheduler workers;\n\
                  --jobs only applies when --runs > 1)\n\
-     experiment: <id>|--all [--full] [--jobs N]   (ids: fastforward list --experiments)\n\
+     experiment: <id>|--all [--full] [--jobs N] [--queue]   (ids: fastforward list\n\
+                 --experiments; --queue routes grid cells through the run queue)\n\
+     queue:      --manifest FILE [--jobs N]   (long-lived multi-tenant run queue:\n\
+                 submissions pop by priority, FIFO within a class; results print\n\
+                 per join; per-tenant runs/steps/FLOPs/exact-bytes accounting.\n\
+                 manifest lines: tenant priority artifact task steps seed on|off)\n\
      pretrain:   --model NAME [--steps N]\n\
-     selftest:   [--jobs N]   (N > 1 also exercises the concurrent scheduler)\n\
+     selftest:   [--jobs N] [--queue]   (N > 1 exercises the concurrent scheduler;\n\
+                 --queue adds a run-queue leg: priorities, cancel, tenant totals)\n\
      note: --jobs > 1 needs a build with --features xla-shared-client (pinned,\n\
-           audited xla rev — see rust/XLA_AUDIT); otherwise runs are sequential\n"
+           audited xla rev — see rust/XLA_AUDIT); otherwise the pool runs\n\
+           sequentially and the queue drains inline at join, in priority order\n"
 }
 
 fn run() -> anyhow::Result<()> {
@@ -60,6 +80,7 @@ fn run() -> anyhow::Result<()> {
     match args.subcommand.clone().as_deref() {
         Some("train") => cmd_train(&mut args, artifacts),
         Some("experiment") => cmd_experiment(&mut args, artifacts, reports),
+        Some("queue") => cmd_queue(&mut args, artifacts),
         Some("pretrain") => cmd_pretrain(&mut args, artifacts),
         Some("list") => cmd_list(&mut args, artifacts),
         Some("selftest") => cmd_selftest(&mut args, artifacts),
@@ -100,7 +121,7 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     let max_steps = cfg.max_steps;
 
     let rt = Runtime::cpu()?;
-    let model = artifact.split('_').next().unwrap_or("ff-tiny").to_string();
+    let model = model_of(&artifact).to_string();
     let base = if no_pretrain {
         None
     } else {
@@ -192,12 +213,13 @@ fn cmd_train(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
 fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyhow::Result<()> {
     let all = args.flag("all");
     let full = args.flag("full");
+    let use_queue = args.flag("queue");
     let jobs = args.opt_usize("jobs", 1).map_err(|e| anyhow::anyhow!(e))?;
     let id = args.positional.first().cloned();
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     let scale = if full { Scale::full() } else { Scale::quick() };
-    let ctx = ExpContext::new(artifacts, reports, scale, jobs)?;
+    let ctx = ExpContext::new(artifacts, reports, scale, jobs, use_queue)?;
     if jobs > ctx.jobs {
         warn_!(
             "--jobs {jobs} requested, but this build has no thread fan-out \
@@ -207,6 +229,9 @@ fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyh
     }
     if ctx.jobs > 1 {
         info!("grid harnesses fan out on {} scheduler workers (--jobs)", ctx.jobs);
+    }
+    if use_queue {
+        info!("grid cells route through the multi-tenant run queue (--queue)");
     }
     if all {
         let mut failed = Vec::new();
@@ -225,6 +250,152 @@ fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyh
         .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (see: fastforward list --experiments)"))?;
     info!("experiment {id}: {desc}");
     f(&ctx)
+}
+
+/// One parsed manifest line of the `queue` subcommand.
+struct QueuedRun {
+    tenant: String,
+    priority: i32,
+    artifact: String,
+    task: String,
+    steps: usize,
+    seed: u64,
+    ff: bool,
+}
+
+fn parse_manifest(text: &str) -> anyhow::Result<Vec<QueuedRun>> {
+    let mut out = Vec::new();
+    for (no, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        anyhow::ensure!(
+            f.len() == 7,
+            "manifest line {}: expected 7 fields \
+             (tenant priority artifact task steps seed on|off), got {}",
+            no + 1,
+            f.len()
+        );
+        let ff = match f[6] {
+            "on" => true,
+            "off" => false,
+            other => anyhow::bail!("manifest line {}: ff must be on|off, got '{other}'", no + 1),
+        };
+        out.push(QueuedRun {
+            tenant: f[0].to_string(),
+            priority: f[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad priority '{}'", no + 1, f[1]))?,
+            artifact: f[2].to_string(),
+            task: f[3].to_string(),
+            steps: f[4]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad steps '{}'", no + 1, f[4]))?,
+            seed: f[5]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad seed '{}'", no + 1, f[5]))?,
+            ff,
+        });
+    }
+    anyhow::ensure!(!out.is_empty(), "manifest has no runs");
+    Ok(out)
+}
+
+fn cmd_queue(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
+    let manifest = args.opt("manifest").ok_or_else(|| {
+        anyhow::anyhow!(
+            "--manifest FILE required (lines: tenant priority artifact task steps seed on|off)"
+        )
+    })?;
+    let jobs = args.opt_usize("jobs", sched::default_jobs()).map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let runs = parse_manifest(&std::fs::read_to_string(&manifest)?)?;
+    let rt = Runtime::cpu()?;
+    // Pre-build each distinct model's W0 once, sequentially, so queued
+    // runs share the in-memory Arc instead of racing the build lock.
+    let mut bases: BTreeMap<String, Arc<BTreeMap<String, Tensor>>> = BTreeMap::new();
+    for r in &runs {
+        let model = model_of(&r.artifact).to_string();
+        if let std::collections::btree_map::Entry::Vacant(slot) = bases.entry(model) {
+            let base = Arc::new(ensure_pretrained(&rt, &artifacts, slot.key(), None)?);
+            slot.insert(base);
+        }
+    }
+    let cache = Arc::new(ArtifactCache::new(artifacts));
+    let q = RunQueue::new(jobs);
+    info!(
+        "queue: {} submissions, {} worker(s){}",
+        runs.len(),
+        jobs,
+        if sched::threads_enabled() {
+            ""
+        } else {
+            " (no thread fan-out in this build: inline drain, priority order)"
+        }
+    );
+    let mut handles = Vec::new();
+    for (i, r) in runs.into_iter().enumerate() {
+        let base = bases.get(model_of(&r.artifact)).cloned();
+        let mut cfg = presets::train_config(&r.artifact, &r.task, 1)?;
+        cfg.seed = r.seed;
+        cfg.ff = FfConfig { enabled: r.ff, ..FfConfig::default() };
+        let label = format!("{}/{}#{i}", r.tenant, r.artifact);
+        let spec = RunSpec {
+            label: label.clone(),
+            cfg,
+            stop: StopRule::MaxSteps(r.steps),
+            base,
+            drain_interval: None,
+        };
+        handles.push((label, q.submit_run(&rt, &cache, spec, r.priority, &r.tenant)));
+    }
+    // Report results in submission order: each join blocks until that
+    // run finishes, so under real fan-out a completed later submission
+    // waits for earlier ones to print (completion-order streaming is an
+    // open ROADMAP item).
+    let mut failed = 0usize;
+    for (label, h) in handles {
+        match h.join() {
+            Ok(RunResult::Done(o)) => println!(
+                "done      {label}: test loss {:.4} | {} adam + {} sim steps | {:.1}s",
+                o.summary.final_test_loss, o.summary.adam_steps, o.summary.sim_steps, o.seconds
+            ),
+            Ok(RunResult::Cancelled(Some(o))) => println!(
+                "cancelled {label}: stopped at step boundary after {} adam steps",
+                o.summary.adam_steps
+            ),
+            Ok(RunResult::Cancelled(None)) => {
+                println!("cancelled {label}: never started");
+            }
+            Err(e) => {
+                failed += 1;
+                println!("FAILED    {label}: {e:#}");
+            }
+        }
+    }
+    println!("per-tenant accounting:");
+    for (name, t) in q.tenants() {
+        println!(
+            "  {name}: {} submitted, {} done, {} cancelled, {} failed | \
+             {} adam + {} sim steps, {} FF stages | {:.3e} FLOPs | {:.1}s \
+             worker time | {}",
+            t.submitted,
+            t.completed,
+            t.cancelled,
+            t.failed,
+            t.adam_steps,
+            t.sim_steps,
+            t.ff_stages,
+            t.flops as f64,
+            t.seconds,
+            t.transfers.report()
+        );
+    }
+    anyhow::ensure!(failed == 0, "{failed} queued run(s) failed");
+    Ok(())
 }
 
 fn cmd_pretrain(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
@@ -293,14 +464,26 @@ fn cmd_list(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
 
 fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     let requested = args.opt_usize("jobs", 2).map_err(|e| anyhow::anyhow!(e))?.max(1);
+    let with_queue = args.flag("queue");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let total = if with_queue { 6 } else { 5 };
+    // The scheduler gate is part of the banner so degraded (sequential)
+    // CI runs are visible in the logs, not silently green.
+    println!(
+        "selftest: scheduler thread fan-out {}",
+        if sched::threads_enabled() {
+            "ENABLED (xla-shared-client feature)"
+        } else {
+            "disabled (xla-shared-client off — pool and queue run sequentially)"
+        }
+    );
     let rt = Runtime::cpu()?;
-    println!("[1/5] artifact index + manifest cross-check");
+    println!("[1/{total}] artifact index + manifest cross-check");
     let idx = ArtifactIndex::load(&artifacts)?;
     let man = idx.manifest("ff-tiny_lora_r8")?;
     println!("      ok: {} artifacts, checked '{}'", idx.entries.len(), man.key);
 
-    println!("[2/5] pretrain (cached) + 12 SGD steps");
+    println!("[2/{total}] pretrain (cached) + 12 SGD steps");
     let base = ensure_pretrained(&rt, &artifacts, "ff-tiny", Some(60))?;
     let mut cfg = presets::train_config("ff-tiny_lora_r8", "medical", 1)?;
     cfg.train_examples = 256;
@@ -316,14 +499,14 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     anyhow::ensure!(last < first, "test loss did not decrease ({first} → {last})");
     println!("      ok: test loss {first:.4} → {last:.4}");
 
-    println!("[3/5] fast-forward stage");
+    println!("[3/{total}] fast-forward stage");
     let stats = t.ff_stage()?;
     println!(
         "      ok: τ*={} probes={} val {:.4}→{:.4}",
         stats.tau_star, stats.probes, stats.baseline_loss, stats.final_loss
     );
 
-    println!("[4/5] pallas artifact parity");
+    println!("[4/{total}] pallas artifact parity");
     let art = fastforward::runtime::Artifact::load(&rt, &artifacts.join("ff-tiny_lora_r8_pallas"))?;
     anyhow::ensure!(art.manifest.config.use_pallas);
     art.program("eval_loss")?;
@@ -338,12 +521,12 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
         // temp-then-rename fix closed) — not cross-thread determinism,
         // which needs the xla-shared-client feature.
         println!(
-            "[5/5] scheduler rerun determinism — NOTE: built without the \
+            "[5/{total}] scheduler rerun determinism — NOTE: built without the \
              xla-shared-client feature, --jobs {requested} degrades to \
              sequential execution (see rust/XLA_AUDIT)"
         );
     } else {
-        println!("[5/5] concurrent scheduler determinism ({jobs} worker(s) vs 1)");
+        println!("[5/{total}] concurrent scheduler determinism ({jobs} worker(s) vs 1)");
     }
     let base = std::sync::Arc::new(base);
     let specs = |tag: &str| -> Vec<RunSpec> {
@@ -364,7 +547,7 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
             })
             .collect()
     };
-    let cache = ArtifactCache::new(artifacts);
+    let cache = Arc::new(ArtifactCache::new(artifacts));
     let seq = WorkerPool::new(1).run_all(&rt, &cache, specs("seq"))?;
     let par = pool.run_all(&rt, &cache, specs("par"))?;
     for (a, b) in seq.outputs.iter().zip(par.outputs.iter()) {
@@ -381,6 +564,77 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
         seq.wall_seconds,
         par.wall_seconds
     );
+
+    if with_queue {
+        println!(
+            "[6/{total}] multi-tenant run queue: priorities, cancel, join, \
+             exact tenant accounting"
+        );
+        let before = rt.stats.snapshot();
+        // Paused queue: submit a cold backlog (two tenants, mixed
+        // priorities, one cancel victim), cancel before releasing so
+        // cancel-before-start is deterministic in every build.
+        let q = RunQueue::new_paused(requested);
+        let queue_specs = specs("queue");
+        let mut handles = Vec::new();
+        for (i, spec) in queue_specs.into_iter().enumerate() {
+            let (tenant, priority) = if i == 0 { ("alice", 0) } else { ("bob", 1) };
+            handles.push(q.submit_run(&rt, &cache, spec, priority, tenant));
+        }
+        let victim_spec = {
+            let mut s = specs("victim");
+            s.truncate(1);
+            s.remove(0)
+        };
+        let victim = q.submit_run(&rt, &cache, victim_spec, 5, "alice");
+        victim.cancel();
+        q.release();
+        anyhow::ensure!(
+            victim.join()?.is_cancelled(),
+            "cancelled-before-start submission must join as Cancelled"
+        );
+        let mut outputs = Vec::new();
+        for h in handles {
+            match h.join()? {
+                RunResult::Done(o) => outputs.push(o),
+                RunResult::Cancelled(_) => anyhow::bail!("queue leg run came back cancelled"),
+            }
+        }
+        // Bit-identical to the pool's sequential batch for equal specs,
+        // and per-run exact meters equal too (per-engine metering).
+        for (a, b) in seq.outputs.iter().zip(outputs.iter()) {
+            anyhow::ensure!(
+                a.bit_identical(b),
+                "queue changed a run's losses: {} vs {}",
+                a.label,
+                b.label
+            );
+            anyhow::ensure!(
+                a.summary.transfers == b.summary.transfers,
+                "per-run exact meters diverged between pool and queue: {}",
+                b.label
+            );
+        }
+        // Tenant byte totals sum exactly to the global meter delta over
+        // the queue section (the queue is quiescent at both endpoints).
+        let delta = rt.stats.snapshot().since(&before);
+        let mut summed = fastforward::runtime::TransferSnapshot::default();
+        for t in q.tenants().values() {
+            summed = summed.plus(&t.transfers);
+        }
+        anyhow::ensure!(
+            summed == delta,
+            "tenant transfer totals ({summed:?}) != global delta ({delta:?})"
+        );
+        let alice = q.tenant("alice");
+        anyhow::ensure!(alice.cancelled == 1, "alice's victim must count as cancelled");
+        println!(
+            "      ok: {} queued runs bit-identical to the pool, victim cancelled \
+             before start, tenant bytes sum exactly to the global delta ({})",
+            outputs.len(),
+            delta.report()
+        );
+    }
     println!("selftest passed");
     Ok(())
 }

@@ -20,7 +20,7 @@
 use anyhow::{ensure, Result};
 
 use crate::model::tensor::Tensor;
-use crate::runtime::{InputBuf, Program};
+use crate::runtime::{InputBuf, Program, TransferMeter};
 
 /// Device-resident micro-batch gradient accumulator (see module docs).
 ///
@@ -51,11 +51,13 @@ impl DeviceGradAccumulator {
     /// value. The first call adopts the buffers as the accumulator
     /// outright; later calls dispatch `accum_prog` (`acc + g`), donating
     /// the previous accumulator so its allocation is reused for the new
-    /// sum.
+    /// sum. `meter` is the owning run's exact [`TransferMeter`], if any:
+    /// accumulator donations are that run's traffic.
     pub fn add_raw_bufs(
         &mut self,
         accum_prog: &Program,
         grads: Vec<xla::PjRtBuffer>,
+        meter: Option<&TransferMeter>,
     ) -> Result<()> {
         if self.acc.is_empty() {
             self.acc = grads;
@@ -69,7 +71,7 @@ impl DeviceGradAccumulator {
             let mut inputs: Vec<InputBuf> = Vec::with_capacity(2 * grads.len());
             inputs.extend(std::mem::take(&mut self.acc).into_iter().map(InputBuf::Donated));
             inputs.extend(grads.iter().map(InputBuf::Borrowed));
-            self.acc = accum_prog.execute_raw_donated(inputs)?;
+            self.acc = accum_prog.execute_raw_donated_metered(inputs, meter)?;
             // `grads` buffers die here: their allocations free immediately
         }
         self.count += 1;
@@ -86,7 +88,7 @@ impl DeviceGradAccumulator {
         grads: Vec<xla::PjRtBuffer>,
         loss: f32,
     ) -> Result<()> {
-        self.add_raw_bufs(accum_prog, grads)?;
+        self.add_raw_bufs(accum_prog, grads, None)?;
         self.loss_sum += loss as f64;
         Ok(())
     }
@@ -95,11 +97,12 @@ impl DeviceGradAccumulator {
     /// and return the mean-gradient buffers, resetting the accumulator.
     /// `inv_n` must hold `1.0 / count()` as a device scalar; a
     /// single-micro step skips the dispatch entirely (the mean of one
-    /// gradient is itself).
+    /// gradient is itself). `meter` as in [`Self::add_raw_bufs`].
     pub fn finalize_bufs(
         &mut self,
         finalize_prog: &Program,
         inv_n: &xla::PjRtBuffer,
+        meter: Option<&TransferMeter>,
     ) -> Result<Vec<xla::PjRtBuffer>> {
         assert!(self.count > 0, "finalize on empty accumulator");
         let acc = std::mem::take(&mut self.acc);
@@ -109,7 +112,7 @@ impl DeviceGradAccumulator {
             let mut inputs: Vec<InputBuf> = Vec::with_capacity(acc.len() + 1);
             inputs.extend(acc.into_iter().map(InputBuf::Donated));
             inputs.push(InputBuf::Borrowed(inv_n));
-            finalize_prog.execute_raw_donated(inputs)?
+            finalize_prog.execute_raw_donated_metered(inputs, meter)?
         };
         self.count = 0;
         self.loss_sum = 0.0;
@@ -125,7 +128,7 @@ impl DeviceGradAccumulator {
     ) -> Result<(Vec<xla::PjRtBuffer>, f32)> {
         assert!(self.count > 0, "finalize on empty accumulator");
         let mean_loss = (self.loss_sum / self.count as f64) as f32;
-        let mean = self.finalize_bufs(finalize_prog, inv_n)?;
+        let mean = self.finalize_bufs(finalize_prog, inv_n, None)?;
         Ok((mean, mean_loss))
     }
 }

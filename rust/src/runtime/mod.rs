@@ -121,6 +121,121 @@ impl TransferStats {
     }
 }
 
+/// Per-run (per-engine) **exact** transfer meter.
+///
+/// The shared [`Runtime::stats`] counters are a process-global total:
+/// under the scheduler (`crate::sched`) every concurrent run tallies into
+/// them, so a *window* over them attributes sibling traffic to whichever
+/// run happens to be measuring. A `TransferMeter` is the per-run half of
+/// the contract (`docs/transfer-contract.md` §5): one meter is owned by
+/// each `StepEngine` and threaded through every upload/download helper
+/// that moves that run's bytes (`ParamSet`, `BatchStager`, `EvalCache`,
+/// `PendingLoss`, donated program calls). Each crossing records into
+/// **both** this meter and the global stats, so per-run totals are exact
+/// at any `--jobs` level and the per-run meters of a quiescent batch sum
+/// exactly to the global delta (`rust/tests/sched_pool.rs`,
+/// `rust/tests/sched_queue.rs`).
+#[derive(Debug, Default)]
+pub struct TransferMeter {
+    local: TransferStats,
+}
+
+impl TransferMeter {
+    /// Fresh meter with zeroed counters, ready to share (`Arc`) across
+    /// the per-run components that move bytes on this run's behalf.
+    pub fn new() -> Arc<TransferMeter> {
+        Arc::new(TransferMeter::default())
+    }
+
+    pub fn record_upload(&self, bytes: usize) {
+        self.local.record_upload(bytes);
+    }
+
+    pub fn record_download(&self, bytes: usize) {
+        self.local.record_download(bytes);
+    }
+
+    pub fn record_donation(&self, bytes: usize) {
+        self.local.record_donation(bytes);
+    }
+
+    /// This run's exact traffic so far.
+    pub fn snapshot(&self) -> TransferSnapshot {
+        self.local.snapshot()
+    }
+
+    // -- metered wrappers over the runtime's upload/download helpers ------
+    // (the runtime call meters the *global* stats; the extra record here
+    // is the run-local tally — two counters, one crossing, no double
+    // count on either.)
+
+    pub fn upload_f32(
+        &self,
+        rt: &Runtime,
+        data: &[f32],
+        shape: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        let buf = rt.upload_f32(data, shape)?;
+        self.record_upload(std::mem::size_of_val(data));
+        Ok(buf)
+    }
+
+    pub fn upload_i32(
+        &self,
+        rt: &Runtime,
+        data: &[i32],
+        shape: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        let buf = rt.upload_i32(data, shape)?;
+        self.record_upload(std::mem::size_of_val(data));
+        Ok(buf)
+    }
+
+    pub fn upload_scalar(&self, rt: &Runtime, v: f32) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(rt, &[v], &[])
+    }
+
+    pub fn upload_tensor(&self, rt: &Runtime, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.upload_f32(rt, &t.data, &t.shape)
+    }
+
+    pub fn download_f32(&self, rt: &Runtime, buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let v = rt.download_f32(buf)?;
+        self.record_download(v.len() * 4);
+        Ok(v)
+    }
+}
+
+/// Upload through an *optional* per-run meter: the metered wrapper when
+/// the caller owns one, the plain (global-only) runtime helper
+/// otherwise. One code path for components that work in both modes
+/// (`BatchStager`, `EvalCache`), so the run-local byte accounting can
+/// never drift from the global metering.
+pub fn upload_f32_opt(
+    rt: &Runtime,
+    meter: Option<&TransferMeter>,
+    data: &[f32],
+    shape: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    match meter {
+        Some(m) => m.upload_f32(rt, data, shape),
+        None => rt.upload_f32(data, shape),
+    }
+}
+
+/// [`upload_f32_opt`]'s i32 twin.
+pub fn upload_i32_opt(
+    rt: &Runtime,
+    meter: Option<&TransferMeter>,
+    data: &[i32],
+    shape: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    match meter {
+        Some(m) => m.upload_i32(rt, data, shape),
+        None => rt.upload_i32(data, shape),
+    }
+}
+
 /// Immutable copy of [`TransferStats`] at one instant.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TransferSnapshot {
@@ -142,6 +257,19 @@ impl TransferSnapshot {
             downloaded_bytes: self.downloaded_bytes.saturating_sub(earlier.downloaded_bytes),
             donations: self.donations.saturating_sub(earlier.donations),
             donated_bytes: self.donated_bytes.saturating_sub(earlier.donated_bytes),
+        }
+    }
+
+    /// Element-wise sum with another snapshot (summing per-run meters
+    /// into per-tenant or whole-batch totals).
+    pub fn plus(&self, other: &TransferSnapshot) -> TransferSnapshot {
+        TransferSnapshot {
+            uploads: self.uploads + other.uploads,
+            uploaded_bytes: self.uploaded_bytes + other.uploaded_bytes,
+            downloads: self.downloads + other.downloads,
+            downloaded_bytes: self.downloaded_bytes + other.downloaded_bytes,
+            donations: self.donations + other.donations,
+            donated_bytes: self.donated_bytes + other.donated_bytes,
         }
     }
 
@@ -417,8 +545,21 @@ impl Program {
 
     /// Execute with pre-uploaded device buffers, downloading every output
     /// (hot path for programs whose outputs the coordinator consumes
-    /// host-side, e.g. per-micro-batch gradients).
+    /// host-side, e.g. per-micro-batch gradients). Downloads are metered
+    /// on the global [`Runtime::stats`] only; callers that own a per-run
+    /// [`TransferMeter`] use [`Program::execute_buffers_metered`].
     pub fn execute_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Outputs> {
+        self.execute_buffers_metered(inputs, None)
+    }
+
+    /// [`Program::execute_buffers`] that additionally records every
+    /// downloaded byte into a per-run [`TransferMeter`] (exact per-run
+    /// accounting under the scheduler — `docs/transfer-contract.md` §5).
+    pub fn execute_buffers_metered(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+        meter: Option<&TransferMeter>,
+    ) -> Result<Outputs> {
         self.check_arity(inputs.len())?;
         self.check_not_donating()?;
         let mut out = self
@@ -434,7 +575,7 @@ impl Program {
             let mut values = Vec::with_capacity(bufs.len());
             let mut leaf_decode_ok = true;
             for (i, buf) in bufs.iter().enumerate() {
-                match self.download_output(buf, i) {
+                match self.download_output_metered(buf, i, meter) {
                     Ok(v) => values.push(v),
                     Err(e) if bufs.len() == 1 => {
                         crate::debug!(
@@ -459,7 +600,7 @@ impl Program {
                 .unwrap()
                 .to_literal_sync()
                 .map_err(|e| anyhow!("downloading '{}' result: {e}", self.name))?;
-            return self.decode_tuple(tuple);
+            return self.decode_tuple(tuple, meter);
         }
         bail!(
             "program '{}' returned {} output buffers, manifest says {}",
@@ -513,6 +654,17 @@ impl Program {
     /// construction. Each donation is metered in [`Runtime::stats`] with
     /// the byte size the manifest records for that input slot.
     pub fn execute_raw_donated(&self, inputs: Vec<InputBuf>) -> Result<Vec<xla::PjRtBuffer>> {
+        self.execute_raw_donated_metered(inputs, None)
+    }
+
+    /// [`Program::execute_raw_donated`] that additionally records each
+    /// donation into a per-run [`TransferMeter`] (exact per-run
+    /// accounting under the scheduler).
+    pub fn execute_raw_donated_metered(
+        &self,
+        inputs: Vec<InputBuf>,
+        meter: Option<&TransferMeter>,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         self.check_arity(inputs.len())?;
         // Every slot the executable donates must be passed by value: a
         // borrowed buffer there would be invalidated while its owner still
@@ -546,7 +698,11 @@ impl Program {
         // pre-donation artifacts a Donated input is merely dropped, not
         // reused in place, and must not count as saved bytes.
         for &i in &self.spec.donated_inputs {
-            self.rt.stats.record_donation(self.spec.inputs[i].byte_len());
+            let bytes = self.spec.inputs[i].byte_len();
+            self.rt.stats.record_donation(bytes);
+            if let Some(m) = meter {
+                m.record_donation(bytes);
+            }
         }
         drop(inputs); // donated inputs are dead from here on
         let bufs = out.swap_remove(0);
@@ -575,6 +731,17 @@ impl Program {
     /// Selectively download one raw output buffer (index into
     /// `spec.outputs`) as f32s, validating dtype and element count.
     pub fn download_output(&self, buf: &xla::PjRtBuffer, index: usize) -> Result<Vec<f32>> {
+        self.download_output_metered(buf, index, None)
+    }
+
+    /// [`Program::download_output`] that additionally records the
+    /// downloaded bytes into a per-run [`TransferMeter`].
+    pub fn download_output_metered(
+        &self,
+        buf: &xla::PjRtBuffer,
+        index: usize,
+        meter: Option<&TransferMeter>,
+    ) -> Result<Vec<f32>> {
         let slot = self
             .spec
             .outputs
@@ -585,6 +752,9 @@ impl Program {
             .map_err(|e| anyhow!("downloading output '{}': {e}", slot.name))?;
         let v = Self::literal_to_f32(lit, slot)?;
         self.rt.stats.record_download(v.len() * 4);
+        if let Some(m) = meter {
+            m.record_download(v.len() * 4);
+        }
         Ok(v)
     }
 
@@ -611,7 +781,7 @@ impl Program {
         Ok(v)
     }
 
-    fn decode_tuple(&self, tuple: xla::Literal) -> Result<Outputs> {
+    fn decode_tuple(&self, tuple: xla::Literal, meter: Option<&TransferMeter>) -> Result<Outputs> {
         let parts = tuple
             .to_tuple()
             .map_err(|e| anyhow!("decomposing '{}' tuple: {e}", self.name))?;
@@ -627,6 +797,9 @@ impl Program {
         for (lit, slot) in parts.into_iter().zip(self.spec.outputs.iter()) {
             let v = Self::literal_to_f32(lit, slot)?;
             self.rt.stats.record_download(v.len() * 4);
+            if let Some(m) = meter {
+                m.record_download(v.len() * 4);
+            }
             values.push(v);
         }
         Ok(Outputs { slots: self.spec.outputs.clone(), values })
@@ -773,6 +946,64 @@ mod tests {
         assert_eq!(snap.downloaded_bytes, threads * per / 2 * 8);
         assert_eq!(snap.donations, threads * (per / 4), "10k/4 per thread");
         assert_eq!(snap.donated_bytes, threads * (per / 4) * 16);
+    }
+
+    #[test]
+    fn snapshot_plus_sums_elementwise() {
+        let a = TransferSnapshot {
+            uploads: 1,
+            uploaded_bytes: 100,
+            downloads: 2,
+            downloaded_bytes: 8,
+            donations: 3,
+            donated_bytes: 48,
+        };
+        let b = TransferSnapshot {
+            uploads: 10,
+            uploaded_bytes: 1000,
+            downloads: 20,
+            downloaded_bytes: 80,
+            donations: 30,
+            donated_bytes: 480,
+        };
+        let s = a.plus(&b);
+        assert_eq!(s.uploads, 11);
+        assert_eq!(s.uploaded_bytes, 1100);
+        assert_eq!(s.downloads, 22);
+        assert_eq!(s.downloaded_bytes, 88);
+        assert_eq!(s.donations, 33);
+        assert_eq!(s.donated_bytes, 528);
+        assert_eq!(s.since(&b), a, "plus is since's inverse");
+    }
+
+    #[test]
+    fn transfer_meter_tallies_local_and_global() {
+        // A metered upload/download crosses once but is recorded twice:
+        // in the run-local meter and in the shared global stats, with
+        // identical byte counts.
+        let rt = Runtime::cpu().unwrap();
+        let meter = TransferMeter::new();
+        let global0 = rt.stats.snapshot();
+        let buf = meter.upload_f32(&rt, &[1.0; 8], &[8]).unwrap();
+        let _i = meter.upload_i32(&rt, &[1; 4], &[4]).unwrap();
+        let _s = meter.upload_scalar(&rt, 0.5).unwrap();
+        let v = meter.download_f32(&rt, &buf).unwrap();
+        assert_eq!(v.len(), 8);
+        let local = meter.snapshot();
+        let global = rt.stats.snapshot().since(&global0);
+        assert_eq!(local.uploads, 3);
+        assert_eq!(local.uploaded_bytes, 8 * 4 + 4 * 4 + 4);
+        assert_eq!(local.downloads, 1);
+        assert_eq!(local.downloaded_bytes, 32);
+        assert_eq!(local, global, "one crossing, two exact tallies");
+    }
+
+    #[test]
+    fn unmetered_traffic_stays_out_of_the_meter() {
+        let rt = Runtime::cpu().unwrap();
+        let meter = TransferMeter::new();
+        let _b = rt.upload_f32(&[0.0; 4], &[4]).unwrap();
+        assert_eq!(meter.snapshot(), TransferSnapshot::default());
     }
 
     #[test]

@@ -42,9 +42,12 @@
 //!
 //! Uploads and downloads are counted per set (`upload_count` /
 //! `download_count`) and metered in bytes on the shared
-//! [`Runtime::stats`](crate::runtime::TransferStats) — see the runtime
-//! module docs, §Perf counters, and `docs/transfer-contract.md` for the
-//! full movement rules.
+//! [`Runtime::stats`](crate::runtime::TransferStats); a set owned by a
+//! scheduled run additionally carries that run's
+//! [`TransferMeter`](crate::runtime::TransferMeter)
+//! ([`ParamSet::attach_meter`]) so per-run transfer totals stay exact
+//! under concurrency — see the runtime module docs, §Perf counters, and
+//! `docs/transfer-contract.md` for the full movement rules.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -52,7 +55,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::model::tensor::Tensor;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, TransferMeter};
 
 /// Which copy of a tensor is authoritative (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,6 +79,10 @@ pub enum SyncState {
 /// handle inside it is shared.
 pub struct ParamSet {
     rt: Arc<Runtime>,
+    /// The owning run's exact per-run meter, if any: every upload this
+    /// set performs (`device_buffers`) and every download (`sync_host`)
+    /// is tallied here in addition to the global `Runtime::stats`.
+    meter: Option<Arc<TransferMeter>>,
     names: Vec<String>,
     index: BTreeMap<String, usize>,
     host: Vec<Tensor>,
@@ -119,6 +126,7 @@ impl ParamSet {
         let index = names.iter().cloned().enumerate().map(|(i, n)| (n, i)).collect();
         ParamSet {
             rt: Arc::clone(rt),
+            meter: None,
             names,
             index,
             host,
@@ -127,6 +135,13 @@ impl ParamSet {
             uploads: 0,
             downloads: 0,
         }
+    }
+
+    /// Attach the owning run's exact transfer meter (see struct field
+    /// docs). Call before any upload/download so the run's accounting
+    /// starts complete; sets without a meter tally globally only.
+    pub fn attach_meter(&mut self, meter: &Arc<TransferMeter>) {
+        self.meter = Some(Arc::clone(meter));
     }
 
     pub fn len(&self) -> usize {
@@ -247,7 +262,11 @@ impl ParamSet {
                     SyncState::DeviceAhead,
                     "device-ahead tensor lost its buffer"
                 );
-                self.device[i] = Some(self.rt.upload_tensor(&self.host[i])?);
+                let buf = match &self.meter {
+                    Some(m) => m.upload_tensor(&self.rt, &self.host[i])?,
+                    None => self.rt.upload_tensor(&self.host[i])?,
+                };
+                self.device[i] = Some(buf);
                 self.state[i] = SyncState::InSync;
                 self.uploads += 1;
             }
@@ -317,7 +336,10 @@ impl ParamSet {
             let buf = self.device[i]
                 .as_ref()
                 .expect("device-ahead tensor without a buffer");
-            let v = self.rt.download_f32(buf)?;
+            let v = match &self.meter {
+                Some(m) => m.download_f32(&self.rt, buf)?,
+                None => self.rt.download_f32(buf)?,
+            };
             if v.len() != self.host[i].len() {
                 bail!(
                     "param '{}': device buffer has {} elems, host expects {}",
@@ -400,6 +422,27 @@ mod tests {
         ps.set_flat(0, &[9., 9., 9., 9.]);
         ps.device_buffers().unwrap(); // only tensor 0 re-uploads
         assert_eq!(ps.upload_count(), 3);
+    }
+
+    #[test]
+    fn attached_meter_sees_every_upload_and_download() {
+        let (rt, mut ps) = mk();
+        let meter = TransferMeter::new();
+        ps.attach_meter(&meter);
+        ps.device_buffers().unwrap(); // uploads a (4 elems) + b (3 elems)
+        let snap = meter.snapshot();
+        assert_eq!(snap.uploads, 2);
+        assert_eq!(snap.uploaded_bytes, (4 + 3) * 4);
+        // adopt a device value, then sync: one metered download
+        let buf = rt.upload_f32(&[9., 8., 7., 6.], &[2, 2]).unwrap();
+        ps.adopt_device(0, buf);
+        ps.sync_host().unwrap();
+        let snap = meter.snapshot();
+        assert_eq!(snap.downloads, 1);
+        assert_eq!(snap.downloaded_bytes, 4 * 4);
+        // no re-upload, nothing further metered
+        ps.device_buffers().unwrap();
+        assert_eq!(meter.snapshot().uploads, 2);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::Program;
+use super::{Program, TransferMeter};
 
 /// Why a host sync (ring drain) was forced — kept per-reason in
 /// [`StreamStats`] so the pipeline's sync points are observable.
@@ -74,17 +74,31 @@ pub struct PendingLoss {
     prog: Arc<Program>,
     buf: xla::PjRtBuffer,
     slot: usize,
+    /// The owning run's exact per-run meter, if any: a deferred loss is
+    /// still that run's download, whenever the ring drains it.
+    meter: Option<Arc<TransferMeter>>,
 }
 
 impl PendingLoss {
     pub fn new(prog: &Arc<Program>, buf: xla::PjRtBuffer, slot: usize) -> PendingLoss {
-        PendingLoss { prog: Arc::clone(prog), buf, slot }
+        PendingLoss { prog: Arc::clone(prog), buf, slot, meter: None }
+    }
+
+    /// [`PendingLoss::new`] carrying the owning run's exact meter, so the
+    /// eventual download tallies per-run as well as globally.
+    pub fn metered(
+        prog: &Arc<Program>,
+        buf: xla::PjRtBuffer,
+        slot: usize,
+        meter: &Arc<TransferMeter>,
+    ) -> PendingLoss {
+        PendingLoss { prog: Arc::clone(prog), buf, slot, meter: Some(Arc::clone(meter)) }
     }
 
     /// Download the scalar now (blocks until the producing computation has
     /// finished). Metered exactly like the synchronous path.
     pub fn wait(&self) -> Result<f32> {
-        Ok(self.prog.download_output(&self.buf, self.slot)?[0])
+        Ok(self.prog.download_output_metered(&self.buf, self.slot, self.meter.as_deref())?[0])
     }
 }
 

@@ -49,10 +49,13 @@
 //! the results, reports, and determinism contract are identical — only
 //! the wall-clock overlap is lost.
 
+pub mod queue;
+
 use std::collections::BTreeMap;
 #[cfg(feature = "xla-shared-client")]
 use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
@@ -66,6 +69,8 @@ use crate::metrics::StepKind;
 use crate::model::tensor::Tensor;
 use crate::runtime::{Artifact, Runtime, StreamStats, TransferSnapshot};
 use crate::train::trainer::{RunSummary, StopRule, Trainer};
+
+pub use queue::{join_all, CancelToken, RunHandle, RunPoll, RunQueue, RunResult, TenantStats};
 
 /// Whether this build may actually fan runs out over host threads. False
 /// in the default build (see module docs, §Thread-safety gate): the
@@ -86,13 +91,16 @@ pub fn default_jobs() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+pub(crate) fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// One whole training run, as a schedulable unit: everything
-/// [`WorkerPool::run_all`] needs to construct a `Trainer` on a worker
-/// thread and drive it to completion.
+/// One whole training run, as a schedulable unit: everything the
+/// scheduler needs to construct a `Trainer` on a worker thread and drive
+/// it to completion — whether that is a *finite batch*
+/// ([`WorkerPool::run_all`]) or a submission to the long-lived
+/// multi-tenant [`RunQueue`] (`RunQueue::submit_run`, which adds a
+/// priority and a tenant on top of the spec).
 pub struct RunSpec {
     /// Caller-facing tag carried into [`RunOutput`] (e.g. `"r8/seed3"`).
     pub label: String,
@@ -107,8 +115,15 @@ pub struct RunSpec {
 
 /// What one scheduled run produced — plain host data only; every device
 /// buffer the run owned died with its trainer on the worker thread.
+/// Produced by both execution surfaces: finite batches
+/// ([`WorkerPool::run_all`]) and long-lived queue submissions
+/// ([`RunQueue`] handles, where `summary.cancelled` marks a run the
+/// cooperative cancel flag stopped at a step boundary).
 pub struct RunOutput {
     pub label: String,
+    /// Per-run summary; `summary.transfers` is this run's **exact**
+    /// traffic (its engine's own `TransferMeter`), valid at any `--jobs`
+    /// level — not a window over the shared global meters.
     pub summary: RunSummary,
     /// The run's deferred-readback ring counters (per-run exact — the
     /// ring is owned by the run).
@@ -145,8 +160,9 @@ pub struct PoolRun {
     pub outputs: Vec<RunOutput>,
     /// Aggregate host↔device traffic of the whole batch, measured across
     /// the shared atomic meters at the batch boundaries — exact at any
-    /// jobs level. (Per-run `summary.transfers` windows are only exact at
-    /// `--jobs 1`; concurrent runs meter into the same counters.)
+    /// jobs level, and (since the per-engine `TransferMeter`) exactly the
+    /// sum of the batch's per-run `summary.transfers`
+    /// (`tests/sched_pool.rs` asserts the identity).
     pub transfers: TransferSnapshot,
     /// Wall-clock of the whole batch (the speedup denominator).
     pub wall_seconds: f64,
@@ -333,6 +349,18 @@ where
 
 /// Drive one [`RunSpec`] to completion on the current thread.
 fn execute_run(rt: &Arc<Runtime>, artifacts: &ArtifactCache, spec: RunSpec) -> Result<RunOutput> {
+    execute_run_cancellable(rt, artifacts, spec, None)
+}
+
+/// [`execute_run`] with an optional cooperative cancel flag installed on
+/// the trainer: once raised, the run stops at its next step boundary and
+/// the output's `summary.cancelled` is true (the [`RunQueue`] path).
+pub(crate) fn execute_run_cancellable(
+    rt: &Arc<Runtime>,
+    artifacts: &ArtifactCache,
+    spec: RunSpec,
+    cancel: Option<Arc<AtomicBool>>,
+) -> Result<RunOutput> {
     let t0 = Instant::now();
     let art = artifacts.load(rt, &spec.cfg.artifact)?;
     let label = spec.label;
@@ -340,6 +368,9 @@ fn execute_run(rt: &Arc<Runtime>, artifacts: &ArtifactCache, spec: RunSpec) -> R
         .with_context(|| format!("run '{label}'"))?;
     if let Some(k) = spec.drain_interval {
         t.set_drain_interval(k);
+    }
+    if let Some(flag) = cancel {
+        t.set_cancel_flag(flag);
     }
     let summary = t.run(&spec.stop).with_context(|| format!("run '{label}'"))?;
     let sgd_losses = t

@@ -1,0 +1,950 @@
+//! Long-lived multi-tenant run queue: the serving-shaped half of the
+//! scheduler (`crate::sched`).
+//!
+//! [`WorkerPool::run_all`](crate::sched::WorkerPool::run_all) executes
+//! *finite batches*: submit everything, wait for everything. A service
+//! running "many concurrent finetuning workloads" (ROADMAP north star)
+//! needs the other shape — a [`RunQueue`] that accepts submissions **at
+//! any time**, hands back a [`RunHandle`] the caller can `poll`, `join`,
+//! or `cancel`, schedules by **priority** (higher pops first, FIFO within
+//! a class), and keeps **per-tenant accounting** ([`TenantStats`]: runs,
+//! steps, FF stages, FLOPs, and *exact* transfer bytes from each run's
+//! own `TransferMeter`).
+//!
+//! # Execution model
+//!
+//! * **With the `xla-shared-client` feature** (pinned + audited xla rev,
+//!   see `crate::sched` §Thread-safety gate): `RunQueue::new(jobs)` spawns
+//!   `jobs` long-lived worker threads. Each worker pops the
+//!   highest-priority, oldest submission, runs it to completion, and
+//!   parks on a condvar when the queue is empty.
+//! * **Without the feature** (the default): nothing xla-backed may cross
+//!   a thread, so the queue spawns **no** workers. Submissions accumulate
+//!   and are drained *inline*, on the thread that calls
+//!   [`RunHandle::join`], strictly in priority order (FIFO within a
+//!   class) — deterministic, and bit-identical to a single worker
+//!   draining the same queue. `rust/tests/sched_queue.rs` asserts queue
+//!   results are bit-identical to `WorkerPool::run_all` in both builds.
+//!
+//! # Cancellation
+//!
+//! [`RunHandle::cancel`] is two-phase:
+//!
+//! * **Queued** submissions are marked `Cancelled` immediately and are
+//!   never executed — for training runs, no `Trainer` (and no device
+//!   state) is ever constructed.
+//! * **Running** submissions get a cooperative flag ([`CancelToken`],
+//!   installed via `Trainer::set_cancel_flag`) that the policy loop
+//!   checks at every step boundary: the run stops cleanly, drains its
+//!   pipeline, evaluates, and reports `Cancelled` **with** its partial
+//!   output — never an error, never a torn state.
+//!
+//! # Determinism and accounting
+//!
+//! A run's dispatch sequence depends only on its spec, never on queue
+//! siblings, so queue execution is bit-identical to `run_all` for equal
+//! specs at any worker count. Per-tenant transfer totals sum the per-run
+//! exact meters, so across a quiescent queue they add up *exactly* to the
+//! global `Runtime::stats` delta (`rust/tests/sched_queue.rs`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use anyhow::Result;
+
+use crate::runtime::{Runtime, TransferSnapshot};
+use crate::sched::{execute_run_cancellable, lock, ArtifactCache, RunOutput, RunSpec};
+
+/// How a job reports back to the queue: done, or cancelled-with-partial-
+/// output when the job itself observed (and honored) the cooperative
+/// flag. Jobs classify their *own* outcome so a racing `cancel()` that
+/// landed after the work fully completed cannot misreport a delivered
+/// run as cancelled — `submit_run` classifies from the trainer's
+/// authoritative `summary.cancelled`; plain-closure submissions
+/// ([`RunQueue::submit`]) fall back to the token state at return.
+enum JobYield<R> {
+    Done(R),
+    Cancelled(R),
+}
+
+/// One queued job: takes the submission's [`CancelToken`] (so
+/// long-running work can stop cooperatively) and returns its
+/// self-classified result.
+#[cfg(feature = "xla-shared-client")]
+type Job<R> = Box<dyn FnOnce(&CancelToken) -> Result<JobYield<R>> + Send + 'static>;
+/// Ungated variant: no worker threads exist, jobs never cross a thread,
+/// so no `Send` bound (see `crate::sched`, §Thread-safety gate).
+#[cfg(not(feature = "xla-shared-client"))]
+type Job<R> = Box<dyn FnOnce(&CancelToken) -> Result<JobYield<R>> + 'static>;
+
+/// The cooperative cancellation signal handed to every job. Long-running
+/// jobs poll [`CancelToken::is_cancelled`] (or install
+/// [`CancelToken::flag`] on a `Trainer`) and stop at their next clean
+/// boundary; quick jobs may ignore it entirely.
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    /// The underlying shared flag (install on a
+    /// `Trainer` via `set_cancel_flag` so cancellation lands at the next
+    /// step boundary of the policy loop).
+    pub fn flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.flag)
+    }
+}
+
+/// Non-blocking status of a submission ([`RunHandle::poll`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPoll {
+    /// Waiting in the queue (not started).
+    Queued,
+    /// A worker is executing it.
+    Running,
+    /// Finished successfully; `join` will return [`RunResult::Done`].
+    Done,
+    /// Cancelled (before start, or cooperatively mid-run).
+    Cancelled,
+    /// The job returned an error; `join` will surface it.
+    Failed,
+}
+
+/// What a successfully-joined submission produced.
+pub enum RunResult<R = RunOutput> {
+    /// Ran to completion.
+    Done(R),
+    /// Cancelled: `None` when the submission was cancelled before it ever
+    /// started (nothing was constructed or executed), `Some` when a
+    /// running job honored the cooperative flag and returned its partial
+    /// output (for training runs, a consistent summary with
+    /// `summary.cancelled == true`).
+    Cancelled(Option<R>),
+}
+
+impl<R> RunResult<R> {
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, RunResult::Cancelled(_))
+    }
+
+    /// The completed output, if the run finished normally.
+    pub fn done(self) -> Option<R> {
+        match self {
+            RunResult::Done(r) => Some(r),
+            RunResult::Cancelled(_) => None,
+        }
+    }
+
+    /// Whatever output exists — complete, or the partial output of a
+    /// cooperative mid-run cancellation.
+    pub fn into_output(self) -> Option<R> {
+        match self {
+            RunResult::Done(r) => Some(r),
+            RunResult::Cancelled(r) => r,
+        }
+    }
+}
+
+/// Per-tenant accounting, updated as the tenant's submissions move
+/// through the queue. Counters (`submitted`/`completed`/…) are maintained
+/// by the queue itself; the per-run fields (`adam_steps`, `flops`,
+/// `transfers`, …) are folded in by training-run submissions
+/// ([`RunQueue::submit_run`]) from each run's own summary — `transfers`
+/// sums the runs' **exact** per-engine meters, so tenant byte totals add
+/// up exactly to the global `Runtime::stats` delta across a quiescent
+/// queue whose runs all completed or were cancelled. (A *failed* run has
+/// no summary to fold: its partial traffic stays in the global meters
+/// only, and `failed` counts it.)
+#[derive(Debug, Default, Clone)]
+pub struct TenantStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+    pub failed: u64,
+    /// Adam steps across the tenant's finished runs (cancelled runs
+    /// included — their partial work is real work).
+    pub adam_steps: u64,
+    /// FF simulated steps across the tenant's finished runs.
+    pub sim_steps: u64,
+    /// FF stages executed across the tenant's finished runs.
+    pub ff_stages: u64,
+    /// Chargeable FLOPs across the tenant's finished runs.
+    pub flops: u64,
+    /// Wall-clock seconds its runs occupied workers.
+    pub seconds: f64,
+    /// Exact host↔device traffic of the tenant's finished runs (sum of
+    /// per-run `TransferMeter`s).
+    pub transfers: TransferSnapshot,
+}
+
+enum Outcome<R> {
+    Done(R),
+    Cancelled(Option<R>),
+    Failed(anyhow::Error),
+}
+
+enum HandleState<R> {
+    Queued,
+    Running,
+    /// `None` once [`RunHandle::join`] took the outcome (join consumes
+    /// the handle, so nothing can observe this afterwards).
+    Finished(Option<Outcome<R>>),
+}
+
+/// Shared between a [`RunHandle`] and the queue: one per submission.
+struct HandleShared<R> {
+    seq: u64,
+    tenant: String,
+    cancel: Arc<AtomicBool>,
+    state: Mutex<HandleState<R>>,
+    cv: Condvar,
+}
+
+struct Entry<R> {
+    job: Job<R>,
+    handle: Arc<HandleShared<R>>,
+}
+
+struct QueueState<R> {
+    /// priority class → submissions, oldest first. Pop = highest class,
+    /// front of its deque; empty classes are removed eagerly.
+    ready: BTreeMap<i32, VecDeque<Entry<R>>>,
+    /// Entries currently in `ready` (including submissions cancelled
+    /// while queued that no worker has reaped yet).
+    queued: usize,
+    next_seq: u64,
+    paused: bool,
+    shutdown: bool,
+}
+
+struct Shared<R> {
+    state: Mutex<QueueState<R>>,
+    /// Workers (and pause/shutdown transitions) wait/notify here.
+    cv: Condvar,
+    tenants: Mutex<BTreeMap<String, TenantStats>>,
+}
+
+/// Plain-closure cancel classification ([`RunQueue::submit`]): the best
+/// signal a generic job has is the token state at return. Jobs with an
+/// authoritative marker of their own (training runs: `summary.cancelled`)
+/// build the [`JobYield`] themselves instead.
+fn yield_by_token<R>(out: R, token: &CancelToken) -> Result<JobYield<R>> {
+    if token.is_cancelled() {
+        Ok(JobYield::Cancelled(out))
+    } else {
+        Ok(JobYield::Done(out))
+    }
+}
+
+/// Render a caught panic payload as the submission's error (the common
+/// payloads are `&str`/`String` from panic!/assert!/expect).
+fn panic_error(payload: Box<dyn std::any::Any + Send>) -> anyhow::Error {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string());
+    anyhow::anyhow!("queued job panicked: {msg}")
+}
+
+/// Pop the next runnable entry: highest priority class, FIFO within it.
+/// Submissions cancelled while still queued are reaped (dropped
+/// unexecuted) here. Returns `None` when paused or empty.
+fn take_next<R>(st: &mut QueueState<R>) -> Option<Entry<R>> {
+    if st.paused {
+        return None;
+    }
+    loop {
+        let prio = *st.ready.keys().next_back()?;
+        let class = st.ready.get_mut(&prio).expect("key just observed");
+        let entry = class.pop_front().expect("empty classes are removed");
+        if class.is_empty() {
+            st.ready.remove(&prio);
+        }
+        st.queued -= 1;
+        let finished = matches!(&*lock(&entry.handle.state), HandleState::Finished(_));
+        if finished {
+            continue; // cancelled while queued: never execute
+        }
+        return Some(entry);
+    }
+}
+
+/// Execute one popped entry to completion and publish its outcome. Shared
+/// by the gated worker threads and the ungated inline drain, so both
+/// builds run the same state machine.
+fn run_entry<R>(shared: &Shared<R>, entry: Entry<R>) {
+    let handle = entry.handle;
+    {
+        let mut st = lock(&handle.state);
+        if matches!(*st, HandleState::Finished(_)) {
+            return; // cancel raced the pop: treated as cancel-before-start
+        }
+        *st = HandleState::Running;
+    }
+    let token = CancelToken { flag: Arc::clone(&handle.cancel) };
+    // The job classifies its own outcome (see [`JobYield`]): a cancel
+    // honored mid-run comes back Cancelled with the partial output; a
+    // cancel that raced a fully-completed job stays Done. A *panicking*
+    // job must not unwind past here — it would kill the worker with the
+    // handle stuck at Running, hanging every joiner forever (the pool's
+    // scoped threads re-raise at scope exit; a long-lived queue has no
+    // scope exit) — so the unwind is caught and reported as a failure.
+    let job = entry.job;
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&token)));
+    let outcome = match caught {
+        Err(payload) => Outcome::Failed(panic_error(payload)),
+        Ok(Err(e)) => Outcome::Failed(e),
+        Ok(Ok(JobYield::Cancelled(out))) => Outcome::Cancelled(Some(out)),
+        Ok(Ok(JobYield::Done(out))) => Outcome::Done(out),
+    };
+    {
+        let mut tenants = lock(&shared.tenants);
+        let t = tenants.entry(handle.tenant.clone()).or_default();
+        match &outcome {
+            Outcome::Done(_) => t.completed += 1,
+            Outcome::Cancelled(_) => t.cancelled += 1,
+            Outcome::Failed(_) => t.failed += 1,
+        }
+    }
+    let mut st = lock(&handle.state);
+    *st = HandleState::Finished(Some(outcome));
+    drop(st);
+    handle.cv.notify_all();
+}
+
+#[cfg(feature = "xla-shared-client")]
+fn worker_loop<R: Send + 'static>(shared: &Shared<R>) {
+    loop {
+        let entry = {
+            let mut st = lock(&shared.state);
+            loop {
+                if let Some(e) = take_next(&mut st) {
+                    break Some(e);
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        match entry {
+            Some(e) => run_entry(shared, e),
+            None => return,
+        }
+    }
+}
+
+/// The long-lived submission queue (see module docs). Generic over the
+/// job result `R` so the scheduling/handle machinery is exercised by
+/// plain closures in unit tests; training runs use `R = `[`RunOutput`]
+/// via [`RunQueue::submit_run`].
+pub struct RunQueue<R = RunOutput> {
+    shared: Arc<Shared<R>>,
+    /// Worker threads actually spawned: `jobs` with the
+    /// `xla-shared-client` feature, 0 without it (inline drain on join).
+    workers: usize,
+    #[cfg(feature = "xla-shared-client")]
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn new_shared<R>(paused: bool) -> Arc<Shared<R>> {
+    Arc::new(Shared {
+        state: Mutex::new(QueueState {
+            ready: BTreeMap::new(),
+            queued: 0,
+            next_seq: 0,
+            paused,
+            shutdown: false,
+        }),
+        cv: Condvar::new(),
+        tenants: Mutex::new(BTreeMap::new()),
+    })
+}
+
+#[cfg(feature = "xla-shared-client")]
+impl<R: Send + 'static> RunQueue<R> {
+    /// A queue draining on `jobs` long-lived worker threads (clamped to
+    /// at least 1).
+    pub fn new(jobs: usize) -> RunQueue<R> {
+        Self::build(jobs, false)
+    }
+
+    /// A queue whose workers hold until [`RunQueue::release`] — lets a
+    /// caller submit a cold backlog and observe pure priority order.
+    pub fn new_paused(jobs: usize) -> RunQueue<R> {
+        Self::build(jobs, true)
+    }
+
+    fn build(jobs: usize, paused: bool) -> RunQueue<R> {
+        let shared = new_shared(paused);
+        let workers = jobs.max(1);
+        let threads = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared.as_ref()))
+            })
+            .collect();
+        RunQueue { shared, workers, threads }
+    }
+}
+
+#[cfg(not(feature = "xla-shared-client"))]
+impl<R: 'static> RunQueue<R> {
+    /// Without the `xla-shared-client` feature no worker threads exist
+    /// (nothing xla-backed may cross a thread — see `crate::sched`,
+    /// §Thread-safety gate): submissions queue up and execute inline, in
+    /// priority order, on the thread that calls [`RunHandle::join`].
+    /// Same results, same ordering contract, no wall-clock overlap;
+    /// `jobs` is accepted for CLI symmetry and ignored.
+    pub fn new(jobs: usize) -> RunQueue<R> {
+        let _ = jobs;
+        Self::build(false)
+    }
+
+    /// Paused variant of [`RunQueue::new`]; [`RunQueue::release`] opens
+    /// the queue for the inline drain.
+    pub fn new_paused(jobs: usize) -> RunQueue<R> {
+        let _ = jobs;
+        Self::build(true)
+    }
+
+    fn build(paused: bool) -> RunQueue<R> {
+        RunQueue { shared: new_shared(paused), workers: 0 }
+    }
+}
+
+impl<R: 'static> RunQueue<R> {
+    /// Submit one job under a tenant at a priority; returns immediately
+    /// with the submission's [`RunHandle`]. Higher priorities pop first;
+    /// equal priorities are FIFO. If the job returns with its cancel
+    /// token raised, it joins as `Cancelled` with the (partial) output.
+    #[cfg(feature = "xla-shared-client")]
+    pub fn submit<F>(&self, tenant: &str, priority: i32, job: F) -> RunHandle<R>
+    where
+        F: FnOnce(&CancelToken) -> Result<R> + Send + 'static,
+    {
+        self.submit_boxed(tenant, priority, Box::new(move |t| yield_by_token(job(t)?, t)))
+    }
+
+    /// Submit one job under a tenant at a priority (inline-drain build:
+    /// no `Send` bound — the job never crosses a thread). Cancel
+    /// classification as in the gated variant.
+    #[cfg(not(feature = "xla-shared-client"))]
+    pub fn submit<F>(&self, tenant: &str, priority: i32, job: F) -> RunHandle<R>
+    where
+        F: FnOnce(&CancelToken) -> Result<R> + 'static,
+    {
+        self.submit_boxed(tenant, priority, Box::new(move |t| yield_by_token(job(t)?, t)))
+    }
+
+    fn submit_boxed(&self, tenant: &str, priority: i32, job: Job<R>) -> RunHandle<R> {
+        let handle = {
+            let mut st = lock(&self.shared.state);
+            let handle = Arc::new(HandleShared {
+                seq: st.next_seq,
+                tenant: tenant.to_string(),
+                cancel: Arc::new(AtomicBool::new(false)),
+                state: Mutex::new(HandleState::Queued),
+                cv: Condvar::new(),
+            });
+            st.next_seq += 1;
+            st.ready
+                .entry(priority)
+                .or_default()
+                .push_back(Entry { job, handle: Arc::clone(&handle) });
+            st.queued += 1;
+            handle
+        };
+        lock(&self.shared.tenants).entry(tenant.to_string()).or_default().submitted += 1;
+        self.shared.cv.notify_one();
+        RunHandle { handle, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Open a paused queue ([`RunQueue::new_paused`]). No-op otherwise.
+    pub fn release(&self) {
+        lock(&self.shared.state).paused = false;
+        self.shared.cv.notify_all();
+    }
+
+    /// Submissions still in the queue structure (not yet picked up;
+    /// includes queued-then-cancelled entries no worker has reaped yet).
+    pub fn pending(&self) -> usize {
+        lock(&self.shared.state).queued
+    }
+
+    /// Worker threads this queue actually spawned (0 = inline drain; see
+    /// [`RunQueue::new`] in builds without the thread-safety feature).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Point-in-time copy of every tenant's accounting.
+    pub fn tenants(&self) -> BTreeMap<String, TenantStats> {
+        lock(&self.shared.tenants).clone()
+    }
+
+    /// One tenant's accounting (default-zero if it never submitted).
+    pub fn tenant(&self, name: &str) -> TenantStats {
+        lock(&self.shared.tenants).get(name).cloned().unwrap_or_default()
+    }
+}
+
+impl RunQueue<RunOutput> {
+    /// Submit one whole training run: the `Trainer` is constructed and
+    /// driven on whichever worker pops the submission (inline at `join`
+    /// in gated-off builds), with the handle's cancel flag installed so
+    /// [`RunHandle::cancel`] lands at the next step boundary. The
+    /// tenant's [`TenantStats`] are folded in from the run's summary when
+    /// it finishes — including the run's **exact** per-engine transfer
+    /// bytes.
+    pub fn submit_run(
+        &self,
+        rt: &Arc<Runtime>,
+        artifacts: &Arc<ArtifactCache>,
+        spec: RunSpec,
+        priority: i32,
+        tenant: &str,
+    ) -> RunHandle<RunOutput> {
+        let rt = Arc::clone(rt);
+        let artifacts = Arc::clone(artifacts);
+        let shared = Arc::clone(&self.shared);
+        let tenant_name = tenant.to_string();
+        self.submit_boxed(
+            tenant,
+            priority,
+            Box::new(move |token: &CancelToken| {
+                let out = execute_run_cancellable(&rt, &artifacts, spec, Some(token.flag()))?;
+                let mut tenants = lock(&shared.tenants);
+                let t = tenants.entry(tenant_name).or_default();
+                t.adam_steps += out.summary.adam_steps as u64;
+                t.sim_steps += out.summary.sim_steps as u64;
+                t.ff_stages += out.stages.len() as u64;
+                t.flops += out.summary.flops.total();
+                t.seconds += out.seconds;
+                t.transfers = t.transfers.plus(&out.summary.transfers);
+                drop(tenants);
+                // The trainer's summary is the authoritative cancel
+                // marker: a cancel that raced a fully-delivered run
+                // stays Done (and bills as completed), not Cancelled.
+                if out.summary.cancelled {
+                    Ok(JobYield::Cancelled(out))
+                } else {
+                    Ok(JobYield::Done(out))
+                }
+            }),
+        )
+    }
+}
+
+impl<R> Drop for RunQueue<R> {
+    /// Shutting the queue down cancels everything still queued (so
+    /// joiners can never hang on work nobody will run), lets in-flight
+    /// jobs finish, and joins the workers.
+    fn drop(&mut self) {
+        let leftovers: Vec<Entry<R>> = {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+            st.paused = false;
+            let mut out = Vec::new();
+            while let Some((_, mut class)) = st.ready.pop_last() {
+                while let Some(e) = class.pop_front() {
+                    st.queued -= 1;
+                    out.push(e);
+                }
+            }
+            out
+        };
+        self.shared.cv.notify_all();
+        for e in leftovers {
+            let mut st = lock(&e.handle.state);
+            if matches!(*st, HandleState::Finished(_)) {
+                continue; // already individually cancelled
+            }
+            *st = HandleState::Finished(Some(Outcome::Cancelled(None)));
+            drop(st);
+            lock(&self.shared.tenants)
+                .entry(e.handle.tenant.clone())
+                .or_default()
+                .cancelled += 1;
+            e.handle.cv.notify_all();
+        }
+        #[cfg(feature = "xla-shared-client")]
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The caller's side of one submission: poll it, cancel it, or join it.
+/// Not cloneable — exactly one owner may consume the result.
+pub struct RunHandle<R = RunOutput> {
+    handle: Arc<HandleShared<R>>,
+    shared: Arc<Shared<R>>,
+}
+
+impl<R: 'static> RunHandle<R> {
+    /// Submission sequence number (global, monotone): the tiebreak order
+    /// within a priority class, and the index [`join_all`] reports the
+    /// first error by.
+    pub fn seq(&self) -> u64 {
+        self.handle.seq
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.handle.tenant
+    }
+
+    /// Non-blocking status. Never executes work — in inline-drain builds
+    /// a queued submission stays `Queued` until something `join`s.
+    pub fn poll(&self) -> RunPoll {
+        match &*lock(&self.handle.state) {
+            HandleState::Queued => RunPoll::Queued,
+            HandleState::Running => RunPoll::Running,
+            HandleState::Finished(Some(Outcome::Done(_))) => RunPoll::Done,
+            HandleState::Finished(Some(Outcome::Cancelled(_))) => RunPoll::Cancelled,
+            HandleState::Finished(Some(Outcome::Failed(_))) => RunPoll::Failed,
+            // join consumed the outcome — unobservable, since join also
+            // consumes the handle; report the terminal state.
+            HandleState::Finished(None) => RunPoll::Done,
+        }
+    }
+
+    /// Request cancellation. A submission still **queued** is marked
+    /// `Cancelled` immediately and will never execute (for training
+    /// runs: no `Trainer` is ever constructed). A **running** submission
+    /// keeps running until its next step boundary — the cooperative flag
+    /// is the only signal; nothing is torn down mid-step.
+    pub fn cancel(&self) {
+        self.handle.cancel.store(true, Ordering::SeqCst);
+        let mut st = lock(&self.handle.state);
+        if matches!(*st, HandleState::Queued) {
+            *st = HandleState::Finished(Some(Outcome::Cancelled(None)));
+            drop(st);
+            lock(&self.shared.tenants)
+                .entry(self.handle.tenant.clone())
+                .or_default()
+                .cancelled += 1;
+            self.handle.cv.notify_all();
+        }
+    }
+
+    /// Block until the submission finishes and return its outcome.
+    /// Job errors come back as `Err` with the submission index attached;
+    /// cancellation is a normal [`RunResult::Cancelled`], never an error.
+    ///
+    /// In builds without the thread-safety feature this is also the drain
+    /// pump: joining executes queued submissions inline, in priority
+    /// order, until this one has finished (see module docs). Joining a
+    /// still-**paused** queue there is an error, not a hang: no workers
+    /// exist, so nothing could ever run the submission — call
+    /// [`RunQueue::release`] first.
+    pub fn join(self) -> Result<RunResult<R>> {
+        self.drive_inline()?;
+        let mut st = lock(&self.handle.state);
+        loop {
+            if let HandleState::Finished(slot) = &mut *st {
+                let outcome = slot.take().expect("join consumes the only handle");
+                return match outcome {
+                    Outcome::Done(r) => Ok(RunResult::Done(r)),
+                    Outcome::Cancelled(r) => Ok(RunResult::Cancelled(r)),
+                    Outcome::Failed(e) => {
+                        Err(e.context(format!("queued run #{}", self.handle.seq)))
+                    }
+                };
+            }
+            st = self.handle.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    #[cfg(feature = "xla-shared-client")]
+    fn drive_inline(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// No workers exist in this build: drain ready submissions — highest
+    /// priority first, FIFO within a class — on this thread until the
+    /// joined one finishes. A still-paused queue is a loud error: this
+    /// thread is the only thing that could ever run the submission, so
+    /// waiting would deadlock permanently.
+    #[cfg(not(feature = "xla-shared-client"))]
+    fn drive_inline(&self) -> Result<()> {
+        loop {
+            if matches!(&*lock(&self.handle.state), HandleState::Finished(_)) {
+                return Ok(());
+            }
+            let (entry, paused) = {
+                let mut st = lock(&self.shared.state);
+                let entry = take_next(&mut st);
+                (entry, st.paused)
+            };
+            match entry {
+                Some(e) => run_entry(&self.shared, e),
+                None if paused => anyhow::bail!(
+                    "join on a paused queue: this build has no worker \
+                     threads (xla-shared-client off), so nothing can run \
+                     submission #{} until RunQueue::release() is called",
+                    self.handle.seq
+                ),
+                None => return Ok(()),
+            }
+        }
+    }
+}
+
+/// Join every handle (in the given order) and return the results, or —
+/// if any job failed — the error of the **lowest submission index**,
+/// matching `WorkerPool::scatter`'s deterministic error contract.
+/// Cancelled submissions are normal results, not errors.
+pub fn join_all<R: 'static>(handles: Vec<RunHandle<R>>) -> Result<Vec<RunResult<R>>> {
+    let mut out = Vec::with_capacity(handles.len());
+    let mut first_err: Option<(u64, anyhow::Error)> = None;
+    for h in handles {
+        let seq = h.seq();
+        match h.join() {
+            Ok(r) => out.push(r),
+            Err(e) => {
+                let lower = match &first_err {
+                    None => true,
+                    Some((s, _)) => seq < *s,
+                };
+                if lower {
+                    first_err = Some((seq, e));
+                }
+            }
+        }
+    }
+    match first_err {
+        Some((_, e)) => Err(e),
+        None => Ok(out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Queue mechanics only — plain-closure jobs, no xla, no artifacts.
+    //! These run (and must hold) in both the gated build (real worker
+    //! threads) and the default build (inline drain at `join`); training
+    //! runs through the queue live in `rust/tests/sched_queue.rs`.
+    use super::*;
+
+    #[test]
+    fn priority_pops_highest_first_fifo_within_class() {
+        // Cold backlog: everything submitted while the queue is paused,
+        // then released — execution order is pure scheduling policy.
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for (name, prio) in [("a0", 0), ("b1", 1), ("c0", 0), ("d1", 1), ("e2", 2)] {
+            let order = Arc::clone(&order);
+            handles.push(q.submit("t", prio, move |_| {
+                lock(&order).push(name);
+                Ok(1usize)
+            }));
+        }
+        assert_eq!(q.pending(), 5);
+        assert!(handles.iter().all(|h| h.poll() == RunPoll::Queued));
+        q.release();
+        let results = join_all(handles).unwrap();
+        assert_eq!(results.len(), 5);
+        assert_eq!(
+            *lock(&order),
+            vec!["e2", "b1", "d1", "a0", "c0"],
+            "highest class first, FIFO within a class"
+        );
+        assert_eq!(q.pending(), 0);
+        let t = q.tenant("t");
+        assert_eq!(t.submitted, 5);
+        assert_eq!(t.completed, 5);
+    }
+
+    #[test]
+    fn exactly_once_execution_and_submission_ordered_results() {
+        // Hammer the queue with many shuffled-priority submissions:
+        // every job runs exactly once and every handle joins to its own
+        // job's result, regardless of execution order.
+        let n = 200usize;
+        let q: RunQueue<usize> = RunQueue::new(4);
+        let counts: Arc<Mutex<Vec<u32>>> = Arc::new(Mutex::new(vec![0; n]));
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let counts = Arc::clone(&counts);
+            handles.push(q.submit("t", (i % 5) as i32, move |_| {
+                lock(&counts)[i] += 1;
+                Ok(i * 3)
+            }));
+        }
+        let results = join_all(handles).unwrap();
+        let vals: Vec<usize> = results.into_iter().map(|r| r.done().unwrap()).collect();
+        assert_eq!(vals, (0..n).map(|i| i * 3).collect::<Vec<_>>());
+        assert!(lock(&counts).iter().all(|&c| c == 1), "every job exactly once");
+    }
+
+    #[cfg(feature = "xla-shared-client")]
+    #[test]
+    fn concurrent_submitters_see_exactly_once_and_their_own_results() {
+        // Many submitter threads share one queue; each joins only its own
+        // handles. No lost wakeups, no cross-talk, exact tenant counts.
+        let q = Arc::new(RunQueue::<u64>::new(3));
+        let total = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let q = Arc::clone(&q);
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    let tenant = format!("t{t}");
+                    let mut handles = Vec::new();
+                    for i in 0..50u64 {
+                        let total = Arc::clone(&total);
+                        handles.push(q.submit(&tenant, (i % 3) as i32, move |_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                            Ok(t * 1000 + i)
+                        }));
+                    }
+                    let rs = join_all(handles).unwrap();
+                    for (i, r) in rs.into_iter().enumerate() {
+                        assert_eq!(r.done().unwrap(), t * 1000 + i as u64);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 200);
+        let tenants = q.tenants();
+        assert_eq!(tenants.len(), 4);
+        for stats in tenants.values() {
+            assert_eq!(stats.submitted, 50);
+            assert_eq!(stats.completed, 50);
+        }
+    }
+
+    #[test]
+    fn panicking_job_fails_its_handle_instead_of_hanging_joiners() {
+        // An unwinding job must not kill a worker with the handle stuck
+        // at Running — joins would block forever. The unwind is caught
+        // and surfaced as the submission's error; the queue keeps
+        // serving later submissions.
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let bad = q.submit("t", 1, |_| -> Result<usize> { panic!("boom in job") });
+        let good = q.submit("t", 0, |_| Ok(5usize));
+        let err = bad.join().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("boom in job"), "{msg}");
+        assert_eq!(good.join().unwrap().done(), Some(5), "queue survives the panic");
+        assert_eq!(q.tenant("t").failed, 1);
+    }
+
+    #[test]
+    fn join_all_reports_the_lowest_submission_index_error() {
+        // Parity with WorkerPool::scatter's deterministic error contract.
+        let q: RunQueue<usize> = RunQueue::new(2);
+        let mut handles = Vec::new();
+        for i in 0..16usize {
+            handles.push(q.submit("t", 0, move |_| {
+                if i == 3 || i == 11 {
+                    anyhow::bail!("boom at {i}");
+                }
+                Ok(i)
+            }));
+        }
+        let err = join_all(handles).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("queued run #3"), "{msg}");
+        assert!(msg.contains("boom at 3"), "{msg}");
+        let t = q.tenant("t");
+        assert_eq!(t.failed, 2);
+        assert_eq!(t.completed, 14);
+    }
+
+    #[test]
+    fn cancel_before_start_never_runs_the_job() {
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        let ran = Arc::new(Mutex::new(false));
+        let h = {
+            let ran = Arc::clone(&ran);
+            q.submit("t", 0, move |_| {
+                *lock(&ran) = true;
+                Ok(1)
+            })
+        };
+        let keeper = q.submit("t", 0, |_| Ok(2usize));
+        h.cancel();
+        assert_eq!(h.poll(), RunPoll::Cancelled);
+        q.release();
+        match h.join().unwrap() {
+            RunResult::Cancelled(None) => {}
+            _ => panic!("cancel-before-start must report Cancelled(None)"),
+        }
+        assert_eq!(keeper.join().unwrap().done(), Some(2));
+        assert!(!*lock(&ran), "cancelled submission must never execute");
+        let t = q.tenant("t");
+        assert_eq!(t.submitted, 2);
+        assert_eq!(t.cancelled, 1);
+        assert_eq!(t.completed, 1);
+    }
+
+    #[test]
+    fn cooperative_cancel_reports_cancelled_with_partial_output() {
+        // A job that observes its cancel flag mid-way and stops at its
+        // next boundary comes back Cancelled *with* the partial output —
+        // the queue-level contract Trainer::run's cooperative flag rides.
+        let q: RunQueue<&'static str> = RunQueue::new(1);
+        let h = q.submit("t", 0, |token| {
+            token.flag().store(true, Ordering::SeqCst);
+            assert!(token.is_cancelled());
+            Ok("partial")
+        });
+        match h.join().unwrap() {
+            RunResult::Cancelled(Some("partial")) => {}
+            _ => panic!("flagged job must come back Cancelled with output"),
+        }
+        assert_eq!(q.tenant("t").cancelled, 1);
+    }
+
+    #[cfg(not(feature = "xla-shared-client"))]
+    #[test]
+    fn joining_a_paused_queue_without_workers_errors_instead_of_hanging() {
+        // Inline-drain build: the joining thread is the only thing that
+        // could ever run the submission, so a paused queue must fail the
+        // join loudly rather than deadlock on a condvar nobody signals.
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        let h = q.submit("t", 0, |_| Ok(1));
+        let err = h.join().unwrap_err();
+        assert!(format!("{err:#}").contains("paused"), "{err:#}");
+    }
+
+    #[test]
+    fn dropping_the_queue_cancels_queued_submissions() {
+        // Joiners must never hang on work nobody will run.
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        let h = q.submit("t", 0, |_| Ok(7));
+        drop(q);
+        match h.join().unwrap() {
+            RunResult::Cancelled(None) => {}
+            _ => panic!("queue drop must cancel still-queued submissions"),
+        }
+    }
+
+    #[cfg(feature = "xla-shared-client")]
+    #[test]
+    fn join_never_misses_a_workers_completion() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = q.submit("t", 0, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            Ok(9)
+        });
+        assert!(matches!(h.poll(), RunPoll::Queued | RunPoll::Running | RunPoll::Done));
+        assert_eq!(h.join().unwrap().done(), Some(9));
+    }
+
+    #[test]
+    fn workers_reports_the_builds_effective_width() {
+        let q: RunQueue<usize> = RunQueue::new(3);
+        let expected = if crate::sched::threads_enabled() { 3 } else { 0 };
+        assert_eq!(q.workers(), expected);
+    }
+}

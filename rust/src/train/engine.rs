@@ -8,7 +8,7 @@
 //!   Trainer (policy)      — FF decisions, stop rules, eval cadence, logs
 //!      │  Engine trait (narrow: dispatch / sync / eval / snapshot)
 //!   StepEngine (dispatch) — micro-batch loop, donation chains, prefetch,
-//!      │                    TransferStats bookkeeping, Δ_W tracking
+//!      │                    per-run TransferMeter bookkeeping, Δ_W tracking
 //!   ExecStream (stream)   — deferred loss readback ring
 //! ```
 //!
@@ -44,7 +44,7 @@ use crate::optim::accum::{DeviceGradAccumulator, GradAccumulator};
 use crate::optim::delta::DeltaTracker;
 use crate::runtime::{
     Artifact, ExecStream, InputBuf, Manifest, ParamSet, PendingLoss, PendingStep, Program,
-    ResolvedStep, Runtime, StreamStats, SyncReason, TransferSnapshot,
+    ResolvedStep, Runtime, StreamStats, SyncReason, TransferMeter, TransferSnapshot,
 };
 use crate::train::eval_cache::{EvalCache, ExampleScratch, LossAccum};
 
@@ -147,7 +147,10 @@ pub trait Engine {
     /// All parameters by name (checkpointing). Downloads lazily and only
     /// the trainable set — frozen params are never device-written.
     fn named_params(&mut self) -> Result<BTreeMap<String, Tensor>>;
-    /// Host↔device traffic attributable to this engine since construction.
+    /// Host↔device traffic attributable to this engine since
+    /// construction, read from the engine's own [`TransferMeter`] —
+    /// **exact** even while sibling runs share the runtime
+    /// (`docs/transfer-contract.md` §5).
     fn transfers(&self) -> TransferSnapshot;
     /// (uploads, downloads) summed over the trainable/m/v ParamSets.
     fn state_transfer_counts(&self) -> (u64, u64);
@@ -199,7 +202,13 @@ pub struct StepEngine {
     test_cache: Option<EvalCache>,
     qa_scratch: Option<ExampleScratch>,
     // accounting
-    transfers_at_start: TransferSnapshot,
+    /// This run's exact transfer meter: every upload/download/donation
+    /// the engine (or a component it owns — ParamSets, stager, eval
+    /// caches, pending losses) performs is tallied here in addition to
+    /// the shared `Runtime::stats`, so per-run totals are exact at any
+    /// `--jobs` level (no sibling traffic, unlike a window over the
+    /// shared meters).
+    meter: Arc<TransferMeter>,
 }
 
 /// Both halves of the optional device-side accumulation pair, or neither
@@ -237,10 +246,15 @@ impl StepEngine {
         test_batches: Vec<(Batch, usize)>,
     ) -> Result<StepEngine> {
         let man = &art.manifest;
-        let tr = ParamSet::from_spec(rt, &man.trainable, values)?;
-        let fr = ParamSet::from_spec(rt, &man.frozen, values)?;
-        let m = ParamSet::zeros_like(rt, &tr);
-        let v = ParamSet::zeros_like(rt, &tr);
+        let meter = TransferMeter::new();
+        let mut tr = ParamSet::from_spec(rt, &man.trainable, values)?;
+        let mut fr = ParamSet::from_spec(rt, &man.frozen, values)?;
+        let mut m = ParamSet::zeros_like(rt, &tr);
+        let mut v = ParamSet::zeros_like(rt, &tr);
+        tr.attach_meter(&meter);
+        fr.attach_meter(&meter);
+        m.attach_meter(&meter);
+        v.attach_meter(&meter);
         let grad_prog = art.program("grad_step")?;
         let adam_prog = art.program("adam_apply")?;
         let eval_prog = art.program("eval_loss")?;
@@ -249,8 +263,7 @@ impl StepEngine {
         } else {
             (None, None)
         };
-        let transfers_at_start = rt.stats.snapshot();
-        let stager = BatchStager::new(rt);
+        let stager = BatchStager::with_meter(rt, &meter);
         Ok(StepEngine {
             rt: Arc::clone(rt),
             art,
@@ -275,7 +288,7 @@ impl StepEngine {
             val_cache: None,
             test_cache: None,
             qa_scratch: None,
-            transfers_at_start,
+            meter,
         })
     }
 
@@ -306,16 +319,21 @@ impl StepEngine {
             drop(inputs);
             let mut outs = outs.into_iter();
             let loss_buf = outs.next().expect("grad_step outputs [loss, g..]");
-            pending.push(PendingLoss::new(&self.grad_prog, loss_buf, 0));
+            pending.push(PendingLoss::metered(&self.grad_prog, loss_buf, 0, &self.meter));
             let grads: Vec<xla::PjRtBuffer> = outs.collect();
             debug_assert_eq!(grads.len(), n, "grad_step output arity");
-            acc.add_raw_bufs(&accum_prog, grads)?;
+            acc.add_raw_bufs(&accum_prog, grads, Some(&self.meter))?;
         }
         let count = acc.count();
         if self.inv_n_buf.as_ref().map(|(c, _)| *c) != Some(count) {
-            self.inv_n_buf = Some((count, self.rt.upload_scalar(1.0 / count as f32)?));
+            let buf = self.meter.upload_scalar(&self.rt, 1.0 / count as f32)?;
+            self.inv_n_buf = Some((count, buf));
         }
-        let bufs = acc.finalize_bufs(&finalize_prog, &self.inv_n_buf.as_ref().unwrap().1)?;
+        let bufs = acc.finalize_bufs(
+            &finalize_prog,
+            &self.inv_n_buf.as_ref().unwrap().1,
+            Some(&self.meter),
+        )?;
         Ok((bufs, pending))
     }
 
@@ -342,7 +360,7 @@ impl StepEngine {
             )?;
             // Gradients are consumed host-side here, so the decoded path
             // is the right one.
-            let out = self.grad_prog.execute_buffers(&inputs)?;
+            let out = self.grad_prog.execute_buffers_metered(&inputs, Some(&self.meter))?;
             let loss = out.values[0][0];
             micro_losses.push(loss);
             let grads: Vec<&[f32]> =
@@ -365,7 +383,7 @@ impl StepEngine {
     fn download_grads(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
         let mut out = Vec::with_capacity(bufs.len());
         for (i, b) in bufs.iter().enumerate() {
-            let v = self.rt.download_f32(b)?;
+            let v = self.meter.download_f32(&self.rt, b)?;
             out.push(Tensor::from_vec(self.tr.shape(i), v));
         }
         Ok(out)
@@ -381,7 +399,7 @@ impl StepEngine {
                 self.eval_prog.spec.inputs.len(),
                 [&chunk.tokens, &chunk.targets, &chunk.mask],
             )?;
-            let out = self.eval_prog.execute_buffers(&inputs)?;
+            let out = self.eval_prog.execute_buffers_metered(&inputs, Some(&self.meter))?;
             acc.add(out.values[0][0], chunk);
         }
         Ok(EvalMeasure { loss: acc.mean(), tokens: acc.tokens() })
@@ -415,7 +433,7 @@ impl Engine for StepEngine {
                 self.accumulate_host(&staged, opts.keep_micro_grads)?;
             let bufs: Vec<xla::PjRtBuffer> = mean
                 .iter()
-                .map(|g| self.rt.upload_tensor(g))
+                .map(|g| self.meter.upload_tensor(&self.rt, g))
                 .collect::<Result<_>>()?;
             mean_grads = mean;
             micro_grads = micros;
@@ -427,9 +445,9 @@ impl Engine for StepEngine {
         if opts.track_delta {
             self.delta.begin_step(&mut self.tr)?;
         }
-        let step_buf = self.rt.upload_scalar(self.adam_steps as f32)?;
+        let step_buf = self.meter.upload_scalar(&self.rt, self.adam_steps as f32)?;
         if self.lr_buf.as_ref().map(|(v, _)| *v) != Some(opts.lr) {
-            self.lr_buf = Some((opts.lr, self.rt.upload_scalar(opts.lr)?));
+            self.lr_buf = Some((opts.lr, self.meter.upload_scalar(&self.rt, opts.lr)?));
         }
         // Donated dispatch: trainable/m/v and the mean gradient hand their
         // buffers over; adam_apply's alias map reuses the allocations in
@@ -444,7 +462,7 @@ impl Engine for StepEngine {
         inputs.push(InputBuf::Borrowed(&step_buf));
         inputs.extend(g_bufs.into_iter().map(InputBuf::Donated));
         inputs.push(InputBuf::Borrowed(&self.lr_buf.as_ref().unwrap().1));
-        let outs = self.adam_prog.execute_raw_donated(inputs)?;
+        let outs = self.adam_prog.execute_raw_donated_metered(inputs, Some(&self.meter))?;
         let mut outs = outs.into_iter();
         self.tr.adopt_all(&mut outs)?;
         self.m.adopt_all(&mut outs)?;
@@ -525,7 +543,7 @@ impl Engine for StepEngine {
                     EvalSplit::Val => &self.val_batches,
                     EvalSplit::Test => &self.test_batches,
                 };
-                EvalCache::build(&self.rt, batches)?
+                EvalCache::build_metered(&self.rt, Some(&self.meter), batches)?
             }
         };
         let result = self.eval_cached(&cache);
@@ -544,16 +562,16 @@ impl Engine for StepEngine {
         ensure!(ex.mask.len() == t, "example seq_len {} != model {}", ex.mask.len(), t);
         let scratch = self.qa_scratch.get_or_insert_with(|| ExampleScratch::new(b, t));
         scratch.fill(ex);
-        let tok = self.rt.upload_i32(scratch.tokens(), &[b, t])?;
-        let tgt = self.rt.upload_i32(scratch.targets(), &[b, t])?;
-        let msk = self.rt.upload_f32(scratch.mask(), &[b, t])?;
+        let tok = self.meter.upload_i32(&self.rt, scratch.tokens(), &[b, t])?;
+        let tgt = self.meter.upload_i32(&self.rt, scratch.targets(), &[b, t])?;
+        let msk = self.meter.upload_f32(&self.rt, scratch.mask(), &[b, t])?;
         let inputs = param_batch_inputs(
             &mut self.tr,
             &mut self.fr,
             self.eval_prog.spec.inputs.len(),
             [&tok, &tgt, &msk],
         )?;
-        let out = self.eval_prog.execute_buffers(&inputs)?;
+        let out = self.eval_prog.execute_buffers_metered(&inputs, Some(&self.meter))?;
         Ok(EvalMeasure { loss: out.values[0][0], tokens: b * t })
     }
 
@@ -605,7 +623,7 @@ impl Engine for StepEngine {
     }
 
     fn transfers(&self) -> TransferSnapshot {
-        self.rt.stats.snapshot().since(&self.transfers_at_start)
+        self.meter.snapshot()
     }
 
     fn state_transfer_counts(&self) -> (u64, u64) {

@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use crate::data::batcher::Batch;
 use crate::data::corpus::Example;
-use crate::runtime::Runtime;
+use crate::runtime::{upload_f32_opt, upload_i32_opt, Runtime, TransferMeter};
 
 /// One eval batch resident on the device, plus the host-side scalars the
 /// loss aggregation needs (mask weight, FLOPs token count).
@@ -44,6 +44,16 @@ impl EvalCache {
     /// is entirely zero contribute nothing to the weighted mean and are
     /// skipped outright — they never cross the host↔device boundary.
     pub fn build(rt: &Runtime, batches: &[(Batch, usize)]) -> Result<EvalCache> {
+        Self::build_metered(rt, None, batches)
+    }
+
+    /// [`EvalCache::build`] that additionally tallies the one-time cache
+    /// uploads into the owning run's exact [`TransferMeter`].
+    pub fn build_metered(
+        rt: &Runtime,
+        meter: Option<&TransferMeter>,
+        batches: &[(Batch, usize)],
+    ) -> Result<EvalCache> {
         let mut chunks = Vec::with_capacity(batches.len());
         for (batch, _real) in batches {
             let mask_sum: f32 = batch.mask.iter().sum();
@@ -51,9 +61,9 @@ impl EvalCache {
                 continue;
             }
             chunks.push(EvalChunk {
-                tokens: rt.upload_i32(&batch.tokens, &[batch.b, batch.t])?,
-                targets: rt.upload_i32(&batch.targets, &[batch.b, batch.t])?,
-                mask: rt.upload_f32(&batch.mask, &[batch.b, batch.t])?,
+                tokens: upload_i32_opt(rt, meter, &batch.tokens, &[batch.b, batch.t])?,
+                targets: upload_i32_opt(rt, meter, &batch.targets, &[batch.b, batch.t])?,
+                mask: upload_f32_opt(rt, meter, &batch.mask, &[batch.b, batch.t])?,
                 mask_sum,
                 total_tokens: batch.total_tokens(),
             });

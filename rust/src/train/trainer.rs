@@ -33,6 +33,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -72,8 +73,16 @@ pub struct RunSummary {
     pub flops: FlopsCounter,
     pub train_seconds: f64,
     pub reached_target: bool,
-    /// Host↔device traffic attributable to this trainer since construction
-    /// (uploads/downloads, calls and bytes) — see runtime §Perf counters.
+    /// True when [`Trainer::run`] stopped early because the cooperative
+    /// cancel flag ([`Trainer::set_cancel_flag`]) was set: the run halted
+    /// at the next step boundary, drained its pipeline, and evaluated —
+    /// the summary describes a consistent partial run, not an error.
+    pub cancelled: bool,
+    /// Host↔device traffic attributable to this trainer since
+    /// construction (uploads/downloads/donations, calls and bytes), read
+    /// from the engine's own `TransferMeter` — exact even while sibling
+    /// runs share the runtime (see runtime §Perf counters and
+    /// `docs/transfer-contract.md` §5).
     pub transfers: TransferSnapshot,
 }
 
@@ -114,6 +123,9 @@ pub struct Trainer {
     pub flops: FlopsCounter,
     pub timer: TrainTimer,
     pub log: RunLog,
+    /// Cooperative cancellation flag, checked at every step boundary of
+    /// [`Trainer::run`] (set by `sched::queue::RunHandle::cancel`).
+    cancel: Option<Arc<AtomicBool>>,
     /// Dispatched-but-unresolved step records, FIFO by ticket; losses are
     /// backfilled into [`RunLog`] as the engine's readback ring drains.
     pending_records: VecDeque<PendingRecord>,
@@ -207,6 +219,7 @@ impl Trainer {
             flops: FlopsCounter::default(),
             timer: TrainTimer::start(),
             log: RunLog::default(),
+            cancel: None,
             pending_records: VecDeque::new(),
             last_loss: None,
             w0_trainables,
@@ -215,6 +228,20 @@ impl Trainer {
 
     pub fn adam_steps(&self) -> usize {
         self.engine.adam_steps()
+    }
+
+    /// Install a cooperative cancellation flag. [`Trainer::run`] checks it
+    /// at every step boundary (before dispatching the next SGD step or FF
+    /// stage): once set, the loop stops, the pipeline drains, the final
+    /// eval runs, and the summary comes back with `cancelled = true` —
+    /// cancellation is a clean early stop, never an error or a torn state.
+    pub fn set_cancel_flag(&mut self, flag: Arc<AtomicBool>) {
+        self.cancel = Some(flag);
+    }
+
+    /// Whether the installed cancel flag (if any) has been raised.
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
     }
 
     /// Monotone step index counting SGD + simulated steps (Fig 4 x-axis).
@@ -492,13 +519,28 @@ impl Trainer {
     /// comes out identical to the synchronous path, just written later).
     pub fn run(&mut self, stop: &StopRule) -> Result<RunSummary> {
         let mut reached = false;
+        // True only when the *loop* stopped because of the flag — a
+        // cancel that lands after the stop rule already ended the run
+        // (e.g. during the final drain/eval) cut no work short and must
+        // not mark a fully-delivered run cancelled.
+        let mut cancelled = false;
         loop {
             let max = match stop {
                 StopRule::MaxSteps(n) => *n,
                 StopRule::TargetLoss { max_steps, .. } => *max_steps,
                 StopRule::Convergence { max_steps, .. } => *max_steps,
             };
+            // Step-budget exhaustion is checked FIRST: a cancel that
+            // races a run's natural completion must not reclassify a
+            // fully-delivered run as cancelled.
             if self.adam_steps() >= max {
+                break;
+            }
+            // Cooperative cancellation lands here — a step boundary: the
+            // previous step/stage fully dispatched, nothing half-done,
+            // and at least one more step was still owed.
+            if self.cancel_requested() {
+                cancelled = true;
                 break;
             }
             let did_ff = match self.ffc.next() {
@@ -525,6 +567,10 @@ impl Trainer {
             if let StopRule::Convergence { tail, .. } = stop {
                 if self.ffc.is_permanently_off() {
                     for _ in 0..*tail {
+                        if self.cancel_requested() {
+                            cancelled = true;
+                            break;
+                        }
                         self.dispatch_sgd_step()?;
                     }
                     break;
@@ -540,6 +586,7 @@ impl Trainer {
             flops: self.flops,
             train_seconds: self.timer.elapsed(),
             reached_target: reached,
+            cancelled,
             transfers: self.transfers(),
         })
     }

@@ -1,8 +1,10 @@
 //! Scheduler integration (requires `make artifacts`): whole training runs
 //! fanned out over the worker pool must be *bit-identical* to running them
 //! sequentially — the shared runtime/program/W0 state is read-only, every
-//! run owns its own engine and stream, and the shared transfer meters are
-//! atomic, so totals stay exact (not approximate) under concurrency.
+//! run owns its own engine and stream, the shared transfer meters are
+//! atomic (totals exact, not approximate, under concurrency), and each
+//! run's `RunSummary::transfers` comes from its engine's own
+//! `TransferMeter`, so per-run byte totals are exact at any jobs level.
 //!
 //! In the default build (no `xla-shared-client` feature) the pool clamps
 //! to one inline worker — `run_batch(4)` then exercises the sequential
@@ -119,6 +121,53 @@ fn pool_is_bit_identical_and_meters_exactly_across_jobs_levels() {
     assert_eq!(seq.transfers.donations, par.transfers.donations);
     assert_eq!(seq.transfers.donated_bytes, par.transfers.donated_bytes);
     assert!(seq.transfers.uploaded_bytes > 0, "batch moved real bytes");
+}
+
+#[test]
+fn per_run_transfers_equal_solo_baselines_and_sum_to_the_batch_total() {
+    // The per-engine TransferMeter contract: a run's
+    // `RunSummary::transfers` is *its own* traffic, byte-for-byte,
+    // at any jobs level. The PR-4 window approach (diffing the shared
+    // global meters around the run) fails this whenever sibling runs
+    // share the batch; the per-engine meter must match the solo-run
+    // baseline exactly, and the batch's boundary-measured global window
+    // must equal the sum of the per-run meters.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = Arc::new(ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap());
+    let cache = ArtifactCache::new(root);
+    let mk = |label: &str, seed: u64, ff: bool| RunSpec {
+        label: label.to_string(),
+        cfg: cfg(seed, ff),
+        stop: StopRule::MaxSteps(6),
+        base: Some(Arc::clone(&base)),
+        drain_interval: None,
+    };
+    // solo baselines: one run per batch — nothing else can pollute even
+    // a window, so solo per-run numbers are ground truth
+    let solo_a = WorkerPool::new(1).run_all(&rt, &cache, vec![mk("a", 21, false)]).unwrap();
+    let solo_b = WorkerPool::new(1).run_all(&rt, &cache, vec![mk("b", 22, true)]).unwrap();
+    // the same two specs sharing one batch (threaded when gated)
+    let both = WorkerPool::new(4)
+        .run_all(&rt, &cache, vec![mk("a", 21, false), mk("b", 22, true)])
+        .unwrap();
+    assert_eq!(
+        both.outputs[0].summary.transfers,
+        solo_a.outputs[0].summary.transfers,
+        "run a's exact meter must match its solo baseline byte-for-byte"
+    );
+    assert_eq!(
+        both.outputs[1].summary.transfers,
+        solo_b.outputs[0].summary.transfers,
+        "run b's exact meter must match its solo baseline byte-for-byte"
+    );
+    let summed = both.outputs[0].summary.transfers.plus(&both.outputs[1].summary.transfers);
+    assert!(summed.uploaded_bytes > 0);
+    assert_eq!(
+        summed,
+        both.transfers,
+        "per-run exact meters must sum to the batch's global window"
+    );
 }
 
 #[test]

@@ -196,6 +196,55 @@ fn device_accumulation_uploads_batch_bytes_only() {
 }
 
 #[test]
+fn steady_state_contract_holds_per_engine_amid_sibling_traffic() {
+    // §3's batch-bytes-only contract must hold *per engine*, not just
+    // globally: interleave a sibling trainer's steps (and an eval-cache
+    // build) inside the measured window and assert the measured
+    // trainer's transfer delta is unchanged. A window over the shared
+    // global meters — the pre-TransferMeter approach — fails this even
+    // single-threaded; the per-engine meter keeps sibling traffic out.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let cfg = tiny_cfg(false, 8);
+    let global_batch = cfg.global_batch;
+    let mut t = Trainer::new(&rt, &root, cfg, Some(&base)).unwrap();
+    if !t.art.manifest.has_program("grad_accum") {
+        eprintln!("skipping: artifact predates grad_accum (regenerate with make artifacts)");
+        return;
+    }
+    // the sibling is FF-enabled: its steps move Δ_W downloads, eval
+    // uploads, and gradient downloads — loud pollution for a window
+    let mut sibling = Trainer::new(&rt, &root, tiny_cfg(true, 8), Some(&base)).unwrap();
+
+    t.sgd_step().unwrap();
+    t.sgd_step().unwrap();
+    sibling.sgd_step().unwrap();
+    let tr0 = t.transfers();
+    let steps = 3u64;
+    for _ in 0..steps {
+        t.sgd_step().unwrap();
+        sibling.sgd_step().unwrap();
+        sibling.eval_val().unwrap();
+    }
+    let d = t.transfers().since(&tr0);
+    let mc = t.art.manifest.config.model.clone();
+    let n_micro = global_batch / mc.micro_batch;
+    let batch_bytes = (n_micro * 3 * mc.micro_batch * mc.seq_len * 4 + 4) as u64;
+    assert_eq!(
+        d.uploaded_bytes,
+        steps * batch_bytes,
+        "per-engine steady-state uploads must stay batch + step scalar \
+         only, sibling traffic excluded: {d:?}"
+    );
+    assert_eq!(
+        d.downloaded_bytes,
+        steps * n_micro as u64 * 4,
+        "per-engine downloads must be this engine's loss scalars only: {d:?}"
+    );
+}
+
+#[test]
 fn host_and_device_accumulation_paths_agree() {
     // keep_micro_grads forces the host GradAccumulator path (Fig 13's
     // setting); it must reproduce the device path's training trajectory.
