@@ -30,7 +30,7 @@ import jax
 
 from compile import configs, model
 from compile.configs import (ADAM_BETA1, ADAM_BETA2, ADAM_EPS, ArtifactConfig,
-                             PROGRAMS, frozen_spec, trainable_spec)
+                             frozen_spec, trainable_spec)
 
 
 def to_hlo_text(lowered) -> str:
@@ -85,15 +85,15 @@ def emit_artifact(ac: ArtifactConfig, out_dir: str, force: bool = False) -> dict
     manifest = manifest_for(ac)
     src_mtime = max(
         os.path.getmtime(os.path.join(os.path.dirname(__file__), f))
-        for f in ("model.py", "configs.py", "aot.py",
+        for f in ("model.py", "configs.py", "aot.py", "contraction.py",
                   os.path.join("kernels", "lora_matmul.py"),
                   os.path.join("kernels", "ref.py")))
 
-    for program in PROGRAMS:
+    for program in configs.programs_for(ac):
         hlo_path = os.path.join(adir, f"{program}.hlo.txt")
         ins, outs = model.program_io(ac, program)
         donated = model.donated_input_slots(ac, program)
-        manifest["programs"][program] = {
+        entry = {
             "file": f"{program}.hlo.txt",
             "inputs": ins,
             "outputs": outs,
@@ -102,6 +102,16 @@ def emit_artifact(ac: ArtifactConfig, out_dir: str, force: bool = False) -> dict
             # and requires these slots to be passed by value.
             "donated_inputs": donated,
         }
+        # Per-shape contraction orders the traced HLO actually uses
+        # (contraction.py chooser); rust/src/flops consumes these so FLOP
+        # accounting matches the emitted program, not an assumed order.
+        orders = model.program_orders(ac, program)
+        if orders is not None:
+            entry["lora_orders"] = orders
+        parsed = model.batched_runs(program)
+        if parsed is not None:
+            entry["batch_runs"] = parsed[1]
+        manifest["programs"][program] = entry
         # Every donated slot with a matching output must survive as an
         # alias map entry; adam_apply donates n more inputs (the grads)
         # than it has outputs, so its expectation caps at the output count.
@@ -121,8 +131,8 @@ def emit_artifact(ac: ArtifactConfig, out_dir: str, force: bool = False) -> dict
                   f"{cached_aliases} aliases, manifest implies "
                   f"{expect_aliases} — re-lowering")
         t0 = time.time()
-        fn, args = model.PROGRAM_FACTORIES[program](ac)
-        donate = model.PROGRAM_DONATE.get(program, ())
+        fn, args = model.program_factory(ac, program)
+        donate = model.program_donate(program)
         with warnings.catch_warnings():
             if len(donated) > len(outs):
                 # adam_apply only: more donated inputs (t/m/v/g) than

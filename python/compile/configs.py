@@ -110,6 +110,26 @@ class ArtifactConfig:
 PROGRAMS = ("train_step", "grad_step", "grad_accum", "grad_finalize",
             "adam_apply", "eval_loss")
 
+# Group sizes for the batched multi-run program variants. The queue packs
+# the largest R ≤ (number of eligible queued runs); exact group sizes
+# only, no padding — a run that misses a group just executes solo.
+BATCHED_RUN_COUNTS = (2, 4)
+
+# Program bases that get a ``_batched{R}`` variant (see model.py).
+BATCHED_BASES = ("train_step", "grad_step", "adam_apply", "eval_loss")
+
+
+def programs_for(ac: ArtifactConfig) -> Tuple[str, ...]:
+    """Every program name ``ac``'s artifact emits: the six solo programs,
+    plus ``{base}_batched{R}`` variants for non-Pallas LoRA artifacts
+    (the only mode where queued runs share a frozen base worth stacking;
+    the Pallas variant is an interpret-mode debugging reference)."""
+    names = list(PROGRAMS)
+    if ac.train_mode == "lora" and not ac.use_pallas:
+        for r in BATCHED_RUN_COUNTS:
+            names.extend(f"{base}_batched{r}" for base in BATCHED_BASES)
+    return tuple(names)
+
 
 def _ac(model: str, mode: str, rank: int = 8, pallas: bool = False) -> ArtifactConfig:
     return ArtifactConfig(MODELS[model], mode, lora_rank=rank, use_pallas=pallas)

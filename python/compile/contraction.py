@@ -1,0 +1,87 @@
+"""Analytic contraction-order selection for LoRA matmul chains.
+
+"Run LoRA Run" (arXiv:2312.03415) observes that the LoRA chain
+``x·A·B`` (x: [M,K], A: [K,r], B: [r,N]) admits two contraction orders
+whose FLOP costs cross over as a function of (M, K, N, r):
+
+  * **factored** ``(x·A)·B`` — the textbook LoRA order, cheap when the
+    rank is small relative to the model width;
+  * **merged**  ``x·(A·B)`` — materialize ``W_lora = A·B`` once per call
+    and apply it like a dense matrix, cheap when r approaches K/N (the
+    full-rank sweep points, r = d_model).
+
+The backward pass has the analogous pair (the merged backward routes the
+adapter gradients through the ``G = xᵀ·g`` [K,N] intermediate instead of
+the [M,r] activations). This module is the single source of truth for the
+cost formulas and the argmin chooser; ``aot.py`` records the chosen order
+per program in the manifest, and ``rust/src/flops`` mirrors these exact
+formulas so runtime FLOP accounting matches what the HLO actually does.
+
+``W_lora`` is **never** folded into ``W0``: the base matrix is a shared,
+frozen buffer (uploaded once and reused across every run batched over the
+same artifact — see docs/transfer-contract.md §5), so the merged order
+adds ``x·W_lora`` as a second dense matmul instead of mutating ``W0``.
+
+All costs use the 2·(multiply-add) convention of the rust FLOP model and
+count only the *adapter* work — the base ``x·W0`` term (2·M·K·N) is
+identical under both orders and stays in the base model's accounting.
+"""
+
+from __future__ import annotations
+
+FACTORED = "factored"
+MERGED = "merged"
+ORDERS = (FACTORED, MERGED)
+
+
+def forward_flops(order: str, m: int, k: int, n: int, r: int) -> int:
+    """Adapter-only forward cost of one projection, excluding ``x·W0``.
+
+    factored: ``(x·A)·B``          → 2·M·r·K + 2·M·r·N
+    merged:   ``W_l=A·B; x·W_l``   → 2·K·r·N + 2·M·K·N
+    """
+    if order == FACTORED:
+        return 2 * m * r * (k + n)
+    assert order == MERGED, order
+    return 2 * k * r * n + 2 * m * k * n
+
+
+def backward_flops(order: str, m: int, k: int, n: int, r: int) -> int:
+    """Adapter backward cost (dA, dB, and the adapter term of dx).
+
+    factored (the legacy VJP):
+      ``gb = g·Bᵀ`` (2MNr), ``dx += gb·Aᵀ`` (2MKr),
+      ``dA = xᵀ·gb`` (2MKr), ``dB = (x·A)ᵀ·g`` (2MKr + 2MNr)
+      → 2·M·r·(3K + 2N)
+    merged (via the [K,N] intermediate ``G = xᵀ·g``):
+      ``G`` (2MKN), ``dA = G·Bᵀ`` (2KrN), ``dB = Aᵀ·G`` (2KrN),
+      dx stays factored: ``(g·Bᵀ)·Aᵀ`` (2MNr + 2MKr)
+      → 2·M·K·N + 4·K·r·N + 2·M·r·(K + N)
+    """
+    if order == FACTORED:
+        return 2 * m * r * (3 * k + 2 * n)
+    assert order == MERGED, order
+    return 2 * m * k * n + 4 * k * r * n + 2 * m * r * (k + n)
+
+
+def choose_forward(m: int, k: int, n: int, r: int) -> str:
+    """Argmin of ``forward_flops`` over the two orders (tie → factored,
+    the legacy order, so old artifacts re-emit unchanged)."""
+    if forward_flops(MERGED, m, k, n, r) < forward_flops(FACTORED, m, k, n, r):
+        return MERGED
+    return FACTORED
+
+
+def choose_backward(m: int, k: int, n: int, r: int) -> str:
+    """Argmin of ``backward_flops`` over the two orders (tie → factored)."""
+    if backward_flops(MERGED, m, k, n, r) < backward_flops(FACTORED, m, k, n, r):
+        return MERGED
+    return FACTORED
+
+
+def choose_orders(m: int, k: int, n: int, r: int) -> dict:
+    """Both chosen orders for one projection shape, manifest-ready."""
+    return {
+        "forward": choose_forward(m, k, n, r),
+        "backward": choose_backward(m, k, n, r),
+    }

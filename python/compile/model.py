@@ -47,6 +47,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from compile import contraction
 from compile.configs import (ADAM_BETA1, ADAM_BETA2, ADAM_EPS, ArtifactConfig,
                              frozen_spec, trainable_spec)
 from compile.kernels.lora_matmul import lora_matmul_batched
@@ -74,35 +75,56 @@ def pack_params(ac: ArtifactConfig, trainables: List[jax.Array],
 
 
 # ---------------------------------------------------------------------------
-# Pallas-forward LoRA projection with a reference-math backward.
+# Order-aware LoRA projection with an explicitly-ordered backward.
 #
-# interpret-mode pallas_call does not define transpose rules for every
-# kernel shape, so the differentiable artifact uses a custom VJP: forward
-# through the Pallas kernel, backward through the (mathematically identical)
-# jnp formulation — the flash-attention pattern.
+# The forward contraction order (``contraction.py``: factored ``(x·A)·B``
+# vs merged ``x·(A·B)``) and the backward order are chosen *per shape* at
+# trace time, so each program's HLO carries the analytic-FLOP-minimal
+# chain and the manifest can record exactly what was emitted. The whole
+# projection is a custom VJP — not autodiff — so the backward the FLOP
+# model charges is the backward that actually runs (autodiff of the merged
+# forward would route dx through the materialized A·B, a strictly worse
+# order that the chooser never picks). The Pallas variant keeps its fused
+# forward (FLOP-equivalent to factored; interpret-mode pallas_call lacks
+# transpose rules — the flash-attention pattern) but shares the same
+# order-selectable backward.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _lora_proj_pallas(x, w0, a, b, scale):
-    return lora_matmul_batched(x, w0, a, b, scale)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _lora_proj(x, w0, a, b, scale, orders, use_pallas):
+    """x [..,K] @ (W0 + s·A·B) with ``orders = (fwd_order, bwd_order)``."""
+    if use_pallas:
+        return lora_matmul_batched(x, w0, a, b, scale)
+    if orders[0] == contraction.MERGED:
+        return x @ w0 + scale * (x @ (a @ b))
+    return x @ w0 + scale * ((x @ a) @ b)
 
 
-def _lora_proj_fwd(x, w0, a, b, scale):
-    return _lora_proj_pallas(x, w0, a, b, scale), (x, w0, a, b)
+def _lora_proj_fwd(x, w0, a, b, scale, orders, use_pallas):
+    return _lora_proj(x, w0, a, b, scale, orders, use_pallas), (x, w0, a, b)
 
 
-def _lora_proj_bwd(scale, res, g):
+def _lora_proj_bwd(scale, orders, use_pallas, res, g):
     x, w0, a, b = res
     x2 = x.reshape((-1, x.shape[-1]))
     g2 = g.reshape((-1, g.shape[-1]))
-    dx2 = g2 @ w0.T + scale * ((g2 @ b.T) @ a.T)
     dw0 = x2.T @ g2
-    da = scale * (x2.T @ (g2 @ b.T))
-    db = scale * ((x2 @ a).T @ g2)
+    if orders[1] == contraction.MERGED:
+        # Route dA/dB through the [K,N] intermediate G = xᵀ·g (== dw0, so
+        # XLA computes it once); dx keeps the factored chain — merged dx
+        # would cost 2MKN against factored 2Mr(K+N) and never wins.
+        da = scale * (dw0 @ b.T)
+        db = scale * (a.T @ dw0)
+        dx2 = g2 @ w0.T + scale * ((g2 @ b.T) @ a.T)
+    else:
+        gb = g2 @ b.T
+        dx2 = g2 @ w0.T + scale * (gb @ a.T)
+        da = scale * (x2.T @ gb)
+        db = scale * ((x2 @ a).T @ g2)
     return dx2.reshape(x.shape), dw0, da, db
 
 
-_lora_proj_pallas.defvjp(_lora_proj_fwd, _lora_proj_bwd)
+_lora_proj.defvjp(_lora_proj_fwd, _lora_proj_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +137,21 @@ def _layer_norm(x, scale, bias, eps=1e-5):
     return (x - mu) / jnp.sqrt(var + eps) * scale + bias
 
 
+def _proj_orders(ac: ArtifactConfig, x, w0):
+    """Chosen (forward, backward) contraction orders for one projection,
+    from the traced shapes — the same (M, K, N, r) that ``program_orders``
+    feeds the chooser, so the manifest records exactly what was traced.
+    The Pallas forward is fused (FLOP-equivalent to factored), so its
+    forward order is pinned to factored for accounting."""
+    m = 1
+    for dim in x.shape[:-1]:
+        m *= dim
+    k, n, r = w0.shape[0], w0.shape[1], ac.lora_rank
+    fwd = (contraction.FACTORED if ac.use_pallas
+           else contraction.choose_forward(m, k, n, r))
+    return (fwd, contraction.choose_backward(m, k, n, r))
+
+
 def _proj(ac: ArtifactConfig, params, name: str, x):
     """Apply one (possibly adapted) attention projection: x [B,T,d] → [B,T,d]."""
     w0 = params[name]
@@ -123,9 +160,8 @@ def _proj(ac: ArtifactConfig, params, name: str, x):
         return x @ w0
     a, b = params[f"{name}.lora_a"], params[f"{name}.lora_b"]
     if mode == "lora":
-        if ac.use_pallas:
-            return _lora_proj_pallas(x, w0, a, b, ac.lora_scale)
-        return x @ w0 + ac.lora_scale * ((x @ a) @ b)
+        orders = _proj_orders(ac, x, w0)
+        return _lora_proj(x, w0, a, b, ac.lora_scale, orders, ac.use_pallas)
     assert mode == "dora"
     m = params[f"{name}.dora_m"]
     lead = x.shape[:-1]
@@ -282,6 +318,87 @@ def make_eval_loss(ac: ArtifactConfig):
     return eval_loss, args
 
 
+# ---------------------------------------------------------------------------
+# Batched multi-run variants — one program steps R stacked adapter runs.
+#
+# ``jax.vmap`` over the per-run state (adapters, optimizer state, step
+# counts, batches, learning rates) with the frozen base broadcast
+# (``in_axes=None``): R queued runs that share an artifact ride one
+# dispatch per step and one resident W0 instead of R of each. Program
+# names are ``{base}_batched{R}``; ``configs.programs_for`` decides which
+# R values an artifact emits (LoRA only — the interpret-mode Pallas
+# variant is a debugging reference, and full-rank runs stack nothing
+# worth sharing). The per-run math inside the vmap is byte-for-byte the
+# solo factory's body, which is what makes batched-vs-solo bit-identity
+# a testable contract rather than a hope.
+# ---------------------------------------------------------------------------
+
+def _stacked(spec, runs):
+    return [jax.ShapeDtypeStruct((runs,) + tuple(p.shape), jnp.float32)
+            for p in spec]
+
+
+def _batch_examples_stacked(ac: ArtifactConfig, runs: int, batch_size: int):
+    t = ac.model.seq_len
+    return (
+        jax.ShapeDtypeStruct((runs, batch_size, t), jnp.int32),   # tokens
+        jax.ShapeDtypeStruct((runs, batch_size, t), jnp.int32),   # targets
+        jax.ShapeDtypeStruct((runs, batch_size, t), jnp.float32),  # mask
+    )
+
+
+def make_train_step_batched(ac: ArtifactConfig, runs: int):
+    def train_step(trainables, m, v, step, frozen, tokens, targets, mask, lr):
+        loss, grads = jax.value_and_grad(
+            lambda tr: loss_fn(ac, tr, frozen, tokens, targets, mask))(trainables)
+        new_t, new_m, new_v = adam_update(trainables, m, v, step, grads, lr)
+        return (loss, *new_t, *new_m, *new_v)
+
+    fn = jax.vmap(train_step, in_axes=(0, 0, 0, 0, None, 0, 0, 0, 0))
+    tex = _stacked(trainable_spec(ac), runs)
+    fex = _param_examples(frozen_spec(ac))
+    vec = jax.ShapeDtypeStruct((runs,), jnp.float32)
+    args = (tex, list(tex), list(tex), vec, fex,
+            *_batch_examples_stacked(ac, runs, ac.model.micro_batch), vec)
+    return fn, args
+
+
+def make_grad_step_batched(ac: ArtifactConfig, runs: int):
+    def grad_step(trainables, frozen, tokens, targets, mask):
+        loss, grads = jax.value_and_grad(
+            lambda tr: loss_fn(ac, tr, frozen, tokens, targets, mask))(trainables)
+        return (loss, *grads)
+
+    fn = jax.vmap(grad_step, in_axes=(0, None, 0, 0, 0))
+    args = (_stacked(trainable_spec(ac), runs),
+            _param_examples(frozen_spec(ac)),
+            *_batch_examples_stacked(ac, runs, ac.model.micro_batch))
+    return fn, args
+
+
+def make_adam_apply_batched(ac: ArtifactConfig, runs: int):
+    def adam_apply(trainables, m, v, step, grads, lr):
+        new_t, new_m, new_v = adam_update(trainables, m, v, step, grads, lr)
+        return (*new_t, *new_m, *new_v)
+
+    fn = jax.vmap(adam_apply, in_axes=(0, 0, 0, 0, 0, 0))
+    tex = _stacked(trainable_spec(ac), runs)
+    vec = jax.ShapeDtypeStruct((runs,), jnp.float32)
+    args = (tex, list(tex), list(tex), vec, list(tex), vec)
+    return fn, args
+
+
+def make_eval_loss_batched(ac: ArtifactConfig, runs: int):
+    def eval_loss(trainables, frozen, tokens, targets, mask):
+        return (loss_fn(ac, trainables, frozen, tokens, targets, mask),)
+
+    fn = jax.vmap(eval_loss, in_axes=(0, None, 0, 0, 0))
+    args = (_stacked(trainable_spec(ac), runs),
+            _param_examples(frozen_spec(ac)),
+            *_batch_examples_stacked(ac, runs, ac.model.eval_batch))
+    return fn, args
+
+
 PROGRAM_FACTORIES = {
     "train_step": make_train_step,
     "grad_step": make_grad_step,
@@ -290,6 +407,31 @@ PROGRAM_FACTORIES = {
     "adam_apply": make_adam_apply,
     "eval_loss": make_eval_loss,
 }
+
+BATCHED_FACTORIES = {
+    "train_step": make_train_step_batched,
+    "grad_step": make_grad_step_batched,
+    "adam_apply": make_adam_apply_batched,
+    "eval_loss": make_eval_loss_batched,
+}
+
+
+def batched_runs(program: str):
+    """Parse ``{base}_batched{R}`` → (base, R); None for solo programs."""
+    if "_batched" not in program:
+        return None
+    base, _, suffix = program.rpartition("_batched")
+    return base, int(suffix)
+
+
+def program_factory(ac: ArtifactConfig, program: str):
+    """(fn, example_args) for any program name, solo or ``*_batched{R}``."""
+    parsed = batched_runs(program)
+    if parsed is None:
+        return PROGRAM_FACTORIES[program](ac)
+    base, runs = parsed
+    return BATCHED_FACTORIES[base](ac, runs)
+
 
 # donate_argnums per program — *function-argument* positions (jax.jit
 # semantics: a donated pytree argument donates all its leaves), NOT
@@ -303,14 +445,30 @@ PROGRAM_DONATE = {
     "adam_apply": (0, 1, 2, 4),   # trainables, m, v, grads
 }
 
+# Batched variants own their stacked state (one generation live per group
+# step), so train_step_batched additionally donates t/m/v — unlike solo
+# train_step, whose param inputs are the coordinator's long-lived buffers.
+BATCHED_DONATE = {
+    "train_step": (0, 1, 2),      # stacked trainables, m, v
+    "adam_apply": (0, 1, 2, 4),   # stacked trainables, m, v, grads
+}
+
+
+def program_donate(program: str):
+    """Donated argument positions for any program name."""
+    parsed = batched_runs(program)
+    if parsed is None:
+        return PROGRAM_DONATE.get(program, ())
+    return BATCHED_DONATE.get(parsed[0], ())
+
 
 def donated_input_slots(ac: ArtifactConfig, program: str):
     """Flattened input-slot indices donated by ``program`` (manifest form
-    of ``PROGRAM_DONATE``: argument positions expanded to leaf positions)."""
-    donate = PROGRAM_DONATE.get(program, ())
+    of ``program_donate``: argument positions expanded to leaf positions)."""
+    donate = program_donate(program)
     if not donate:
         return []
-    _, args = PROGRAM_FACTORIES[program](ac)
+    _, args = program_factory(ac, program)
     slots, off = [], 0
     for i, a in enumerate(args):
         k = len(a) if isinstance(a, (list, tuple)) else 1
@@ -338,8 +496,52 @@ def _batch_io(ac, batch):
     ]
 
 
+def _named_stacked(prefix, spec, runs):
+    return [{"name": f"{prefix}:{p.name}", "shape": [runs] + list(p.shape),
+             "dtype": "f32"} for p in spec]
+
+
+def _batch_io_stacked(ac, runs, batch):
+    t = ac.model.seq_len
+    return [
+        {"name": "batch:tokens", "shape": [runs, batch, t], "dtype": "i32"},
+        {"name": "batch:targets", "shape": [runs, batch, t], "dtype": "i32"},
+        {"name": "batch:mask", "shape": [runs, batch, t], "dtype": "f32"},
+    ]
+
+
+def _program_io_batched(ac: ArtifactConfig, base: str, runs: int):
+    ts, fs = trainable_spec(ac), frozen_spec(ac)
+    vec_f = lambda n: {"name": n, "shape": [runs], "dtype": "f32"}
+    loss = vec_f("loss")
+    st = lambda prefix: _named_stacked(prefix, ts, runs)
+    if base == "train_step":
+        ins = (st("t") + st("m") + st("v") + [vec_f("step")] + _named("f", fs)
+               + _batch_io_stacked(ac, runs, ac.model.micro_batch)
+               + [vec_f("lr")])
+        outs = [loss] + st("t") + st("m") + st("v")
+    elif base == "grad_step":
+        ins = (st("t") + _named("f", fs)
+               + _batch_io_stacked(ac, runs, ac.model.micro_batch))
+        outs = [loss] + st("g")
+    elif base == "adam_apply":
+        ins = (st("t") + st("m") + st("v") + [vec_f("step")] + st("g")
+               + [vec_f("lr")])
+        outs = st("t") + st("m") + st("v")
+    elif base == "eval_loss":
+        ins = (st("t") + _named("f", fs)
+               + _batch_io_stacked(ac, runs, ac.model.eval_batch))
+        outs = [loss]
+    else:
+        raise ValueError(base)
+    return ins, outs
+
+
 def program_io(ac: ArtifactConfig, program: str):
     """(inputs, outputs) descriptors, in exact flattened order."""
+    parsed = batched_runs(program)
+    if parsed is not None:
+        return _program_io_batched(ac, *parsed)
     ts, fs = trainable_spec(ac), frozen_spec(ac)
     scalar_f = lambda n: {"name": n, "shape": [], "dtype": "f32"}
     loss = {"name": "loss", "shape": [], "dtype": "f32"}
@@ -369,3 +571,31 @@ def program_io(ac: ArtifactConfig, program: str):
     else:
         raise ValueError(program)
     return ins, outs
+
+
+def program_orders(ac: ArtifactConfig, program: str):
+    """Contraction orders the manifest records for ``program``: a dict with
+    ``"forward"`` (and, for programs with a backward pass, ``"backward"``),
+    or None when the program contains no LoRA matmul (non-LoRA artifacts,
+    the pure-elementwise optimizer programs). Recomputes exactly what
+    ``_proj_orders`` chose at trace time: every adapted projection is
+    d×d (``configs.ADAPTED_MATRICES``), so one (M, K, N, r) shape — and
+    one order pair — covers the whole program."""
+    if ac.train_mode != "lora":
+        return None
+    parsed = batched_runs(program)
+    base = parsed[0] if parsed else program
+    if base in ("train_step", "grad_step"):
+        batch = ac.model.micro_batch   # per-run batch, also under vmap
+    elif base == "eval_loss":
+        batch = ac.model.eval_batch
+    else:
+        return None                    # grad_accum/grad_finalize/adam_apply
+    m = batch * ac.model.seq_len
+    d, r = ac.model.d_model, ac.lora_rank
+    fwd = (contraction.FACTORED if ac.use_pallas
+           else contraction.choose_forward(m, d, d, r))
+    orders = {"forward": fwd}
+    if base != "eval_loss":
+        orders["backward"] = contraction.choose_backward(m, d, d, r)
+    return orders

@@ -88,6 +88,36 @@ def test_manifest_donated_slots_expand_argnums(smoke_dir):
     assert man["programs"]["train_step"]["donated_inputs"] == []
 
 
+def test_manifest_records_orders_and_batch_runs(smoke_dir):
+    """New manifest fields: ``lora_orders`` on every program with a LoRA
+    matmul (solo and batched), ``batch_runs`` on batched variants only."""
+    out, ac = smoke_dir
+    man = json.loads((out / ac.key / "manifest.json").read_text())
+    progs = man["programs"]
+    for name in ("train_step", "grad_step"):
+        assert progs[name]["lora_orders"] == model.program_orders(ac, name)
+        assert set(progs[name]["lora_orders"]) == {"forward", "backward"}
+        assert "batch_runs" not in progs[name]
+    assert set(progs["eval_loss"]["lora_orders"]) == {"forward"}
+    for name in ("grad_accum", "grad_finalize", "adam_apply"):
+        assert "lora_orders" not in progs[name]
+    for runs in configs.BATCHED_RUN_COUNTS:
+        for base in configs.BATCHED_BASES:
+            entry = progs[f"{base}_batched{runs}"]
+            assert entry["batch_runs"] == runs
+            # the run axis is the leading dim of every stacked input
+            t0 = next(i for i in entry["inputs"] if i["name"].startswith("t:"))
+            assert t0["shape"][0] == runs
+    # batched donation survives lowering; grad/eval stay alias-free
+    for runs in configs.BATCHED_RUN_COUNTS:
+        for base in configs.BATCHED_BASES:
+            text = (out / ac.key / f"{base}_batched{runs}.hlo.txt").read_text()
+            if base in ("train_step", "adam_apply"):
+                assert "input_output_alias" in text, (base, runs)
+            else:
+                assert "input_output_alias" not in text, (base, runs)
+
+
 def test_grad_accum_and_finalize_compute_the_mean(smoke_dir):
     """acc/finalize chained over micro-batch grads == the arithmetic mean
     (mirrors rust/src/optim/accum.rs and the trainer's device path)."""

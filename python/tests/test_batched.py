@@ -1,0 +1,198 @@
+"""Batched (vmapped) program variants vs solo programs — bit-identity.
+
+The rust queue packs K same-artifact runs into one ``*_batched{K}``
+dispatch and promises each tenant bit-identical losses vs running solo
+(docs/step-pipeline.md). That promise is only as good as XLA compiling
+the vmapped body to the same per-run arithmetic as the solo program, so
+these tests compare *compiled* outputs byte-for-byte (``tobytes``), not
+within tolerance. The fused-vs-chained test pins the other half of the
+contract: the solo engine steps via grad_step → grad_finalize(×1.0) →
+adam_apply, so the batched runner must use the chained pair too unless
+the fused ``train_step`` is proven bitwise-equal to the chain.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model
+from tests.conftest import init_params, make_batch, tiny_ac
+
+RUNS = 2
+
+
+def _bitwise_equal(got, want, ctx=""):
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape, (ctx, got.shape, want.shape)
+    assert got.tobytes() == want.tobytes(), (
+        f"{ctx}: max abs diff "
+        f"{np.abs(got.astype(np.float64) - want.astype(np.float64)).max()}")
+
+
+def _runs_state(ac, seed=0):
+    """Per-run (trainables, m, v, step, lr, batch) for RUNS distinct runs
+    over a shared frozen base."""
+    fr = init_params(configs.frozen_spec(ac), np.random.default_rng(99))
+    runs = []
+    for i in range(RUNS):
+        rng = np.random.default_rng(seed + 10 * i)
+        tr = init_params(configs.trainable_spec(ac), rng)
+        tr = [t + 0.01 * (i + 1) for t in tr]   # distinct adapters per run
+        m = [jnp.zeros_like(t) for t in tr]
+        v = [jnp.zeros_like(t) for t in tr]
+        step = jnp.asarray(float(i), jnp.float32)
+        lr = jnp.asarray(1e-3 * (i + 1), jnp.float32)
+        batch = make_batch(ac, rng)
+        runs.append((tr, m, v, step, lr, batch))
+    return fr, runs
+
+
+def _stack(runs, idx):
+    """Stack component ``idx`` (a list of arrays per run) along axis 0."""
+    return [jnp.stack([r[idx][j] for r in runs])
+            for j in range(len(runs[0][idx]))]
+
+
+def _stack_scalar(runs, idx):
+    return jnp.stack([r[idx] for r in runs])
+
+
+def _stack_batch(runs):
+    return tuple(jnp.stack([r[5][j] for r in runs]) for j in range(3))
+
+
+def test_grad_step_batched_bitwise_equals_solo():
+    ac = tiny_ac()
+    fr, runs = _runs_state(ac)
+    solo_fn, _ = model.PROGRAM_FACTORIES["grad_step"](ac)
+    solo = jax.jit(solo_fn)
+    bat_fn, _ = model.BATCHED_FACTORIES["grad_step"](ac, RUNS)
+    batched = jax.jit(bat_fn)
+
+    tok, tgt, msk = _stack_batch(runs)
+    out_b = batched(_stack(runs, 0), fr, tok, tgt, msk)
+    for i, (tr, _, _, _, _, (tki, tgi, mki)) in enumerate(runs):
+        out_s = solo(tr, fr, tki, tgi, mki)
+        _bitwise_equal(out_b[0][i], out_s[0], f"run{i} loss")
+        for j in range(1, len(out_s)):
+            _bitwise_equal(out_b[j][i], out_s[j], f"run{i} grad{j}")
+
+
+def test_adam_apply_batched_bitwise_equals_solo():
+    ac = tiny_ac()
+    fr, runs = _runs_state(ac)
+    # use real grads so the update exercises non-trivial values
+    gs_fn = jax.jit(model.PROGRAM_FACTORIES["grad_step"](ac)[0])
+    grads = [gs_fn(r[0], fr, *r[5])[1:] for r in runs]
+
+    solo = jax.jit(model.PROGRAM_FACTORIES["adam_apply"](ac)[0])
+    batched = jax.jit(model.BATCHED_FACTORIES["adam_apply"](ac, RUNS)[0])
+    g_stacked = [jnp.stack([g[j] for g in grads])
+                 for j in range(len(grads[0]))]
+    out_b = batched(_stack(runs, 0), _stack(runs, 1), _stack(runs, 2),
+                    _stack_scalar(runs, 3), g_stacked, _stack_scalar(runs, 4))
+    for i, (tr, m, v, step, lr, _) in enumerate(runs):
+        out_s = solo(tr, m, v, step, list(grads[i]), lr)
+        for j in range(len(out_s)):
+            _bitwise_equal(out_b[j][i], out_s[j], f"run{i} out{j}")
+
+
+def test_eval_loss_batched_bitwise_equals_solo():
+    ac = tiny_ac()
+    fr, runs = _runs_state(ac)
+    eb = ac.model.eval_batch
+    solo = jax.jit(model.PROGRAM_FACTORIES["eval_loss"](ac)[0])
+    batched = jax.jit(model.BATCHED_FACTORIES["eval_loss"](ac, RUNS)[0])
+    batches = [make_batch(ac, np.random.default_rng(40 + i), batch=eb)
+               for i in range(RUNS)]
+    tok, tgt, msk = (jnp.stack([b[j] for b in batches]) for j in range(3))
+    out_b = batched(_stack(runs, 0), fr, tok, tgt, msk)
+    for i, r in enumerate(runs):
+        out_s = solo(r[0], fr, *batches[i])
+        _bitwise_equal(out_b[0][i], out_s[0], f"run{i} eval loss")
+
+
+def test_train_step_batched_bitwise_equals_solo():
+    ac = tiny_ac()
+    fr, runs = _runs_state(ac)
+    solo = jax.jit(model.PROGRAM_FACTORIES["train_step"](ac)[0])
+    batched = jax.jit(model.BATCHED_FACTORIES["train_step"](ac, RUNS)[0])
+    tok, tgt, msk = _stack_batch(runs)
+    out_b = batched(_stack(runs, 0), _stack(runs, 1), _stack(runs, 2),
+                    _stack_scalar(runs, 3), fr, tok, tgt, msk,
+                    _stack_scalar(runs, 4))
+    for i, (tr, m, v, step, lr, (tki, tgi, mki)) in enumerate(runs):
+        out_s = solo(tr, m, v, step, fr, tki, tgi, mki, lr)
+        for j in range(len(out_s)):
+            _bitwise_equal(out_b[j][i], out_s[j], f"run{i} out{j}")
+
+
+def test_fused_train_step_vs_chained_grad_adam():
+    """Decides the rust batched dispatch design: the solo engine never runs
+    the fused train_step (it chains grad_step → grad_finalize(×1.0) →
+    adam_apply), so bit-identical packing may only use the fused batched
+    program if fused == chained bitwise. If this test ever starts failing
+    the batched runner must stay on the chained pair (it currently does —
+    see rust/src/train/batched.rs)."""
+    ac = tiny_ac()
+    fr, runs = _runs_state(ac)
+    tr, m, v, step, lr, (tok, tgt, msk) = runs[0]
+
+    fused = jax.jit(model.PROGRAM_FACTORIES["train_step"](ac)[0])
+    out_f = fused(tr, m, v, step, fr, tok, tgt, msk, lr)
+
+    gs = jax.jit(model.PROGRAM_FACTORIES["grad_step"](ac)[0])
+    fin = jax.jit(model.PROGRAM_FACTORIES["grad_finalize"](ac)[0])
+    ad = jax.jit(model.PROGRAM_FACTORIES["adam_apply"](ac)[0])
+    loss_and_g = gs(tr, fr, tok, tgt, msk)
+    g = fin(list(loss_and_g[1:]), jnp.asarray(1.0, jnp.float32))
+    out_c = ad(tr, m, v, step, list(g), lr)
+
+    _bitwise_equal(out_f[0], loss_and_g[0], "loss")
+    for j in range(len(out_c)):
+        _bitwise_equal(out_f[1 + j], out_c[j], f"out{j}")
+
+
+def test_batched_io_matches_lowering_arity():
+    """program_io / donated_input_slots stay in lock-step with the actual
+    vmapped lowering (the same arity cross-check aot.py enforces)."""
+    ac = tiny_ac()
+    for runs in configs.BATCHED_RUN_COUNTS:
+        for base in configs.BATCHED_BASES:
+            program = f"{base}_batched{runs}"
+            fn, args = model.program_factory(ac, program)
+            ins, outs = model.program_io(ac, program)
+            n_in = sum(len(a) if isinstance(a, (list, tuple)) else 1
+                       for a in args)
+            assert n_in == len(ins), program
+            shaped = jax.eval_shape(fn, *args)
+            flat = jax.tree_util.tree_leaves(shaped)
+            assert len(flat) == len(outs), program
+            for leaf, o in zip(flat, outs):
+                assert list(leaf.shape) == o["shape"], (program, o["name"])
+            donated = model.donated_input_slots(ac, program)
+            assert all(0 <= s < len(ins) for s in donated), program
+            # donated slots must name the stacked t/m/v state, never the
+            # shared frozen base or the batch
+            for s in donated:
+                prefix = ins[s]["name"].split(":", 1)[0]
+                assert prefix in ("t", "m", "v", "g"), (program, ins[s])
+
+
+def test_programs_for_gating():
+    """Batched variants exist only for non-Pallas LoRA artifacts."""
+    assert any("_batched" in p for p in configs.programs_for(tiny_ac()))
+    assert not any("_batched" in p
+                   for p in configs.programs_for(tiny_ac(pallas=True)))
+    assert not any("_batched" in p
+                   for p in configs.programs_for(tiny_ac("full_all")))
+    assert not any("_batched" in p
+                   for p in configs.programs_for(tiny_ac("dora")))
+    for p in configs.programs_for(tiny_ac()):
+        parsed = model.batched_runs(p)
+        if parsed is not None:
+            assert parsed[0] in configs.BATCHED_BASES
+            assert parsed[1] in configs.BATCHED_RUN_COUNTS

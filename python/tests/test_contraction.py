@@ -1,0 +1,173 @@
+"""Contraction-order chooser: analytic-argmin property + numeric parity.
+
+No hypothesis dependency — the property test enumerates an explicit
+(d, r, batch, seq) grid, brute-forces the FLOP argmin from the cost
+formulas, and asserts the chooser agrees. A second group checks the two
+orders compute the same function (forward and custom-VJP backward), so
+the chooser is free to pick either without changing results beyond
+float re-association.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, contraction, model
+from tests.conftest import init_params, make_batch, tiny_ac
+
+# The grid deliberately straddles the crossover: r from tiny to full-rank
+# (r = d), M from a single short row to a large token block.
+GRID_D = (32, 64, 256)
+GRID_R_FRAC = (1, 8, 32, 64)       # rank candidates, capped at d
+GRID_M = (8, 512, 8192)            # batch*seq products
+
+
+def _grid():
+    for d, r, m in itertools.product(GRID_D, GRID_R_FRAC, GRID_M):
+        if r <= d:
+            yield m, d, d, r
+
+
+def test_chooser_picks_analytic_forward_minimum():
+    for m, k, n, r in _grid():
+        best = min(contraction.ORDERS,
+                   key=lambda o: contraction.forward_flops(o, m, k, n, r))
+        chosen = contraction.choose_forward(m, k, n, r)
+        assert (contraction.forward_flops(chosen, m, k, n, r)
+                == contraction.forward_flops(best, m, k, n, r)), (m, k, n, r)
+
+
+def test_chooser_picks_analytic_backward_minimum():
+    for m, k, n, r in _grid():
+        best = min(contraction.ORDERS,
+                   key=lambda o: contraction.backward_flops(o, m, k, n, r))
+        chosen = contraction.choose_backward(m, k, n, r)
+        assert (contraction.backward_flops(chosen, m, k, n, r)
+                == contraction.backward_flops(best, m, k, n, r)), (m, k, n, r)
+
+
+def test_tie_breaks_to_factored():
+    """Equal-cost shapes must keep the legacy order so re-emitted artifacts
+    stay stable."""
+    for m, k, n, r in _grid():
+        if (contraction.forward_flops("factored", m, k, n, r)
+                == contraction.forward_flops("merged", m, k, n, r)):
+            assert contraction.choose_forward(m, k, n, r) == "factored"
+
+
+def test_both_orders_exercised_by_default_artifact_set():
+    """The rank sweep (r=1..64 on ff-tiny) must cross the boundary in both
+    directions — otherwise the merged path ships untested by any artifact."""
+    ac0 = tiny_ac()
+    m = ac0.model.micro_batch * ac0.model.seq_len
+    d = ac0.model.d_model
+    fwd = {contraction.choose_forward(m, d, d, r)
+           for r in (1, 2, 4, 8, 16, 32, 64)}
+    bwd = {contraction.choose_backward(m, d, d, r)
+           for r in (1, 2, 4, 8, 16, 32, 64)}
+    assert fwd == set(contraction.ORDERS)
+    assert bwd == set(contraction.ORDERS)
+
+
+def test_merged_beats_factored_at_full_rank():
+    """At r = d (the §6.1 full-rank LoRA point) merged must win both ways
+    whenever M > d — the motivating case from arXiv:2312.03415."""
+    for d in GRID_D:
+        m = 8 * d
+        assert contraction.choose_forward(m, d, d, d) == contraction.MERGED
+        assert contraction.choose_backward(m, d, d, d) == contraction.MERGED
+
+
+def _loss_grad(ac, tr, fr, batch):
+    tok, tgt, msk = batch
+    return jax.value_and_grad(
+        lambda t: model.loss_fn(ac, t, fr, tok, tgt, msk))(tr)
+
+
+@pytest.mark.parametrize("orders", [
+    ("factored", "factored"), ("merged", "merged"),
+    ("factored", "merged"), ("merged", "factored"),
+])
+def test_orders_compute_the_same_function(orders):
+    """All four (fwd, bwd) order combinations agree numerically on one
+    projection — forward values and dx/dA/dB cotangents."""
+    rng = np.random.default_rng(11)
+    m_, k, n, r = 24, 16, 16, 6
+    x = jnp.asarray(rng.normal(0, 1, (2, 12, k)), jnp.float32)
+    w0 = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    a = jnp.asarray(rng.normal(0, 1, (k, r)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (r, n)), jnp.float32)
+    scale = 1.25
+
+    def f(ordr, x, a, b):
+        return (model._lora_proj(x, w0, a, b, scale, ordr, False) ** 2).sum()
+
+    ref = ("factored", "factored")
+    y = f(orders, x, a, b)
+    y_ref = f(ref, x, a, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    gx, ga, gb = jax.grad(f, argnums=(1, 2, 3))(orders, x, a, b)
+    rx, ra, rb = jax.grad(f, argnums=(1, 2, 3))(ref, x, a, b)
+    for got, want in ((gx, rx), (ga, ra), (gb, rb)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_full_model_grads_match_across_rank_orders():
+    """End-to-end: an r=64 (merged-order) artifact config and a hand-forced
+    factored trace give the same loss/grads within float tolerance."""
+    rng = np.random.default_rng(7)
+    ac = tiny_ac(rank=64)
+    m = ac.model.micro_batch * ac.model.seq_len
+    d = ac.model.d_model
+    # sanity: this shape actually selects merged for both passes
+    assert contraction.choose_forward(m, d, d, 64) == contraction.MERGED
+    assert contraction.choose_backward(m, d, d, 64) == contraction.MERGED
+    tr = init_params(configs.trainable_spec(ac), rng)
+    tr = [t + 0.01 for t in tr]
+    fr = init_params(configs.frozen_spec(ac), np.random.default_rng(8))
+    batch = make_batch(ac, rng)
+    loss_m, grads_m = _loss_grad(ac, tr, fr, batch)
+
+    forced = {}
+    orig = model._proj_orders
+    try:
+        model._proj_orders = lambda *a: ("factored", "factored")
+        loss_f, grads_f = _loss_grad(ac, tr, fr, batch)
+    finally:
+        model._proj_orders = orig
+    np.testing.assert_allclose(np.asarray(loss_m), np.asarray(loss_f),
+                               rtol=1e-5, atol=1e-6)
+    for gm, gf in zip(grads_m, grads_f):
+        np.testing.assert_allclose(np.asarray(gm), np.asarray(gf),
+                                   rtol=1e-3, atol=1e-5)
+
+
+def test_program_orders_match_proj_orders():
+    """The manifest-recorded orders must equal what the trace chose."""
+    for r in (4, 64):
+        ac = tiny_ac(rank=r)
+        d = ac.model.d_model
+        w0 = jnp.zeros((d, d), jnp.float32)
+        for program, batch in (("train_step", ac.model.micro_batch),
+                               ("grad_step", ac.model.micro_batch),
+                               ("eval_loss", ac.model.eval_batch)):
+            rec = model.program_orders(ac, program)
+            x = jnp.zeros((batch, ac.model.seq_len, d), jnp.float32)
+            fwd, bwd = model._proj_orders(ac, x, w0)
+            assert rec["forward"] == fwd, (r, program)
+            if program != "eval_loss":
+                assert rec["backward"] == bwd, (r, program)
+    # non-LoRA modes and the elementwise programs record nothing
+    assert model.program_orders(tiny_ac("full_attn"), "train_step") is None
+    assert model.program_orders(tiny_ac(), "adam_apply") is None
+    # pallas pins the fused forward to factored accounting
+    rec = model.program_orders(tiny_ac(rank=64, pallas=True), "grad_step")
+    assert rec["forward"] == contraction.FACTORED
+    assert rec["backward"] == contraction.MERGED

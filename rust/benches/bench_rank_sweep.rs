@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = short_cfg(rank, 0x5eed)?;
         let tokens = (cfg.global_batch * 64) as f64;
         let mut t = Trainer::new(&rt, &root, cfg, Some(&base))?;
-        let fm = FlopsModel::for_artifact(&t.art.manifest.config);
+        let fm = FlopsModel::for_manifest(&t.art.manifest);
         let s = bench(&format!("sgd_step/r{rank}"), 1, 8, Duration::from_secs(2), || {
             t.sgd_step().unwrap();
         });

@@ -16,17 +16,35 @@
 //! plus the 4-byte step scalar — prefetch moves the upload one step
 //! earlier but does not change the total.
 //!
+//! Two sections added with the batched-stepping work:
+//!
+//! * **contraction orders** — per shape, the adapter FLOPs of one
+//!   train-program call under the manifest's *recorded* order vs the
+//!   rejected alternative (`flops::train_call_flops_for_orders`), so the
+//!   emit-time argmin's saving is visible per artifact;
+//! * **batched packing** — K independent same-artifact runs executed solo
+//!   (K × ~3 dispatches/step: grad + finalize + adam) vs one
+//!   `run_batched_group` call (2 dispatches/step for the whole group),
+//!   reporting wall clock, dispatch counts, and per-run loss
+//!   bit-identity.
+//!
 //! Results additionally land in `BENCH_step.json` (next to Cargo.toml) so
 //! the perf trajectory is tracked across PRs instead of living only in
 //! stdout. Run: `cargo bench --offline` (after `make artifacts`).
 
 use std::path::{Path, PathBuf};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use fastforward::config::{presets, FfConfig};
+use fastforward::config::{presets, FfConfig, TrainConfig};
+use fastforward::flops::FlopsModel;
+use fastforward::runtime::manifest::LoraOrder;
 use fastforward::runtime::{Runtime, SyncReason};
+use fastforward::sched::{ArtifactCache, RunSpec, WorkerPool};
+use fastforward::train::engine::required_programs;
 use fastforward::train::pretrain::ensure_pretrained;
-use fastforward::train::trainer::Trainer;
+use fastforward::train::trainer::{StopRule, Trainer};
+use fastforward::train::{run_batched_group, MemberSpec};
 use fastforward::util::bench::bench;
 use fastforward::util::json::Json;
 
@@ -150,22 +168,171 @@ fn main() -> anyhow::Result<()> {
         println!("{}", s_probe.report());
         println!("    transfers/ff_probe (fixed W): {}", per_probe.report());
 
+        // -- contraction-order accounting: recorded vs alternative -------
+        // The emit-time argmin picked one order per program; charge one
+        // train call under the recorded order and under both pure
+        // alternatives so the per-shape saving is visible.
+        let fm = FlopsModel::for_manifest(&t.art.manifest);
+        let orders = t.art.manifest.programs.get("grad_step").and_then(|p| p.lora_orders);
+        let order_saving = orders.map(|rec| {
+            let ac = &t.art.manifest.config;
+            let chosen = fm.train_call_flops_for_orders(ac, rec.forward, rec.backward);
+            let factored =
+                fm.train_call_flops_for_orders(ac, LoraOrder::Factored, LoraOrder::Factored);
+            let merged = fm.train_call_flops_for_orders(ac, LoraOrder::Merged, LoraOrder::Merged);
+            let alt = factored.max(merged);
+            println!(
+                "    grad_step contraction order fwd={:?} bwd={:?}: adapter {:.3} MFLOP/call \
+                 vs {:.3} MFLOP worst pure order ({:.2}x — {})",
+                rec.forward,
+                rec.backward,
+                chosen as f64 / 1e6,
+                alt as f64 / 1e6,
+                alt as f64 / chosen as f64,
+                if chosen <= factored.min(merged) {
+                    "recorded order optimal"
+                } else {
+                    "NOT OPTIMAL — order selection regression"
+                },
+            );
+            (rec, chosen, alt)
+        });
+
+        let mut mj = Json::obj()
+            .set("tokens_per_step", tokens_per_step)
+            .set("sync", s_sync.to_json())
+            .set("pipelined", s_pipe.to_json())
+            .set("pipelined_drain_interval", PIPELINE_DRAIN)
+            .set("pipelined_speedup", speedup)
+            .set("transfers_per_step_sync", per_step.to_json())
+            .set("transfers_per_step_pipelined", per_step_pipe.to_json())
+            .set("batch_bytes_expected", batch_bytes as i64)
+            .set("upload_is_batch_only", batch_only)
+            .set("state_uploads_flat", state_ups_1 == state_ups_0)
+            .set("donations_per_step", per_step.donations as i64)
+            .set("ff_probe", s_probe.to_json())
+            .set("transfers_per_probe", per_probe.to_json());
+        if let Some((rec, chosen, alt)) = order_saving {
+            mj = mj
+                .set("lora_order_fwd", format!("{:?}", rec.forward))
+                .set("lora_order_bwd", format!("{:?}", rec.backward))
+                .set("adapter_flops_per_call_recorded", chosen as i64)
+                .set("adapter_flops_per_call_worst_order", alt as i64)
+                .set("adapter_order_saving", alt as f64 / chosen as f64);
+        }
+        report = report.set(model, mj);
+    }
+
+    // -- batched packing: K solo runs vs one batched group call ----------
+    // Same adapters, seeds, data, and step count. Solo issues ~3
+    // dispatches per member per step (grad_step, grad_finalize,
+    // adam_apply); the chained batched programs issue 2 per step for the
+    // whole group, so dispatches/step shrink (3·K)/2-fold while per-run
+    // losses stay bit-identical (also asserted in tests/sched_queue.rs and
+    // `selftest --queue`).
+    let cache = ArtifactCache::new(root.clone());
+    let art = cache.load(&rt, "ff-tiny_lora_r8")?;
+    let sizes = art.manifest.batched_group_sizes();
+    if let Some(&k) = sizes.last() {
+        let steps = 12usize;
+        let base = Arc::new(ensure_pretrained(&rt, &root, "ff-tiny", None)?);
+        let member_cfg = |seed: u64| -> anyhow::Result<TrainConfig> {
+            let mut c = presets::train_config("ff-tiny_lora_r8", "medical", 1)?;
+            c.train_examples = 256;
+            c.test_examples = 32;
+            // pack eligibility requires one micro-batch per Adam step
+            c.global_batch = art.manifest.config.model.micro_batch;
+            c.seed = seed;
+            c.ff = FfConfig { enabled: false, ..FfConfig::default() };
+            Ok(c)
+        };
+        // Pre-warm both program sets so neither timed path pays XLA
+        // compilation.
+        for prog in required_programs(&art.manifest) {
+            art.program(prog)?;
+        }
+        for prog in ["grad_step", "adam_apply", "eval_loss"] {
+            art.program(&format!("{prog}_batched{k}"))?;
+        }
+
+        let mut solo_specs = Vec::new();
+        for i in 0..k {
+            solo_specs.push(RunSpec {
+                label: format!("solo/{i}"),
+                cfg: member_cfg(0xbe7c + i as u64)?,
+                stop: StopRule::MaxSteps(steps),
+                base: Some(Arc::clone(&base)),
+                drain_interval: None,
+            });
+        }
+        let solo = WorkerPool::new(1).run_all(&rt, &cache, solo_specs)?;
+
+        let members = (0..k)
+            .map(|i| {
+                Ok(MemberSpec {
+                    label: format!("packed/{i}"),
+                    cfg: member_cfg(0xbe7c + i as u64)?,
+                    base: Some(Arc::clone(&base)),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let t0 = Instant::now();
+        let group = run_batched_group(&rt, &art, &members, steps)?;
+        let group_wall = t0.elapsed().as_secs_f64();
+
+        let identical = solo.outputs.iter().zip(group.iter()).all(|(s, g)| {
+            s.sgd_losses.len() == g.sgd_losses.len()
+                && s.sgd_losses
+                    .iter()
+                    .zip(&g.sgd_losses)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+                && s.summary.final_test_loss.to_bits() == g.summary.final_test_loss.to_bits()
+        });
+        let group_dispatches = group[0].dispatches;
+        let solo_train_dispatches = 3 * steps * k; // grad + finalize + adam per member
+        let packed_up: u64 = group.iter().map(|m| m.summary.transfers.uploaded_bytes).sum();
+        let speedup = solo.wall_seconds / group_wall.max(1e-9);
+        println!(
+            "\nbatched packing: {k} runs × {steps} steps on ff-tiny_lora_r8 \
+             (global_batch = micro_batch = {})",
+            art.manifest.config.model.micro_batch
+        );
+        println!(
+            "  wall: solo {:.2}s vs batched {:.2}s ({speedup:.2}x)",
+            solo.wall_seconds, group_wall
+        );
+        println!(
+            "  train dispatches: solo 3/step × {k} runs = {solo_train_dispatches} vs batched \
+             2/step for the group = {} ({:.1}x fewer; measured group total incl. eval: {})",
+            2 * steps,
+            solo_train_dispatches as f64 / (2 * steps) as f64,
+            group_dispatches,
+        );
+        println!(
+            "  losses {} | uploaded bytes: solo {} vs batched {} (shared frozen base)",
+            if identical { "bit-identical per run: OK" } else { "MISMATCH — batched diverged" },
+            solo.transfers.uploaded_bytes,
+            packed_up,
+        );
         report = report.set(
-            model,
+            "batched_pack",
             Json::obj()
-                .set("tokens_per_step", tokens_per_step)
-                .set("sync", s_sync.to_json())
-                .set("pipelined", s_pipe.to_json())
-                .set("pipelined_drain_interval", PIPELINE_DRAIN)
-                .set("pipelined_speedup", speedup)
-                .set("transfers_per_step_sync", per_step.to_json())
-                .set("transfers_per_step_pipelined", per_step_pipe.to_json())
-                .set("batch_bytes_expected", batch_bytes as i64)
-                .set("upload_is_batch_only", batch_only)
-                .set("state_uploads_flat", state_ups_1 == state_ups_0)
-                .set("donations_per_step", per_step.donations as i64)
-                .set("ff_probe", s_probe.to_json())
-                .set("transfers_per_probe", per_probe.to_json()),
+                .set("k", k)
+                .set("steps", steps)
+                .set("solo_wall_seconds", solo.wall_seconds)
+                .set("batched_wall_seconds", group_wall)
+                .set("speedup", speedup)
+                .set("bit_identical", identical)
+                .set("solo_train_dispatches", solo_train_dispatches)
+                .set("batched_train_dispatches", 2 * steps)
+                .set("batched_group_dispatches_measured", group_dispatches)
+                .set("uploaded_bytes_solo", solo.transfers.uploaded_bytes as i64)
+                .set("uploaded_bytes_batched", packed_up as i64),
+        );
+    } else {
+        println!(
+            "\nbatched packing: ff-tiny_lora_r8 manifest has no *_batched programs — \
+             re-run `make artifacts`; section skipped"
         );
     }
 

@@ -12,16 +12,60 @@
 
 use crate::config::{ArtifactConfig, TrainMode};
 use crate::model::spec;
+use crate::runtime::manifest::{LoraOrder, Manifest};
+
+/// Adapter-only cost of one LoRA projection's forward pass under a given
+/// contraction order — the exact mirror of
+/// `python/compile/contraction.forward_flops` (x: [M,K], A: [K,r],
+/// B: [r,N]; base `x·W0` excluded, it is identical under both orders).
+pub fn lora_forward_flops(order: LoraOrder, m: usize, k: usize, n: usize, r: usize) -> u64 {
+    match order {
+        LoraOrder::Factored => 2 * (m * r * (k + n)) as u64,
+        LoraOrder::Merged => 2 * (k * r * n) as u64 + 2 * (m * k * n) as u64,
+    }
+}
+
+/// Adapter backward cost (dA, dB, and the adapter term of dx) — mirror of
+/// `python/compile/contraction.backward_flops`.
+pub fn lora_backward_flops(order: LoraOrder, m: usize, k: usize, n: usize, r: usize) -> u64 {
+    match order {
+        LoraOrder::Factored => 2 * (m * r * (3 * k + 2 * n)) as u64,
+        LoraOrder::Merged => {
+            2 * (m * k * n) as u64 + 4 * (k * r * n) as u64 + 2 * (m * r * (k + n)) as u64
+        }
+    }
+}
+
+/// Exact per-program-call adapter costs, derived from the contraction
+/// orders the manifest recorded at emit time. The merged order has a
+/// per-call constant (materializing `A·B`), so these are charged per
+/// program call, not per token.
+#[derive(Debug, Clone, Copy)]
+struct LoraFlops {
+    /// Tokens per train-program call (micro_batch · seq_len).
+    m_train: usize,
+    /// Tokens per eval-program call (eval_batch · seq_len).
+    m_eval: usize,
+    /// Adapter fwd+bwd cost of one train-program call (all projections).
+    train_per_call: u64,
+    /// Adapter forward cost of one eval-program call.
+    eval_per_call: u64,
+}
 
 /// Per-model static FLOPs coefficients.
 #[derive(Debug, Clone, Copy)]
 pub struct FlopsModel {
-    /// Matmul params active in a forward pass (base + adapters).
+    /// Matmul params active in a forward pass. Legacy (`for_artifact`)
+    /// folds the adapters in; the manifest-exact model keeps base-only and
+    /// charges adapters through `lora`.
     pub n_active: usize,
     /// Trainable parameter count (host update / Adam costs).
     pub n_trainable: usize,
     /// Attention quadratic term per token: 2 · T · d_model · n_layers.
     pub attn_per_token: usize,
+    /// `Some` ⇒ adapter FLOPs follow the manifest's recorded contraction
+    /// orders exactly; `None` ⇒ legacy factored-order approximation.
+    lora: Option<LoraFlops>,
 }
 
 impl FlopsModel {
@@ -39,16 +83,82 @@ impl FlopsModel {
             n_active: base_matmul + adapters,
             n_trainable: spec::n_trainable(ac),
             attn_per_token: 2 * m.seq_len * m.d_model * m.n_layers,
+            lora: None,
         }
     }
 
-    pub fn forward_flops(&self, tokens: usize) -> u64 {
-        (2 * self.n_active + self.attn_per_token) as u64 * tokens as u64
+    /// Manifest-exact model: LoRA adapter FLOPs are charged per program
+    /// call with the contraction orders the artifact actually emitted
+    /// (`grad_step` for training, `eval_loss` for inference), so fig2 /
+    /// report savings match the HLO that runs rather than assuming the
+    /// factored order. Falls back to the legacy approximation for
+    /// artifacts without recorded orders (old manifests, non-LoRA modes —
+    /// DoRA's ref kernel has no order choice).
+    pub fn for_manifest(man: &Manifest) -> FlopsModel {
+        let ac = &man.config;
+        let mut fm = Self::for_artifact(ac);
+        if ac.train_mode != TrainMode::Lora {
+            return fm;
+        }
+        let (Some(train), Some(eval)) = (
+            man.programs.get("grad_step").and_then(|p| p.lora_orders),
+            man.programs.get("eval_loss").and_then(|p| p.lora_orders),
+        ) else {
+            return fm;
+        };
+        let m = &ac.model;
+        let (d, r) = (m.d_model, ac.lora_rank);
+        let n_mats = (spec::ADAPTED_MATRICES.len() * m.n_layers) as u64;
+        let m_train = m.micro_batch * m.seq_len;
+        let m_eval = m.eval_batch * m.seq_len;
+        // Base-only forward term; adapters move to the per-call costs.
+        fm.n_active -= spec::n_trainable(ac);
+        fm.lora = Some(LoraFlops {
+            m_train,
+            m_eval,
+            train_per_call: n_mats
+                * (lora_forward_flops(train.forward, m_train, d, d, r)
+                    + lora_backward_flops(train.backward, m_train, d, d, r)),
+            eval_per_call: n_mats * lora_forward_flops(eval.forward, m_eval, d, d, r),
+        });
+        fm
     }
 
-    /// Forward + backward at the paper's 1:2 ratio.
+    pub fn forward_flops(&self, tokens: usize) -> u64 {
+        let base = (2 * self.n_active + self.attn_per_token) as u64 * tokens as u64;
+        match self.lora {
+            Some(l) => base + tokens.div_ceil(l.m_eval) as u64 * l.eval_per_call,
+            None => base,
+        }
+    }
+
+    /// Base forward + backward at the paper's 1:2 ratio; when the manifest
+    /// recorded contraction orders, the adapter part is charged exactly
+    /// (per train-program call) instead of through the 1:2 approximation.
     pub fn train_flops(&self, tokens: usize) -> u64 {
-        3 * self.forward_flops(tokens)
+        match self.lora {
+            Some(l) => {
+                let base = 3 * (2 * self.n_active + self.attn_per_token) as u64 * tokens as u64;
+                base + tokens.div_ceil(l.m_train) as u64 * l.train_per_call
+            }
+            None => 3 * self.forward_flops(tokens),
+        }
+    }
+
+    /// Adapter fwd+bwd cost of one train-program call under `order_*`,
+    /// irrespective of what the manifest chose — lets benches report the
+    /// savings of the recorded order against the alternative.
+    pub fn train_call_flops_for_orders(
+        &self,
+        ac: &ArtifactConfig,
+        fwd: LoraOrder,
+        bwd: LoraOrder,
+    ) -> u64 {
+        let m = &ac.model;
+        let (d, r) = (m.d_model, ac.lora_rank);
+        let n_mats = (spec::ADAPTED_MATRICES.len() * m.n_layers) as u64;
+        let mt = m.micro_batch * m.seq_len;
+        n_mats * (lora_forward_flops(fwd, mt, d, d, r) + lora_backward_flops(bwd, mt, d, d, r))
     }
 
     pub fn adam_flops(&self) -> u64 {
@@ -133,6 +243,117 @@ mod tests {
         let mut ff = FlopsCounter::default();
         ff.ff_probe(&fm, 32 * 64); // val set of 32 seqs: forward only
         assert!(ff.total() * 2 < sgd.total(), "{} vs {}", ff.total(), sgd.total());
+    }
+
+    fn manifest_with_orders(
+        ac: &ArtifactConfig,
+        train: Option<(LoraOrder, LoraOrder)>,
+        eval_fwd: Option<LoraOrder>,
+    ) -> Manifest {
+        use crate::runtime::manifest::{LoraOrders, ProgramSpec};
+        use std::collections::BTreeMap;
+        let mk = |orders: Option<LoraOrders>| ProgramSpec {
+            file: "x.hlo.txt".into(),
+            inputs: vec![],
+            outputs: vec![],
+            donated_inputs: vec![],
+            lora_orders: orders,
+            batch_runs: None,
+        };
+        let mut programs = BTreeMap::new();
+        programs.insert(
+            "grad_step".to_string(),
+            mk(train.map(|(f, b)| LoraOrders { forward: f, backward: b })),
+        );
+        programs.insert(
+            "eval_loss".to_string(),
+            mk(eval_fwd.map(|f| LoraOrders { forward: f, backward: LoraOrder::Factored })),
+        );
+        Manifest {
+            key: ac.key(),
+            dir: std::path::PathBuf::new(),
+            config: ac.clone(),
+            adam: crate::config::AdamConfig::default(),
+            trainable: vec![],
+            frozen: vec![],
+            programs,
+        }
+    }
+
+    #[test]
+    fn manifest_factored_forward_matches_legacy() {
+        // Legacy folds adapters into n_active at exactly the factored
+        // per-token cost, so the exact model under factored orders must
+        // reproduce legacy forward_flops to the FLOP.
+        let ac = ac(TrainMode::Lora);
+        let legacy = FlopsModel::for_artifact(&ac);
+        let man = manifest_with_orders(
+            &ac,
+            Some((LoraOrder::Factored, LoraOrder::Factored)),
+            Some(LoraOrder::Factored),
+        );
+        let exact = FlopsModel::for_manifest(&man);
+        let tokens = ac.model.eval_batch * ac.model.seq_len;
+        assert_eq!(exact.forward_flops(tokens), legacy.forward_flops(tokens));
+        // train differs: exact charges the true factored backward
+        // (2Mr·5d per matrix) instead of the 1:2 approximation (2Mr·4d),
+        // so exact > legacy for the adapter share.
+        assert!(exact.train_flops(tokens) > 0);
+    }
+
+    #[test]
+    fn manifest_merged_orders_reduce_full_rank_train_cost() {
+        // r = d_model (the §6.1 full-rank point): merged must beat the
+        // factored accounting for both passes at ff-tiny's micro batch.
+        let mut ac = ac(TrainMode::Lora);
+        ac.lora_rank = ac.model.d_model;
+        let merged = FlopsModel::for_manifest(&manifest_with_orders(
+            &ac,
+            Some((LoraOrder::Merged, LoraOrder::Merged)),
+            Some(LoraOrder::Merged),
+        ));
+        let factored = FlopsModel::for_manifest(&manifest_with_orders(
+            &ac,
+            Some((LoraOrder::Factored, LoraOrder::Factored)),
+            Some(LoraOrder::Factored),
+        ));
+        let tokens = ac.model.micro_batch * ac.model.seq_len;
+        assert!(merged.train_flops(tokens) < factored.train_flops(tokens));
+        assert!(merged.forward_flops(tokens) < factored.forward_flops(tokens));
+    }
+
+    #[test]
+    fn manifest_without_orders_falls_back_to_legacy() {
+        let ac = ac(TrainMode::Lora);
+        let legacy = FlopsModel::for_artifact(&ac);
+        let man = manifest_with_orders(&ac, None, None);
+        let fm = FlopsModel::for_manifest(&man);
+        assert_eq!(fm.forward_flops(1000), legacy.forward_flops(1000));
+        assert_eq!(fm.train_flops(1000), legacy.train_flops(1000));
+    }
+
+    #[test]
+    fn order_formulas_cross_over_with_rank() {
+        // ff-tiny micro step shape: M = 8·64 = 512, K = N = 64.
+        let (m, d) = (512, 64);
+        // low rank: factored wins both passes
+        assert!(
+            lora_forward_flops(LoraOrder::Factored, m, d, d, 8)
+                < lora_forward_flops(LoraOrder::Merged, m, d, d, 8)
+        );
+        assert!(
+            lora_backward_flops(LoraOrder::Factored, m, d, d, 8)
+                < lora_backward_flops(LoraOrder::Merged, m, d, d, 8)
+        );
+        // full rank: merged wins both passes
+        assert!(
+            lora_forward_flops(LoraOrder::Merged, m, d, d, d)
+                < lora_forward_flops(LoraOrder::Factored, m, d, d, d)
+        );
+        assert!(
+            lora_backward_flops(LoraOrder::Merged, m, d, d, d)
+                < lora_backward_flops(LoraOrder::Factored, m, d, d, d)
+        );
     }
 
     #[test]

@@ -66,7 +66,8 @@ fn usage() -> &'static str {
                  manifest lines: tenant priority artifact task steps seed on|off)\n\
      pretrain:   --model NAME [--steps N]\n\
      selftest:   [--jobs N] [--queue]   (N > 1 exercises the concurrent scheduler;\n\
-                 --queue adds a run-queue leg: priorities, cancel, tenant totals)\n\
+                 --queue adds run-queue legs: priorities, cancel, tenant totals,\n\
+                 and batched same-artifact packing vs solo bit-identity)\n\
      note: --jobs > 1 needs a build with --features xla-shared-client (pinned,\n\
            audited xla rev — see rust/XLA_AUDIT); otherwise the pool runs\n\
            sequentially and the queue drains inline at join, in priority order\n"
@@ -466,7 +467,7 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     let requested = args.opt_usize("jobs", 2).map_err(|e| anyhow::anyhow!(e))?.max(1);
     let with_queue = args.flag("queue");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let total = if with_queue { 6 } else { 5 };
+    let total = if with_queue { 7 } else { 5 };
     // The scheduler gate is part of the banner so degraded (sequential)
     // CI runs are visible in the logs, not silently green.
     println!(
@@ -634,6 +635,103 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
             outputs.len(),
             delta.report()
         );
+
+        // Batched packing leg: K packable runs through one *_batched{K}
+        // group must reproduce solo results bit-for-bit and slice the
+        // group's transfer bytes exactly (docs/transfer-contract.md §5).
+        let art = cache.load(&rt, "ff-tiny_lora_r8")?;
+        let sizes = art.manifest.batched_group_sizes();
+        if sizes.is_empty() {
+            println!(
+                "[7/{total}] batched packing: SKIPPED (artifacts predate *_batched \
+                 programs — re-run make artifacts)"
+            );
+        } else {
+            let k = sizes[0];
+            println!(
+                "[7/{total}] batched packing: {k} runs → one *_batched{k} group \
+                 (bit-identity + per-run meter slices)"
+            );
+            let packable = |tag: &str| -> Vec<RunSpec> {
+                (0..k as u64)
+                    .map(|i| {
+                        let mut c =
+                            presets::train_config("ff-tiny_lora_r8", "medical", 1).unwrap();
+                        c.train_examples = 256;
+                        c.test_examples = 32;
+                        c.global_batch = 8; // == micro_batch: one micro per step
+                        c.seed = 0xbead + i;
+                        c.ff = FfConfig { enabled: false, ..FfConfig::default() };
+                        RunSpec {
+                            label: format!("{tag}/seed{}", c.seed),
+                            cfg: c,
+                            stop: StopRule::MaxSteps(3),
+                            base: Some(std::sync::Arc::clone(&base)),
+                            drain_interval: None,
+                        }
+                    })
+                    .collect()
+            };
+            let solo_q = RunQueue::new(1);
+            let solo_handles: Vec<_> = packable("solo")
+                .into_iter()
+                .map(|s| solo_q.submit_run(&rt, &cache, s, 0, "t"))
+                .collect();
+            let mut solo = Vec::new();
+            for h in solo_handles {
+                match h.join()? {
+                    RunResult::Done(o) => solo.push(o),
+                    RunResult::Cancelled(_) => anyhow::bail!("solo reference cancelled"),
+                }
+            }
+            // One worker and a paused queue: all K are waiting when the
+            // first pops, so the pack always forms at full size.
+            let before = rt.stats.snapshot();
+            let pq = RunQueue::new_paused(1);
+            let handles: Vec<_> = packable("packed")
+                .into_iter()
+                .map(|s| pq.submit_run_packable(&rt, &cache, s, 0, "t"))
+                .collect();
+            pq.release();
+            let mut packed = Vec::new();
+            for h in handles {
+                match h.join()? {
+                    RunResult::Done(o) => packed.push(o),
+                    RunResult::Cancelled(_) => anyhow::bail!("packed member cancelled"),
+                }
+            }
+            let delta = rt.stats.snapshot().since(&before);
+            for (a, b) in solo.iter().zip(packed.iter()) {
+                anyhow::ensure!(
+                    a.bit_identical(b),
+                    "batched packing changed losses: {} vs {}",
+                    a.label,
+                    b.label
+                );
+            }
+            let mut summed = fastforward::runtime::TransferSnapshot::default();
+            for p in &packed {
+                summed = summed.plus(&p.summary.transfers);
+            }
+            anyhow::ensure!(
+                (summed.uploaded_bytes, summed.downloaded_bytes, summed.donated_bytes)
+                    == (delta.uploaded_bytes, delta.downloaded_bytes, delta.donated_bytes),
+                "member byte slices ({summed:?}) != global delta ({delta:?})"
+            );
+            let solo_up: usize = solo.iter().map(|s| s.summary.transfers.uploaded_bytes).sum();
+            anyhow::ensure!(
+                delta.uploaded_bytes < solo_up,
+                "packed group moved {} uploaded bytes, not fewer than {} across \
+                 {k} solo runs — packing did not share the frozen base",
+                delta.uploaded_bytes,
+                solo_up
+            );
+            println!(
+                "      ok: {k} packed runs bit-identical to solo; member bytes sum \
+                 exactly to the global delta ({})",
+                delta.report()
+            );
+        }
     }
     println!("selftest passed");
     Ok(())

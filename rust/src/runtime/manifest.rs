@@ -47,6 +47,36 @@ impl IoSlot {
     }
 }
 
+/// Contraction order of the LoRA adapter chain `x·A·B` in one pass of a
+/// program, as chosen by `python/compile/contraction.py` at emit time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LoraOrder {
+    /// `(x·A)·B` — the legacy order; also what pre-order manifests imply.
+    #[default]
+    Factored,
+    /// `x·(A·B)` forward / the `G = xᵀ·g` route backward.
+    Merged,
+}
+
+impl LoraOrder {
+    fn from_str(s: &str) -> Result<LoraOrder> {
+        Ok(match s {
+            "factored" => LoraOrder::Factored,
+            "merged" => LoraOrder::Merged,
+            other => bail!("unknown lora order '{other}'"),
+        })
+    }
+}
+
+/// Recorded contraction orders for a program's LoRA matmuls. `backward`
+/// stays `Factored` (the default) for forward-only programs (`eval_loss`),
+/// whose manifests record no backward order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LoraOrders {
+    pub forward: LoraOrder,
+    pub backward: LoraOrder,
+}
+
 #[derive(Debug, Clone)]
 pub struct ProgramSpec {
     pub file: String,
@@ -58,6 +88,14 @@ pub struct ProgramSpec {
     /// `Program::execute_raw_donated` with exactly these slots passed by
     /// value; empty for manifests that predate donation.
     pub donated_inputs: Vec<usize>,
+    /// Contraction orders the emitted HLO uses for its LoRA matmuls
+    /// (`flops::FlopsModel::for_manifest` charges exactly these). `None`
+    /// for programs without LoRA matmuls, non-LoRA artifacts, and
+    /// manifests that predate order selection (legacy factored).
+    pub lora_orders: Option<LoraOrders>,
+    /// `Some(R)` for `*_batched{R}` variants: the leading run axis stacks
+    /// R independent runs' state over one shared frozen base.
+    pub batch_runs: Option<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -90,6 +128,40 @@ fn parse_slots(v: &Json) -> Result<Vec<IoSlot>> {
             })
         })
         .collect()
+}
+
+fn parse_program(p: &Json) -> Result<ProgramSpec> {
+    let lora_orders = match p.get("lora_orders") {
+        j if j.is_null() => None,
+        j => {
+            let forward = LoraOrder::from_str(
+                j.get("forward").as_str().ok_or_else(|| anyhow!("lora_orders missing forward"))?,
+            )?;
+            // Absent for forward-only programs → legacy default (Factored).
+            let backward = match j.get("backward").as_str() {
+                Some(s) => LoraOrder::from_str(s)?,
+                None => LoraOrder::default(),
+            };
+            Some(LoraOrders { forward, backward })
+        }
+    };
+    Ok(ProgramSpec {
+        file: p.get("file").as_str().ok_or_else(|| anyhow!("program missing file"))?.into(),
+        inputs: parse_slots(p.get("inputs"))?,
+        outputs: parse_slots(p.get("outputs"))?,
+        donated_inputs: p
+            .get("donated_inputs")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad donated slot")))
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .transpose()?
+            .unwrap_or_default(),
+        lora_orders,
+        batch_runs: p.get("batch_runs").as_usize(),
+    })
 }
 
 fn parse_named_shapes(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
@@ -137,26 +209,8 @@ impl Manifest {
         let mut programs = BTreeMap::new();
         let progs = j.get("programs").as_obj().ok_or_else(|| anyhow!("missing programs"))?;
         for (name, p) in progs {
-            programs.insert(
-                name.clone(),
-                ProgramSpec {
-                    file: p.get("file").as_str().ok_or_else(|| anyhow!("program missing file"))?.into(),
-                    inputs: parse_slots(p.get("inputs"))?,
-                    outputs: parse_slots(p.get("outputs"))?,
-                    donated_inputs: p
-                        .get("donated_inputs")
-                        .as_arr()
-                        .map(|a| {
-                            a.iter()
-                                .map(|d| {
-                                    d.as_usize().ok_or_else(|| anyhow!("bad donated slot"))
-                                })
-                                .collect::<Result<Vec<usize>>>()
-                        })
-                        .transpose()?
-                        .unwrap_or_default(),
-                },
-            );
+            let spec = parse_program(p).with_context(|| format!("program '{name}'"))?;
+            programs.insert(name.clone(), spec);
         }
 
         let man = Manifest {
@@ -224,6 +278,31 @@ impl Manifest {
 
     pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
         Ok(self.dir.join(&self.program(name)?.file))
+    }
+
+    /// Group sizes R for which this artifact carries the full chained
+    /// batched program set (`grad_step_batched{R}`, `adam_apply_batched{R}`,
+    /// `eval_loss_batched{R}`), ascending. Empty for artifacts emitted
+    /// before batched variants existed and for non-LoRA/Pallas artifacts —
+    /// the queue then simply never packs runs on them.
+    pub fn batched_group_sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .programs
+            .iter()
+            .filter_map(|(name, p)| {
+                let r = p.batch_runs?;
+                if name == &format!("grad_step_batched{r}")
+                    && self.has_program(&format!("adam_apply_batched{r}"))
+                    && self.has_program(&format!("eval_loss_batched{r}"))
+                {
+                    Some(r)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        sizes.sort_unstable();
+        sizes
     }
 }
 
@@ -303,5 +382,64 @@ mod tests {
     fn missing_file_is_contextual_error() {
         let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
         assert!(format!("{err:#}").contains("manifest.json"));
+    }
+
+    #[test]
+    fn program_round_trips_orders_and_batch_runs() {
+        let j = Json::parse(
+            r#"{"file":"grad_step_batched2.hlo.txt",
+                "inputs":[{"name":"t:x","shape":[2,4,3],"dtype":"f32"}],
+                "outputs":[{"name":"loss","shape":[2],"dtype":"f32"}],
+                "donated_inputs":[],
+                "lora_orders":{"forward":"merged","backward":"factored"},
+                "batch_runs":2}"#,
+        )
+        .unwrap();
+        let p = parse_program(&j).unwrap();
+        assert_eq!(
+            p.lora_orders,
+            Some(LoraOrders { forward: LoraOrder::Merged, backward: LoraOrder::Factored })
+        );
+        assert_eq!(p.batch_runs, Some(2));
+    }
+
+    #[test]
+    fn legacy_program_defaults_to_factored_solo() {
+        // Manifests emitted before order selection / batching carry neither
+        // key; they must load with `None` orders (callers treat that as
+        // Factored/Factored) and no batch axis.
+        let j = Json::parse(
+            r#"{"file":"grad_step.hlo.txt",
+                "inputs":[{"name":"t:x","shape":[4,3],"dtype":"f32"}],
+                "outputs":[{"name":"loss","shape":[],"dtype":"f32"}]}"#,
+        )
+        .unwrap();
+        let p = parse_program(&j).unwrap();
+        assert_eq!(p.lora_orders, None);
+        assert_eq!(p.batch_runs, None);
+        assert!(p.donated_inputs.is_empty());
+        assert_eq!(LoraOrders::default().forward, LoraOrder::Factored);
+        assert_eq!(LoraOrders::default().backward, LoraOrder::Factored);
+    }
+
+    #[test]
+    fn forward_only_orders_default_backward_factored() {
+        let j = Json::parse(
+            r#"{"file":"eval_loss.hlo.txt",
+                "inputs":[{"name":"t:x","shape":[4,3],"dtype":"f32"}],
+                "outputs":[{"name":"loss","shape":[],"dtype":"f32"}],
+                "lora_orders":{"forward":"merged"}}"#,
+        )
+        .unwrap();
+        let p = parse_program(&j).unwrap();
+        let o = p.lora_orders.unwrap();
+        assert_eq!(o.forward, LoraOrder::Merged);
+        assert_eq!(o.backward, LoraOrder::Factored);
+        let bad = Json::parse(
+            r#"{"file":"x","inputs":[],"outputs":[],
+                "lora_orders":{"forward":"sideways"}}"#,
+        )
+        .unwrap();
+        assert!(parse_program(&bad).is_err());
     }
 }

@@ -26,6 +26,21 @@
 //!   draining the same queue. `rust/tests/sched_queue.rs` asserts queue
 //!   results are bit-identical to `WorkerPool::run_all` in both builds.
 //!
+//! # Same-artifact packing
+//!
+//! [`RunQueue::submit_run_packable`] opts a training run into **batched
+//! group dispatch**: when its job is popped and K−1 compatible
+//! submissions (same artifact, priority, step count, batch geometry,
+//! and frozen-weight source — the `pack_signature`) are still queued,
+//! the popped job *leads*: it claims them and drives all K runs as one
+//! `*_batched{K}` program group (`crate::train::batched`), ~K× fewer
+//! dispatches per step. Each member still joins its own handle with a
+//! [`RunOutput`] whose losses are **bit-identical** to a solo run and
+//! whose `summary.transfers` is its exact byte slice of the group
+//! traffic; tenants are billed exactly as if every run went solo.
+//! Ineligible specs (loss-targeted stop, FF stages, artifacts without
+//! batched programs) fall back to solo execution transparently.
+//!
 //! # Cancellation
 //!
 //! [`RunHandle::cancel`] is two-phase:
@@ -37,7 +52,10 @@
 //!   installed via `Trainer::set_cancel_flag`) that the policy loop
 //!   checks at every step boundary: the run stops cleanly, drains its
 //!   pipeline, evaluates, and reports `Cancelled` **with** its partial
-//!   output — never an error, never a torn state.
+//!   output — never an error, never a torn state. Members of an
+//!   in-flight *batched group* have no per-step cancel point: they run
+//!   to the group's end and join `Done` (cancel lands at the batch
+//!   boundary).
 //!
 //! # Determinism and accounting
 //!
@@ -53,8 +71,10 @@ use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
 use anyhow::Result;
 
-use crate::runtime::{Runtime, TransferSnapshot};
+use crate::runtime::{Runtime, StreamStats, TransferSnapshot};
 use crate::sched::{execute_run_cancellable, lock, ArtifactCache, RunOutput, RunSpec};
+use crate::train::batched::{pack_eligible, run_batched_group, MemberSpec};
+use crate::train::StopRule;
 
 /// How a job reports back to the queue: done, or cancelled-with-partial-
 /// output when the job itself observed (and honored) the cooperative
@@ -209,6 +229,25 @@ struct Entry<R> {
     handle: Arc<HandleShared<R>>,
 }
 
+/// What a pack leader needs to run a claimed sibling's member: its spec
+/// and tenant (for accounting). Parked in [`Shared::pack_pool`] by
+/// [`RunQueue::submit_run_packable`] until the submission's own job
+/// takes it back (solo) or a leader claims it (batched).
+struct PackData {
+    spec: RunSpec,
+    tenant: String,
+}
+
+/// A packable submission parked for group formation. The `data` slot is
+/// the exclusivity token: whoever takes the `PackData` — the
+/// submission's own job, or a pack leader that flipped its handle
+/// `Queued → Running` first — owns the run. Slots found empty (or
+/// handles found past `Queued`) are stale and dropped from the pool.
+struct PackMate<R> {
+    handle: Arc<HandleShared<R>>,
+    data: Arc<Mutex<Option<PackData>>>,
+}
+
 struct QueueState<R> {
     /// priority class → submissions, oldest first. Pop = highest class,
     /// front of its deque; empty classes are removed eagerly.
@@ -226,6 +265,11 @@ struct Shared<R> {
     /// Workers (and pause/shutdown transitions) wait/notify here.
     cv: Condvar,
     tenants: Mutex<BTreeMap<String, TenantStats>>,
+    /// Packable submissions awaiting group formation, keyed by pack
+    /// signature (artifact | priority | steps | batch geometry | frozen
+    /// source — see `pack_signature`). Lock order: `pack_pool` before
+    /// any `HandleShared::state`, never the other way.
+    pack_pool: Mutex<BTreeMap<String, Vec<PackMate<R>>>>,
 }
 
 /// Plain-closure cancel classification ([`RunQueue::submit`]): the best
@@ -281,10 +325,18 @@ fn run_entry<R>(shared: &Shared<R>, entry: Entry<R>) {
     let handle = entry.handle;
     {
         let mut st = lock(&handle.state);
-        if matches!(*st, HandleState::Finished(_)) {
-            return; // cancel raced the pop: treated as cancel-before-start
+        match *st {
+            // cancel raced the pop: treated as cancel-before-start
+            HandleState::Finished(_) => return,
+            // a pack leader claimed this submission out of the pool
+            // (`submit_run_packable`): the leader owns it now — it will
+            // publish the outcome; the queue entry is just a husk. Only
+            // the leader's claim ever sets Running outside this function,
+            // and only on entries whose job reads its spec from the pack
+            // slot, so the dropped `entry.job` loses nothing.
+            HandleState::Running => return,
+            HandleState::Queued => *st = HandleState::Running,
         }
-        *st = HandleState::Running;
     }
     let token = CancelToken { flag: Arc::clone(&handle.cancel) };
     // The job classifies its own outcome (see [`JobYield`]): a cancel
@@ -363,6 +415,7 @@ fn new_shared<R>(paused: bool) -> Arc<Shared<R>> {
         }),
         cv: Condvar::new(),
         tenants: Mutex::new(BTreeMap::new()),
+        pack_pool: Mutex::new(BTreeMap::new()),
     })
 }
 
@@ -494,6 +547,104 @@ impl<R: 'static> RunQueue<R> {
     }
 }
 
+/// Fold one finished run's per-run accounting into its tenant (steps,
+/// FLOPs, wall-clock, and the run's **exact** transfer meter).
+fn fold_run_stats(shared: &Shared<RunOutput>, tenant: &str, out: &RunOutput) {
+    let mut tenants = lock(&shared.tenants);
+    let t = tenants.entry(tenant.to_string()).or_default();
+    t.adam_steps += out.summary.adam_steps as u64;
+    t.sim_steps += out.summary.sim_steps as u64;
+    t.ff_stages += out.stages.len() as u64;
+    t.flops += out.summary.flops.total();
+    t.seconds += out.seconds;
+    t.transfers = t.transfers.plus(&out.summary.transfers);
+}
+
+/// The pack key two submissions must share to ride one batched dispatch:
+/// same artifact (same programs and batch geometry), same priority (the
+/// leader must not pull work ahead of its class), same step count
+/// (members stay in lock-step to the end), same eval-set size (final
+/// eval chunks stack), same `global_batch`, and the same frozen-weight
+/// source — a shared base checkpoint (by identity) or an equal seed,
+/// since `init_params` derives the frozen base from the seed and the
+/// batched programs share one unstacked base across the group
+/// (`run_batched_group` re-verifies this bitwise at claim time).
+///
+/// `None` means the spec can never pack (loss-targeted stop rule or FF
+/// stages) and should be submitted solo.
+fn pack_signature(spec: &RunSpec, priority: i32) -> Option<String> {
+    let steps = match &spec.stop {
+        StopRule::MaxSteps(n) => *n,
+        _ => return None,
+    };
+    if spec.cfg.ff.enabled {
+        return None;
+    }
+    let frozen_src = match &spec.base {
+        Some(b) => format!("base:{:p}", Arc::as_ptr(b)),
+        None => format!("seed:{}", spec.cfg.seed),
+    };
+    Some(format!(
+        "{}|p{priority}|n{steps}|gb{}|te{}|{frozen_src}",
+        spec.cfg.artifact, spec.cfg.global_batch, spec.cfg.test_examples
+    ))
+}
+
+/// Drop one mate (identified by its slot) from the pack pool, if it is
+/// still registered.
+fn unregister_mate<R>(shared: &Shared<R>, sig: &str, slot: &Arc<Mutex<Option<PackData>>>) {
+    let mut pool = lock(&shared.pack_pool);
+    if let Some(list) = pool.get_mut(sig) {
+        list.retain(|m| !Arc::ptr_eq(&m.data, slot));
+        if list.is_empty() {
+            pool.remove(sig);
+        }
+    }
+}
+
+/// Publish a claimed sibling's outcome: tenant counters first (matching
+/// [`run_entry`]'s order), then the terminal state, then wake joiners.
+fn publish_mate(
+    shared: &Shared<RunOutput>,
+    handle: &Arc<HandleShared<RunOutput>>,
+    outcome: Outcome<RunOutput>,
+) {
+    {
+        let mut tenants = lock(&shared.tenants);
+        let t = tenants.entry(handle.tenant.clone()).or_default();
+        match &outcome {
+            Outcome::Done(_) => t.completed += 1,
+            Outcome::Cancelled(_) => t.cancelled += 1,
+            Outcome::Failed(_) => t.failed += 1,
+        }
+    }
+    *lock(&handle.state) = HandleState::Finished(Some(outcome));
+    handle.cv.notify_all();
+}
+
+/// Run one member solo (the no-mates fallback and the odd-size
+/// remainder of a pack), folding its stats and classifying from the
+/// trainer's authoritative `summary.cancelled`.
+fn run_solo_member(
+    rt: &Arc<Runtime>,
+    artifacts: &ArtifactCache,
+    shared: &Shared<RunOutput>,
+    data: PackData,
+    cancel: Option<Arc<AtomicBool>>,
+) -> Result<JobYield<RunOutput>> {
+    let PackData { spec, tenant } = data;
+    let out = execute_run_cancellable(rt, artifacts, spec, cancel)?;
+    fold_run_stats(shared, &tenant, &out);
+    // The trainer's summary is the authoritative cancel marker: a
+    // cancel that raced a fully-delivered run stays Done (and bills as
+    // completed), not Cancelled.
+    if out.summary.cancelled {
+        Ok(JobYield::Cancelled(out))
+    } else {
+        Ok(JobYield::Done(out))
+    }
+}
+
 impl RunQueue<RunOutput> {
     /// Submit one whole training run: the `Trainer` is constructed and
     /// driven on whichever worker pops the submission (inline at `join`
@@ -518,27 +669,218 @@ impl RunQueue<RunOutput> {
             tenant,
             priority,
             Box::new(move |token: &CancelToken| {
-                let out = execute_run_cancellable(&rt, &artifacts, spec, Some(token.flag()))?;
-                let mut tenants = lock(&shared.tenants);
-                let t = tenants.entry(tenant_name).or_default();
-                t.adam_steps += out.summary.adam_steps as u64;
-                t.sim_steps += out.summary.sim_steps as u64;
-                t.ff_stages += out.stages.len() as u64;
-                t.flops += out.summary.flops.total();
-                t.seconds += out.seconds;
-                t.transfers = t.transfers.plus(&out.summary.transfers);
-                drop(tenants);
-                // The trainer's summary is the authoritative cancel
-                // marker: a cancel that raced a fully-delivered run
-                // stays Done (and bills as completed), not Cancelled.
-                if out.summary.cancelled {
-                    Ok(JobYield::Cancelled(out))
-                } else {
-                    Ok(JobYield::Done(out))
-                }
+                let data = PackData { spec, tenant: tenant_name };
+                run_solo_member(&rt, &artifacts, &shared, data, Some(token.flag()))
             }),
         )
     }
+
+    /// Like [`RunQueue::submit_run`], but opted into **same-artifact
+    /// packing**: when this submission reaches the front of the queue
+    /// and K−1 compatible submissions (same [`pack_signature`]) are
+    /// still waiting behind it, the popped job becomes the *pack
+    /// leader* — it claims them out of the queue and drives all K runs
+    /// as one `*_batched{K}` program group (2 dispatches per step for
+    /// the whole group — see `rust/src/train/batched.rs`), then
+    /// publishes every member's [`RunOutput`] to its own handle.
+    ///
+    /// The contract is unchanged from solo submission: each member's
+    /// per-step losses and final test loss are **bit-identical** to
+    /// running it alone, its `summary.transfers` is its exact byte
+    /// slice of the group traffic, and its tenant is billed exactly as
+    /// if it ran solo. Cancellation changes granularity only: a queued
+    /// cancel still prevents execution, but once a group is in flight
+    /// its members run to the end of the group (cancel lands at the
+    /// batch boundary, `docs/step-pipeline.md`).
+    ///
+    /// Specs that can never pack (loss-targeted stop, FF stages) or
+    /// whose artifact ships no batched programs fall back to solo
+    /// execution automatically.
+    pub fn submit_run_packable(
+        &self,
+        rt: &Arc<Runtime>,
+        artifacts: &Arc<ArtifactCache>,
+        spec: RunSpec,
+        priority: i32,
+        tenant: &str,
+    ) -> RunHandle<RunOutput> {
+        let sig = match pack_signature(&spec, priority) {
+            Some(sig) => sig,
+            None => return self.submit_run(rt, artifacts, spec, priority, tenant),
+        };
+        let rt = Arc::clone(rt);
+        let artifacts = Arc::clone(artifacts);
+        let shared = Arc::clone(&self.shared);
+        let slot = Arc::new(Mutex::new(Some(PackData {
+            spec,
+            tenant: tenant.to_string(),
+        })));
+        let job = {
+            let (sig, slot) = (sig.clone(), Arc::clone(&slot));
+            Box::new(move |token: &CancelToken| {
+                lead_or_run_solo(&rt, &artifacts, &shared, &sig, &slot, token)
+            })
+        };
+        let handle = self.submit_boxed(tenant, priority, job);
+        // Register for claiming *after* submission (the handle must
+        // exist first). If a worker already popped and ran the job in
+        // between, the slot is empty and the registration is a stale
+        // husk future leaders drop on sight.
+        lock(&self.shared.pack_pool)
+            .entry(sig)
+            .or_default()
+            .push(PackMate { handle: Arc::clone(&handle.handle), data: slot });
+        handle
+    }
+}
+
+/// The body of a packable submission's job: reclaim the spec from the
+/// pack slot, then either lead a batched group over compatible waiting
+/// submissions or fall back to solo execution.
+fn lead_or_run_solo(
+    rt: &Arc<Runtime>,
+    artifacts: &Arc<ArtifactCache>,
+    shared: &Arc<Shared<RunOutput>>,
+    sig: &str,
+    slot: &Arc<Mutex<Option<PackData>>>,
+    token: &CancelToken,
+) -> Result<JobYield<RunOutput>> {
+    // Exclusive by the Queued→Running transition run_entry just made:
+    // leaders only claim slots of still-Queued handles, so our own slot
+    // is necessarily intact here.
+    let own = lock(slot)
+        .take()
+        .ok_or_else(|| anyhow::anyhow!("pack slot emptied while queued (claim protocol bug)"))?;
+    unregister_mate(shared.as_ref(), sig, slot);
+
+    let art = artifacts.load(rt, &own.spec.cfg.artifact)?;
+    if !pack_eligible(&art.manifest, &own.spec.cfg, &own.spec.stop) {
+        return run_solo_member(rt, artifacts, shared, own, Some(token.flag()));
+    }
+    let steps = match &own.spec.stop {
+        StopRule::MaxSteps(n) => *n,
+        _ => unreachable!("pack_signature admits MaxSteps only"),
+    };
+    let sizes = art.manifest.batched_group_sizes();
+    let max_r = *sizes.last().expect("pack_eligible implies batched programs");
+
+    // Claim compatible waiting submissions, oldest first, up to the
+    // largest emitted group size. A claim flips the sibling's handle
+    // Queued → Running under its state lock — the same transition
+    // run_entry makes — so each submission is owned exactly once no
+    // matter which side gets there first.
+    let mut members = vec![own];
+    let mut claimed: Vec<Arc<HandleShared<RunOutput>>> = Vec::new();
+    {
+        let mut pool = lock(&shared.pack_pool);
+        if let Some(list) = pool.get_mut(sig) {
+            let mut kept = Vec::new();
+            for mate in list.drain(..) {
+                if members.len() >= max_r {
+                    kept.push(mate);
+                    continue;
+                }
+                let mut st = lock(&mate.handle.state);
+                if !matches!(*st, HandleState::Queued) {
+                    // cancelled while queued, or already running solo:
+                    // drop the stale pool entry, never execute it here
+                    continue;
+                }
+                match lock(&mate.data).take() {
+                    Some(d) => {
+                        *st = HandleState::Running;
+                        drop(st);
+                        members.push(d);
+                        claimed.push(Arc::clone(&mate.handle));
+                    }
+                    None => {} // stale husk (job already ran): drop
+                }
+            }
+            if kept.is_empty() {
+                pool.remove(sig);
+            } else {
+                *list = kept;
+            }
+        }
+    }
+
+    // The group runs at the largest emitted size we filled; members
+    // beyond it (odd remainders, e.g. 3 claimed with sizes {2, 4}) run
+    // solo on this same worker rather than being released — a released
+    // entry's queue slot may already have been reaped, which would
+    // strand its joiner forever.
+    let group_r = sizes.iter().rev().find(|&&r| r <= members.len()).copied();
+    let group_r = match group_r {
+        Some(r) => r,
+        None => {
+            // nobody to pack with (sizes start at 2): plain solo run
+            debug_assert!(claimed.is_empty());
+            let own = members.pop().expect("leader is always present");
+            return run_solo_member(rt, artifacts, shared, own, Some(token.flag()));
+        }
+    };
+    let remainder: Vec<PackData> = members.split_off(group_r);
+    let rem_handles: Vec<Arc<HandleShared<RunOutput>>> = claimed.split_off(group_r - 1);
+
+    let specs: Vec<MemberSpec> = members
+        .iter()
+        .map(|d| MemberSpec {
+            label: d.spec.label.clone(),
+            cfg: d.spec.cfg.clone(),
+            base: d.spec.base.clone(),
+        })
+        .collect();
+    let group = run_batched_group(rt, &art, &specs, steps);
+
+    let own_yield = match group {
+        Err(e) => {
+            // Every claimed handle — packed or remainder — fails with
+            // the group: their joiners must not hang on a husk.
+            let msg = format!("{e:#}");
+            for h in claimed.iter().chain(&rem_handles) {
+                publish_mate(
+                    shared.as_ref(),
+                    h,
+                    Outcome::Failed(anyhow::anyhow!("batched group failed: {msg}")),
+                );
+            }
+            return Err(e.context("batched group"));
+        }
+        Ok(outs) => {
+            let mut own_yield = None;
+            for (i, (m, d)) in outs.into_iter().zip(members.iter()).enumerate() {
+                let out = RunOutput {
+                    label: m.label,
+                    summary: m.summary,
+                    stream: StreamStats::default(),
+                    sgd_losses: m.sgd_losses,
+                    stages: Vec::new(),
+                    seconds: m.seconds,
+                };
+                fold_run_stats(shared.as_ref(), &d.tenant, &out);
+                if i == 0 {
+                    own_yield = Some(JobYield::Done(out));
+                } else {
+                    publish_mate(shared.as_ref(), &claimed[i - 1], Outcome::Done(out));
+                }
+            }
+            own_yield.expect("group returns one output per member")
+        }
+    };
+
+    // Odd remainder: run each claimed-but-unpacked member solo right
+    // here, honoring its own cancel flag, and publish to its handle.
+    for (d, h) in remainder.into_iter().zip(rem_handles) {
+        let cancel = Some(Arc::clone(&h.cancel));
+        match run_solo_member(rt, artifacts, shared.as_ref(), d, cancel) {
+            Ok(JobYield::Done(out)) => publish_mate(shared.as_ref(), &h, Outcome::Done(out)),
+            Ok(JobYield::Cancelled(out)) => {
+                publish_mate(shared.as_ref(), &h, Outcome::Cancelled(Some(out)))
+            }
+            Err(e) => publish_mate(shared.as_ref(), &h, Outcome::Failed(e)),
+        }
+    }
+    Ok(own_yield)
 }
 
 impl<R> Drop for RunQueue<R> {
@@ -562,8 +904,12 @@ impl<R> Drop for RunQueue<R> {
         self.shared.cv.notify_all();
         for e in leftovers {
             let mut st = lock(&e.handle.state);
-            if matches!(*st, HandleState::Finished(_)) {
-                continue; // already individually cancelled
+            if !matches!(*st, HandleState::Queued) {
+                // already individually cancelled — or a husk entry whose
+                // submission a pack leader claimed (Running): the leader
+                // publishes its real outcome, so shutdown must not
+                // clobber it with Cancelled(None).
+                continue;
             }
             *st = HandleState::Finished(Some(Outcome::Cancelled(None)));
             drop(st);

@@ -1,0 +1,416 @@
+//! Batched multi-adapter group stepping: one `*_batched{R}` dispatch
+//! drives R independent LoRA runs over a shared frozen base.
+//!
+//! The AOT layer emits vmapped variants (`grad_step_batched{R}`,
+//! `adam_apply_batched{R}`, `eval_loss_batched{R}`) whose leading axis
+//! stacks R runs' trainable/optimizer state while the frozen base stays
+//! unstacked and shared. XLA compiles the vmapped body to the same
+//! per-run arithmetic as the solo programs (pinned bitwise by
+//! `python/tests/test_batched.py`), so a packed group promises each
+//! member **bit-identical** per-step losses and final test loss versus
+//! running solo — while issuing ~R× fewer program dispatches per step.
+//!
+//! The group steps via the *chained* pair `grad_step_batched{R}` →
+//! `adam_apply_batched{R}` (2 dispatches/step), skipping `grad_finalize`
+//! entirely: packing requires `global_batch == micro_batch` (one
+//! micro-batch per step, no accumulation), and the solo engine's
+//! `grad_finalize(×1.0)` over a single micro-batch is a bitwise no-op
+//! (proven transitively by the fused-vs-chained python test). Using the
+//! fused `train_step_batched{R}` instead would be 1 dispatch/step but is
+//! only admissible while fused == chained bitwise — the chained pair
+//! matches the solo engine's dispatch sequence by construction.
+//!
+//! # Per-member transfer attribution
+//!
+//! The stacked [`ParamSet`]s carry **no** meter: every physical transfer
+//! lands on the global [`Runtime::stats`] only, and each member's
+//! [`TransferMeter`] is charged its exact slice by hand:
+//!
+//! * trainable/m/v state: `4·F_t` bytes each (the member's slab of the
+//!   stacked upload);
+//! * the shared frozen base: `4·F_fr / R` bytes (R ∈ {2, 4} divides the
+//!   4-byte word, so the split is exact);
+//! * batch tensors, step/lr vectors, loss downloads: the member's own
+//!   rows — `4` bytes per member for each `[R]`-shaped scalar vector;
+//! * Adam donation: `16·F_t` bytes per step (the member's t/m/v/g slabs
+//!   of the donated stacked buffers).
+//!
+//! Summing member bytes over the group reproduces the global byte delta
+//! **exactly** (asserted by `rust/tests/sched_queue.rs` and the
+//! `selftest --queue` leg). Member bytes do *not* equal a solo run's
+//! bytes — solo uploads the full frozen base and an `inv_n` scalar the
+//! batched path never needs — and call *counts* are attributed
+//! per-member (one physical call → R member records), so cross-checks
+//! compare bytes, never counts. See `docs/transfer-contract.md` §5.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::TrainConfig;
+use crate::data::batcher::{eval_batches, Batch};
+use crate::data::corpus::make_dataset;
+use crate::data::pipeline::Pipeline;
+use crate::flops::{FlopsCounter, FlopsModel};
+use crate::model::init::{init_params, init_with_base};
+use crate::model::tensor::Tensor;
+use crate::runtime::{Artifact, InputBuf, Manifest, ParamSet, Runtime, TransferMeter};
+use crate::train::trainer::{RunSummary, StopRule};
+
+/// One member of a batched group: a label, its training config, and an
+/// optional shared base checkpoint (the same `Arc` the solo path hands
+/// to [`init_with_base`]).
+#[derive(Clone)]
+pub struct MemberSpec {
+    pub label: String,
+    pub cfg: TrainConfig,
+    pub base: Option<Arc<BTreeMap<String, Tensor>>>,
+}
+
+/// Per-member result of a batched group run. `summary.transfers` is the
+/// member's exact byte slice of the group's traffic (see module docs);
+/// `dispatches` is the number of program executions the *whole group*
+/// issued (shared by every member — the bench divides by R to show the
+/// per-run dispatch shrink).
+#[derive(Debug, Clone)]
+pub struct MemberOutput {
+    pub label: String,
+    pub summary: RunSummary,
+    pub sgd_losses: Vec<f32>,
+    pub seconds: f64,
+    pub dispatches: usize,
+}
+
+/// Whether a run is packable into a batched group for `man`'s artifact:
+/// fixed step count (no loss-targeted stopping — members must stay in
+/// lock-step), no Fast-Forward stages, exactly one micro-batch per step
+/// (the batched chain has no gradient accumulation), and the artifact
+/// actually ships batched program variants.
+pub fn pack_eligible(man: &Manifest, cfg: &TrainConfig, stop: &StopRule) -> bool {
+    matches!(stop, StopRule::MaxSteps(_))
+        && !cfg.ff.enabled
+        && cfg.global_batch == man.config.model.micro_batch
+        && !man.batched_group_sizes().is_empty()
+}
+
+fn bitwise_eq(a: &Tensor, b: &Tensor) -> bool {
+    a.shape == b.shape
+        && a.data.len() == b.data.len()
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Stack each member's tensor for `name` along a new leading run axis.
+fn stack_values(
+    name: &str,
+    shape: &[usize],
+    members: &[BTreeMap<String, Tensor>],
+) -> Result<Tensor> {
+    let mut data = Vec::with_capacity(members.len() * shape.iter().product::<usize>());
+    for vals in members {
+        let t = vals
+            .get(name)
+            .ok_or_else(|| anyhow!("missing init value for param '{name}'"))?;
+        ensure!(t.shape == shape, "param '{name}': shape {:?} != spec {:?}", t.shape, shape);
+        data.extend_from_slice(&t.data);
+    }
+    let mut stacked = vec![members.len()];
+    stacked.extend_from_slice(shape);
+    Ok(Tensor::from_vec(&stacked, data))
+}
+
+/// Run `steps` Adam steps for `specs.len()` members as one batched
+/// group, then evaluate each member's final test loss. Every member's
+/// per-step losses and final test loss are bit-identical to running it
+/// solo (same seed, same artifact); see the module docs for why.
+///
+/// The group has no mid-run cancel point: packed members run to
+/// completion and join at the batch boundary (`docs/step-pipeline.md`).
+pub fn run_batched_group(
+    rt: &Arc<Runtime>,
+    art: &Arc<Artifact>,
+    specs: &[MemberSpec],
+    steps: usize,
+) -> Result<Vec<MemberOutput>> {
+    let man = &art.manifest;
+    let ac = &man.config;
+    let runs = specs.len();
+    ensure!(
+        man.batched_group_sizes().contains(&runs),
+        "artifact '{}' has no batched programs for R={runs} (available: {:?})",
+        man.key,
+        man.batched_group_sizes()
+    );
+    let grad_prog = art.program(&format!("grad_step_batched{runs}"))?;
+    let adam_prog = art.program(&format!("adam_apply_batched{runs}"))?;
+    let eval_prog = art.program(&format!("eval_loss_batched{runs}"))?;
+
+    let micro = ac.model.micro_batch;
+    let seq = ac.model.seq_len;
+    let eb = ac.model.eval_batch;
+    for s in specs {
+        ensure!(s.cfg.artifact == man.key, "member '{}': artifact '{}' != group artifact '{}'",
+            s.label, s.cfg.artifact, man.key);
+        ensure!(s.cfg.global_batch == micro,
+            "member '{}': global_batch {} != micro_batch {} (batched chain has no accumulation)",
+            s.label, s.cfg.global_batch, micro);
+        ensure!(!s.cfg.ff.enabled, "member '{}': FF runs cannot be packed", s.label);
+        ensure!(s.cfg.test_examples == specs[0].cfg.test_examples,
+            "member '{}': test_examples {} != {} (eval chunks must align)",
+            s.label, s.cfg.test_examples, specs[0].cfg.test_examples);
+    }
+
+    // Per-member init over the (required-identical) frozen base. Seeds
+    // may differ — they perturb the *adapters* — but the frozen tensors
+    // must be bitwise equal across members or the shared unstacked base
+    // would silently corrupt every member but one.
+    let values: Vec<BTreeMap<String, Tensor>> = specs
+        .iter()
+        .map(|s| match &s.base {
+            Some(b) => init_with_base(ac, s.cfg.seed, b),
+            None => init_params(ac, s.cfg.seed),
+        })
+        .collect();
+    for (name, _) in &man.frozen {
+        let first = &values[0][name];
+        for (i, vals) in values.iter().enumerate().skip(1) {
+            ensure!(
+                bitwise_eq(first, &vals[name]),
+                "member '{}': frozen param '{name}' differs from member '{}' — packed runs \
+                 must share a base checkpoint or a seed",
+                specs[i].label,
+                specs[0].label
+            );
+        }
+    }
+
+    let stacked_spec: Vec<(String, Vec<usize>)> = man
+        .trainable
+        .iter()
+        .map(|(n, s)| {
+            let mut shape = vec![runs];
+            shape.extend_from_slice(s);
+            (n.clone(), shape)
+        })
+        .collect();
+    let mut stacked_vals = BTreeMap::new();
+    for (name, shape) in &man.trainable {
+        stacked_vals.insert(name.clone(), stack_values(name, shape, &values)?);
+    }
+    // No meters attached: physical transfers land on the global stats
+    // only, and member meters are charged exact slices by hand below.
+    let mut tr = ParamSet::from_spec(rt, &stacked_spec, &stacked_vals)?;
+    let mut m = ParamSet::zeros_like(rt, &tr);
+    let mut v = ParamSet::zeros_like(rt, &tr);
+    let mut fr = ParamSet::from_spec(rt, &man.frozen, &values[0])?;
+    drop(stacked_vals);
+    drop(values);
+
+    let f_t: usize = man.trainable.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    let f_fr: usize = man.frozen.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    ensure!((4 * f_fr) % runs == 0, "frozen bytes {} not divisible by R={runs}", 4 * f_fr);
+
+    let meters: Vec<Arc<TransferMeter>> = (0..runs).map(|_| TransferMeter::new()).collect();
+
+    // Force the initial state upload now so its bytes are attributable,
+    // then charge each member its slab of tr/m/v plus 1/R of the base.
+    tr.device_buffers()?;
+    m.device_buffers()?;
+    v.device_buffers()?;
+    fr.device_buffers()?;
+    for meter in &meters {
+        meter.record_upload(4 * f_t); // trainable slab
+        meter.record_upload(4 * f_t); // m slab
+        meter.record_upload(4 * f_t); // v slab
+        meter.record_upload(4 * f_fr / runs); // share of the frozen base
+    }
+
+    let mut pipelines = Vec::with_capacity(runs);
+    let mut tests = Vec::with_capacity(runs);
+    for s in specs {
+        let ds = make_dataset(
+            &s.cfg.task,
+            ac.model.vocab_size,
+            seq,
+            s.cfg.train_examples,
+            s.cfg.test_examples,
+            s.cfg.ff.val_examples,
+            s.cfg.seed,
+        )?;
+        pipelines.push(Pipeline::spawn(
+            ds.train.clone(),
+            micro,
+            s.cfg.global_batch,
+            s.cfg.seed ^ 0xb47c,
+            4,
+        ));
+        tests.push(eval_batches(&ds.test, eb));
+    }
+    let chunks = tests[0].len();
+    ensure!(
+        tests.iter().all(|t| t.len() == chunks),
+        "members disagree on eval chunk count — test_examples must match"
+    );
+
+    let fm = FlopsModel::for_manifest(man);
+    let mut flops = vec![FlopsCounter::default(); runs];
+    let mut sgd_losses = vec![Vec::with_capacity(steps); runs];
+    let mut dispatches = 0usize;
+    let started = Instant::now();
+
+    // One [R]-shaped lr vector for the whole run (member lrs may differ;
+    // each member is charged its own 4-byte lane once, like the solo
+    // engine's cached lr scalar).
+    let lrs: Vec<f32> = specs.iter().map(|s| s.cfg.lr).collect();
+    let lr_buf = rt.upload_f32(&lrs, &[runs])?;
+    for meter in &meters {
+        meter.record_upload(4);
+    }
+
+    let bt = micro * seq;
+    let mut tok_host = vec![0i32; runs * bt];
+    let mut tgt_host = vec![0i32; runs * bt];
+    let mut msk_host = vec![0f32; runs * bt];
+    for step in 0..steps {
+        for (i, pipe) in pipelines.iter_mut().enumerate() {
+            let gb = pipe.next();
+            ensure!(gb.micro.len() == 1, "packed member got {} micro-batches", gb.micro.len());
+            let b: &Batch = &gb.micro[0];
+            ensure!(b.b == micro && b.t == seq, "batch shape [{}, {}] != [{micro}, {seq}]", b.b, b.t);
+            tok_host[i * bt..(i + 1) * bt].copy_from_slice(&b.tokens);
+            tgt_host[i * bt..(i + 1) * bt].copy_from_slice(&b.targets);
+            msk_host[i * bt..(i + 1) * bt].copy_from_slice(&b.mask);
+        }
+        let tok = rt.upload_i32(&tok_host, &[runs, micro, seq])?;
+        let tgt = rt.upload_i32(&tgt_host, &[runs, micro, seq])?;
+        let msk = rt.upload_f32(&msk_host, &[runs, micro, seq])?;
+        for meter in &meters {
+            meter.record_upload(4 * bt); // tokens row
+            meter.record_upload(4 * bt); // targets row
+            meter.record_upload(4 * bt); // mask row
+        }
+
+        // grad_step_batched{R}: (t.., fr.., tok, tgt, msk) → (loss[R], g..)
+        let mut inputs = tr.device_buffers()?;
+        inputs.extend(fr.device_buffers()?);
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        let outs = grad_prog.execute_raw(&inputs)?;
+        dispatches += 1;
+        let mut outs = outs.into_iter();
+        let loss_buf = outs.next().ok_or_else(|| anyhow!("grad_step_batched: no outputs"))?;
+        let grads: Vec<xla::PjRtBuffer> = outs.collect();
+
+        let losses = rt.download_f32(&loss_buf)?;
+        ensure!(losses.len() == runs, "loss vector has {} lanes != R={runs}", losses.len());
+        for (i, meter) in meters.iter().enumerate() {
+            meter.record_download(4);
+            sgd_losses[i].push(losses[i]);
+        }
+
+        // One [R] step vector per step (each member's Adam t may differ
+        // in principle, but packed members start together — solo uploads
+        // the same 4 bytes per step).
+        let step_vec = vec![step as f32; runs];
+        let step_buf = rt.upload_f32(&step_vec, &[runs])?;
+        for meter in &meters {
+            meter.record_upload(4);
+        }
+
+        // adam_apply_batched{R}: (t.., m.., v.., step, g.., lr) with
+        // t/m/v/g donated — outputs adopt back in the same order.
+        let mut inputs: Vec<InputBuf> = Vec::with_capacity(adam_prog.spec.inputs.len());
+        inputs.extend(tr.take_device_buffers()?.into_iter().map(InputBuf::Donated));
+        inputs.extend(m.take_device_buffers()?.into_iter().map(InputBuf::Donated));
+        inputs.extend(v.take_device_buffers()?.into_iter().map(InputBuf::Donated));
+        inputs.push(InputBuf::Borrowed(&step_buf));
+        inputs.extend(grads.into_iter().map(InputBuf::Donated));
+        inputs.push(InputBuf::Borrowed(&lr_buf));
+        let outs = adam_prog.execute_raw_donated(inputs)?;
+        dispatches += 1;
+        let mut outs = outs.into_iter();
+        tr.adopt_all(&mut outs)?;
+        m.adopt_all(&mut outs)?;
+        v.adopt_all(&mut outs)?;
+        for (i, meter) in meters.iter().enumerate() {
+            meter.record_donation(16 * f_t); // member's t/m/v/g slabs
+            flops[i].sgd_step(&fm, bt);
+        }
+    }
+
+    // Final test eval: chunk j stacks every member's j-th eval batch.
+    // A member's mean mirrors LossAccum exactly (f64 mask-weighted);
+    // chunks where *every* member is pure padding are skipped like the
+    // solo EvalCache skips its zero-mask chunks.
+    let ebt = eb * seq;
+    let mut totals = vec![0f64; runs];
+    let mut weights = vec![0f64; runs];
+    let mut eval_tokens = vec![0usize; runs];
+    let mut tok_host = vec![0i32; runs * ebt];
+    let mut tgt_host = vec![0i32; runs * ebt];
+    let mut msk_host = vec![0f32; runs * ebt];
+    for j in 0..chunks {
+        let mut mask_sums = vec![0f32; runs];
+        for i in 0..runs {
+            let (b, _) = &tests[i][j];
+            ensure!(b.b == eb && b.t == seq, "eval chunk shape [{}, {}] != [{eb}, {seq}]", b.b, b.t);
+            tok_host[i * ebt..(i + 1) * ebt].copy_from_slice(&b.tokens);
+            tgt_host[i * ebt..(i + 1) * ebt].copy_from_slice(&b.targets);
+            msk_host[i * ebt..(i + 1) * ebt].copy_from_slice(&b.mask);
+            mask_sums[i] = b.mask.iter().sum();
+        }
+        if mask_sums.iter().all(|&s| s <= 0.0) {
+            continue;
+        }
+        let tok = rt.upload_i32(&tok_host, &[runs, eb, seq])?;
+        let tgt = rt.upload_i32(&tgt_host, &[runs, eb, seq])?;
+        let msk = rt.upload_f32(&msk_host, &[runs, eb, seq])?;
+        for meter in &meters {
+            meter.record_upload(4 * ebt);
+            meter.record_upload(4 * ebt);
+            meter.record_upload(4 * ebt);
+        }
+        let mut inputs = tr.device_buffers()?;
+        inputs.extend(fr.device_buffers()?);
+        inputs.push(&tok);
+        inputs.push(&tgt);
+        inputs.push(&msk);
+        let outs = eval_prog.execute_raw(&inputs)?;
+        dispatches += 1;
+        let losses = rt.download_f32(&outs[0])?;
+        ensure!(losses.len() == runs, "eval loss has {} lanes != R={runs}", losses.len());
+        for i in 0..runs {
+            meters[i].record_download(4);
+            if mask_sums[i] > 0.0 {
+                totals[i] += losses[i] as f64 * mask_sums[i] as f64;
+                weights[i] += mask_sums[i] as f64;
+                eval_tokens[i] += ebt;
+            }
+        }
+    }
+
+    let seconds = started.elapsed().as_secs_f64();
+    let mut out = Vec::with_capacity(runs);
+    for i in 0..runs {
+        flops[i].test_eval(&fm, eval_tokens[i]);
+        out.push(MemberOutput {
+            label: specs[i].label.clone(),
+            summary: RunSummary {
+                final_test_loss: (totals[i] / weights[i].max(1.0)) as f32,
+                adam_steps: steps,
+                sim_steps: 0,
+                flops: flops[i],
+                train_seconds: seconds,
+                reached_target: false,
+                cancelled: false,
+                transfers: meters[i].snapshot(),
+            },
+            sgd_losses: std::mem::take(&mut sgd_losses[i]),
+            seconds,
+            dispatches,
+        });
+    }
+    Ok(out)
+}

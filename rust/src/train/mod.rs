@@ -4,12 +4,14 @@
 //! readback — see `docs/step-pipeline.md`), checkpointing, and the
 //! pretraining substrate that manufactures W0 for finetuning experiments.
 
+pub mod batched;
 pub mod checkpoint;
 pub mod engine;
 pub mod eval_cache;
 pub mod pretrain;
 pub mod trainer;
 
+pub use batched::{pack_eligible, run_batched_group, MemberOutput, MemberSpec};
 pub use engine::{Engine, EvalSplit, StepEngine, StepOptions};
 pub use eval_cache::{EvalCache, ExampleScratch, LossAccum};
 pub use trainer::{RunSummary, StopRule, Trainer};

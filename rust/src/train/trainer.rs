@@ -192,7 +192,7 @@ impl Trainer {
         let val_batches = eval_batches(&dataset.val, ac.model.eval_batch);
         let test_batches = eval_batches(&dataset.test, ac.model.eval_batch);
 
-        let fm = FlopsModel::for_artifact(ac);
+        let fm = FlopsModel::for_manifest(&art.manifest);
         let ffc = FfController::new(cfg.ff.clone());
         let mut engine = StepEngine::new(
             rt,

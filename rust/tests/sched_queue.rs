@@ -242,6 +242,132 @@ fn queue_cancel_mid_run_reports_cancelled_not_error() {
     assert_eq!(q.tenant("t").cancelled, 1);
 }
 
+/// A spec the queue can pack: fixed steps, no FF, and `global_batch ==
+/// micro_batch` (the batched chain has no gradient accumulation). All
+/// members share the rig's base checkpoint, so frozen weights are
+/// identical across seeds and only the adapters differ.
+fn packable_spec(rig: &Rig, label: &str, seed: u64, steps: usize) -> RunSpec {
+    let mut c = cfg(seed, false);
+    c.global_batch = 8; // == ff-tiny micro_batch
+    RunSpec {
+        label: label.to_string(),
+        cfg: c,
+        stop: StopRule::MaxSteps(steps),
+        base: Some(Arc::clone(&rig.base)),
+        drain_interval: None,
+    }
+}
+
+#[test]
+fn packed_group_is_bit_identical_to_solo_with_exact_meter_slices() {
+    // The tentpole acceptance gate: K runs packed into one batched
+    // program group must (a) reproduce each member's solo losses
+    // bit-for-bit, (b) slice the group's transfer traffic so member
+    // bytes sum *exactly* to the global meter delta, and (c) actually
+    // share the frozen base (fewer uploaded bytes than K solo runs).
+    let r = rig();
+    let art = r.cache.load(&r.rt, "ff-tiny_lora_r8").unwrap();
+    let sizes = art.manifest.batched_group_sizes();
+    if sizes.is_empty() {
+        eprintln!("skipping: artifacts predate batched program variants (re-run make artifacts)");
+        return;
+    }
+    let k = sizes[0];
+    let steps = 5;
+    let seeds: Vec<u64> = (0..k as u64).map(|i| 70 + i).collect();
+
+    // Reference: every member runs solo through the queue.
+    let q_solo = RunQueue::new(1);
+    let solo_handles: Vec<_> = seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let spec = packable_spec(&r, &format!("m{i}"), s, steps);
+            q_solo.submit_run(&r.rt, &r.cache, spec, 0, "t")
+        })
+        .collect();
+    let solo: Vec<_> = join_all(solo_handles)
+        .unwrap()
+        .into_iter()
+        .map(|res| res.done().expect("solo reference completes"))
+        .collect();
+
+    // Packed: identical specs into a paused queue so all K are waiting
+    // when the first one pops and becomes the pack leader.
+    let before = r.rt.stats.snapshot();
+    let q = RunQueue::new_paused(1);
+    let handles: Vec<_> = seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let spec = packable_spec(&r, &format!("m{i}"), s, steps);
+            q.submit_run_packable(&r.rt, &r.cache, spec, 0, "t")
+        })
+        .collect();
+    q.release();
+    let packed: Vec<_> = join_all(handles)
+        .unwrap()
+        .into_iter()
+        .map(|res| res.done().expect("packed members complete normally"))
+        .collect();
+    let delta = r.rt.stats.snapshot().since(&before);
+
+    // (a) bit-identity per member, in submission order.
+    assert_eq!(packed.len(), k);
+    for (s, p) in solo.iter().zip(&packed) {
+        assert!(s.bit_identical(p), "{}: packed losses diverged from solo", s.label);
+        assert_eq!(s.summary.adam_steps, p.summary.adam_steps, "{}", s.label);
+        assert!(!p.summary.cancelled, "{}", s.label);
+    }
+
+    // (b) member meter slices sum exactly to the global byte delta.
+    // Bytes only: one physical call fans out to K member records, so
+    // call *counts* are attributed per member and do not sum to the
+    // global counts (docs/transfer-contract.md §5).
+    let mut summed = TransferSnapshot::default();
+    for p in &packed {
+        summed = summed.plus(&p.summary.transfers);
+    }
+    assert_eq!(
+        (summed.uploaded_bytes, summed.downloaded_bytes, summed.donated_bytes),
+        (delta.uploaded_bytes, delta.downloaded_bytes, delta.donated_bytes),
+        "member byte slices must sum exactly to the global delta"
+    );
+
+    // (c) packing really happened: the group uploads the frozen base
+    // once (and skips the per-micro inv_n scalar), so it moves strictly
+    // fewer bytes than the K solo runs did.
+    let solo_uploaded: usize = solo.iter().map(|s| s.summary.transfers.uploaded_bytes).sum();
+    assert!(
+        delta.uploaded_bytes < solo_uploaded,
+        "packed group uploaded {} bytes, not fewer than the {} of {k} solo runs",
+        delta.uploaded_bytes,
+        solo_uploaded
+    );
+
+    // Tenant accounting: K completed runs, steps and FLOPs folded in.
+    let t = q.tenant("t");
+    assert_eq!(t.completed, k as u64);
+    assert_eq!(t.adam_steps, (k * steps) as u64);
+    assert!(t.flops > 0);
+}
+
+#[test]
+fn ineligible_specs_fall_back_to_solo_through_the_packable_path() {
+    // global_batch != micro_batch (gradient accumulation) can never
+    // pack: submit_run_packable must deliver it solo, bit-identical to
+    // submit_run, with clean tenant accounting.
+    let r = rig();
+    let q = RunQueue::new(1);
+    let a = q.submit_run(&r.rt, &r.cache, spec(&r, "solo", 21, false, 3), 0, "t");
+    let b = q.submit_run_packable(&r.rt, &r.cache, spec(&r, "fallback", 21, false, 3), 0, "t");
+    let a = a.join().unwrap().done().unwrap();
+    let b = b.join().unwrap().done().unwrap();
+    assert!(a.bit_identical(&b), "fallback path changed the losses");
+    assert_eq!(a.summary.transfers, b.summary.transfers, "fallback meter must match solo exactly");
+    assert_eq!(q.tenant("t").completed, 2);
+}
+
 #[test]
 fn priority_ordering_from_a_cold_queue() {
     // Public-API ordering check with plain closures (no artifacts): a
