@@ -49,6 +49,9 @@ fi
 #   sched/mod.rs   1 — WorkerPool::scatter's thread::scope (cfg-gated)
 #   sched/queue.rs 2 — RunQueue worker thread::spawn (cfg-gated) + the
 #                      gated-only concurrent-submitters test's scope
+#                      (the preempt/park/resume, completions-stream, and
+#                      backpressure machinery reuses these workers and
+#                      the queue's condvars — zero new spawn sites)
 # (The data pipeline spawns plain host threads over host-only data; it
 # is deliberately not probed.)
 for spec in "rust/src/sched/mod.rs:1" "rust/src/sched/queue.rs:2"; do

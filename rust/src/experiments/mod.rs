@@ -26,7 +26,7 @@ use anyhow::{anyhow, Result};
 
 use crate::model::tensor::Tensor;
 use crate::runtime::Runtime;
-use crate::sched::{ArtifactCache, RunPoll, RunQueue, WorkerPool};
+use crate::sched::{ArtifactCache, RunQueue, WorkerPool};
 use crate::train::pretrain::ensure_pretrained;
 
 /// Scale knobs: `quick` (default; minutes on one core) vs `full`
@@ -83,78 +83,66 @@ macro_rules! scatter_via_queue {
     ($ctx:expr, $items:expr, $f:expr) => {{
         let q = RunQueue::new($ctx.jobs);
         let f = Arc::new($f);
-        let handles: Vec<_> = $items
-            .into_iter()
-            .enumerate()
-            .map(|(i, item)| {
-                let f = Arc::clone(&f);
-                q.submit("grid", 0, move |_| f(i, item))
-            })
-            .collect();
-        // Fail-fast, approximating `WorkerPool::scatter`: with real
-        // workers in flight, watch completions in *completion* order and
-        // cancel every sibling the moment any cell fails, instead of
-        // blocking straight into the submission-order joins (where an
-        // early long cell hides the failure while workers keep popping
-        // doomed ones). Cancel stops still-QUEUED cells outright; cells
-        // already mid-training finish (the grid closure has no hook into
-        // its trainers' cancel flags) and their results are discarded —
-        // weaker than the pool's stop-new-pops, stronger than nothing.
-        // (Inline-drain builds have no workers: cells only run inside
-        // `join`, which is already fail-fast there.)
-        if q.workers() > 0 {
-            loop {
-                if handles.iter().any(|h| h.poll() == RunPoll::Failed) {
+        let mut handles = Vec::new();
+        let mut index_of: BTreeMap<u64, usize> = BTreeMap::new();
+        for (i, item) in $items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let h = q
+                .submit("grid", 0, move |_| f(i, item))
+                .expect("grid queue sets no capacity or quota: admission cannot fail");
+            index_of.insert(h.seq(), i);
+            handles.push(h);
+        }
+        // Stream outcomes in *completion* order and scatter them back
+        // into submission-indexed slots. Fail-fast matches
+        // `WorkerPool::scatter`: the first failed cell cancels every
+        // sibling the moment it streams out — still-queued cells stop
+        // outright; cells already mid-training finish (the grid closure
+        // has no hook into its trainers' cancel flags) and their results
+        // are discarded. The stream keeps draining after the cancel so
+        // the queue is quiescent before returning. (Inline-drain builds
+        // run cells inside `next_completion` itself — same loop, equally
+        // fail-fast.)
+        let mut slots: Vec<Option<_>> = (0..handles.len()).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut saw_cancelled = false;
+        for c in q.completions() {
+            let c = match c {
+                Ok(c) => c,
+                Err(e) => {
+                    // the stream itself failed (shutdown race): cancel
+                    // what's left and surface the error
                     for h in &handles {
                         h.cancel();
                     }
+                    first_err.get_or_insert(e);
                     break;
                 }
-                let live = handles
-                    .iter()
-                    .any(|h| matches!(h.poll(), RunPoll::Queued | RunPoll::Running));
-                if !live {
-                    break;
-                }
-                std::thread::sleep(std::time::Duration::from_millis(10));
-            }
-        }
-        // Join in submission order. The first error observed is the
-        // lowest-index failure (every earlier handle joined Ok or
-        // cancelled); everything after it is cancelled and reaped so the
-        // queue is quiescent before returning.
-        let mut out = Vec::with_capacity(handles.len());
-        let mut iter = handles.into_iter();
-        let mut first_err: Option<anyhow::Error> = None;
-        let mut saw_cancelled = false;
-        for h in iter.by_ref() {
-            match h.join() {
+            };
+            let i = index_of[&c.seq];
+            match c.result {
                 Ok(r) => match r.done() {
-                    Some(x) => out.push(x),
+                    Some(x) => slots[i] = Some(x),
                     None => saw_cancelled = true,
                 },
                 Err(e) => {
-                    first_err = Some(e);
-                    break;
-                }
-            }
-        }
-        for rest in iter {
-            rest.cancel();
-            if let Err(e) = rest.join() {
-                if first_err.is_none() {
-                    first_err = Some(e);
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("grid cell {i}")));
+                        for h in &handles {
+                            h.cancel();
+                        }
+                    }
                 }
             }
         }
         if let Some(e) = first_err {
             Err(e)
-        } else if saw_cancelled {
+        } else if saw_cancelled || slots.iter().any(|s| s.is_none()) {
             // no real failure, yet a cell was cancelled out from under
             // the grid — surface it rather than return a short vector
             Err(anyhow!("grid cell was cancelled before completing"))
         } else {
-            Ok(out)
+            Ok(slots.into_iter().flatten().collect())
         }
     }};
 }
@@ -177,7 +165,8 @@ pub struct ExpContext {
     /// Route grid fan-outs through the long-lived multi-tenant
     /// [`RunQueue`] instead of a per-batch [`WorkerPool`] (`--queue` on
     /// the experiment CLI) — exercises the serving-shaped scheduler path
-    /// end-to-end; results stay submission-ordered and byte-identical.
+    /// end-to-end (completion-order streaming included); returned
+    /// results stay submission-ordered and byte-identical.
     pub use_queue: bool,
     /// In-memory W0 cache: one `Arc`'d parameter map per model, so N
     /// concurrent cells share one copy instead of each re-reading and
@@ -224,15 +213,16 @@ impl ExpContext {
         self.self_ref.upgrade().expect("ExpContext is always Arc-owned")
     }
 
-    /// Fan independent grid cells out in submission order: through the
-    /// long-lived multi-tenant [`RunQueue`] when `--queue` is set (the
+    /// Fan independent grid cells out: through the long-lived
+    /// multi-tenant [`RunQueue`] when `--queue` is set (the
     /// serving-shaped path — submissions under tenant `"grid"`, equal
-    /// priority, joined in submission order), otherwise through a
+    /// priority, outcomes streamed in completion order and scattered
+    /// back into submission-indexed slots), otherwise through a
     /// per-batch [`WorkerPool::scatter`]. Both routes return results in
-    /// submission order with the lowest-index error first, so reports
-    /// are byte-identical whichever scheduler ran them. Queue
-    /// submissions must own their captures (`'static`): closures clone
-    /// [`ExpContext::shared`] instead of borrowing the context.
+    /// submission order, so reports are byte-identical whichever
+    /// scheduler ran them. Queue submissions must own their captures
+    /// (`'static`): closures clone [`ExpContext::shared`] instead of
+    /// borrowing the context.
     #[cfg(feature = "xla-shared-client")]
     pub fn scatter<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
     where

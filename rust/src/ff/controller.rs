@@ -39,6 +39,21 @@ pub struct FfStageStats {
     pub grad_cond: f64,
 }
 
+/// The controller's schedule position, snapshotted for park/resume
+/// (`train::checkpoint::ParkState`). Captures every private scheduling
+/// counter — restoring it into a fresh controller with the same
+/// `FfConfig` reproduces the exact decision sequence, so a resumed run's
+/// FF stages land on the same steps as an uninterrupted one. `stages`
+/// history rides separately (it is already public on the controller).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FfPosition {
+    pub sgd_since_ff: usize,
+    pub total_sgd: usize,
+    pub interval: usize,
+    pub consecutive_failures: usize,
+    pub permanently_off: bool,
+}
+
 #[derive(Debug)]
 pub struct FfController {
     cfg: FfConfig,
@@ -132,6 +147,29 @@ impl FfController {
     pub fn n_stages(&self) -> usize {
         self.stages.len()
     }
+
+    /// Snapshot the schedule position for park/resume.
+    pub fn position(&self) -> FfPosition {
+        FfPosition {
+            sgd_since_ff: self.sgd_since_ff,
+            total_sgd: self.total_sgd,
+            interval: self.interval,
+            consecutive_failures: self.consecutive_failures,
+            permanently_off: self.permanently_off,
+        }
+    }
+
+    /// Restore a snapshotted schedule position (the inverse of
+    /// [`FfController::position`]). The controller keeps its own `cfg`:
+    /// a resume is only meaningful with the same `FfConfig` the position
+    /// was taken under.
+    pub fn restore_position(&mut self, p: FfPosition) {
+        self.sgd_since_ff = p.sgd_since_ff;
+        self.total_sgd = p.total_sgd;
+        self.interval = p.interval;
+        self.consecutive_failures = p.consecutive_failures;
+        self.permanently_off = p.permanently_off;
+    }
 }
 
 #[cfg(test)]
@@ -153,6 +191,35 @@ mod tests {
 
     fn cfg() -> FfConfig {
         FfConfig { warmup_steps: 3, t_interval: 2, ..FfConfig::default() }
+    }
+
+    #[test]
+    fn position_round_trip_reproduces_the_decision_sequence() {
+        // drive a controller mid-schedule, snapshot, restore into a fresh
+        // one, then check both make identical decisions from there on
+        let mut a = FfController::new(cfg());
+        for _ in 0..4 {
+            if a.next() == FfDecision::FastForward {
+                a.on_ff_stage(stats(a.n_stages(), 2));
+            } else {
+                a.on_sgd_step();
+            }
+        }
+        let pos = a.position();
+        let mut b = FfController::new(cfg());
+        b.restore_position(pos);
+        assert_eq!(b.position(), pos);
+        for i in 0..12 {
+            assert_eq!(a.next(), b.next(), "decision diverged at step {i}");
+            if a.next() == FfDecision::FastForward {
+                a.on_ff_stage(stats(a.n_stages(), 0));
+                b.on_ff_stage(stats(b.n_stages(), 0));
+            } else {
+                a.on_sgd_step();
+                b.on_sgd_step();
+            }
+        }
+        assert_eq!(a.position(), b.position());
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod controller;
 pub mod line_search;
 
-pub use controller::{FfController, FfDecision, FfStageStats};
+pub use controller::{FfController, FfDecision, FfPosition, FfStageStats};
 pub use line_search::{line_search, LineSearchResult};

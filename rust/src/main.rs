@@ -4,8 +4,8 @@
 //!   train        one training run (artifact × task, FF on/off)
 //!   experiment   run one paper-figure harness (or --all)
 //!   queue        long-lived multi-tenant run queue: submit a manifest of
-//!                runs (priorities + tenants), report each run as its
-//!                join returns, print per-tenant accounting
+//!                runs (priorities + tenants), stream results in
+//!                completion order, print per-tenant accounting
 //!   pretrain     (re)build the cached W0 checkpoint for a model
 //!   list         artifacts, experiments, presets
 //!   selftest     fast end-to-end smoke check of the whole stack
@@ -61,13 +61,16 @@ fn usage() -> &'static str {
      experiment: <id>|--all [--full] [--jobs N] [--queue]   (ids: fastforward list\n\
                  --experiments; --queue routes grid cells through the run queue)\n\
      queue:      --manifest FILE [--jobs N]   (long-lived multi-tenant run queue:\n\
-                 submissions pop by priority, FIFO within a class; results print\n\
-                 per join; per-tenant runs/steps/FLOPs/exact-bytes accounting.\n\
-                 manifest lines: tenant priority artifact task steps seed on|off)\n\
+                 submissions pop by priority, fair-share within a class; results\n\
+                 stream in completion order; per-tenant runs/steps/FLOPs/exact-\n\
+                 bytes accounting. manifest lines: tenant priority artifact task\n\
+                 steps seed on|off)\n\
      pretrain:   --model NAME [--steps N]\n\
-     selftest:   [--jobs N] [--queue]   (N > 1 exercises the concurrent scheduler;\n\
-                 --queue adds run-queue legs: priorities, cancel, tenant totals,\n\
-                 and batched same-artifact packing vs solo bit-identity)\n\
+     selftest:   [--jobs N] [--queue] [--churn]   (N > 1 exercises the concurrent\n\
+                 scheduler; --queue adds run-queue legs: priorities, cancel,\n\
+                 tenant totals, and batched same-artifact packing vs solo\n\
+                 bit-identity; --churn adds the deterministic churn storm plus\n\
+                 quantum park/resume accounting, and implies --queue)\n\
      note: --jobs > 1 needs a build with --features xla-shared-client (pinned,\n\
            audited xla rev — see rust/XLA_AUDIT); otherwise the pool runs\n\
            sequentially and the queue drains inline at join, in priority order\n"
@@ -337,7 +340,7 @@ fn cmd_queue(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
             " (no thread fan-out in this build: inline drain, priority order)"
         }
     );
-    let mut handles = Vec::new();
+    let mut labels: BTreeMap<u64, String> = BTreeMap::new();
     for (i, r) in runs.into_iter().enumerate() {
         let base = bases.get(model_of(&r.artifact)).cloned();
         let mut cfg = presets::train_config(&r.artifact, &r.task, 1)?;
@@ -351,15 +354,19 @@ fn cmd_queue(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
             base,
             drain_interval: None,
         };
-        handles.push((label, q.submit_run(&rt, &cache, spec, r.priority, &r.tenant)));
+        let h = q.submit_run(&rt, &cache, spec, r.priority, &r.tenant)?;
+        labels.insert(h.seq(), label);
     }
-    // Report results in submission order: each join blocks until that
-    // run finishes, so under real fan-out a completed later submission
-    // waits for earlier ones to print (completion-order streaming is an
-    // open ROADMAP item).
+    // Stream results in completion order: each run prints the moment it
+    // finishes — a fast high-priority run never waits behind an earlier,
+    // slower submission's join.
     let mut failed = 0usize;
-    for (label, h) in handles {
-        match h.join() {
+    for c in q.completions() {
+        let c = c?;
+        let label = labels
+            .remove(&c.seq)
+            .unwrap_or_else(|| format!("{}#{}", c.tenant, c.seq));
+        match c.result {
             Ok(RunResult::Done(o)) => println!(
                 "done      {label}: test loss {:.4} | {} adam + {} sim steps | {:.1}s",
                 o.summary.final_test_loss, o.summary.adam_steps, o.summary.sim_steps, o.seconds
@@ -465,9 +472,16 @@ fn cmd_list(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
 
 fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     let requested = args.opt_usize("jobs", 2).map_err(|e| anyhow::anyhow!(e))?.max(1);
-    let with_queue = args.flag("queue");
+    let with_churn = args.flag("churn");
+    let with_queue = args.flag("queue") || with_churn;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let total = if with_queue { 7 } else { 5 };
+    let total = if with_churn {
+        8
+    } else if with_queue {
+        7
+    } else {
+        5
+    };
     // The scheduler gate is part of the banner so degraded (sequential)
     // CI runs are visible in the logs, not silently green.
     println!(
@@ -580,14 +594,14 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
         let mut handles = Vec::new();
         for (i, spec) in queue_specs.into_iter().enumerate() {
             let (tenant, priority) = if i == 0 { ("alice", 0) } else { ("bob", 1) };
-            handles.push(q.submit_run(&rt, &cache, spec, priority, tenant));
+            handles.push(q.submit_run(&rt, &cache, spec, priority, tenant)?);
         }
         let victim_spec = {
             let mut s = specs("victim");
             s.truncate(1);
             s.remove(0)
         };
-        let victim = q.submit_run(&rt, &cache, victim_spec, 5, "alice");
+        let victim = q.submit_run(&rt, &cache, victim_spec, 5, "alice")?;
         victim.cancel();
         q.release();
         anyhow::ensure!(
@@ -673,10 +687,10 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
                     .collect()
             };
             let solo_q = RunQueue::new(1);
-            let solo_handles: Vec<_> = packable("solo")
-                .into_iter()
-                .map(|s| solo_q.submit_run(&rt, &cache, s, 0, "t"))
-                .collect();
+            let mut solo_handles = Vec::new();
+            for s in packable("solo") {
+                solo_handles.push(solo_q.submit_run(&rt, &cache, s, 0, "t")?);
+            }
             let mut solo = Vec::new();
             for h in solo_handles {
                 match h.join()? {
@@ -688,10 +702,10 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
             // first pops, so the pack always forms at full size.
             let before = rt.stats.snapshot();
             let pq = RunQueue::new_paused(1);
-            let handles: Vec<_> = packable("packed")
-                .into_iter()
-                .map(|s| pq.submit_run_packable(&rt, &cache, s, 0, "t"))
-                .collect();
+            let mut handles = Vec::new();
+            for s in packable("packed") {
+                handles.push(pq.submit_run_packable(&rt, &cache, s, 0, "t")?);
+            }
             pq.release();
             let mut packed = Vec::new();
             for h in handles {
@@ -732,6 +746,167 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
                 delta.report()
             );
         }
+    }
+
+    if with_churn {
+        println!(
+            "[8/{total}] queue churn: seeded storm (exactly-once, deterministic \
+             event log) + quantum park/resume accounting"
+        );
+        // Phase (a): closure storm. 2000 tiny submissions across 8
+        // tenants with mixed priorities and ~10% cancelled while queued,
+        // against a paused-then-released queue. Every handle must settle
+        // exactly once, tenant counters must balance, and the same seed
+        // must reproduce the same event log (sorted under thread
+        // fan-out, where interleaving — but never the event *set* — may
+        // vary).
+        let storm = |seed: u64| -> anyhow::Result<(Vec<String>, usize, usize)> {
+            const TENANTS: [&str; 8] = ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "t7"];
+            const SUBS: usize = 2000;
+            let mut rng = fastforward::util::rng::Rng::new(seed);
+            let q: RunQueue<usize> = RunQueue::new_paused(requested);
+            let log = Arc::new(std::sync::Mutex::new(Vec::<String>::new()));
+            let mut handles = Vec::new();
+            for i in 0..SUBS {
+                let tenant = TENANTS[rng.below(TENANTS.len())];
+                let priority = rng.below(4) as i32;
+                let log = Arc::clone(&log);
+                let h = q
+                    .submit(tenant, priority, move |_| {
+                        log.lock().unwrap().push(format!("p{priority} {tenant} run{i}"));
+                        Ok(i)
+                    })
+                    .map_err(|e| anyhow::anyhow!("storm submission {i} rejected: {e}"))?;
+                if rng.below(10) == 0 {
+                    h.cancel(); // while paused: deterministic cancel-before-start
+                }
+                handles.push((i, h));
+            }
+            q.release();
+            let (mut done, mut cancelled) = (0usize, 0usize);
+            for (i, h) in handles {
+                match h.join()? {
+                    RunResult::Done(v) => {
+                        anyhow::ensure!(v == i, "cross-delivery: submission {i} returned {v}");
+                        done += 1;
+                    }
+                    RunResult::Cancelled(_) => cancelled += 1,
+                }
+            }
+            anyhow::ensure!(done + cancelled == SUBS, "lost submissions: {done}+{cancelled}");
+            anyhow::ensure!(q.live() == 0, "queue not quiescent after all joins");
+            let (mut sub, mut comp, mut canc, mut picked) = (0u64, 0u64, 0u64, 0u64);
+            for t in q.tenants().values() {
+                anyhow::ensure!(
+                    t.completed + t.cancelled + t.failed == t.submitted,
+                    "tenant counters do not balance: {t:?}"
+                );
+                sub += t.submitted;
+                comp += t.completed;
+                canc += t.cancelled;
+                picked += t.picked;
+            }
+            anyhow::ensure!(
+                sub == SUBS as u64 && comp == done as u64 && canc == cancelled as u64,
+                "global counters ({sub}/{comp}/{canc}) != join tallies ({SUBS}/{done}/{cancelled})"
+            );
+            anyhow::ensure!(picked == comp, "closure jobs never park: picked must equal completed");
+            let mut events = Arc::try_unwrap(log)
+                .map_err(|_| anyhow::anyhow!("storm log still shared after all joins"))?
+                .into_inner()
+                .unwrap();
+            anyhow::ensure!(
+                events.len() == done,
+                "event log ({}) != completions ({done})",
+                events.len()
+            );
+            if sched::threads_enabled() {
+                events.sort();
+            }
+            Ok((events, done, cancelled))
+        };
+        let (ev1, done, cancelled) = storm(0xc4a2_2024)?;
+        let (ev2, ..) = storm(0xc4a2_2024)?;
+        if ev1 != ev2 {
+            eprintln!("--- churn storm event log, first run ---");
+            for e in &ev1 {
+                eprintln!("{e}");
+            }
+            eprintln!("--- churn storm event log, second run ---");
+            for e in &ev2 {
+                eprintln!("{e}");
+            }
+            anyhow::bail!("same-seed churn storms produced different event logs");
+        }
+        println!(
+            "      ok: storm of 2000 submissions ({done} done, {cancelled} cancelled) \
+             settled exactly once; same seed reproduced the event log"
+        );
+
+        // Phase (b): training churn — a step quantum of 2 forces each
+        // 4-step run to park mid-flight and resume. Resumed runs must
+        // report full step counts bit-identical to the uninterrupted
+        // reference (leg 5), and per-tenant bytes must sum exactly to
+        // the global meter delta *including* the park/resume overhead.
+        let before = rt.stats.snapshot();
+        let cq = RunQueue::new_paused(requested);
+        cq.set_step_quantum(2);
+        let mut churn_handles = Vec::new();
+        for (i, spec) in specs("churn").into_iter().enumerate() {
+            let tenant = if i == 0 { "carol" } else { "dave" };
+            churn_handles.push(cq.submit_run(&rt, &cache, spec, 0, tenant)?);
+        }
+        let victim_spec = {
+            let mut s = specs("churn-victim");
+            s.truncate(1);
+            s.remove(0)
+        };
+        let v = cq.submit_run(&rt, &cache, victim_spec, 0, "carol")?;
+        v.cancel(); // cancelled while queued: must never bill a byte
+        cq.release();
+        anyhow::ensure!(v.join()?.is_cancelled(), "churn victim must join as Cancelled");
+        let mut resumed = Vec::new();
+        for h in churn_handles {
+            match h.join()? {
+                RunResult::Done(o) => resumed.push(o),
+                RunResult::Cancelled(_) => anyhow::bail!("churn run came back cancelled"),
+            }
+        }
+        for (a, b) in seq.outputs.iter().zip(resumed.iter()) {
+            anyhow::ensure!(
+                a.bit_identical(b),
+                "park/resume changed a run's losses: {} vs {}",
+                a.label,
+                b.label
+            );
+            anyhow::ensure!(
+                b.summary.adam_steps == a.summary.adam_steps,
+                "resumed run lost steps: {} vs {} ({})",
+                b.summary.adam_steps,
+                a.summary.adam_steps,
+                b.label
+            );
+        }
+        let parked: u64 = cq.tenants().values().map(|t| t.parked).sum();
+        anyhow::ensure!(
+            parked >= resumed.len() as u64,
+            "quantum 2 over 4-step runs must park each run at least once (saw {parked})"
+        );
+        let delta = rt.stats.snapshot().since(&before);
+        let mut summed = fastforward::runtime::TransferSnapshot::default();
+        for t in cq.tenants().values() {
+            summed = summed.plus(&t.transfers);
+        }
+        anyhow::ensure!(
+            summed == delta,
+            "tenant transfer totals with park/resume ({summed:?}) != global delta ({delta:?})"
+        );
+        println!(
+            "      ok: {parked} parked slots; resumed runs bit-identical to the \
+             uninterrupted reference with full step counts; tenant bytes (incl. \
+             park/resume overhead) sum exactly to the global delta ({})",
+            delta.report()
+        );
     }
     println!("selftest passed");
     Ok(())

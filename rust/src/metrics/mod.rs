@@ -109,6 +109,13 @@ impl TrainTimer {
         self.excluded += p.elapsed().as_secs_f64();
     }
 
+    /// Credit train seconds carried from before this timer started — a
+    /// negative exclusion, used when a parked run resumes so its summary
+    /// reports whole-run train time, not just the post-resume tail.
+    pub fn credit(&mut self, seconds: f64) {
+        self.excluded -= seconds;
+    }
+
     /// Train seconds so far, net of excluded sections.
     pub fn elapsed(&self) -> f64 {
         let gross = self.started.elapsed().as_secs_f64();

@@ -68,9 +68,13 @@ use crate::ff::controller::FfStageStats;
 use crate::metrics::StepKind;
 use crate::model::tensor::Tensor;
 use crate::runtime::{Artifact, Runtime, StreamStats, TransferSnapshot};
+use crate::train::checkpoint::ParkState;
 use crate::train::trainer::{RunSummary, StopRule, Trainer};
 
-pub use queue::{join_all, CancelToken, RunHandle, RunPoll, RunQueue, RunResult, TenantStats};
+pub use queue::{
+    join_all, CancelToken, Completion, RunHandle, RunPoll, RunQueue, RunResult, SubmitError,
+    TenantQuota, TenantStats,
+};
 
 /// Whether this build may actually fan runs out over host threads. False
 /// in the default build (see module docs, §Thread-safety gate): the
@@ -361,10 +365,50 @@ pub(crate) fn execute_run_cancellable(
     spec: RunSpec,
     cancel: Option<Arc<AtomicBool>>,
 ) -> Result<RunOutput> {
+    match execute_run_resumable(rt, artifacts, &spec, cancel, None, None, None)? {
+        SlotOutcome::Finished(out) => Ok(out),
+        SlotOutcome::Parked { .. } => unreachable!("no park flag or quantum was installed"),
+    }
+}
+
+/// How one queue *slot* of a resumable run ended: the run reached its stop
+/// rule (or honored a cooperative cancel), or it **parked** at an SGD step
+/// boundary with its full trainable/optimizer/FF-controller state captured
+/// for a later [`Trainer::resume_from`] on a fresh trainer.
+pub(crate) enum SlotOutcome {
+    Finished(RunOutput),
+    Parked {
+        state: Box<ParkState>,
+        /// True when the park flag (preemption) forced the park rather
+        /// than the step quantum expiring — preempted runs re-enter at
+        /// the *front* of their priority class, quantum-expired runs at
+        /// the back.
+        preempted: bool,
+        /// Wall-clock this slot occupied its worker.
+        seconds: f64,
+    },
+}
+
+/// The queue's preemptible execution surface: one *slot* of a training
+/// run. Constructs a fresh `Trainer` (optionally restoring a parked
+/// run's state via `resume`), installs the cooperative cancel and park
+/// flags plus an optional fair-share step `quantum`, and drives the run
+/// until it finishes, cancels, or parks at an SGD step boundary. The
+/// spec is borrowed (`cfg` cloned per slot) so a parked run's closure can
+/// re-enter with the same spec on its next slot.
+pub(crate) fn execute_run_resumable(
+    rt: &Arc<Runtime>,
+    artifacts: &ArtifactCache,
+    spec: &RunSpec,
+    cancel: Option<Arc<AtomicBool>>,
+    park: Option<Arc<AtomicBool>>,
+    quantum: Option<usize>,
+    resume: Option<&ParkState>,
+) -> Result<SlotOutcome> {
     let t0 = Instant::now();
     let art = artifacts.load(rt, &spec.cfg.artifact)?;
-    let label = spec.label;
-    let mut t = Trainer::with_artifact(rt, art, spec.cfg, spec.base.as_deref())
+    let label = &spec.label;
+    let mut t = Trainer::with_artifact(rt, art, spec.cfg.clone(), spec.base.as_deref())
         .with_context(|| format!("run '{label}'"))?;
     if let Some(k) = spec.drain_interval {
         t.set_drain_interval(k);
@@ -372,7 +416,23 @@ pub(crate) fn execute_run_cancellable(
     if let Some(flag) = cancel {
         t.set_cancel_flag(flag);
     }
+    if let Some(flag) = park {
+        t.set_park_flag(flag);
+    }
+    if let Some(q) = quantum {
+        t.set_step_quantum(q);
+    }
+    if let Some(state) = resume {
+        t.resume_from(state).with_context(|| format!("resuming parked run '{label}'"))?;
+    }
     let summary = t.run(&spec.stop).with_context(|| format!("run '{label}'"))?;
+    if summary.parked {
+        return Ok(SlotOutcome::Parked {
+            preempted: t.park_was_preemption(),
+            state: Box::new(t.park_state().with_context(|| format!("parking run '{label}'"))?),
+            seconds: t0.elapsed().as_secs_f64(),
+        });
+    }
     let sgd_losses = t
         .log
         .records
@@ -380,14 +440,14 @@ pub(crate) fn execute_run_cancellable(
         .filter(|r| r.kind == StepKind::Sgd)
         .map(|r| r.loss)
         .collect();
-    Ok(RunOutput {
-        label,
+    Ok(SlotOutcome::Finished(RunOutput {
+        label: label.clone(),
         summary,
         stream: t.stream_stats().clone(),
         sgd_losses,
         stages: t.ffc.stages.clone(),
         seconds: t0.elapsed().as_secs_f64(),
-    })
+    }))
 }
 
 #[cfg(test)]

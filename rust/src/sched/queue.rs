@@ -6,10 +6,61 @@
 //! running "many concurrent finetuning workloads" (ROADMAP north star)
 //! needs the other shape — a [`RunQueue`] that accepts submissions **at
 //! any time**, hands back a [`RunHandle`] the caller can `poll`, `join`,
-//! or `cancel`, schedules by **priority** (higher pops first, FIFO within
-//! a class), and keeps **per-tenant accounting** ([`TenantStats`]: runs,
-//! steps, FF stages, FLOPs, and *exact* transfer bytes from each run's
-//! own `TransferMeter`).
+//! `cancel`, or `park`, schedules by **priority** (higher pops first)
+//! with **fair share** within a class, and keeps **per-tenant
+//! accounting** ([`TenantStats`]: runs, steps, FF stages, FLOPs, and
+//! *exact* transfer bytes from each run's own `TransferMeter`).
+//!
+//! # Preemption: park / resume (survivable serving)
+//!
+//! Training runs submitted via [`RunQueue::submit_run`] are
+//! **preemptible**: when a higher-priority submission arrives and every
+//! worker is busy, the lowest-priority running run is asked to *park* —
+//! at its next SGD step boundary it checkpoints its trainables, Adam
+//! moments, step counters, FF-controller position, and full metric
+//! trail to disk (`train::checkpoint::save_park_state`, temp-then-rename
+//! so a crash mid-write never leaves a half checkpoint under the real
+//! name), and re-enters the queue at the **front** of its class. On its
+//! next slot a fresh trainer restores the state
+//! (`Trainer::resume_from`) and continues — **resume, not restart**: the
+//! resumed run's losses and final eval are bit-identical to an
+//! uninterrupted run, with only the park/resume sync traffic added on
+//! top (asserted exactly in `rust/tests/sched_queue.rs`; byte formulas
+//! in `docs/transfer-contract.md` §5). [`RunQueue::set_step_quantum`]
+//! uses the same machinery for time-slicing: every slot parks after N
+//! Adam steps and re-queues at the *back* of its class (round-robin).
+//! A cancel while parked deletes the checkpoint and finishes the handle;
+//! dropping the queue **fails** parked handles loudly (their progress is
+//! discarded — never silently) and removes their park files.
+//!
+//! # Completion-order streaming
+//!
+//! [`RunQueue::completions`] / [`RunQueue::next_completion`] yield
+//! finished submissions in **completion order** — a finished
+//! high-priority run streams out immediately instead of waiting behind
+//! earlier submissions' `join`s. Each outcome is delivered exactly once
+//! across both surfaces (a joined handle is skipped by the stream, and
+//! joining a stream-delivered handle is a loud error).
+//!
+//! # Fair share and quotas
+//!
+//! Within a priority class the queue runs the entry whose tenant has
+//! consumed the least schedule-weight (chargeable FLOPs plus exact
+//! transfer bytes priced at [`BYTE_COST_FLOPS`] FLOPs/byte; ties to
+//! fewest slots picked, then FIFO) — a deficit rule over the same
+//! [`TenantStats`] meters the billing uses, so fairness and accounting
+//! can't drift apart. One tenant degenerates to plain FIFO.
+//! [`RunQueue::set_quota`] adds hard per-tenant budgets enforced at
+//! admission ([`SubmitError::QuotaExceeded`]).
+//!
+//! # Backpressure
+//!
+//! [`RunQueue::set_capacity`] bounds in-flight depth: `submit` rejects
+//! with [`SubmitError::Full`] (the job is not consumed silently — run
+//! submissions return the error immediately), and
+//! [`RunQueue::submit_wait`] blocks for space (inline-drain builds drain
+//! queued work on the calling thread instead of blocking). Parked
+//! re-entries never re-check capacity: admission is paid once.
 //!
 //! # Execution model
 //!
@@ -47,7 +98,9 @@
 //!
 //! * **Queued** submissions are marked `Cancelled` immediately and are
 //!   never executed — for training runs, no `Trainer` (and no device
-//!   state) is ever constructed.
+//!   state) is ever constructed. **Parked** submissions are cancelled the
+//!   same way; their on-disk checkpoint is deleted (nothing will resume
+//!   it).
 //! * **Running** submissions get a cooperative flag ([`CancelToken`],
 //!   installed via `Trainer::set_cancel_flag`) that the policy loop
 //!   checks at every step boundary: the run stops cleanly, drains its
@@ -65,27 +118,38 @@
 //! exact meters, so across a quiescent queue they add up *exactly* to the
 //! global `Runtime::stats` delta (`rust/tests/sched_queue.rs`).
 
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use crate::metrics::StepKind;
 use crate::runtime::{Runtime, StreamStats, TransferSnapshot};
-use crate::sched::{execute_run_cancellable, lock, ArtifactCache, RunOutput, RunSpec};
+use crate::sched::{
+    execute_run_cancellable, execute_run_resumable, lock, ArtifactCache, RunOutput, RunSpec,
+    SlotOutcome,
+};
 use crate::train::batched::{pack_eligible, run_batched_group, MemberSpec};
+use crate::train::checkpoint::{load_park_state, save_park_state, ParkState};
 use crate::train::StopRule;
 
-/// How a job reports back to the queue: done, or cancelled-with-partial-
+/// How a job reports back to the queue: done, cancelled-with-partial-
 /// output when the job itself observed (and honored) the cooperative
-/// flag. Jobs classify their *own* outcome so a racing `cancel()` that
-/// landed after the work fully completed cannot misreport a delivered
-/// run as cancelled — `submit_run` classifies from the trainer's
-/// authoritative `summary.cancelled`; plain-closure submissions
-/// ([`RunQueue::submit`]) fall back to the token state at return.
+/// flag, or **parked** — the job checkpointed its progress at a step
+/// boundary and hands back a continuation `next` to re-queue (at the
+/// front of its priority class when a preemption forced the park, at the
+/// back when its fair-share step quantum expired). Jobs classify their
+/// *own* outcome so a racing `cancel()` that landed after the work fully
+/// completed cannot misreport a delivered run as cancelled —
+/// `submit_run` classifies from the trainer's authoritative
+/// `summary.cancelled`; plain-closure submissions ([`RunQueue::submit`])
+/// fall back to the token state at return.
 enum JobYield<R> {
     Done(R),
     Cancelled(R),
+    Parked { next: Job<R>, front: bool },
 }
 
 /// One queued job: takes the submission's [`CancelToken`] (so
@@ -98,12 +162,18 @@ type Job<R> = Box<dyn FnOnce(&CancelToken) -> Result<JobYield<R>> + Send + 'stat
 #[cfg(not(feature = "xla-shared-client"))]
 type Job<R> = Box<dyn FnOnce(&CancelToken) -> Result<JobYield<R>> + 'static>;
 
-/// The cooperative cancellation signal handed to every job. Long-running
-/// jobs poll [`CancelToken::is_cancelled`] (or install
-/// [`CancelToken::flag`] on a `Trainer`) and stop at their next clean
-/// boundary; quick jobs may ignore it entirely.
+/// The cooperative signals handed to every job: a cancellation flag and a
+/// **park** flag. Long-running jobs poll [`CancelToken::is_cancelled`]
+/// (or install [`CancelToken::flag`] on a `Trainer`) and stop at their
+/// next clean boundary; park-aware jobs additionally install
+/// [`CancelToken::park_flag`] (`Trainer::set_park_flag`) so a preemption
+/// lands at the next SGD step boundary. Quick jobs may ignore both. The
+/// token also carries the submission's park-file slot so a parked run's
+/// continuation finds its checkpoint on the next slot.
 pub struct CancelToken {
     flag: Arc<AtomicBool>,
+    park: Arc<AtomicBool>,
+    park_file: Arc<Mutex<Option<PathBuf>>>,
 }
 
 impl CancelToken {
@@ -117,6 +187,71 @@ impl CancelToken {
     pub fn flag(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.flag)
     }
+
+    /// True once a preemption (or [`RunHandle::park`]) asked this job to
+    /// park at its next clean boundary.
+    pub fn park_requested(&self) -> bool {
+        self.park.load(Ordering::SeqCst)
+    }
+
+    /// The shared park flag (install on a `Trainer` via `set_park_flag`
+    /// so a preemption parks the run at its next SGD step boundary).
+    pub fn park_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.park)
+    }
+
+    /// Where this submission's parked state lives on disk, if an earlier
+    /// slot parked it (the resume side of the park protocol).
+    fn park_file(&self) -> Option<PathBuf> {
+        lock(&self.park_file).clone()
+    }
+
+    /// Record where this slot parked the run's state. The queue deletes
+    /// the file when the submission reaches a terminal state.
+    fn set_park_file(&self, path: PathBuf) {
+        *lock(&self.park_file) = Some(path);
+    }
+}
+
+/// Why [`RunQueue::try_submit`]-family admission rejected a submission.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The queue's bounded depth ([`RunQueue::set_capacity`]) is reached:
+    /// `capacity` submissions are admitted and unfinished. Re-submit
+    /// later, or use [`RunQueue::submit_wait`] to block for space.
+    Full { capacity: usize },
+    /// The tenant exhausted a configured budget
+    /// ([`RunQueue::set_quota`]). Quotas only ever fill up, so this is a
+    /// permanent rejection until the quota is raised.
+    QuotaExceeded { tenant: String, reason: String },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full { capacity } => {
+                write!(f, "queue is full ({capacity} submissions in flight)")
+            }
+            SubmitError::QuotaExceeded { tenant, reason } => {
+                write!(f, "tenant '{tenant}' over quota: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Per-tenant resource budgets, enforced at **admission**: a tenant whose
+/// consumed totals ([`TenantStats`]) meet or exceed a budget cannot
+/// submit new work (already-admitted runs are unaffected — budgets bound
+/// future admissions, they never tear down running work). `None` fields
+/// are unlimited.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantQuota {
+    /// Maximum chargeable FLOPs across the tenant's finished/parked work.
+    pub max_flops: Option<u64>,
+    /// Maximum host↔device bytes (uploads + downloads + donations).
+    pub max_bytes: Option<u64>,
 }
 
 /// Non-blocking status of a submission ([`RunHandle::poll`]).
@@ -126,6 +261,9 @@ pub enum RunPoll {
     Queued,
     /// A worker is executing it.
     Running,
+    /// Parked at a step boundary (preempted or quantum-expired): its
+    /// progress is checkpointed and it is waiting in the queue to resume.
+    Parked,
     /// Finished successfully; `join` will return [`RunResult::Done`].
     Done,
     /// Cancelled (before start, or cooperatively mid-run).
@@ -185,6 +323,13 @@ pub struct TenantStats {
     pub completed: u64,
     pub cancelled: u64,
     pub failed: u64,
+    /// Execution slots handed to this tenant's submissions (each
+    /// park/resume slot of one run counts once) — the fair-share
+    /// tiebreak when weighted costs are equal.
+    pub picked: u64,
+    /// Park events across the tenant's runs (preemptions + expired step
+    /// quanta).
+    pub parked: u64,
     /// Adam steps across the tenant's finished runs (cancelled runs
     /// included — their partial work is real work).
     pub adam_steps: u64,
@@ -210,8 +355,10 @@ enum Outcome<R> {
 enum HandleState<R> {
     Queued,
     Running,
-    /// `None` once [`RunHandle::join`] took the outcome (join consumes
-    /// the handle, so nothing can observe this afterwards).
+    /// Checkpointed at a step boundary and re-queued to resume.
+    Parked,
+    /// `None` once [`RunHandle::join`] or the completions stream took the
+    /// outcome.
     Finished(Option<Outcome<R>>),
 }
 
@@ -219,7 +366,21 @@ enum HandleState<R> {
 struct HandleShared<R> {
     seq: u64,
     tenant: String,
+    /// The priority class the submission re-enters on a park.
+    priority: i32,
     cancel: Arc<AtomicBool>,
+    /// Raised to ask the job to park at its next clean boundary
+    /// (preemption, or an explicit [`RunHandle::park`]).
+    park: Arc<AtomicBool>,
+    /// Where the parked state lives on disk between slots; the queue
+    /// deletes it at any terminal transition ([`finish_handle`]).
+    park_file: Arc<Mutex<Option<PathBuf>>>,
+    /// True for park-aware training runs ([`RunQueue::submit_run`]):
+    /// only these register as preemption victims while running. Packed
+    /// submissions and plain closures are not preemptible — a packed
+    /// group has no per-member park point (preemption composes with
+    /// packing at group boundaries only).
+    preemptible: bool,
     state: Mutex<HandleState<R>>,
     cv: Condvar,
 }
@@ -250,11 +411,23 @@ struct PackMate<R> {
 
 struct QueueState<R> {
     /// priority class → submissions, oldest first. Pop = highest class,
-    /// front of its deque; empty classes are removed eagerly.
+    /// fair-share pick within it ([`take_next`]); empty classes are
+    /// removed eagerly.
     ready: BTreeMap<i32, VecDeque<Entry<R>>>,
     /// Entries currently in `ready` (including submissions cancelled
-    /// while queued that no worker has reaped yet).
+    /// while queued that no worker has reaped yet, and parked re-entries
+    /// waiting to resume).
     queued: usize,
+    /// Admitted-and-unfinished submissions (queued + running + parked).
+    /// This is what [`RunQueue::set_capacity`] bounds; parked re-entries
+    /// were counted at admission and stay counted until terminal.
+    live: usize,
+    /// Bounded depth: `None` = unbounded (the default).
+    capacity: Option<usize>,
+    /// Finished submissions awaiting the completions stream, completion
+    /// order. Entries whose outcome a `join` already took are skipped at
+    /// claim time.
+    done: VecDeque<Arc<HandleShared<R>>>,
     next_seq: u64,
     paused: bool,
     shutdown: bool,
@@ -264,7 +437,23 @@ struct Shared<R> {
     state: Mutex<QueueState<R>>,
     /// Workers (and pause/shutdown transitions) wait/notify here.
     cv: Condvar,
+    /// Completion-stream consumers wait here (paired with `state`);
+    /// notified by [`finish_handle`].
+    done_cv: Condvar,
+    /// [`RunQueue::submit_wait`] callers wait here (paired with `state`)
+    /// for `live` to drop below capacity.
+    space_cv: Condvar,
     tenants: Mutex<BTreeMap<String, TenantStats>>,
+    /// Per-tenant admission budgets ([`RunQueue::set_quota`]).
+    quotas: Mutex<BTreeMap<String, TenantQuota>>,
+    /// Fair-share step quantum for park-aware runs
+    /// ([`RunQueue::set_step_quantum`]): a running slot parks after this
+    /// many Adam steps and re-queues at the back of its class.
+    quantum: Mutex<Option<usize>>,
+    /// Currently-executing *preemptible* submissions: seq → (priority,
+    /// park flag). Leaf lock (nothing else is taken while held): the
+    /// preemption scan picks the lowest-priority youngest victim.
+    running: Mutex<BTreeMap<u64, (i32, Arc<AtomicBool>)>>,
     /// Packable submissions awaiting group formation, keyed by pack
     /// signature (artifact | priority | steps | batch geometry | frozen
     /// source — see `pack_signature`). Lock order: `pack_pool` before
@@ -295,17 +484,56 @@ fn panic_error(payload: Box<dyn std::any::Any + Send>) -> anyhow::Error {
     anyhow::anyhow!("queued job panicked: {msg}")
 }
 
-/// Pop the next runnable entry: highest priority class, FIFO within it.
-/// Submissions cancelled while still queued are reaped (dropped
+/// Schedule-weight of one byte moved, in FLOPs: low-rank training is
+/// transfer/overhead-bound at small ranks (ROADMAP), so fairness must
+/// price traffic, not just compute. One deficit unit = 1 FLOP.
+const BYTE_COST_FLOPS: u128 = 512;
+
+/// A tenant's consumed schedule-weight: chargeable FLOPs plus its exact
+/// transfer bytes priced at [`BYTE_COST_FLOPS`]. The deficit-style pick
+/// rule runs the *least*-consuming tenant's oldest entry first.
+fn fair_cost(t: &TenantStats) -> u128 {
+    let bytes = t.transfers.uploaded_bytes
+        + t.transfers.downloaded_bytes
+        + t.transfers.donated_bytes;
+    t.flops as u128 + (bytes as u128) * BYTE_COST_FLOPS
+}
+
+/// Pop the next runnable entry: highest priority class first; **within**
+/// a class, a deficit-style fair-share pick — each waiting tenant is
+/// represented by its oldest entry, and the entry whose tenant has the
+/// lowest consumed weight ([`fair_cost`], ties broken by fewest slots
+/// picked, then lowest seq) runs next. A single-tenant class degenerates
+/// to FIFO, so priority/FIFO ordering guarantees are unchanged for one
+/// tenant. Submissions cancelled while queued are reaped (dropped
 /// unexecuted) here. Returns `None` when paused or empty.
-fn take_next<R>(st: &mut QueueState<R>) -> Option<Entry<R>> {
+fn take_next<R>(shared: &Shared<R>, st: &mut QueueState<R>) -> Option<Entry<R>> {
     if st.paused {
         return None;
     }
     loop {
         let prio = *st.ready.keys().next_back()?;
         let class = st.ready.get_mut(&prio).expect("key just observed");
-        let entry = class.pop_front().expect("empty classes are removed");
+        let idx = {
+            let tenants = lock(&shared.tenants);
+            let mut seen: BTreeSet<&str> = BTreeSet::new();
+            let mut best: Option<(usize, (u128, u64, u64))> = None;
+            for (i, e) in class.iter().enumerate() {
+                if !seen.insert(e.handle.tenant.as_str()) {
+                    continue; // only each tenant's oldest entry competes
+                }
+                let (cost, picked) = tenants
+                    .get(e.handle.tenant.as_str())
+                    .map(|t| (fair_cost(t), t.picked))
+                    .unwrap_or((0, 0));
+                let key = (cost, picked, e.handle.seq);
+                if best.as_ref().map_or(true, |(_, b)| key < *b) {
+                    best = Some((i, key));
+                }
+            }
+            best.expect("empty classes are removed").0
+        };
+        let entry = class.remove(idx).expect("index just computed");
         if class.is_empty() {
             st.ready.remove(&prio);
         }
@@ -318,6 +546,78 @@ fn take_next<R>(st: &mut QueueState<R>) -> Option<Entry<R>> {
     }
 }
 
+/// The single terminal-transition gate: every path that ends a
+/// submission — worker completion, pack publish, cancel-before-start,
+/// cancel-of-parked, queue drop — funnels through here so the
+/// invariants hold everywhere: the park file (if any) is deleted, the
+/// outcome is published and joiners woken, `live` is decremented, and
+/// the handle enters the completions stream exactly once. Tenant
+/// counters are bumped by the *caller* (the outcome classification is
+/// call-site-specific). Lock discipline: `handle.state` is taken and
+/// released before `shared.state` (never nested — [`take_next`] nests
+/// the other way around).
+fn finish_handle<R>(shared: &Shared<R>, handle: &Arc<HandleShared<R>>, outcome: Outcome<R>) {
+    if let Some(path) = lock(&handle.park_file).take() {
+        let _ = std::fs::remove_file(path);
+    }
+    {
+        let mut st = lock(&handle.state);
+        *st = HandleState::Finished(Some(outcome));
+    }
+    handle.cv.notify_all();
+    {
+        let mut st = lock(&shared.state);
+        st.live = st.live.saturating_sub(1);
+        st.done.push_back(Arc::clone(handle));
+    }
+    shared.done_cv.notify_all();
+    shared.space_cv.notify_all();
+}
+
+/// Re-queue a job that parked: publish the `Parked` state, then push the
+/// continuation back into its priority class — at the **front** when a
+/// preemption forced the park (the victim must be next in line once the
+/// preemptor is done), at the back when its step quantum expired
+/// (round-robin). A cancel that raced the park is honored here (the
+/// parked state will never resume — `finish_handle` deletes it); a
+/// shutdown that raced it fails the handle loudly so joiners never hang
+/// on a queue nobody drains.
+fn repark_entry<R>(shared: &Shared<R>, handle: Arc<HandleShared<R>>, next: Job<R>, front: bool) {
+    if handle.cancel.load(Ordering::SeqCst) {
+        lock(&shared.tenants).entry(handle.tenant.clone()).or_default().cancelled += 1;
+        finish_handle(shared, &handle, Outcome::Cancelled(None));
+        return;
+    }
+    *lock(&handle.state) = HandleState::Parked;
+    lock(&shared.tenants).entry(handle.tenant.clone()).or_default().parked += 1;
+    {
+        let mut st = lock(&shared.state);
+        if st.shutdown {
+            drop(st);
+            lock(&shared.tenants).entry(handle.tenant.clone()).or_default().failed += 1;
+            finish_handle(
+                shared,
+                &handle,
+                Outcome::Failed(anyhow::anyhow!(
+                    "queue shut down while run #{} was parked — its checkpointed progress \
+                     is discarded",
+                    handle.seq
+                )),
+            );
+            return;
+        }
+        let class = st.ready.entry(handle.priority).or_default();
+        let entry = Entry { job: next, handle: Arc::clone(&handle) };
+        if front {
+            class.push_front(entry);
+        } else {
+            class.push_back(entry);
+        }
+        st.queued += 1;
+    }
+    shared.cv.notify_one();
+}
+
 /// Execute one popped entry to completion and publish its outcome. Shared
 /// by the gated worker threads and the ungated inline drain, so both
 /// builds run the same state machine.
@@ -326,19 +626,29 @@ fn run_entry<R>(shared: &Shared<R>, entry: Entry<R>) {
     {
         let mut st = lock(&handle.state);
         match *st {
-            // cancel raced the pop: treated as cancel-before-start
+            // cancel raced the pop: treated as cancel-before-start (or
+            // cancel-while-parked — finish_handle already published it)
             HandleState::Finished(_) => return,
             // a pack leader claimed this submission out of the pool
-            // (`submit_run_packable`): the leader owns it now — it will
-            // publish the outcome; the queue entry is just a husk. Only
-            // the leader's claim ever sets Running outside this function,
-            // and only on entries whose job reads its spec from the pack
-            // slot, so the dropped `entry.job` loses nothing.
+            // (`submit_run_packable`), or a cancel transiently claimed
+            // it: the claimant owns it now — it publishes the outcome;
+            // the queue entry is just a husk. Only those claims ever set
+            // Running outside this function, and only on entries whose
+            // job is recoverable elsewhere, so the dropped `entry.job`
+            // loses nothing.
             HandleState::Running => return,
-            HandleState::Queued => *st = HandleState::Running,
+            HandleState::Queued | HandleState::Parked => *st = HandleState::Running,
         }
     }
-    let token = CancelToken { flag: Arc::clone(&handle.cancel) };
+    lock(&shared.tenants).entry(handle.tenant.clone()).or_default().picked += 1;
+    if handle.preemptible {
+        lock(&shared.running).insert(handle.seq, (handle.priority, Arc::clone(&handle.park)));
+    }
+    let token = CancelToken {
+        flag: Arc::clone(&handle.cancel),
+        park: Arc::clone(&handle.park),
+        park_file: Arc::clone(&handle.park_file),
+    };
     // The job classifies its own outcome (see [`JobYield`]): a cancel
     // honored mid-run comes back Cancelled with the partial output; a
     // cancel that raced a fully-completed job stays Done. A *panicking*
@@ -348,9 +658,20 @@ fn run_entry<R>(shared: &Shared<R>, entry: Entry<R>) {
     // scope exit) — so the unwind is caught and reported as a failure.
     let job = entry.job;
     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&token)));
+    if handle.preemptible {
+        lock(&shared.running).remove(&handle.seq);
+    }
     let outcome = match caught {
         Err(payload) => Outcome::Failed(panic_error(payload)),
         Ok(Err(e)) => Outcome::Failed(e),
+        Ok(Ok(JobYield::Parked { next, front })) => {
+            // not terminal: checkpointed and re-queued to resume. (A
+            // preemption flag raised *after* the job already yielded
+            // costs at most one immediate repark on the next slot —
+            // never a lost run.)
+            repark_entry(shared, handle, next, front);
+            return;
+        }
         Ok(Ok(JobYield::Cancelled(out))) => Outcome::Cancelled(Some(out)),
         Ok(Ok(JobYield::Done(out))) => Outcome::Done(out),
     };
@@ -363,10 +684,7 @@ fn run_entry<R>(shared: &Shared<R>, entry: Entry<R>) {
             Outcome::Failed(_) => t.failed += 1,
         }
     }
-    let mut st = lock(&handle.state);
-    *st = HandleState::Finished(Some(outcome));
-    drop(st);
-    handle.cv.notify_all();
+    finish_handle(shared, &handle, outcome);
 }
 
 #[cfg(feature = "xla-shared-client")]
@@ -375,7 +693,7 @@ fn worker_loop<R: Send + 'static>(shared: &Shared<R>) {
         let entry = {
             let mut st = lock(&shared.state);
             loop {
-                if let Some(e) = take_next(&mut st) {
+                if let Some(e) = take_next(shared, &mut st) {
                     break Some(e);
                 }
                 if st.shutdown {
@@ -409,12 +727,20 @@ fn new_shared<R>(paused: bool) -> Arc<Shared<R>> {
         state: Mutex::new(QueueState {
             ready: BTreeMap::new(),
             queued: 0,
+            live: 0,
+            capacity: None,
+            done: VecDeque::new(),
             next_seq: 0,
             paused,
             shutdown: false,
         }),
         cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        space_cv: Condvar::new(),
         tenants: Mutex::new(BTreeMap::new()),
+        quotas: Mutex::new(BTreeMap::new()),
+        quantum: Mutex::new(None),
+        running: Mutex::new(BTreeMap::new()),
         pack_pool: Mutex::new(BTreeMap::new()),
     })
 }
@@ -474,10 +800,19 @@ impl<R: 'static> RunQueue<R> {
 impl<R: 'static> RunQueue<R> {
     /// Submit one job under a tenant at a priority; returns immediately
     /// with the submission's [`RunHandle`]. Higher priorities pop first;
-    /// equal priorities are FIFO. If the job returns with its cancel
-    /// token raised, it joins as `Cancelled` with the (partial) output.
+    /// within a class, tenants share fairly ([`take_next`]). Rejected
+    /// with [`SubmitError`] only when a bounded depth
+    /// ([`RunQueue::set_capacity`]) or a tenant quota
+    /// ([`RunQueue::set_quota`]) is configured and hit — an unlimited
+    /// queue never rejects. If the job returns with its cancel token
+    /// raised, it joins as `Cancelled` with the (partial) output.
     #[cfg(feature = "xla-shared-client")]
-    pub fn submit<F>(&self, tenant: &str, priority: i32, job: F) -> RunHandle<R>
+    pub fn submit<F>(
+        &self,
+        tenant: &str,
+        priority: i32,
+        job: F,
+    ) -> std::result::Result<RunHandle<R>, SubmitError>
     where
         F: FnOnce(&CancelToken) -> Result<R> + Send + 'static,
     {
@@ -485,23 +820,134 @@ impl<R: 'static> RunQueue<R> {
     }
 
     /// Submit one job under a tenant at a priority (inline-drain build:
-    /// no `Send` bound — the job never crosses a thread). Cancel
-    /// classification as in the gated variant.
+    /// no `Send` bound — the job never crosses a thread). Admission and
+    /// cancel classification as in the gated variant.
     #[cfg(not(feature = "xla-shared-client"))]
-    pub fn submit<F>(&self, tenant: &str, priority: i32, job: F) -> RunHandle<R>
+    pub fn submit<F>(
+        &self,
+        tenant: &str,
+        priority: i32,
+        job: F,
+    ) -> std::result::Result<RunHandle<R>, SubmitError>
     where
         F: FnOnce(&CancelToken) -> Result<R> + 'static,
     {
         self.submit_boxed(tenant, priority, Box::new(move |t| yield_by_token(job(t)?, t)))
     }
 
-    fn submit_boxed(&self, tenant: &str, priority: i32, job: Job<R>) -> RunHandle<R> {
+    /// Like [`RunQueue::submit`], but **blocks for space** instead of
+    /// rejecting when the queue is at capacity: the backpressure-absorbing
+    /// submission path. Quota rejections stay errors (a quota only ever
+    /// fills, so waiting cannot clear it). In the inline-drain build the
+    /// calling thread *drains queued work itself* to free a slot —
+    /// submitting to a paused full queue is a loud error, not a hang.
+    #[cfg(feature = "xla-shared-client")]
+    pub fn submit_wait<F>(&self, tenant: &str, priority: i32, job: F) -> Result<RunHandle<R>>
+    where
+        F: FnOnce(&CancelToken) -> Result<R> + Send + 'static,
+    {
+        let mut boxed: Job<R> = Box::new(move |t| yield_by_token(job(t)?, t));
+        loop {
+            match self.try_submit_inner(tenant, priority, boxed, false) {
+                Ok(h) => return Ok(h),
+                Err((err @ SubmitError::QuotaExceeded { .. }, _)) => return Err(err.into()),
+                Err((SubmitError::Full { .. }, j)) => {
+                    boxed = j;
+                    let mut st = lock(&self.shared.state);
+                    loop {
+                        if st.shutdown {
+                            anyhow::bail!("submit_wait: queue shut down while waiting for space");
+                        }
+                        if !st.capacity.is_some_and(|cap| st.live >= cap) {
+                            break; // space freed — retry admission
+                        }
+                        st = self
+                            .shared
+                            .space_cv
+                            .wait(st)
+                            .unwrap_or_else(PoisonError::into_inner);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inline-drain variant of [`RunQueue::submit_wait`]: no workers
+    /// exist, so the submitting thread runs queued entries itself until
+    /// a slot frees. See the gated variant for the contract.
+    #[cfg(not(feature = "xla-shared-client"))]
+    pub fn submit_wait<F>(&self, tenant: &str, priority: i32, job: F) -> Result<RunHandle<R>>
+    where
+        F: FnOnce(&CancelToken) -> Result<R> + 'static,
+    {
+        let mut boxed: Job<R> = Box::new(move |t| yield_by_token(job(t)?, t));
+        loop {
+            match self.try_submit_inner(tenant, priority, boxed, false) {
+                Ok(h) => return Ok(h),
+                Err((err @ SubmitError::QuotaExceeded { .. }, _)) => return Err(err.into()),
+                Err((SubmitError::Full { .. }, j)) => {
+                    boxed = j;
+                    let (entry, paused) = {
+                        let mut st = lock(&self.shared.state);
+                        let e = take_next(&self.shared, &mut st);
+                        (e, st.paused)
+                    };
+                    match entry {
+                        Some(e) => run_entry(&self.shared, e),
+                        None if paused => anyhow::bail!(
+                            "submit_wait on a paused full queue: this build has no worker \
+                             threads (xla-shared-client off), so nothing can free a slot \
+                             until RunQueue::release() is called"
+                        ),
+                        None => anyhow::bail!(
+                            "submit_wait: queue is full but has no runnable work to drain \
+                             (deadlock guard)"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    fn submit_boxed(
+        &self,
+        tenant: &str,
+        priority: i32,
+        job: Job<R>,
+    ) -> std::result::Result<RunHandle<R>, SubmitError> {
+        self.try_submit_inner(tenant, priority, job, false).map_err(|(e, _)| e)
+    }
+
+    /// Admission + enqueue. On rejection the job is handed back so
+    /// [`RunQueue::submit_wait`] can retry it (a boxed `FnOnce` cannot be
+    /// rebuilt by the caller). `preemptible` marks park-aware training
+    /// runs that may be preempted while running ([`run_entry`] registers
+    /// them as victims).
+    fn try_submit_inner(
+        &self,
+        tenant: &str,
+        priority: i32,
+        job: Job<R>,
+        preemptible: bool,
+    ) -> std::result::Result<RunHandle<R>, (SubmitError, Job<R>)> {
+        if let Some(err) = self.admission_error(tenant) {
+            return Err((err, job));
+        }
         let handle = {
             let mut st = lock(&self.shared.state);
+            if let Some(cap) = st.capacity {
+                if st.live >= cap {
+                    return Err((SubmitError::Full { capacity: cap }, job));
+                }
+            }
             let handle = Arc::new(HandleShared {
                 seq: st.next_seq,
                 tenant: tenant.to_string(),
+                priority,
                 cancel: Arc::new(AtomicBool::new(false)),
+                park: Arc::new(AtomicBool::new(false)),
+                park_file: Arc::new(Mutex::new(None)),
+                preemptible,
                 state: Mutex::new(HandleState::Queued),
                 cv: Condvar::new(),
             });
@@ -511,11 +957,93 @@ impl<R: 'static> RunQueue<R> {
                 .or_default()
                 .push_back(Entry { job, handle: Arc::clone(&handle) });
             st.queued += 1;
+            st.live += 1;
             handle
         };
         lock(&self.shared.tenants).entry(tenant.to_string()).or_default().submitted += 1;
         self.shared.cv.notify_one();
-        RunHandle { handle, shared: Arc::clone(&self.shared) }
+        #[cfg(feature = "xla-shared-client")]
+        self.maybe_preempt(priority);
+        Ok(RunHandle { handle, shared: Arc::clone(&self.shared) })
+    }
+
+    /// Quota check at admission: `Some(err)` when the tenant's consumed
+    /// totals meet or exceed a configured budget.
+    fn admission_error(&self, tenant: &str) -> Option<SubmitError> {
+        let quota = *lock(&self.shared.quotas).get(tenant)?;
+        let t = lock(&self.shared.tenants).get(tenant).cloned().unwrap_or_default();
+        if let Some(max) = quota.max_flops {
+            if t.flops >= max {
+                return Some(SubmitError::QuotaExceeded {
+                    tenant: tenant.to_string(),
+                    reason: format!(
+                        "FLOP budget exhausted ({} of {max} chargeable FLOPs consumed)",
+                        t.flops
+                    ),
+                });
+            }
+        }
+        if let Some(max) = quota.max_bytes {
+            let used = t.transfers.uploaded_bytes
+                + t.transfers.downloaded_bytes
+                + t.transfers.donated_bytes;
+            if used >= max {
+                return Some(SubmitError::QuotaExceeded {
+                    tenant: tenant.to_string(),
+                    reason: format!("transfer budget exhausted ({used} of {max} bytes moved)"),
+                });
+            }
+        }
+        None
+    }
+
+    /// Best-effort preemption on submission: if every worker is occupied
+    /// by a preemptible run and the lowest-priority one (youngest on
+    /// ties) sits **below** the new submission's class, raise its park
+    /// flag — it checkpoints at its next SGD step boundary, re-enters at
+    /// the *front* of its class, and the freed worker picks up the
+    /// higher-priority work. Best-effort: workers running non-preemptible
+    /// jobs (plain closures, packed groups) are invisible here, and a
+    /// victim that finishes before the flag lands just completes.
+    #[cfg(feature = "xla-shared-client")]
+    fn maybe_preempt(&self, priority: i32) {
+        let running = lock(&self.shared.running);
+        if running.len() < self.workers {
+            return; // an idle worker can take the new submission
+        }
+        let victim = running
+            .iter()
+            .min_by_key(|(seq, (prio, _))| (*prio, std::cmp::Reverse(**seq)));
+        if let Some((_, (vprio, flag))) = victim {
+            if *vprio < priority {
+                flag.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Bound the queue's in-flight depth (queued + running + parked
+    /// submissions): once `cap` are admitted and unfinished,
+    /// [`RunQueue::submit`] rejects with [`SubmitError::Full`] and
+    /// [`RunQueue::submit_wait`] blocks. Parked re-entries never
+    /// re-check capacity — they were admitted once and stay admitted.
+    pub fn set_capacity(&self, cap: usize) {
+        lock(&self.shared.state).capacity = Some(cap.max(1));
+    }
+
+    /// Install (or replace) a tenant's admission budget; see
+    /// [`TenantQuota`].
+    pub fn set_quota(&self, tenant: &str, quota: TenantQuota) {
+        lock(&self.shared.quotas).insert(tenant.to_string(), quota);
+    }
+
+    /// Fair-share time-slicing for park-aware training runs
+    /// ([`RunQueue::submit_run`]): each execution slot parks the run
+    /// after `steps` Adam steps (clamped to ≥ 1) and re-queues it at the
+    /// back of its priority class, so same-class tenants interleave at
+    /// step granularity instead of run granularity. Unset (the default)
+    /// runs execute to completion per slot.
+    pub fn set_step_quantum(&self, steps: usize) {
+        *lock(&self.shared.quantum) = Some(steps.max(1));
     }
 
     /// Open a paused queue ([`RunQueue::new_paused`]). No-op otherwise.
@@ -525,9 +1053,16 @@ impl<R: 'static> RunQueue<R> {
     }
 
     /// Submissions still in the queue structure (not yet picked up;
-    /// includes queued-then-cancelled entries no worker has reaped yet).
+    /// includes queued-then-cancelled entries no worker has reaped yet
+    /// and parked re-entries waiting to resume).
     pub fn pending(&self) -> usize {
         lock(&self.shared.state).queued
+    }
+
+    /// Admitted-and-unfinished submissions (queued + running + parked) —
+    /// the depth [`RunQueue::set_capacity`] bounds.
+    pub fn live(&self) -> usize {
+        lock(&self.shared.state).live
     }
 
     /// Worker threads this queue actually spawned (0 = inline drain; see
@@ -545,19 +1080,267 @@ impl<R: 'static> RunQueue<R> {
     pub fn tenant(&self, name: &str) -> TenantStats {
         lock(&self.shared.tenants).get(name).cloned().unwrap_or_default()
     }
+
+    /// The next finished submission in **completion order** — a finished
+    /// high-priority run streams out immediately instead of waiting for
+    /// earlier submissions to join first (the ROADMAP's
+    /// completion-order-streaming item). Blocks while live work remains
+    /// (gated build); returns `Ok(None)` once no admitted submission is
+    /// unfinished and the stream is drained. Submissions whose outcome a
+    /// [`RunHandle::join`] already took are skipped — each outcome is
+    /// delivered exactly once, on whichever side asks first.
+    #[cfg(feature = "xla-shared-client")]
+    pub fn next_completion(&self) -> Result<Option<Completion<R>>> {
+        loop {
+            let handle = {
+                let mut st = lock(&self.shared.state);
+                loop {
+                    if let Some(h) = st.done.pop_front() {
+                        break h;
+                    }
+                    if st.live == 0 {
+                        return Ok(None);
+                    }
+                    st = self
+                        .shared
+                        .done_cv
+                        .wait(st)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+            };
+            if let Some(c) = claim_completion(handle) {
+                return Ok(Some(c));
+            }
+        }
+    }
+
+    /// Inline-drain variant of [`RunQueue::next_completion`]: no workers
+    /// exist, so this call *is* the execution pump — it runs queued
+    /// entries on the calling thread until one finishes. A still-paused
+    /// queue with live work is a loud error (nothing else could ever run
+    /// it), matching [`RunHandle::join`]'s contract.
+    #[cfg(not(feature = "xla-shared-client"))]
+    pub fn next_completion(&self) -> Result<Option<Completion<R>>> {
+        loop {
+            let (done, entry, paused) = {
+                let mut st = lock(&self.shared.state);
+                if let Some(h) = st.done.pop_front() {
+                    (Some(h), None, st.paused)
+                } else if st.live == 0 {
+                    return Ok(None);
+                } else {
+                    let e = take_next(&self.shared, &mut st);
+                    (None, e, st.paused)
+                }
+            };
+            if let Some(h) = done {
+                if let Some(c) = claim_completion(h) {
+                    return Ok(Some(c));
+                }
+                continue; // outcome already joined elsewhere: skip
+            }
+            match entry {
+                Some(e) => run_entry(&self.shared, e),
+                None if paused => anyhow::bail!(
+                    "next_completion on a paused queue: this build has no worker threads \
+                     (xla-shared-client off), so nothing can run the remaining submissions \
+                     until RunQueue::release() is called"
+                ),
+                None => anyhow::bail!(
+                    "next_completion: live submissions remain but nothing is runnable \
+                     (deadlock guard)"
+                ),
+            }
+        }
+    }
+
+    /// Iterator over [`RunQueue::next_completion`]: drains finished
+    /// submissions in completion order until no live work remains.
+    /// `for c in q.completions() { ... }`
+    pub fn completions(&self) -> Completions<'_, R> {
+        Completions { queue: self }
+    }
+}
+
+/// One delivered submission from the completions stream: which
+/// submission it was (`seq`, assigned at submit time), whose it was, and
+/// how it ended (`Err` = the job failed, with the submission index in
+/// the error context — same classification as [`RunHandle::join`]).
+pub struct Completion<R = RunOutput> {
+    pub seq: u64,
+    pub tenant: String,
+    pub result: Result<RunResult<R>>,
+}
+
+/// Take a finished handle's outcome for the completions stream. `None`
+/// when a `join` got there first (the stream skips it — exactly-once
+/// delivery across both surfaces).
+fn claim_completion<R>(h: Arc<HandleShared<R>>) -> Option<Completion<R>> {
+    let outcome = match &mut *lock(&h.state) {
+        HandleState::Finished(slot) => slot.take(),
+        // unreachable in practice: only finish_handle queues into `done`,
+        // and it publishes Finished first
+        _ => None,
+    }?;
+    let result = match outcome {
+        Outcome::Done(r) => Ok(RunResult::Done(r)),
+        Outcome::Cancelled(r) => Ok(RunResult::Cancelled(r)),
+        Outcome::Failed(e) => Err(e.context(format!("queued run #{}", h.seq))),
+    };
+    Some(Completion { seq: h.seq, tenant: h.tenant.clone(), result })
+}
+
+/// See [`RunQueue::completions`].
+pub struct Completions<'a, R = RunOutput> {
+    queue: &'a RunQueue<R>,
+}
+
+impl<R: 'static> Iterator for Completions<'_, R> {
+    type Item = Result<Completion<R>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.queue.next_completion() {
+            Ok(Some(c)) => Some(Ok(c)),
+            Ok(None) => None,
+            Err(e) => Some(Err(e)),
+        }
+    }
+}
+
+/// What a multi-slot (parked/resumed) run has already billed to its
+/// tenant: whole-run totals as of the last park. Each slot folds only
+/// the delta past these marks, so a run that parks N times is billed
+/// **exactly once** for every step, FLOP, and byte — including the
+/// park/resume sync traffic itself, which the trainer's carried meter
+/// charges to the run.
+#[derive(Debug, Default, Clone, Copy)]
+struct Billed {
+    adam_steps: u64,
+    sim_steps: u64,
+    ff_stages: u64,
+    flops: u64,
+    transfers: TransferSnapshot,
+}
+
+/// Fold one finished run's accounting into its tenant, net of what
+/// earlier slots already billed (steps, FLOPs, wall-clock, and the
+/// run's **exact** transfer meter). `seconds` is per-slot wall-clock and
+/// is always added whole.
+fn fold_final(shared: &Shared<RunOutput>, tenant: &str, billed: Billed, out: &RunOutput) {
+    let mut tenants = lock(&shared.tenants);
+    let t = tenants.entry(tenant.to_string()).or_default();
+    t.adam_steps += (out.summary.adam_steps as u64).saturating_sub(billed.adam_steps);
+    t.sim_steps += (out.summary.sim_steps as u64).saturating_sub(billed.sim_steps);
+    t.ff_stages += (out.stages.len() as u64).saturating_sub(billed.ff_stages);
+    t.flops += out.summary.flops.total().saturating_sub(billed.flops);
+    t.seconds += out.seconds;
+    t.transfers = t.transfers.plus(&out.summary.transfers.since(&billed.transfers));
 }
 
 /// Fold one finished run's per-run accounting into its tenant (steps,
 /// FLOPs, wall-clock, and the run's **exact** transfer meter).
 fn fold_run_stats(shared: &Shared<RunOutput>, tenant: &str, out: &RunOutput) {
+    fold_final(shared, tenant, Billed::default(), out);
+}
+
+/// Bill a *parking* slot's progress delta to its tenant and return the
+/// new whole-run billing marks for the next slot. The park state's
+/// carried meter already includes the park-sync downloads (read after
+/// `sync_host`), so the parked side pays for its own checkpoint.
+fn fold_park_progress(
+    shared: &Shared<RunOutput>,
+    tenant: &str,
+    billed: Billed,
+    state: &ParkState,
+    seconds: f64,
+) -> Billed {
+    let now = Billed {
+        adam_steps: state.adam_steps as u64,
+        sim_steps: state
+            .records
+            .iter()
+            .filter(|r| r.kind == StepKind::FastForward)
+            .count() as u64,
+        ff_stages: state.stages.len() as u64,
+        flops: state.flops.total(),
+        transfers: state.transfers,
+    };
     let mut tenants = lock(&shared.tenants);
     let t = tenants.entry(tenant.to_string()).or_default();
-    t.adam_steps += out.summary.adam_steps as u64;
-    t.sim_steps += out.summary.sim_steps as u64;
-    t.ff_stages += out.stages.len() as u64;
-    t.flops += out.summary.flops.total();
-    t.seconds += out.seconds;
-    t.transfers = t.transfers.plus(&out.summary.transfers);
+    t.adam_steps += now.adam_steps.saturating_sub(billed.adam_steps);
+    t.sim_steps += now.sim_steps.saturating_sub(billed.sim_steps);
+    t.ff_stages += now.ff_stages.saturating_sub(billed.ff_stages);
+    t.flops += now.flops.saturating_sub(billed.flops);
+    t.seconds += seconds;
+    t.transfers = t.transfers.plus(&now.transfers.since(&billed.transfers));
+    now
+}
+
+/// Fresh on-disk location for one submission's parked state.
+fn fresh_park_path() -> PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("ffq-park-{}-{n}.ffpk", std::process::id()))
+}
+
+/// The body of one park-aware training submission's execution slot:
+/// resume from the park file if an earlier slot parked, run under the
+/// cancel + park flags and the queue's step quantum, then either finish
+/// (billing the final delta) or checkpoint to disk and yield a
+/// continuation that re-enters here on the next slot. A park file that
+/// fails to load (truncated, corrupted — see `train::checkpoint`'s
+/// fault-injection tests) fails the submission loudly; it never resumes
+/// from torn state, and [`finish_handle`] deletes the file.
+fn run_park_aware(
+    rt: Arc<Runtime>,
+    artifacts: Arc<ArtifactCache>,
+    shared: Arc<Shared<RunOutput>>,
+    spec: RunSpec,
+    tenant: String,
+    billed: Billed,
+    token: &CancelToken,
+) -> Result<JobYield<RunOutput>> {
+    let quantum = *lock(&shared.quantum);
+    let resume_file = token.park_file();
+    let resume_state = match &resume_file {
+        Some(path) => Some(load_park_state(path).with_context(|| {
+            format!("resuming run '{}' from parked state {}", spec.label, path.display())
+        })?),
+        None => None,
+    };
+    let slot = execute_run_resumable(
+        &rt,
+        &artifacts,
+        &spec,
+        Some(token.flag()),
+        Some(token.park_flag()),
+        quantum,
+        resume_state.as_ref(),
+    )?;
+    match slot {
+        SlotOutcome::Parked { state, preempted, seconds } => {
+            let path = resume_file.unwrap_or_else(fresh_park_path);
+            save_park_state(&path, &state).with_context(|| {
+                format!("parking run '{}' to {}", spec.label, path.display())
+            })?;
+            token.set_park_file(path);
+            let billed = fold_park_progress(&shared, &tenant, billed, &state, seconds);
+            let next: Job<RunOutput> = Box::new(move |tok: &CancelToken| {
+                run_park_aware(rt, artifacts, shared, spec, tenant, billed, tok)
+            });
+            Ok(JobYield::Parked { next, front: preempted })
+        }
+        SlotOutcome::Finished(out) => {
+            fold_final(&shared, &tenant, billed, &out);
+            // The trainer's summary is the authoritative cancel marker: a
+            // cancel that raced a fully-delivered run stays Done.
+            if out.summary.cancelled {
+                Ok(JobYield::Cancelled(out))
+            } else {
+                Ok(JobYield::Done(out))
+            }
+        }
+    }
 }
 
 /// The pack key two submissions must share to ride one batched dispatch:
@@ -603,7 +1386,9 @@ fn unregister_mate<R>(shared: &Shared<R>, sig: &str, slot: &Arc<Mutex<Option<Pac
 }
 
 /// Publish a claimed sibling's outcome: tenant counters first (matching
-/// [`run_entry`]'s order), then the terminal state, then wake joiners.
+/// [`run_entry`]'s order), then the terminal transition via
+/// [`finish_handle`] (joiners woken, completions stream fed, `live`
+/// decremented).
 fn publish_mate(
     shared: &Shared<RunOutput>,
     handle: &Arc<HandleShared<RunOutput>>,
@@ -618,8 +1403,7 @@ fn publish_mate(
             Outcome::Failed(_) => t.failed += 1,
         }
     }
-    *lock(&handle.state) = HandleState::Finished(Some(outcome));
-    handle.cv.notify_all();
+    finish_handle(shared, handle, outcome);
 }
 
 /// Run one member solo (the no-mates fallback and the odd-size
@@ -660,19 +1444,20 @@ impl RunQueue<RunOutput> {
         spec: RunSpec,
         priority: i32,
         tenant: &str,
-    ) -> RunHandle<RunOutput> {
+    ) -> std::result::Result<RunHandle<RunOutput>, SubmitError> {
         let rt = Arc::clone(rt);
         let artifacts = Arc::clone(artifacts);
         let shared = Arc::clone(&self.shared);
         let tenant_name = tenant.to_string();
-        self.submit_boxed(
+        self.try_submit_inner(
             tenant,
             priority,
             Box::new(move |token: &CancelToken| {
-                let data = PackData { spec, tenant: tenant_name };
-                run_solo_member(&rt, &artifacts, &shared, data, Some(token.flag()))
+                run_park_aware(rt, artifacts, shared, spec, tenant_name, Billed::default(), token)
             }),
+            true, // park-aware: a valid preemption victim while running
         )
+        .map_err(|(e, _)| e)
     }
 
     /// Like [`RunQueue::submit_run`], but opted into **same-artifact
@@ -696,6 +1481,11 @@ impl RunQueue<RunOutput> {
     /// Specs that can never pack (loss-targeted stop, FF stages) or
     /// whose artifact ships no batched programs fall back to solo
     /// execution automatically.
+    /// Packed groups are **not** park-aware: an in-flight `*_batched{K}`
+    /// group has no per-member park point, so preemption composes with
+    /// packing at group boundaries only (a packed submission is never a
+    /// preemption victim; the queue preempts around the group, not
+    /// through it — `docs/queue-serving.md`).
     pub fn submit_run_packable(
         &self,
         rt: &Arc<Runtime>,
@@ -703,7 +1493,7 @@ impl RunQueue<RunOutput> {
         spec: RunSpec,
         priority: i32,
         tenant: &str,
-    ) -> RunHandle<RunOutput> {
+    ) -> std::result::Result<RunHandle<RunOutput>, SubmitError> {
         let sig = match pack_signature(&spec, priority) {
             Some(sig) => sig,
             None => return self.submit_run(rt, artifacts, spec, priority, tenant),
@@ -721,7 +1511,7 @@ impl RunQueue<RunOutput> {
                 lead_or_run_solo(&rt, &artifacts, &shared, &sig, &slot, token)
             })
         };
-        let handle = self.submit_boxed(tenant, priority, job);
+        let handle = self.submit_boxed(tenant, priority, job)?;
         // Register for claiming *after* submission (the handle must
         // exist first). If a worker already popped and ran the job in
         // between, the slot is empty and the registration is a stale
@@ -730,7 +1520,7 @@ impl RunQueue<RunOutput> {
             .entry(sig)
             .or_default()
             .push(PackMate { handle: Arc::clone(&handle.handle), data: slot });
-        handle
+        Ok(handle)
     }
 }
 
@@ -884,9 +1674,13 @@ fn lead_or_run_solo(
 }
 
 impl<R> Drop for RunQueue<R> {
-    /// Shutting the queue down cancels everything still queued (so
-    /// joiners can never hang on work nobody will run), lets in-flight
-    /// jobs finish, and joins the workers.
+    /// Shutting the queue down cancels everything still **queued** and
+    /// *fails* everything still **parked** (so joiners can never hang on
+    /// work nobody will run — a parked submission is not "queued work
+    /// that never started", it is an interrupted run whose silent loss
+    /// would read as success; its park file is deleted either way), lets
+    /// in-flight jobs finish, and joins the workers. A job that tries to
+    /// park *after* shutdown fails at [`repark_entry`].
     fn drop(&mut self) {
         let leftovers: Vec<Entry<R>> = {
             let mut st = lock(&self.shared.state);
@@ -902,23 +1696,55 @@ impl<R> Drop for RunQueue<R> {
             out
         };
         self.shared.cv.notify_all();
+        self.shared.space_cv.notify_all();
         for e in leftovers {
-            let mut st = lock(&e.handle.state);
-            if !matches!(*st, HandleState::Queued) {
-                // already individually cancelled — or a husk entry whose
-                // submission a pack leader claimed (Running): the leader
-                // publishes its real outcome, so shutdown must not
-                // clobber it with Cancelled(None).
-                continue;
+            // Claim Queued/Parked entries with a transient Running (the
+            // same exclusivity transition cancel() and the workers use)
+            // so a racing claim settles exactly one owner. Anything else
+            // is a husk — individually cancelled, or pack-claimed with
+            // its real outcome published by the leader — and shutdown
+            // must not clobber it.
+            let was_parked = {
+                let mut st = lock(&e.handle.state);
+                match *st {
+                    HandleState::Queued => {
+                        *st = HandleState::Running;
+                        Some(false)
+                    }
+                    HandleState::Parked => {
+                        *st = HandleState::Running;
+                        Some(true)
+                    }
+                    _ => None,
+                }
+            };
+            match was_parked {
+                Some(false) => {
+                    lock(&self.shared.tenants)
+                        .entry(e.handle.tenant.clone())
+                        .or_default()
+                        .cancelled += 1;
+                    finish_handle(&self.shared, &e.handle, Outcome::Cancelled(None));
+                }
+                Some(true) => {
+                    lock(&self.shared.tenants)
+                        .entry(e.handle.tenant.clone())
+                        .or_default()
+                        .failed += 1;
+                    finish_handle(
+                        &self.shared,
+                        &e.handle,
+                        Outcome::Failed(anyhow::anyhow!(
+                            "queue dropped while run #{} was parked — its checkpointed \
+                             progress is discarded",
+                            e.handle.seq
+                        )),
+                    );
+                }
+                None => {}
             }
-            *st = HandleState::Finished(Some(Outcome::Cancelled(None)));
-            drop(st);
-            lock(&self.shared.tenants)
-                .entry(e.handle.tenant.clone())
-                .or_default()
-                .cancelled += 1;
-            e.handle.cv.notify_all();
         }
+        self.shared.done_cv.notify_all();
         #[cfg(feature = "xla-shared-client")]
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -951,31 +1777,52 @@ impl<R: 'static> RunHandle<R> {
         match &*lock(&self.handle.state) {
             HandleState::Queued => RunPoll::Queued,
             HandleState::Running => RunPoll::Running,
+            HandleState::Parked => RunPoll::Parked,
             HandleState::Finished(Some(Outcome::Done(_))) => RunPoll::Done,
             HandleState::Finished(Some(Outcome::Cancelled(_))) => RunPoll::Cancelled,
             HandleState::Finished(Some(Outcome::Failed(_))) => RunPoll::Failed,
-            // join consumed the outcome — unobservable, since join also
-            // consumes the handle; report the terminal state.
+            // the completions stream took the outcome (or join did, which
+            // also consumes the handle): terminal and delivered.
             HandleState::Finished(None) => RunPoll::Done,
         }
     }
 
-    /// Request cancellation. A submission still **queued** is marked
-    /// `Cancelled` immediately and will never execute (for training
-    /// runs: no `Trainer` is ever constructed). A **running** submission
-    /// keeps running until its next step boundary — the cooperative flag
-    /// is the only signal; nothing is torn down mid-step.
+    /// Ask a running park-aware submission to checkpoint and yield its
+    /// worker at the next SGD step boundary (a manual preemption; see
+    /// [`RunQueue::submit_run`]). Cooperative and advisory: plain-closure
+    /// jobs that never read [`CancelToken::park_requested`] ignore it.
+    pub fn park(&self) {
+        self.handle.park.store(true, Ordering::SeqCst);
+    }
+
+    /// Request cancellation. A submission still **queued** or **parked**
+    /// is finished `Cancelled` immediately and will never (re)execute —
+    /// a parked run's checkpointed state is deleted, since nothing will
+    /// resume it. A **running** submission keeps running until its next
+    /// step boundary — the cooperative flag is the only signal; nothing
+    /// is torn down mid-step.
     pub fn cancel(&self) {
         self.handle.cancel.store(true, Ordering::SeqCst);
-        let mut st = lock(&self.handle.state);
-        if matches!(*st, HandleState::Queued) {
-            *st = HandleState::Finished(Some(Outcome::Cancelled(None)));
-            drop(st);
+        // Claim with a transient Running under the state lock (the same
+        // exclusivity transition the workers and pack leaders use) so a
+        // racing pop or pack claim settles exactly one owner; the queue
+        // entry left behind is a husk the next take_next reaps.
+        let claimed = {
+            let mut st = lock(&self.handle.state);
+            match *st {
+                HandleState::Queued | HandleState::Parked => {
+                    *st = HandleState::Running;
+                    true
+                }
+                _ => false,
+            }
+        };
+        if claimed {
             lock(&self.shared.tenants)
                 .entry(self.handle.tenant.clone())
                 .or_default()
                 .cancelled += 1;
-            self.handle.cv.notify_all();
+            finish_handle(&self.shared, &self.handle, Outcome::Cancelled(None));
         }
     }
 
@@ -994,7 +1841,15 @@ impl<R: 'static> RunHandle<R> {
         let mut st = lock(&self.handle.state);
         loop {
             if let HandleState::Finished(slot) = &mut *st {
-                let outcome = slot.take().expect("join consumes the only handle");
+                let Some(outcome) = slot.take() else {
+                    // the completions stream claimed it first — each
+                    // outcome is delivered exactly once, so this join
+                    // came too late by construction, not by timing.
+                    anyhow::bail!(
+                        "run #{}: outcome already delivered via the completions stream",
+                        self.handle.seq
+                    );
+                };
                 return match outcome {
                     Outcome::Done(r) => Ok(RunResult::Done(r)),
                     Outcome::Cancelled(r) => Ok(RunResult::Cancelled(r)),
@@ -1025,7 +1880,7 @@ impl<R: 'static> RunHandle<R> {
             }
             let (entry, paused) = {
                 let mut st = lock(&self.shared.state);
-                let entry = take_next(&mut st);
+                let entry = take_next(&self.shared, &mut st);
                 (entry, st.paused)
             };
             match entry {
@@ -1087,10 +1942,13 @@ mod tests {
         let mut handles = Vec::new();
         for (name, prio) in [("a0", 0), ("b1", 1), ("c0", 0), ("d1", 1), ("e2", 2)] {
             let order = Arc::clone(&order);
-            handles.push(q.submit("t", prio, move |_| {
-                lock(&order).push(name);
-                Ok(1usize)
-            }));
+            handles.push(
+                q.submit("t", prio, move |_| {
+                    lock(&order).push(name);
+                    Ok(1usize)
+                })
+                .unwrap(),
+            );
         }
         assert_eq!(q.pending(), 5);
         assert!(handles.iter().all(|h| h.poll() == RunPoll::Queued));
@@ -1119,10 +1977,13 @@ mod tests {
         let mut handles = Vec::new();
         for i in 0..n {
             let counts = Arc::clone(&counts);
-            handles.push(q.submit("t", (i % 5) as i32, move |_| {
-                lock(&counts)[i] += 1;
-                Ok(i * 3)
-            }));
+            handles.push(
+                q.submit("t", (i % 5) as i32, move |_| {
+                    lock(&counts)[i] += 1;
+                    Ok(i * 3)
+                })
+                .unwrap(),
+            );
         }
         let results = join_all(handles).unwrap();
         let vals: Vec<usize> = results.into_iter().map(|r| r.done().unwrap()).collect();
@@ -1146,10 +2007,13 @@ mod tests {
                     let mut handles = Vec::new();
                     for i in 0..50u64 {
                         let total = Arc::clone(&total);
-                        handles.push(q.submit(&tenant, (i % 3) as i32, move |_| {
-                            total.fetch_add(1, Ordering::Relaxed);
-                            Ok(t * 1000 + i)
-                        }));
+                        handles.push(
+                            q.submit(&tenant, (i % 3) as i32, move |_| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                                Ok(t * 1000 + i)
+                            })
+                            .unwrap(),
+                        );
                     }
                     let rs = join_all(handles).unwrap();
                     for (i, r) in rs.into_iter().enumerate() {
@@ -1174,8 +2038,8 @@ mod tests {
         // and surfaced as the submission's error; the queue keeps
         // serving later submissions.
         let q: RunQueue<usize> = RunQueue::new(1);
-        let bad = q.submit("t", 1, |_| -> Result<usize> { panic!("boom in job") });
-        let good = q.submit("t", 0, |_| Ok(5usize));
+        let bad = q.submit("t", 1, |_| -> Result<usize> { panic!("boom in job") }).unwrap();
+        let good = q.submit("t", 0, |_| Ok(5usize)).unwrap();
         let err = bad.join().unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("panicked"), "{msg}");
@@ -1190,12 +2054,15 @@ mod tests {
         let q: RunQueue<usize> = RunQueue::new(2);
         let mut handles = Vec::new();
         for i in 0..16usize {
-            handles.push(q.submit("t", 0, move |_| {
-                if i == 3 || i == 11 {
-                    anyhow::bail!("boom at {i}");
-                }
-                Ok(i)
-            }));
+            handles.push(
+                q.submit("t", 0, move |_| {
+                    if i == 3 || i == 11 {
+                        anyhow::bail!("boom at {i}");
+                    }
+                    Ok(i)
+                })
+                .unwrap(),
+            );
         }
         let err = join_all(handles).unwrap_err();
         let msg = format!("{err:#}");
@@ -1216,8 +2083,9 @@ mod tests {
                 *lock(&ran) = true;
                 Ok(1)
             })
+            .unwrap()
         };
-        let keeper = q.submit("t", 0, |_| Ok(2usize));
+        let keeper = q.submit("t", 0, |_| Ok(2usize)).unwrap();
         h.cancel();
         assert_eq!(h.poll(), RunPoll::Cancelled);
         q.release();
@@ -1239,11 +2107,13 @@ mod tests {
         // next boundary comes back Cancelled *with* the partial output —
         // the queue-level contract Trainer::run's cooperative flag rides.
         let q: RunQueue<&'static str> = RunQueue::new(1);
-        let h = q.submit("t", 0, |token| {
-            token.flag().store(true, Ordering::SeqCst);
-            assert!(token.is_cancelled());
-            Ok("partial")
-        });
+        let h = q
+            .submit("t", 0, |token| {
+                token.flag().store(true, Ordering::SeqCst);
+                assert!(token.is_cancelled());
+                Ok("partial")
+            })
+            .unwrap();
         match h.join().unwrap() {
             RunResult::Cancelled(Some("partial")) => {}
             _ => panic!("flagged job must come back Cancelled with output"),
@@ -1258,7 +2128,7 @@ mod tests {
         // could ever run the submission, so a paused queue must fail the
         // join loudly rather than deadlock on a condvar nobody signals.
         let q: RunQueue<usize> = RunQueue::new_paused(1);
-        let h = q.submit("t", 0, |_| Ok(1));
+        let h = q.submit("t", 0, |_| Ok(1)).unwrap();
         let err = h.join().unwrap_err();
         assert!(format!("{err:#}").contains("paused"), "{err:#}");
     }
@@ -1267,7 +2137,7 @@ mod tests {
     fn dropping_the_queue_cancels_queued_submissions() {
         // Joiners must never hang on work nobody will run.
         let q: RunQueue<usize> = RunQueue::new_paused(1);
-        let h = q.submit("t", 0, |_| Ok(7));
+        let h = q.submit("t", 0, |_| Ok(7)).unwrap();
         drop(q);
         match h.join().unwrap() {
             RunResult::Cancelled(None) => {}
@@ -1279,10 +2149,12 @@ mod tests {
     #[test]
     fn join_never_misses_a_workers_completion() {
         let q: RunQueue<usize> = RunQueue::new(1);
-        let h = q.submit("t", 0, |_| {
-            std::thread::sleep(std::time::Duration::from_millis(30));
-            Ok(9)
-        });
+        let h = q
+            .submit("t", 0, |_| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                Ok(9)
+            })
+            .unwrap();
         assert!(matches!(h.poll(), RunPoll::Queued | RunPoll::Running | RunPoll::Done));
         assert_eq!(h.join().unwrap().done(), Some(9));
     }
@@ -1292,5 +2164,240 @@ mod tests {
         let q: RunQueue<usize> = RunQueue::new(3);
         let expected = if crate::sched::threads_enabled() { 3 } else { 0 };
         assert_eq!(q.workers(), expected);
+    }
+
+    #[test]
+    fn fair_share_alternates_between_tenants_within_a_class() {
+        // Cold backlog, one drain lane: tenant alice floods 3 entries
+        // before bob's 3 arrive. The deficit rule (all costs zero here,
+        // so ties fall to fewest slots picked, then seq) must interleave
+        // the tenants rather than draining alice's flood first.
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        let order: Arc<Mutex<Vec<&'static str>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for name in ["a1", "a2", "a3"] {
+            let order = Arc::clone(&order);
+            handles.push(
+                q.submit("alice", 0, move |_| {
+                    lock(&order).push(name);
+                    Ok(0usize)
+                })
+                .unwrap(),
+            );
+        }
+        for name in ["b1", "b2", "b3"] {
+            let order = Arc::clone(&order);
+            handles.push(
+                q.submit("bob", 0, move |_| {
+                    lock(&order).push(name);
+                    Ok(0usize)
+                })
+                .unwrap(),
+            );
+        }
+        q.release();
+        join_all(handles).unwrap();
+        assert_eq!(
+            *lock(&order),
+            vec!["a1", "b1", "a2", "b2", "a3", "b3"],
+            "same-class tenants must round-robin, not drain FIFO"
+        );
+        assert_eq!(q.tenant("alice").picked, 3);
+        assert_eq!(q.tenant("bob").picked, 3);
+    }
+
+    #[test]
+    fn capacity_full_rejects_until_space_frees() {
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        q.set_capacity(2);
+        let h1 = q.submit("t", 0, |_| Ok(1usize)).unwrap();
+        let h2 = q.submit("t", 0, |_| Ok(2usize)).unwrap();
+        match q.submit("t", 0, |_| Ok(3usize)) {
+            Err(SubmitError::Full { capacity: 2 }) => {}
+            _ => panic!("third submission must be rejected at capacity 2"),
+        }
+        assert_eq!(q.live(), 2);
+        assert_eq!(q.tenant("t").submitted, 2, "rejected submissions are not counted");
+        q.release();
+        assert_eq!(h1.join().unwrap().done(), Some(1));
+        assert_eq!(h2.join().unwrap().done(), Some(2));
+        // joiners can wake a hair before the live counter settles in the
+        // threaded build; wait for quiescence before re-probing admission
+        while q.live() != 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let h3 = q.submit("t", 0, |_| Ok(3usize)).unwrap();
+        assert_eq!(h3.join().unwrap().done(), Some(3));
+    }
+
+    #[cfg(feature = "xla-shared-client")]
+    #[test]
+    fn submit_wait_blocks_for_space_instead_of_rejecting() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        q.set_capacity(1);
+        let slow = q
+            .submit("t", 0, |_| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                Ok(1usize)
+            })
+            .unwrap();
+        assert!(
+            matches!(q.submit("t", 0, |_| Ok(0usize)), Err(SubmitError::Full { .. })),
+            "plain submit must reject while the slow job holds the only slot"
+        );
+        let waited = q.submit_wait("t", 0, |_| Ok(2usize)).unwrap();
+        assert_eq!(slow.join().unwrap().done(), Some(1));
+        assert_eq!(waited.join().unwrap().done(), Some(2));
+    }
+
+    #[cfg(not(feature = "xla-shared-client"))]
+    #[test]
+    fn submit_wait_drains_inline_to_free_space() {
+        // No workers exist: submit_wait must run queued work on the
+        // calling thread to make room, never block on a condvar nobody
+        // signals.
+        let q: RunQueue<usize> = RunQueue::new(1);
+        q.set_capacity(1);
+        let ran = Arc::new(Mutex::new(false));
+        let first = {
+            let ran = Arc::clone(&ran);
+            q.submit("t", 0, move |_| {
+                *lock(&ran) = true;
+                Ok(1usize)
+            })
+            .unwrap()
+        };
+        let second = q.submit_wait("t", 0, |_| Ok(2usize)).unwrap();
+        assert!(*lock(&ran), "submit_wait must drain the first job inline");
+        assert_eq!(first.join().unwrap().done(), Some(1));
+        assert_eq!(second.join().unwrap().done(), Some(2));
+    }
+
+    #[test]
+    fn zero_quota_rejects_submissions_at_admission() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        q.set_quota("greedy", TenantQuota { max_flops: Some(0), max_bytes: None });
+        match q.submit("greedy", 0, |_| Ok(1usize)) {
+            Err(SubmitError::QuotaExceeded { tenant, reason }) => {
+                assert_eq!(tenant, "greedy");
+                assert!(reason.contains("FLOP budget"), "{reason}");
+            }
+            _ => panic!("exhausted quota must reject at admission"),
+        }
+        // a tenant with headroom (or no quota) is unaffected
+        q.set_quota(
+            "frugal",
+            TenantQuota { max_flops: Some(1_000_000), max_bytes: Some(1 << 30) },
+        );
+        let h = q.submit("frugal", 0, |_| Ok(2usize)).unwrap();
+        assert_eq!(h.join().unwrap().done(), Some(2));
+        assert_eq!(q.tenant("greedy").submitted, 0, "rejected at admission, never counted");
+    }
+
+    #[test]
+    fn completions_stream_in_completion_order_not_submission_order() {
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        let mut seqs = Vec::new();
+        for prio in [0i32, 1, 2] {
+            seqs.push(q.submit("t", prio, move |_| Ok(prio as usize)).unwrap().seq());
+        }
+        q.release();
+        let mut streamed = Vec::new();
+        for c in q.completions() {
+            let c = c.unwrap();
+            streamed.push((c.seq, c.result.unwrap().done().unwrap()));
+        }
+        // highest priority runs (and streams) first: submission order
+        // 0,1,2 comes back 2,1,0 — nothing waits behind an earlier seq
+        assert_eq!(streamed, vec![(seqs[2], 2), (seqs[1], 1), (seqs[0], 0)]);
+    }
+
+    #[test]
+    fn join_after_stream_delivery_is_a_loud_error() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = q.submit("t", 0, |_| Ok(5usize)).unwrap();
+        let c = q.next_completion().unwrap().expect("one live submission");
+        assert_eq!(c.result.unwrap().done(), Some(5));
+        let err = h.join().unwrap_err();
+        assert!(format!("{err:#}").contains("already delivered"), "{err:#}");
+        assert!(q.next_completion().unwrap().is_none(), "stream is drained");
+    }
+
+    /// Submit a job that freezes the queue and parks once, and drive it
+    /// to the `Parked` state (inline in the default build; the worker
+    /// gets there on its own in the gated build).
+    fn park_one(q: &RunQueue<usize>) -> RunHandle<usize> {
+        let shared = Arc::clone(&q.shared);
+        let h = q
+            .submit_boxed(
+                "t",
+                0,
+                Box::new(move |_| {
+                    // freeze the queue so the reparked continuation
+                    // stays parked instead of resuming immediately
+                    lock(&shared.state).paused = true;
+                    Ok(JobYield::Parked {
+                        next: Box::new(|_| Ok(JobYield::Done(7usize))),
+                        front: false,
+                    })
+                }),
+            )
+            .unwrap();
+        #[cfg(not(feature = "xla-shared-client"))]
+        {
+            let entry = {
+                let mut st = lock(&q.shared.state);
+                take_next(&q.shared, &mut st).expect("one entry queued")
+            };
+            run_entry(&q.shared, entry);
+        }
+        #[cfg(feature = "xla-shared-client")]
+        while h.poll() != RunPoll::Parked {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(h.poll(), RunPoll::Parked);
+        h
+    }
+
+    #[test]
+    fn parked_submission_resumes_and_delivers() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = park_one(&q);
+        assert_eq!(q.tenant("t").parked, 1);
+        assert_eq!(q.live(), 1, "parked stays admitted");
+        q.release(); // un-freeze: the continuation resumes and completes
+        assert_eq!(h.join().unwrap().done(), Some(7));
+        assert_eq!(q.tenant("t").completed, 1);
+        assert_eq!(q.tenant("t").picked, 2, "two slots: initial + resumed");
+    }
+
+    #[test]
+    fn cancelling_a_parked_submission_finishes_it_immediately() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = park_one(&q);
+        h.cancel();
+        assert_eq!(h.poll(), RunPoll::Cancelled);
+        assert_eq!(q.live(), 0);
+        assert_eq!(q.tenant("t").cancelled, 1);
+        q.release();
+        match h.join().unwrap() {
+            RunResult::Cancelled(None) => {}
+            _ => panic!("cancel-while-parked must report Cancelled(None)"),
+        }
+    }
+
+    #[test]
+    fn dropping_the_queue_fails_parked_submissions_instead_of_hanging() {
+        // The Drop bugfix this PR ships: a parked entry is an interrupted
+        // run, not not-yet-started work — shutdown must fail it loudly
+        // (and delete its checkpoint), never leave its joiner hanging or
+        // silently report it cancelled-before-start.
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = park_one(&q);
+        drop(q);
+        let err = h.join().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("parked"), "{msg}");
+        assert!(msg.contains("discarded"), "{msg}");
     }
 }

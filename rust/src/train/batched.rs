@@ -405,6 +405,9 @@ pub fn run_batched_group(
                 train_seconds: seconds,
                 reached_target: false,
                 cancelled: false,
+                // packed groups have no park point: preemption composes
+                // with packing at group boundaries only (queue docs)
+                parked: false,
                 transfers: meters[i].snapshot(),
             },
             sgd_losses: std::mem::take(&mut sgd_losses[i]),

@@ -1,6 +1,18 @@
 //! Checkpoint format ("FFCK1"): a JSON header (name/shape table, via the
 //! in-repo codec) followed by raw little-endian f32 payloads. Used for the
-//! cached pretrained W0 per model size and for trainer save/restore.
+//! cached pretrained W0 per model size, for trainer save/restore, and —
+//! via [`ParkState`] — for the run queue's preempt/park/resume cycle
+//! (docs/queue-serving.md).
+//!
+//! A park-state checkpoint is an ordinary FFCK1 file whose payload holds
+//! the trainables plus both Adam moment sets (`tr/NNNN`, `m/NNNN`,
+//! `v/NNNN`) and whose header carries a `park` object with everything a
+//! resumed run needs to be bit-identical to an uninterrupted one: Adam
+//! step count, FF-controller position, step records, FLOP and transfer
+//! totals. Scalars ride in the JSON header: the codec prints f64 (and
+//! f32-widened-to-f64) values shortest-round-trip, so floats survive
+//! exactly; integer counters are exact up to 2^53, far beyond any real
+//! run.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -8,26 +20,66 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::ff::controller::{FfPosition, FfStageStats};
+use crate::flops::FlopsCounter;
+use crate::metrics::{StepKind, StepRecord};
 use crate::model::tensor::Tensor;
+use crate::runtime::TransferSnapshot;
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 6] = b"FFCK1\n";
 
-pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
+/// Everything a parked run needs to resume bit-identically: optimizer
+/// state (trainables + Adam moments, parallel by index), the step/FF
+/// position, and the accounting carried across the park (`records`,
+/// `flops`, `train_seconds`, `transfers`) so the resumed run's summary
+/// reports the *whole* run, not just the tail.
+#[derive(Debug, Clone)]
+pub struct ParkState {
+    pub trainables: Vec<Tensor>,
+    /// Adam first moments, same order/shapes as `trainables`.
+    pub m: Vec<Tensor>,
+    /// Adam second moments, same order/shapes as `trainables`.
+    pub v: Vec<Tensor>,
+    pub adam_steps: usize,
+    pub ff: FfPosition,
+    pub stages: Vec<FfStageStats>,
+    pub records: Vec<StepRecord>,
+    /// `(loss, step, flops, seconds)` rows, as in `RunLog::test_evals`.
+    pub test_evals: Vec<(f32, usize, u64, f64)>,
+    pub flops: FlopsCounter,
+    pub train_seconds: f64,
+    /// The run's exact transfer meter at park time — park-sync downloads
+    /// included, so billing stays exact across any number of parks.
+    pub transfers: TransferSnapshot,
+}
+
+/// Write one FFCK1 file: MAGIC, u64-LE header length, JSON header
+/// (name/shape table + optional `park` object), then raw LE f32 payloads
+/// in `params`' BTreeMap order. Temp-then-rename: a crash mid-write (or a
+/// concurrent reader) must never observe a truncated checkpoint.
+fn write_ffck<T: std::borrow::Borrow<Tensor>>(
+    path: &Path,
+    params: &BTreeMap<String, T>,
+    park: Option<Json>,
+) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let entries: Vec<Json> = params
         .iter()
         .map(|(name, t)| {
-            Json::obj()
-                .set("name", name.as_str())
-                .set("shape", t.shape.iter().map(|&d| d as i64).collect::<Vec<i64>>())
+            Json::obj().set("name", name.as_str()).set(
+                "shape",
+                t.borrow().shape.iter().map(|&d| d as i64).collect::<Vec<i64>>(),
+            )
         })
         .collect();
-    let header = Json::obj().set("params", Json::Arr(entries)).to_string();
-    // Write to a temp file and rename into place: a crash mid-write (or a
-    // concurrent reader) must never observe a truncated checkpoint.
+    let mut header = Json::obj().set("params", Json::Arr(entries));
+    if let Some(meta) = park {
+        header = header.set("park", meta);
+    }
+    let header = header.to_string();
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
     {
         let mut f = std::fs::File::create(&tmp)
@@ -37,7 +89,8 @@ pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()>
         f.write_all(header.as_bytes())?;
         for t in params.values() {
             // params is a BTreeMap → iteration order == header order
-            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let bytes: Vec<u8> =
+                t.borrow().data.iter().flat_map(|v| v.to_le_bytes()).collect();
             f.write_all(&bytes)?;
         }
     }
@@ -46,7 +99,13 @@ pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()>
     Ok(())
 }
 
-pub fn load_params(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+/// Read one FFCK1 file back: the payload tensors plus the full JSON
+/// header (so callers can inspect the optional `park` object). Every
+/// malformed case — wrong magic, implausible or truncated header,
+/// truncated payload — fails loudly; a leftover `.tmp.<pid>` from a
+/// crashed writer is never read (loads go through the installed path
+/// only, and the next save overwrites the temp before renaming).
+fn read_ffck(path: &Path) -> Result<(BTreeMap<String, Tensor>, Json)> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}", path.display()))?;
     let mut magic = [0u8; 6];
@@ -61,7 +120,8 @@ pub fn load_params(path: &Path) -> Result<BTreeMap<String, Tensor>> {
         bail!("implausible header length {hlen}");
     }
     let mut hbytes = vec![0u8; hlen];
-    f.read_exact(&mut hbytes)?;
+    f.read_exact(&mut hbytes)
+        .with_context(|| format!("reading {hlen}-byte header of {}", path.display()))?;
     let header = Json::parse(std::str::from_utf8(&hbytes)?)
         .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
 
@@ -85,12 +145,292 @@ pub fn load_params(path: &Path) -> Result<BTreeMap<String, Tensor>> {
             .collect();
         out.insert(name, Tensor::from_vec(&shape, data));
     }
-    Ok(out)
+    Ok((out, header))
+}
+
+pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> Result<()> {
+    write_ffck(path, params, None)
+}
+
+pub fn load_params(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    read_ffck(path).map(|(params, _)| params)
+}
+
+/// Write a park-state checkpoint. Fails loudly (before touching the
+/// filesystem) if the Adam moment sets don't line up with the trainables
+/// — an inconsistent park state must never be installed.
+pub fn save_park_state(path: &Path, state: &ParkState) -> Result<()> {
+    if state.m.len() != state.trainables.len() || state.v.len() != state.trainables.len() {
+        bail!(
+            "park state is inconsistent: {} trainables but {} Adam m / {} Adam v tensors",
+            state.trainables.len(),
+            state.m.len(),
+            state.v.len()
+        );
+    }
+    let mut params: BTreeMap<String, &Tensor> = BTreeMap::new();
+    for (i, t) in state.trainables.iter().enumerate() {
+        if state.m[i].shape != t.shape || state.v[i].shape != t.shape {
+            bail!(
+                "park state is inconsistent: trainable {i} has shape {:?} but Adam m {:?} / v {:?}",
+                t.shape,
+                state.m[i].shape,
+                state.v[i].shape
+            );
+        }
+        params.insert(format!("tr/{i:04}"), t);
+        params.insert(format!("m/{i:04}"), &state.m[i]);
+        params.insert(format!("v/{i:04}"), &state.v[i]);
+    }
+    write_ffck(path, &params, Some(park_meta(state)))
+}
+
+/// Load a park-state checkpoint. Validates the payload grouping (every
+/// entry is `tr/`, `m/` or `v/`, indices dense and in order, shapes
+/// consistent) and requires the `park` header object — a plain params
+/// checkpoint, a truncated file, or any corrupt header fails here rather
+/// than poisoning the resume downstream.
+pub fn load_park_state(path: &Path) -> Result<ParkState> {
+    let (params, header) = read_ffck(path)?;
+    let meta = header.get("park");
+    if meta.is_null() {
+        bail!("{} has no park metadata — not a park-state checkpoint", path.display());
+    }
+
+    let mut trainables: Vec<Tensor> = Vec::new();
+    let mut m: Vec<Tensor> = Vec::new();
+    let mut v: Vec<Tensor> = Vec::new();
+    for (name, t) in params {
+        let (group, idx) = name
+            .split_once('/')
+            .with_context(|| format!("unexpected payload entry '{name}' in park state"))?;
+        let slot: usize = idx
+            .parse()
+            .with_context(|| format!("unexpected payload entry '{name}' in park state"))?;
+        let dest = match group {
+            "tr" => &mut trainables,
+            "m" => &mut m,
+            "v" => &mut v,
+            other => bail!("unexpected payload group '{other}' in park state"),
+        };
+        // BTreeMap order within a group is index order, so each group
+        // must arrive dense: a gap means a missing tensor.
+        if slot != dest.len() {
+            bail!("park state payload has a gap: '{name}' arrived at position {}", dest.len());
+        }
+        dest.push(t);
+    }
+    if m.len() != trainables.len() || v.len() != trainables.len() {
+        bail!(
+            "park state is inconsistent: {} trainables but {} Adam m / {} Adam v tensors",
+            trainables.len(),
+            m.len(),
+            v.len()
+        );
+    }
+    for i in 0..trainables.len() {
+        if m[i].shape != trainables[i].shape || v[i].shape != trainables[i].shape {
+            bail!(
+                "park state is inconsistent: trainable {i} has shape {:?} but Adam m {:?} / v {:?}",
+                trainables[i].shape,
+                m[i].shape,
+                v[i].shape
+            );
+        }
+    }
+
+    let ffj = meta.get("ff");
+    let ff = FfPosition {
+        sgd_since_ff: req_usize(ffj, "sgd_since_ff")?,
+        total_sgd: req_usize(ffj, "total_sgd")?,
+        interval: req_usize(ffj, "interval")?,
+        consecutive_failures: req_usize(ffj, "consecutive_failures")?,
+        permanently_off: req_bool(ffj, "permanently_off")?,
+    };
+    let flj = meta.get("flops");
+    let flops = FlopsCounter {
+        train_fwd_bwd: req_u64(flj, "train_fwd_bwd")?,
+        adam_updates: req_u64(flj, "adam_updates")?,
+        ff_inference: req_u64(flj, "ff_inference")?,
+        ff_param_updates: req_u64(flj, "ff_param_updates")?,
+        eval_inference: req_u64(flj, "eval_inference")?,
+    };
+    let txj = meta.get("transfers");
+    let transfers = TransferSnapshot {
+        uploads: req_u64(txj, "uploads")?,
+        uploaded_bytes: req_u64(txj, "uploaded_bytes")?,
+        downloads: req_u64(txj, "downloads")?,
+        downloaded_bytes: req_u64(txj, "downloaded_bytes")?,
+        donations: req_u64(txj, "donations")?,
+        donated_bytes: req_u64(txj, "donated_bytes")?,
+    };
+
+    let mut records = Vec::new();
+    for r in meta.get("records").as_arr().context("park meta: 'records' missing")? {
+        let kind = match r.get("kind").as_str().context("park meta: record 'kind' missing")? {
+            "sgd" => StepKind::Sgd,
+            "ff" => StepKind::FastForward,
+            other => bail!("park meta: unknown step kind '{other}'"),
+        };
+        records.push(StepRecord {
+            step: req_usize(r, "step")?,
+            kind,
+            loss: req_f32(r, "loss")?,
+            flops: req_u64(r, "flops")?,
+            seconds: req_f64(r, "seconds")?,
+        });
+    }
+    let mut test_evals = Vec::new();
+    for e in meta.get("test_evals").as_arr().context("park meta: 'test_evals' missing")? {
+        test_evals.push((
+            req_f32(e, "loss")?,
+            req_usize(e, "step")?,
+            req_u64(e, "flops")?,
+            req_f64(e, "seconds")?,
+        ));
+    }
+    let mut stages = Vec::new();
+    for s in meta.get("stages").as_arr().context("park meta: 'stages' missing")? {
+        stages.push(FfStageStats {
+            stage: req_usize(s, "stage")?,
+            at_step: req_usize(s, "at_step")?,
+            tau_star: req_usize(s, "tau_star")?,
+            probes: req_usize(s, "probes")?,
+            baseline_loss: req_f32(s, "baseline_loss")?,
+            final_loss: req_f32(s, "final_loss")?,
+            grad_norm: req_f64(s, "grad_norm")?,
+            grad_cond: req_f64(s, "grad_cond")?,
+        });
+    }
+
+    Ok(ParkState {
+        trainables,
+        m,
+        v,
+        adam_steps: req_usize(meta, "adam_steps")?,
+        ff,
+        stages,
+        records,
+        test_evals,
+        flops,
+        train_seconds: req_f64(meta, "train_seconds")?,
+        transfers,
+    })
+}
+
+/// The `park` header object. Counters go out as i64 (exact ≤ 2^53 through
+/// the codec's f64), floats as-is: the codec prints shortest-round-trip,
+/// so every value read back is bit-identical.
+fn park_meta(state: &ParkState) -> Json {
+    let ff = Json::obj()
+        .set("sgd_since_ff", state.ff.sgd_since_ff)
+        .set("total_sgd", state.ff.total_sgd)
+        .set("interval", state.ff.interval)
+        .set("consecutive_failures", state.ff.consecutive_failures)
+        .set("permanently_off", state.ff.permanently_off);
+    let flops = Json::obj()
+        .set("train_fwd_bwd", state.flops.train_fwd_bwd as i64)
+        .set("adam_updates", state.flops.adam_updates as i64)
+        .set("ff_inference", state.flops.ff_inference as i64)
+        .set("ff_param_updates", state.flops.ff_param_updates as i64)
+        .set("eval_inference", state.flops.eval_inference as i64);
+    let transfers = Json::obj()
+        .set("uploads", state.transfers.uploads as i64)
+        .set("uploaded_bytes", state.transfers.uploaded_bytes as i64)
+        .set("downloads", state.transfers.downloads as i64)
+        .set("downloaded_bytes", state.transfers.downloaded_bytes as i64)
+        .set("donations", state.transfers.donations as i64)
+        .set("donated_bytes", state.transfers.donated_bytes as i64);
+    let records: Vec<Json> = state
+        .records
+        .iter()
+        .map(|r| {
+            Json::obj()
+                .set("step", r.step)
+                .set("kind", match r.kind {
+                    StepKind::Sgd => "sgd",
+                    StepKind::FastForward => "ff",
+                })
+                .set("loss", r.loss as f64)
+                .set("flops", r.flops as i64)
+                .set("seconds", r.seconds)
+        })
+        .collect();
+    let test_evals: Vec<Json> = state
+        .test_evals
+        .iter()
+        .map(|&(loss, step, flops, seconds)| {
+            Json::obj()
+                .set("loss", loss as f64)
+                .set("step", step)
+                .set("flops", flops as i64)
+                .set("seconds", seconds)
+        })
+        .collect();
+    let stages: Vec<Json> = state
+        .stages
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .set("stage", s.stage)
+                .set("at_step", s.at_step)
+                .set("tau_star", s.tau_star)
+                .set("probes", s.probes)
+                .set("baseline_loss", s.baseline_loss as f64)
+                .set("final_loss", s.final_loss as f64)
+                .set("grad_norm", s.grad_norm)
+                .set("grad_cond", s.grad_cond)
+        })
+        .collect();
+    Json::obj()
+        .set("adam_steps", state.adam_steps)
+        .set("train_seconds", state.train_seconds)
+        .set("ff", ff)
+        .set("flops", flops)
+        .set("transfers", transfers)
+        .set("records", Json::Arr(records))
+        .set("test_evals", Json::Arr(test_evals))
+        .set("stages", Json::Arr(stages))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .as_usize()
+        .with_context(|| format!("park meta: missing or invalid '{key}'"))
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    let v = j
+        .get(key)
+        .as_i64()
+        .with_context(|| format!("park meta: missing or invalid '{key}'"))?;
+    if v < 0 {
+        bail!("park meta: '{key}' is negative ({v})");
+    }
+    Ok(v as u64)
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .as_f64()
+        .with_context(|| format!("park meta: missing or invalid '{key}'"))
+}
+
+fn req_f32(j: &Json, key: &str) -> Result<f32> {
+    // Values were widened f32 → f64 on save, so narrowing is exact.
+    Ok(req_f64(j, key)? as f32)
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .as_bool()
+        .with_context(|| format!("park meta: missing or invalid '{key}'"))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn round_trips_exactly() {
@@ -113,6 +453,237 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load_params(&path).is_err());
         assert!(load_params(&dir.join("missing.ffck")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn test_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ffck-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A fully-populated park state with pseudo-random tensors plus
+    /// hand-picked extreme values in every numeric channel — the
+    /// property-style generator behind the round-trip and fault tests.
+    fn park_fixture(seed: u64) -> ParkState {
+        let mut rng = Rng::new(seed);
+        let n_t = 1 + rng.below(3);
+        let mut trainables = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for _ in 0..n_t {
+            let rows = 2 + rng.below(3);
+            let cols = 2 + rng.below(4);
+            let mut mk = |rng: &mut Rng| {
+                let data: Vec<f32> =
+                    (0..rows * cols).map(|_| (rng.next_f32() - 0.5) * 1e6).collect();
+                Tensor::from_vec(&[rows, cols], data)
+            };
+            trainables.push(mk(&mut rng));
+            m.push(mk(&mut rng));
+            v.push(mk(&mut rng));
+        }
+        // extremes: subnormal-boundary, huge, negative zero, max finite
+        trainables[0].data[0] = f32::MIN_POSITIVE;
+        trainables[0].data[1] = 1e30;
+        m[0].data[0] = -0.0;
+        v[0].data[0] = f32::MAX;
+        ParkState {
+            trainables,
+            m,
+            v,
+            adam_steps: rng.below(10_000),
+            ff: FfPosition {
+                sgd_since_ff: rng.below(50),
+                total_sgd: rng.below(10_000),
+                interval: 1 + rng.below(24),
+                consecutive_failures: rng.below(4),
+                permanently_off: seed % 2 == 0,
+            },
+            stages: vec![FfStageStats {
+                stage: 0,
+                at_step: 7,
+                tau_star: 5,
+                probes: 6,
+                baseline_loss: 1.25e-7,
+                final_loss: f32::MAX,
+                grad_norm: 1.0 / 3.0,
+                grad_cond: 7e300,
+            }],
+            records: vec![
+                StepRecord {
+                    step: 0,
+                    kind: StepKind::Sgd,
+                    loss: 0.1 + rng.next_f32(),
+                    flops: (1u64 << 52) + 12_345, // near the 2^53 exactness bound
+                    seconds: 1.0 / 3.0,
+                },
+                StepRecord {
+                    step: 1,
+                    kind: StepKind::FastForward,
+                    loss: f32::MIN_POSITIVE,
+                    flops: 0,
+                    seconds: 0.0,
+                },
+            ],
+            test_evals: vec![(0.5 + rng.next_f32(), 10, 1u64 << 40, 2.0 / 7.0)],
+            flops: FlopsCounter {
+                train_fwd_bwd: (1u64 << 52) + 1,
+                adam_updates: 123_456_789_012_345,
+                ff_inference: rng.next_u64() >> 12, // keep < 2^53
+                ff_param_updates: 7,
+                eval_inference: 0,
+            },
+            train_seconds: 12.625 + rng.next_f64(),
+            transfers: TransferSnapshot {
+                uploads: 3,
+                uploaded_bytes: (1u64 << 33) + 17,
+                downloads: rng.below(1 << 20) as u64,
+                downloaded_bytes: 0,
+                donations: 1,
+                donated_bytes: (1u64 << 52) + 99,
+            },
+        }
+    }
+
+    fn assert_park_eq(a: &ParkState, b: &ParkState) {
+        assert_eq!(a.trainables, b.trainables);
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.v, b.v);
+        assert_eq!(a.adam_steps, b.adam_steps);
+        assert_eq!(a.ff, b.ff);
+        assert_eq!(a.train_seconds.to_bits(), b.train_seconds.to_bits());
+        assert_eq!(a.transfers, b.transfers);
+        // FlopsCounter has no PartialEq: compare field by field
+        assert_eq!(a.flops.train_fwd_bwd, b.flops.train_fwd_bwd);
+        assert_eq!(a.flops.adam_updates, b.flops.adam_updates);
+        assert_eq!(a.flops.ff_inference, b.flops.ff_inference);
+        assert_eq!(a.flops.ff_param_updates, b.flops.ff_param_updates);
+        assert_eq!(a.flops.eval_inference, b.flops.eval_inference);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.step, y.step);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.flops, y.flops);
+            assert_eq!(x.seconds.to_bits(), y.seconds.to_bits());
+        }
+        assert_eq!(a.test_evals.len(), b.test_evals.len());
+        for (x, y) in a.test_evals.iter().zip(&b.test_evals) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits());
+            assert_eq!((x.1, x.2), (y.1, y.2));
+            assert_eq!(x.3.to_bits(), y.3.to_bits());
+        }
+        assert_eq!(a.stages.len(), b.stages.len());
+        for (x, y) in a.stages.iter().zip(&b.stages) {
+            assert_eq!((x.stage, x.at_step, x.tau_star, x.probes), (y.stage, y.at_step, y.tau_star, y.probes));
+            assert_eq!(x.baseline_loss.to_bits(), y.baseline_loss.to_bits());
+            assert_eq!(x.final_loss.to_bits(), y.final_loss.to_bits());
+            assert_eq!(x.grad_norm.to_bits(), y.grad_norm.to_bits());
+            assert_eq!(x.grad_cond.to_bits(), y.grad_cond.to_bits());
+        }
+    }
+
+    #[test]
+    fn park_state_round_trips_bit_exactly_over_random_payloads() {
+        let dir = test_dir("park-rt");
+        for seed in [1u64, 7, 42, 0xffcc, 0xdead_beef] {
+            let state = park_fixture(seed);
+            let path = dir.join(format!("park-{seed}.ffpk"));
+            save_park_state(&path, &state).unwrap();
+            let loaded = load_park_state(&path).unwrap();
+            assert_park_eq(&state, &loaded);
+            // a park-state file is still a valid FFCK1 params file
+            let raw = load_params(&path).unwrap();
+            assert_eq!(raw.len(), 3 * state.trainables.len());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_park_files_fail_loudly() {
+        let dir = test_dir("park-trunc");
+        let path = dir.join("park.ffpk");
+        save_park_state(&path, &park_fixture(3)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // payload cut short: the last tensor's read_exact must fail
+        let cut = dir.join("cut-payload.ffpk");
+        std::fs::write(&cut, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load_park_state(&cut).is_err());
+        // header cut short: file ends inside the JSON header
+        let cut_h = dir.join("cut-header.ffpk");
+        std::fs::write(&cut_h, &bytes[..20]).unwrap();
+        assert!(load_park_state(&cut_h).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_magic_header_or_length_fails_loudly() {
+        let dir = test_dir("park-corrupt");
+        let path = dir.join("park.ffpk");
+        save_park_state(&path, &park_fixture(4)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // corrupt magic
+        let mut b = bytes.clone();
+        b[0] = b'X';
+        let p = dir.join("bad-magic.ffpk");
+        std::fs::write(&p, &b).unwrap();
+        assert!(load_park_state(&p).is_err());
+        // corrupt first header byte (offset 14 = 6 magic + 8 length):
+        // '{' becomes 'X', guaranteeing a JSON parse error
+        let mut b = bytes.clone();
+        b[14] = b'X';
+        let p = dir.join("bad-header.ffpk");
+        std::fs::write(&p, &b).unwrap();
+        assert!(load_park_state(&p).is_err());
+        // implausible header length
+        let mut b = Vec::from(*MAGIC);
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        b.extend_from_slice(b"junk");
+        let p = dir.join("bad-length.ffpk");
+        std::fs::write(&p, &b).unwrap();
+        assert!(load_park_state(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn leftover_tmp_from_crashed_writer_never_poisons_a_resume() {
+        let dir = test_dir("park-tmp");
+        let path = dir.join("park.ffpk");
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        // simulate a crash mid-write: a garbage temp file, no installed file
+        std::fs::write(&tmp, b"half-written garbage").unwrap();
+        // the loader only ever reads the installed path — missing → error
+        assert!(load_park_state(&path).is_err());
+        // the next save overwrites the temp and installs atomically
+        let state = park_fixture(5);
+        save_park_state(&path, &state).unwrap();
+        assert!(!tmp.exists(), "temp file must be renamed away, not left behind");
+        assert_park_eq(&state, &load_park_state(&path).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plain_params_checkpoint_is_rejected_as_park_state() {
+        let dir = test_dir("park-plain");
+        let path = dir.join("w0.ffck");
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::from_vec(&[2], vec![1.0, 2.0]));
+        save_params(&path, &params).unwrap();
+        let err = load_park_state(&path).unwrap_err();
+        assert!(err.to_string().contains("no park metadata"), "got: {err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn inconsistent_moment_sets_are_rejected_at_save_time() {
+        let dir = test_dir("park-shape");
+        let mut state = park_fixture(6);
+        state.m.pop();
+        assert!(save_park_state(&dir.join("a.ffpk"), &state).is_err());
+        let mut state = park_fixture(6);
+        state.v[0] = Tensor::from_vec(&[1], vec![0.0]);
+        assert!(save_park_state(&dir.join("b.ffpk"), &state).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

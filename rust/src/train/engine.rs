@@ -154,6 +154,24 @@ pub trait Engine {
     fn transfers(&self) -> TransferSnapshot;
     /// (uploads, downloads) summed over the trainable/m/v ParamSets.
     fn state_transfer_counts(&self) -> (u64, u64);
+    /// Full optimizer state `(trainables, m, v)` host-side — the park half
+    /// of the queue's preempt/park/resume cycle. Downloads only the
+    /// device-ahead tensors of each set (3·|trainable| in steady state,
+    /// since m/v live device-only for the life of a run).
+    fn state_snapshot(&mut self) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)>;
+    /// Overwrite the full optimizer state from a park snapshot and set the
+    /// Adam step counter (the step scalar uploaded each dispatch derives
+    /// from it, so bias correction continues exactly where the parked run
+    /// left off). Host becomes authoritative; any tracked Δ_W is dropped.
+    fn restore_state(&mut self, tr: &[Tensor], m: &[Tensor], v: &[Tensor], adam_steps: usize);
+    /// Discard the next `n` pipeline batches — a resumed run fast-forwards
+    /// its deterministic data stream past the batches the parked run
+    /// already consumed. Host-side only: nothing is staged or uploaded.
+    fn skip_batches(&mut self, n: usize) -> Result<()>;
+    /// Number of frozen tensors (sync-free; resume byte accounting).
+    fn frozen_count(&self) -> usize;
+    /// Total frozen elements (sync-free; resume byte accounting).
+    fn frozen_numel(&self) -> usize;
 }
 
 /// How a step's micro losses come back: deferred device buffers (device
@@ -631,6 +649,37 @@ impl Engine for StepEngine {
             self.tr.upload_count() + self.m.upload_count() + self.v.upload_count(),
             self.tr.download_count() + self.m.download_count() + self.v.download_count(),
         )
+    }
+
+    fn state_snapshot(&mut self) -> Result<(Vec<Tensor>, Vec<Tensor>, Vec<Tensor>)> {
+        self.tr.sync_host()?;
+        self.m.sync_host()?;
+        self.v.sync_host()?;
+        Ok((self.tr.snapshot(), self.m.snapshot(), self.v.snapshot()))
+    }
+
+    fn restore_state(&mut self, tr: &[Tensor], m: &[Tensor], v: &[Tensor], adam_steps: usize) {
+        self.tr.restore(tr);
+        self.m.restore(m);
+        self.v.restore(v);
+        self.adam_steps = adam_steps;
+        // Δ_W from before the restore must not be served after it.
+        self.delta.clear();
+    }
+
+    fn skip_batches(&mut self, n: usize) -> Result<()> {
+        for _ in 0..n {
+            let _ = self.pipeline.next();
+        }
+        Ok(())
+    }
+
+    fn frozen_count(&self) -> usize {
+        self.fr.len()
+    }
+
+    fn frozen_numel(&self) -> usize {
+        self.fr.numel()
     }
 }
 

@@ -50,6 +50,7 @@ use crate::metrics::{RunLog, StepKind, StepRecord, TrainTimer};
 use crate::model::init::{init_params, init_with_base};
 use crate::model::tensor::{list_norm, Tensor};
 use crate::runtime::{Artifact, ResolvedStep, Runtime, StreamStats, SyncReason, TransferSnapshot};
+use crate::train::checkpoint::ParkState;
 use crate::train::engine::{Engine, EvalSplit, StepEngine, StepOptions};
 
 /// When to stop a training run.
@@ -78,6 +79,13 @@ pub struct RunSummary {
     /// at the next step boundary, drained its pipeline, and evaluated —
     /// the summary describes a consistent partial run, not an error.
     pub cancelled: bool,
+    /// True when [`Trainer::run`] stopped at a step boundary because a
+    /// park request landed ([`Trainer::set_park_flag`]) or the step
+    /// quantum elapsed ([`Trainer::set_step_quantum`]). The run is
+    /// *incomplete by design*: call [`Trainer::park_state`] to snapshot
+    /// it, resume later via [`Trainer::resume_from`] on a fresh trainer.
+    /// `final_test_loss` is NaN — a parked run never runs the final eval.
+    pub parked: bool,
     /// Host↔device traffic attributable to this trainer since
     /// construction (uploads/downloads/donations, calls and bytes), read
     /// from the engine's own `TransferMeter` — exact even while sibling
@@ -126,6 +134,21 @@ pub struct Trainer {
     /// Cooperative cancellation flag, checked at every step boundary of
     /// [`Trainer::run`] (set by `sched::queue::RunHandle::cancel`).
     cancel: Option<Arc<AtomicBool>>,
+    /// Cooperative park flag (preemption): when raised, [`Trainer::run`]
+    /// stops at the next *SGD* step boundary with `parked = true` instead
+    /// of finishing. Consumed (reset to false) when honored.
+    park: Option<Arc<AtomicBool>>,
+    /// Fair-share time slice: park after this many Adam steps per
+    /// [`Trainer::run`] call (≥ 1 step always executes per slot).
+    step_quantum: Option<usize>,
+    /// Whether the most recent park was a preemption (flag) rather than a
+    /// quantum expiry — the queue uses this to re-enqueue victims at the
+    /// front of their priority class.
+    preempted: bool,
+    /// Transfer totals carried in by [`Trainer::resume_from`]: the parked
+    /// run's meter at park time, added on top of this engine's own meter
+    /// so [`Trainer::transfers`] reports whole-run traffic exactly.
+    carried_transfers: TransferSnapshot,
     /// Dispatched-but-unresolved step records, FIFO by ticket; losses are
     /// backfilled into [`RunLog`] as the engine's readback ring drains.
     pending_records: VecDeque<PendingRecord>,
@@ -220,6 +243,10 @@ impl Trainer {
             timer: TrainTimer::start(),
             log: RunLog::default(),
             cancel: None,
+            park: None,
+            step_quantum: None,
+            preempted: false,
+            carried_transfers: TransferSnapshot::default(),
             pending_records: VecDeque::new(),
             last_loss: None,
             w0_trainables,
@@ -244,14 +271,54 @@ impl Trainer {
         self.cancel.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
     }
 
+    /// Install a cooperative park flag. Once raised, [`Trainer::run`]
+    /// stops at the next **SGD** step boundary (a due FF stage runs
+    /// first, so the controller position never parks mid-stage) with
+    /// `parked = true`; the flag is consumed so the next slot starts
+    /// clean. Cancellation wins over parking when both are raised.
+    pub fn set_park_flag(&mut self, flag: Arc<AtomicBool>) {
+        self.park = Some(flag);
+    }
+
+    /// Install a fair-share step quantum: [`Trainer::run`] parks after
+    /// `quantum.max(1)` Adam steps per call, letting a queue time-slice
+    /// same-priority runs. Progress is guaranteed: at least one step
+    /// executes per slot.
+    pub fn set_step_quantum(&mut self, quantum: usize) {
+        self.step_quantum = Some(quantum);
+    }
+
+    /// Whether the most recent parked stop was a preemption (park flag)
+    /// rather than a quantum expiry.
+    pub fn park_was_preemption(&self) -> bool {
+        self.preempted
+    }
+
+    /// Whether a park is due at this SGD step boundary. Consumes a raised
+    /// park flag; otherwise checks the step quantum against the steps
+    /// taken since this `run` slot began.
+    fn park_due(&mut self, slot_start: usize) -> bool {
+        if let Some(flag) = &self.park {
+            if flag.swap(false, Ordering::SeqCst) {
+                self.preempted = true;
+                return true;
+            }
+        }
+        self.step_quantum
+            .is_some_and(|q| self.adam_steps().saturating_sub(slot_start) >= q.max(1))
+    }
+
     /// Monotone step index counting SGD + simulated steps (Fig 4 x-axis).
     pub fn total_steps(&self) -> usize {
         self.engine.adam_steps() + self.log.n_ff()
     }
 
-    /// Host↔device traffic attributable to this trainer so far.
+    /// Host↔device traffic attributable to this trainer so far. For a
+    /// resumed trainer this includes the parked run's carried totals, so
+    /// the number always reads whole-run traffic — park-sync downloads
+    /// and resume re-uploads included, exactly once each.
     pub fn transfers(&self) -> TransferSnapshot {
-        self.engine.transfers()
+        self.carried_transfers.plus(&self.engine.transfers())
     }
 
     /// (uploads, downloads) summed over the trainable/m/v ParamSets. With
@@ -271,6 +338,16 @@ impl Trainer {
     /// Total trainable elements (sync-free).
     pub fn trainable_numel(&self) -> usize {
         self.engine.trainable_numel()
+    }
+
+    /// Number of frozen tensors (sync-free; resume byte accounting).
+    pub fn frozen_count(&self) -> usize {
+        self.engine.frozen_count()
+    }
+
+    /// Total frozen elements (sync-free; resume byte accounting).
+    pub fn frozen_numel(&self) -> usize {
+        self.engine.frozen_numel()
     }
 
     /// Trainable tensor shapes without any device→host sync — the right
@@ -524,6 +601,11 @@ impl Trainer {
         // (e.g. during the final drain/eval) cut no work short and must
         // not mark a fully-delivered run cancelled.
         let mut cancelled = false;
+        let mut parked = false;
+        self.preempted = false;
+        // Steps already taken when this slot began — the quantum counts
+        // per `run` call, so a resumed run gets a full fresh slice.
+        let slot_start = self.adam_steps();
         loop {
             let max = match stop {
                 StopRule::MaxSteps(n) => *n,
@@ -538,12 +620,23 @@ impl Trainer {
             }
             // Cooperative cancellation lands here — a step boundary: the
             // previous step/stage fully dispatched, nothing half-done,
-            // and at least one more step was still owed.
+            // and at least one more step was still owed. Cancel beats
+            // park: a cancelled run must not re-enter the queue.
             if self.cancel_requested() {
                 cancelled = true;
                 break;
             }
-            let did_ff = match self.ffc.next() {
+            let decision = self.ffc.next();
+            // Parking lands only on an SGD boundary: a *due* FF stage
+            // runs first and the park waits one boundary. This keeps
+            // resume bit-identical — the controller position in a park
+            // state never sits on a half-owed stage whose Δ_W (device
+            // state from the preceding step) could not be snapshotted.
+            if decision == FfDecision::Sgd && self.park_due(slot_start) {
+                parked = true;
+                break;
+            }
+            let did_ff = match decision {
                 FfDecision::Sgd => {
                     self.dispatch_sgd_step()?;
                     false
@@ -578,7 +671,11 @@ impl Trainer {
             }
         }
         self.drain_pending(SyncReason::Shutdown)?;
-        let final_test_loss = self.eval_test()?;
+        // A parked run skips the final eval: it hasn't finished — the
+        // resumed run will evaluate once, at its true end. (Skipping also
+        // keeps the test-eval cache off parked slots, so a park/resume
+        // cycle's transfer overhead stays exactly the state bytes.)
+        let final_test_loss = if parked { f32::NAN } else { self.eval_test()? };
         Ok(RunSummary {
             final_test_loss,
             adam_steps: self.adam_steps(),
@@ -587,8 +684,88 @@ impl Trainer {
             train_seconds: self.timer.elapsed(),
             reached_target: reached,
             cancelled,
+            parked,
             transfers: self.transfers(),
         })
+    }
+
+    // ---------------------------------------------------------------------
+    // Park / resume (queue preemption — docs/queue-serving.md)
+    // ---------------------------------------------------------------------
+
+    /// Snapshot a parked run into a [`ParkState`]: full optimizer state
+    /// (trainables + Adam moments), the step/FF-controller position, the
+    /// run log so far, and the exact accounting (FLOPs, train seconds,
+    /// transfer meter). The meter is read *after* the state downloads, so
+    /// the park sync itself is billed to the parked side — a later
+    /// resumed summary reports whole-run traffic with nothing counted
+    /// twice or dropped.
+    pub fn park_state(&mut self) -> Result<ParkState> {
+        self.drain_pending(SyncReason::Snapshot)?;
+        let (trainables, m, v) = self.engine.state_snapshot()?;
+        Ok(ParkState {
+            trainables,
+            m,
+            v,
+            adam_steps: self.adam_steps(),
+            ff: self.ffc.position(),
+            stages: self.ffc.stages.clone(),
+            records: self.log.records.clone(),
+            test_evals: self.log.test_evals.clone(),
+            flops: self.flops,
+            train_seconds: self.timer.elapsed(),
+            transfers: self.transfers(),
+        })
+    }
+
+    /// Resume a parked run on a freshly constructed trainer (same
+    /// artifact, same `TrainConfig` — in particular the same seed, so the
+    /// deterministic data pipeline and `w0_trainables` reproduce the
+    /// original run's). Restores optimizer state and the Adam step
+    /// counter, fast-forwards the data stream past the consumed batches,
+    /// restores the FF-controller position, and carries the run log,
+    /// FLOPs, train seconds, and transfer totals — after this,
+    /// `run(&same_stop_rule)` continues bit-identically to a run that was
+    /// never parked.
+    pub fn resume_from(&mut self, park: &ParkState) -> Result<()> {
+        ensure!(
+            self.adam_steps() == 0 && self.log.records.is_empty(),
+            "resume_from requires a freshly constructed trainer \
+             ({} steps already taken)",
+            self.adam_steps()
+        );
+        let shapes = self.engine.trainable_shapes();
+        ensure!(
+            park.trainables.len() == shapes.len(),
+            "park state has {} trainables but artifact '{}' has {}",
+            park.trainables.len(),
+            self.cfg.artifact,
+            shapes.len()
+        );
+        for (i, t) in park.trainables.iter().enumerate() {
+            ensure!(
+                t.shape == shapes[i],
+                "park state trainable {i} has shape {:?} but artifact '{}' expects {:?}",
+                t.shape,
+                self.cfg.artifact,
+                shapes[i]
+            );
+        }
+        self.engine.restore_state(&park.trainables, &park.m, &park.v, park.adam_steps);
+        // The pipeline replays deterministically from the seed: discard
+        // the batches the parked run already consumed (one per Adam step).
+        self.engine.skip_batches(park.adam_steps)?;
+        self.ffc.restore_position(park.ff);
+        self.ffc.stages = park.stages.clone();
+        self.flops = park.flops;
+        for r in &park.records {
+            self.log.push(r.clone());
+        }
+        self.log.test_evals = park.test_evals.clone();
+        self.last_loss = self.log.last_loss();
+        self.timer.credit(park.train_seconds);
+        self.carried_transfers = park.transfers;
+        Ok(())
     }
 
     // ---------------------------------------------------------------------

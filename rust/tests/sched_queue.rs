@@ -17,10 +17,12 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use fastforward::config::{presets, FfConfig, TrainConfig};
+use fastforward::metrics::StepKind;
 use fastforward::runtime::{Runtime, TransferSnapshot};
 use fastforward::sched::{
     join_all, threads_enabled, ArtifactCache, RunPoll, RunQueue, RunResult, RunSpec, WorkerPool,
 };
+use fastforward::train::checkpoint::{load_park_state, save_park_state};
 use fastforward::train::pretrain::ensure_pretrained;
 use fastforward::train::trainer::{StopRule, Trainer};
 
@@ -78,8 +80,8 @@ fn queue_results_are_bit_identical_to_run_all_with_exact_meters() {
     // tenants — scheduling must never change a run's results.
     let q = RunQueue::new(2);
     let handles = vec![
-        q.submit_run(&r.rt, &r.cache, spec(&r, "a", 31, false, 6), 0, "alice"),
-        q.submit_run(&r.rt, &r.cache, spec(&r, "b", 32, true, 6), 3, "bob"),
+        q.submit_run(&r.rt, &r.cache, spec(&r, "a", 31, false, 6), 0, "alice").unwrap(),
+        q.submit_run(&r.rt, &r.cache, spec(&r, "b", 32, true, 6), 3, "bob").unwrap(),
     ];
     let results = join_all(handles).unwrap();
     assert_eq!(results.len(), 2);
@@ -115,9 +117,9 @@ fn tenant_byte_totals_sum_exactly_to_the_global_meter_delta() {
     let before = r.rt.stats.snapshot();
     let q = RunQueue::new(2);
     let handles = vec![
-        q.submit_run(&r.rt, &r.cache, spec(&r, "a0", 41, false, 4), 0, "alice"),
-        q.submit_run(&r.rt, &r.cache, spec(&r, "a1", 42, false, 4), 1, "alice"),
-        q.submit_run(&r.rt, &r.cache, spec(&r, "b0", 43, true, 4), 0, "bob"),
+        q.submit_run(&r.rt, &r.cache, spec(&r, "a0", 41, false, 4), 0, "alice").unwrap(),
+        q.submit_run(&r.rt, &r.cache, spec(&r, "a1", 42, false, 4), 1, "alice").unwrap(),
+        q.submit_run(&r.rt, &r.cache, spec(&r, "b0", 43, true, 4), 0, "bob").unwrap(),
     ];
     for res in join_all(handles).unwrap() {
         assert!(res.done().is_some());
@@ -154,8 +156,9 @@ fn cancel_before_start_never_constructs_a_trainer() {
         },
         9,
         "t",
-    );
-    let survivor = q.submit_run(&r.rt, &r.cache, spec(&r, "ok", 5, false, 2), 0, "t");
+    )
+    .unwrap();
+    let survivor = q.submit_run(&r.rt, &r.cache, spec(&r, "ok", 5, false, 2), 0, "t").unwrap();
     victim.cancel();
     assert_eq!(victim.poll(), RunPoll::Cancelled);
     q.release();
@@ -226,7 +229,7 @@ fn queue_cancel_mid_run_reports_cancelled_not_error() {
     // A step budget far beyond anything a worker can finish while this
     // thread polls + cancels: the cancel always lands mid-run.
     let budget = 1_000_000;
-    let h = q.submit_run(&r.rt, &r.cache, spec(&r, "long", 9, false, budget), 0, "t");
+    let h = q.submit_run(&r.rt, &r.cache, spec(&r, "long", 9, false, budget), 0, "t").unwrap();
     while h.poll() == RunPoll::Queued {
         std::thread::sleep(std::time::Duration::from_millis(2));
     }
@@ -283,7 +286,7 @@ fn packed_group_is_bit_identical_to_solo_with_exact_meter_slices() {
         .enumerate()
         .map(|(i, &s)| {
             let spec = packable_spec(&r, &format!("m{i}"), s, steps);
-            q_solo.submit_run(&r.rt, &r.cache, spec, 0, "t")
+            q_solo.submit_run(&r.rt, &r.cache, spec, 0, "t").unwrap()
         })
         .collect();
     let solo: Vec<_> = join_all(solo_handles)
@@ -301,7 +304,7 @@ fn packed_group_is_bit_identical_to_solo_with_exact_meter_slices() {
         .enumerate()
         .map(|(i, &s)| {
             let spec = packable_spec(&r, &format!("m{i}"), s, steps);
-            q.submit_run_packable(&r.rt, &r.cache, spec, 0, "t")
+            q.submit_run_packable(&r.rt, &r.cache, spec, 0, "t").unwrap()
         })
         .collect();
     q.release();
@@ -359,8 +362,10 @@ fn ineligible_specs_fall_back_to_solo_through_the_packable_path() {
     // submit_run, with clean tenant accounting.
     let r = rig();
     let q = RunQueue::new(1);
-    let a = q.submit_run(&r.rt, &r.cache, spec(&r, "solo", 21, false, 3), 0, "t");
-    let b = q.submit_run_packable(&r.rt, &r.cache, spec(&r, "fallback", 21, false, 3), 0, "t");
+    let a = q.submit_run(&r.rt, &r.cache, spec(&r, "solo", 21, false, 3), 0, "t").unwrap();
+    let b = q
+        .submit_run_packable(&r.rt, &r.cache, spec(&r, "fallback", 21, false, 3), 0, "t")
+        .unwrap();
     let a = a.join().unwrap().done().unwrap();
     let b = b.join().unwrap().done().unwrap();
     assert!(a.bit_identical(&b), "fallback path changed the losses");
@@ -378,12 +383,157 @@ fn priority_ordering_from_a_cold_queue() {
     let mut handles = Vec::new();
     for (name, prio) in [("low-a", 0), ("high-a", 2), ("low-b", 0), ("high-b", 2), ("mid", 1)] {
         let order = Arc::clone(&order);
-        handles.push(q.submit("t", prio, move |_| {
-            order.lock().unwrap().push(name);
-            Ok(0usize)
-        }));
+        handles.push(
+            q.submit("t", prio, move |_| {
+                order.lock().unwrap().push(name);
+                Ok(0usize)
+            })
+            .unwrap(),
+        );
     }
     q.release();
     join_all(handles).unwrap();
     assert_eq!(*order.lock().unwrap(), vec!["high-a", "high-b", "mid", "low-a", "low-b"]);
+}
+
+#[test]
+fn park_resume_is_bit_identical_with_exact_byte_overhead() {
+    // The preemption acceptance gate: a run parked at step k and resumed
+    // on a fresh trainer must be bitwise identical to the uninterrupted
+    // run — every SGD loss and the final eval — with the park/resume
+    // transfer overhead billed on top *exactly*. Park downloads the full
+    // optimizer state (trainables + Adam m + v = 3T bytes); resume
+    // re-uploads that state plus the fresh engine's one-time uploads
+    // (frozen base, lr and inv_n scalars) and re-stages the one batch
+    // the parked slot prefetched but never consumed.
+    let rt = Runtime::cpu().unwrap();
+    let root = artifacts_root();
+    let base = ensure_pretrained(&rt, &root, "ff-tiny", Some(60)).unwrap();
+    let n = 6;
+
+    // Reference: uninterrupted.
+    let mut a = Trainer::new(&rt, &root, cfg(11, false), Some(&base)).unwrap();
+    let sum_a = a.run(&StopRule::MaxSteps(n)).unwrap();
+    assert!(!sum_a.parked && !sum_a.cancelled);
+    let losses_a: Vec<u32> = a
+        .log
+        .records
+        .iter()
+        .filter(|r| r.kind == StepKind::Sgd)
+        .map(|r| r.loss.to_bits())
+        .collect();
+    assert_eq!(losses_a.len(), n);
+
+    // Interrupted: a step quantum of 3 parks the run at k = 3...
+    let mut b = Trainer::new(&rt, &root, cfg(11, false), Some(&base)).unwrap();
+    b.set_step_quantum(3);
+    let sum_b = b.run(&StopRule::MaxSteps(n)).unwrap();
+    assert!(sum_b.parked && !sum_b.cancelled);
+    assert_eq!(sum_b.adam_steps, 3);
+    assert!(sum_b.final_test_loss.is_nan(), "a parked slot never runs the final eval");
+    let state = b.park_state().unwrap();
+    let path = std::env::temp_dir().join(format!("ffq-it-park-{}.ffpk", std::process::id()));
+    save_park_state(&path, &state).unwrap();
+    drop(b); // the parked trainer is gone: resume must not depend on it
+    let state = load_park_state(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+
+    // ...and a fresh trainer resumes — not restarts — it.
+    let mut c = Trainer::new(&rt, &root, cfg(11, false), Some(&base)).unwrap();
+    c.resume_from(&state).unwrap();
+    let sum_c = c.run(&StopRule::MaxSteps(n)).unwrap();
+    assert!(!sum_c.parked && !sum_c.cancelled);
+    assert_eq!(sum_c.adam_steps, n, "the resumed summary reports the whole run");
+    let losses_c: Vec<u32> = c
+        .log
+        .records
+        .iter()
+        .filter(|r| r.kind == StepKind::Sgd)
+        .map(|r| r.loss.to_bits())
+        .collect();
+    assert_eq!(losses_a, losses_c, "resumed losses must be bitwise identical");
+    assert_eq!(
+        sum_a.final_test_loss.to_bits(),
+        sum_c.final_test_loss.to_bits(),
+        "resumed final eval must be bitwise identical"
+    );
+    assert_eq!(sum_a.sim_steps, sum_c.sim_steps);
+
+    // Exact byte overhead of one park/resume cycle, from model geometry
+    // (docs/transfer-contract.md §5): T/F = trainable/frozen bytes, the
+    // scalar pair is lr + inv_n (4 bytes each), and one full global
+    // batch (3 arrays: tokens, targets, mask) is staged twice.
+    let t_bytes = (c.trainable_numel() * 4) as u64;
+    let t_len = c.trainable_count() as u64;
+    let f_bytes = (c.frozen_numel() * 4) as u64;
+    let f_len = c.frozen_count() as u64;
+    let mc = presets::model("ff-tiny").unwrap();
+    let gb = cfg(11, false).global_batch;
+    let batch_bytes = (3 * gb * mc.seq_len * 4) as u64;
+    let batch_calls = 3 * (gb / mc.micro_batch) as u64;
+    let (at, ct) = (sum_a.transfers, sum_c.transfers);
+    assert_eq!(
+        ct.uploaded_bytes,
+        at.uploaded_bytes + 3 * t_bytes + f_bytes + 8 + batch_bytes,
+        "resume upload overhead must be exactly state + engine one-times + one batch"
+    );
+    assert_eq!(ct.uploads, at.uploads + 3 * t_len + f_len + 2 + batch_calls);
+    assert_eq!(
+        ct.downloaded_bytes,
+        at.downloaded_bytes + 3 * t_bytes,
+        "park download overhead must be exactly the optimizer state"
+    );
+    assert_eq!(ct.downloads, at.downloads + 3 * t_len);
+    assert_eq!(ct.donated_bytes, at.donated_bytes, "park/resume donates nothing extra");
+    assert_eq!(ct.donations, at.donations);
+}
+
+#[test]
+fn queue_quantum_parks_and_resumes_with_exact_tenant_accounting() {
+    // End-to-end through the queue: a step quantum of 1 forces maximum
+    // churn — every 4-step run parks at every boundary and re-enters the
+    // queue — yet the delivered outputs are bit-identical to a solo run,
+    // report whole-run step counts, and the per-tenant meters (slot
+    // deltas summed across all the parks) still reconcile exactly with
+    // the global meter.
+    let r = rig();
+    let q0 = RunQueue::new(1);
+    let solo = q0
+        .submit_run(&r.rt, &r.cache, spec(&r, "ref", 17, false, 4), 0, "t")
+        .unwrap()
+        .join()
+        .unwrap()
+        .done()
+        .expect("solo reference completes");
+
+    let before = r.rt.stats.snapshot();
+    let q = RunQueue::new_paused(2);
+    q.set_step_quantum(1);
+    let h0 = q.submit_run(&r.rt, &r.cache, spec(&r, "x", 17, false, 4), 0, "alice").unwrap();
+    let h1 = q.submit_run(&r.rt, &r.cache, spec(&r, "y", 18, false, 4), 0, "bob").unwrap();
+    q.release();
+    let x = h0.join().unwrap().done().expect("parked run resumes to completion");
+    let y = h1.join().unwrap().done().expect("parked run resumes to completion");
+    assert!(solo.bit_identical(&x), "quantum time-slicing changed the losses");
+    assert_eq!(x.summary.adam_steps, 4, "resumed run reports whole-run steps");
+    assert_eq!(y.summary.adam_steps, 4);
+    assert!(!x.summary.parked, "the delivered summary is the finished slot's");
+
+    // Each run parks after steps 1, 2, and 3; the 4th slot hits the stop
+    // rule before the quantum and finishes. 4 slots picked per run.
+    let alice = q.tenant("alice");
+    let bob = q.tenant("bob");
+    assert_eq!(alice.parked, 3);
+    assert_eq!(bob.parked, 3);
+    assert_eq!(alice.picked, 4);
+    assert_eq!(bob.picked, 4);
+    assert_eq!(alice.completed, 1);
+    assert_eq!(alice.adam_steps, 4, "slot deltas must sum to the whole run");
+
+    let delta = r.rt.stats.snapshot().since(&before);
+    let mut summed = TransferSnapshot::default();
+    for stats in q.tenants().values() {
+        summed = summed.plus(&stats.transfers);
+    }
+    assert_eq!(summed, delta, "park/resume billing must stay exact");
 }
