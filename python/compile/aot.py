@@ -20,6 +20,7 @@ enumerate what exists without globbing.
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
 import sys
@@ -76,6 +77,55 @@ def manifest_for(ac: ArtifactConfig) -> dict:
                    for p in frozen_spec(ac)],
         "programs": {},
     }
+
+
+def content_hash(manifest: dict, adir: str) -> str:
+    """Canonical artifact content hash, shared with rust/src/store.
+
+    sha256 over the canonical manifest bytes (``json.dumps(..., indent=1)``
+    of the manifest *without* its ``content_hash`` key — i.e. exactly the
+    bytes that land in manifest.json minus the stamp), then for each
+    program file in program-name-sorted order ``\\0<file name>\\0<file
+    bytes>``. Field ordering is stable because ``manifest_for`` builds the
+    dict in a fixed insertion order and ``json.dump`` preserves it.
+    """
+    body = {k: v for k, v in manifest.items() if k != "content_hash"}
+    h = hashlib.sha256(json.dumps(body, indent=1).encode())
+    for program in sorted(body["programs"]):
+        fname = body["programs"][program]["file"]
+        h.update(b"\0" + fname.encode() + b"\0")
+        with open(os.path.join(adir, fname), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def stamp_content_hash(manifest: dict, adir: str) -> None:
+    """Record the content hash as the manifest's *last* top-level key, so
+    a stamped manifest.json always ends with ``,\\n "content_hash":
+    "<hex>"\\n}`` — the rust store recovers the canonical pre-stamp bytes
+    by stripping exactly that suffix (store::split_recorded)."""
+    manifest.pop("content_hash", None)
+    manifest["content_hash"] = content_hash(manifest, adir)
+
+
+def verify_stamp(adir: str) -> None:
+    """Emit-time self-check of the suffix contract: reconstruct the
+    canonical bytes from the written manifest.json the way the rust reader
+    does, recompute, and require a match. Any drift in the emitter's JSON
+    formatting fails here, never at artifact-load time on another host."""
+    path = os.path.join(adir, "manifest.json")
+    with open(path) as f:
+        text = f.read()
+    manifest = json.loads(text)
+    recorded = manifest["content_hash"]
+    suffix = ',\n "content_hash": "%s"\n}' % recorded
+    assert text.endswith(suffix), f"{path}: stamp is not the trailing key"
+    canonical = text[: -len(suffix)] + "\n}"
+    body = {k: v for k, v in manifest.items() if k != "content_hash"}
+    assert canonical == json.dumps(body, indent=1), \
+        f"{path}: canonical bytes do not round-trip"
+    assert content_hash(manifest, adir) == recorded, \
+        f"{path}: content_hash does not match directory contents"
 
 
 def emit_artifact(ac: ArtifactConfig, out_dir: str, force: bool = False) -> dict:
@@ -154,8 +204,10 @@ def emit_artifact(ac: ArtifactConfig, out_dir: str, force: bool = False) -> dict
         print(f"  [lowered] {ac.key}/{program} "
               f"({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)")
 
+    stamp_content_hash(manifest, adir)
     with open(os.path.join(adir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    verify_stamp(adir)
     return {"key": ac.key, "dir": ac.key, "model": ac.model.name,
             "train_mode": ac.train_mode, "lora_rank": ac.lora_rank,
             "use_pallas": ac.use_pallas,

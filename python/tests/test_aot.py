@@ -140,6 +140,32 @@ def test_grad_accum_and_finalize_compute_the_mean(smoke_dir):
                                    atol=1e-6)
 
 
+def test_manifest_content_hash_stamp(smoke_dir):
+    """The stamp contract the rust store relies on: content_hash is the
+    trailing top-level key, stripping its suffix recovers the canonical
+    bytes, and the hash covers manifest + HLO bytes (so touching either
+    changes it)."""
+    out, ac = smoke_dir
+    path = out / ac.key / "manifest.json"
+    text = path.read_text()
+    man = json.loads(text)
+    recorded = man["content_hash"]
+    assert len(recorded) == 64 and int(recorded, 16) >= 0
+    suffix = ',\n "content_hash": "%s"\n}' % recorded
+    assert text.endswith(suffix)
+    body = {k: v for k, v in man.items() if k != "content_hash"}
+    assert text[: -len(suffix)] + "\n}" == json.dumps(body, indent=1)
+    assert aot.content_hash(man, str(out / ac.key)) == recorded
+    # Sensitivity: flipping one HLO byte must change the hash.
+    hlo = out / ac.key / "train_step.hlo.txt"
+    original = hlo.read_text()
+    try:
+        hlo.write_text(original + " ")
+        assert aot.content_hash(man, str(out / ac.key)) != recorded
+    finally:
+        hlo.write_text(original)
+
+
 def test_emit_is_incremental(smoke_dir, capsys):
     out, ac = smoke_dir
     aot.emit_artifact(ac, str(out))

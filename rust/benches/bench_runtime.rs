@@ -13,6 +13,7 @@ use std::time::Duration;
 
 use fastforward::model::init::init_params;
 use fastforward::runtime::{Artifact, InputBuf, ParamSet, Runtime};
+use fastforward::store::ArtifactStore;
 use fastforward::util::bench::bench;
 use fastforward::util::json::Json;
 use fastforward::util::rng::Rng;
@@ -146,6 +147,40 @@ fn main() -> anyhow::Result<()> {
             "donated_step_state_uploads",
             (tr.upload_count() + m.upload_count() + v.upload_count()) as i64,
         );
+
+    // content-addressed store (docs/artifact-store.md): cold ingest (hash
+    // + bundle + publish) vs warm materialize — the "second host" path
+    // whose saving is everything the compile section above costs, on
+    // every host after the first.
+    let scratch = std::env::temp_dir().join(format!("ff-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    let store = ArtifactStore::open(scratch.join("store"))?;
+    let key = "ff-tiny_lora_r8";
+    let s = bench("store/ingest(cold hash+publish)", 0, 5, Duration::from_secs(2), || {
+        // drop the whole store so every iteration re-hashes and re-writes
+        let _ = std::fs::remove_dir_all(store.root());
+        store.ingest_artifact(key, &root.join(key)).unwrap();
+    });
+    println!("{}", s.report());
+    report = report.set("store_ingest_cold", s.to_json());
+
+    // warm: populate once, then materialize onto a fresh "host" each
+    // iteration — hash-verified in memory before a byte lands on disk
+    store.ingest_artifact(key, &root.join(key))?;
+    let warm0 = store.stats.snapshot();
+    let mut host = 0usize;
+    let s = bench("store/materialize(warm second host)", 0, 5, Duration::from_secs(2), || {
+        let dest = scratch.join(format!("host-{host}")).join(key);
+        host += 1;
+        store.materialize_artifact(key, None, &dest).unwrap();
+    });
+    let delta = store.stats.snapshot().since(&warm0);
+    println!("{}", s.report());
+    println!("    {}", delta.report());
+    report = report
+        .set("store_materialize_warm", s.to_json())
+        .set("store_materialize_warm_counters", delta.to_json());
+    let _ = std::fs::remove_dir_all(&scratch);
 
     let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime.json");
     std::fs::write(&out, report.to_string_pretty())?;

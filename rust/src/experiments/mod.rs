@@ -276,6 +276,41 @@ impl ExpContext {
     }
 }
 
+/// Build the cross-host grid manifest (`crate::sched::shard`) for this
+/// scale: models × tasks × FF on/off, one [`crate::sched::shard::CellSpec`]
+/// per run, with the same quick/full scaling the in-process grid harnesses
+/// apply ([`common::run_config`]). Written by `experiment --emit-manifest`,
+/// consumed by `--manifest F --shard i/N` on each host.
+pub fn grid_manifest(
+    scale: &Scale,
+    name: &str,
+) -> Result<crate::sched::shard::GridManifest> {
+    use crate::config::presets;
+    let mut cells = Vec::new();
+    for model in &scale.models {
+        for task in presets::TASKS.iter() {
+            for ff in [false, true] {
+                let artifact = common::artifact_key(model, "lora", task);
+                let mut cfg = presets::train_config(&artifact, task, scale.epochs)?;
+                if !scale.full {
+                    cfg.train_examples /= 2;
+                }
+                let steps_per_epoch = cfg.train_examples / cfg.global_batch;
+                cfg.max_steps = scale.epochs * steps_per_epoch;
+                if !scale.full {
+                    cfg.max_steps = cfg.max_steps.min(128);
+                }
+                cfg.test_examples = scale.test_examples;
+                cfg.ff.enabled = ff;
+                let index = cells.len();
+                let label = format!("{model}/{task}/{}", if ff { "ff" } else { "base" });
+                cells.push(crate::sched::shard::CellSpec { index, label, cfg });
+            }
+        }
+    }
+    Ok(crate::sched::shard::GridManifest { name: name.to_string(), cells })
+}
+
 pub type ExpFn = fn(&ExpContext) -> Result<()>;
 
 /// Registry mapping experiment ids to harnesses (DESIGN.md experiment index).

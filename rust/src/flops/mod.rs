@@ -277,6 +277,7 @@ mod tests {
             trainable: vec![],
             frozen: vec![],
             programs,
+            content_hash: None,
         }
     }
 

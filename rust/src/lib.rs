@@ -39,5 +39,6 @@ pub mod model;
 pub mod optim;
 pub mod runtime;
 pub mod sched;
+pub mod store;
 pub mod train;
 pub mod util;

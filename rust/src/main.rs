@@ -20,7 +20,7 @@
 //!   fastforward queue --manifest runs.txt --jobs 4
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 use std::sync::Arc;
 
@@ -28,7 +28,9 @@ use fastforward::config::{presets, FfConfig};
 use fastforward::experiments::{self, ExpContext, Scale};
 use fastforward::model::tensor::Tensor;
 use fastforward::runtime::{ArtifactIndex, Runtime};
+use fastforward::sched::shard::{self as grid, GridLock, GridManifest};
 use fastforward::sched::{self, ArtifactCache, RunQueue, RunResult, RunSpec, WorkerPool};
+use fastforward::store::ArtifactStore;
 use fastforward::train::pretrain::ensure_pretrained;
 use fastforward::train::trainer::{StopRule, Trainer};
 use fastforward::util::args::Args;
@@ -60,17 +62,27 @@ fn usage() -> &'static str {
                  --jobs only applies when --runs > 1)\n\
      experiment: <id>|--all [--full] [--jobs N] [--queue]   (ids: fastforward list\n\
                  --experiments; --queue routes grid cells through the run queue)\n\
+                 --emit-manifest [--full] [--name NAME]   write a versioned grid\n\
+                 manifest plus a .lock pinning artifact content hashes\n\
+                 --manifest FILE [--shard i/N] [--store DIR] [--jobs N]   run the\n\
+                 manifest (or one round-robin slice); a .lock next to the\n\
+                 manifest pins hashes (mismatch fails fast); --store shares AOT\n\
+                 bundles + W0 checkpoints across hosts (docs/artifact-store.md)\n\
+                 --merge FILE...   fold shard reports (files or shard dirs) into\n\
+                 the canonical report, byte-identical to an unsharded run\n\
      queue:      --manifest FILE [--jobs N]   (long-lived multi-tenant run queue:\n\
                  submissions pop by priority, fair-share within a class; results\n\
                  stream in completion order; per-tenant runs/steps/FLOPs/exact-\n\
                  bytes accounting. manifest lines: tenant priority artifact task\n\
                  steps seed on|off)\n\
      pretrain:   --model NAME [--steps N]\n\
-     selftest:   [--jobs N] [--queue] [--churn]   (N > 1 exercises the concurrent\n\
-                 scheduler; --queue adds run-queue legs: priorities, cancel,\n\
-                 tenant totals, and batched same-artifact packing vs solo\n\
+     selftest:   [--jobs N] [--queue] [--churn] [--shard]   (N > 1 exercises the\n\
+                 concurrent scheduler; --queue adds run-queue legs: priorities,\n\
+                 cancel, tenant totals, and batched same-artifact packing vs solo\n\
                  bit-identity; --churn adds the deterministic churn storm plus\n\
-                 quantum park/resume accounting, and implies --queue)\n\
+                 quantum park/resume accounting, and implies --queue; --shard\n\
+                 adds the cross-host grid leg: 2 shards + store vs unsharded,\n\
+                 merged report byte-identical, warm shard all store hits)\n\
      note: --jobs > 1 needs a build with --features xla-shared-client (pinned,\n\
            audited xla rev — see rust/XLA_AUDIT); otherwise the pool runs\n\
            sequentially and the queue drains inline at join, in priority order\n"
@@ -219,8 +231,29 @@ fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyh
     let full = args.flag("full");
     let use_queue = args.flag("queue");
     let jobs = args.opt_usize("jobs", 1).map_err(|e| anyhow::anyhow!(e))?;
+    let emit_manifest = args.flag("emit-manifest");
+    let grid_name = args.opt("name");
+    let manifest_path = args.opt("manifest").map(PathBuf::from);
+    let shard_slice = args.opt("shard");
+    let store_dir = args.opt("store").map(PathBuf::from);
+    // `--merge a.json b.json` parses as opt("merge")=a.json + positional
+    // b.json; a bare trailing `--merge` parses as a flag.
+    let merge_head = args.opt("merge");
+    let merge = merge_head.is_some() || args.flag("merge");
     let id = args.positional.first().cloned();
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    if merge {
+        return cmd_grid_merge(merge_head, &args.positional, &reports);
+    }
+    if emit_manifest {
+        return cmd_grid_emit(grid_name, full, &artifacts, &reports);
+    }
+    if let Some(mpath) = manifest_path {
+        return cmd_grid_run(&mpath, shard_slice.as_deref(), store_dir, &artifacts, &reports, jobs);
+    }
+    anyhow::ensure!(shard_slice.is_none(), "--shard needs --manifest FILE");
+    anyhow::ensure!(store_dir.is_none(), "--store applies to --manifest grid runs");
 
     let scale = if full { Scale::full() } else { Scale::quick() };
     let ctx = ExpContext::new(artifacts, reports, scale, jobs, use_queue)?;
@@ -254,6 +287,89 @@ fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyh
         .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (see: fastforward list --experiments)"))?;
     info!("experiment {id}: {desc}");
     f(&ctx)
+}
+
+/// `experiment --emit-manifest`: write the versioned grid manifest for the
+/// selected scale plus its lockfile (every artifact pinned to its canonical
+/// content hash) under the reports dir, ready to ship to other hosts.
+fn cmd_grid_emit(
+    name: Option<String>,
+    full: bool,
+    artifacts: &Path,
+    reports: &Path,
+) -> anyhow::Result<()> {
+    let name = name.unwrap_or_else(|| if full { "full" } else { "quick" }.to_string());
+    let scale = if full { Scale::full() } else { Scale::quick() };
+    let manifest = experiments::grid_manifest(&scale, &name)?;
+    let mpath = reports.join(format!("grid-{name}.manifest.json"));
+    manifest.save(&mpath)?;
+    let lock = GridLock::emit(&manifest, artifacts)?;
+    let lpath = GridLock::lock_path(&mpath);
+    lock.save(&lpath)?;
+    println!(
+        "manifest: {} ({} cells, format v{})",
+        mpath.display(),
+        manifest.cells.len(),
+        grid::GRID_FORMAT_VERSION
+    );
+    println!("lockfile: {} ({} artifact pins)", lpath.display(), lock.artifacts.len());
+    println!(
+        "run a slice with: fastforward experiment --manifest {} --shard i/N [--store DIR]",
+        mpath.display()
+    );
+    Ok(())
+}
+
+/// `experiment --manifest FILE [--shard i/N] [--store DIR]`: run the whole
+/// manifest or one round-robin slice of it, resolving artifacts and W0
+/// through the content-addressed store when one is given.
+fn cmd_grid_run(
+    mpath: &Path,
+    shard: Option<&str>,
+    store_dir: Option<PathBuf>,
+    artifacts: &Path,
+    reports: &Path,
+    jobs: usize,
+) -> anyhow::Result<()> {
+    let manifest = GridManifest::load(mpath)?;
+    let lpath = GridLock::lock_path(mpath);
+    let lock = if lpath.exists() { Some(GridLock::load(&lpath)?) } else { None };
+    match &lock {
+        Some(l) => info!("lockfile {}: {} artifact pin(s)", lpath.display(), l.artifacts.len()),
+        None => warn_!(
+            "no lockfile next to {} — artifact content hashes are unpinned",
+            mpath.display()
+        ),
+    }
+    let shard = shard.map(grid::parse_shard).transpose()?;
+    let store = store_dir.map(ArtifactStore::open).transpose()?.map(Arc::new);
+    let rt = Runtime::cpu()?;
+    let outcome =
+        grid::run_grid(&rt, artifacts, store, &manifest, lock.as_ref(), shard, reports, jobs)?;
+    println!(
+        "grid '{}': {} cell(s) → {}",
+        manifest.name,
+        outcome.cells_run,
+        outcome.report_path.display()
+    );
+    if let Some(s) = &outcome.store {
+        println!("{}", s.report());
+    }
+    Ok(())
+}
+
+/// `experiment --merge FILE...`: fold shard reports (files, or shard dirs
+/// holding one) into the canonical grid report.
+fn cmd_grid_merge(head: Option<String>, rest: &[String], reports: &Path) -> anyhow::Result<()> {
+    let mut files = Vec::new();
+    for f in head.iter().chain(rest.iter()) {
+        let p = PathBuf::from(f);
+        files.push(if p.is_dir() { grid::shard_report_file(&p)? } else { p });
+    }
+    anyhow::ensure!(!files.is_empty(), "--merge wants shard report files (or shard dirs)");
+    let merged = grid::merge_shards(&files, reports)?;
+    println!("merged {} shard report(s) → {}", files.len(), merged.display());
+    Ok(())
 }
 
 /// One parsed manifest line of the `queue` subcommand.
@@ -474,14 +590,18 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     let requested = args.opt_usize("jobs", 2).map_err(|e| anyhow::anyhow!(e))?.max(1);
     let with_churn = args.flag("churn");
     let with_queue = args.flag("queue") || with_churn;
+    let with_shard = args.flag("shard");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let total = if with_churn {
+    let mut total = if with_churn {
         8
     } else if with_queue {
         7
     } else {
         5
     };
+    if with_shard {
+        total += 1;
+    }
     // The scheduler gate is part of the banner so degraded (sequential)
     // CI runs are visible in the logs, not silently green.
     println!(
@@ -562,7 +682,7 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
             })
             .collect()
     };
-    let cache = Arc::new(ArtifactCache::new(artifacts));
+    let cache = Arc::new(ArtifactCache::new(artifacts.clone()));
     let seq = WorkerPool::new(1).run_all(&rt, &cache, specs("seq"))?;
     let par = pool.run_all(&rt, &cache, specs("par"))?;
     for (a, b) in seq.outputs.iter().zip(par.outputs.iter()) {
@@ -907,6 +1027,121 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
              park/resume overhead) sum exactly to the global delta ({})",
             delta.report()
         );
+    }
+
+    if with_shard {
+        println!(
+            "[{total}/{total}] cross-host grid sharding: 2 shards + store vs \
+             unsharded (byte-identical merge, warm shard served from the store)"
+        );
+        let scratch =
+            std::env::temp_dir().join(format!("ff-selftest-shard-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&scratch);
+        std::fs::create_dir_all(&scratch)?;
+        // A tiny 4-cell grid (2 seeds × FF on/off) over the same artifact
+        // and task as the legs above, 4 steps per cell. Only fields the
+        // manifest serializes are set, so the save/load round trip below
+        // is behavior-preserving.
+        let mut cells = Vec::new();
+        for (i, (seed, ff)) in
+            [(0x5eedu64, false), (0x5eed, true), (0x5eee, false), (0x5eee, true)]
+                .iter()
+                .enumerate()
+        {
+            let mut c = presets::train_config("ff-tiny_lora_r8", "medical", 1)?;
+            c.train_examples = 256;
+            c.test_examples = 32;
+            c.max_steps = 4;
+            c.seed = *seed;
+            c.ff.enabled = *ff;
+            cells.push(grid::CellSpec {
+                index: i,
+                label: format!("seed{seed:x}/{}", if *ff { "ff" } else { "base" }),
+                cfg: c,
+            });
+        }
+        let manifest = GridManifest { name: "selftest".into(), cells };
+        // Exercise the wire format: everything below runs off the
+        // round-tripped manifest, exactly like a second host would.
+        let mpath = scratch.join("grid-selftest.manifest.json");
+        manifest.save(&mpath)?;
+        let manifest = GridManifest::load(&mpath)?;
+        let lock = GridLock::emit(&manifest, &artifacts)?;
+
+        // Unsharded reference: local artifacts, no store.
+        let r0 = grid::run_grid(
+            &rt,
+            &artifacts,
+            None,
+            &manifest,
+            Some(&lock),
+            None,
+            &scratch.join("unsharded"),
+            1,
+        )?;
+        // Host A: shard 1/2 from the local root, publishing into a fresh
+        // store (cold: ingests artifacts, publishes W0).
+        let store = Arc::new(ArtifactStore::open(scratch.join("store"))?);
+        let shards_out = scratch.join("shards");
+        let s1 = grid::run_grid(
+            &rt,
+            &artifacts,
+            Some(Arc::clone(&store)),
+            &manifest,
+            Some(&lock),
+            Some((1, 2)),
+            &shards_out,
+            1,
+        )?;
+        // Host B: shard 2/2 from an EMPTY artifacts root — programs and W0
+        // must come out of the store: zero compiles, zero W0 rebuilds.
+        let cold_root = scratch.join("host-b-artifacts");
+        std::fs::create_dir_all(&cold_root)?;
+        let s2 = grid::run_grid(
+            &rt,
+            &cold_root,
+            Some(Arc::clone(&store)),
+            &manifest,
+            Some(&lock),
+            Some((2, 2)),
+            &shards_out,
+            1,
+        )?;
+        let warm = s2.store.ok_or_else(|| anyhow::anyhow!("shard 2 ran without store stats"))?;
+        anyhow::ensure!(
+            warm.all_hits() && warm.artifact_hits > 0 && warm.w0_hits > 0,
+            "warm shard on an empty root was not served entirely from the store: {}",
+            warm.report()
+        );
+        anyhow::ensure!(
+            r0.cells_run == s1.cells_run + s2.cells_run,
+            "shards covered {} + {} cells, unsharded ran {}",
+            s1.cells_run,
+            s2.cells_run,
+            r0.cells_run
+        );
+        let merged = grid::merge_shards(
+            &[s1.report_path.clone(), s2.report_path.clone()],
+            &scratch.join("merged"),
+        )?;
+        let reference = std::fs::read(&r0.report_path)?;
+        let folded = std::fs::read(&merged)?;
+        anyhow::ensure!(
+            reference == folded,
+            "merged shard report differs from the unsharded reference \
+             ({} vs {})",
+            merged.display(),
+            r0.report_path.display()
+        );
+        println!(
+            "      ok: {} + {} sharded cells merged byte-identical to the \
+             {}-cell unsharded report; warm shard: {}",
+            s1.cells_run,
+            s2.cells_run,
+            r0.cells_run,
+            warm.report()
+        );
+        let _ = std::fs::remove_dir_all(&scratch);
     }
     println!("selftest passed");
     Ok(())

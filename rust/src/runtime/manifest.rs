@@ -108,6 +108,11 @@ pub struct Manifest {
     pub trainable: Vec<(String, Vec<usize>)>,
     pub frozen: Vec<(String, Vec<usize>)>,
     pub programs: BTreeMap<String, ProgramSpec>,
+    /// Canonical content hash stamped by the python emitter (manifest +
+    /// HLO bytes; see `crate::store` for the recipe). `None` for artifacts
+    /// emitted before content addressing existed — the store hashes those
+    /// from directory contents instead.
+    pub content_hash: Option<String>,
 }
 
 fn parse_slots(v: &Json) -> Result<Vec<IoSlot>> {
@@ -221,6 +226,7 @@ impl Manifest {
             trainable: parse_named_shapes(j.get("trainable"))?,
             frozen: parse_named_shapes(j.get("frozen"))?,
             programs,
+            content_hash: j.get("content_hash").as_str().map(str::to_string),
         };
         man.cross_check()?;
         Ok(man)

@@ -50,6 +50,7 @@
 //! the wall-clock overlap is lost.
 
 pub mod queue;
+pub mod shard;
 
 use std::collections::BTreeMap;
 #[cfg(feature = "xla-shared-client")]
@@ -68,6 +69,7 @@ use crate::ff::controller::FfStageStats;
 use crate::metrics::StepKind;
 use crate::model::tensor::Tensor;
 use crate::runtime::{Artifact, Runtime, StreamStats, TransferSnapshot};
+use crate::store::ArtifactStore;
 use crate::train::checkpoint::ParkState;
 use crate::train::trainer::{RunSummary, StopRule, Trainer};
 
@@ -179,35 +181,101 @@ impl PoolRun {
     }
 }
 
+/// Per-key entry slot of the [`ArtifactCache`]: the outer map lock is held
+/// only long enough to fetch or create a slot, never across disk I/O or
+/// manifest parsing, so unrelated artifacts' first loads proceed
+/// concurrently (the same pattern as `ExpContext::pretrained`).
+type ArtifactSlot = Arc<Mutex<Option<Arc<Artifact>>>>;
+
 /// Process-local cache mapping artifact keys to shared `Arc<Artifact>`s so
 /// concurrent runs over the same artifact compile each program once.
+///
+/// Resolution order (`docs/artifact-store.md`): the in-memory slot, then
+/// the local artifacts dir, then — when a content-addressed
+/// [`ArtifactStore`] is attached via [`ArtifactCache::with_store`] — the
+/// shared store, materializing the bundle into the local dir. Local builds
+/// are published back into the store, so a second host (or a second
+/// process in CI) resolves every artifact as a pure store hit. Lockfile
+/// pins ([`ArtifactCache::pin`]) are verified against the canonical
+/// content hash on first load and fail fast on any mismatch.
 pub struct ArtifactCache {
     root: PathBuf,
-    cached: Mutex<BTreeMap<String, Arc<Artifact>>>,
+    cached: Mutex<BTreeMap<String, ArtifactSlot>>,
+    store: Option<Arc<ArtifactStore>>,
+    /// Artifact key → pinned content hash, from a grid lockfile.
+    pins: Mutex<BTreeMap<String, String>>,
 }
 
 impl ArtifactCache {
     pub fn new(root: PathBuf) -> ArtifactCache {
-        ArtifactCache { root, cached: Mutex::new(BTreeMap::new()) }
+        ArtifactCache {
+            root,
+            cached: Mutex::new(BTreeMap::new()),
+            store: None,
+            pins: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// A cache backed by a shared content-addressed store: local misses
+    /// materialize from the store, local builds are published into it.
+    pub fn with_store(root: PathBuf, store: Arc<ArtifactStore>) -> ArtifactCache {
+        ArtifactCache { store: Some(store), ..ArtifactCache::new(root) }
     }
 
     pub fn root(&self) -> &Path {
         &self.root
     }
 
+    pub fn store(&self) -> Option<&Arc<ArtifactStore>> {
+        self.store.as_ref()
+    }
+
+    /// Pin `key` to a content hash (from a grid lockfile): the local build
+    /// must hash to exactly this, and store resolution fetches exactly
+    /// this object — every shard runs bit-identical programs or errors.
+    pub fn pin(&self, key: &str, hash: &str) {
+        lock(&self.pins).insert(key.to_string(), hash.to_string());
+    }
+
     /// The shared artifact for `key`, loading its manifest on first use.
     /// Programs compile lazily (and once) inside the artifact itself.
     pub fn load(&self, rt: &Arc<Runtime>, key: &str) -> Result<Arc<Artifact>> {
-        let mut cached = lock(&self.cached);
-        if let Some(a) = cached.get(key) {
+        // Two-level locking: the map lock covers only the slot lookup; the
+        // load itself serializes per key on the slot's own lock, so two
+        // runs racing on the *same* key still load it once while loads of
+        // *different* keys no longer serialize behind each other.
+        let slot: ArtifactSlot = {
+            let mut cached = lock(&self.cached);
+            Arc::clone(cached.entry(key.to_string()).or_default())
+        };
+        let mut entry = lock(&slot);
+        if let Some(a) = entry.as_ref() {
             return Ok(Arc::clone(a));
         }
-        let art = Arc::new(
-            Artifact::load(rt, &self.root.join(key))
-                .with_context(|| format!("artifact '{key}'"))?,
-        );
-        cached.insert(key.to_string(), Arc::clone(&art));
+        let art = Arc::new(self.load_uncached(rt, key)?);
+        *entry = Some(Arc::clone(&art));
         Ok(art)
+    }
+
+    /// The slow path: resolve the artifact *directory* (verifying pins
+    /// and, with a store attached, publishing or materializing), then load
+    /// and cross-check the manifest.
+    fn load_uncached(&self, rt: &Arc<Runtime>, key: &str) -> Result<Artifact> {
+        let dir = self.root.join(key);
+        let pinned = lock(&self.pins).get(key).cloned();
+        if dir.join("manifest.json").exists() {
+            if pinned.is_some() || self.store.is_some() {
+                crate::store::verify_local_artifact(&dir, key, pinned.as_deref())?;
+            }
+            if let Some(s) = &self.store {
+                s.ingest_artifact(key, &dir)
+                    .with_context(|| format!("publishing artifact '{key}' to the store"))?;
+            }
+        } else if let Some(s) = &self.store {
+            s.materialize_artifact(key, pinned.as_deref(), &dir)
+                .with_context(|| format!("materializing artifact '{key}' from the store"))?;
+        }
+        Artifact::load(rt, &dir).with_context(|| format!("artifact '{key}'"))
     }
 }
 
@@ -406,6 +474,10 @@ pub(crate) fn execute_run_resumable(
     resume: Option<&ParkState>,
 ) -> Result<SlotOutcome> {
     let t0 = Instant::now();
+    // Window the shared store counters around this slot: at --jobs 1 the
+    // delta is exactly this run's store traffic; under concurrency it is
+    // an approximate window (the counters are process-wide atomics).
+    let store0 = artifacts.store().map(|s| s.stats.snapshot());
     let art = artifacts.load(rt, &spec.cfg.artifact)?;
     let label = &spec.label;
     let mut t = Trainer::with_artifact(rt, art, spec.cfg.clone(), spec.base.as_deref())
@@ -425,7 +497,10 @@ pub(crate) fn execute_run_resumable(
     if let Some(state) = resume {
         t.resume_from(state).with_context(|| format!("resuming parked run '{label}'"))?;
     }
-    let summary = t.run(&spec.stop).with_context(|| format!("run '{label}'"))?;
+    let mut summary = t.run(&spec.stop).with_context(|| format!("run '{label}'"))?;
+    if let (Some(before), Some(store)) = (store0, artifacts.store()) {
+        summary.store = Some(store.stats.snapshot().since(&before));
+    }
     if summary.parked {
         return Ok(SlotOutcome::Parked {
             preempted: t.park_was_preemption(),

@@ -122,6 +122,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -224,6 +225,11 @@ pub enum SubmitError {
     /// ([`RunQueue::set_quota`]). Quotas only ever fill up, so this is a
     /// permanent rejection until the quota is raised.
     QuotaExceeded { tenant: String, reason: String },
+    /// The tenant hit its time-window rate limit
+    /// ([`TenantQuota::per_window`]): unlike [`SubmitError::QuotaExceeded`]
+    /// this is *transient* — re-submitting after `retry_after` lands in a
+    /// fresh window and is admitted (budget permitting).
+    RateLimited { tenant: String, retry_after: Duration },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -234,6 +240,13 @@ impl std::fmt::Display for SubmitError {
             }
             SubmitError::QuotaExceeded { tenant, reason } => {
                 write!(f, "tenant '{tenant}' over quota: {reason}")
+            }
+            SubmitError::RateLimited { tenant, retry_after } => {
+                write!(
+                    f,
+                    "tenant '{tenant}' rate-limited: window budget spent, retry in {:.1}s",
+                    retry_after.as_secs_f64()
+                )
             }
         }
     }
@@ -252,6 +265,15 @@ pub struct TenantQuota {
     pub max_flops: Option<u64>,
     /// Maximum host↔device bytes (uploads + downloads + donations).
     pub max_bytes: Option<u64>,
+    /// Time-window rate limit `(flops, bytes, window)`: within any one
+    /// window the tenant may consume strictly less than `flops`
+    /// chargeable FLOPs and `bytes` transfer bytes before admission
+    /// rejects with [`SubmitError::RateLimited`] (use `u64::MAX` to
+    /// rate-limit one dimension only). The window opens at the tenant's
+    /// first admission (baseline = its consumed totals at that instant)
+    /// and rolls over `window` later; [`RunQueue::set_quota`] resets it.
+    /// Unlike the hard budgets above, a spent window clears on its own.
+    pub per_window: Option<(u64, u64, Duration)>,
 }
 
 /// Non-blocking status of a submission ([`RunHandle::poll`]).
@@ -399,6 +421,16 @@ struct PackData {
     tenant: String,
 }
 
+/// One tenant's open rate window ([`TenantQuota::per_window`]): the
+/// baseline is the tenant's consumed totals when the window opened, so
+/// "spent this window" is a plain subtraction against [`TenantStats`] —
+/// no per-admission bookkeeping beyond this struct.
+struct WindowState {
+    started: Instant,
+    flops_at_start: u64,
+    bytes_at_start: u64,
+}
+
 /// A packable submission parked for group formation. The `data` slot is
 /// the exclusivity token: whoever takes the `PackData` — the
 /// submission's own job, or a pack leader that flipped its handle
@@ -446,6 +478,9 @@ struct Shared<R> {
     tenants: Mutex<BTreeMap<String, TenantStats>>,
     /// Per-tenant admission budgets ([`RunQueue::set_quota`]).
     quotas: Mutex<BTreeMap<String, TenantQuota>>,
+    /// Open rate windows ([`TenantQuota::per_window`]), keyed by tenant.
+    /// Leaf lock, taken only inside `admission_error`/`set_quota`.
+    windows: Mutex<BTreeMap<String, WindowState>>,
     /// Fair-share step quantum for park-aware runs
     /// ([`RunQueue::set_step_quantum`]): a running slot parks after this
     /// many Adam steps and re-queues at the back of its class.
@@ -739,6 +774,7 @@ fn new_shared<R>(paused: bool) -> Arc<Shared<R>> {
         space_cv: Condvar::new(),
         tenants: Mutex::new(BTreeMap::new()),
         quotas: Mutex::new(BTreeMap::new()),
+        windows: Mutex::new(BTreeMap::new()),
         quantum: Mutex::new(None),
         running: Mutex::new(BTreeMap::new()),
         pack_pool: Mutex::new(BTreeMap::new()),
@@ -850,7 +886,10 @@ impl<R: 'static> RunQueue<R> {
         loop {
             match self.try_submit_inner(tenant, priority, boxed, false) {
                 Ok(h) => return Ok(h),
-                Err((err @ SubmitError::QuotaExceeded { .. }, _)) => return Err(err.into()),
+                Err((
+                    err @ (SubmitError::QuotaExceeded { .. } | SubmitError::RateLimited { .. }),
+                    _,
+                )) => return Err(err.into()),
                 Err((SubmitError::Full { .. }, j)) => {
                     boxed = j;
                     let mut st = lock(&self.shared.state);
@@ -884,7 +923,10 @@ impl<R: 'static> RunQueue<R> {
         loop {
             match self.try_submit_inner(tenant, priority, boxed, false) {
                 Ok(h) => return Ok(h),
-                Err((err @ SubmitError::QuotaExceeded { .. }, _)) => return Err(err.into()),
+                Err((
+                    err @ (SubmitError::QuotaExceeded { .. } | SubmitError::RateLimited { .. }),
+                    _,
+                )) => return Err(err.into()),
                 Err((SubmitError::Full { .. }, j)) => {
                     boxed = j;
                     let (entry, paused) = {
@@ -968,10 +1010,14 @@ impl<R: 'static> RunQueue<R> {
     }
 
     /// Quota check at admission: `Some(err)` when the tenant's consumed
-    /// totals meet or exceed a configured budget.
+    /// totals meet or exceed a configured budget, or its open rate window
+    /// ([`TenantQuota::per_window`]) is spent.
     fn admission_error(&self, tenant: &str) -> Option<SubmitError> {
         let quota = *lock(&self.shared.quotas).get(tenant)?;
         let t = lock(&self.shared.tenants).get(tenant).cloned().unwrap_or_default();
+        let used = t.transfers.uploaded_bytes
+            + t.transfers.downloaded_bytes
+            + t.transfers.donated_bytes;
         if let Some(max) = quota.max_flops {
             if t.flops >= max {
                 return Some(SubmitError::QuotaExceeded {
@@ -984,13 +1030,32 @@ impl<R: 'static> RunQueue<R> {
             }
         }
         if let Some(max) = quota.max_bytes {
-            let used = t.transfers.uploaded_bytes
-                + t.transfers.downloaded_bytes
-                + t.transfers.donated_bytes;
             if used >= max {
                 return Some(SubmitError::QuotaExceeded {
                     tenant: tenant.to_string(),
                     reason: format!("transfer budget exhausted ({used} of {max} bytes moved)"),
+                });
+            }
+        }
+        if let Some((win_flops, win_bytes, window)) = quota.per_window {
+            let now = Instant::now();
+            let mut windows = lock(&self.shared.windows);
+            let w = windows.entry(tenant.to_string()).or_insert_with(|| WindowState {
+                started: now,
+                flops_at_start: t.flops,
+                bytes_at_start: used,
+            });
+            if now.duration_since(w.started) >= window {
+                // Rollover: a fresh window opens now, with the tenant's
+                // current totals as its baseline.
+                *w = WindowState { started: now, flops_at_start: t.flops, bytes_at_start: used };
+            }
+            let spent_flops = t.flops.saturating_sub(w.flops_at_start);
+            let spent_bytes = used.saturating_sub(w.bytes_at_start);
+            if spent_flops >= win_flops || spent_bytes >= win_bytes {
+                return Some(SubmitError::RateLimited {
+                    tenant: tenant.to_string(),
+                    retry_after: window.saturating_sub(now.duration_since(w.started)),
                 });
             }
         }
@@ -1031,9 +1096,12 @@ impl<R: 'static> RunQueue<R> {
     }
 
     /// Install (or replace) a tenant's admission budget; see
-    /// [`TenantQuota`].
+    /// [`TenantQuota`]. Replacing a quota also discards the tenant's open
+    /// rate window — the next admission opens a fresh one baselined at
+    /// the tenant's current totals.
     pub fn set_quota(&self, tenant: &str, quota: TenantQuota) {
         lock(&self.shared.quotas).insert(tenant.to_string(), quota);
+        lock(&self.shared.windows).remove(tenant);
     }
 
     /// Fair-share time-slicing for park-aware training runs
@@ -2276,7 +2344,10 @@ mod tests {
     #[test]
     fn zero_quota_rejects_submissions_at_admission() {
         let q: RunQueue<usize> = RunQueue::new(1);
-        q.set_quota("greedy", TenantQuota { max_flops: Some(0), max_bytes: None });
+        q.set_quota(
+            "greedy",
+            TenantQuota { max_flops: Some(0), max_bytes: None, per_window: None },
+        );
         match q.submit("greedy", 0, |_| Ok(1usize)) {
             Err(SubmitError::QuotaExceeded { tenant, reason }) => {
                 assert_eq!(tenant, "greedy");
@@ -2287,11 +2358,100 @@ mod tests {
         // a tenant with headroom (or no quota) is unaffected
         q.set_quota(
             "frugal",
-            TenantQuota { max_flops: Some(1_000_000), max_bytes: Some(1 << 30) },
+            TenantQuota { max_flops: Some(1_000_000), max_bytes: Some(1 << 30), per_window: None },
         );
         let h = q.submit("frugal", 0, |_| Ok(2usize)).unwrap();
         assert_eq!(h.join().unwrap().done(), Some(2));
         assert_eq!(q.tenant("greedy").submitted, 0, "rejected at admission, never counted");
+    }
+
+    #[test]
+    fn rate_window_rejects_once_spent_and_reports_retry_after() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        // 60s window: cannot roll over mid-test, so the rejection below is
+        // deterministic regardless of scheduler jitter.
+        q.set_quota(
+            "bursty",
+            TenantQuota {
+                max_flops: None,
+                max_bytes: None,
+                per_window: Some((10_000, u64::MAX, Duration::from_secs(60))),
+            },
+        );
+        // First admission opens the window, baselined at current totals.
+        let h = q.submit("bursty", 0, |_| Ok(1usize)).unwrap();
+        assert_eq!(h.join().unwrap().done(), Some(1));
+        // Spend the window's FLOP budget.
+        lock(&q.shared.tenants).entry("bursty".into()).or_default().flops = 50_000;
+        match q.submit("bursty", 0, |_| Ok(2usize)) {
+            Err(SubmitError::RateLimited { tenant, retry_after }) => {
+                assert_eq!(tenant, "bursty");
+                assert!(retry_after <= Duration::from_secs(60), "{retry_after:?}");
+                assert!(retry_after > Duration::from_secs(30), "{retry_after:?}");
+            }
+            Ok(_) => panic!("spent window must rate-limit, not admit"),
+            Err(other) => panic!("spent window must rate-limit, got {other}"),
+        }
+        // Another tenant is unaffected.
+        let h = q.submit("steady", 0, |_| Ok(3usize)).unwrap();
+        assert_eq!(h.join().unwrap().done(), Some(3));
+        // Reconfiguring the quota discards the open window: the next
+        // admission re-baselines at the already-spent totals and admits.
+        q.set_quota(
+            "bursty",
+            TenantQuota {
+                max_flops: None,
+                max_bytes: None,
+                per_window: Some((10_000, u64::MAX, Duration::from_secs(60))),
+            },
+        );
+        let h = q.submit("bursty", 0, |_| Ok(4usize)).unwrap();
+        assert_eq!(h.join().unwrap().done(), Some(4));
+    }
+
+    #[test]
+    fn rate_window_rolls_over_and_readmits() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        q.set_quota(
+            "bursty",
+            TenantQuota {
+                max_flops: None,
+                max_bytes: None,
+                per_window: Some((10_000, u64::MAX, Duration::from_millis(30))),
+            },
+        );
+        let h = q.submit("bursty", 0, |_| Ok(1usize)).unwrap();
+        assert_eq!(h.join().unwrap().done(), Some(1));
+        lock(&q.shared.tenants).entry("bursty".into()).or_default().flops = 50_000;
+        assert!(
+            matches!(q.submit("bursty", 0, |_| Ok(2usize)), Err(SubmitError::RateLimited { .. })),
+            "spent window must rate-limit before rollover"
+        );
+        // Sleep past the window: elapsed >= 30ms is guaranteed, so the next
+        // admission rolls the window over (baseline := current totals).
+        std::thread::sleep(Duration::from_millis(50));
+        let h = q.submit("bursty", 0, |_| Ok(3usize)).unwrap();
+        assert_eq!(h.join().unwrap().done(), Some(3));
+    }
+
+    #[test]
+    fn zero_width_rate_window_rejects_the_first_submission() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        q.set_quota(
+            "never",
+            TenantQuota {
+                max_flops: None,
+                max_bytes: None,
+                per_window: Some((0, 0, Duration::from_secs(60))),
+            },
+        );
+        // The very first admission opens a window with zero spend — and
+        // zero spend already meets a zero budget.
+        assert!(matches!(
+            q.submit("never", 0, |_| Ok(1usize)),
+            Err(SubmitError::RateLimited { .. })
+        ));
+        assert_eq!(q.tenant("never").submitted, 0);
     }
 
     #[test]

@@ -1,0 +1,913 @@
+//! Cross-host grid sharding: a versioned manifest-of-runs, deterministic
+//! shard assignment, content-hash lockfiles, and a streaming report merge.
+//!
+//! The paper's grid (models × tasks × FF on/off) is embarrassingly
+//! parallel *across hosts*, not just across threads: each cell is an
+//! independent training run. This module turns one grid into N shards that
+//! different containers can execute independently and then fold back into
+//! the canonical single-host report **byte-for-byte**:
+//!
+//! 1. `experiment --emit-manifest F` writes a [`GridManifest`] (one
+//!    [`CellSpec`] per run) plus a [`GridLock`] pinning every artifact's
+//!    canonical content hash (`docs/artifact-store.md`).
+//! 2. `experiment --manifest F --shard i/N` runs the round-robin slice
+//!    `index % N == i-1` ([`GridManifest::shard_cells`] — the union over
+//!    shards is exactly the unsharded grid) and writes
+//!    `reports/shard-i-of-N/grid-<name>.json`.
+//! 3. `experiment --merge dir...` splices the per-shard rows back together
+//!    ([`merge_shards`]) via the zero-alloc streaming reader
+//!    (`crate::util::json_reader`): row bytes are copied verbatim, never
+//!    deserialized into an owned tree, so the merged report is
+//!    byte-identical to what one host running the whole grid writes.
+//!
+//! Byte-identity holds because (a) every report — unsharded, per-shard,
+//! merged — goes through the same hand-rolled [`write_grid_report`], (b)
+//! rows contain only deterministic fields (losses, step/FLOP/transfer
+//! counts; never wall-clock), and (c) runs themselves are bit-identical at
+//! any `--jobs` level (module docs of [`crate::sched`]).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{presets, TrainConfig};
+use crate::model::tensor::Tensor;
+use crate::runtime::Runtime;
+use crate::sched::{ArtifactCache, RunOutput, RunSpec, WorkerPool};
+use crate::store::{ArtifactStore, StoreSnapshot};
+use crate::train::pretrain::ensure_pretrained_via;
+use crate::train::trainer::StopRule;
+use crate::util::json::Json;
+use crate::util::json_reader::{scan, Event};
+
+/// Version of both the grid manifest and the grid report headers. Readers
+/// accept anything ≤ this and reject newer files loudly (no silent
+/// misinterpretation across heterogenous hosts).
+pub const GRID_FORMAT_VERSION: usize = 1;
+
+/// One grid cell: a fully-specified training run plus its stable position
+/// in the grid. `index` is the sharding and merge key — it must be unique
+/// and dense (`0..cells.len()`) within a manifest.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub index: usize,
+    pub label: String,
+    pub cfg: TrainConfig,
+}
+
+impl CellSpec {
+    /// Flat JSON row. Only the fields that vary across a grid are
+    /// serialized; everything else re-derives from the task presets on
+    /// load, so manifests stay small and old manifests keep working when
+    /// `TrainConfig` grows fields.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("artifact", self.cfg.artifact.as_str())
+            .set("ff", self.cfg.ff.enabled)
+            .set("global_batch", self.cfg.global_batch)
+            .set("index", self.index)
+            .set("label", self.label.as_str())
+            .set("lr", self.cfg.lr as f64)
+            .set("seed", self.cfg.seed as i64)
+            .set("steps", self.cfg.max_steps)
+            .set("task", self.cfg.task.as_str())
+            .set("test_examples", self.cfg.test_examples)
+            .set("train_examples", self.cfg.train_examples)
+    }
+
+    /// Parse one cell, defaulting every absent knob from the task preset
+    /// ([`presets::train_config`]) and ignoring unknown fields.
+    pub fn from_json(j: &Json) -> Result<CellSpec> {
+        let artifact =
+            j.get("artifact").as_str().ok_or_else(|| anyhow!("cell missing 'artifact'"))?;
+        let task = j.get("task").as_str().ok_or_else(|| anyhow!("cell missing 'task'"))?;
+        let index = j.get("index").as_usize().ok_or_else(|| anyhow!("cell missing 'index'"))?;
+        let mut cfg = presets::train_config(artifact, task, 1)?;
+        if let Some(v) = j.get("lr").as_f64() {
+            cfg.lr = v as f32;
+        }
+        if let Some(v) = j.get("global_batch").as_usize() {
+            cfg.global_batch = v;
+        }
+        if let Some(v) = j.get("steps").as_usize() {
+            cfg.max_steps = v;
+        }
+        if let Some(v) = j.get("seed").as_i64() {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = j.get("train_examples").as_usize() {
+            cfg.train_examples = v;
+        }
+        if let Some(v) = j.get("test_examples").as_usize() {
+            cfg.test_examples = v;
+        }
+        if let Some(v) = j.get("ff").as_bool() {
+            cfg.ff.enabled = v;
+        }
+        let label =
+            j.get("label").as_str().map(str::to_string).unwrap_or_else(|| format!("cell{index}"));
+        Ok(CellSpec { index, label, cfg })
+    }
+}
+
+/// A versioned manifest-of-runs: the unit every shard agrees on. Emit once
+/// (`--emit-manifest`), copy to every host, run slices against it.
+#[derive(Debug, Clone)]
+pub struct GridManifest {
+    pub name: String,
+    pub cells: Vec<CellSpec>,
+}
+
+impl GridManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("cells", Json::Arr(self.cells.iter().map(CellSpec::to_json).collect()))
+            .set("format_version", GRID_FORMAT_VERSION)
+            .set("name", self.name.as_str())
+    }
+
+    /// Parse a manifest: unknown fields are ignored (forward-tolerant),
+    /// a `format_version` newer than this build is rejected loudly.
+    pub fn parse(text: &str) -> Result<GridManifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("grid manifest: {e}"))?;
+        let version = match j.get("format_version") {
+            Json::Null => 1, // pre-versioned files default to v1
+            v => v.as_usize().ok_or_else(|| anyhow!("grid manifest: bad format_version"))?,
+        };
+        if version > GRID_FORMAT_VERSION {
+            bail!(
+                "grid manifest is format_version {version}, this build reads \
+                 ≤ {GRID_FORMAT_VERSION} — update the binary or re-emit the manifest"
+            );
+        }
+        let name = j.get("name").as_str().unwrap_or("grid").to_string();
+        let cells = j
+            .get("cells")
+            .as_arr()
+            .ok_or_else(|| anyhow!("grid manifest: missing 'cells' array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, c)| CellSpec::from_json(c).with_context(|| format!("cell #{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(GridManifest { name, cells })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, format!("{}\n", self.to_json().to_string_pretty()).as_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<GridManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading grid manifest {}", path.display()))?;
+        GridManifest::parse(&text).with_context(|| path.display().to_string())
+    }
+
+    /// Deterministic round-robin shard assignment: shard `i` of `n`
+    /// (1-based) owns every cell with `index % n == i - 1`. The union over
+    /// all shards is exactly the full grid and shards are pairwise
+    /// disjoint, at any `n` (asserted by tests below and the CI selftest).
+    pub fn shard_cells(&self, shard: Option<(usize, usize)>) -> Vec<&CellSpec> {
+        match shard {
+            None => self.cells.iter().collect(),
+            Some((i, n)) => self.cells.iter().filter(|c| c.index % n == i - 1).collect(),
+        }
+    }
+
+    /// Every distinct artifact key the grid touches (lockfile domain).
+    pub fn artifact_keys(&self) -> BTreeSet<String> {
+        self.cells.iter().map(|c| c.cfg.artifact.clone()).collect()
+    }
+}
+
+/// Parse a `--shard i/N` argument (1-based, `1 ≤ i ≤ N`).
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let (i, n) = s.split_once('/').ok_or_else(|| anyhow!("--shard wants i/N, e.g. 1/2"))?;
+    let i: usize = i.trim().parse().with_context(|| format!("--shard {s}"))?;
+    let n: usize = n.trim().parse().with_context(|| format!("--shard {s}"))?;
+    if n == 0 || i == 0 || i > n {
+        bail!("--shard {s}: want 1 ≤ i ≤ N");
+    }
+    Ok((i, n))
+}
+
+/// Lockfile pinning every artifact the grid uses to its canonical content
+/// hash (`docs/artifact-store.md` §Lockfile). Every shard verifies its
+/// local (or store-materialized) artifacts against these pins and fails
+/// fast on any mismatch — a grid never mixes rebuilt programs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GridLock {
+    /// Artifact key → 64-hex canonical content hash.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl GridLock {
+    /// Hash every artifact the manifest references out of the local
+    /// artifacts root (verifying each dir's recorded stamp on the way).
+    pub fn emit(manifest: &GridManifest, artifacts_root: &Path) -> Result<GridLock> {
+        let mut artifacts = BTreeMap::new();
+        for key in manifest.artifact_keys() {
+            let dir = artifacts_root.join(&key);
+            let hash = crate::store::verify_local_artifact(&dir, &key, None)
+                .with_context(|| format!("locking artifact '{key}'"))?;
+            artifacts.insert(key, hash);
+        }
+        Ok(GridLock { artifacts })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pins = self
+            .artifacts
+            .iter()
+            .fold(Json::obj(), |j, (k, v)| j.set(k, v.as_str()));
+        Json::obj().set("artifacts", pins).set("format_version", GRID_FORMAT_VERSION)
+    }
+
+    pub fn parse(text: &str) -> Result<GridLock> {
+        let j = Json::parse(text).map_err(|e| anyhow!("grid lockfile: {e}"))?;
+        let pins = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("grid lockfile: missing 'artifacts' object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in pins {
+            let hash =
+                v.as_str().ok_or_else(|| anyhow!("grid lockfile: pin for '{k}' is not a string"))?;
+            artifacts.insert(k.clone(), hash.to_string());
+        }
+        Ok(GridLock { artifacts })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, format!("{}\n", self.to_json().to_string_pretty()).as_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<GridLock> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading grid lockfile {}", path.display()))?;
+        GridLock::parse(&text).with_context(|| path.display().to_string())
+    }
+
+    /// Conventional lockfile location: `<manifest>.lock` next to the
+    /// manifest itself.
+    pub fn lock_path(manifest_path: &Path) -> PathBuf {
+        let mut os = manifest_path.as_os_str().to_os_string();
+        os.push(".lock");
+        PathBuf::from(os)
+    }
+
+    /// Install every pin into an [`ArtifactCache`]: first load of each key
+    /// verifies the local/materialized dir hashes to exactly the pin.
+    pub fn apply(&self, cache: &ArtifactCache) {
+        for (key, hash) in &self.artifacts {
+            cache.pin(key, hash);
+        }
+    }
+}
+
+/// What one `run_grid` call produced.
+pub struct GridRunOutcome {
+    pub report_path: PathBuf,
+    pub cells_run: usize,
+    /// Store-traffic window over the whole grid slice (artifact loads, W0
+    /// publishes/fetches), `None` without a store. The CI shard selftest
+    /// asserts a warm second shard shows zero misses/builds/ingests here.
+    pub store: Option<StoreSnapshot>,
+}
+
+/// Canonical report file name for a grid (same in shard dirs and merged).
+pub fn report_file_name(name: &str) -> String {
+    format!("grid-{name}.json")
+}
+
+/// Directory a shard's report lands in: `reports/shard-<i>-of-<n>/`.
+pub fn shard_dir(reports_dir: &Path, shard: (usize, usize)) -> PathBuf {
+    reports_dir.join(format!("shard-{}-of-{}", shard.0, shard.1))
+}
+
+/// The model a grid artifact key belongs to (keys are
+/// `<model>_<mode>[...]` and model names never contain `_`).
+fn model_of(artifact: &str) -> &str {
+    artifact.split('_').next().unwrap_or(artifact)
+}
+
+/// Execute one slice of a grid manifest and write its report.
+///
+/// With `store`, artifact and W0 resolution go through the
+/// content-addressed store ([`ArtifactCache::with_store`],
+/// [`ensure_pretrained_via`]): local builds are published, local misses
+/// materialize from the store — a warm second host runs the grid with
+/// zero compiles and zero W0 rebuilds. With `lock`, every artifact is
+/// pinned to its locked content hash and mismatches fail fast.
+#[allow(clippy::too_many_arguments)]
+pub fn run_grid(
+    rt: &Arc<Runtime>,
+    artifacts_root: &Path,
+    store: Option<Arc<ArtifactStore>>,
+    manifest: &GridManifest,
+    lock: Option<&GridLock>,
+    shard: Option<(usize, usize)>,
+    reports_dir: &Path,
+    jobs: usize,
+) -> Result<GridRunOutcome> {
+    let cache = match store {
+        Some(s) => ArtifactCache::with_store(artifacts_root.to_path_buf(), s),
+        None => ArtifactCache::new(artifacts_root.to_path_buf()),
+    };
+    if let Some(lock) = lock {
+        lock.apply(&cache);
+    }
+    let store0 = cache.store().map(|s| s.stats.snapshot());
+
+    let cells = manifest.shard_cells(shard);
+    let slice = match shard {
+        Some((i, n)) => format!("shard {i}/{n}"),
+        None => "unsharded".to_string(),
+    };
+    crate::info!(
+        "grid '{}': {} → {} of {} cells",
+        manifest.name,
+        slice,
+        cells.len(),
+        manifest.cells.len()
+    );
+
+    // One shared W0 per distinct model in this slice (the paper's runs all
+    // start from the same pretrained point; see train::pretrain).
+    let mut bases: BTreeMap<String, Arc<BTreeMap<String, Tensor>>> = BTreeMap::new();
+    for cell in &cells {
+        let model = model_of(&cell.cfg.artifact).to_string();
+        if !bases.contains_key(&model) {
+            let w0 = ensure_pretrained_via(
+                rt,
+                artifacts_root,
+                &model,
+                None,
+                cache.store().map(|s| s.as_ref()),
+            )?;
+            bases.insert(model, Arc::new(w0));
+        }
+    }
+
+    let specs: Vec<RunSpec> = cells
+        .iter()
+        .map(|c| RunSpec {
+            label: c.label.clone(),
+            cfg: c.cfg.clone(),
+            stop: StopRule::MaxSteps(c.cfg.max_steps),
+            base: Some(Arc::clone(&bases[model_of(&c.cfg.artifact)])),
+            drain_interval: None,
+        })
+        .collect();
+    let run = WorkerPool::new(jobs).run_all(rt, &cache, specs)?;
+
+    let rows: Vec<String> =
+        cells.iter().zip(run.outputs.iter()).map(|(c, o)| row_json(c, o)).collect();
+    let (dir, shard_header) = match shard {
+        Some((i, n)) => (shard_dir(reports_dir, (i, n)), Some((i, n, manifest.cells.len()))),
+        None => (reports_dir.to_path_buf(), None),
+    };
+    let report_path = dir.join(report_file_name(&manifest.name));
+    write_grid_report(&report_path, &manifest.name, shard_header, &rows)?;
+
+    let store_delta = match (store0, cache.store()) {
+        (Some(before), Some(s)) => {
+            let delta = s.stats.snapshot().since(&before);
+            crate::info!("grid '{}' store traffic: {}", manifest.name, delta.report());
+            Some(delta)
+        }
+        _ => None,
+    };
+    Ok(GridRunOutcome { report_path, cells_run: cells.len(), store: store_delta })
+}
+
+/// One report row: **deterministic fields only** (no wall-clock), compact
+/// single-line JSON with sorted keys — the byte-identity unit the shard
+/// merge splices verbatim.
+fn row_json(cell: &CellSpec, out: &RunOutput) -> String {
+    let t = &out.summary.transfers;
+    Json::obj()
+        .set("adam_steps", out.summary.adam_steps)
+        .set("final_loss", out.summary.final_test_loss as f64)
+        .set("flops", out.summary.flops.total() as i64)
+        .set("index", cell.index)
+        .set("label", cell.label.as_str())
+        .set("sim_steps", out.summary.sim_steps)
+        .set(
+            "transfer_bytes",
+            (t.uploaded_bytes + t.downloaded_bytes + t.donated_bytes) as i64,
+        )
+        .to_string()
+}
+
+/// The one writer every grid report goes through — unsharded, per-shard,
+/// and merged reports all serialize here, which is what makes "merge ==
+/// unsharded" a byte-for-byte identity rather than a semantic one. Rows
+/// are pre-serialized single-line JSON strings, spliced in as-is.
+pub fn write_grid_report(
+    path: &Path,
+    name: &str,
+    shard: Option<(usize, usize, usize)>,
+    rows: &[String],
+) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n \"cells\": [");
+    for (i, row) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("\n  ");
+        out.push_str(row);
+    }
+    if !rows.is_empty() {
+        out.push_str("\n ");
+    }
+    out.push_str("],\n \"format_version\": ");
+    out.push_str(&GRID_FORMAT_VERSION.to_string());
+    out.push_str(",\n \"name\": ");
+    out.push_str(&Json::Str(name.to_string()).to_string());
+    if let Some((i, n, total)) = shard {
+        out.push_str(&format!(
+            ",\n \"shard\": {{\"cells_total\":{total},\"index\":{i},\"of\":{n}}}"
+        ));
+    }
+    out.push_str("\n}\n");
+    atomic_write(path, out.as_bytes())
+}
+
+/// What the streaming pass recovers from one report file: identity, the
+/// shard header, and each cell row as an exact byte span into the source.
+struct ReportScan {
+    name: String,
+    /// `(shard index, of, cells_total)` — `None` for an unsharded report.
+    shard: Option<(usize, usize, usize)>,
+    /// `(cell index, byte span of the row object)` in file order.
+    rows: Vec<(usize, Range<usize>)>,
+}
+
+/// Single streaming pass over a grid report using the callback lexer
+/// (`crate::util::json_reader`): no owned value tree, no per-row
+/// allocation — just depth tracking and span capture.
+fn scan_report(src: &str, what: &str) -> Result<ReportScan> {
+    let mut depth = 0usize;
+    let mut top_key: Option<&str> = None;
+    let mut in_cells = false;
+    let mut row_start: Option<usize> = None;
+    let mut row_key: Option<&str> = None;
+    let mut row_index: Option<usize> = None;
+    let mut rows: Vec<(usize, Range<usize>)> = Vec::new();
+    let mut in_shard = false;
+    let mut shard_key: Option<&str> = None;
+    let mut shard_vals: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut name: Option<String> = None;
+    let mut version: Option<usize> = None;
+    let mut bad: Option<String> = None;
+
+    scan(src, &mut |off, ev| match ev {
+        Event::Key(k) => {
+            if depth == 1 {
+                top_key = Some(k);
+            } else if depth == 3 && in_cells {
+                row_key = Some(k);
+            } else if depth == 2 && in_shard {
+                shard_key = Some(k);
+            }
+        }
+        Event::ObjectStart => {
+            if depth == 2 && in_cells {
+                row_start = Some(off);
+                row_index = None;
+            } else if depth == 1 && top_key == Some("shard") {
+                in_shard = true;
+            }
+            depth += 1;
+        }
+        Event::ArrayStart => {
+            if depth == 1 && top_key == Some("cells") {
+                in_cells = true;
+            }
+            depth += 1;
+        }
+        Event::ObjectEnd => {
+            depth -= 1;
+            if depth == 2 && in_cells {
+                match (row_start.take(), row_index.take()) {
+                    (Some(start), Some(idx)) => rows.push((idx, start..off + 1)),
+                    _ => {
+                        bad.get_or_insert_with(|| "cell row has no 'index'".to_string());
+                    }
+                }
+            } else if depth == 1 && in_shard {
+                in_shard = false;
+            }
+        }
+        Event::ArrayEnd => {
+            depth -= 1;
+            if depth == 1 && in_cells {
+                in_cells = false;
+            }
+        }
+        Event::Num(s) => {
+            if depth == 3 && in_cells && row_key == Some("index") {
+                match s.parse::<usize>() {
+                    Ok(v) => row_index = Some(v),
+                    Err(_) => {
+                        bad.get_or_insert_with(|| format!("bad cell index '{s}'"));
+                    }
+                }
+            } else if depth == 2 && in_shard {
+                if let (Some(k), Ok(v)) = (shard_key, s.parse::<usize>()) {
+                    shard_vals.insert(k, v);
+                }
+            } else if depth == 1 && top_key == Some("format_version") {
+                version = s.parse::<usize>().ok();
+            }
+        }
+        Event::Str(s) => {
+            if depth == 1 && top_key == Some("name") {
+                // Raw (undecoded) span: re-wrap the original quotes and
+                // decode through the tree parser — one tiny string, not
+                // the whole file.
+                name = Json::parse(&format!("\"{s}\""))
+                    .ok()
+                    .and_then(|j| j.as_str().map(str::to_string));
+            }
+        }
+        _ => {}
+    })
+    .map_err(|e| anyhow!("{what}: {e}"))?;
+
+    if let Some(msg) = bad {
+        bail!("{what}: {msg}");
+    }
+    let name = name.ok_or_else(|| anyhow!("{what}: report has no 'name'"))?;
+    let version = version.ok_or_else(|| anyhow!("{what}: report has no 'format_version'"))?;
+    if version > GRID_FORMAT_VERSION {
+        bail!(
+            "{what}: report is format_version {version}, this build reads \
+             ≤ {GRID_FORMAT_VERSION}"
+        );
+    }
+    let shard = match (
+        shard_vals.get("index").copied(),
+        shard_vals.get("of").copied(),
+        shard_vals.get("cells_total").copied(),
+    ) {
+        (Some(i), Some(n), Some(t)) => Some((i, n, t)),
+        (None, None, None) => None,
+        _ => bail!("{what}: incomplete 'shard' header"),
+    };
+    Ok(ReportScan { name, shard, rows })
+}
+
+/// The single `grid-*.json` report inside one shard directory.
+pub fn shard_report_file(dir: &Path) -> Result<PathBuf> {
+    let mut found = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("reading shard dir {}", dir.display()))?
+    {
+        let p = entry?.path();
+        let is_report = p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.starts_with("grid-") && n.ends_with(".json"))
+            .unwrap_or(false);
+        if is_report {
+            found.push(p);
+        }
+    }
+    found.sort();
+    match found.len() {
+        1 => Ok(found.remove(0)),
+        0 => bail!("{}: no grid-*.json shard report", dir.display()),
+        _ => bail!("{}: multiple grid reports: {found:?}", dir.display()),
+    }
+}
+
+/// Fold per-shard reports back into the canonical single-host report.
+///
+/// Validates that every file belongs to the same grid (name + shard
+/// header agreement), that no shard or cell index repeats, and that the
+/// union covers exactly `0..cells_total` — then reassembles the rows in
+/// index order through [`write_grid_report`]. Row bytes are spliced
+/// verbatim from each source file (spans from the streaming reader), so
+/// the output is byte-identical to an unsharded run's report.
+pub fn merge_shards(files: &[PathBuf], out_dir: &Path) -> Result<PathBuf> {
+    if files.is_empty() {
+        bail!("merge: no shard reports given");
+    }
+    let mut name: Option<String> = None;
+    let mut header: Option<(usize, usize)> = None; // (of, cells_total)
+    let mut seen_shards: BTreeSet<usize> = BTreeSet::new();
+    let mut rows: BTreeMap<usize, String> = BTreeMap::new();
+    for path in files {
+        let what = path.display().to_string();
+        let src =
+            std::fs::read_to_string(path).with_context(|| format!("reading {what}"))?;
+        let rep = scan_report(&src, &what)?;
+        let (i, n, total) = rep
+            .shard
+            .ok_or_else(|| anyhow!("{what}: not a shard report (no 'shard' header)"))?;
+        match &name {
+            None => name = Some(rep.name.clone()),
+            Some(prev) if *prev != rep.name => {
+                bail!("{what}: grid name '{}' does not match '{prev}'", rep.name)
+            }
+            _ => {}
+        }
+        match header {
+            None => header = Some((n, total)),
+            Some((pn, pt)) if (pn, pt) != (n, total) => bail!(
+                "{what}: shard header says {n} shards / {total} cells, \
+                 earlier files said {pn} / {pt}"
+            ),
+            _ => {}
+        }
+        if !seen_shards.insert(i) {
+            bail!("{what}: shard {i} appears twice in the merge set");
+        }
+        for (idx, span) in rep.rows {
+            let row = src[span].to_string();
+            if rows.insert(idx, row).is_some() {
+                bail!("{what}: duplicate cell index {idx}");
+            }
+        }
+    }
+    let name = name.expect("files is non-empty");
+    let (_, total) = header.expect("files is non-empty");
+    for i in 0..total {
+        if !rows.contains_key(&i) {
+            bail!("merge: cell index {i} is missing ({} of {total} rows present)", rows.len());
+        }
+    }
+    if rows.len() != total {
+        bail!("merge: {} rows but the grid has {total} cells", rows.len());
+    }
+    let ordered: Vec<String> = rows.into_values().collect();
+    let out_path = out_dir.join(report_file_name(&name));
+    write_grid_report(&out_path, &name, None, &ordered)?;
+    Ok(out_path)
+}
+
+/// Temp-then-rename write (same contract as the store's object writes):
+/// a crashed process leaves a stray `.tmp.<pid>`, never a torn report.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ff-shard-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn demo_manifest(n: usize) -> GridManifest {
+        let cells = (0..n)
+            .map(|i| {
+                let task = ["medical", "instruct", "chat"][i % 3];
+                let mut cfg =
+                    presets::train_config("ff-tiny_lora_r8", task, 1).unwrap();
+                cfg.max_steps = 3 + i;
+                cfg.ff.enabled = i % 2 == 0;
+                CellSpec { index: i, label: format!("c{i}/{task}"), cfg }
+            })
+            .collect();
+        GridManifest { name: "demo".into(), cells }
+    }
+
+    fn demo_rows(n: usize) -> Vec<String> {
+        (0..n)
+            .map(|i| {
+                Json::obj()
+                    .set("adam_steps", 3 + i)
+                    .set("final_loss", 0.5 + i as f64 * 0.25)
+                    .set("index", i)
+                    .set("label", format!("c{i}"))
+                    .to_string()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let m = demo_manifest(6);
+        let text = m.to_json().to_string_pretty();
+        let back = GridManifest::parse(&text).unwrap();
+        assert_eq!(back.name, m.name);
+        assert_eq!(back.cells.len(), m.cells.len());
+        for (a, b) in m.cells.iter().zip(back.cells.iter()) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.cfg.artifact, b.cfg.artifact);
+            assert_eq!(a.cfg.task, b.cfg.task);
+            assert_eq!(a.cfg.max_steps, b.cfg.max_steps);
+            assert_eq!(a.cfg.seed, b.cfg.seed);
+            assert_eq!(a.cfg.lr.to_bits(), b.cfg.lr.to_bits());
+            assert_eq!(a.cfg.global_batch, b.cfg.global_batch);
+            assert_eq!(a.cfg.train_examples, b.cfg.train_examples);
+            assert_eq!(a.cfg.test_examples, b.cfg.test_examples);
+            assert_eq!(a.cfg.ff.enabled, b.cfg.ff.enabled);
+        }
+    }
+
+    #[test]
+    fn manifest_tolerates_unknown_fields_and_defaults_absent_ones() {
+        // A future emitter added fields; a minimal cell omits every knob.
+        let text = r#"{
+            "format_version": 1,
+            "name": "fwd",
+            "future_top_level_knob": {"x": 1},
+            "cells": [
+                {"artifact": "ff-tiny_lora_r8", "task": "medical",
+                 "index": 0, "some_future_field": [1, 2, 3]}
+            ]
+        }"#;
+        let m = GridManifest::parse(text).unwrap();
+        assert_eq!(m.cells.len(), 1);
+        let want = presets::train_config("ff-tiny_lora_r8", "medical", 1).unwrap();
+        let got = &m.cells[0].cfg;
+        assert_eq!(got.max_steps, want.max_steps);
+        assert_eq!(got.lr.to_bits(), want.lr.to_bits());
+        assert_eq!(got.global_batch, want.global_batch);
+        assert_eq!(got.seed, want.seed);
+        assert!(got.ff.enabled, "ff defaults on");
+        assert_eq!(m.cells[0].label, "cell0", "label defaults from the index");
+    }
+
+    #[test]
+    fn manifest_rejects_newer_format_versions() {
+        let text = r#"{"format_version": 2, "name": "x", "cells": []}"#;
+        let err = GridManifest::parse(text).unwrap_err().to_string();
+        assert!(err.contains("format_version 2"), "{err}");
+        // ...and a missing version defaults to 1 (pre-versioned files).
+        let ok = GridManifest::parse(r#"{"name": "x", "cells": []}"#).unwrap();
+        assert!(ok.cells.is_empty());
+    }
+
+    #[test]
+    fn manifest_requires_cell_identity_fields() {
+        let missing_artifact =
+            r#"{"name": "x", "cells": [{"task": "medical", "index": 0}]}"#;
+        assert!(GridManifest::parse(missing_artifact).is_err());
+        let missing_index =
+            r#"{"name": "x", "cells": [{"artifact": "ff-tiny_lora_r8", "task": "medical"}]}"#;
+        assert!(GridManifest::parse(missing_index).is_err());
+    }
+
+    #[test]
+    fn shard_parse_accepts_only_sane_slices() {
+        assert_eq!(parse_shard("1/2").unwrap(), (1, 2));
+        assert_eq!(parse_shard("4/4").unwrap(), (4, 4));
+        for bad in ["0/2", "3/2", "1/0", "x/2", "1", "1/2/3"] {
+            assert!(parse_shard(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn round_robin_union_is_the_whole_grid_and_shards_are_disjoint() {
+        let m = demo_manifest(13);
+        for n in 1..=5usize {
+            let mut seen: BTreeSet<usize> = BTreeSet::new();
+            for i in 1..=n {
+                for cell in m.shard_cells(Some((i, n))) {
+                    assert!(seen.insert(cell.index), "cell {} on two shards (n={n})", cell.index);
+                }
+            }
+            let all: BTreeSet<usize> = (0..13).collect();
+            assert_eq!(seen, all, "union over {n} shards misses cells");
+        }
+        // Unsharded == the full grid in order.
+        let all = m.shard_cells(None);
+        assert_eq!(all.len(), 13);
+        assert!(all.windows(2).all(|w| w[0].index < w[1].index));
+    }
+
+    #[test]
+    fn lockfile_round_trips_and_sits_next_to_the_manifest() {
+        let mut lock = GridLock::default();
+        lock.artifacts.insert("ff-tiny_lora_r8".into(), "ab".repeat(32));
+        lock.artifacts.insert("ff-small_lora_r8".into(), "cd".repeat(32));
+        let back = GridLock::parse(&lock.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back, lock);
+        assert_eq!(
+            GridLock::lock_path(Path::new("/x/grid.json")),
+            PathBuf::from("/x/grid.json.lock")
+        );
+    }
+
+    #[test]
+    fn grid_report_writer_emits_valid_json_even_when_empty() {
+        let d = tmpdir("writer");
+        let p = d.join("grid-demo.json");
+        write_grid_report(&p, "demo", None, &[]).unwrap();
+        let v = Json::parse(std::fs::read_to_string(&p).unwrap().trim()).unwrap();
+        assert_eq!(v.get("name").as_str(), Some("demo"));
+        assert_eq!(v.get("cells").as_arr().map(|a| a.len()), Some(0));
+        write_grid_report(&p, "demo", Some((2, 3, 9)), &demo_rows(3)).unwrap();
+        let v = Json::parse(std::fs::read_to_string(&p).unwrap().trim()).unwrap();
+        assert_eq!(v.get("shard").get("index").as_usize(), Some(2));
+        assert_eq!(v.get("shard").get("of").as_usize(), Some(3));
+        assert_eq!(v.get("shard").get("cells_total").as_usize(), Some(9));
+        assert_eq!(v.get("cells").idx(1).get("index").as_usize(), Some(1));
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn scan_report_recovers_rows_and_header() {
+        let d = tmpdir("scan");
+        let rows = demo_rows(4);
+        let p = d.join("grid-demo.json");
+        write_grid_report(&p, "demo", Some((1, 2, 8)), &rows).unwrap();
+        let src = std::fs::read_to_string(&p).unwrap();
+        let rep = scan_report(&src, "t").unwrap();
+        assert_eq!(rep.name, "demo");
+        assert_eq!(rep.shard, Some((1, 2, 8)));
+        assert_eq!(rep.rows.len(), 4);
+        for (want, (idx, span)) in rows.iter().zip(rep.rows.iter()) {
+            // The recovered span is the row's exact bytes — the property
+            // the merge's byte-identity rests on.
+            assert_eq!(&src[span.clone()], want.as_str());
+            assert!(want.contains(&format!("\"index\":{idx}")));
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn merge_reassembles_byte_identically() {
+        let d = tmpdir("merge");
+        let rows = demo_rows(7);
+        // Reference: what one host running the whole grid writes.
+        let whole = d.join("whole");
+        write_grid_report(&whole.join("grid-demo.json"), "demo", None, &rows).unwrap();
+        // Two shards, round-robin split, each through the same writer.
+        let mut files = Vec::new();
+        for i in 1..=2usize {
+            let mine: Vec<String> =
+                rows.iter().enumerate().filter(|(k, _)| k % 2 == i - 1).map(|(_, r)| r.clone()).collect();
+            let dir = shard_dir(&d, (i, 2));
+            write_grid_report(
+                &dir.join("grid-demo.json"),
+                "demo",
+                Some((i, 2, rows.len())),
+                &mine,
+            )
+            .unwrap();
+            files.push(shard_report_file(&dir).unwrap());
+        }
+        let out = d.join("merged");
+        let merged = merge_shards(&files, &out).unwrap();
+        let a = std::fs::read(whole.join("grid-demo.json")).unwrap();
+        let b = std::fs::read(&merged).unwrap();
+        assert_eq!(a, b, "merged report must be byte-identical to the unsharded one");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn merge_fails_fast_on_duplicates_gaps_and_mismatches() {
+        let d = tmpdir("merge-bad");
+        let rows = demo_rows(4);
+        let write = |dir: &Path, name: &str, shard, rs: &[String]| {
+            write_grid_report(&dir.join(format!("grid-{name}.json")), name, shard, rs).unwrap();
+            dir.join(format!("grid-{name}.json"))
+        };
+        // Duplicate cell: both shards claim row 0.
+        let s1 = write(&d.join("a1"), "demo", Some((1, 2, 4)), &rows[0..2]);
+        let s2 = write(&d.join("a2"), "demo", Some((2, 2, 4)), &rows[0..2]);
+        let err = merge_shards(&[s1, s2], &d.join("out")).unwrap_err().to_string();
+        assert!(err.contains("duplicate cell index"), "{err}");
+        // Gap: only one shard of two → coverage check trips.
+        let s1 = write(&d.join("b1"), "demo", Some((1, 2, 4)), &[rows[0].clone(), rows[2].clone()]);
+        let err = merge_shards(&[s1], &d.join("out")).unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+        // Name mismatch across files.
+        let s1 = write(&d.join("c1"), "demo", Some((1, 2, 4)), &[rows[0].clone(), rows[2].clone()]);
+        let s2 = write(&d.join("c2"), "other", Some((2, 2, 4)), &[rows[1].clone(), rows[3].clone()]);
+        let err = merge_shards(&[s1, s2], &d.join("out")).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // Unsharded input: refuse (nothing to merge).
+        let s1 = write(&d.join("d1"), "demo", None, &rows);
+        let err = merge_shards(&[s1], &d.join("out")).unwrap_err().to_string();
+        assert!(err.contains("no 'shard' header"), "{err}");
+        // Same shard twice.
+        let s1 = write(&d.join("e1"), "demo", Some((1, 2, 4)), &[rows[0].clone(), rows[2].clone()]);
+        let s2 = write(&d.join("e2"), "demo", Some((1, 2, 4)), &[rows[1].clone(), rows[3].clone()]);
+        let err = merge_shards(&[s1, s2], &d.join("out")).unwrap_err().to_string();
+        assert!(err.contains("appears twice"), "{err}");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

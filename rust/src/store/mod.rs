@@ -1,0 +1,766 @@
+//! Content-addressed artifact store shared across hosts.
+//!
+//! The in-process [`ArtifactCache`](crate::sched::ArtifactCache) and W0
+//! cache (PR 4) stop at the process boundary: every host that runs a grid
+//! cell pays the full AOT-compile and pretrain cost even when an identical
+//! artifact was already built elsewhere. This module is the cross-host
+//! half: a content-addressed store (CAS) on a shared filesystem holding
+//!
+//! * **compiled AOT program bundles** — an artifact directory
+//!   (`manifest.json` + `*.hlo.txt`) packed into a single `FFAB1` blob,
+//!   keyed by the artifact's *content hash* (the canonical manifest bytes
+//!   plus every program's HLO bytes — the same recipe
+//!   `python/compile/aot.py` stamps into `manifest.json` as
+//!   `content_hash`), and
+//! * **W0 pretrain checkpoints** — raw `FFCK1` bytes keyed by their
+//!   sha256, with a small named ref pointing at the current blob.
+//!
+//! Layout (`docs/artifact-store.md` has the full contract):
+//!
+//! ```text
+//! store/<hh>/<sha256>         object blobs, hh = first two hex chars
+//! store/refs/<name>           name -> hash pointers (artifact/<key>, w0/<model>-<steps>)
+//! store/quarantine/<hash>.<pid>  corrupt objects, moved aside on detection
+//! ```
+//!
+//! Every read re-verifies content: a corrupt entry is *loudly* moved to
+//! `quarantine/` and reported as a miss so the caller rebuilds — never
+//! silently reused. All writes are temp-then-rename (the PR-4 checkpoint
+//! idiom), so concurrent hosts racing on the same object converge on one
+//! valid blob. Store traffic is host-disk I/O only; it never touches the
+//! device transfer meters (`docs/transfer-contract.md`).
+
+pub mod sha256;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use sha256::{sha256_hex, Sha256};
+
+/// Magic prefix of a packed artifact-bundle object.
+const BUNDLE_MAGIC: &[u8; 6] = b"FFAB1\n";
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+/// Atomic hit/miss/byte counters for one [`ArtifactStore`] (the same shape
+/// as the runtime's `TransferStats`: relaxed atomics, snapshot to read).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    artifact_hits: AtomicU64,
+    artifact_misses: AtomicU64,
+    w0_hits: AtomicU64,
+    w0_misses: AtomicU64,
+    w0_builds: AtomicU64,
+    ingests: AtomicU64,
+    quarantined: AtomicU64,
+    bytes_read: AtomicU64,
+    bytes_written: AtomicU64,
+}
+
+impl StoreStats {
+    fn bump(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StoreSnapshot {
+        StoreSnapshot {
+            artifact_hits: self.artifact_hits.load(Ordering::Relaxed),
+            artifact_misses: self.artifact_misses.load(Ordering::Relaxed),
+            w0_hits: self.w0_hits.load(Ordering::Relaxed),
+            w0_misses: self.w0_misses.load(Ordering::Relaxed),
+            w0_builds: self.w0_builds.load(Ordering::Relaxed),
+            ingests: self.ingests.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value snapshot of [`StoreStats`] (also used as a delta between two
+/// snapshots, see [`StoreSnapshot::since`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreSnapshot {
+    /// Artifact bundles resolved from the store (or already present in it
+    /// at ingest time).
+    pub artifact_hits: u64,
+    /// Artifact resolutions the store could not serve (cold ingest or a
+    /// missing/corrupt object).
+    pub artifact_misses: u64,
+    /// W0 checkpoints resolved from the store.
+    pub w0_hits: u64,
+    /// W0 resolutions the store could not serve.
+    pub w0_misses: u64,
+    /// W0 checkpoints pretrained from scratch ("rebuilds").
+    pub w0_builds: u64,
+    /// Objects published into the store from local builds.
+    pub ingests: u64,
+    /// Corrupt objects detected and moved to `quarantine/`.
+    pub quarantined: u64,
+    /// Object bytes read out of the store.
+    pub bytes_read: u64,
+    /// Object bytes written into the store.
+    pub bytes_written: u64,
+}
+
+impl StoreSnapshot {
+    /// Counter delta `self - earlier` (saturating; counters only grow).
+    pub fn since(&self, earlier: &StoreSnapshot) -> StoreSnapshot {
+        StoreSnapshot {
+            artifact_hits: self.artifact_hits.saturating_sub(earlier.artifact_hits),
+            artifact_misses: self.artifact_misses.saturating_sub(earlier.artifact_misses),
+            w0_hits: self.w0_hits.saturating_sub(earlier.w0_hits),
+            w0_misses: self.w0_misses.saturating_sub(earlier.w0_misses),
+            w0_builds: self.w0_builds.saturating_sub(earlier.w0_builds),
+            ingests: self.ingests.saturating_sub(earlier.ingests),
+            quarantined: self.quarantined.saturating_sub(earlier.quarantined),
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            bytes_written: self.bytes_written.saturating_sub(earlier.bytes_written),
+        }
+    }
+
+    /// True when every resolution in this window was served from the store:
+    /// no cold compiles, no pretrain rebuilds, no corrupt objects.
+    pub fn all_hits(&self) -> bool {
+        self.artifact_misses == 0
+            && self.w0_misses == 0
+            && self.w0_builds == 0
+            && self.ingests == 0
+            && self.quarantined == 0
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "store: artifacts {} hit / {} miss, w0 {} hit / {} miss ({} rebuilt), \
+             {} ingested, {} quarantined, {} B in / {} B out",
+            self.artifact_hits,
+            self.artifact_misses,
+            self.w0_hits,
+            self.w0_misses,
+            self.w0_builds,
+            self.ingests,
+            self.quarantined,
+            self.bytes_read,
+            self.bytes_written,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("artifact_hits", self.artifact_hits as i64)
+            .set("artifact_misses", self.artifact_misses as i64)
+            .set("w0_hits", self.w0_hits as i64)
+            .set("w0_misses", self.w0_misses as i64)
+            .set("w0_builds", self.w0_builds as i64)
+            .set("ingests", self.ingests as i64)
+            .set("quarantined", self.quarantined as i64)
+            .set("bytes_read", self.bytes_read as i64)
+            .set("bytes_written", self.bytes_written as i64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Content hashing
+// ---------------------------------------------------------------------------
+
+/// Result of hashing an artifact directory with the canonical recipe.
+#[derive(Debug, Clone)]
+pub struct ArtifactDigest {
+    /// Hash computed from the directory contents.
+    pub computed: String,
+    /// Hash recorded in `manifest.json` by the python emitter, if stamped.
+    pub recorded: Option<String>,
+    /// Program files covered by the hash, in recipe order (program-name
+    /// sorted). `manifest.json` itself is not listed.
+    pub files: Vec<String>,
+}
+
+/// Split a manifest text into its canonical (pre-stamp) bytes and the
+/// recorded hash. The python emitter appends `content_hash` as the last
+/// key of the top-level object, so a stamped manifest always ends with
+/// `,\n "content_hash": "<64 hex>"\n}` — stripping that suffix recovers
+/// exactly the bytes that were hashed. Unstamped manifests hash whole.
+fn split_recorded(manifest_text: &str) -> (String, Option<String>) {
+    const MARK: &str = ",\n \"content_hash\": \"";
+    if let Some(pos) = manifest_text.rfind(MARK) {
+        let rest = &manifest_text[pos + MARK.len()..];
+        let hex_ok = rest.len() == 64 + 3
+            && rest.ends_with("\"\n}")
+            && rest[..64].bytes().all(|b| b.is_ascii_hexdigit());
+        if hex_ok {
+            let canonical = format!("{}\n}}", &manifest_text[..pos]);
+            return (canonical, Some(rest[..64].to_string()));
+        }
+    }
+    (manifest_text.to_string(), None)
+}
+
+/// Canonical content-hash recipe, shared with `python/compile/aot.py`:
+/// sha256 over the canonical manifest bytes, then for each program file in
+/// program-name-sorted order `\0<file name>\0<file bytes>`.
+fn digest_from(
+    manifest_text: &str,
+    mut file_bytes: impl FnMut(&str) -> Result<Vec<u8>>,
+) -> Result<ArtifactDigest> {
+    let (canonical, recorded) = split_recorded(manifest_text);
+    let parsed = Json::parse(manifest_text)
+        .map_err(|e| anyhow!("manifest.json is not valid JSON: {e}"))?;
+    let programs = parsed
+        .get("programs")
+        .as_obj()
+        .context("manifest.json has no programs object")?;
+    let mut h = Sha256::new();
+    h.update(canonical.as_bytes());
+    let mut files = Vec::with_capacity(programs.len());
+    for (prog, spec) in programs {
+        let fname = spec
+            .get("file")
+            .as_str()
+            .with_context(|| format!("program '{prog}' has no file field"))?;
+        h.update(b"\0");
+        h.update(fname.as_bytes());
+        h.update(b"\0");
+        h.update(&file_bytes(fname)?);
+        files.push(fname.to_string());
+    }
+    Ok(ArtifactDigest { computed: h.hex(), recorded, files })
+}
+
+/// Hash an on-disk artifact directory with the canonical recipe.
+pub fn digest_artifact_dir(dir: &Path) -> Result<ArtifactDigest> {
+    let manifest_text = fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}", dir.join("manifest.json").display()))?;
+    digest_from(&manifest_text, |fname| {
+        fs::read(dir.join(fname)).with_context(|| format!("reading {}", dir.join(fname).display()))
+    })
+}
+
+/// Verify a local artifact directory against its own recorded hash and an
+/// optional lockfile pin, failing fast with a clear mismatch error. Returns
+/// the computed content hash.
+pub fn verify_local_artifact(dir: &Path, key: &str, pinned: Option<&str>) -> Result<String> {
+    let d = digest_artifact_dir(dir)?;
+    if let Some(rec) = &d.recorded {
+        if *rec != d.computed {
+            bail!(
+                "artifact '{key}': manifest records content_hash {rec} but the directory \
+                 hashes to {} — the artifact dir is corrupt or was edited; re-run \
+                 `make artifacts`",
+                d.computed
+            );
+        }
+    }
+    if let Some(pin) = pinned {
+        if pin != d.computed {
+            bail!(
+                "lockfile pins artifact '{key}' at {pin} but the local build hashes to {} — \
+                 refusing to run a mixed grid; rebuild artifacts on every host from the same \
+                 compile inputs or re-emit the manifest + lockfile",
+                d.computed
+            );
+        }
+    }
+    Ok(d.computed)
+}
+
+// ---------------------------------------------------------------------------
+// Bundle codec
+// ---------------------------------------------------------------------------
+
+/// Pack named files into one blob: `FFAB1\n` + u64-LE header length + a
+/// JSON header listing `{name, len}` in order + the raw file bytes
+/// concatenated in the same order.
+fn encode_bundle(files: &[(String, Vec<u8>)]) -> Vec<u8> {
+    let header = Json::Arr(
+        files
+            .iter()
+            .map(|(name, data)| {
+                Json::obj().set("len", data.len()).set("name", name.as_str())
+            })
+            .collect(),
+    );
+    let header = Json::obj().set("files", header).to_string();
+    let mut out = Vec::with_capacity(
+        BUNDLE_MAGIC.len() + 8 + header.len() + files.iter().map(|(_, d)| d.len()).sum::<usize>(),
+    );
+    out.extend_from_slice(BUNDLE_MAGIC);
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for (_, data) in files {
+        out.extend_from_slice(data);
+    }
+    out
+}
+
+fn decode_bundle(bytes: &[u8]) -> Result<Vec<(String, Vec<u8>)>> {
+    let body = bytes
+        .strip_prefix(BUNDLE_MAGIC.as_slice())
+        .context("not an FFAB1 bundle (bad magic)")?;
+    let (len_bytes, body) = body.split_at_checked(8).context("truncated bundle header")?;
+    let header_len = u64::from_le_bytes(len_bytes.try_into().unwrap()) as usize;
+    let (header, mut data) = body
+        .split_at_checked(header_len)
+        .context("truncated bundle header")?;
+    let header = std::str::from_utf8(header).context("bundle header is not utf-8")?;
+    let header = Json::parse(header).map_err(|e| anyhow!("bundle header: {e}"))?;
+    let entries = header.get("files").as_arr().context("bundle header has no files")?;
+    let mut out = Vec::with_capacity(entries.len());
+    for entry in entries {
+        let name = entry.get("name").as_str().context("bundle entry has no name")?;
+        if name.contains('/') || name.contains('\\') || name.contains("..") || name.is_empty() {
+            bail!("bundle entry has unsafe file name {name:?}");
+        }
+        let len = entry.get("len").as_usize().context("bundle entry has no len")?;
+        let (file, rest) = data.split_at_checked(len).context("truncated bundle data")?;
+        out.push((name.to_string(), file.to_vec()));
+        data = rest;
+    }
+    if !data.is_empty() {
+        bail!("bundle has {} trailing bytes", data.len());
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+/// A content-addressed store rooted at a (possibly network-mounted)
+/// directory. Cheap to open; all methods are `&self` and safe to share
+/// across threads and hosts (atomic counters + rename-based writes).
+#[derive(Debug)]
+pub struct ArtifactStore {
+    root: PathBuf,
+    /// Hit/miss/byte counters for this handle (per-process, not global).
+    pub stats: StoreStats,
+}
+
+impl ArtifactStore {
+    pub fn open(root: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let root = root.into();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating store root {}", root.display()))?;
+        Ok(ArtifactStore { root, stats: StoreStats::default() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn object_path(&self, hash: &str) -> PathBuf {
+        let shard = hash.get(..2).unwrap_or("xx");
+        self.root.join(shard).join(hash)
+    }
+
+    pub fn contains(&self, hash: &str) -> bool {
+        self.object_path(hash).exists()
+    }
+
+    /// Write an object if absent. Returns true when this call created it.
+    fn write_object(&self, hash: &str, bytes: &[u8]) -> Result<bool> {
+        let path = self.object_path(hash);
+        if path.exists() {
+            return Ok(false);
+        }
+        atomic_write(&path, bytes)?;
+        StoreStats::bump(&self.stats.bytes_written, bytes.len() as u64);
+        Ok(true)
+    }
+
+    fn read_object(&self, hash: &str) -> Result<Option<Vec<u8>>> {
+        let path = self.object_path(hash);
+        match fs::read(&path) {
+            Ok(b) => {
+                StoreStats::bump(&self.stats.bytes_read, b.len() as u64);
+                Ok(Some(b))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("reading {}", path.display())),
+        }
+    }
+
+    /// Move a corrupt object aside (never deleted, never reused). The pid
+    /// suffix keeps concurrent detectors from clobbering each other.
+    fn quarantine_object(&self, hash: &str) {
+        let dst = self
+            .root
+            .join("quarantine")
+            .join(format!("{hash}.{}", std::process::id()));
+        let _ = fs::create_dir_all(dst.parent().unwrap());
+        let _ = fs::rename(self.object_path(hash), &dst);
+        StoreStats::bump(&self.stats.quarantined, 1);
+    }
+
+    // -- refs ---------------------------------------------------------------
+
+    /// Read a name -> hash pointer (e.g. `artifact/<key>`, `w0/<model>-<n>`).
+    pub fn read_ref(&self, name: &str) -> Option<String> {
+        let text = fs::read_to_string(self.root.join("refs").join(name)).ok()?;
+        let hash = text.trim().to_string();
+        (hash.len() == 64 && hash.bytes().all(|b| b.is_ascii_hexdigit())).then_some(hash)
+    }
+
+    pub fn write_ref(&self, name: &str, hash: &str) -> Result<()> {
+        atomic_write(&self.root.join("refs").join(name), format!("{hash}\n").as_bytes())
+    }
+
+    // -- W0 checkpoints -----------------------------------------------------
+
+    /// Publish a local checkpoint under a named ref. Idempotent: if the ref
+    /// already points at these exact bytes nothing is written.
+    pub fn publish_checkpoint(&self, name: &str, bytes: &[u8]) -> Result<String> {
+        let hash = sha256_hex(bytes);
+        if self.read_ref(name).as_deref() == Some(hash.as_str()) && self.contains(&hash) {
+            return Ok(hash);
+        }
+        if self.write_object(&hash, bytes)? {
+            StoreStats::bump(&self.stats.ingests, 1);
+        }
+        self.write_ref(name, &hash)?;
+        Ok(hash)
+    }
+
+    /// Resolve a named checkpoint, verifying the blob's sha256 on read.
+    /// Returns `None` (a miss) when the ref is absent, the object is
+    /// missing, or the object is corrupt — the corrupt case quarantines the
+    /// blob so the caller's rebuild re-publishes a fresh one.
+    pub fn fetch_checkpoint(&self, name: &str) -> Result<Option<Vec<u8>>> {
+        let Some(hash) = self.read_ref(name) else {
+            StoreStats::bump(&self.stats.w0_misses, 1);
+            return Ok(None);
+        };
+        let Some(bytes) = self.read_object(&hash)? else {
+            StoreStats::bump(&self.stats.w0_misses, 1);
+            return Ok(None);
+        };
+        if sha256_hex(&bytes) != hash {
+            eprintln!(
+                "store: checkpoint object {hash} ('{name}') failed verification — \
+                 quarantined, will rebuild"
+            );
+            self.quarantine_object(&hash);
+            StoreStats::bump(&self.stats.w0_misses, 1);
+            return Ok(None);
+        }
+        StoreStats::bump(&self.stats.w0_hits, 1);
+        Ok(Some(bytes))
+    }
+
+    /// Record that a W0 checkpoint had to be pretrained from scratch.
+    pub fn note_w0_build(&self) {
+        StoreStats::bump(&self.stats.w0_builds, 1);
+    }
+
+    // -- artifact bundles ---------------------------------------------------
+
+    /// Publish a local artifact directory into the store, keyed by its
+    /// canonical content hash. Counts a hit when the store already holds
+    /// the object (another host got there first), a miss + ingest when this
+    /// call had to pack and write it. Also updates the `artifact/<key>` ref.
+    pub fn ingest_artifact(&self, key: &str, dir: &Path) -> Result<String> {
+        let hash = verify_local_artifact(dir, key, None)?;
+        if self.contains(&hash) {
+            StoreStats::bump(&self.stats.artifact_hits, 1);
+        } else {
+            let d = digest_artifact_dir(dir)?;
+            let mut files = vec![(
+                "manifest.json".to_string(),
+                fs::read(dir.join("manifest.json"))?,
+            )];
+            for fname in &d.files {
+                files.push((fname.clone(), fs::read(dir.join(fname))?));
+            }
+            self.write_object(&hash, &encode_bundle(&files))?;
+            StoreStats::bump(&self.stats.artifact_misses, 1);
+            StoreStats::bump(&self.stats.ingests, 1);
+        }
+        self.write_ref(&format!("artifact/{key}"), &hash)?;
+        Ok(hash)
+    }
+
+    /// Materialize an artifact into `dest` from the store, resolving the
+    /// object via the lockfile pin (preferred) or the `artifact/<key>` ref.
+    /// The bundle is decoded and re-hashed with the canonical recipe before
+    /// any file is written; a mismatch quarantines the object and errors.
+    pub fn materialize_artifact(
+        &self,
+        key: &str,
+        pinned: Option<&str>,
+        dest: &Path,
+    ) -> Result<String> {
+        let Some(hash) = pinned
+            .map(str::to_string)
+            .or_else(|| self.read_ref(&format!("artifact/{key}")))
+        else {
+            StoreStats::bump(&self.stats.artifact_misses, 1);
+            bail!(
+                "artifact '{key}' is not built locally and the store has no pin or ref for \
+                 it — build it once (`make artifacts`) on a host that shares this store"
+            );
+        };
+        let Some(bytes) = self.read_object(&hash)? else {
+            StoreStats::bump(&self.stats.artifact_misses, 1);
+            bail!(
+                "artifact '{key}' resolves to store object {hash}, which is missing — \
+                 re-ingest it from a host that has the build"
+            );
+        };
+        let verified = (|| -> Result<Vec<(String, Vec<u8>)>> {
+            let files = decode_bundle(&bytes)?;
+            let manifest = files
+                .iter()
+                .find(|(n, _)| n == "manifest.json")
+                .context("bundle has no manifest.json")?;
+            let manifest_text =
+                std::str::from_utf8(&manifest.1).context("manifest.json is not utf-8")?;
+            let lookup: BTreeMap<&str, &[u8]> =
+                files.iter().map(|(n, d)| (n.as_str(), d.as_slice())).collect();
+            let d = digest_from(manifest_text, |fname| {
+                lookup
+                    .get(fname)
+                    .map(|b| b.to_vec())
+                    .with_context(|| format!("bundle is missing program file {fname}"))
+            })?;
+            if d.computed != hash {
+                bail!("content hash mismatch: object named {hash} hashes to {}", d.computed);
+            }
+            Ok(files)
+        })();
+        let files = match verified {
+            Ok(files) => files,
+            Err(e) => {
+                eprintln!("store: artifact object {hash} ('{key}') failed verification — quarantined");
+                self.quarantine_object(&hash);
+                StoreStats::bump(&self.stats.artifact_misses, 1);
+                return Err(e.context(format!(
+                    "store object {hash} for artifact '{key}' is corrupt (quarantined, never \
+                     reused) — rebuild with `make artifacts` and re-ingest"
+                )));
+            }
+        };
+        // manifest.json is written last: a partially materialized dir never
+        // looks like a complete artifact to other readers.
+        fs::create_dir_all(dest).with_context(|| format!("creating {}", dest.display()))?;
+        for (name, data) in files.iter().filter(|(n, _)| n != "manifest.json") {
+            atomic_write(&dest.join(name), data)?;
+        }
+        let manifest = files.iter().find(|(n, _)| n == "manifest.json").unwrap();
+        atomic_write(&dest.join("manifest.json"), &manifest.1)?;
+        StoreStats::bump(&self.stats.artifact_hits, 1);
+        Ok(hash)
+    }
+}
+
+/// Temp-then-rename write (the PR-4 checkpoint idiom): readers never see a
+/// partial file, and last-writer-wins is safe because object content is
+/// immutable for a given name.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let parent = path.parent().context("path has no parent")?;
+    fs::create_dir_all(parent).with_context(|| format!("creating {}", parent.display()))?;
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ff-store-test-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Build a synthetic artifact dir with a stamped manifest, exactly the
+    /// way `python/compile/aot.py` stamps it (content_hash appended as the
+    /// last top-level key).
+    fn fake_artifact(dir: &Path, hlo_a: &[u8], hlo_b: &[u8]) {
+        fs::create_dir_all(dir).unwrap();
+        fs::write(dir.join("a.hlo.txt"), hlo_a).unwrap();
+        fs::write(dir.join("b.hlo.txt"), hlo_b).unwrap();
+        let canonical = "{\n \"format_version\": 1,\n \"key\": \"fake\",\n \"programs\": {\n  \"adam_apply\": {\n   \"file\": \"a.hlo.txt\"\n  },\n  \"train_step\": {\n   \"file\": \"b.hlo.txt\"\n  }\n }\n}";
+        let mut h = Sha256::new();
+        h.update(canonical.as_bytes());
+        for (name, data) in [("a.hlo.txt", hlo_a), ("b.hlo.txt", hlo_b)] {
+            h.update(b"\0");
+            h.update(name.as_bytes());
+            h.update(b"\0");
+            h.update(data);
+        }
+        let hash = h.hex();
+        let stamped = format!(
+            "{},\n \"content_hash\": \"{hash}\"\n}}",
+            &canonical[..canonical.len() - 2]
+        );
+        fs::write(dir.join("manifest.json"), stamped).unwrap();
+    }
+
+    #[test]
+    fn recorded_hash_matches_computed_and_is_stable() {
+        let root = tmp_dir("digest");
+        let art = root.join("art");
+        fake_artifact(&art, b"hlo-a", b"hlo-b");
+        let d = digest_artifact_dir(&art).unwrap();
+        assert_eq!(d.recorded.as_ref(), Some(&d.computed));
+        assert_eq!(d.files, vec!["a.hlo.txt", "b.hlo.txt"]);
+        // Stable across re-reads, sensitive to content.
+        assert_eq!(digest_artifact_dir(&art).unwrap().computed, d.computed);
+        fs::write(art.join("a.hlo.txt"), b"hlo-a CHANGED").unwrap();
+        assert_ne!(digest_artifact_dir(&art).unwrap().computed, d.computed);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn unstamped_manifest_hashes_whole_text() {
+        let root = tmp_dir("unstamped");
+        let art = root.join("art");
+        fs::create_dir_all(&art).unwrap();
+        fs::write(art.join("p.hlo.txt"), b"p").unwrap();
+        let text = "{\n \"programs\": {\n  \"p\": {\n   \"file\": \"p.hlo.txt\"\n  }\n }\n}";
+        fs::write(art.join("manifest.json"), text).unwrap();
+        let d = digest_artifact_dir(&art).unwrap();
+        assert_eq!(d.recorded, None);
+        assert_eq!(d.files, vec!["p.hlo.txt"]);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bundle_round_trips() {
+        let files = vec![
+            ("manifest.json".to_string(), b"{}".to_vec()),
+            ("x.hlo.txt".to_string(), vec![0u8, 1, 255, 7]),
+            ("empty".to_string(), vec![]),
+        ];
+        let enc = encode_bundle(&files);
+        assert_eq!(decode_bundle(&enc).unwrap(), files);
+        assert!(decode_bundle(&enc[..enc.len() - 1]).is_err());
+        assert!(decode_bundle(b"nope").is_err());
+    }
+
+    #[test]
+    fn ingest_then_materialize_round_trips_with_full_hits() {
+        let root = tmp_dir("roundtrip");
+        let art = root.join("art");
+        fake_artifact(&art, b"AAAA", b"BBBB");
+        let store = ArtifactStore::open(root.join("store")).unwrap();
+        let hash = store.ingest_artifact("fake", &art).unwrap();
+        let s = store.stats.snapshot();
+        assert_eq!((s.artifact_misses, s.ingests), (1, 1), "cold ingest");
+        // Second ingest of identical content: pure hit.
+        store.ingest_artifact("fake", &art).unwrap();
+        assert_eq!(store.stats.snapshot().artifact_hits, 1);
+        // Materialize on a "second host" (empty dir), via ref and via pin.
+        let dest = root.join("host2").join("fake");
+        let got = store.materialize_artifact("fake", None, &dest).unwrap();
+        assert_eq!(got, hash);
+        for f in ["manifest.json", "a.hlo.txt", "b.hlo.txt"] {
+            assert_eq!(fs::read(dest.join(f)).unwrap(), fs::read(art.join(f)).unwrap());
+        }
+        let dest3 = root.join("host3").join("fake");
+        store.materialize_artifact("fake", Some(&hash), &dest3).unwrap();
+        let s = store.stats.snapshot();
+        assert_eq!(s.artifact_hits, 3);
+        assert_eq!(s.quarantined, 0);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_object_is_quarantined_and_rebuilt_never_reused() {
+        let root = tmp_dir("corrupt");
+        let art = root.join("art");
+        fake_artifact(&art, b"AAAA", b"BBBB");
+        let store = ArtifactStore::open(root.join("store")).unwrap();
+        let hash = store.ingest_artifact("fake", &art).unwrap();
+        // Flip one byte in the stored object.
+        let obj = store.object_path(&hash);
+        let mut bytes = fs::read(&obj).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        fs::write(&obj, &bytes).unwrap();
+        // Read back: loud failure, object moved to quarantine.
+        let dest = root.join("host2").join("fake");
+        let err = store.materialize_artifact("fake", Some(&hash), &dest).unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err:#}");
+        assert!(!obj.exists(), "corrupt object must not stay at its address");
+        assert!(store
+            .root()
+            .join("quarantine")
+            .read_dir()
+            .unwrap()
+            .any(|e| e.unwrap().file_name().to_string_lossy().starts_with(&hash)));
+        assert!(!dest.join("manifest.json").exists(), "no partial materialization");
+        assert_eq!(store.stats.snapshot().quarantined, 1);
+        // Rebuild: re-ingest from the good local dir, then materialize fine.
+        store.ingest_artifact("fake", &art).unwrap();
+        store.materialize_artifact("fake", Some(&hash), &dest).unwrap();
+        assert_eq!(fs::read(dest.join("b.hlo.txt")).unwrap(), b"BBBB");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn lockfile_pin_mismatch_fails_fast() {
+        let root = tmp_dir("pin");
+        let art = root.join("art");
+        fake_artifact(&art, b"AAAA", b"BBBB");
+        let bogus = "0".repeat(64);
+        let err = verify_local_artifact(&art, "fake", Some(&bogus)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("lockfile pins artifact 'fake'"), "{msg}");
+        assert!(msg.contains(&bogus), "{msg}");
+        // And a tampered dir trips the recorded-hash check even unpinned.
+        fs::write(art.join("b.hlo.txt"), b"EVIL").unwrap();
+        let err = verify_local_artifact(&art, "fake", None).unwrap_err();
+        assert!(err.to_string().contains("corrupt or was edited"), "{err:#}");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn checkpoint_publish_fetch_and_corruption() {
+        let root = tmp_dir("ckpt");
+        let store = ArtifactStore::open(root.join("store")).unwrap();
+        let blob = b"FFCK1 pretend checkpoint bytes".to_vec();
+        let hash = store.publish_checkpoint("w0/ff-tiny-120", &blob).unwrap();
+        // Idempotent republish.
+        assert_eq!(store.publish_checkpoint("w0/ff-tiny-120", &blob).unwrap(), hash);
+        assert_eq!(store.stats.snapshot().ingests, 1);
+        assert_eq!(store.fetch_checkpoint("w0/ff-tiny-120").unwrap().unwrap(), blob);
+        assert_eq!(store.fetch_checkpoint("w0/missing").unwrap(), None);
+        // Corrupt the blob: fetch quarantines and misses; republish recovers.
+        let obj = store.object_path(&hash);
+        let mut bytes = fs::read(&obj).unwrap();
+        bytes[0] ^= 0xff;
+        fs::write(&obj, &bytes).unwrap();
+        assert_eq!(store.fetch_checkpoint("w0/ff-tiny-120").unwrap(), None);
+        assert!(!obj.exists());
+        let s = store.stats.snapshot();
+        assert_eq!((s.quarantined, s.w0_hits, s.w0_misses), (1, 1, 2));
+        store.publish_checkpoint("w0/ff-tiny-120", &blob).unwrap();
+        assert_eq!(store.fetch_checkpoint("w0/ff-tiny-120").unwrap().unwrap(), blob);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn snapshot_delta_and_all_hits() {
+        let a = StoreSnapshot { artifact_hits: 2, bytes_read: 100, ..Default::default() };
+        let b = StoreSnapshot { artifact_hits: 5, bytes_read: 350, ..Default::default() };
+        let d = b.since(&a);
+        assert_eq!((d.artifact_hits, d.bytes_read), (3, 250));
+        assert!(d.all_hits());
+        assert!(!StoreSnapshot { w0_builds: 1, ..Default::default() }.all_hits());
+        assert!(!StoreSnapshot { ingests: 1, ..Default::default() }.all_hits());
+    }
+}

@@ -409,6 +409,7 @@ pub fn run_batched_group(
                 // with packing at group boundaries only (queue docs)
                 parked: false,
                 transfers: meters[i].snapshot(),
+                store: None,
             },
             sgd_losses: std::mem::take(&mut sgd_losses[i]),
             seconds,

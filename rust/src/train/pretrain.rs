@@ -52,15 +52,65 @@ pub fn ensure_pretrained(
     model: &str,
     steps: Option<usize>,
 ) -> Result<BTreeMap<String, Tensor>> {
+    ensure_pretrained_via(rt, artifacts_root, model, steps, None)
+}
+
+/// Store-backed ref name for a W0 checkpoint. Pinned to the step count so
+/// a grid pretrained at a non-default length never aliases the default.
+fn w0_ref_name(model: &str, steps: Option<usize>) -> String {
+    let steps = steps.unwrap_or_else(|| default_pretrain_steps(model));
+    format!("w0/{model}-{steps}")
+}
+
+/// [`ensure_pretrained`] with an optional content-addressed store
+/// (`docs/artifact-store.md`). Resolution order:
+///
+/// 1. local checkpoint file — load it, and (idempotently) publish its
+///    bytes to the store so other hosts can fetch instead of rebuild;
+/// 2. store fetch by ref `w0/<model>-<steps>` — verified by content hash,
+///    materialized to the local checkpoint path temp-then-rename;
+/// 3. build from scratch (counted via `StoreStats::w0_builds`), then save
+///    locally *and* publish to the store.
+///
+/// All store I/O is host-disk traffic: it never touches device transfer
+/// meters (`docs/transfer-contract.md`).
+pub fn ensure_pretrained_via(
+    rt: &Arc<Runtime>,
+    artifacts_root: &Path,
+    model: &str,
+    steps: Option<usize>,
+    store: Option<&crate::store::ArtifactStore>,
+) -> Result<BTreeMap<String, Tensor>> {
     let path = checkpoint_path(artifacts_root, model);
     if path.exists() {
-        return load_params(&path).with_context(|| format!("cached W0 for {model}"));
+        let params = load_params(&path).with_context(|| format!("cached W0 for {model}"))?;
+        if let Some(s) = store {
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {} for store publish", path.display()))?;
+            s.publish_checkpoint(&w0_ref_name(model, steps), &bytes)?;
+        }
+        return Ok(params);
     }
     // Cache miss: take the build lock, then re-check — another worker may
     // have finished the identical build while we waited.
     let _build = PRETRAIN_BUILD.lock().unwrap_or_else(PoisonError::into_inner);
     if path.exists() {
         return load_params(&path).with_context(|| format!("cached W0 for {model}"));
+    }
+    // No local file: try the store before paying for a rebuild. A corrupt
+    // store object is quarantined inside `fetch_checkpoint` and surfaces
+    // here as `None`, so we fall through to an honest rebuild.
+    if let Some(s) = store {
+        if let Some(bytes) = s.fetch_checkpoint(&w0_ref_name(model, steps))? {
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
+            let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+            std::fs::write(&tmp, &bytes)?;
+            std::fs::rename(&tmp, &path)?;
+            return load_params(&path).with_context(|| format!("store-fetched W0 for {model}"));
+        }
+        s.note_w0_build();
     }
     let steps = steps.unwrap_or_else(|| default_pretrain_steps(model));
     crate::info!("pretraining {model} for {steps} steps (full_all on 'pile') → {}", path.display());
@@ -87,5 +137,10 @@ pub fn ensure_pretrained(
     );
     let params = t.all_params()?;
     save_params(&path, &params)?;
+    if let Some(s) = store {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {} for store publish", path.display()))?;
+        s.publish_checkpoint(&w0_ref_name(model, Some(steps)), &bytes)?;
+    }
     Ok(params)
 }

@@ -92,6 +92,13 @@ pub struct RunSummary {
     /// runs share the runtime (see runtime §Perf counters and
     /// `docs/transfer-contract.md` §5).
     pub transfers: TransferSnapshot,
+    /// Artifact-store traffic window for this run's slot, filled in by the
+    /// scheduler when an [`crate::store::ArtifactStore`] is attached to the
+    /// [`crate::sched::ArtifactCache`] (else `None`). The window is exact
+    /// at `--jobs 1`; under concurrency sibling slots share the store's
+    /// counters, so treat it as "store activity while this run executed".
+    /// Store I/O is host-disk traffic and never touches `transfers`.
+    pub store: Option<crate::store::StoreSnapshot>,
 }
 
 /// A dispatched step whose loss has not come back yet: everything the
@@ -686,6 +693,7 @@ impl Trainer {
             cancelled,
             parked,
             transfers: self.transfers(),
+            store: None,
         })
     }
 

@@ -1,0 +1,325 @@
+//! Callback-style streaming JSON reader (no value tree, no allocation per
+//! token beyond the context stack).
+//!
+//! The shard-report merge (`sched::shard`) folds many per-shard
+//! `reports/*.json` files into one canonical report by splicing verbatim
+//! byte spans — deserializing every file into an owned [`Json`]
+//! (`crate::util::json::Json`) tree would allocate the world and, worse,
+//! re-serialization could perturb bytes. This reader lexes the source in
+//! one pass and hands each token to a visitor with its byte offset, so a
+//! caller can track nesting depth and recover exact element spans
+//! (`&src[start..end]`) without owning anything.
+//!
+//! Scope: full JSON grammar plus `//` and `/* */` comments (the
+//! json-iterator-reader idiom this follows supports them; our own reports
+//! never emit any). String tokens are raw spans — escapes are *validated*
+//! but not decoded; callers that need decoded text can hand the span to
+//! `Json::parse`.
+
+/// One lexical event. Borrowed spans point into the scanned source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event<'a> {
+    ObjectStart,
+    ObjectEnd,
+    ArrayStart,
+    ArrayEnd,
+    /// An object key (raw contents between the quotes, escapes undecoded).
+    Key(&'a str),
+    /// A string value (raw contents between the quotes).
+    Str(&'a str),
+    /// A number value, as written.
+    Num(&'a str),
+    Bool(bool),
+    Null,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReadError {
+    pub msg: &'static str,
+    pub offset: usize,
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json read error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+/// Scan `src`, invoking `on(offset, event)` for every token. `offset` is
+/// the byte position of the token's first character; for `ObjectEnd` /
+/// `ArrayEnd` it is the closing bracket itself, so a container spanning
+/// `[start, end)` yields `ObjectStart` at `start` and `ObjectEnd` at
+/// `end - 1`.
+pub fn scan<'a>(
+    src: &'a str,
+    on: &mut dyn FnMut(usize, Event<'a>),
+) -> Result<(), ReadError> {
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    // Context stack: b'{' (expect key), b':' (expect value in object),
+    // b'[' (expect value in array). Values at top level use an empty stack.
+    let mut stack: Vec<u8> = Vec::new();
+    let mut value_seen = false; // a complete top-level value was consumed
+    let err = |msg: &'static str, offset: usize| ReadError { msg, offset };
+
+    while i < b.len() {
+        match b[i] {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'/' => {
+                // Comment: `//` to end of line or `/* ... */`.
+                match b.get(i + 1) {
+                    Some(b'/') => {
+                        while i < b.len() && b[i] != b'\n' {
+                            i += 1;
+                        }
+                    }
+                    Some(b'*') => {
+                        let start = i;
+                        i += 2;
+                        while i + 1 < b.len() && !(b[i] == b'*' && b[i + 1] == b'/') {
+                            i += 1;
+                        }
+                        if i + 1 >= b.len() {
+                            return Err(err("unterminated comment", start));
+                        }
+                        i += 2;
+                    }
+                    _ => return Err(err("unexpected character", i)),
+                }
+            }
+            b',' => {
+                match stack.last() {
+                    Some(b'{') | Some(b'[') => i += 1,
+                    _ => return Err(err("unexpected ','", i)),
+                }
+            }
+            b':' => match stack.last() {
+                Some(b':') => i += 1,
+                _ => return Err(err("unexpected ':'", i)),
+            },
+            b'}' => {
+                if stack.pop() != Some(b'{') {
+                    return Err(err("unbalanced '}'", i));
+                }
+                on(i, Event::ObjectEnd);
+                close_value(&mut stack, &mut value_seen);
+                i += 1;
+            }
+            b']' => {
+                if stack.pop() != Some(b'[') {
+                    return Err(err("unbalanced ']'", i));
+                }
+                on(i, Event::ArrayEnd);
+                close_value(&mut stack, &mut value_seen);
+                i += 1;
+            }
+            b'"' if stack.last() == Some(&b'{') => {
+                let (span, next) = string_span(src, i)?;
+                on(i, Event::Key(span));
+                // Swap the frame: the next value belongs to this key.
+                *stack.last_mut().unwrap() = b':';
+                i = next;
+            }
+            c => {
+                // A value position.
+                if value_seen && stack.is_empty() {
+                    return Err(err("trailing characters", i));
+                }
+                if stack.last() == Some(&b'{') {
+                    return Err(err("expected object key", i));
+                }
+                let start = i;
+                match c {
+                    b'{' => {
+                        on(start, Event::ObjectStart);
+                        stack.push(b'{');
+                        i += 1;
+                        continue;
+                    }
+                    b'[' => {
+                        on(start, Event::ArrayStart);
+                        stack.push(b'[');
+                        i += 1;
+                        continue;
+                    }
+                    b'"' => {
+                        let (span, next) = string_span(src, i)?;
+                        on(start, Event::Str(span));
+                        i = next;
+                    }
+                    b't' if src[i..].starts_with("true") => {
+                        on(start, Event::Bool(true));
+                        i += 4;
+                    }
+                    b'f' if src[i..].starts_with("false") => {
+                        on(start, Event::Bool(false));
+                        i += 5;
+                    }
+                    b'n' if src[i..].starts_with("null") => {
+                        on(start, Event::Null);
+                        i += 4;
+                    }
+                    b'-' | b'0'..=b'9' => {
+                        let mut j = i + 1;
+                        while j < b.len()
+                            && matches!(b[j], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+                        {
+                            j += 1;
+                        }
+                        on(start, Event::Num(&src[i..j]));
+                        i = j;
+                    }
+                    _ => return Err(err("unexpected character", i)),
+                }
+                close_value(&mut stack, &mut value_seen);
+            }
+        }
+    }
+    if !stack.is_empty() {
+        return Err(err("unexpected end of input", b.len()));
+    }
+    if !value_seen {
+        return Err(err("empty input", 0));
+    }
+    Ok(())
+}
+
+/// A value just finished: pop a pending `key:` frame back to its object,
+/// and mark completion at top level.
+fn close_value(stack: &mut Vec<u8>, value_seen: &mut bool) {
+    if stack.last() == Some(&b':') {
+        *stack.last_mut().unwrap() = b'{';
+    } else if stack.is_empty() {
+        *value_seen = true;
+    }
+}
+
+/// Scan a string starting at the opening quote `at`; returns the raw inner
+/// span (escapes validated, not decoded) and the offset just past the
+/// closing quote.
+fn string_span(src: &str, at: usize) -> Result<(&str, usize), ReadError> {
+    let b = src.as_bytes();
+    let mut i = at + 1;
+    while i < b.len() {
+        match b[i] {
+            b'"' => return Ok((&src[at + 1..i], i + 1)),
+            b'\\' => {
+                if i + 1 >= b.len() {
+                    break;
+                }
+                i += 2;
+            }
+            _ => i += 1,
+        }
+    }
+    Err(ReadError { msg: "unterminated string", offset: at })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(src: &str) -> Vec<(usize, String)> {
+        let mut out = Vec::new();
+        scan(src, &mut |off, ev| out.push((off, format!("{ev:?}")))).unwrap();
+        out
+    }
+
+    #[test]
+    fn lexes_nested_document() {
+        let src = r#"{"a": [1, {"b": "x"}], "c": true, "d": null}"#;
+        let got: Vec<String> = events(src).into_iter().map(|(_, e)| e).collect();
+        assert_eq!(
+            got,
+            vec![
+                "ObjectStart",
+                "Key(\"a\")",
+                "ArrayStart",
+                "Num(\"1\")",
+                "ObjectStart",
+                "Key(\"b\")",
+                "Str(\"x\")",
+                "ObjectEnd",
+                "ArrayEnd",
+                "Key(\"c\")",
+                "Bool(true)",
+                "Key(\"d\")",
+                "Null",
+                "ObjectEnd",
+            ]
+        );
+    }
+
+    #[test]
+    fn offsets_recover_exact_spans() {
+        let src = r#"{"cells": [{"index":0,"x":"a}]"}, {"index":1}]}"#;
+        let mut depth = 0usize;
+        let mut start = None;
+        let mut spans = Vec::new();
+        scan(src, &mut |off, ev| match ev {
+            Event::ObjectStart => {
+                depth += 1;
+                if depth == 2 {
+                    start = Some(off);
+                }
+            }
+            Event::ObjectEnd => {
+                if depth == 2 {
+                    spans.push(&src[start.unwrap()..off + 1]);
+                }
+                depth -= 1;
+            }
+            _ => {}
+        })
+        .unwrap();
+        assert_eq!(spans, vec![r#"{"index":0,"x":"a}]"}"#, r#"{"index":1}"#]);
+    }
+
+    #[test]
+    fn brackets_inside_strings_do_not_confuse_nesting() {
+        // Also: escaped quotes inside values.
+        let src = r#"{"k": "}]\"[{", "n": -1.5e-3}"#;
+        let got = events(src);
+        assert_eq!(got.last().unwrap().1, "ObjectEnd");
+        assert!(got.iter().any(|(_, e)| e == "Num(\"-1.5e-3\")"));
+    }
+
+    #[test]
+    fn skips_comments() {
+        let src = "// header\n{\"a\": /* inline */ 1}\n// trailer";
+        let got: Vec<String> = events(src).into_iter().map(|(_, e)| e).collect();
+        assert_eq!(got, vec!["ObjectStart", "Key(\"a\")", "Num(\"1\")", "ObjectEnd"]);
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for (src, msg) in [
+            ("{", "unexpected end of input"),
+            ("[1, 2", "unexpected end of input"),
+            ("}", "unbalanced '}'"),
+            (r#"{"a": 1} extra"#, "trailing characters"),
+            (r#""unterminated"#, "unterminated string"),
+            ("{1: 2}", "expected object key"),
+            ("/* open", "unterminated comment"),
+            ("", "empty input"),
+        ] {
+            let e = scan(src, &mut |_, _| {}).unwrap_err();
+            assert_eq!(e.msg, msg, "input {src:?}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_the_tree_parser_on_real_rows() {
+        // A row exactly as the shard report writer emits it (compact,
+        // sorted keys): the reader must tokenize it and the offsets must
+        // reconstruct the original bytes.
+        let row = r#"{"adam_steps":12,"final_loss":2.125,"index":3,"label":"ff-tiny/medical"}"#;
+        let mut rebuilt = Vec::new();
+        scan(row, &mut |off, ev| rebuilt.push((off, ev))).unwrap();
+        assert_eq!(rebuilt.first().unwrap().0, 0);
+        assert_eq!(rebuilt.last().unwrap().0, row.len() - 1);
+        assert!(crate::util::json::Json::parse(row).is_ok());
+    }
+}

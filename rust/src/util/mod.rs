@@ -1,10 +1,11 @@
 //! In-repo substrates replacing unavailable crates (see DESIGN.md
-//! §Substrates): JSON codec, CLI args, PRNG, bench harness, property-test
-//! driver, and a leveled logger.
+//! §Substrates): JSON codec, streaming JSON reader, CLI args, PRNG, bench
+//! harness, property-test driver, and a leveled logger.
 
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod json_reader;
 pub mod logging;
 pub mod prop;
 pub mod rng;

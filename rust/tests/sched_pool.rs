@@ -170,6 +170,47 @@ fn per_run_transfers_equal_solo_baselines_and_sum_to_the_batch_total() {
     );
 }
 
+/// The cache must not hold its map lock across artifact I/O: loads of
+/// *different* keys proceed concurrently, while racing loads of the *same*
+/// key still resolve to one shared entry. Four threads hammer two distinct
+/// artifacts through one cold cache; each key must come back as a single
+/// shared `Arc` (loaded exactly once), and the two keys must be distinct
+/// artifacts. Gated: in the default build the xla-backed state is not
+/// `Sync`, so there is no cross-thread cache access to test.
+#[cfg(feature = "xla-shared-client")]
+#[test]
+fn concurrent_loads_of_distinct_artifacts_share_one_entry_per_key() {
+    use std::sync::Barrier;
+    let rt = Runtime::cpu().unwrap();
+    let cache = ArtifactCache::new(artifacts_root());
+    const KEYS: [&str; 2] = ["ff-tiny_lora_r8", "ff-tiny_lora_r8_pallas"];
+    let barrier = Barrier::new(4);
+    let loaded = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let (rt, cache, barrier) = (&rt, &cache, &barrier);
+                s.spawn(move || {
+                    barrier.wait(); // all four race the cold cache at once
+                    cache.load(rt, KEYS[i % 2]).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+    });
+    for (i, art) in loaded.iter().enumerate() {
+        let again = cache.load(&rt, KEYS[i % 2]).unwrap();
+        assert!(
+            Arc::ptr_eq(art, &again),
+            "'{}' was loaded more than once under contention",
+            KEYS[i % 2]
+        );
+    }
+    assert!(
+        !Arc::ptr_eq(&loaded[0], &loaded[1]),
+        "distinct keys must resolve to distinct artifacts"
+    );
+}
+
 #[test]
 fn pool_propagates_run_errors_with_the_failing_label() {
     let rt = Runtime::cpu().unwrap();
