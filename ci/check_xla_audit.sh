@@ -1,115 +1,16 @@
 #!/usr/bin/env bash
 # Thread-safety audit gate for the `xla-shared-client` cargo feature.
 #
-# The feature turns on `unsafe impl Send/Sync` for the PJRT wrappers and
-# real thread fan-out in the run scheduler. It is only sound against an
-# audited xla-rs revision (see rust/XLA_AUDIT). This script enforces:
-#
-#   1. the feature is never in the crate's default feature set;
-#   2. every scheduler entry point that spawns host threads over
-#      xla-backed state (the WorkerPool scatter in rust/src/sched/mod.rs
-#      and the RunQueue workers in rust/src/sched/queue.rs) carries the
-#      feature cfg-gate in its file, so new thread fan-out cannot land
-#      ungated;
-#   3. if CI (workflows/Makefiles/scripts) builds with the feature, then
-#      rust/Cargo.toml must pin `xla` to `rev = "<sha>"`, that sha must
-#      equal the audited sha recorded in rust/XLA_AUDIT, and — when a
-#      Cargo.lock is checked in — the lockfile must resolve xla to the
-#      same sha.
+# Thin wrapper: the gate's logic (opt-in-only feature, the scheduler
+# spawn-site ratchet, and the pinned-rev == rust/XLA_AUDIT == lockfile
+# audit trail when CI enables the feature) lives in
+# rust/tools/contract-lint (`xla-gate` subcommand) with unit-tested
+# pass/fail fixtures — see docs/static-analysis.md. The tool is a
+# zero-dependency binary, so this needs nothing but a Rust toolchain.
 #
 # Run from the repo root: ci/check_xla_audit.sh
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
-FEATURE="xla-shared-client"
-CARGO_TOML="rust/Cargo.toml"
-AUDIT_FILE="rust/XLA_AUDIT"
-
-fail() {
-    echo "xla audit gate: FAIL — $1" >&2
-    exit 1
-}
-
-[ -f "$CARGO_TOML" ] || fail "missing $CARGO_TOML"
-[ -f "$AUDIT_FILE" ] || fail "missing $AUDIT_FILE (see rust/Cargo.toml, thread-safety gate)"
-
-# 1. The feature must be strictly opt-in: never a default feature.
-if sed -n '/^\[features\]/,/^\[/p' "$CARGO_TOML" \
-    | grep -E '^default *=' | grep -q "$FEATURE"; then
-    fail "$FEATURE is in the crate's default features; it must stay opt-in"
-fi
-
-# 2. Probe the scheduler's thread entry points — a *ratchet*, not just a
-# presence check: each scheduler file carries an audited count of
-# `thread::spawn`/`thread::scope` sites (all of which are cfg-gated on
-# the feature today). A new spawn site in either file fails CI until a
-# human verifies it is gated and bumps the count here, so ungated
-# fan-out over shared xla state cannot land silently. Audited sites:
-#   sched/mod.rs   1 — WorkerPool::scatter's thread::scope (cfg-gated)
-#   sched/queue.rs 2 — RunQueue worker thread::spawn (cfg-gated) + the
-#                      gated-only concurrent-submitters test's scope
-#                      (the preempt/park/resume, completions-stream, and
-#                      backpressure machinery reuses these workers and
-#                      the queue's condvars — zero new spawn sites)
-# (The data pipeline spawns plain host threads over host-only data; it
-# is deliberately not probed.)
-for spec in "rust/src/sched/mod.rs:1" "rust/src/sched/queue.rs:2"; do
-    f="${spec%%:*}"
-    want="${spec##*:}"
-    [ -f "$f" ] || fail "probe list out of date: missing $f"
-    got=$(grep -cE 'thread::(spawn|scope)' "$f" || true)
-    [ "$got" = "$want" ] || fail "$f has $got thread entry points, audited count is $want — \
-new spawn sites must be cfg-gated on $FEATURE and the audited count updated here"
-    grep -q "feature = \"$FEATURE\"" "$f" \
-        || fail "$f spawns threads but carries no $FEATURE cfg-gate"
-done
-
-# Does anything under CI control enable the feature? Look at workflows and
-# any Makefile/scripts that invoke cargo. Compile-only `cargo check` lines
-# are exempt: type-checking the unsafe impls and the threaded scatter runs
-# nothing, so it is sound against any xla revision — and it is how CI keeps
-# the gated path from rotting while the feature stays off.
-enabled_by=""
-for f in .github/workflows/*.yml .github/workflows/*.yaml Makefile rust/Makefile ci/*.sh; do
-    [ -f "$f" ] || continue
-    case "$f" in */check_xla_audit.sh) continue ;; esac
-    # Match --features/--all-features and cargo's -F shorthand in all its
-    # spellings (-F feat, -F=feat, -Ffeat).
-    if grep -E -- "--all-features|(--features|[[:space:]'\"]-F)[= ]?[^#]*$FEATURE" "$f" \
-        | grep -vE "cargo +check" | grep -q .; then
-        enabled_by="$f"
-        break
-    fi
-done
-
-if [ -z "$enabled_by" ]; then
-    echo "xla audit gate: OK — $FEATURE not enabled anywhere in CI; default"
-    echo "builds compile the scheduler without thread fan-out (sound against"
-    echo "any xla revision)."
-    exit 0
-fi
-
-echo "xla audit gate: $enabled_by builds with $FEATURE — verifying the audit trail"
-
-# 3a. Cargo.toml must pin a rev (a floating branch cannot be audited).
-pinned=$(grep -E '^xla *=' "$CARGO_TOML" | grep -oE 'rev *= *"[0-9a-f]{7,40}"' \
-    | grep -oE '[0-9a-f]{7,40}' || true)
-[ -n "$pinned" ] || fail "$enabled_by enables $FEATURE but $CARGO_TOML does not pin xla to a rev (still floating on a branch)"
-
-# 3b. The pinned rev must be the audited one.
-audited=$(grep -vE '^\s*(#|$)' "$AUDIT_FILE" | head -n 1 | tr -d '[:space:]')
-[ -n "$audited" ] && [ "$audited" != "none" ] \
-    || fail "$enabled_by enables $FEATURE but $AUDIT_FILE records no audited rev"
-[ "$pinned" = "$audited" ] \
-    || fail "pinned xla rev ($pinned) != audited rev ($audited) in $AUDIT_FILE"
-
-# 3c. If a lockfile is checked in, it must resolve xla to the audited rev.
-for lock in rust/Cargo.lock Cargo.lock; do
-    [ -f "$lock" ] || continue
-    if ! grep -A2 '^name = "xla"' "$lock" | grep -q "$audited"; then
-        fail "$lock resolves xla to a different rev than the audited $audited"
-    fi
-done
-
-echo "xla audit gate: OK — $FEATURE is backed by audited rev $audited"
+exec cargo run --quiet --manifest-path rust/tools/contract-lint/Cargo.toml -- xla-gate

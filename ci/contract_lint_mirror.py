@@ -1,0 +1,637 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of rust/tools/contract-lint.
+
+CI runs the Rust binary (it builds with nothing but rustc); this script
+re-implements the same scanner and rules in Python so the committed
+artifacts (rust/UNSAFE_LEDGER, rust/CONTRACT_ALLOW) can be generated and
+sanity-checked in environments without a Rust toolchain. The Rust tool
+is the source of truth — if the two ever disagree, fix the mirror.
+
+Usage (from the repo root):
+    python3 ci/contract_lint_mirror.py check      # rules + allowlist + ledger drift
+    python3 ci/contract_lint_mirror.py ledger     # print the generated UNSAFE_LEDGER
+    python3 ci/contract_lint_mirror.py ledger --write
+    python3 ci/contract_lint_mirror.py findings   # raw findings + allowlist-entry counts
+"""
+
+import os
+import sys
+from collections import OrderedDict
+
+# --------------------------------------------------------------- scanner
+# Mirrors rust/tools/contract-lint/src/scan.rs
+
+def blank_noncode(content):
+    """Blank comments and string/char-literal contents to spaces,
+    preserving line structure and delimiter characters."""
+    CODE, LINE, BLOCK, STR, RAWSTR = 0, 1, 2, 3, 4
+    b = list(content)
+    out = []
+    st, depth, hashes = CODE, 0, 0
+    i, n = 0, len(b)
+
+    def is_raw_string_start(i):
+        if i > 0 and (b[i - 1].isalnum() or b[i - 1] == "_"):
+            return False
+        j = i + 1
+        if b[i] == "b" and j < n and b[j] == "r":
+            j += 1
+        elif b[i] == "b":
+            return False
+        while j < n and b[j] == "#":
+            j += 1
+        return j < n and b[j] == '"' and b[i] in ("r", "b")
+
+    while i < n:
+        c = b[i]
+        nxt = b[i + 1] if i + 1 < n else None
+        if st == CODE:
+            if c == "/" and nxt == "/":
+                st = LINE
+                out.append("  ")
+                i += 2
+            elif c == "/" and nxt == "*":
+                st, depth = BLOCK, 1
+                out.append("  ")
+                i += 2
+            elif c == '"':
+                st = STR
+                out.append('"')
+                i += 1
+            elif c in ("r", "b") and is_raw_string_start(i):
+                j = i + 1
+                if j < n and b[j] == "r":
+                    j += 1
+                hashes = 0
+                while j < n and b[j] == "#":
+                    hashes += 1
+                    j += 1
+                out.append("".join(b[i : j + 1]))
+                st = RAWSTR
+                i = j + 1
+            elif c == "'":
+                if nxt == "\\":
+                    out.append("'")
+                    i += 1
+                    while i < n and b[i] != "'":
+                        if b[i] == "\\" and i + 1 < n:
+                            out.append("  ")
+                            i += 2
+                        else:
+                            out.append("\n" if b[i] == "\n" else " ")
+                            i += 1
+                    if i < n:
+                        out.append("'")
+                        i += 1
+                elif i + 2 < n and b[i + 2] == "'" and nxt is not None:
+                    out.append("'")
+                    out.append("\n" if nxt == "\n" else " ")
+                    out.append("'")
+                    i += 3
+                else:
+                    out.append("'")
+                    i += 1
+            else:
+                out.append(c)
+                i += 1
+        elif st == LINE:
+            if c == "\n":
+                st = CODE
+                out.append("\n")
+            else:
+                out.append(" ")
+            i += 1
+        elif st == BLOCK:
+            if c == "/" and nxt == "*":
+                depth += 1
+                out.append("  ")
+                i += 2
+            elif c == "*" and nxt == "/":
+                depth -= 1
+                if depth == 0:
+                    st = CODE
+                out.append("  ")
+                i += 2
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+        elif st == STR:
+            if c == "\\":
+                out.append(" ")
+                if nxt is not None:
+                    out.append("\n" if nxt == "\n" else " ")
+                i += 2
+            elif c == '"':
+                st = CODE
+                out.append('"')
+                i += 1
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+        else:  # RAWSTR
+            if c == '"' and all(
+                i + k < n and b[i + k] == "#" for k in range(1, hashes + 1)
+            ):
+                out.append("".join(b[i : i + hashes + 1]))
+                st = CODE
+                i += hashes + 1
+            else:
+                out.append("\n" if c == "\n" else " ")
+                i += 1
+    return "".join(out).split("\n")
+
+
+def test_mask(code):
+    mask = [False] * len(code)
+    i = 0
+    while i < len(code):
+        if code[i].lstrip().startswith("#[cfg(test)]"):
+            depth, opened, j = 0, False, i
+            while j < len(code):
+                mask[j] = True
+                for c in code[j]:
+                    if c == "{":
+                        depth += 1
+                        opened = True
+                    elif c == "}":
+                        depth -= 1
+                    elif c == ";" and not opened and depth == 0:
+                        mask[j] = True
+                        depth = -1
+                if opened and depth <= 0:
+                    break
+                if depth < 0:
+                    break
+                j += 1
+            i = j + 1
+        else:
+            i += 1
+    return mask
+
+
+class SourceFile:
+    def __init__(self, rel, content):
+        self.rel = rel
+        self.raw = content.split("\n")
+        self.code = blank_noncode(content)
+        # rust's .lines() drops a trailing final newline's empty tail
+        if self.raw and self.raw[-1] == "":
+            self.raw.pop()
+        if self.code and self.code[-1] == "":
+            self.code.pop()
+        assert len(self.raw) == len(self.code), rel
+        self.test = test_mask(self.code)
+
+
+def load_tree(root, sub):
+    rels = []
+    for dirpath, _dirnames, filenames in os.walk(os.path.join(root, sub)):
+        for name in filenames:
+            if name.endswith(".rs"):
+                full = os.path.join(dirpath, name)
+                rels.append(os.path.relpath(full, root).replace(os.sep, "/"))
+    out = []
+    for rel in sorted(rels):
+        with open(os.path.join(root, rel), encoding="utf-8") as f:
+            out.append(SourceFile(rel, f.read()))
+    return out
+
+
+def token_hits(line, token):
+    self_delimiting = token.startswith(".")
+    hits, frm = [], 0
+    while True:
+        pos = line.find(token, frm)
+        if pos < 0:
+            return hits
+        pre = line[pos - 1] if pos > 0 else None
+        if self_delimiting or pre is None or not (pre.isalnum() or pre in "_."):
+            hits.append(pos)
+        frm = pos + len(token)
+
+
+def receiver_path(line, at):
+    head = line[:at]
+    start = 0
+    for p in range(len(head) - 1, -1, -1):
+        c = head[p]
+        if not (c.isalnum() or c in "._"):
+            start = p + 1
+            break
+    return head[start:].strip(".")
+
+
+# ----------------------------------------------------------------- rules
+# Mirrors rust/tools/contract-lint/src/rules.rs
+
+CLIENT_PRIMS = [".execute_b(", ".to_literal_sync(", ".buffer_from_host_buffer("]
+WRAPPER_RAWS = [".execute_raw(", ".execute_raw_donated(", ".execute_buffers(", ".download_output("]
+RT_HELPERS = [".upload_f32(", ".upload_i32(", ".upload_scalar(", ".upload_tensor(", ".download_f32("]
+METER_EXEMPT_FILE = "rust/src/runtime/mod.rs"
+
+
+def meter_bypass(files):
+    out = []
+    for f in files:
+        if f.rel == METER_EXEMPT_FILE:
+            continue
+        for i, line in enumerate(f.code):
+            if f.test[i]:
+                continue
+            for tok in CLIENT_PRIMS + WRAPPER_RAWS:
+                for _ in token_hits(line, tok):
+                    out.append(("meter-bypass", f.rel, i + 1, tok, "raw transfer primitive"))
+            for tok in RT_HELPERS:
+                for at in token_hits(line, tok):
+                    recv = receiver_path(line, at)
+                    last = recv.rsplit(".", 1)[-1]
+                    if last in ("rt", "runtime"):
+                        out.append(("meter-bypass", f.rel, i + 1, tok, f"unmetered Runtime helper on `{recv}`"))
+    return out
+
+
+def is_unsafe_item(code_line):
+    for at in token_hits(code_line, "unsafe"):
+        rest = code_line[at + len("unsafe") :].lstrip()
+        if rest.startswith(("impl", "fn", "trait", "{")) or rest == "":
+            return True
+    return False
+
+
+def fnv1a64(s):
+    h = 0xCBF29CE484222325
+    for byte in s.encode("utf-8"):
+        h ^= byte
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def unsafe_sites(files):
+    out = []
+    for f in files:
+        for i, code in enumerate(f.code):
+            if not is_unsafe_item(code):
+                continue
+            start = i
+            while start > 0:
+                t = f.raw[start - 1].lstrip()
+                if t.startswith("//") or t.startswith("#["):
+                    start -= 1
+                else:
+                    break
+            ctx = [l.strip() for l in f.raw[start : i + 1]]
+            safety = next((l for l in ctx if "SAFETY:" in l), None)
+            rationale = ""
+            if safety is not None:
+                r = safety[safety.find("SAFETY:") + len("SAFETY:") :].strip()
+                if len(r) > 160:
+                    r = r[:157] + "..."
+                rationale = r if r else "(see comment)"
+            out.append(
+                dict(file=f.rel, line=i + 1, has_safety=safety is not None,
+                     rationale=rationale, hash=fnv1a64("\n".join(ctx)))
+            )
+    return out
+
+
+LEDGER_HEADER = """\
+# UNSAFE_LEDGER — generated by `contract-lint unsafe-ledger --write`. Do not edit by hand.
+# One entry per `unsafe` item in rust/src: file:line|fnv1a64(comment+attrs+item)|rationale.
+# CI regenerates this file and fails on any diff, so moving, adding, or rewording an
+# unsafe item is always a reviewed change (docs/static-analysis.md, unsafe ledger).
+"""
+
+
+def generate_ledger(files):
+    lines = [LEDGER_HEADER]
+    for s in unsafe_sites(files):
+        lines.append("%s:%d|%016x|%s\n" % (s["file"], s["line"], s["hash"], s["rationale"]))
+    return "".join(lines)
+
+
+def unsafe_safety(files):
+    return [
+        ("unsafe-safety", s["file"], s["line"], "unsafe", "`unsafe` item without a `// SAFETY:` comment")
+        for s in unsafe_sites(files)
+        if not s["has_safety"]
+    ]
+
+
+def donating_programs(model_py):
+    out = set()
+    for dict_name, suffix in (("PROGRAM_DONATE", ""), ("BATCHED_DONATE", "_batched")):
+        inside = False
+        for line in model_py.split("\n"):
+            t = line.strip()
+            if t.startswith(dict_name) and "{" in t:
+                inside = True
+                continue
+            if inside:
+                if t.startswith("}"):
+                    inside = False
+                    continue
+                q0 = t.find('"')
+                if q0 >= 0:
+                    q1 = t.find('"', q0 + 1)
+                    if q1 >= 0:
+                        out.add(t[q0 + 1 : q1] + suffix)
+    return sorted(out)
+
+
+NONDONATED_EXEC = [".execute_raw(", ".execute_buffers(", ".execute_buffers_metered("]
+
+
+def binding_idents(code):
+    t = code.lstrip()
+    if t.startswith("let "):
+        rest = t[len("let ") :]
+        eq = rest.find("=")
+        if eq >= 0:
+            words = []
+            for w in __import__("re").split(r"[^A-Za-z0-9_]+", rest[:eq]):
+                if w and w not in ("mut", "ref"):
+                    words.append(w)
+            return words
+    colon = t.find(":")
+    if colon > 0:
+        head = t[:colon]
+        if all(c.isalnum() or c == "_" for c in head):
+            return [head]
+    return []
+
+
+def donation(files, donating):
+    out = []
+    for f in files:
+        assoc = []
+        for i, code in enumerate(f.code):
+            if f.test[i]:
+                continue
+            for at in token_hits(code, ".program("):
+                raw_tail = f.raw[i][at + len(".program(") :]
+                q0 = raw_tail.find('"')
+                if q0 < 0:
+                    continue
+                q1 = raw_tail.find('"', q0 + 1)
+                if q1 < 0:
+                    continue
+                name = raw_tail[q0 + 1 : q1].split("{")[0]
+                if name not in donating:
+                    continue
+                for ident in binding_idents(code):
+                    assoc.append((ident, name))
+        if not assoc:
+            continue
+        for i, code in enumerate(f.code):
+            if f.test[i]:
+                continue
+            for tok in NONDONATED_EXEC:
+                for at in token_hits(code, tok):
+                    recv = receiver_path(code, at)
+                    last = recv.rsplit(".", 1)[-1]
+                    for ident, prog in assoc:
+                        if ident == last:
+                            out.append(("donation", f.rel, i + 1, tok, f"`{recv}` is donating program '{prog}'"))
+                            break
+    return out
+
+
+QUEUE_LOCKS = {
+    "pack_pool": ("queue.pack_pool", 10),
+    "tenants": ("queue.tenants", 30),
+    "running": ("queue.running", 32),
+    "data": ("queue.pack_data", 38),
+    "slot": ("queue.pack_data", 38),
+    "windows": ("queue.windows", 41),
+    "quotas": ("queue.quotas", 42),
+    "quantum": ("queue.quantum", 43),
+    "park_file": ("queue.park_file", 50),
+}
+MOD_LOCKS = {
+    "cached": ("cache.map", 60),
+    "slot": ("cache.slot", 45),
+    "pins": ("cache.pins", 55),
+    "queue": ("pool.queue", 70),
+    "slots": ("pool.slots", 71),
+}
+REGISTRY = dict(
+    [v for v in QUEUE_LOCKS.values()]
+    + [v for v in MOD_LOCKS.values()]
+    + [("queue.state", 20), ("handle.state", 35)]
+)
+
+
+def lock_name(rel, expr):
+    cleaned = expr.strip().lstrip("&")
+    if cleaned.startswith("mut "):
+        cleaned = cleaned[4:]
+    cleaned = cleaned.strip()
+    if cleaned.startswith("self."):
+        cleaned = cleaned[5:]
+    segs = cleaned.split(".")
+    last = segs[-1] if segs else ""
+    if rel.endswith("sched/queue.rs"):
+        if last == "state":
+            if len(segs) >= 2 and segs[-2] == "shared":
+                return ("queue.state", 20)
+            return ("handle.state", 35)
+        return QUEUE_LOCKS.get(last)
+    if rel.endswith("sched/mod.rs"):
+        return MOD_LOCKS.get(last)
+    return None
+
+
+def brace_delta(code):
+    return code.count("{") - code.count("}")
+
+
+def paren_arg(code, frm):
+    depth, end = 1, frm
+    for off, c in enumerate(code[frm:]):
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                end = frm + off
+                break
+    return code[frm:end]
+
+
+def pure_binding_ident(head):
+    if not head.startswith("let "):
+        return None
+    rest = head[len("let ") :]
+    if rest.startswith("mut "):
+        rest = rest[4:]
+    eq = rest.find("=")
+    if eq < 0:
+        return None
+    ident = rest[:eq].strip()
+    if ident and all(c.isalnum() or c == "_" for c in ident):
+        return ident
+    return None
+
+
+def lock_order(files):
+    out = []
+    for f in files:
+        if "/sched/" not in f.rel:
+            continue
+        held = []  # (name, level, depth, ident_or_None)
+        depth = 0
+        for i, code in enumerate(f.code):
+            if f.test[i]:
+                depth += brace_delta(code)
+                held = [h for h in held if h[2] <= depth]
+                continue
+            if token_hits(code, "fn ") and "(" in code:
+                held = []
+                j = i
+                while j > 0:
+                    t = f.raw[j - 1].lstrip()
+                    if t.startswith("//") or t.startswith("#["):
+                        marker = "contract-lint: holds "
+                        pos = t.find(marker)
+                        if pos >= 0:
+                            name = t[pos + len(marker) :].split()[0]
+                            if name in REGISTRY:
+                                held.append((name, REGISTRY[name], depth + 1, None))
+                            else:
+                                out.append(("lock-order", f.rel, j, "holds-directive", f"unregistered lock {name}"))
+                        j -= 1
+                    else:
+                        break
+            for at in token_hits(code, "drop("):
+                arg = paren_arg(code, at + len("drop(")).strip()
+                held = [h for h in held if h[3] != arg]
+            for at in token_hits(code, "lock("):
+                arg = paren_arg(code, at + len("lock("))
+                nl = lock_name(f.rel, arg)
+                if nl is None:
+                    out.append(("lock-order", f.rel, i + 1, "unregistered", f"lock(&{arg.strip()}) not in registry"))
+                    continue
+                name, level = nl
+                for h in held:
+                    if level <= h[1]:
+                        out.append(
+                            ("lock-order", f.rel, i + 1, name,
+                             f"acquires `{name}` (level {level}) while holding `{h[0]}` (level {h[1]})")
+                        )
+                head = code[:at].lstrip()
+                after = at + len("lock(") + len(arg) + 1
+                tail_ok = code[after:].strip() == ";"
+                if tail_ok:
+                    ident = pure_binding_ident(head)
+                    if ident:
+                        held.append((name, level, depth + brace_delta(code[:at]), ident))
+            depth += brace_delta(code)
+            held = [h for h in held if h[2] <= depth]
+    return out
+
+
+# ------------------------------------------------------------- allowlist
+
+def parse_allowlist(text):
+    out = []
+    for i, line in enumerate(text.split("\n")):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split("|", 4)
+        if len(parts) != 5:
+            raise SystemExit(f"CONTRACT_ALLOW:{i + 1}: expected rule|file|token|count|reason")
+        out.append((parts[0].strip(), parts[1].strip(), parts[2].strip(), int(parts[3]), parts[4].strip()))
+    return out
+
+
+def apply_allowlist(findings, allow):
+    grouped = OrderedDict()
+    for rule, file, line, token, msg in sorted(findings, key=lambda x: (x[0], x[1], x[3], x[2])):
+        grouped.setdefault((rule, file, token), []).append((line, msg))
+    errors = []
+    used = [False] * len(allow)
+    for (rule, file, token), group in grouped.items():
+        idx = next(
+            (k for k, e in enumerate(allow) if e[0] == rule and e[1] == file and e[2] == token),
+            None,
+        )
+        if idx is None:
+            for line, msg in group:
+                errors.append(f"[{rule}] {file}:{line}: {msg} (no CONTRACT_ALLOW entry)")
+        else:
+            used[idx] = True
+            if len(group) != allow[idx][3]:
+                errors.append(
+                    f"[{rule}] {file}: {len(group)} site(s) of `{token}`, ratchet says {allow[idx][3]}"
+                )
+    for k, e in enumerate(allow):
+        if not used[k]:
+            errors.append(f"[stale-allowlist] {e[0]}|{e[1]}|{e[2]}|{e[3]} matches nothing")
+    return errors
+
+
+# ------------------------------------------------------------------ main
+
+def main():
+    cmd = sys.argv[1] if len(sys.argv) > 1 else "check"
+    root = os.getcwd()
+    if not os.path.isdir(os.path.join(root, "rust", "src")):
+        raise SystemExit("run from the repo root")
+    files = load_tree(root, "rust/src")
+
+    if cmd == "ledger":
+        text = generate_ledger(files)
+        missing = unsafe_safety(files)
+        for m in missing:
+            print(f"[{m[0]}] {m[1]}:{m[2]}: {m[4]}", file=sys.stderr)
+        if missing:
+            raise SystemExit(1)
+        if "--write" in sys.argv:
+            with open(os.path.join(root, "rust", "UNSAFE_LEDGER"), "w", encoding="utf-8") as fh:
+                fh.write(text)
+            print("wrote rust/UNSAFE_LEDGER")
+        else:
+            sys.stdout.write(text)
+        return
+
+    with open(os.path.join(root, "python/compile/model.py"), encoding="utf-8") as fh:
+        donating = donating_programs(fh.read())
+    findings = meter_bypass(files) + unsafe_safety(files) + lock_order(files) + donation(files, donating)
+
+    if cmd == "findings":
+        counts = OrderedDict()
+        for rule, file, line, token, msg in findings:
+            print(f"[{rule}] {file}:{line}: {token}  {msg}")
+            counts[(rule, file, token)] = counts.get((rule, file, token), 0) + 1
+        print("\n# allowlist-entry shaped counts:")
+        for (rule, file, token), c in sorted(counts.items()):
+            print(f"{rule}|{file}|{token}|{c}|<reason>")
+        return
+
+    if cmd == "check":
+        allow_path = os.path.join(root, "rust", "CONTRACT_ALLOW")
+        allow_text = ""
+        if os.path.exists(allow_path):
+            with open(allow_path, encoding="utf-8") as fh:
+                allow_text = fh.read()
+        errors = apply_allowlist(findings, parse_allowlist(allow_text))
+        ledger_path = os.path.join(root, "rust", "UNSAFE_LEDGER")
+        if not os.path.exists(ledger_path):
+            errors.append("rust/UNSAFE_LEDGER is missing")
+        else:
+            with open(ledger_path, encoding="utf-8") as fh:
+                if fh.read() != generate_ledger(files):
+                    errors.append("UNSAFE_LEDGER drift — regenerate")
+        for e in errors:
+            print(f"mirror: {e}", file=sys.stderr)
+        if errors:
+            raise SystemExit(1)
+        print(f"mirror: OK — {len(files)} files, {len(findings)} finding(s) all allowlisted, ledger in sync")
+        return
+
+    raise SystemExit(f"unknown subcommand {cmd!r}")
+
+
+if __name__ == "__main__":
+    main()

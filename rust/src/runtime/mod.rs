@@ -343,8 +343,8 @@ pub struct Runtime {
     pub stats: TransferStats,
 }
 
-// SAFETY (compiled only under `--features xla-shared-client`): the PJRT
-// C API requires implementations to be thread-safe — clients, loaded
+// Thread-safety (compiled only under `--features xla-shared-client`): the
+// PJRT C API requires implementations to be thread-safe — clients, loaded
 // executables, and buffers may be used concurrently from multiple host
 // threads (compile/execute/transfer all take internal locks; XLA:CPU's
 // client is explicitly multi-threaded). `TransferStats` is atomic.
@@ -367,8 +367,10 @@ pub struct Runtime {
 // whose handle semantics have been audited as refcount-free (or
 // `Arc`-based) and recording it in rust/XLA_AUDIT —
 // ci/check_xla_audit.sh enforces that precondition in CI.
+// SAFETY: PJRT clients are thread-safe per the C API contract, and the feature gate requires an audited refcount-free xla wrapper rev (full argument above).
 #[cfg(feature = "xla-shared-client")]
 unsafe impl Send for Runtime {}
+// SAFETY: shared state on `Runtime` is the thread-safe client plus the atomic `TransferStats`; everything else is immutable after construction.
 #[cfg(feature = "xla-shared-client")]
 unsafe impl Sync for Runtime {}
 
@@ -472,16 +474,18 @@ pub struct Program {
     exe: xla::PjRtLoadedExecutable,
 }
 
-// SAFETY (compiled only under `--features xla-shared-client`): see the
-// `Runtime` impls — PJRT loaded executables are thread-safe to execute
+// Thread-safety (compiled only under `--features xla-shared-client`): see
+// the `Runtime` impls — PJRT loaded executables are thread-safe to execute
 // concurrently per the PJRT API contract; `name` and `spec` are immutable
 // after construction. Compiled programs are the read-only artifacts the
 // scheduler shares across worker threads. Gated for the same reason as
 // `Runtime`: the wrapper may clone a non-atomic client handle into each
 // executable/buffer, so the impls only exist once the resolved xla
 // revision is pinned and audited (rust/XLA_AUDIT).
+// SAFETY: PJRT loaded executables execute concurrently per the API contract; gated on the audited wrapper rev like `Runtime` (see the block above).
 #[cfg(feature = "xla-shared-client")]
 unsafe impl Send for Program {}
+// SAFETY: `name` and `spec` are immutable after construction; the executable is shared read-only across workers under the same audited-rev gate.
 #[cfg(feature = "xla-shared-client")]
 unsafe impl Sync for Program {}
 

@@ -257,7 +257,10 @@ impl ParamSet {
             );
             let stale = self.state[i] == SyncState::HostAhead || self.device[i].is_none();
             if stale {
-                debug_assert_ne!(
+                // Hard assert: a device-ahead tensor with no buffer means
+                // the only up-to-date copy of the weights is gone; the
+                // re-upload below would silently train on stale host data.
+                assert_ne!(
                     self.state[i],
                     SyncState::DeviceAhead,
                     "device-ahead tensor lost its buffer"

@@ -1,0 +1,793 @@
+//! The per-submission lifecycle state machine of the run queue,
+//! extracted **pure**: no locks, no condvars, no I/O, no xla — just the
+//! transitions and the invariants they carry. `crate::sched::queue`
+//! consumes this module for every handle-state change (the queue's
+//! mutexes/condvars stay where they are; what moved here is the state
+//! *logic* those locks protect), and `rust/tests/lifecycle_model.rs`
+//! model-checks the same type exhaustively over bounded interleavings.
+//!
+//! # The state machine
+//!
+//! ```text
+//!            try_claim            finish(outcome)
+//!   Queued ────────────► Running ───────────────► Finished(Some)
+//!     ▲                  ▲  │                          │
+//!     │        try_claim │  │ park                     │ take_outcome
+//!     └─ (submit)        │  ▼                          ▼
+//!                        Parked                   Finished(None)
+//! ```
+//!
+//! Three invariants are load-bearing for the queue's serving contracts
+//! (`docs/queue-serving.md`):
+//!
+//! * **Claim exclusivity.** [`Lifecycle::try_claim`] is the *only* way
+//!   into `Running`, and it fails on anything already `Running` or
+//!   `Finished`. Workers popping the queue, pack leaders claiming
+//!   siblings, `cancel()`'s transient claim, and queue-drop cleanup all
+//!   race through this one transition, so each submission is owned by
+//!   exactly one of them no matter the interleaving.
+//! * **Terminal gate.** [`Lifecycle::finish`] asserts (in release —
+//!   these are contract-bearing checks, see `docs/static-analysis.md`)
+//!   that the submission was `Running`: every terminal path first wins
+//!   the claim, so a submission finishes exactly once.
+//! * **Exactly-once delivery.** The outcome sits in an `Option` slot;
+//!   [`Lifecycle::take_outcome`] moves it out. Whichever of `join` /
+//!   the completions stream asks first gets it, the other provably
+//!   cannot.
+//!
+//! The [`model`] submodule is a pure replica of the queue's *scheduling*
+//! protocol (ready list, worker condvar, terminal gate ordering,
+//! cancel/park/pack races) built on this same `Lifecycle` type, small
+//! enough for exhaustive interleaving exploration.
+
+use std::fmt;
+
+/// How a finished submission ended. `Cancelled(None)` = cancelled before
+/// it ever started (nothing was constructed); `Cancelled(Some)` = a
+/// running job honored the cooperative flag and returned partial output.
+pub enum Outcome<R> {
+    Done(R),
+    Cancelled(Option<R>),
+    Failed(anyhow::Error),
+}
+
+/// Which non-terminal state a successful [`Lifecycle::try_claim`] left.
+/// Queue-drop cleanup branches on this: a claimed `Queued` submission is
+/// cancelled (it never ran), a claimed `Parked` one is *failed* loudly
+/// (its checkpointed progress is discarded — never silently).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClaimedFrom {
+    Queued,
+    Parked,
+}
+
+/// Observable phase of a submission ([`Lifecycle::phase`]) — the pure
+/// core of `RunPoll`, with delivery made explicit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Running,
+    Parked,
+    Done,
+    Cancelled,
+    Failed,
+    /// Terminal and already delivered (`join` or the completions stream
+    /// took the outcome).
+    Delivered,
+}
+
+enum State<R> {
+    Queued,
+    Running,
+    Parked,
+    Finished(Option<Outcome<R>>),
+}
+
+/// One submission's lifecycle. Opaque on purpose: the queue cannot write
+/// a state directly — every change goes through a transition method that
+/// carries its invariant.
+pub struct Lifecycle<R> {
+    state: State<R>,
+}
+
+impl<R> Default for Lifecycle<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R> Lifecycle<R> {
+    /// A fresh submission: `Queued`.
+    pub fn new() -> Self {
+        Lifecycle { state: State::Queued }
+    }
+
+    /// The exclusivity transition: `Queued | Parked → Running`. Returns
+    /// where the claim came from, or `None` if someone else already owns
+    /// the submission (`Running`) or it is already terminal
+    /// (`Finished`). Every executor — worker pop, pack leader, cancel's
+    /// transient claim, queue-drop cleanup — must win this transition
+    /// before touching the submission.
+    pub fn try_claim(&mut self) -> Option<ClaimedFrom> {
+        match self.state {
+            State::Queued => {
+                self.state = State::Running;
+                Some(ClaimedFrom::Queued)
+            }
+            State::Parked => {
+                self.state = State::Running;
+                Some(ClaimedFrom::Parked)
+            }
+            State::Running | State::Finished(_) => None,
+        }
+    }
+
+    /// Pack-leader variant of [`Lifecycle::try_claim`]: claims only a
+    /// still-`Queued` submission (a parked submission is an interrupted
+    /// run mid-resume — a group leader must never swallow one).
+    pub fn try_claim_queued(&mut self) -> bool {
+        match self.state {
+            State::Queued => {
+                self.state = State::Running;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The terminal gate: `Running → Finished(Some(outcome))`. Hard
+    /// assert (not `debug_assert!` — this is the exactly-once-completion
+    /// contract, it must hold in release): the caller must have won the
+    /// claim first, so two paths can never both finish one submission.
+    pub fn finish(&mut self, outcome: Outcome<R>) {
+        assert!(
+            matches!(self.state, State::Running),
+            "lifecycle: finish() from {:?} — every terminal path must claim Running first \
+             (exactly-once completion gate, docs/queue-serving.md)",
+            self.phase()
+        );
+        self.state = State::Finished(Some(outcome));
+    }
+
+    /// `Running → Parked`: the job checkpointed at a step boundary and
+    /// re-enters the queue to resume later. Hard assert for the same
+    /// reason as [`Lifecycle::finish`]: only the current owner may park.
+    pub fn park(&mut self) {
+        assert!(
+            matches!(self.state, State::Running),
+            "lifecycle: park() from {:?} — only the claiming owner may park",
+            self.phase()
+        );
+        self.state = State::Parked;
+    }
+
+    /// Move the outcome out — the exactly-once delivery token. `None`
+    /// when not yet finished *or* when the other delivery surface
+    /// (`join` vs the completions stream) already took it.
+    pub fn take_outcome(&mut self) -> Option<Outcome<R>> {
+        match &mut self.state {
+            State::Finished(slot) => slot.take(),
+            _ => None,
+        }
+    }
+
+    /// Terminal (whether or not the outcome was already delivered).
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, State::Finished(_))
+    }
+
+    /// Observable phase (pure core of the queue's `RunPoll`).
+    pub fn phase(&self) -> Phase {
+        match &self.state {
+            State::Queued => Phase::Queued,
+            State::Running => Phase::Running,
+            State::Parked => Phase::Parked,
+            State::Finished(Some(Outcome::Done(_))) => Phase::Done,
+            State::Finished(Some(Outcome::Cancelled(_))) => Phase::Cancelled,
+            State::Finished(Some(Outcome::Failed(_))) => Phase::Failed,
+            State::Finished(None) => Phase::Delivered,
+        }
+    }
+}
+
+impl<R> fmt::Debug for Lifecycle<R> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Lifecycle({:?})", self.phase())
+    }
+}
+
+impl<R: Clone> Lifecycle<R> {
+    /// Model-checker support: duplicate this lifecycle *including* its
+    /// undelivered outcome slot. Deliberately not a `Clone` impl — a
+    /// forked lifecycle duplicates the exactly-once delivery token,
+    /// which is only sound when exploring hypothetical futures of a
+    /// model state (each branch is its own world). `Failed` errors are
+    /// re-wrapped by message.
+    pub fn fork(&self) -> Lifecycle<R> {
+        let state = match &self.state {
+            State::Queued => State::Queued,
+            State::Running => State::Running,
+            State::Parked => State::Parked,
+            State::Finished(slot) => State::Finished(slot.as_ref().map(|o| match o {
+                Outcome::Done(r) => Outcome::Done(r.clone()),
+                Outcome::Cancelled(r) => Outcome::Cancelled(r.clone()),
+                Outcome::Failed(e) => Outcome::Failed(anyhow::anyhow!("{e:#}")),
+            })),
+        };
+        Lifecycle { state }
+    }
+}
+
+pub mod model {
+    //! A pure, deterministic replica of the run queue's scheduling
+    //! protocol, built on the real [`Lifecycle`] type, for exhaustive
+    //! interleaving exploration (`rust/tests/lifecycle_model.rs`).
+    //!
+    //! Each [`Action`] is one lock-atomic region of
+    //! `crate::sched::queue`: `Submit` is `try_submit_inner`'s
+    //! enqueue+notify, `Pop` is `worker_loop`+`take_next`+`run_entry`'s
+    //! claim (including husk reaping and the fall-asleep-when-empty
+    //! decision, which the real code makes while *holding* the state
+    //! lock — that atomicity is exactly what makes the condvar protocol
+    //! lose no wakeups, and the model mirrors it), `Step` is one
+    //! trainer step boundary with its cancel-then-park check order,
+    //! `Cancel` is `RunHandle::cancel`'s flag+transient-claim,
+    //! `ClaimMate` is a pack leader's `Queued → Running` sibling claim,
+    //! and the terminal gate (`finish_handle`) — publish outcome,
+    //! decrement `live`, feed the completions stream — runs as one unit
+    //! because the real code funnels every terminal path through that
+    //! single function.
+    //!
+    //! Scope: the worker condvar (`Shared::cv`) and its wakeup tokens
+    //! are modeled; the delivery-side condvars (`done_cv`, `space_cv`)
+    //! are not — model consumers poll. The queue's admission layer
+    //! (capacity/quota/rate windows) and shutdown path are out of
+    //! scope; they sit in front of / behind the state machine modeled
+    //! here and are covered by the unit tests in `queue.rs`.
+
+    use std::collections::VecDeque;
+
+    use super::{ClaimedFrom, Lifecycle, Outcome, Phase};
+
+    /// One bounded scenario to explore. `steps[i]` is submission `i`'s
+    /// job length in step-boundaries; the one-shot lists name which
+    /// environment actions exist at all (each may fire at any point of
+    /// the interleaving, once).
+    #[derive(Clone, Default)]
+    pub struct Config {
+        pub workers: usize,
+        /// Steps per submission (each ≥ 1).
+        pub steps: Vec<u8>,
+        /// Submissions the environment may `cancel()` (one-shot each).
+        pub cancels: Vec<usize>,
+        /// Submissions the environment may park-request (one-shot each).
+        pub parks: Vec<usize>,
+        /// Submissions a joiner may take directly (one-shot each); all
+        /// other deliveries go through the completions stream.
+        pub joins: Vec<usize>,
+        /// Submissions eligible for pack-claiming: a worker already
+        /// running one of these may claim another still-`Queued` one as
+        /// a group mate (publishing its outcome at the group end).
+        pub packables: Vec<usize>,
+        /// Property-test mode: start with every worker already claiming
+        /// its same-indexed submission and expose **only** `Step`
+        /// actions (workers retire after their run, no deliveries).
+        /// Schedule counts are then a pure multinomial — the exact
+        /// expected-count oracle for the explorer.
+        pub pure_steps: bool,
+        /// Seeded bug for the checker's self-test: check the park flag
+        /// *before* the cancel flag at step boundaries (the real code
+        /// checks cancel first — `Trainer::park_due` docs and
+        /// `repark_entry`). The explorer must catch this.
+        pub buggy_park_before_cancel: bool,
+    }
+
+    /// One interleaving step. The explorer enumerates these in a fixed
+    /// deterministic order, so traces are reproducible by construction.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Action {
+        /// Admit submission `i`: enqueue + `live += 1` + notify a worker.
+        Submit(usize),
+        /// Sleeping worker `w` consumes a pending notify.
+        Wake(usize),
+        /// Idle worker `w` pops the ready list: reap husks, claim the
+        /// first claimable entry, or fall asleep if nothing is left.
+        Pop(usize),
+        /// Worker `w` reaches its running job's next step boundary.
+        Step(usize),
+        /// Worker `w` (running a packable leader) pack-claims queued
+        /// submission `mate`.
+        ClaimMate { worker: usize, mate: usize },
+        /// Environment cancels submission `i` (flag + transient claim).
+        Cancel(usize),
+        /// Environment asks submission `i` to park at its next boundary.
+        ParkRequest(usize),
+        /// Consumer pops the completions stream once.
+        DeliverStream,
+        /// Joiner takes submission `i`'s outcome directly.
+        Join(usize),
+    }
+
+    /// An invariant the interleaving broke, with the witness state.
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    pub enum Violation {
+        /// `live` stopped equaling the number of admitted-and-unfinished
+        /// submissions.
+        LiveCountMismatch { live: usize, unfinished: usize },
+        /// An outcome was delivered twice.
+        DoubleDelivery { sub: usize },
+        /// A submission sits `Parked` with its cancel flag raised — the
+        /// park beat the cancel (the real ordering checks cancel first,
+        /// so a cancelled run never re-enters the queue).
+        ParkBeatCancel { sub: usize },
+        /// Two executors own the same submission.
+        ClaimOverlap { sub: usize },
+        /// A worker owns a submission that is not `Running`.
+        OwnerStateMismatch { sub: usize, phase: Phase },
+    }
+
+    #[derive(Clone, Debug, PartialEq, Eq)]
+    enum Worker {
+        Idle,
+        Asleep,
+        Run { sub: usize, mates: Vec<usize> },
+    }
+
+    struct Sub {
+        life: Lifecycle<u32>,
+        submitted: bool,
+        cancel: bool,
+        park_req: bool,
+        steps_left: u8,
+    }
+
+    impl Sub {
+        fn fork(&self) -> Sub {
+            Sub {
+                life: self.life.fork(),
+                submitted: self.submitted,
+                cancel: self.cancel,
+                park_req: self.park_req,
+                steps_left: self.steps_left,
+            }
+        }
+    }
+
+    /// The explorable queue state. Build one per [`Config`], enumerate
+    /// [`QueueModel::enabled`] actions, [`QueueModel::apply`] them on
+    /// [`QueueModel::fork`]s of the state, and recurse.
+    pub struct QueueModel {
+        subs: Vec<Sub>,
+        ready: VecDeque<usize>,
+        live: usize,
+        done: VecDeque<usize>,
+        workers: Vec<Worker>,
+        /// Pending worker-condvar notify tokens (`Shared::cv`).
+        notifies: usize,
+        delivered: Vec<u8>,
+        cancels_left: Vec<bool>,
+        parks_left: Vec<bool>,
+        joins_left: Vec<bool>,
+    }
+
+    impl QueueModel {
+        pub fn new(cfg: &Config) -> QueueModel {
+            let n = cfg.steps.len();
+            let mut m = QueueModel {
+                subs: cfg
+                    .steps
+                    .iter()
+                    .map(|&s| Sub {
+                        life: Lifecycle::new(),
+                        submitted: false,
+                        cancel: false,
+                        park_req: false,
+                        steps_left: s.max(1),
+                    })
+                    .collect(),
+                ready: VecDeque::new(),
+                live: 0,
+                done: VecDeque::new(),
+                workers: vec![Worker::Idle; cfg.workers],
+                notifies: 0,
+                delivered: vec![0; n],
+                cancels_left: (0..n).map(|i| cfg.cancels.contains(&i)).collect(),
+                parks_left: (0..n).map(|i| cfg.parks.contains(&i)).collect(),
+                joins_left: (0..n).map(|i| cfg.joins.contains(&i)).collect(),
+            };
+            if cfg.pure_steps {
+                assert_eq!(cfg.workers, n, "pure_steps pre-claims sub w on worker w");
+                for w in 0..n {
+                    // Reach the pre-claimed state through the real
+                    // transitions, not by writing states directly.
+                    m.subs[w].submitted = true;
+                    m.live += 1;
+                    assert_eq!(m.subs[w].life.try_claim(), Some(ClaimedFrom::Queued));
+                    m.workers[w] = Worker::Run { sub: w, mates: Vec::new() };
+                }
+            }
+            m
+        }
+
+        pub fn fork(&self) -> QueueModel {
+            QueueModel {
+                subs: self.subs.iter().map(Sub::fork).collect(),
+                ready: self.ready.clone(),
+                live: self.live,
+                done: self.done.clone(),
+                workers: self.workers.clone(),
+                notifies: self.notifies,
+                delivered: self.delivered.clone(),
+                cancels_left: self.cancels_left.clone(),
+                parks_left: self.parks_left.clone(),
+                joins_left: self.joins_left.clone(),
+            }
+        }
+
+        /// Every action currently enabled, in a fixed deterministic
+        /// order (the explorer's branch order).
+        pub fn enabled(&self, cfg: &Config) -> Vec<Action> {
+            let mut out = Vec::new();
+            if cfg.pure_steps {
+                for (w, worker) in self.workers.iter().enumerate() {
+                    if matches!(worker, Worker::Run { .. }) {
+                        out.push(Action::Step(w));
+                    }
+                }
+                return out;
+            }
+            for (i, s) in self.subs.iter().enumerate() {
+                if !s.submitted {
+                    out.push(Action::Submit(i));
+                }
+            }
+            for (w, worker) in self.workers.iter().enumerate() {
+                match worker {
+                    Worker::Asleep if self.notifies > 0 => out.push(Action::Wake(w)),
+                    Worker::Idle => out.push(Action::Pop(w)),
+                    Worker::Run { sub, .. } => {
+                        out.push(Action::Step(w));
+                        if cfg.packables.contains(sub) {
+                            for &j in &cfg.packables {
+                                if j != *sub
+                                    && self.subs[j].submitted
+                                    && self.subs[j].life.phase() == Phase::Queued
+                                {
+                                    out.push(Action::ClaimMate { worker: w, mate: j });
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            for (i, s) in self.subs.iter().enumerate() {
+                if self.cancels_left[i] && s.submitted {
+                    out.push(Action::Cancel(i));
+                }
+                if self.parks_left[i] && s.submitted && !s.life.is_finished() {
+                    out.push(Action::ParkRequest(i));
+                }
+                if self.joins_left[i] && s.life.is_finished() {
+                    out.push(Action::Join(i));
+                }
+            }
+            if !self.done.is_empty() {
+                out.push(Action::DeliverStream);
+            }
+            out
+        }
+
+        /// The terminal gate, mirroring `finish_handle`: publish the
+        /// outcome (asserting the claim was won — the real release
+        /// assert in [`Lifecycle::finish`] fires right here if a model
+        /// path forgets to claim), decrement `live`, feed the stream.
+        fn gate(&mut self, i: usize, outcome: Outcome<u32>) {
+            self.subs[i].life.finish(outcome);
+            self.live -= 1;
+            self.done.push_back(i);
+        }
+
+        /// Apply one action; `Err` when an invariant broke.
+        pub fn apply(&mut self, cfg: &Config, action: Action) -> Result<(), Violation> {
+            match action {
+                Action::Submit(i) => {
+                    self.subs[i].submitted = true;
+                    self.ready.push_back(i);
+                    self.live += 1;
+                    self.notifies += 1; // cv.notify_one
+                }
+                Action::Wake(w) => {
+                    self.workers[w] = Worker::Idle;
+                    self.notifies -= 1;
+                }
+                Action::Pop(w) => loop {
+                    match self.ready.pop_front() {
+                        None => {
+                            // take_next returned None while holding the
+                            // state lock: the wait is atomic with the
+                            // emptiness check (no sleep/notify race).
+                            self.workers[w] = Worker::Asleep;
+                            break;
+                        }
+                        Some(j) => {
+                            if self.subs[j].life.try_claim().is_some() {
+                                self.workers[w] = Worker::Run { sub: j, mates: Vec::new() };
+                                break;
+                            }
+                            // husk (cancelled while queued, or claimed
+                            // by a pack leader): reap, keep looking —
+                            // same loop as take_next/run_entry.
+                        }
+                    }
+                },
+                Action::Step(w) => {
+                    let (sub, mates) = match &self.workers[w] {
+                        Worker::Run { sub, mates } => (*sub, mates.clone()),
+                        other => unreachable!("Step on non-running worker {other:?}"),
+                    };
+                    if !mates.is_empty() {
+                        // In-flight batched group: no per-step cancel or
+                        // park point — members run to the group end and
+                        // finish Done (cancel lands at the batch
+                        // boundary, docs/queue-serving.md).
+                        self.subs[sub].steps_left -= 1;
+                        if self.subs[sub].steps_left == 0 {
+                            self.gate(sub, Outcome::Done(sub as u32));
+                            for m in mates {
+                                self.gate(m, Outcome::Done(m as u32));
+                            }
+                            self.workers[w] = Worker::Idle;
+                        }
+                    } else {
+                        let s = &self.subs[sub];
+                        let (cancel_now, park_now) = if cfg.buggy_park_before_cancel {
+                            (s.cancel && !s.park_req, s.park_req)
+                        } else {
+                            // The real order: cancellation wins over
+                            // parking (Trainer::park_due + repark_entry).
+                            (s.cancel, s.park_req && !s.cancel)
+                        };
+                        if cancel_now {
+                            self.gate(sub, Outcome::Cancelled(Some(sub as u32)));
+                            self.workers[w] = Worker::Idle;
+                        } else if park_now {
+                            // repark_entry: publish Parked, re-queue the
+                            // continuation, notify a worker. The park
+                            // flag is consumed (Trainer::park_due swaps
+                            // it off) so the next slot starts clean.
+                            self.subs[sub].park_req = false;
+                            self.subs[sub].life.park();
+                            self.ready.push_back(sub);
+                            self.notifies += 1;
+                            self.workers[w] = Worker::Idle;
+                        } else {
+                            self.subs[sub].steps_left -= 1;
+                            if self.subs[sub].steps_left == 0 {
+                                self.gate(sub, Outcome::Done(sub as u32));
+                                self.workers[w] = if cfg.pure_steps {
+                                    Worker::Asleep // retire: property mode
+                                } else {
+                                    Worker::Idle
+                                };
+                            }
+                        }
+                    }
+                }
+                Action::ClaimMate { worker, mate } => {
+                    // The pack leader's claim is the same Queued→Running
+                    // transition the workers make, so each submission is
+                    // owned exactly once no matter which side wins.
+                    if self.subs[mate].life.try_claim_queued() {
+                        match &mut self.workers[worker] {
+                            Worker::Run { mates, .. } => mates.push(mate),
+                            other => unreachable!("ClaimMate on {other:?}"),
+                        }
+                        // The mate's ready entry stays behind as a husk
+                        // (Pop reaps it), exactly like the real pool.
+                    }
+                }
+                Action::Cancel(i) => {
+                    self.cancels_left[i] = false;
+                    self.subs[i].cancel = true;
+                    // RunHandle::cancel: transient claim — a queued or
+                    // parked submission finishes Cancelled immediately;
+                    // a running one keeps only the cooperative flag.
+                    if self.subs[i].life.try_claim().is_some() {
+                        self.gate(i, Outcome::Cancelled(None));
+                    }
+                }
+                Action::ParkRequest(i) => {
+                    self.parks_left[i] = false;
+                    self.subs[i].park_req = true;
+                }
+                Action::DeliverStream => {
+                    let h = self.done.pop_front().expect("enabled() checked");
+                    // claim_completion: None = a join got there first —
+                    // the stream skips the husk.
+                    if self.subs[h].life.take_outcome().is_some() {
+                        self.delivered[h] += 1;
+                    }
+                }
+                Action::Join(i) => {
+                    self.joins_left[i] = false;
+                    // None = the stream already delivered it: join's
+                    // loud-error path, not a second delivery.
+                    if self.subs[i].life.take_outcome().is_some() {
+                        self.delivered[i] += 1;
+                    }
+                }
+            }
+            self.check()
+        }
+
+        /// Invariants that must hold after **every** action.
+        fn check(&self) -> Result<(), Violation> {
+            let unfinished = self
+                .subs
+                .iter()
+                .filter(|s| s.submitted && !s.life.is_finished())
+                .count();
+            if self.live != unfinished {
+                return Err(Violation::LiveCountMismatch { live: self.live, unfinished });
+            }
+            for (i, &d) in self.delivered.iter().enumerate() {
+                if d > 1 {
+                    return Err(Violation::DoubleDelivery { sub: i });
+                }
+            }
+            for (i, s) in self.subs.iter().enumerate() {
+                if s.life.phase() == Phase::Parked && s.cancel {
+                    return Err(Violation::ParkBeatCancel { sub: i });
+                }
+            }
+            let mut owned = vec![false; self.subs.len()];
+            for worker in &self.workers {
+                if let Worker::Run { sub, mates } = worker {
+                    for &j in std::iter::once(sub).chain(mates) {
+                        if owned[j] {
+                            return Err(Violation::ClaimOverlap { sub: j });
+                        }
+                        owned[j] = true;
+                        let phase = self.subs[j].life.phase();
+                        if phase != Phase::Running {
+                            return Err(Violation::OwnerStateMismatch { sub: j, phase });
+                        }
+                    }
+                }
+            }
+            Ok(())
+        }
+
+        /// A schedule is complete when every submission reached a
+        /// terminal state, the stream is drained, and (full mode) every
+        /// outcome was delivered exactly once.
+        pub fn is_complete(&self, cfg: &Config) -> bool {
+            let all_finished =
+                self.subs.iter().all(|s| s.submitted && s.life.is_finished());
+            if cfg.pure_steps {
+                return all_finished;
+            }
+            all_finished
+                && self.done.is_empty()
+                && self.delivered.iter().all(|&d| d == 1)
+        }
+
+        /// Deterministic, collision-free byte encoding of the state —
+        /// the explorer's memoization key.
+        pub fn encode(&self) -> Vec<u8> {
+            let mut out = Vec::with_capacity(16 + 4 * self.subs.len());
+            for s in &self.subs {
+                out.push(s.life.phase() as u8);
+                out.push(
+                    (s.submitted as u8)
+                        | (s.cancel as u8) << 1
+                        | (s.park_req as u8) << 2,
+                );
+                out.push(s.steps_left);
+            }
+            out.push(0xFE);
+            out.extend(self.ready.iter().map(|&i| i as u8));
+            out.push(0xFE);
+            out.extend(self.done.iter().map(|&i| i as u8));
+            out.push(0xFE);
+            for w in &self.workers {
+                match w {
+                    Worker::Idle => out.push(0xF0),
+                    Worker::Asleep => out.push(0xF1),
+                    Worker::Run { sub, mates } => {
+                        out.push(0xF2);
+                        out.push(*sub as u8);
+                        out.push(mates.len() as u8);
+                        out.extend(mates.iter().map(|&m| m as u8));
+                    }
+                }
+            }
+            out.push(self.notifies as u8);
+            out.extend(self.delivered.iter().copied());
+            let pack_bools = |v: &[bool]| -> u8 {
+                v.iter().enumerate().fold(0u8, |acc, (i, &b)| acc | ((b as u8) << i))
+            };
+            out.push(pack_bools(&self.cancels_left));
+            out.push(pack_bools(&self.parks_left));
+            out.push(pack_bools(&self.joins_left));
+            out
+        }
+
+        /// How many deliveries each submission received (test support).
+        pub fn delivered(&self) -> &[u8] {
+            &self.delivered
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done() -> Outcome<u32> {
+        Outcome::Done(7)
+    }
+
+    #[test]
+    fn claim_is_exclusive_and_single_winner() {
+        let mut l: Lifecycle<u32> = Lifecycle::new();
+        assert_eq!(l.phase(), Phase::Queued);
+        assert_eq!(l.try_claim(), Some(ClaimedFrom::Queued));
+        // the racing second claimant must lose
+        assert_eq!(l.try_claim(), None);
+        assert!(!l.try_claim_queued());
+        l.finish(done());
+        assert_eq!(l.try_claim(), None, "terminal states are never claimable");
+    }
+
+    #[test]
+    fn park_resume_claims_report_parked_origin() {
+        let mut l: Lifecycle<u32> = Lifecycle::new();
+        assert_eq!(l.try_claim(), Some(ClaimedFrom::Queued));
+        l.park();
+        assert_eq!(l.phase(), Phase::Parked);
+        assert!(!l.try_claim_queued(), "pack leaders must not claim parked runs");
+        assert_eq!(l.try_claim(), Some(ClaimedFrom::Parked));
+    }
+
+    #[test]
+    fn outcome_is_delivered_exactly_once() {
+        let mut l: Lifecycle<u32> = Lifecycle::new();
+        assert!(l.take_outcome().is_none(), "nothing to deliver while queued");
+        l.try_claim().unwrap();
+        l.finish(Outcome::Cancelled(None));
+        assert_eq!(l.phase(), Phase::Cancelled);
+        assert!(l.take_outcome().is_some());
+        assert!(l.take_outcome().is_none(), "second delivery must be impossible");
+        assert_eq!(l.phase(), Phase::Delivered);
+        assert!(l.is_finished());
+    }
+
+    #[test]
+    #[should_panic(expected = "finish() from Queued")]
+    fn finishing_without_a_claim_panics_in_release_too() {
+        let mut l: Lifecycle<u32> = Lifecycle::new();
+        l.finish(done()); // no claim: the terminal gate must refuse
+    }
+
+    #[test]
+    #[should_panic(expected = "park() from Parked")]
+    fn double_park_panics() {
+        let mut l: Lifecycle<u32> = Lifecycle::new();
+        l.try_claim().unwrap();
+        l.park();
+        l.park();
+    }
+
+    #[test]
+    fn fork_duplicates_the_delivery_token_for_model_branches() {
+        let mut l: Lifecycle<u32> = Lifecycle::new();
+        l.try_claim().unwrap();
+        l.finish(done());
+        let mut a = l.fork();
+        let mut b = l.fork();
+        assert!(a.take_outcome().is_some());
+        assert!(b.take_outcome().is_some(), "each branch is its own world");
+    }
+}

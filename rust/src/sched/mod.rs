@@ -49,6 +49,7 @@
 //! the results, reports, and determinism contract are identical — only
 //! the wall-clock overlap is lost.
 
+pub mod lifecycle;
 pub mod queue;
 pub mod shard;
 
@@ -260,6 +261,7 @@ impl ArtifactCache {
     /// The slow path: resolve the artifact *directory* (verifying pins
     /// and, with a store attached, publishing or materializing), then load
     /// and cross-check the manifest.
+    // contract-lint: holds cache.slot (only called from `load` under the slot guard)
     fn load_uncached(&self, rt: &Arc<Runtime>, key: &str) -> Result<Artifact> {
         let dir = self.root.join(key);
         let pinned = lock(&self.pins).get(key).cloned();

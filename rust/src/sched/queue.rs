@@ -128,6 +128,7 @@ use anyhow::{Context, Result};
 
 use crate::metrics::StepKind;
 use crate::runtime::{Runtime, StreamStats, TransferSnapshot};
+use crate::sched::lifecycle::{ClaimedFrom, Lifecycle, Outcome, Phase};
 use crate::sched::{
     execute_run_cancellable, execute_run_resumable, lock, ArtifactCache, RunOutput, RunSpec,
     SlotOutcome,
@@ -368,23 +369,12 @@ pub struct TenantStats {
     pub transfers: TransferSnapshot,
 }
 
-enum Outcome<R> {
-    Done(R),
-    Cancelled(Option<R>),
-    Failed(anyhow::Error),
-}
-
-enum HandleState<R> {
-    Queued,
-    Running,
-    /// Checkpointed at a step boundary and re-queued to resume.
-    Parked,
-    /// `None` once [`RunHandle::join`] or the completions stream took the
-    /// outcome.
-    Finished(Option<Outcome<R>>),
-}
-
 /// Shared between a [`RunHandle`] and the queue: one per submission.
+/// The `state` field holds the submission's [`Lifecycle`] — the pure
+/// state machine (claim exclusivity, terminal gate, exactly-once
+/// delivery) extracted into `crate::sched::lifecycle` and model-checked
+/// exhaustively in `rust/tests/lifecycle_model.rs`; this queue supplies
+/// the locks, condvars, and I/O around it.
 struct HandleShared<R> {
     seq: u64,
     tenant: String,
@@ -403,7 +393,7 @@ struct HandleShared<R> {
     /// group has no per-member park point (preemption composes with
     /// packing at group boundaries only).
     preemptible: bool,
-    state: Mutex<HandleState<R>>,
+    state: Mutex<Lifecycle<R>>,
     cv: Condvar,
 }
 
@@ -542,6 +532,7 @@ fn fair_cost(t: &TenantStats) -> u128 {
 /// to FIFO, so priority/FIFO ordering guarantees are unchanged for one
 /// tenant. Submissions cancelled while queued are reaped (dropped
 /// unexecuted) here. Returns `None` when paused or empty.
+// contract-lint: holds queue.state (callers pass the `shared.state` guard as `st`)
 fn take_next<R>(shared: &Shared<R>, st: &mut QueueState<R>) -> Option<Entry<R>> {
     if st.paused {
         return None;
@@ -573,7 +564,7 @@ fn take_next<R>(shared: &Shared<R>, st: &mut QueueState<R>) -> Option<Entry<R>> 
             st.ready.remove(&prio);
         }
         st.queued -= 1;
-        let finished = matches!(&*lock(&entry.handle.state), HandleState::Finished(_));
+        let finished = lock(&entry.handle.state).is_finished();
         if finished {
             continue; // cancelled while queued: never execute
         }
@@ -595,10 +586,10 @@ fn finish_handle<R>(shared: &Shared<R>, handle: &Arc<HandleShared<R>>, outcome: 
     if let Some(path) = lock(&handle.park_file).take() {
         let _ = std::fs::remove_file(path);
     }
-    {
-        let mut st = lock(&handle.state);
-        *st = HandleState::Finished(Some(outcome));
-    }
+    // Lifecycle::finish asserts the caller won the Running claim first —
+    // the exactly-once half of this gate is mechanized in the state
+    // machine itself, not in this function's call sites.
+    lock(&handle.state).finish(outcome);
     handle.cv.notify_all();
     {
         let mut st = lock(&shared.state);
@@ -623,7 +614,7 @@ fn repark_entry<R>(shared: &Shared<R>, handle: Arc<HandleShared<R>>, next: Job<R
         finish_handle(shared, &handle, Outcome::Cancelled(None));
         return;
     }
-    *lock(&handle.state) = HandleState::Parked;
+    lock(&handle.state).park();
     lock(&shared.tenants).entry(handle.tenant.clone()).or_default().parked += 1;
     {
         let mut st = lock(&shared.state);
@@ -658,22 +649,15 @@ fn repark_entry<R>(shared: &Shared<R>, handle: Arc<HandleShared<R>>, next: Job<R
 /// builds run the same state machine.
 fn run_entry<R>(shared: &Shared<R>, entry: Entry<R>) {
     let handle = entry.handle;
-    {
-        let mut st = lock(&handle.state);
-        match *st {
-            // cancel raced the pop: treated as cancel-before-start (or
-            // cancel-while-parked — finish_handle already published it)
-            HandleState::Finished(_) => return,
-            // a pack leader claimed this submission out of the pool
-            // (`submit_run_packable`), or a cancel transiently claimed
-            // it: the claimant owns it now — it publishes the outcome;
-            // the queue entry is just a husk. Only those claims ever set
-            // Running outside this function, and only on entries whose
-            // job is recoverable elsewhere, so the dropped `entry.job`
-            // loses nothing.
-            HandleState::Running => return,
-            HandleState::Queued | HandleState::Parked => *st = HandleState::Running,
-        }
+    // The exclusivity transition (Lifecycle::try_claim). A lost claim
+    // means either a cancel raced the pop (finish_handle already
+    // published the outcome) or a pack leader / transient cancel claim
+    // owns the submission — the claimant publishes the outcome and the
+    // queue entry is just a husk. Those claims only land on entries
+    // whose job is recoverable elsewhere, so the dropped `entry.job`
+    // loses nothing.
+    if lock(&handle.state).try_claim().is_none() {
+        return;
     }
     lock(&shared.tenants).entry(handle.tenant.clone()).or_default().picked += 1;
     if handle.preemptible {
@@ -990,7 +974,7 @@ impl<R: 'static> RunQueue<R> {
                 park: Arc::new(AtomicBool::new(false)),
                 park_file: Arc::new(Mutex::new(None)),
                 preemptible,
-                state: Mutex::new(HandleState::Queued),
+                state: Mutex::new(Lifecycle::new()),
                 cv: Condvar::new(),
             });
             st.next_seq += 1;
@@ -1244,12 +1228,10 @@ pub struct Completion<R = RunOutput> {
 /// when a `join` got there first (the stream skips it — exactly-once
 /// delivery across both surfaces).
 fn claim_completion<R>(h: Arc<HandleShared<R>>) -> Option<Completion<R>> {
-    let outcome = match &mut *lock(&h.state) {
-        HandleState::Finished(slot) => slot.take(),
-        // unreachable in practice: only finish_handle queues into `done`,
-        // and it publishes Finished first
-        _ => None,
-    }?;
+    // take_outcome is None when a `join` got there first (the stream
+    // skips it) — and, vacuously, on a non-terminal state, which cannot
+    // occur here: only finish_handle queues into `done`, Finished first.
+    let outcome = lock(&h.state).take_outcome()?;
     let result = match outcome {
         Outcome::Done(r) => Ok(RunResult::Done(r)),
         Outcome::Cancelled(r) => Ok(RunResult::Cancelled(r)),
@@ -1639,14 +1621,17 @@ fn lead_or_run_solo(
                     continue;
                 }
                 let mut st = lock(&mate.handle.state);
-                if !matches!(*st, HandleState::Queued) {
+                if st.phase() != Phase::Queued {
                     // cancelled while queued, or already running solo:
                     // drop the stale pool entry, never execute it here
                     continue;
                 }
                 match lock(&mate.data).take() {
                     Some(d) => {
-                        *st = HandleState::Running;
+                        // the state lock is held since the Queued check,
+                        // so this leader claim cannot lose the race
+                        let won = st.try_claim_queued();
+                        assert!(won, "phase checked Queued under the held state lock");
                         drop(st);
                         members.push(d);
                         claimed.push(Arc::clone(&mate.handle));
@@ -1671,8 +1656,10 @@ fn lead_or_run_solo(
     let group_r = match group_r {
         Some(r) => r,
         None => {
-            // nobody to pack with (sizes start at 2): plain solo run
-            debug_assert!(claimed.is_empty());
+            // Hard assert: dropping a claimed entry here would strand its
+            // joiner forever (its queue slot is already gone) — the
+            // exactly-once-delivery contract the lifecycle model proves.
+            assert!(claimed.is_empty(), "solo fallback with claimed pack mates");
             let own = members.pop().expect("leader is always present");
             return run_solo_member(rt, artifacts, shared, own, Some(token.flag()));
         }
@@ -1768,33 +1755,20 @@ impl<R> Drop for RunQueue<R> {
         for e in leftovers {
             // Claim Queued/Parked entries with a transient Running (the
             // same exclusivity transition cancel() and the workers use)
-            // so a racing claim settles exactly one owner. Anything else
-            // is a husk — individually cancelled, or pack-claimed with
-            // its real outcome published by the leader — and shutdown
-            // must not clobber it.
-            let was_parked = {
-                let mut st = lock(&e.handle.state);
-                match *st {
-                    HandleState::Queued => {
-                        *st = HandleState::Running;
-                        Some(false)
-                    }
-                    HandleState::Parked => {
-                        *st = HandleState::Running;
-                        Some(true)
-                    }
-                    _ => None,
-                }
-            };
-            match was_parked {
-                Some(false) => {
+            // so a racing claim settles exactly one owner. A lost claim
+            // means a husk — individually cancelled, or pack-claimed
+            // with its real outcome published by the leader — and
+            // shutdown must not clobber it.
+            let claimed = lock(&e.handle.state).try_claim();
+            match claimed {
+                Some(ClaimedFrom::Queued) => {
                     lock(&self.shared.tenants)
                         .entry(e.handle.tenant.clone())
                         .or_default()
                         .cancelled += 1;
                     finish_handle(&self.shared, &e.handle, Outcome::Cancelled(None));
                 }
-                Some(true) => {
+                Some(ClaimedFrom::Parked) => {
                     lock(&self.shared.tenants)
                         .entry(e.handle.tenant.clone())
                         .or_default()
@@ -1842,16 +1816,16 @@ impl<R: 'static> RunHandle<R> {
     /// Non-blocking status. Never executes work — in inline-drain builds
     /// a queued submission stays `Queued` until something `join`s.
     pub fn poll(&self) -> RunPoll {
-        match &*lock(&self.handle.state) {
-            HandleState::Queued => RunPoll::Queued,
-            HandleState::Running => RunPoll::Running,
-            HandleState::Parked => RunPoll::Parked,
-            HandleState::Finished(Some(Outcome::Done(_))) => RunPoll::Done,
-            HandleState::Finished(Some(Outcome::Cancelled(_))) => RunPoll::Cancelled,
-            HandleState::Finished(Some(Outcome::Failed(_))) => RunPoll::Failed,
+        match lock(&self.handle.state).phase() {
+            Phase::Queued => RunPoll::Queued,
+            Phase::Running => RunPoll::Running,
+            Phase::Parked => RunPoll::Parked,
+            Phase::Done => RunPoll::Done,
+            Phase::Cancelled => RunPoll::Cancelled,
+            Phase::Failed => RunPoll::Failed,
             // the completions stream took the outcome (or join did, which
             // also consumes the handle): terminal and delivered.
-            HandleState::Finished(None) => RunPoll::Done,
+            Phase::Delivered => RunPoll::Done,
         }
     }
 
@@ -1875,16 +1849,7 @@ impl<R: 'static> RunHandle<R> {
         // exclusivity transition the workers and pack leaders use) so a
         // racing pop or pack claim settles exactly one owner; the queue
         // entry left behind is a husk the next take_next reaps.
-        let claimed = {
-            let mut st = lock(&self.handle.state);
-            match *st {
-                HandleState::Queued | HandleState::Parked => {
-                    *st = HandleState::Running;
-                    true
-                }
-                _ => false,
-            }
-        };
+        let claimed = lock(&self.handle.state).try_claim().is_some();
         if claimed {
             lock(&self.shared.tenants)
                 .entry(self.handle.tenant.clone())
@@ -1908,8 +1873,8 @@ impl<R: 'static> RunHandle<R> {
         self.drive_inline()?;
         let mut st = lock(&self.handle.state);
         loop {
-            if let HandleState::Finished(slot) = &mut *st {
-                let Some(outcome) = slot.take() else {
+            if st.is_finished() {
+                let Some(outcome) = st.take_outcome() else {
                     // the completions stream claimed it first — each
                     // outcome is delivered exactly once, so this join
                     // came too late by construction, not by timing.
@@ -1943,7 +1908,7 @@ impl<R: 'static> RunHandle<R> {
     #[cfg(not(feature = "xla-shared-client"))]
     fn drive_inline(&self) -> Result<()> {
         loop {
-            if matches!(&*lock(&self.handle.state), HandleState::Finished(_)) {
+            if lock(&self.handle.state).is_finished() {
                 return Ok(());
             }
             let (entry, paused) = {

@@ -74,7 +74,10 @@ impl Sha256 {
             self.update(&[0]);
         }
         self.update(&bit_len.to_be_bytes());
-        debug_assert_eq!(self.buf_len, 0);
+        // Hard assert: padding must land exactly on a block boundary, or
+        // every store object key derived from this digest is silently
+        // wrong — content addressing is a cross-host contract.
+        assert_eq!(self.buf_len, 0, "sha256 padding did not close the block");
         let mut out = [0u8; 32];
         for (i, w) in self.state.iter().enumerate() {
             out[4 * i..4 * i + 4].copy_from_slice(&w.to_be_bytes());

@@ -339,7 +339,9 @@ impl StepEngine {
             let loss_buf = outs.next().expect("grad_step outputs [loss, g..]");
             pending.push(PendingLoss::metered(&self.grad_prog, loss_buf, 0, &self.meter));
             let grads: Vec<xla::PjRtBuffer> = outs.collect();
-            debug_assert_eq!(grads.len(), n, "grad_step output arity");
+            // Hard assert: arity drift against the manifest would adopt
+            // gradients under the wrong parameter names downstream.
+            assert_eq!(grads.len(), n, "grad_step output arity");
             acc.add_raw_bufs(&accum_prog, grads, Some(&self.meter))?;
         }
         let count = acc.count();

@@ -1,0 +1,161 @@
+//! The committed allowlist ratchet (`rust/CONTRACT_ALLOW`).
+//!
+//! Format: one entry per line, `rule|file|token|count|reason`, `#`
+//! comments and blank lines ignored. An entry suppresses exactly `count`
+//! findings of `rule` in `file` carrying `token` — a *ratchet* in both
+//! directions: more findings than the allowed count fails (a regression
+//! landed), fewer also fails (the code improved; shrink the entry so the
+//! better state is locked in). An entry matching nothing at all is stale
+//! and fails too.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::rules::Finding;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub rule: String,
+    pub file: String,
+    pub token: String,
+    pub count: usize,
+    pub reason: String,
+}
+
+pub fn parse(text: &str) -> Result<Vec<Entry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(5, '|').collect();
+        if parts.len() != 5 {
+            return Err(format!(
+                "CONTRACT_ALLOW:{}: expected `rule|file|token|count|reason`, got: {line}",
+                i + 1
+            ));
+        }
+        let count: usize = parts[3]
+            .trim()
+            .parse()
+            .map_err(|_| format!("CONTRACT_ALLOW:{}: bad count '{}'", i + 1, parts[3]))?;
+        out.push(Entry {
+            rule: parts[0].trim().to_string(),
+            file: parts[1].trim().to_string(),
+            token: parts[2].trim().to_string(),
+            count,
+            reason: parts[4].trim().to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Apply the allowlist to raw findings. Returns the human-readable
+/// errors that survive: unallowed findings, count mismatches (either
+/// direction), and stale entries.
+pub fn apply(findings: &[Finding], allow: &[Entry]) -> Vec<String> {
+    let mut grouped: BTreeMap<(String, String, String), Vec<&Finding>> = BTreeMap::new();
+    for f in findings {
+        grouped
+            .entry((f.rule.to_string(), f.file.clone(), f.token.clone()))
+            .or_default()
+            .push(f);
+    }
+    let mut errors = Vec::new();
+    let mut used = vec![false; allow.len()];
+    for ((rule, file, token), group) in &grouped {
+        let entry = allow
+            .iter()
+            .position(|e| &e.rule == rule && &e.file == file && &e.token == token);
+        match entry {
+            Some(i) => {
+                used[i] = true;
+                let want = allow[i].count;
+                if group.len() != want {
+                    let mut msg = format!(
+                        "[{rule}] {file}: {} site(s) of `{token}`, allowlist ratchet says {want} — \
+                         a change in either direction needs a CONTRACT_ALLOW update:",
+                        group.len()
+                    );
+                    for f in group {
+                        let _ = write!(msg, "\n    {}:{}: {}", f.file, f.line, f.msg);
+                    }
+                    errors.push(msg);
+                }
+            }
+            None => {
+                for f in group {
+                    errors.push(format!(
+                        "[{rule}] {}:{}: {} (no CONTRACT_ALLOW entry)",
+                        f.file, f.line, f.msg
+                    ));
+                }
+            }
+        }
+    }
+    for (i, e) in allow.iter().enumerate() {
+        if !used[i] {
+            errors.push(format!(
+                "[stale-allowlist] CONTRACT_ALLOW entry `{}|{}|{}|{}` matches nothing — \
+                 the code no longer has these sites; remove the entry to ratchet down",
+                e.rule, e.file, e.token, e.count
+            ));
+        }
+    }
+    errors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::Finding;
+
+    fn f(rule: &'static str, file: &str, token: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.into(),
+            line: 1,
+            token: token.into(),
+            msg: "m".into(),
+        }
+    }
+
+    #[test]
+    fn exact_count_suppresses() {
+        let allow = parse("meter-bypass|a.rs|.execute_raw(|2|ok\n").unwrap();
+        let fs = vec![f("meter-bypass", "a.rs", ".execute_raw("), f("meter-bypass", "a.rs", ".execute_raw(")];
+        assert!(apply(&fs, &allow).is_empty());
+    }
+
+    #[test]
+    fn ratchet_fires_in_both_directions_and_on_stale() {
+        let allow = parse("meter-bypass|a.rs|.execute_raw(|2|ok\n").unwrap();
+        // one too many
+        let many = vec![
+            f("meter-bypass", "a.rs", ".execute_raw("),
+            f("meter-bypass", "a.rs", ".execute_raw("),
+            f("meter-bypass", "a.rs", ".execute_raw("),
+        ];
+        assert_eq!(apply(&many, &allow).len(), 1);
+        // one too few (improvement must be locked in)
+        let few = vec![f("meter-bypass", "a.rs", ".execute_raw(")];
+        assert_eq!(apply(&few, &allow).len(), 1);
+        // entry with no findings at all is stale
+        assert!(apply(&[], &allow)[0].contains("stale-allowlist"));
+    }
+
+    #[test]
+    fn unlisted_findings_error() {
+        let errs = apply(&[f("lock-order", "b.rs", "queue.state")], &[]);
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].contains("no CONTRACT_ALLOW entry"));
+    }
+
+    #[test]
+    fn bad_lines_are_rejected() {
+        assert!(parse("only|three|fields\n").is_err());
+        assert!(parse("r|f|t|notanumber|why\n").is_err());
+        assert!(parse("# comment\n\nr|f|t|1|why\n").unwrap().len() == 1);
+    }
+}

@@ -1,0 +1,430 @@
+//! Repo-level gates folded in from CI shell: `contract-lint docs` (the
+//! doc-presence greps that used to live inline in ci.yml tier-1) and
+//! `contract-lint xla-gate` (the full logic of ci/check_xla_audit.sh —
+//! that script is now a thin wrapper exec'ing this subcommand).
+
+use std::fs;
+use std::path::Path;
+
+// ----------------------------------------------------------------- docs
+
+/// Documentation presence gate: the contract docs must exist, be
+/// non-empty, and be referenced from the README/ROADMAP so they stay
+/// discoverable. Returns human-readable errors (empty = pass).
+pub fn docs(root: &Path) -> Vec<String> {
+    let mut errs = Vec::new();
+    let nonempty = [
+        "README.md",
+        "docs/transfer-contract.md",
+        "docs/queue-serving.md",
+        "docs/artifact-store.md",
+        "docs/static-analysis.md",
+    ];
+    for rel in nonempty {
+        match fs::read_to_string(root.join(rel)) {
+            Ok(s) if !s.trim().is_empty() => {}
+            Ok(_) => errs.push(format!("docs gate: {rel} exists but is empty")),
+            Err(_) => errs.push(format!("docs gate: {rel} is missing")),
+        }
+    }
+    let refs: &[(&str, &[&str])] = &[
+        (
+            "README.md",
+            &["transfer-contract", "queue-serving", "artifact-store", "static-analysis"],
+        ),
+        ("ROADMAP.md", &["transfer-contract"]),
+    ];
+    for (file, needles) in refs {
+        let text = fs::read_to_string(root.join(file)).unwrap_or_default();
+        for needle in *needles {
+            if !text.contains(needle) {
+                errs.push(format!("docs gate: {file} does not reference \"{needle}\""));
+            }
+        }
+    }
+    errs
+}
+
+// ------------------------------------------------------------- xla-gate
+
+const FEATURE: &str = "xla-shared-client";
+
+/// Audited `thread::spawn`/`thread::scope` line counts per scheduler
+/// file — the same ratchet check_xla_audit.sh carried: a new spawn site
+/// fails until a human verifies it is cfg-gated and bumps the count.
+///   sched/mod.rs   1 — WorkerPool::scatter's thread::scope (cfg-gated)
+///   sched/queue.rs 2 — RunQueue worker spawn + the gated-only
+///                      concurrent-submitters test's scope
+const SPAWN_RATCHET: &[(&str, usize)] =
+    &[("rust/src/sched/mod.rs", 1), ("rust/src/sched/queue.rs", 2)];
+
+/// The xla thread-safety audit gate. Returns `(errors, info)`: empty
+/// errors = pass; info lines narrate the verdict like the shell did.
+pub fn xla_gate(root: &Path) -> (Vec<String>, Vec<String>) {
+    let mut errs = Vec::new();
+    let mut info = Vec::new();
+
+    let cargo_toml = match fs::read_to_string(root.join("rust/Cargo.toml")) {
+        Ok(s) => s,
+        Err(_) => return (vec!["xla gate: missing rust/Cargo.toml".into()], info),
+    };
+    let audit = match fs::read_to_string(root.join("rust/XLA_AUDIT")) {
+        Ok(s) => s,
+        Err(_) => {
+            return (
+                vec!["xla gate: missing rust/XLA_AUDIT (see rust/Cargo.toml, thread-safety gate)"
+                    .into()],
+                info,
+            )
+        }
+    };
+
+    // 1. The feature must be strictly opt-in: never a default feature.
+    if features_section(&cargo_toml)
+        .iter()
+        .any(|l| l.trim_start().starts_with("default") && l.contains('=') && l.contains(FEATURE))
+    {
+        errs.push(format!(
+            "xla gate: {FEATURE} is in the crate's default features; it must stay opt-in"
+        ));
+    }
+
+    // 2. Spawn-site ratchet + cfg-gate presence in the scheduler files.
+    for &(rel, want) in SPAWN_RATCHET {
+        match fs::read_to_string(root.join(rel)) {
+            Err(_) => errs.push(format!("xla gate: probe list out of date: missing {rel}")),
+            Ok(text) => {
+                let got = text
+                    .lines()
+                    .filter(|l| l.contains("thread::spawn") || l.contains("thread::scope"))
+                    .count();
+                if got != want {
+                    errs.push(format!(
+                        "xla gate: {rel} has {got} thread entry points, audited count is {want} \
+                         — new spawn sites must be cfg-gated on {FEATURE} and the audited count \
+                         updated in contract-lint's SPAWN_RATCHET"
+                    ));
+                }
+                if !text.contains(&format!("feature = \"{FEATURE}\"")) {
+                    errs.push(format!(
+                        "xla gate: {rel} spawns threads but carries no {FEATURE} cfg-gate"
+                    ));
+                }
+            }
+        }
+    }
+
+    // 3. Does anything under CI control enable the feature? Compile-only
+    // `cargo check` lines are exempt: type-checking runs nothing, so it
+    // is sound against any xla revision.
+    let mut ci_files: Vec<String> = Vec::new();
+    if let Ok(rd) = fs::read_dir(root.join(".github/workflows")) {
+        for e in rd.flatten() {
+            let n = e.file_name().to_string_lossy().into_owned();
+            if n.ends_with(".yml") || n.ends_with(".yaml") {
+                ci_files.push(format!(".github/workflows/{n}"));
+            }
+        }
+    }
+    ci_files.push("Makefile".into());
+    ci_files.push("rust/Makefile".into());
+    if let Ok(rd) = fs::read_dir(root.join("ci")) {
+        for e in rd.flatten() {
+            let n = e.file_name().to_string_lossy().into_owned();
+            if n.ends_with(".sh") && n != "check_xla_audit.sh" {
+                ci_files.push(format!("ci/{n}"));
+            }
+        }
+    }
+    ci_files.sort();
+    let mut enabled_by = None;
+    'scan: for rel in &ci_files {
+        let Ok(text) = fs::read_to_string(root.join(rel)) else { continue };
+        for line in text.lines() {
+            if line_enables_feature(line) && !is_cargo_check_line(line) {
+                enabled_by = Some(rel.clone());
+                break 'scan;
+            }
+        }
+    }
+
+    let Some(enabled_by) = enabled_by else {
+        info.push(format!(
+            "xla gate: OK — {FEATURE} not enabled anywhere in CI; default builds compile the \
+             scheduler without thread fan-out (sound against any xla revision)."
+        ));
+        return (errs, info);
+    };
+    info.push(format!(
+        "xla gate: {enabled_by} builds with {FEATURE} — verifying the audit trail"
+    ));
+
+    // 3a. Cargo.toml must pin a rev (a floating branch cannot be audited).
+    let pinned = pinned_xla_rev(&cargo_toml);
+    let Some(pinned) = pinned else {
+        errs.push(format!(
+            "xla gate: {enabled_by} enables {FEATURE} but rust/Cargo.toml does not pin xla to a \
+             rev (still floating on a branch)"
+        ));
+        return (errs, info);
+    };
+
+    // 3b. The pinned rev must be the audited one.
+    let audited = audit
+        .lines()
+        .map(str::trim)
+        .find(|l| !l.is_empty() && !l.starts_with('#'))
+        .unwrap_or("")
+        .to_string();
+    if audited.is_empty() || audited == "none" {
+        errs.push(format!(
+            "xla gate: {enabled_by} enables {FEATURE} but rust/XLA_AUDIT records no audited rev"
+        ));
+        return (errs, info);
+    }
+    if pinned != audited {
+        errs.push(format!(
+            "xla gate: pinned xla rev ({pinned}) != audited rev ({audited}) in rust/XLA_AUDIT"
+        ));
+    }
+
+    // 3c. A checked-in lockfile must resolve xla to the audited rev.
+    for lock in ["rust/Cargo.lock", "Cargo.lock"] {
+        let Ok(text) = fs::read_to_string(root.join(lock)) else { continue };
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, l) in lines.iter().enumerate() {
+            if l.trim() == "name = \"xla\"" {
+                let window = lines[i..lines.len().min(i + 3)].join("\n");
+                if !window.contains(&audited) {
+                    errs.push(format!(
+                        "xla gate: {lock} resolves xla to a different rev than the audited \
+                         {audited}"
+                    ));
+                }
+            }
+        }
+    }
+    if errs.is_empty() {
+        info.push(format!("xla gate: OK — {FEATURE} is backed by audited rev {audited}"));
+    }
+    (errs, info)
+}
+
+/// Lines of the `[features]` table (up to the next `[section]`).
+fn features_section(cargo_toml: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut inside = false;
+    for line in cargo_toml.lines() {
+        let t = line.trim();
+        if t == "[features]" {
+            inside = true;
+            continue;
+        }
+        if inside {
+            if t.starts_with('[') {
+                break;
+            }
+            out.push(line);
+        }
+    }
+    out
+}
+
+/// Mirrors the shell's enable-detection regex:
+/// `--all-features|(--features|[[:space:]'"]-F)[= ]?[^#]*FEATURE`.
+fn line_enables_feature(line: &str) -> bool {
+    if line.contains("--all-features") {
+        return true;
+    }
+    let mut starts = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find("--features") {
+        starts.push(from + p + "--features".len());
+        from += p + 1;
+    }
+    from = 0;
+    while let Some(p) = line[from..].find("-F") {
+        let at = from + p;
+        let pre = line[..at].chars().next_back();
+        if matches!(pre, Some(c) if c.is_whitespace() || c == '\'' || c == '"') {
+            starts.push(at + 2);
+        }
+        from = at + 1;
+    }
+    for s in starts {
+        let rest = &line[s..];
+        let rest = rest.split('#').next().unwrap_or("");
+        if rest.contains(FEATURE) {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_cargo_check_line(line: &str) -> bool {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    toks.windows(2).any(|w| w[0] == "cargo" && w[1] == "check")
+}
+
+/// The `rev = "<sha>"` pin on the `xla = …` dependency line, if any.
+fn pinned_xla_rev(cargo_toml: &str) -> Option<String> {
+    for line in cargo_toml.lines() {
+        let t = line.trim_start();
+        if !(t.starts_with("xla ") || t.starts_with("xla=")) {
+            continue;
+        }
+        let Some(rev_at) = t.find("rev") else { continue };
+        let rest = &t[rev_at + 3..];
+        let rest = rest.trim_start().strip_prefix('=')?.trim_start();
+        let rest = rest.strip_prefix('"')?;
+        let sha: String = rest.chars().take_while(|c| *c != '"').collect();
+        if (7..=40).contains(&sha.len()) && sha.chars().all(|c| c.is_ascii_hexdigit()) {
+            return Some(sha);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+    /// A scratch repo tree under the system temp dir; cleaned on drop.
+    struct Tree {
+        root: PathBuf,
+    }
+    impl Tree {
+        fn new() -> Tree {
+            let root = std::env::temp_dir().join(format!(
+                "contract-lint-test-{}-{}",
+                std::process::id(),
+                DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            fs::create_dir_all(&root).unwrap();
+            Tree { root }
+        }
+        fn file(&self, rel: &str, content: &str) -> &Tree {
+            let p = self.root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(p, content).unwrap();
+            self
+        }
+    }
+    impl Drop for Tree {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.root);
+        }
+    }
+
+    fn docs_tree() -> Tree {
+        let t = Tree::new();
+        t.file("README.md", "transfer-contract queue-serving artifact-store static-analysis")
+            .file("ROADMAP.md", "transfer-contract")
+            .file("docs/transfer-contract.md", "x")
+            .file("docs/queue-serving.md", "x")
+            .file("docs/artifact-store.md", "x")
+            .file("docs/static-analysis.md", "x");
+        t
+    }
+
+    #[test]
+    fn docs_gate_passes_then_fails_on_missing_and_unreferenced() {
+        let t = docs_tree();
+        assert!(docs(&t.root).is_empty());
+        t.file("docs/static-analysis.md", "  \n");
+        assert!(docs(&t.root).iter().any(|e| e.contains("empty")));
+        t.file("README.md", "transfer-contract queue-serving artifact-store");
+        let errs = docs(&t.root);
+        assert!(errs.iter().any(|e| e.contains("static-analysis")), "{errs:?}");
+    }
+
+    const SCHED_MOD: &str = "#[cfg(feature = \"xla-shared-client\")]\nthread::scope(|s| {});\n";
+    const SCHED_QUEUE: &str = "#[cfg(feature = \"xla-shared-client\")]\n\
+        thread::spawn(|| {});\nthread::scope(|s| {});\n";
+
+    fn gate_tree() -> Tree {
+        let t = Tree::new();
+        t.file(
+            "rust/Cargo.toml",
+            "[package]\nname = \"x\"\n[features]\ndefault = []\nxla-shared-client = []\n",
+        )
+        .file("rust/XLA_AUDIT", "# audited rev\nnone\n")
+        .file("rust/src/sched/mod.rs", SCHED_MOD)
+        .file("rust/src/sched/queue.rs", SCHED_QUEUE);
+        t
+    }
+
+    #[test]
+    fn xla_gate_passes_when_feature_is_off_everywhere() {
+        let t = gate_tree();
+        let (errs, info) = xla_gate(&t.root);
+        assert!(errs.is_empty(), "{errs:?}");
+        assert!(info[0].contains("not enabled anywhere"));
+    }
+
+    #[test]
+    fn xla_gate_fails_on_default_feature_and_spawn_ratchet_drift() {
+        let t = gate_tree();
+        t.file(
+            "rust/Cargo.toml",
+            "[features]\ndefault = [\"xla-shared-client\"]\nxla-shared-client = []\n",
+        );
+        let (errs, _) = xla_gate(&t.root);
+        assert!(errs.iter().any(|e| e.contains("default features")), "{errs:?}");
+
+        let t2 = gate_tree();
+        t2.file("rust/src/sched/queue.rs", SCHED_QUEUE.repeat(2).as_str());
+        let (errs2, _) = xla_gate(&t2.root);
+        assert!(errs2.iter().any(|e| e.contains("audited count is 2")), "{errs2:?}");
+    }
+
+    #[test]
+    fn xla_gate_requires_audited_pin_when_ci_enables_the_feature() {
+        let t = gate_tree();
+        t.file(
+            ".github/workflows/ci.yml",
+            "run: cargo test --features xla-shared-client\n",
+        );
+        // enabled but unpinned → fail
+        let (errs, _) = xla_gate(&t.root);
+        assert!(errs.iter().any(|e| e.contains("does not pin xla")), "{errs:?}");
+        // pinned but audit says "none" → fail
+        t.file(
+            "rust/Cargo.toml",
+            "xla = { git = \"x\", rev = \"abc123def456\" }\n[features]\ndefault = []\n",
+        );
+        let (errs2, _) = xla_gate(&t.root);
+        assert!(errs2.iter().any(|e| e.contains("no audited rev")), "{errs2:?}");
+        // audited == pinned, lockfile agrees → pass
+        t.file("rust/XLA_AUDIT", "abc123def456\n");
+        t.file(
+            "rust/Cargo.lock",
+            "[[package]]\nname = \"xla\"\nversion = \"0.1.0\"\nsource = \"git+x?rev=abc123def456#abc123def456\"\n",
+        );
+        let (errs3, info3) = xla_gate(&t.root);
+        assert!(errs3.is_empty(), "{errs3:?}");
+        assert!(info3.iter().any(|l| l.contains("backed by audited rev")));
+        // lockfile drift → fail
+        t.file(
+            "rust/Cargo.lock",
+            "[[package]]\nname = \"xla\"\nversion = \"0.1.0\"\nsource = \"git+x?rev=0000000#0000000\"\n",
+        );
+        let (errs4, _) = xla_gate(&t.root);
+        assert!(errs4.iter().any(|e| e.contains("different rev")), "{errs4:?}");
+    }
+
+    #[test]
+    fn cargo_check_lines_are_exempt_and_dash_f_spellings_match() {
+        assert!(line_enables_feature("cargo test --features xla-shared-client"));
+        assert!(line_enables_feature("cargo build -F xla-shared-client"));
+        assert!(line_enables_feature("cargo test --all-features"));
+        assert!(!line_enables_feature("cargo test --features other-feature"));
+        assert!(!line_enables_feature("RUSTFLAGS=-Ffoo cargo test"));
+        assert!(is_cargo_check_line("run: cargo check --features xla-shared-client"));
+        assert!(!is_cargo_check_line("run: cargo test --features xla-shared-client"));
+    }
+}

@@ -1,0 +1,211 @@
+//! contract-lint — the repo's mechanized invariants (docs/static-analysis.md).
+//!
+//! Subcommands:
+//!   check          lint rules against rust/src + allowlist ratchet +
+//!                  unsafe-ledger drift (the default)
+//!   unsafe-ledger  print the generated ledger; `--write` rewrites
+//!                  rust/UNSAFE_LEDGER in place
+//!   docs           documentation presence/reference gate
+//!   xla-gate       the xla thread-safety audit gate (check_xla_audit.sh
+//!                  is a thin wrapper around this)
+//!   all            check + docs + xla-gate
+//!
+//! Options: `--root <dir>` (default: walk up from cwd to the first
+//! directory containing rust/src). Exit codes: 0 clean, 1 findings,
+//! 2 usage or I/O failure.
+//!
+//! Zero dependencies by design: this binary must build and run in
+//! toolchain-only CI, with no network and no PJRT.
+
+mod allowlist;
+mod gates;
+mod rules;
+mod scan;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let mut cmd: Option<String> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut write = false;
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => return ExitCode::from(usage("--root needs a path")),
+            },
+            "--write" => write = true,
+            "-h" | "--help" => {
+                eprintln!("usage: {HELP}");
+                return ExitCode::SUCCESS;
+            }
+            other if cmd.is_none() && !other.starts_with('-') => cmd = Some(other.to_string()),
+            other => return ExitCode::from(usage(&format!("unknown argument '{other}'"))),
+        }
+    }
+    let root = match root.or_else(discover_root) {
+        Some(r) => r,
+        None => {
+            eprintln!(
+                "contract-lint: cannot find the repo root (no rust/src above cwd); use --root"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    let cmd = cmd.unwrap_or_else(|| "check".to_string());
+    let code = match cmd.as_str() {
+        "check" => run_check(&root),
+        "unsafe-ledger" => run_ledger(&root, write),
+        "docs" => report("docs gate", gates::docs(&root), &[]),
+        "xla-gate" => {
+            let (errs, info) = gates::xla_gate(&root);
+            report("xla gate", errs, &info)
+        }
+        "all" => {
+            let check = run_check(&root);
+            let docs = report("docs gate", gates::docs(&root), &[]);
+            let gate = {
+                let (errs, info) = gates::xla_gate(&root);
+                report("xla gate", errs, &info)
+            };
+            check.max(docs).max(gate)
+        }
+        other => usage(&format!("unknown subcommand '{other}'")),
+    };
+    ExitCode::from(code)
+}
+
+const HELP: &str = "contract-lint [check|unsafe-ledger [--write]|docs|xla-gate|all] [--root DIR]";
+
+fn usage(msg: &str) -> u8 {
+    eprintln!("contract-lint: {msg}\nusage: {HELP}");
+    2
+}
+
+/// Walk up from cwd to the first directory containing `rust/src`.
+fn discover_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn load_sources(root: &Path) -> Result<Vec<scan::SourceFile>, u8> {
+    scan::load_tree(root, "rust/src").map_err(|e| {
+        eprintln!("contract-lint: cannot read rust/src: {e}");
+        2
+    })
+}
+
+fn run_check(root: &Path) -> u8 {
+    let files = match load_sources(root) {
+        Ok(f) => f,
+        Err(code) => return code,
+    };
+
+    let mut findings = rules::meter_bypass(&files);
+    findings.extend(rules::unsafe_safety(&files));
+    findings.extend(rules::lock_order(&files));
+    match fs::read_to_string(root.join("python/compile/model.py")) {
+        Ok(model_py) => {
+            let donating = rules::donating_programs(&model_py);
+            findings.extend(rules::donation(&files, &donating));
+        }
+        Err(e) => {
+            // The donation rule cross-checks compile metadata; a missing
+            // source of truth is a failure, not a silent skip.
+            eprintln!("contract-lint: cannot read python/compile/model.py: {e}");
+            return 2;
+        }
+    }
+
+    let allow_text = fs::read_to_string(root.join("rust/CONTRACT_ALLOW")).unwrap_or_default();
+    let allow = match allowlist::parse(&allow_text) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("contract-lint: {e}");
+            return 2;
+        }
+    };
+    let mut errors = allowlist::apply(&findings, &allow);
+
+    let committed = fs::read_to_string(root.join("rust/UNSAFE_LEDGER")).ok();
+    errors.extend(rules::check_ledger(&files, committed.as_deref()));
+
+    if errors.is_empty() {
+        println!(
+            "contract-lint: OK — {} files, {} finding(s) all covered by {} allowlist entries; \
+             unsafe ledger in sync ({} unsafe items)",
+            files.len(),
+            findings.len(),
+            allow.len(),
+            rules::unsafe_sites(&files).len()
+        );
+        0
+    } else {
+        for e in &errors {
+            eprintln!("contract-lint: {e}");
+        }
+        eprintln!("contract-lint: FAIL — {} error(s)", errors.len());
+        1
+    }
+}
+
+fn run_ledger(root: &Path, write: bool) -> u8 {
+    let files = match load_sources(root) {
+        Ok(f) => f,
+        Err(code) => return code,
+    };
+    // SAFETY-comment presence is part of the ledger contract: refuse to
+    // generate a ledger with rationale-free entries.
+    let missing = rules::unsafe_safety(&files);
+    if !missing.is_empty() {
+        for f in &missing {
+            eprintln!("contract-lint: [{}] {}:{}: {}", f.rule, f.file, f.line, f.msg);
+        }
+        return 1;
+    }
+    let generated = rules::generate_ledger(&files);
+    if write {
+        if let Err(e) = fs::write(root.join("rust/UNSAFE_LEDGER"), &generated) {
+            eprintln!("contract-lint: cannot write rust/UNSAFE_LEDGER: {e}");
+            return 2;
+        }
+        println!(
+            "contract-lint: wrote rust/UNSAFE_LEDGER ({} entries)",
+            generated.lines().filter(|l| !l.starts_with('#')).count()
+        );
+        0
+    } else {
+        print!("{generated}");
+        let committed = fs::read_to_string(root.join("rust/UNSAFE_LEDGER")).ok();
+        report(
+            "unsafe ledger",
+            rules::check_ledger(&files, committed.as_deref()),
+            &[],
+        )
+    }
+}
+
+fn report(what: &str, errors: Vec<String>, info: &[String]) -> u8 {
+    for l in info {
+        println!("contract-lint: {l}");
+    }
+    if errors.is_empty() {
+        println!("contract-lint: {what}: OK");
+        0
+    } else {
+        for e in &errors {
+            eprintln!("contract-lint: {e}");
+        }
+        1
+    }
+}

@@ -1,0 +1,872 @@
+//! The four contract rules (`docs/static-analysis.md` maps each to the
+//! prose contract it mechanizes):
+//!
+//! * `meter-bypass` — raw transfer primitives outside the metered
+//!   wrapper section of `runtime/mod.rs` (transfer contract §5).
+//! * `unsafe-safety` / the UNSAFE_LEDGER — every `unsafe` item carries a
+//!   `SAFETY:` comment and a ledger entry with a content hash.
+//! * `donation` — programs whose compile-layer metadata donates inputs
+//!   may only run through the `_donated` execution APIs.
+//! * `lock-order` — the declared acquisition order for the scheduler's
+//!   and artifact cache's lock hierarchy.
+
+use std::fmt::Write as _;
+
+use crate::scan::{receiver_path, token_hits, SourceFile};
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    /// Grouping key for the allowlist (the matched call token, or a
+    /// rule-specific stand-in).
+    pub token: String,
+    pub msg: String,
+}
+
+// ---------------------------------------------------------------- meter
+
+/// PJRT client primitives: the metered wrappers in `runtime/mod.rs` are
+/// the only code allowed to touch these (transfer contract §5 — every
+/// host↔device crossing records bytes before anything else sees them).
+const CLIENT_PRIMS: &[&str] = &[".execute_b(", ".to_literal_sync(", ".buffer_from_host_buffer("];
+
+/// Globally-metered wrappers whose per-run-meter twins end in
+/// `_metered`: outside `runtime/mod.rs` these bypass per-run accounting,
+/// so each use needs an allowlist entry explaining where the bytes land.
+const WRAPPER_RAWS: &[&str] =
+    &[".execute_raw(", ".execute_raw_donated(", ".execute_buffers(", ".download_output("];
+
+/// Runtime upload/download helpers: raw when called on a `Runtime`
+/// receiver (`rt` / `self.rt` / `runtime`); the same method names on a
+/// `TransferMeter` receiver are the metered path and are fine.
+const RT_HELPERS: &[&str] =
+    &[".upload_f32(", ".upload_i32(", ".upload_scalar(", ".upload_tensor(", ".download_f32("];
+
+const METER_EXEMPT_FILE: &str = "rust/src/runtime/mod.rs";
+
+pub fn meter_bypass(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        if f.rel == METER_EXEMPT_FILE {
+            continue; // the metered-wrapper section itself
+        }
+        for (i, line) in f.code.iter().enumerate() {
+            if f.test[i] {
+                continue;
+            }
+            for &tok in CLIENT_PRIMS {
+                for _ in token_hits(line, tok) {
+                    out.push(Finding {
+                        rule: "meter-bypass",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        token: tok.to_string(),
+                        msg: format!(
+                            "PJRT client primitive `{tok})` outside runtime/mod.rs — every \
+                             host<->device crossing must go through the metered wrappers"
+                        ),
+                    });
+                }
+            }
+            for &tok in WRAPPER_RAWS {
+                for _ in token_hits(line, tok) {
+                    out.push(Finding {
+                        rule: "meter-bypass",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        token: tok.to_string(),
+                        msg: format!(
+                            "`{tok})` records global stats only — per-run accounting needs the \
+                             `_metered` variant (or an allowlist entry saying where bytes land)"
+                        ),
+                    });
+                }
+            }
+            for &tok in RT_HELPERS {
+                for at in token_hits(line, tok) {
+                    let recv = receiver_path(line, at);
+                    let last = recv.rsplit('.').next().unwrap_or("");
+                    if last == "rt" || last == "runtime" {
+                        out.push(Finding {
+                            rule: "meter-bypass",
+                            file: f.rel.clone(),
+                            line: i + 1,
+                            token: tok.to_string(),
+                            msg: format!(
+                                "`{recv}{tok})` is the unmetered Runtime helper — route through \
+                                 a TransferMeter (or allowlist with the accounting story)"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------- unsafe
+
+/// One `unsafe` item: its location, the raw context block (contiguous
+/// comment/attribute lines directly above plus the item line), whether a
+/// `SAFETY:` marker is present, and the extracted rationale.
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    pub has_safety: bool,
+    pub rationale: String,
+    pub hash: u64,
+}
+
+fn is_unsafe_item(code_line: &str) -> bool {
+    for at in token_hits(code_line, "unsafe") {
+        let rest = &code_line[at + "unsafe".len()..];
+        let rest = rest.trim_start();
+        if rest.starts_with("impl")
+            || rest.starts_with("fn")
+            || rest.starts_with("trait")
+            || rest.starts_with('{')
+            || rest.is_empty()
+        {
+            return true;
+        }
+    }
+    false
+}
+
+pub fn unsafe_sites(files: &[SourceFile]) -> Vec<UnsafeSite> {
+    let mut out = Vec::new();
+    for f in files {
+        for (i, code) in f.code.iter().enumerate() {
+            if !is_unsafe_item(code) {
+                continue;
+            }
+            // context: contiguous comment/attribute lines directly above
+            let mut start = i;
+            while start > 0 {
+                let t = f.raw[start - 1].trim_start();
+                if t.starts_with("//") || t.starts_with("#[") {
+                    start -= 1;
+                } else {
+                    break;
+                }
+            }
+            let ctx: Vec<&str> = f.raw[start..=i].iter().map(|l| l.trim()).collect();
+            let safety_line = ctx.iter().find(|l| l.contains("SAFETY:"));
+            let rationale = safety_line
+                .map(|l| {
+                    let after = &l[l.find("SAFETY:").unwrap() + "SAFETY:".len()..];
+                    let mut r = after.trim().to_string();
+                    if r.len() > 160 {
+                        r.truncate(157);
+                        r.push_str("...");
+                    }
+                    if r.is_empty() {
+                        "(see comment)".to_string()
+                    } else {
+                        r
+                    }
+                })
+                .unwrap_or_default();
+            out.push(UnsafeSite {
+                file: f.rel.clone(),
+                line: i + 1,
+                has_safety: safety_line.is_some(),
+                rationale,
+                hash: fnv1a64(&ctx.join("\n")),
+            });
+        }
+    }
+    out
+}
+
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+pub fn unsafe_safety(files: &[SourceFile]) -> Vec<Finding> {
+    unsafe_sites(files)
+        .into_iter()
+        .filter(|s| !s.has_safety)
+        .map(|s| Finding {
+            rule: "unsafe-safety",
+            file: s.file,
+            line: s.line,
+            token: "unsafe".to_string(),
+            msg: "`unsafe` item without a `// SAFETY:` comment directly above it".to_string(),
+        })
+        .collect()
+}
+
+pub const LEDGER_HEADER: &str = "\
+# UNSAFE_LEDGER — generated by `contract-lint unsafe-ledger --write`. Do not edit by hand.
+# One entry per `unsafe` item in rust/src: file:line|fnv1a64(comment+attrs+item)|rationale.
+# CI regenerates this file and fails on any diff, so moving, adding, or rewording an
+# unsafe item is always a reviewed change (docs/static-analysis.md, unsafe ledger).
+";
+
+pub fn generate_ledger(files: &[SourceFile]) -> String {
+    let mut out = String::from(LEDGER_HEADER);
+    for s in unsafe_sites(files) {
+        let _ = writeln!(out, "{}:{}|{:016x}|{}", s.file, s.line, s.hash, s.rationale);
+    }
+    out
+}
+
+/// Compare the committed ledger against the generated one; precise
+/// per-line drift messages.
+pub fn check_ledger(files: &[SourceFile], committed: Option<&str>) -> Vec<String> {
+    let generated = generate_ledger(files);
+    let committed = match committed {
+        Some(c) => c,
+        None => {
+            return vec![
+                "rust/UNSAFE_LEDGER is missing — run `contract-lint unsafe-ledger --write` \
+                 and commit it"
+                    .to_string(),
+            ]
+        }
+    };
+    if committed == generated {
+        return Vec::new();
+    }
+    let mut errs = Vec::new();
+    let gen_lines: Vec<&str> = generated.lines().collect();
+    let com_lines: Vec<&str> = committed.lines().collect();
+    for i in 0..gen_lines.len().max(com_lines.len()) {
+        let g = gen_lines.get(i).copied();
+        let c = com_lines.get(i).copied();
+        if g != c {
+            errs.push(format!(
+                "UNSAFE_LEDGER drift at line {}: committed {:?}, generated {:?} — regenerate \
+                 with `contract-lint unsafe-ledger --write` (an unledgered or moved unsafe \
+                 item is a reviewed change)",
+                i + 1,
+                c.unwrap_or("<missing>"),
+                g.unwrap_or("<missing>")
+            ));
+            break; // first drift is enough; the fix regenerates everything
+        }
+    }
+    errs
+}
+
+// ------------------------------------------------------------- donation
+
+/// Program names that donate inputs, derived from the compile layer's
+/// source of truth (`python/compile/model.py`): `PROGRAM_DONATE` keys
+/// verbatim, `BATCHED_DONATE` keys with the `_batched` suffix the AOT
+/// emitter appends (`adam_apply_batched{R}` → base `adam_apply_batched`).
+pub fn donating_programs(model_py: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for (dict, suffix) in [("PROGRAM_DONATE", ""), ("BATCHED_DONATE", "_batched")] {
+        let mut inside = false;
+        for line in model_py.lines() {
+            let t = line.trim();
+            if t.starts_with(dict) && t.contains('{') {
+                inside = true;
+                continue;
+            }
+            if inside {
+                if t.starts_with('}') {
+                    inside = false;
+                    continue;
+                }
+                if let Some(open) = t.find('"') {
+                    if let Some(close) = t[open + 1..].find('"') {
+                        out.push(format!("{}{}", &t[open + 1..open + 1 + close], suffix));
+                    }
+                }
+            }
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Execution APIs that are wrong on a donating program (they either
+/// refuse at runtime or silently invalidate borrowed buffers on older
+/// layers — the lint makes it a compile-time-shaped failure).
+const NONDONATED_EXEC: &[&str] = &[".execute_raw(", ".execute_buffers(", ".execute_buffers_metered("];
+
+pub fn donation(files: &[SourceFile], donating: &[String]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        // ident -> donating program name, from `let X = …program("N")` /
+        // `field: …program("N")` association lines.
+        let mut assoc: Vec<(String, String)> = Vec::new();
+        for (i, code) in f.code.iter().enumerate() {
+            if f.test[i] {
+                continue;
+            }
+            for at in token_hits(code, ".program(") {
+                // read the name from the raw line (string contents are
+                // blanked in `code`); columns align by construction.
+                let raw_tail = &f.raw[i][at + ".program(".len()..];
+                let Some(q0) = raw_tail.find('"') else { continue };
+                let Some(q1) = raw_tail[q0 + 1..].find('"') else { continue };
+                let name = raw_tail[q0 + 1..q0 + 1 + q1]
+                    .split('{')
+                    .next()
+                    .unwrap_or("")
+                    .to_string();
+                if !donating.iter().any(|d| d == &name) {
+                    continue;
+                }
+                for ident in binding_idents(code) {
+                    assoc.push((ident, name.clone()));
+                }
+            }
+        }
+        if assoc.is_empty() {
+            continue;
+        }
+        for (i, code) in f.code.iter().enumerate() {
+            if f.test[i] {
+                continue;
+            }
+            for &tok in NONDONATED_EXEC {
+                for at in token_hits(code, tok) {
+                    let recv = receiver_path(code, at);
+                    let last = recv.rsplit('.').next().unwrap_or("").to_string();
+                    if let Some((_, prog)) = assoc.iter().find(|(id, _)| *id == last) {
+                        out.push(Finding {
+                            rule: "donation",
+                            file: f.rel.clone(),
+                            line: i + 1,
+                            token: tok.to_string(),
+                            msg: format!(
+                                "`{recv}` is program '{prog}', which donates inputs \
+                                 (python/compile metadata) — use execute_raw_donated / \
+                                 execute_raw_donated_metered"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Idents bound on an association line: `let a = …` / `let (a, b) = …` /
+/// a struct-field init `name: …`.
+fn binding_idents(code: &str) -> Vec<String> {
+    let t = code.trim_start();
+    if let Some(rest) = t.strip_prefix("let ") {
+        if let Some(eq) = rest.find('=') {
+            return rest[..eq]
+                .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+                .filter(|w| !w.is_empty() && *w != "mut" && *w != "ref")
+                .map(str::to_string)
+                .collect();
+        }
+    }
+    if let Some(colon) = t.find(':') {
+        let head = &t[..colon];
+        if !head.is_empty() && head.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            return vec![head.to_string()];
+        }
+    }
+    Vec::new()
+}
+
+// ----------------------------------------------------------- lock order
+
+/// Declared acquisition order for the two lock hierarchies under
+/// `rust/src/sched/`. While holding a lock of level `L`, only locks with
+/// a level **strictly greater** than `L` may be acquired. Levels mirror
+/// the prose contracts: a pack leader locks the pool, then a mate's
+/// handle state, then its data slot; `take_next` runs under the queue
+/// state lock and may touch tenants and handle states; the ArtifactCache
+/// *releases* its map lock before any slot lock (so `cache.map` sits
+/// above everything it must never be held across).
+fn lock_name(rel: &str, expr: &str) -> Option<(&'static str, u8)> {
+    let cleaned = expr.trim().trim_start_matches('&').trim_start_matches("mut ").trim();
+    let cleaned = cleaned.strip_prefix("self.").unwrap_or(cleaned);
+    let segs: Vec<&str> = cleaned.split('.').collect();
+    let last = *segs.last()?;
+    if rel.ends_with("sched/queue.rs") {
+        return match last {
+            "state" => {
+                if segs.len() >= 2 && segs[segs.len() - 2] == "shared" {
+                    Some(("queue.state", 20))
+                } else {
+                    Some(("handle.state", 35))
+                }
+            }
+            "pack_pool" => Some(("queue.pack_pool", 10)),
+            "tenants" => Some(("queue.tenants", 30)),
+            "running" => Some(("queue.running", 32)),
+            "data" | "slot" => Some(("queue.pack_data", 38)),
+            "windows" => Some(("queue.windows", 41)),
+            "quotas" => Some(("queue.quotas", 42)),
+            "quantum" => Some(("queue.quantum", 43)),
+            "park_file" => Some(("queue.park_file", 50)),
+            _ => None,
+        };
+    }
+    if rel.ends_with("sched/mod.rs") {
+        return match last {
+            "cached" => Some(("cache.map", 60)),
+            "slot" => Some(("cache.slot", 45)),
+            "pins" => Some(("cache.pins", 55)),
+            "queue" => Some(("pool.queue", 70)),
+            "slots" => Some(("pool.slots", 71)),
+            _ => None,
+        };
+    }
+    None
+}
+
+fn registry_level(name: &str) -> Option<u8> {
+    // the union of both file registries, for `holds` directives
+    for (n, l) in [
+        ("queue.pack_pool", 10),
+        ("queue.state", 20),
+        ("queue.tenants", 30),
+        ("queue.running", 32),
+        ("handle.state", 35),
+        ("queue.pack_data", 38),
+        ("queue.windows", 41),
+        ("queue.quotas", 42),
+        ("queue.quantum", 43),
+        ("queue.park_file", 50),
+        ("cache.slot", 45),
+        ("cache.pins", 55),
+        ("cache.map", 60),
+        ("pool.queue", 70),
+        ("pool.slots", 71),
+    ] {
+        if n == name {
+            return Some(l);
+        }
+    }
+    None
+}
+
+struct Held {
+    name: &'static str,
+    level: u8,
+    /// Brace depth at acquisition; the guard dies when depth drops below.
+    depth: i32,
+    /// Binding ident (`let g = lock(…);`), for `drop(g)` release. `None`
+    /// for a `holds` directive (lives for the whole function).
+    ident: Option<String>,
+}
+
+pub fn lock_order(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        if !f.rel.contains("/sched/") {
+            continue;
+        }
+        let mut held: Vec<Held> = Vec::new();
+        let mut depth: i32 = 0;
+        for (i, code) in f.code.iter().enumerate() {
+            if f.test[i] {
+                // keep brace tracking honest across masked regions
+                depth += brace_delta(code);
+                held.retain(|h| h.depth <= depth);
+                continue;
+            }
+            // function start: reset held to the declared directives
+            if !token_hits(code, "fn ").is_empty() && code.contains('(') {
+                held.clear();
+                let mut j = i;
+                while j > 0 {
+                    let t = f.raw[j - 1].trim_start();
+                    if t.starts_with("//") || t.starts_with("#[") {
+                        if let Some(pos) = t.find("contract-lint: holds ") {
+                            let name_part =
+                                t[pos + "contract-lint: holds ".len()..].split_whitespace().next();
+                            if let Some(name) = name_part {
+                                match registry_level(name) {
+                                    Some(level) => {
+                                        // leak a 'static name via the registry
+                                        let name = registry_static(name);
+                                        held.push(Held { name, level, depth: depth + 1, ident: None });
+                                    }
+                                    None => out.push(Finding {
+                                        rule: "lock-order",
+                                        file: f.rel.clone(),
+                                        line: j,
+                                        token: "holds-directive".to_string(),
+                                        msg: format!(
+                                            "`contract-lint: holds {name}` names an unregistered \
+                                             lock"
+                                        ),
+                                    }),
+                                }
+                            }
+                        }
+                        j -= 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            // releases via drop(ident)
+            for at in token_hits(code, "drop(") {
+                let arg = paren_arg(code, at + "drop(".len());
+                held.retain(|h| h.ident.as_deref() != Some(arg.trim()));
+            }
+            // acquisitions
+            for at in token_hits(code, "lock(") {
+                let arg = paren_arg(code, at + "lock(".len());
+                match lock_name(&f.rel, &arg) {
+                    None => out.push(Finding {
+                        rule: "lock-order",
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        token: "unregistered".to_string(),
+                        msg: format!(
+                            "lock(&{}) is not in the lock-order registry — add it to \
+                             contract-lint's registry with a level (docs/static-analysis.md)",
+                            arg.trim()
+                        ),
+                    }),
+                    Some((name, level)) => {
+                        for h in &held {
+                            if level <= h.level {
+                                out.push(Finding {
+                                    rule: "lock-order",
+                                    file: f.rel.clone(),
+                                    line: i + 1,
+                                    token: name.to_string(),
+                                    msg: format!(
+                                        "acquires `{name}` (level {level}) while holding \
+                                         `{}` (level {}) — violates the declared order",
+                                        h.name, h.level
+                                    ),
+                                });
+                            }
+                        }
+                        // pure binding (`let g = lock(…);`) → guard persists
+                        let head = code[..at].trim_start();
+                        let tail_ok = {
+                            let after = at + "lock(".len() + arg.len() + 1;
+                            code.get(after..).map(|t| t.trim() == ";").unwrap_or(false)
+                        };
+                        if tail_ok {
+                            if let Some(ident) = pure_binding_ident(head) {
+                                // the guard lives at the depth in effect
+                                // *at the hit* (braces earlier on this
+                                // line included), dying when its block
+                                // closes
+                                held.push(Held {
+                                    name,
+                                    level,
+                                    depth: depth + brace_delta(&code[..at]),
+                                    ident: Some(ident),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+            depth += brace_delta(code);
+            held.retain(|h| h.depth <= depth);
+        }
+    }
+    out
+}
+
+fn registry_static(name: &str) -> &'static str {
+    match name {
+        "queue.pack_pool" => "queue.pack_pool",
+        "queue.state" => "queue.state",
+        "queue.tenants" => "queue.tenants",
+        "queue.running" => "queue.running",
+        "handle.state" => "handle.state",
+        "queue.pack_data" => "queue.pack_data",
+        "queue.windows" => "queue.windows",
+        "queue.quotas" => "queue.quotas",
+        "queue.quantum" => "queue.quantum",
+        "queue.park_file" => "queue.park_file",
+        "cache.slot" => "cache.slot",
+        "cache.pins" => "cache.pins",
+        "cache.map" => "cache.map",
+        "pool.queue" => "pool.queue",
+        "pool.slots" => "pool.slots",
+        _ => "unknown",
+    }
+}
+
+fn brace_delta(code: &str) -> i32 {
+    let mut d = 0;
+    for c in code.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// The balanced-paren argument starting at `from` (just past the opening
+/// paren of a call); best-effort on a single line.
+fn paren_arg(code: &str, from: usize) -> String {
+    let mut depth = 1;
+    let mut end = from;
+    for (off, c) in code[from..].char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = from + off;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    code[from..end].to_string()
+}
+
+/// `let g = ` / `let mut g = ` prefix (already trimmed) → `g`.
+fn pure_binding_ident(head: &str) -> Option<String> {
+    let rest = head.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let eq = rest.find('=')?;
+    let ident = rest[..eq].trim();
+    if !ident.is_empty() && ident.chars().all(|c| c.is_alphanumeric() || c == '_') {
+        Some(ident.to_string())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::SourceFile;
+
+    fn sf(rel: &str, src: &str) -> SourceFile {
+        SourceFile::parse(rel, src)
+    }
+
+    // ---- meter-bypass fixtures
+
+    #[test]
+    fn meter_bypass_fires_on_client_prims_and_raw_wrappers() {
+        let bad = sf(
+            "rust/src/train/x.rs",
+            "fn f(c: &C, p: &P, rt: &R) {\n    c.buffer_from_host_buffer(d, s, None);\n    \
+             p.execute_raw(&i);\n    rt.upload_f32(&d, &s);\n}\n",
+        );
+        let fs = meter_bypass(&[bad]);
+        let toks: Vec<&str> = fs.iter().map(|f| f.token.as_str()).collect();
+        assert!(toks.contains(&".buffer_from_host_buffer("));
+        assert!(toks.contains(&".execute_raw("));
+        assert!(toks.contains(&".upload_f32("));
+        assert_eq!(fs.len(), 3);
+    }
+
+    #[test]
+    fn meter_bypass_passes_metered_calls_tests_and_runtime_itself() {
+        let good = sf(
+            "rust/src/train/x.rs",
+            "fn f(p: &P, m: &M, rt: &R) {\n    p.execute_raw_donated_metered(i, Some(m));\n    \
+             p.execute_buffers_metered(&i, None);\n    m.upload_f32(rt, &d, &s);\n}\n\
+             #[cfg(test)]\nmod tests {\n    fn t(rt: &R) { rt.upload_f32(&d, &s); }\n}\n",
+        );
+        assert!(meter_bypass(&[good]).is_empty());
+        let runtime = sf("rust/src/runtime/mod.rs", "fn f(c: &C) { c.execute_b(&i); }\n");
+        assert!(meter_bypass(&[runtime]).is_empty());
+    }
+
+    // ---- unsafe ledger fixtures
+
+    #[test]
+    fn unsafe_without_safety_comment_fires() {
+        let bad = sf("rust/src/x.rs", "unsafe impl Send for T {}\n");
+        let fs = unsafe_safety(&[bad]);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, "unsafe-safety");
+    }
+
+    #[test]
+    fn safety_comment_above_attrs_passes_and_lands_in_ledger() {
+        let good = sf(
+            "rust/src/x.rs",
+            "// SAFETY: T is immutable after construction.\n#[cfg(feature = \"x\")]\n\
+             unsafe impl Send for T {}\n",
+        );
+        assert!(unsafe_safety(std::slice::from_ref(&good)).is_empty());
+        let ledger = generate_ledger(&[good]);
+        assert!(ledger.contains("rust/src/x.rs:3|"));
+        assert!(ledger.contains("|T is immutable after construction."));
+    }
+
+    #[test]
+    fn ledger_drift_is_reported_and_regeneration_is_stable() {
+        let f = sf(
+            "rust/src/x.rs",
+            "// SAFETY: fine.\nunsafe impl Send for T {}\n",
+        );
+        let committed = generate_ledger(std::slice::from_ref(&f));
+        assert!(check_ledger(std::slice::from_ref(&f), Some(&committed)).is_empty());
+        // moving the item one line (drift) must fail against the old ledger
+        let moved = sf(
+            "rust/src/x.rs",
+            "\n// SAFETY: fine.\nunsafe impl Send for T {}\n",
+        );
+        let errs = check_ledger(std::slice::from_ref(&moved), Some(&committed));
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].contains("drift"));
+        assert!(check_ledger(std::slice::from_ref(&f), None)[0].contains("missing"));
+    }
+
+    #[test]
+    fn unsafe_in_comments_and_strings_is_ignored() {
+        let f = sf(
+            "rust/src/x.rs",
+            "// unsafe impl Send would be wrong here\nlet s = \"unsafe { }\";\n",
+        );
+        assert!(unsafe_sites(&[f]).is_empty());
+    }
+
+    // ---- donation fixtures
+
+    const MODEL_PY: &str = "\
+PROGRAM_DONATE = {
+    \"grad_accum\": (0,),
+    \"adam_apply\": (0, 1, 2, 4),
+}
+BATCHED_DONATE = {
+    \"adam_apply\": (0, 1, 2, 4),
+}
+";
+
+    #[test]
+    fn donating_program_names_include_batched_suffix() {
+        let names = donating_programs(MODEL_PY);
+        assert_eq!(names, vec!["adam_apply", "adam_apply_batched", "grad_accum"]);
+    }
+
+    #[test]
+    fn donation_fires_on_nondonated_api_and_passes_donated() {
+        let donating = donating_programs(MODEL_PY);
+        let bad = sf(
+            "rust/src/train/x.rs",
+            "let adam_prog = art.program(\"adam_apply\")?;\nlet o = adam_prog.execute_raw(&i)?;\n",
+        );
+        let fs = donation(&[bad], &donating);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("adam_apply"));
+        let good = sf(
+            "rust/src/train/x.rs",
+            "let adam_prog = art.program(\"adam_apply\")?;\n\
+             let grad_prog = art.program(\"grad_step\")?;\n\
+             let o = adam_prog.execute_raw_donated(i)?;\n\
+             let g = grad_prog.execute_raw(&i)?;\n",
+        );
+        assert!(donation(&[good], &donating).is_empty());
+    }
+
+    #[test]
+    fn donation_tracks_format_batched_names() {
+        let donating = donating_programs(MODEL_PY);
+        let bad = sf(
+            "rust/src/train/x.rs",
+            "let adam_prog = art.program(&format!(\"adam_apply_batched{runs}\"))?;\n\
+             let o = adam_prog.execute_buffers(&i)?;\n",
+        );
+        let fs = donation(&[bad], &donating);
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert!(fs[0].msg.contains("adam_apply_batched"));
+    }
+
+    // ---- lock-order fixtures
+
+    #[test]
+    fn lock_order_passes_declared_order_and_fires_on_inversion() {
+        let good = sf(
+            "rust/src/sched/queue.rs",
+            "fn f(shared: &S) {\n    let mut pool = lock(&shared.pack_pool);\n    \
+             let mut st = lock(&mate.handle.state);\n    lock(&mate.data).take();\n}\n",
+        );
+        assert!(lock_order(&[good]).is_empty());
+        let bad = sf(
+            "rust/src/sched/queue.rs",
+            "fn f(shared: &S) {\n    let mut st = lock(&handle.state);\n    \
+             lock(&shared.pack_pool).clear();\n}\n",
+        );
+        let fs = lock_order(&[bad]);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("queue.pack_pool"));
+        assert!(fs[0].msg.contains("handle.state"));
+    }
+
+    #[test]
+    fn guards_die_at_scope_end_or_drop() {
+        let scoped = sf(
+            "rust/src/sched/queue.rs",
+            "fn f(shared: &S) {\n    {\n        let mut st = lock(&shared.state);\n    }\n    \
+             lock(&shared.pack_pool).clear();\n}\n",
+        );
+        assert!(lock_order(&[scoped]).is_empty());
+        let dropped = sf(
+            "rust/src/sched/queue.rs",
+            "fn f(shared: &S) {\n    let mut st = lock(&shared.state);\n    drop(st);\n    \
+             lock(&shared.pack_pool).clear();\n}\n",
+        );
+        assert!(lock_order(&[dropped]).is_empty());
+        let held = sf(
+            "rust/src/sched/queue.rs",
+            "fn f(shared: &S) {\n    let mut st = lock(&shared.state);\n    \
+             lock(&shared.pack_pool).clear();\n}\n",
+        );
+        assert_eq!(lock_order(&[held]).len(), 1);
+    }
+
+    #[test]
+    fn holds_directive_seeds_the_function() {
+        let f = sf(
+            "rust/src/sched/queue.rs",
+            "// contract-lint: holds queue.state\nfn take(shared: &S) {\n    \
+             let t = lock(&shared.tenants);\n}\n",
+        );
+        assert!(lock_order(&[f]).is_empty());
+        let bad = sf(
+            "rust/src/sched/queue.rs",
+            "// contract-lint: holds queue.tenants\nfn take(shared: &S) {\n    \
+             let t = lock(&shared.state);\n}\n",
+        );
+        assert_eq!(lock_order(&[bad]).len(), 1);
+    }
+
+    #[test]
+    fn unregistered_locks_are_loud() {
+        let f = sf(
+            "rust/src/sched/queue.rs",
+            "fn f() {\n    let g = lock(&self.mystery);\n}\n",
+        );
+        let fs = lock_order(&[f]);
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("not in the lock-order registry"));
+    }
+
+    #[test]
+    fn statement_temporaries_do_not_persist() {
+        let f = sf(
+            "rust/src/sched/queue.rs",
+            "fn f(shared: &S, handle: &H) {\n    lock(&handle.state).finish(o);\n    \
+             let mut st = lock(&shared.state);\n}\n",
+        );
+        // handle.state (35) is a temporary; acquiring queue.state (20)
+        // afterwards is sequential, not nested.
+        assert!(lock_order(&[f]).is_empty());
+    }
+}

@@ -1,0 +1,374 @@
+//! Source model for the lint rules: load `.rs` files, blank out comments
+//! and string/char literal *contents* (so token searches never match
+//! inside either), and mark `#[cfg(test)]` regions (contract rules apply
+//! to shipping code; tests may poke raw APIs on purpose).
+//!
+//! This is a line-oriented lexer, not a parser — rules that need more
+//! structure (receiver paths, guard bindings) build it locally from the
+//! blanked lines. Precision target: zero false positives on this repo's
+//! rustfmt-formatted sources, loud errors anywhere the heuristics lose
+//! track (unknown lock names, unledgered unsafe), never silent skips.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub struct SourceFile {
+    /// Path relative to the repo root, forward slashes.
+    pub rel: String,
+    /// Raw lines (SAFETY comments are read from these).
+    pub raw: Vec<String>,
+    /// Lines with comments and literal contents blanked to spaces.
+    pub code: Vec<String>,
+    /// `true` for lines inside a `#[cfg(test)]` item.
+    pub test: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, content: &str) -> SourceFile {
+        let raw: Vec<String> = content.lines().map(str::to_string).collect();
+        let code = blank_noncode(content);
+        debug_assert_eq!(raw.len(), code.len());
+        let test = test_mask(&code);
+        SourceFile { rel: rel.to_string(), raw, code, test }
+    }
+}
+
+/// Load every `.rs` file under `root/sub`, sorted by relative path (the
+/// scan order is part of the deterministic output contract).
+pub fn load_tree(root: &Path, sub: &str) -> io::Result<Vec<SourceFile>> {
+    let mut rels = Vec::new();
+    collect_rs(&root.join(sub), Path::new(sub), &mut rels)?;
+    rels.sort();
+    let mut out = Vec::with_capacity(rels.len());
+    for rel in rels {
+        let content = fs::read_to_string(root.join(&rel))?;
+        out.push(SourceFile::parse(&rel, &content));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, rel: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let path = entry.path();
+        let rel = rel.join(&name);
+        if path.is_dir() {
+            collect_rs(&path, &rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// Blank comments and the *contents* of string/char literals to spaces,
+/// preserving line structure and the delimiter characters themselves.
+/// Handles line comments, nested block comments, regular/byte strings
+/// with escapes, raw strings (`r"…"`, `r#"…"#`), char literals, and
+/// lifetimes (`'a` stays code).
+fn blank_noncode(content: &str) -> Vec<String> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(u32),
+    }
+    let bytes: Vec<char> = content.chars().collect();
+    let mut out = String::with_capacity(content.len());
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i];
+        let next = bytes.get(i + 1).copied();
+        match st {
+            St::Code => match c {
+                '/' if next == Some('/') => {
+                    st = St::Line;
+                    out.push_str("  ");
+                    i += 2;
+                }
+                '/' if next == Some('*') => {
+                    st = St::Block(1);
+                    out.push_str("  ");
+                    i += 2;
+                }
+                '"' => {
+                    st = St::Str;
+                    out.push('"');
+                    i += 1;
+                }
+                'r' | 'b'
+                    if is_raw_string_start(&bytes, i) =>
+                {
+                    // r"…", r#"…"#, br"…" etc.: count the hashes.
+                    let mut j = i + 1;
+                    if bytes.get(j) == Some(&'r') {
+                        j += 1; // the `br` case
+                    }
+                    let mut hashes = 0u32;
+                    while bytes.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    for k in i..=j {
+                        out.push(bytes[k]); // r, hashes, opening quote
+                    }
+                    st = St::RawStr(hashes);
+                    i = j + 1;
+                }
+                '\'' => {
+                    // char literal vs lifetime
+                    if next == Some('\\') {
+                        // '\n', '\'', '\u{…}': blank to the closing quote
+                        out.push('\'');
+                        i += 1;
+                        while i < bytes.len() && bytes[i] != '\'' {
+                            if bytes[i] == '\\' && i + 1 < bytes.len() {
+                                out.push_str("  ");
+                                i += 2;
+                            } else {
+                                out.push(if bytes[i] == '\n' { '\n' } else { ' ' });
+                                i += 1;
+                            }
+                        }
+                        if i < bytes.len() {
+                            out.push('\'');
+                            i += 1;
+                        }
+                    } else if bytes.get(i + 2) == Some(&'\'') && next.is_some() {
+                        out.push('\'');
+                        out.push(if next == Some('\n') { '\n' } else { ' ' });
+                        out.push('\'');
+                        i += 3;
+                    } else {
+                        out.push('\''); // lifetime
+                        i += 1;
+                    }
+                }
+                _ => {
+                    out.push(c);
+                    i += 1;
+                }
+            },
+            St::Line => {
+                if c == '\n' {
+                    st = St::Code;
+                    out.push('\n');
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '/' && next == Some('*') {
+                    st = St::Block(d + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // keep line structure across `\<newline>` continuations
+                    out.push(' ');
+                    if let Some(n) = next {
+                        out.push(if n == '\n' { '\n' } else { ' ' });
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Code;
+                    out.push('"');
+                    i += 1;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && raw_string_closes(&bytes, i, h) {
+                    for k in 0..=(h as usize) {
+                        out.push(bytes[i + k]);
+                    }
+                    st = St::Code;
+                    i += h as usize + 1;
+                } else {
+                    out.push(if c == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.lines().map(str::to_string).collect()
+}
+
+fn is_raw_string_start(bytes: &[char], i: usize) -> bool {
+    // must not be the tail of an identifier (`for r in …` vs `regr"x"`)
+    if i > 0 && (bytes[i - 1].is_alphanumeric() || bytes[i - 1] == '_') {
+        return false;
+    }
+    let mut j = i + 1;
+    if bytes.get(i) == Some(&'b') && bytes.get(j) == Some(&'r') {
+        j += 1;
+    } else if bytes.get(i) == Some(&'b') {
+        return false; // b"…" is handled by the plain-string arm upstream?
+    }
+    while bytes.get(j) == Some(&'#') {
+        j += 1;
+    }
+    bytes.get(j) == Some(&'"') && (bytes.get(i) == Some(&'r') || bytes.get(i) == Some(&'b'))
+}
+
+fn raw_string_closes(bytes: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| bytes.get(i + k) == Some(&'#'))
+}
+
+/// Mark lines belonging to `#[cfg(test)]` items: from the attribute,
+/// through the item's balanced braces (or through the terminating `;`
+/// for brace-less items).
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if code[i].trim_start().starts_with("#[cfg(test)]") {
+            let mut depth: i32 = 0;
+            let mut opened = false;
+            let mut j = i;
+            while j < code.len() {
+                mask[j] = true;
+                for c in code[j].chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => depth -= 1,
+                        ';' if !opened && depth == 0 => {
+                            // `#[cfg(test)] use …;`
+                            mask[j] = true;
+                            depth = -1; // force exit
+                        }
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                if depth < 0 {
+                    break;
+                }
+                j += 1;
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    mask
+}
+
+/// Find every occurrence of `token` in `line` that starts at a token
+/// boundary. Tokens beginning with `.` (method-call probes like
+/// `.execute_raw(`) are self-delimiting — the dot is the boundary, and
+/// the trailing `(` keeps `.execute_raw(` from matching inside
+/// `.execute_raw_donated(`. Bare tokens (`lock(`, `fn `, `unsafe`) must
+/// not be preceded by an identifier character *or* a dot, so `m.lock(`
+/// and `unlock(` never match `lock(`.
+pub fn token_hits(line: &str, token: &str) -> Vec<usize> {
+    let self_delimiting = token.starts_with('.');
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(token) {
+        let at = from + pos;
+        let pre = line[..at].chars().next_back();
+        let standalone = self_delimiting
+            || match pre {
+                Some(c) => !(c.is_alphanumeric() || c == '_' || c == '.'),
+                None => true,
+            };
+        if standalone {
+            hits.push(at);
+        }
+        from = at + token.len();
+    }
+    hits
+}
+
+/// The dotted receiver path ending just before byte offset `at` (which
+/// points at the `.` of a `.method(` token): e.g. `self.rt` for
+/// `self.rt.upload_f32(`. Empty when the receiver is not a plain path
+/// (a call chain, an index, a closing paren).
+pub fn receiver_path(line: &str, at: usize) -> String {
+    let head = &line[..at];
+    let start = head
+        .rfind(|c: char| !(c.is_alphanumeric() || c == '_' || c == '.'))
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    head[start..].trim_matches('.').to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "let a = \"execute_b(\"; // execute_b(\nlet b = 1; /* execute_b( */ let c = 2;\n",
+        );
+        assert!(!f.code[0].contains("execute_b("));
+        assert!(!f.code[1].contains("execute_b("));
+        assert!(f.code[1].contains("let c = 2;"));
+        // delimiters survive so column math stays aligned
+        assert_eq!(f.code[0].len(), f.raw[0].len());
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes_survive() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "fn f<'a>(x: &'a str) {}\nlet s = r#\"lock(&x)\"#;\nlet c = '\"';\nlet d = lock(&y);\n",
+        );
+        assert!(f.code[0].contains("<'a>"), "lifetime kept: {}", f.code[0]);
+        assert!(!f.code[1].contains("lock(&x)"));
+        assert!(!f.code[2].contains('"'), "quote char blanked: {}", f.code[2]);
+        assert!(f.code[3].contains("lock(&y)"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let src = "fn real() {\n    work();\n}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.test[0] && !f.test[1]);
+        assert!(f.test[3] && f.test[4] && f.test[5] && f.test[6]);
+        assert!(!f.test[7]);
+    }
+
+    #[test]
+    fn token_hits_do_not_match_identifier_tails() {
+        assert_eq!(token_hits("x.execute_raw_donated(y)", ".execute_raw("), Vec::<usize>::new());
+        assert_eq!(token_hits("x.execute_raw(y)", ".execute_raw("), vec![1]);
+        assert_eq!(token_hits("m.lock()", "lock("), Vec::<usize>::new());
+        assert_eq!(token_hits("let g = lock(&a);", "lock("), vec![8]);
+    }
+
+    #[test]
+    fn receiver_paths() {
+        let line = "        let v = self.rt.upload_f32(&x, &s)?;";
+        let at = line.find(".upload_f32(").unwrap();
+        assert_eq!(receiver_path(line, at), "self.rt");
+        let line2 = "foo(rt.download_f32(&b)?);";
+        let at2 = line2.find(".download_f32(").unwrap();
+        assert_eq!(receiver_path(line2, at2), "rt");
+    }
+}
