@@ -400,6 +400,8 @@ QUEUE_LOCKS = {
     "pack_pool": ("queue.pack_pool", 10),
     "tenants": ("queue.tenants", 30),
     "running": ("queue.running", 32),
+    "feed": ("stream.feed", 33),
+    "streams": ("queue.streams", 34),
     "data": ("queue.pack_data", 38),
     "slot": ("queue.pack_data", 38),
     "windows": ("queue.windows", 41),

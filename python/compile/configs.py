@@ -108,7 +108,7 @@ class ArtifactConfig:
 
 
 PROGRAMS = ("train_step", "grad_step", "grad_accum", "grad_finalize",
-            "adam_apply", "eval_loss")
+            "adam_apply", "eval_loss", "loft_realign")
 
 # Group sizes for the batched multi-run program variants. The queue packs
 # the largest R ≤ (number of eligible queued runs); exact group sizes
@@ -120,7 +120,7 @@ BATCHED_BASES = ("train_step", "grad_step", "adam_apply", "eval_loss")
 
 
 def programs_for(ac: ArtifactConfig) -> Tuple[str, ...]:
-    """Every program name ``ac``'s artifact emits: the six solo programs,
+    """Every program name ``ac``'s artifact emits: the seven solo programs,
     plus ``{base}_batched{R}`` variants for non-Pallas LoRA artifacts
     (the only mode where queued runs share a frozen base worth stacking;
     the Pallas variant is an interpret-mode debugging reference)."""

@@ -13,7 +13,12 @@ One function family per artifact config (see ``configs.ArtifactConfig``):
     mean before ``adam_apply``,
   * ``adam_apply``    — Adam update from pre-accumulated grads,
   * ``eval_loss``     — mask-weighted mean loss (FF line search, test loss,
-    Fig 5/8/10 loss-surface probes).
+    Fig 5/8/10 loss-surface probes),
+  * ``loft_realign``  — LoFT-style optimizer-state realignment: decays the
+    Adam first moment by ``decay`` and the second moment by ``decay²``
+    after each FF stage, so the moments forget the pre-extrapolation
+    descent direction at matched per-coordinate step scale (the ``loft``
+    optimizer backend; rust/src/train/engine.rs dispatches it).
 
 Buffer donation: the programs in ``PROGRAM_DONATE`` are lowered with
 ``donate_argnums`` so the HLO carries an ``input_output_alias`` map and PJRT
@@ -308,6 +313,16 @@ def make_adam_apply(ac: ArtifactConfig):
     return adam_apply, args
 
 
+def make_loft_realign(ac: ArtifactConfig):
+    def loft_realign(m, v, decay):
+        return (*(mm * decay for mm in m), *(vv * (decay * decay) for vv in v))
+
+    tex = _param_examples(trainable_spec(ac))
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    args = (tex, list(tex), scalar)
+    return loft_realign, args
+
+
 def make_eval_loss(ac: ArtifactConfig):
     def eval_loss(trainables, frozen, tokens, targets, mask):
         return (loss_fn(ac, trainables, frozen, tokens, targets, mask),)
@@ -406,6 +421,7 @@ PROGRAM_FACTORIES = {
     "grad_finalize": make_grad_finalize,
     "adam_apply": make_adam_apply,
     "eval_loss": make_eval_loss,
+    "loft_realign": make_loft_realign,
 }
 
 BATCHED_FACTORIES = {
@@ -443,6 +459,7 @@ PROGRAM_DONATE = {
     "grad_accum": (0,),           # acc
     "grad_finalize": (0,),        # acc
     "adam_apply": (0, 1, 2, 4),   # trainables, m, v, grads
+    "loft_realign": (0, 1),       # m, v
 }
 
 # Batched variants own their stacked state (one generation live per group
@@ -568,6 +585,9 @@ def program_io(ac: ArtifactConfig, program: str):
         ins = (_named("t", ts) + _named("f", fs)
                + _batch_io(ac, ac.model.eval_batch))
         outs = [loss]
+    elif program == "loft_realign":
+        ins = _named("m", ts) + _named("v", ts) + [scalar_f("decay")]
+        outs = _named("m", ts) + _named("v", ts)
     else:
         raise ValueError(program)
     return ins, outs

@@ -85,7 +85,8 @@ def test_program_io_arity_matches_factories(program):
     nt = len(trainable_spec(ac))
     expect_out = {"train_step": 1 + 3 * nt, "grad_step": 1 + nt,
                   "grad_accum": nt, "grad_finalize": nt,
-                  "adam_apply": 3 * nt, "eval_loss": 1}[program]
+                  "adam_apply": 3 * nt, "eval_loss": 1,
+                  "loft_realign": 2 * nt}[program]
     assert len(outs) == expect_out
 
 

@@ -136,6 +136,74 @@ impl Default for AdamConfig {
     }
 }
 
+/// Which trigger policy decides *when* to Fast Forward (`crate::ff::policy`).
+///
+/// `Interval` is the paper's fixed/adaptive T_interval controller and the
+/// default — bit-identical to the pre-policy `FfController`. The other two
+/// come from the paper's closing analysis: fire when the tiny-val loss
+/// slope flattens, or when consecutive Δ_W directions align.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FfPolicyKind {
+    #[default]
+    Interval,
+    LossSlope,
+    Cosine,
+}
+
+impl FfPolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FfPolicyKind::Interval => "interval",
+            FfPolicyKind::LossSlope => "loss_slope",
+            FfPolicyKind::Cosine => "cosine",
+        }
+    }
+
+    pub fn from_str(s: &str) -> anyhow::Result<FfPolicyKind> {
+        Ok(match s {
+            "interval" => FfPolicyKind::Interval,
+            "loss_slope" => FfPolicyKind::LossSlope,
+            "cosine" => FfPolicyKind::Cosine,
+            other => anyhow::bail!("unknown FF policy '{other}'"),
+        })
+    }
+
+    pub const ALL: [FfPolicyKind; 3] =
+        [FfPolicyKind::Interval, FfPolicyKind::LossSlope, FfPolicyKind::Cosine];
+}
+
+/// Which optimizer backend steps the run (`train::engine`).
+///
+/// `Adam` is the baseline donated `adam_apply` chain. `Loft` is the
+/// LoFT-style variant (PAPERS.md, "low-rank that behaves like full
+/// fine-tuning"): the same chain, plus a periodic optimizer-state
+/// realignment — after every FF stage the second moments are decayed
+/// (`m *= decay`, `v *= decay²`) so stale curvature from before the
+/// extrapolation jump does not mis-scale the next steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptimBackend {
+    #[default]
+    Adam,
+    Loft,
+}
+
+impl OptimBackend {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OptimBackend::Adam => "adam",
+            OptimBackend::Loft => "loft",
+        }
+    }
+
+    pub fn from_str(s: &str) -> anyhow::Result<OptimBackend> {
+        Ok(match s {
+            "adam" => OptimBackend::Adam,
+            "loft" => OptimBackend::Loft,
+            other => anyhow::bail!("unknown optimizer backend '{other}'"),
+        })
+    }
+}
+
 /// Fast Forward schedule (paper §3 + §5.1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FfConfig {
@@ -161,6 +229,42 @@ pub struct FfConfig {
     /// 32-sample val set at this substrate's compressed scale (the paper's
     /// §7 notes the risk; DESIGN.md §Substitutions documents the choice).
     pub min_rel_improvement: f32,
+    /// Trigger policy (`crate::ff::policy`): `Interval` (default,
+    /// bit-identical to the pre-policy controller), `LossSlope`, `Cosine`.
+    pub policy: FfPolicyKind,
+    /// LossSlope: number of per-step tiny-val losses in the slope window.
+    pub slope_window: usize,
+    /// LossSlope: fire when the windowed relative improvement per step
+    /// drops below this (the loss curve has flattened).
+    pub slope_threshold: f32,
+    /// Cosine: fire when consecutive Δ_W directions' cosine similarity
+    /// reaches this (updates have locked onto a consistent direction).
+    pub cosine_threshold: f64,
+}
+
+impl FfConfig {
+    /// Stable fingerprint over every scheduling-relevant field, stamped
+    /// into `train::checkpoint::ParkState` so a resume under an edited
+    /// `FfConfig` fails loudly instead of silently running with a
+    /// snapshot taken under different rules (e.g. an `interval` outside
+    /// the new `[1, 4·t_interval]` clamp).
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "v1|{}|{}|{}|{}|{:?}|{}|{}|{}|{}|{}|{}|{}",
+            self.enabled,
+            self.t_interval,
+            self.warmup_steps,
+            self.max_tau,
+            self.convergence_patience,
+            self.adaptive_interval,
+            self.val_examples,
+            self.min_rel_improvement,
+            self.policy.as_str(),
+            self.slope_window,
+            self.slope_threshold,
+            self.cosine_threshold,
+        )
+    }
 }
 
 impl Default for FfConfig {
@@ -174,6 +278,10 @@ impl Default for FfConfig {
             adaptive_interval: false,
             val_examples: 32,
             min_rel_improvement: 1e-3,
+            policy: FfPolicyKind::Interval,
+            slope_window: 8,
+            slope_threshold: 2e-2,
+            cosine_threshold: 0.9,
         }
     }
 }
@@ -192,6 +300,13 @@ pub struct TrainConfig {
     pub seed: u64,
     pub ff: FfConfig,
     pub adam: AdamConfig,
+    /// Optimizer backend: baseline Adam, or the LoFT-style realigning
+    /// variant (see [`OptimBackend`]).
+    pub backend: OptimBackend,
+    /// LoFT realignment decay applied to the Adam moments after each FF
+    /// stage (`m *= decay`, `v *= decay²`). Only read when
+    /// `backend == OptimBackend::Loft`.
+    pub loft_decay: f32,
     /// Training examples to generate for the corpus.
     pub train_examples: usize,
     /// Held-out test examples (paper: 1K).
@@ -208,6 +323,8 @@ impl TrainConfig {
             .set("global_batch", self.global_batch)
             .set("max_steps", self.max_steps)
             .set("seed", self.seed as i64)
+            .set("backend", self.backend.as_str())
+            .set("loft_decay", self.loft_decay as f64)
             .set("train_examples", self.train_examples)
             .set("test_examples", self.test_examples)
             .set(
@@ -218,7 +335,8 @@ impl TrainConfig {
                     .set("warmup_steps", self.ff.warmup_steps)
                     .set("max_tau", self.ff.max_tau)
                     .set("adaptive_interval", self.ff.adaptive_interval)
-                    .set("val_examples", self.ff.val_examples),
+                    .set("val_examples", self.ff.val_examples)
+                    .set("policy", self.ff.policy.as_str()),
             )
     }
 }

@@ -7,7 +7,7 @@
 //! sizes are scaled to a single-core CPU testbed (global 32 vs the paper's
 //! 64–512) while keeping the paper's micro:global structure.
 
-use super::{AdamConfig, FfConfig, ModelConfig, TrainConfig};
+use super::{AdamConfig, FfConfig, ModelConfig, OptimBackend, TrainConfig};
 
 /// The four grid models + the e2e-only xl config (must mirror python).
 pub fn model(name: &str) -> anyhow::Result<ModelConfig> {
@@ -92,6 +92,8 @@ pub fn train_config(artifact: &str, task: &str, epochs: usize) -> anyhow::Result
         seed: 0x5eed,
         ff: FfConfig::default(),
         adam: AdamConfig::default(),
+        backend: OptimBackend::default(),
+        loft_decay: 0.5,
         train_examples: tp.train_examples,
         test_examples: 1000,
     })

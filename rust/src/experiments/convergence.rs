@@ -36,8 +36,8 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     let flops_saved = saved_frac(ff.flops.total() as f64, baseline.flops.total() as f64);
     let json = Json::obj()
         .set("id", "convergence")
-        .set("ff_loss", ff.final_test_loss as f64)
-        .set("baseline_loss", baseline.final_test_loss as f64)
+        .set("ff_loss", Json::num_or_null(ff.final_test_loss as f64))
+        .set("baseline_loss", Json::num_or_null(baseline.final_test_loss as f64))
         .set("ff_flops", ff.flops.total() as f64)
         .set("baseline_flops", baseline.flops.total() as f64)
         .set("flops_saved_pct", pct_json(flops_saved))

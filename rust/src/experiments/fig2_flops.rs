@@ -44,8 +44,8 @@ fn run_grid(ctx: &ExpContext, mode: &str, id: &str) -> Result<Json> {
             .set("ff_flops", pair.ff.flops.total() as f64)
             .set("baseline_seconds", pair.baseline.train_seconds)
             .set("ff_seconds", pair.ff.train_seconds)
-            .set("baseline_loss", pair.baseline.final_test_loss as f64)
-            .set("ff_loss", pair.ff.final_test_loss as f64)
+            .set("baseline_loss", Json::num_or_null(pair.baseline.final_test_loss as f64))
+            .set("ff_loss", Json::num_or_null(pair.ff.final_test_loss as f64))
             .set("ff_adam_steps", pair.ff.adam_steps)
             .set("ff_sim_steps", pair.ff.sim_steps)
             .set("reached_target", pair.ff.reached_target))

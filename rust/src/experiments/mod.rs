@@ -16,6 +16,7 @@ pub mod fig5_plane;
 pub mod fig6_cosine;
 pub mod fig7_rank;
 pub mod fig8_fullrank;
+pub mod policy_grid;
 pub mod qa_benchmark;
 
 use std::collections::BTreeMap;
@@ -332,6 +333,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, ExpFn)> {
         ("fig14", "τ* at 2nd FF stage vs T_interval 1–10 (Appendix D)", fig14_interval::run),
         ("convergence", "§5.1: FF to convergence — no long-term harm", convergence::run),
         ("qa", "§5.2: few-shot QA accuracy, FF vs regular", qa_benchmark::run),
+        ("policies", "FF policies × optimizer backends × {batch, streaming} grid", policy_grid::run),
     ]
 }
 

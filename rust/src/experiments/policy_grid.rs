@@ -1,0 +1,200 @@
+//! FF policy × optimizer backend × submission-mode grid (PR 10).
+//!
+//! The paper's protocol fixes one trigger rule (every `T_interval` Adam
+//! steps, §3) and one optimizer (Adam). This harness sweeps the pluggable
+//! pieces against each other: every [`FfPolicyKind`] (interval /
+//! loss-slope / cosine) crossed with every [`OptimBackend`] (plain Adam
+//! vs the LoFT-style moment-realigning variant), each cell run twice —
+//! once as a normal **batch** queue submission racing to the plain-Adam
+//! target loss, and once as a **streaming** submission
+//! ([`RunQueue::submit_stream`]) whose tenant feeds the same number of
+//! examples in chunks. Per cell the report records optimizer + simulated
+//! steps, chargeable FLOPs, and host↔device bytes; the streaming twin
+//! additionally records whether it stayed bit-identical to its batch
+//! sibling (same trajectory, only the arrival pattern differs).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{FfConfig, FfPolicyKind, OptimBackend};
+use crate::experiments::common::{run_config, trainer_for};
+use crate::experiments::ExpContext;
+use crate::metrics::{write_report, TextTable};
+use crate::sched::{join_all, ArtifactCache, RunOutput, RunQueue, RunSpec};
+use crate::train::trainer::StopRule;
+use crate::util::json::Json;
+
+/// One (policy, backend) cell's spec with the given stop rule. Identical
+/// config across the cell's batch and streaming twins — only the stop
+/// rule (target-loss race vs fed-examples bound) differs.
+fn cell_spec(
+    ctx: &ExpContext,
+    artifact: &str,
+    base: &Arc<std::collections::BTreeMap<String, crate::model::tensor::Tensor>>,
+    kind: FfPolicyKind,
+    backend: OptimBackend,
+    stop: StopRule,
+) -> Result<RunSpec> {
+    let mut cfg = run_config(ctx, artifact, "medical", FfConfig {
+        policy: kind,
+        ..FfConfig::default()
+    })?;
+    cfg.backend = backend;
+    Ok(RunSpec {
+        label: format!("{}/{}", kind.as_str(), backend.as_str()),
+        cfg,
+        stop,
+        base: Some(Arc::clone(base)),
+        drain_interval: None,
+    })
+}
+
+fn row_json(
+    policy: FfPolicyKind,
+    backend: OptimBackend,
+    mode: &str,
+    out: &RunOutput,
+) -> Json {
+    let t = &out.summary.transfers;
+    Json::obj()
+        .set("policy", policy.as_str())
+        .set("backend", backend.as_str())
+        .set("mode", mode)
+        .set("adam_steps", out.summary.adam_steps)
+        .set("sim_steps", out.summary.sim_steps)
+        .set("flops", out.summary.flops.total() as f64)
+        .set("uploaded_bytes", t.uploaded_bytes as f64)
+        .set("downloaded_bytes", t.downloaded_bytes as f64)
+        .set("donated_bytes", t.donated_bytes as f64)
+        .set("ff_stages", out.stages.len())
+        .set("final_loss", Json::num_or_null(out.summary.final_test_loss as f64))
+        .set("reached_target", out.summary.reached_target)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let model = "ff-tiny"; // the sweep is about scheduling, not scale
+    let artifact = format!("{model}_lora_r8");
+    let base = ctx.pretrained(model)?;
+
+    // Target: the §4 baseline — plain Adam (interval policy is irrelevant
+    // with FF off), full epoch budget, direct trainer.
+    let cfg_b = run_config(ctx, &artifact, "medical",
+        FfConfig { enabled: false, ..FfConfig::default() })?;
+    let budget = cfg_b.max_steps;
+    let global_batch = cfg_b.global_batch;
+    let mut bt = trainer_for(ctx, cfg_b, Some(base.as_ref()))?;
+    let baseline = bt.run(&StopRule::MaxSteps(budget))?;
+    drop(bt);
+    let target = baseline.final_test_loss;
+    let eps = if ctx.scale.full { 1e-3 } else { 3e-3 };
+    crate::info!("[policies] plain-Adam target loss {target:.4} after {budget} steps");
+
+    let mut cells: Vec<(FfPolicyKind, OptimBackend)> = Vec::new();
+    for kind in FfPolicyKind::ALL {
+        for backend in [OptimBackend::Adam, OptimBackend::Loft] {
+            cells.push((kind, backend));
+        }
+    }
+
+    // Every cell goes through the serving-shaped scheduler: batch legs as
+    // plain queue submissions, streaming legs via `submit_stream`.
+    let cache = Arc::new(ArtifactCache::new(ctx.artifacts_root.clone()));
+    let q = RunQueue::new(ctx.jobs);
+
+    // Wave 1 — batch legs, fanned out: race each policy/backend pair to
+    // the baseline's target loss.
+    let mut handles = Vec::new();
+    for &(kind, backend) in &cells {
+        let spec = cell_spec(ctx, &artifact, &base, kind, backend, StopRule::TargetLoss {
+            target,
+            eps,
+            eval_every: ctx.scale.eval_every,
+            max_steps: budget * 2,
+        })?;
+        handles.push(q.submit_run(&ctx.rt, &cache, spec, 0, "policy-grid")?);
+    }
+    let mut batch = Vec::with_capacity(cells.len());
+    for (r, &(kind, backend)) in join_all(handles)?.into_iter().zip(&cells) {
+        batch.push(r.done().ok_or_else(|| {
+            anyhow!("batch cell {}/{} was cancelled", kind.as_str(), backend.as_str())
+        })?);
+    }
+
+    // Wave 2 — streaming twins: same config, but the data arrives in
+    // chunks through the tenant-held StreamHandle. Each twin's example
+    // budget mirrors the steps its batch sibling actually took, so the
+    // two trajectories are comparable step for step.
+    let mut stream_handles = Vec::new();
+    for (out, &(kind, backend)) in batch.iter().zip(&cells) {
+        let steps = out.summary.adam_steps.max(1);
+        let spec =
+            cell_spec(ctx, &artifact, &base, kind, backend, StopRule::MaxSteps(steps))?;
+        let (h, stream) = q.submit_stream(&ctx.rt, &cache, spec, 0, "policy-grid")?;
+        // Three uneven chunks, then finish — enough to exercise the
+        // starved-hold → feed → resume path without pretending to be a
+        // real ingestion pipeline.
+        let total = (steps * global_batch) as u64;
+        let chunk = (total / 3).max(1);
+        let mut fed = 0u64;
+        while fed < total {
+            let n = chunk.min(total - fed);
+            stream.feed(n);
+            fed += n;
+        }
+        stream.finish();
+        stream_handles.push(h);
+    }
+    let mut streamed = Vec::with_capacity(cells.len());
+    for (r, &(kind, backend)) in join_all(stream_handles)?.into_iter().zip(&cells) {
+        streamed.push(r.done().ok_or_else(|| {
+            anyhow!("stream cell {}/{} was cancelled", kind.as_str(), backend.as_str())
+        })?);
+    }
+
+    // Report: one row per (cell, mode); streaming rows carry the
+    // bit-identity verdict against their batch sibling.
+    let mut rows = Vec::new();
+    let mut table = TextTable::new(&[
+        "policy", "backend", "mode", "steps (adam+sim)", "MFLOPs", "MB moved", "loss", "note",
+    ]);
+    for (i, &(kind, backend)) in cells.iter().enumerate() {
+        for (mode, out) in [("batch", &batch[i]), ("stream", &streamed[i])] {
+            let mut row = row_json(kind, backend, mode, out);
+            let note = if mode == "batch" {
+                if out.summary.reached_target { "target met" } else { "budget hit" }.to_string()
+            } else {
+                let same = batch[i].bit_identical(out);
+                row = row.set("matches_batch", same);
+                if same { "bit==batch".to_string() } else { "DIVERGED from batch".to_string() }
+            };
+            let t = &out.summary.transfers;
+            table.row(&[
+                kind.as_str().to_string(),
+                backend.as_str().to_string(),
+                mode.to_string(),
+                format!("{}+{}", out.summary.adam_steps, out.summary.sim_steps),
+                format!("{:.1}", out.summary.flops.total() as f64 / 1e6),
+                format!("{:.2}", (t.uploaded_bytes + t.downloaded_bytes) as f64 / 1e6),
+                format!("{:.4}", out.summary.final_test_loss),
+                note,
+            ]);
+            rows.push(row);
+        }
+    }
+
+    let json = Json::obj()
+        .set("id", "policies")
+        .set("model", model)
+        .set("task", "medical")
+        .set("target_loss", Json::num_or_null(target as f64))
+        .set("baseline_steps", budget)
+        .set("rows", Json::Arr(rows));
+    let text = format!(
+        "FF policies × optimizer backends × {{batch, streaming}} (ff-tiny/medical)\n\
+         plain-Adam target loss {target:.4} after {budget} steps; batch legs race the\n\
+         target, streaming twins replay the same step budget from chunked feeds\n\n{}",
+        table.render()
+    );
+    write_report(&ctx.reports_dir, "policies", &json, &text)
+}

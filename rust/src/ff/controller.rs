@@ -5,13 +5,21 @@
 //! ```
 //!
 //! The controller owns *when* to Fast Forward; the trainer owns *how*
-//! (line search over Δ_W). It also implements:
+//! (line search over Δ_W). Since PR 10 the "when" is pluggable: the
+//! controller is a thin wrapper holding the stage history and delegating
+//! every scheduling decision to the [`FfPolicy`] selected by
+//! `FfConfig::policy` (`super::policy` — interval, loss-slope, cosine).
+//! The default [`super::policy::IntervalPolicy`] reproduces the pre-PR-10
+//! controller bit-for-bit, including:
 //!   * the §5.1 convergence rule — after `convergence_patience` consecutive
 //!     FF stages with τ* = 0, Fast Forward is permanently disabled;
 //!   * the §7-future-work adaptive interval — shrink T_interval while FF
 //!     stages are productive, grow it when they fizzle (ablation bench).
 
 use crate::config::FfConfig;
+use crate::model::tensor::Tensor;
+
+use super::policy::{make_policy, FfPolicy, FfPosition};
 
 /// What the trainer should do next.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,108 +47,39 @@ pub struct FfStageStats {
     pub grad_cond: f64,
 }
 
-/// The controller's schedule position, snapshotted for park/resume
-/// (`train::checkpoint::ParkState`). Captures every private scheduling
-/// counter — restoring it into a fresh controller with the same
-/// `FfConfig` reproduces the exact decision sequence, so a resumed run's
-/// FF stages land on the same steps as an uninterrupted one. `stages`
-/// history rides separately (it is already public on the controller).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct FfPosition {
-    pub sgd_since_ff: usize,
-    pub total_sgd: usize,
-    pub interval: usize,
-    pub consecutive_failures: usize,
-    pub permanently_off: bool,
-}
-
 #[derive(Debug)]
 pub struct FfController {
-    cfg: FfConfig,
-    sgd_since_ff: usize,
-    total_sgd: usize,
-    /// Current interval (== cfg.t_interval unless adaptive).
-    interval: usize,
-    consecutive_failures: usize,
-    permanently_off: bool,
+    policy: Box<dyn FfPolicy>,
     pub stages: Vec<FfStageStats>,
 }
 
 impl FfController {
     pub fn new(cfg: FfConfig) -> FfController {
-        let interval = cfg.t_interval;
-        FfController {
-            cfg,
-            sgd_since_ff: 0,
-            total_sgd: 0,
-            interval,
-            consecutive_failures: 0,
-            permanently_off: false,
-            stages: Vec::new(),
-        }
+        FfController { policy: make_policy(&cfg), stages: Vec::new() }
     }
 
     pub fn interval(&self) -> usize {
-        self.interval
+        self.policy.interval()
     }
 
     pub fn is_permanently_off(&self) -> bool {
-        self.permanently_off
+        self.policy.is_permanently_off()
     }
 
-    /// Decide the next action. FF requires: enabled, not disabled by the
-    /// convergence rule, warmup complete, a full interval of SGD steps run
-    /// since the last stage (so Δ_W reflects a *recent* optimizer step).
+    /// Decide the next action (delegates to the active policy).
     pub fn next(&self) -> FfDecision {
-        if !self.cfg.enabled || self.permanently_off {
-            return FfDecision::Sgd;
-        }
-        if self.total_sgd < self.cfg.warmup_steps {
-            return FfDecision::Sgd;
-        }
-        if self.sgd_since_ff >= self.interval {
-            FfDecision::FastForward
-        } else {
-            FfDecision::Sgd
-        }
+        self.policy.next()
     }
 
     /// Record a completed SGD step.
     pub fn on_sgd_step(&mut self) {
-        self.total_sgd += 1;
-        self.sgd_since_ff += 1;
+        self.policy.on_sgd_step();
     }
 
-    /// Record a completed FF stage; applies the convergence + adaptive rules.
+    /// Record a completed FF stage; the policy applies its convergence /
+    /// adaptation rules, the controller keeps the history.
     pub fn on_ff_stage(&mut self, stats: FfStageStats) {
-        self.sgd_since_ff = 0;
-        if stats.tau_star == 0 {
-            self.consecutive_failures += 1;
-            if let Some(patience) = self.cfg.convergence_patience {
-                if self.consecutive_failures >= patience {
-                    self.permanently_off = true;
-                    crate::info!(
-                        "FF permanently off after {} consecutive empty stages (§5.1 rule)",
-                        self.consecutive_failures
-                    );
-                }
-            }
-        } else {
-            self.consecutive_failures = 0;
-        }
-        if self.cfg.adaptive_interval {
-            // §7 future work: productive stages → FF sooner; fizzles →
-            // later. The interval is clamped to [1, 4·t_interval]: it can
-            // never shrink below one SGD step (Δ_W must reflect at least
-            // one fresh optimizer step between stages) and growth is
-            // capped so a long fizzle streak cannot push FF out of a run
-            // entirely before the §5.1 convergence rule gets to decide.
-            if stats.tau_star >= 4 {
-                self.interval = (self.interval.saturating_sub(1)).max(1);
-            } else if stats.tau_star == 0 {
-                self.interval = (self.interval + 2).min(4 * self.cfg.t_interval);
-            }
-        }
+        self.policy.on_ff_stage(&stats);
         self.stages.push(stats);
     }
 
@@ -150,25 +89,44 @@ impl FfController {
 
     /// Snapshot the schedule position for park/resume.
     pub fn position(&self) -> FfPosition {
-        FfPosition {
-            sgd_since_ff: self.sgd_since_ff,
-            total_sgd: self.total_sgd,
-            interval: self.interval,
-            consecutive_failures: self.consecutive_failures,
-            permanently_off: self.permanently_off,
-        }
+        self.policy.position()
     }
 
     /// Restore a snapshotted schedule position (the inverse of
-    /// [`FfController::position`]). The controller keeps its own `cfg`:
-    /// a resume is only meaningful with the same `FfConfig` the position
-    /// was taken under.
-    pub fn restore_position(&mut self, p: FfPosition) {
-        self.sgd_since_ff = p.sgd_since_ff;
-        self.total_sgd = p.total_sgd;
-        self.interval = p.interval;
-        self.consecutive_failures = p.consecutive_failures;
-        self.permanently_off = p.permanently_off;
+    /// [`FfController::position`]). Fails on a policy-kind mismatch
+    /// (a snapshot is only meaningful under the policy that took it —
+    /// the resume path also checks the full `FfConfig` fingerprint) and
+    /// clamps config-bounded fields into the current config's range.
+    pub fn restore_position(&mut self, p: &FfPosition) -> anyhow::Result<()> {
+        self.policy.restore_position(p)
+    }
+
+    /// Does the active policy want a tiny-val loss after each SGD step?
+    pub fn wants_val_loss(&self) -> bool {
+        self.policy.wants_val_loss()
+    }
+
+    /// Does the active policy want each SGD step's Δ_W?
+    pub fn wants_delta(&self) -> bool {
+        self.policy.wants_delta()
+    }
+
+    pub fn observe_val_loss(&mut self, loss: f32) {
+        self.policy.observe_val_loss(loss);
+    }
+
+    pub fn observe_delta(&mut self, delta: &[Tensor]) {
+        self.policy.observe_delta(delta);
+    }
+
+    /// Bulk tensor state to park alongside the position (`fa/` payload
+    /// group in the checkpoint).
+    pub fn aux_state(&self) -> Vec<Tensor> {
+        self.policy.aux_state()
+    }
+
+    pub fn restore_aux(&mut self, aux: &[Tensor]) -> anyhow::Result<()> {
+        self.policy.restore_aux(aux)
     }
 }
 
@@ -207,7 +165,7 @@ mod tests {
         }
         let pos = a.position();
         let mut b = FfController::new(cfg());
-        b.restore_position(pos);
+        b.restore_position(&pos).unwrap();
         assert_eq!(b.position(), pos);
         for i in 0..12 {
             assert_eq!(a.next(), b.next(), "decision diverged at step {i}");
@@ -248,6 +206,17 @@ mod tests {
             assert_eq!(c.next(), FfDecision::Sgd);
             c.on_sgd_step();
         }
+    }
+
+    #[test]
+    fn default_controller_requests_no_policy_signals() {
+        // The default IntervalPolicy must impose zero extra evals or
+        // Δ_W downloads — this is what makes its bit-identity to the
+        // pre-policy controller structural.
+        let c = FfController::new(cfg());
+        assert!(!c.wants_val_loss());
+        assert!(!c.wants_delta());
+        assert!(c.aux_state().is_empty());
     }
 
     #[test]

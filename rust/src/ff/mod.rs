@@ -4,6 +4,8 @@
 
 pub mod controller;
 pub mod line_search;
+pub mod policy;
 
-pub use controller::{FfController, FfDecision, FfPosition, FfStageStats};
+pub use controller::{FfController, FfDecision, FfStageStats};
 pub use line_search::{line_search, LineSearchResult};
+pub use policy::{make_policy, CosinePolicy, FfPolicy, FfPosition, IntervalPolicy, LossSlopePolicy};

@@ -1,0 +1,875 @@
+//! Pluggable Fast Forward trigger policies (ROADMAP "scenario diversity").
+//!
+//! The paper's closing analysis asks *when* to Fast Forward; this module
+//! makes that a first-class axis. A [`FfPolicy`] owns every scheduling
+//! counter and answers [`FfPolicy::next`]; the [`super::FfController`]
+//! wrapper owns the stage history and the public trainer-facing surface.
+//!
+//! Three policies ship:
+//!   * [`IntervalPolicy`] — the paper's fixed/adaptive T_interval
+//!     controller, bit-identical to the pre-policy `FfController` (the
+//!     legacy automaton is replicated in this module's tests and fuzzed
+//!     against it; `selftest --policies` additionally proves seeded
+//!     end-to-end runs bit-identical).
+//!   * [`LossSlopePolicy`] — fire when the tiny-val loss slope over a
+//!     window flattens below a threshold (SGD has stopped making fast
+//!     progress, so extrapolation is worth probing).
+//!   * [`CosinePolicy`] — fire when consecutive Δ_W directions' cosine
+//!     similarity exceeds a threshold (paper Fig 6: FF works because
+//!     successive low-rank updates align; once they do, jump).
+//!
+//! Policies declare which signals they need via the `wants_*` gates; the
+//! trainer only pays for an extra tiny-val eval or a Δ_W download when the
+//! active policy asks. `IntervalPolicy` asks for nothing, which is what
+//! makes its bit-identity to the old controller structural rather than
+//! incidental.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use super::controller::{FfDecision, FfStageStats};
+use crate::config::{FfConfig, FfPolicyKind};
+use crate::model::tensor::{cosine_similarity, Tensor};
+
+/// A policy's schedule position, snapshotted for park/resume
+/// (`train::checkpoint::ParkState`). Tagged per policy: restoring a
+/// snapshot into a different policy kind is a hard error (the resume-time
+/// `FfConfig` fingerprint check catches this earlier with a better
+/// message; the tag is the last line of defense). Large state — the
+/// cosine policy's previous Δ_W — rides separately through
+/// [`FfPolicy::aux_state`] so the position stays a small header field.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FfPosition {
+    Interval {
+        sgd_since_ff: usize,
+        total_sgd: usize,
+        interval: usize,
+        consecutive_failures: usize,
+        permanently_off: bool,
+    },
+    LossSlope {
+        sgd_since_ff: usize,
+        total_sgd: usize,
+        consecutive_failures: usize,
+        permanently_off: bool,
+        /// Tiny-val losses observed since the last FF stage, oldest first.
+        window: Vec<f32>,
+    },
+    Cosine {
+        sgd_since_ff: usize,
+        total_sgd: usize,
+        consecutive_failures: usize,
+        permanently_off: bool,
+        /// Most recent consecutive-Δ_W cosine (valid iff `has_cosine`).
+        last_cosine: f64,
+        has_cosine: bool,
+    },
+}
+
+impl Default for FfPosition {
+    fn default() -> Self {
+        FfPosition::Interval {
+            sgd_since_ff: 0,
+            total_sgd: 0,
+            interval: 0,
+            consecutive_failures: 0,
+            permanently_off: false,
+        }
+    }
+}
+
+impl FfPosition {
+    pub fn kind(&self) -> FfPolicyKind {
+        match self {
+            FfPosition::Interval { .. } => FfPolicyKind::Interval,
+            FfPosition::LossSlope { .. } => FfPolicyKind::LossSlope,
+            FfPosition::Cosine { .. } => FfPolicyKind::Cosine,
+        }
+    }
+
+    pub fn total_sgd(&self) -> usize {
+        match self {
+            FfPosition::Interval { total_sgd, .. }
+            | FfPosition::LossSlope { total_sgd, .. }
+            | FfPosition::Cosine { total_sgd, .. } => *total_sgd,
+        }
+    }
+}
+
+/// The FF trigger contract. Implementations own *when* to Fast Forward;
+/// the trainer owns *how* (line search over Δ_W).
+///
+/// Observation gates (`wants_val_loss` / `wants_delta`) default to off:
+/// a policy that never asks imposes zero extra evals or transfers on the
+/// step loop. The trainer queries the gates each SGD step and feeds only
+/// the requested signals.
+pub trait FfPolicy: std::fmt::Debug + Send {
+    /// Decide the next action from the current position.
+    fn next(&self) -> FfDecision;
+    /// Record a completed SGD step.
+    fn on_sgd_step(&mut self);
+    /// Record a completed FF stage (applies the §5.1 convergence rule).
+    fn on_ff_stage(&mut self, stats: &FfStageStats);
+    /// Snapshot the schedule position for park/resume.
+    fn position(&self) -> FfPosition;
+    /// Restore a snapshot. Fails on a policy-kind mismatch; clamps any
+    /// config-bounded field (e.g. the interval) into the *current*
+    /// config's legal range.
+    fn restore_position(&mut self, p: &FfPosition) -> Result<()>;
+    /// Current nominal SGD interval between stages (reporting only for
+    /// non-interval policies).
+    fn interval(&self) -> usize;
+    /// §5.1 convergence rule has permanently disabled FF.
+    fn is_permanently_off(&self) -> bool;
+
+    /// Wants a tiny-val loss after each SGD step.
+    fn wants_val_loss(&self) -> bool {
+        false
+    }
+    /// Wants the Δ_W of each SGD step.
+    fn wants_delta(&self) -> bool {
+        false
+    }
+    fn observe_val_loss(&mut self, _loss: f32) {}
+    fn observe_delta(&mut self, _delta: &[Tensor]) {}
+
+    /// Bulk tensor state to park alongside the position (checkpoint
+    /// payload group `fa/`), e.g. the cosine policy's previous Δ_W.
+    fn aux_state(&self) -> Vec<Tensor> {
+        Vec::new()
+    }
+    fn restore_aux(&mut self, _aux: &[Tensor]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Build the policy selected by `cfg.policy`.
+pub fn make_policy(cfg: &FfConfig) -> Box<dyn FfPolicy> {
+    match cfg.policy {
+        FfPolicyKind::Interval => Box::new(IntervalPolicy::new(cfg.clone())),
+        FfPolicyKind::LossSlope => Box::new(LossSlopePolicy::new(cfg.clone())),
+        FfPolicyKind::Cosine => Box::new(CosinePolicy::new(cfg.clone())),
+    }
+}
+
+/// §5.1 convergence rule, shared by every policy: `patience` consecutive
+/// stages with τ* = 0 permanently disable FF; any productive stage resets
+/// the streak.
+fn apply_patience(
+    cfg: &FfConfig,
+    stats: &FfStageStats,
+    consecutive_failures: &mut usize,
+    permanently_off: &mut bool,
+) {
+    if stats.tau_star == 0 {
+        *consecutive_failures += 1;
+        if let Some(patience) = cfg.convergence_patience {
+            if *consecutive_failures >= patience {
+                *permanently_off = true;
+                crate::info!(
+                    "FF permanently off after {} consecutive empty stages (§5.1 rule)",
+                    *consecutive_failures
+                );
+            }
+        }
+    } else {
+        *consecutive_failures = 0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// IntervalPolicy — the paper's controller, verbatim.
+// ---------------------------------------------------------------------------
+
+/// The paper Fig 1 schedule: warmup, then FF every `interval` SGD steps,
+/// with the §7-future-work adaptive interval and the §5.1 convergence
+/// rule. Decision logic is copied verbatim from the pre-policy
+/// `FfController`; the fuzz test below drives it against a replica of the
+/// legacy automaton to keep it bit-identical.
+#[derive(Debug)]
+pub struct IntervalPolicy {
+    cfg: FfConfig,
+    sgd_since_ff: usize,
+    total_sgd: usize,
+    /// Current interval (== cfg.t_interval unless adaptive).
+    interval: usize,
+    consecutive_failures: usize,
+    permanently_off: bool,
+}
+
+impl IntervalPolicy {
+    pub fn new(cfg: FfConfig) -> IntervalPolicy {
+        let interval = cfg.t_interval;
+        IntervalPolicy {
+            cfg,
+            sgd_since_ff: 0,
+            total_sgd: 0,
+            interval,
+            consecutive_failures: 0,
+            permanently_off: false,
+        }
+    }
+}
+
+impl FfPolicy for IntervalPolicy {
+    /// FF requires: enabled, not disabled by the convergence rule, warmup
+    /// complete, a full interval of SGD steps since the last stage (so
+    /// Δ_W reflects a *recent* optimizer step).
+    fn next(&self) -> FfDecision {
+        if !self.cfg.enabled || self.permanently_off {
+            return FfDecision::Sgd;
+        }
+        if self.total_sgd < self.cfg.warmup_steps {
+            return FfDecision::Sgd;
+        }
+        if self.sgd_since_ff >= self.interval {
+            FfDecision::FastForward
+        } else {
+            FfDecision::Sgd
+        }
+    }
+
+    fn on_sgd_step(&mut self) {
+        self.total_sgd += 1;
+        self.sgd_since_ff += 1;
+    }
+
+    fn on_ff_stage(&mut self, stats: &FfStageStats) {
+        self.sgd_since_ff = 0;
+        apply_patience(&self.cfg, stats, &mut self.consecutive_failures, &mut self.permanently_off);
+        if self.cfg.adaptive_interval {
+            // §7 future work: productive stages → FF sooner; fizzles →
+            // later. The interval is clamped to [1, 4·t_interval]: it can
+            // never shrink below one SGD step (Δ_W must reflect at least
+            // one fresh optimizer step between stages) and growth is
+            // capped so a long fizzle streak cannot push FF out of a run
+            // entirely before the §5.1 convergence rule gets to decide.
+            if stats.tau_star >= 4 {
+                self.interval = (self.interval.saturating_sub(1)).max(1);
+            } else if stats.tau_star == 0 {
+                self.interval = (self.interval + 2).min(4 * self.cfg.t_interval);
+            }
+        }
+    }
+
+    fn position(&self) -> FfPosition {
+        FfPosition::Interval {
+            sgd_since_ff: self.sgd_since_ff,
+            total_sgd: self.total_sgd,
+            interval: self.interval,
+            consecutive_failures: self.consecutive_failures,
+            permanently_off: self.permanently_off,
+        }
+    }
+
+    fn restore_position(&mut self, p: &FfPosition) -> Result<()> {
+        let FfPosition::Interval {
+            sgd_since_ff,
+            total_sgd,
+            interval,
+            consecutive_failures,
+            permanently_off,
+        } = *p
+        else {
+            bail!("cannot restore a {:?} snapshot into an interval policy", p.kind());
+        };
+        self.sgd_since_ff = sgd_since_ff;
+        self.total_sgd = total_sgd;
+        // Clamp into the *current* config's legal range: a snapshot taken
+        // under a different `t_interval` (legacy park files predate the
+        // fingerprint check) must not run outside [1, 4·t_interval].
+        self.interval = interval.clamp(1, (4 * self.cfg.t_interval).max(1));
+        self.consecutive_failures = consecutive_failures;
+        self.permanently_off = permanently_off;
+        Ok(())
+    }
+
+    fn interval(&self) -> usize {
+        self.interval
+    }
+
+    fn is_permanently_off(&self) -> bool {
+        self.permanently_off
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LossSlopePolicy — fire when the tiny-val loss curve flattens.
+// ---------------------------------------------------------------------------
+
+/// Fire FF when SGD progress stalls: after warmup, once `slope_window`
+/// consecutive tiny-val losses show a per-step relative improvement below
+/// `slope_threshold`, the next decision is FastForward. The window clears
+/// on every FF stage so a fresh interval of real SGD evidence accumulates
+/// before the next trigger.
+#[derive(Debug)]
+pub struct LossSlopePolicy {
+    cfg: FfConfig,
+    sgd_since_ff: usize,
+    total_sgd: usize,
+    consecutive_failures: usize,
+    permanently_off: bool,
+    /// Per-SGD-step tiny-val losses since the last stage, oldest first.
+    window: VecDeque<f32>,
+}
+
+impl LossSlopePolicy {
+    pub fn new(cfg: FfConfig) -> LossSlopePolicy {
+        LossSlopePolicy {
+            cfg,
+            sgd_since_ff: 0,
+            total_sgd: 0,
+            consecutive_failures: 0,
+            permanently_off: false,
+            window: VecDeque::new(),
+        }
+    }
+
+    /// A slope needs two points; treat degenerate configs as window 2.
+    fn window_cap(&self) -> usize {
+        self.cfg.slope_window.max(2)
+    }
+
+    /// Relative per-step improvement over the full window, or `None`
+    /// until the window is full. Positive = still improving; at or below
+    /// `slope_threshold` the curve has flattened (or worsened) and FF is
+    /// worth probing.
+    fn rel_slope(&self) -> Option<f32> {
+        let cap = self.window_cap();
+        if self.window.len() < cap {
+            return None;
+        }
+        let first = *self.window.front().unwrap();
+        let last = *self.window.back().unwrap();
+        let denom = (cap - 1) as f32 * last.abs().max(1e-8);
+        Some((first - last) / denom)
+    }
+}
+
+impl FfPolicy for LossSlopePolicy {
+    fn next(&self) -> FfDecision {
+        if !self.cfg.enabled || self.permanently_off {
+            return FfDecision::Sgd;
+        }
+        if self.total_sgd < self.cfg.warmup_steps || self.sgd_since_ff == 0 {
+            return FfDecision::Sgd;
+        }
+        match self.rel_slope() {
+            Some(slope) if slope < self.cfg.slope_threshold => FfDecision::FastForward,
+            _ => FfDecision::Sgd,
+        }
+    }
+
+    fn on_sgd_step(&mut self) {
+        self.total_sgd += 1;
+        self.sgd_since_ff += 1;
+    }
+
+    fn on_ff_stage(&mut self, stats: &FfStageStats) {
+        self.sgd_since_ff = 0;
+        self.window.clear();
+        apply_patience(&self.cfg, stats, &mut self.consecutive_failures, &mut self.permanently_off);
+    }
+
+    fn position(&self) -> FfPosition {
+        FfPosition::LossSlope {
+            sgd_since_ff: self.sgd_since_ff,
+            total_sgd: self.total_sgd,
+            consecutive_failures: self.consecutive_failures,
+            permanently_off: self.permanently_off,
+            window: self.window.iter().copied().collect(),
+        }
+    }
+
+    fn restore_position(&mut self, p: &FfPosition) -> Result<()> {
+        let FfPosition::LossSlope {
+            sgd_since_ff,
+            total_sgd,
+            consecutive_failures,
+            permanently_off,
+            ref window,
+        } = *p
+        else {
+            bail!("cannot restore a {:?} snapshot into a loss-slope policy", p.kind());
+        };
+        self.sgd_since_ff = sgd_since_ff;
+        self.total_sgd = total_sgd;
+        self.consecutive_failures = consecutive_failures;
+        self.permanently_off = permanently_off;
+        self.window = window.iter().copied().collect();
+        // Keep only the newest entries if the configured window shrank.
+        while self.window.len() > self.window_cap() {
+            self.window.pop_front();
+        }
+        Ok(())
+    }
+
+    fn interval(&self) -> usize {
+        self.cfg.t_interval
+    }
+
+    fn is_permanently_off(&self) -> bool {
+        self.permanently_off
+    }
+
+    fn wants_val_loss(&self) -> bool {
+        self.cfg.enabled && !self.permanently_off
+    }
+
+    fn observe_val_loss(&mut self, loss: f32) {
+        self.window.push_back(loss);
+        while self.window.len() > self.window_cap() {
+            self.window.pop_front();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CosinePolicy — fire when consecutive Δ_W directions align.
+// ---------------------------------------------------------------------------
+
+/// Fire FF when successive optimizer steps agree on a direction: the
+/// cosine similarity between the latest Δ_W and the previous one reaching
+/// `cosine_threshold` is exactly the regime in which the paper's
+/// line-search extrapolation pays off (Fig 6). Uses
+/// [`crate::model::tensor::cosine_similarity`] over the
+/// [`crate::optim::delta::DeltaTracker`]-style per-step deltas the trainer
+/// feeds through [`FfPolicy::observe_delta`].
+#[derive(Debug)]
+pub struct CosinePolicy {
+    cfg: FfConfig,
+    sgd_since_ff: usize,
+    total_sgd: usize,
+    consecutive_failures: usize,
+    permanently_off: bool,
+    /// Δ_W of the previous SGD step (parked via `aux_state`).
+    prev_delta: Option<Vec<Tensor>>,
+    last_cosine: f64,
+    has_cosine: bool,
+}
+
+impl CosinePolicy {
+    pub fn new(cfg: FfConfig) -> CosinePolicy {
+        CosinePolicy {
+            cfg,
+            sgd_since_ff: 0,
+            total_sgd: 0,
+            consecutive_failures: 0,
+            permanently_off: false,
+            prev_delta: None,
+            last_cosine: 0.0,
+            has_cosine: false,
+        }
+    }
+
+    pub fn last_cosine(&self) -> Option<f64> {
+        self.has_cosine.then_some(self.last_cosine)
+    }
+}
+
+impl FfPolicy for CosinePolicy {
+    fn next(&self) -> FfDecision {
+        if !self.cfg.enabled || self.permanently_off {
+            return FfDecision::Sgd;
+        }
+        if self.total_sgd < self.cfg.warmup_steps || self.sgd_since_ff == 0 {
+            return FfDecision::Sgd;
+        }
+        if self.has_cosine && self.last_cosine >= self.cfg.cosine_threshold {
+            FfDecision::FastForward
+        } else {
+            FfDecision::Sgd
+        }
+    }
+
+    fn on_sgd_step(&mut self) {
+        self.total_sgd += 1;
+        self.sgd_since_ff += 1;
+    }
+
+    fn on_ff_stage(&mut self, stats: &FfStageStats) {
+        self.sgd_since_ff = 0;
+        // The stage jumped the weights: the pre-stage Δ_W no longer
+        // describes the local direction. Start over.
+        self.prev_delta = None;
+        self.last_cosine = 0.0;
+        self.has_cosine = false;
+        apply_patience(&self.cfg, stats, &mut self.consecutive_failures, &mut self.permanently_off);
+    }
+
+    fn position(&self) -> FfPosition {
+        FfPosition::Cosine {
+            sgd_since_ff: self.sgd_since_ff,
+            total_sgd: self.total_sgd,
+            consecutive_failures: self.consecutive_failures,
+            permanently_off: self.permanently_off,
+            last_cosine: self.last_cosine,
+            has_cosine: self.has_cosine,
+        }
+    }
+
+    fn restore_position(&mut self, p: &FfPosition) -> Result<()> {
+        let FfPosition::Cosine {
+            sgd_since_ff,
+            total_sgd,
+            consecutive_failures,
+            permanently_off,
+            last_cosine,
+            has_cosine,
+        } = *p
+        else {
+            bail!("cannot restore a {:?} snapshot into a cosine policy", p.kind());
+        };
+        self.sgd_since_ff = sgd_since_ff;
+        self.total_sgd = total_sgd;
+        self.consecutive_failures = consecutive_failures;
+        self.permanently_off = permanently_off;
+        self.last_cosine = last_cosine;
+        self.has_cosine = has_cosine;
+        Ok(())
+    }
+
+    fn interval(&self) -> usize {
+        self.cfg.t_interval
+    }
+
+    fn is_permanently_off(&self) -> bool {
+        self.permanently_off
+    }
+
+    fn wants_delta(&self) -> bool {
+        self.cfg.enabled && !self.permanently_off
+    }
+
+    fn observe_delta(&mut self, delta: &[Tensor]) {
+        if let Some(prev) = &self.prev_delta {
+            self.last_cosine = cosine_similarity(prev, delta);
+            self.has_cosine = true;
+        }
+        self.prev_delta = Some(delta.to_vec());
+    }
+
+    fn aux_state(&self) -> Vec<Tensor> {
+        self.prev_delta.clone().unwrap_or_default()
+    }
+
+    fn restore_aux(&mut self, aux: &[Tensor]) -> Result<()> {
+        self.prev_delta = if aux.is_empty() { None } else { Some(aux.to_vec()) };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(stage: usize, tau: usize) -> FfStageStats {
+        FfStageStats {
+            stage,
+            at_step: 0,
+            tau_star: tau,
+            probes: tau + 1,
+            baseline_loss: 1.0,
+            final_loss: 0.9,
+            grad_norm: 0.0,
+            grad_cond: 0.0,
+        }
+    }
+
+    /// Verbatim replica of the pre-policy `FfController` decision
+    /// automaton (PR ≤ 9), kept here as the bit-identity oracle for
+    /// `IntervalPolicy`.
+    struct LegacyController {
+        cfg: FfConfig,
+        sgd_since_ff: usize,
+        total_sgd: usize,
+        interval: usize,
+        consecutive_failures: usize,
+        permanently_off: bool,
+    }
+
+    impl LegacyController {
+        fn new(cfg: FfConfig) -> LegacyController {
+            let interval = cfg.t_interval;
+            LegacyController {
+                cfg,
+                sgd_since_ff: 0,
+                total_sgd: 0,
+                interval,
+                consecutive_failures: 0,
+                permanently_off: false,
+            }
+        }
+
+        fn next(&self) -> FfDecision {
+            if !self.cfg.enabled || self.permanently_off {
+                return FfDecision::Sgd;
+            }
+            if self.total_sgd < self.cfg.warmup_steps {
+                return FfDecision::Sgd;
+            }
+            if self.sgd_since_ff >= self.interval {
+                FfDecision::FastForward
+            } else {
+                FfDecision::Sgd
+            }
+        }
+
+        fn on_sgd_step(&mut self) {
+            self.total_sgd += 1;
+            self.sgd_since_ff += 1;
+        }
+
+        fn on_ff_stage(&mut self, s: &FfStageStats) {
+            self.sgd_since_ff = 0;
+            if s.tau_star == 0 {
+                self.consecutive_failures += 1;
+                if let Some(p) = self.cfg.convergence_patience {
+                    if self.consecutive_failures >= p {
+                        self.permanently_off = true;
+                    }
+                }
+            } else {
+                self.consecutive_failures = 0;
+            }
+            if self.cfg.adaptive_interval {
+                if s.tau_star >= 4 {
+                    self.interval = (self.interval.saturating_sub(1)).max(1);
+                } else if s.tau_star == 0 {
+                    self.interval = (self.interval + 2).min(4 * self.cfg.t_interval);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interval_policy_matches_legacy_controller_exhaustively() {
+        // Fuzz the new policy against the legacy automaton over seeded
+        // τ* sequences across every schedule-shaping config axis.
+        let mut lcg = 0x2545F491_u64;
+        let mut rand = move |m: usize| {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((lcg >> 33) as usize) % m
+        };
+        for adaptive in [false, true] {
+            for patience in [None, Some(2), Some(4)] {
+                for t_interval in [1usize, 2, 5] {
+                    let cfg = FfConfig {
+                        t_interval,
+                        warmup_steps: 3,
+                        adaptive_interval: adaptive,
+                        convergence_patience: patience,
+                        ..FfConfig::default()
+                    };
+                    let mut legacy = LegacyController::new(cfg.clone());
+                    let mut policy = IntervalPolicy::new(cfg);
+                    for step in 0..400 {
+                        assert_eq!(
+                            legacy.next(),
+                            policy.next(),
+                            "diverged at step {step} (adaptive={adaptive}, patience={patience:?}, t={t_interval})"
+                        );
+                        if legacy.next() == FfDecision::FastForward {
+                            let s = stats(step, rand(7));
+                            legacy.on_ff_stage(&s);
+                            policy.on_ff_stage(&s);
+                            assert_eq!(legacy.interval, policy.interval());
+                            assert_eq!(legacy.permanently_off, policy.is_permanently_off());
+                        } else {
+                            legacy.on_sgd_step();
+                            policy.on_sgd_step();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interval_restore_clamps_into_current_config_range() {
+        // A snapshot taken under t_interval=10 (interval grew to 40)
+        // restored into a t_interval=2 policy must clamp to [1, 8].
+        let mut p = IntervalPolicy::new(FfConfig { t_interval: 2, ..FfConfig::default() });
+        p.restore_position(&FfPosition::Interval {
+            sgd_since_ff: 1,
+            total_sgd: 9,
+            interval: 40,
+            consecutive_failures: 0,
+            permanently_off: false,
+        })
+        .unwrap();
+        assert_eq!(p.interval(), 8);
+        p.restore_position(&FfPosition::Interval {
+            sgd_since_ff: 1,
+            total_sgd: 9,
+            interval: 0,
+            consecutive_failures: 0,
+            permanently_off: false,
+        })
+        .unwrap();
+        assert_eq!(p.interval(), 1);
+    }
+
+    #[test]
+    fn restore_rejects_cross_policy_snapshots() {
+        let cfg = FfConfig::default();
+        let slope_pos = LossSlopePolicy::new(cfg.clone()).position();
+        let err = IntervalPolicy::new(cfg.clone()).restore_position(&slope_pos).unwrap_err();
+        assert!(err.to_string().contains("interval policy"), "{err}");
+        let interval_pos = IntervalPolicy::new(cfg.clone()).position();
+        assert!(LossSlopePolicy::new(cfg.clone()).restore_position(&interval_pos).is_err());
+        assert!(CosinePolicy::new(cfg).restore_position(&interval_pos).is_err());
+    }
+
+    fn slope_cfg() -> FfConfig {
+        FfConfig {
+            policy: FfPolicyKind::LossSlope,
+            warmup_steps: 2,
+            slope_window: 4,
+            slope_threshold: 1e-2,
+            ..FfConfig::default()
+        }
+    }
+
+    #[test]
+    fn loss_slope_fires_only_when_the_curve_flattens() {
+        let mut p = LossSlopePolicy::new(slope_cfg());
+        // Steeply improving losses: never fires even with a full window.
+        for i in 0..6 {
+            p.on_sgd_step();
+            p.observe_val_loss(2.0 - 0.3 * i as f32);
+            assert_eq!(p.next(), FfDecision::Sgd, "fired while improving at step {i}");
+        }
+        // Flat losses: the window refills with zero slope → fire.
+        for _ in 0..4 {
+            assert!(p.wants_val_loss());
+            p.on_sgd_step();
+            p.observe_val_loss(0.5);
+        }
+        assert_eq!(p.next(), FfDecision::FastForward);
+        // A stage clears the window: needs fresh evidence before refiring.
+        p.on_ff_stage(&stats(0, 3));
+        assert_eq!(p.next(), FfDecision::Sgd);
+    }
+
+    #[test]
+    fn loss_slope_respects_warmup_and_disabled() {
+        let mut p = LossSlopePolicy::new(FfConfig { warmup_steps: 50, ..slope_cfg() });
+        for _ in 0..10 {
+            p.on_sgd_step();
+            p.observe_val_loss(1.0);
+        }
+        assert_eq!(p.next(), FfDecision::Sgd, "warmup must gate the trigger");
+        let mut off = LossSlopePolicy::new(FfConfig { enabled: false, ..slope_cfg() });
+        assert!(!off.wants_val_loss(), "disabled policy must not request evals");
+        for _ in 0..10 {
+            off.on_sgd_step();
+            off.observe_val_loss(1.0);
+        }
+        assert_eq!(off.next(), FfDecision::Sgd);
+    }
+
+    #[test]
+    fn loss_slope_position_round_trips() {
+        let mut a = LossSlopePolicy::new(slope_cfg());
+        for i in 0..3 {
+            a.on_sgd_step();
+            a.observe_val_loss(1.0 - 0.1 * i as f32);
+        }
+        let pos = a.position();
+        let mut b = LossSlopePolicy::new(slope_cfg());
+        b.restore_position(&pos).unwrap();
+        assert_eq!(b.position(), pos);
+        // Identical observations from here on keep the automata in lock-step.
+        for i in 0..8 {
+            assert_eq!(a.next(), b.next(), "diverged at step {i}");
+            a.on_sgd_step();
+            b.on_sgd_step();
+            a.observe_val_loss(0.5);
+            b.observe_val_loss(0.5);
+        }
+        assert_eq!(a.position(), b.position());
+    }
+
+    fn cosine_cfg() -> FfConfig {
+        FfConfig {
+            policy: FfPolicyKind::Cosine,
+            warmup_steps: 2,
+            cosine_threshold: 0.9,
+            ..FfConfig::default()
+        }
+    }
+
+    fn delta(xs: &[f32]) -> Vec<Tensor> {
+        vec![Tensor::from_vec(&[xs.len()], xs.to_vec())]
+    }
+
+    #[test]
+    fn cosine_fires_on_aligned_deltas_only() {
+        let mut p = CosinePolicy::new(cosine_cfg());
+        p.on_sgd_step();
+        p.observe_delta(&delta(&[1.0, 0.0]));
+        p.on_sgd_step();
+        // Orthogonal step: cosine 0 → keep stepping.
+        p.observe_delta(&delta(&[0.0, 1.0]));
+        assert_eq!(p.next(), FfDecision::Sgd);
+        assert_eq!(p.last_cosine().unwrap(), 0.0);
+        // Parallel step: cosine 1 → fire.
+        p.on_sgd_step();
+        p.observe_delta(&delta(&[0.0, 2.0]));
+        assert_eq!(p.next(), FfDecision::FastForward);
+        // A stage resets the direction memory.
+        p.on_ff_stage(&stats(0, 2));
+        assert!(p.last_cosine().is_none());
+        assert_eq!(p.next(), FfDecision::Sgd);
+    }
+
+    #[test]
+    fn cosine_position_and_aux_round_trip() {
+        let mut a = CosinePolicy::new(cosine_cfg());
+        a.on_sgd_step();
+        a.observe_delta(&delta(&[1.0, 2.0]));
+        a.on_sgd_step();
+        a.observe_delta(&delta(&[1.0, 1.9]));
+        let pos = a.position();
+        let aux = a.aux_state();
+        assert_eq!(aux.len(), 1, "prev Δ_W must park through aux_state");
+        let mut b = CosinePolicy::new(cosine_cfg());
+        b.restore_position(&pos).unwrap();
+        b.restore_aux(&aux).unwrap();
+        assert_eq!(b.position(), pos);
+        // Same next observation → same cosine → same decisions.
+        a.on_sgd_step();
+        b.on_sgd_step();
+        a.observe_delta(&delta(&[1.0, 1.95]));
+        b.observe_delta(&delta(&[1.0, 1.95]));
+        assert_eq!(a.next(), b.next());
+        assert_eq!(a.position(), b.position());
+    }
+
+    #[test]
+    fn patience_rule_is_shared_across_policies() {
+        let cfg = FfConfig { convergence_patience: Some(2), ..cosine_cfg() };
+        let mut p = CosinePolicy::new(cfg.clone());
+        p.on_ff_stage(&stats(0, 0));
+        assert!(!p.is_permanently_off());
+        p.on_ff_stage(&stats(1, 0));
+        assert!(p.is_permanently_off());
+        assert!(!p.wants_delta(), "a dead policy must stop requesting Δ_W");
+        let mut s = LossSlopePolicy::new(FfConfig { convergence_patience: Some(2), ..slope_cfg() });
+        s.on_ff_stage(&stats(0, 0));
+        s.on_ff_stage(&stats(1, 0));
+        assert!(s.is_permanently_off());
+        assert!(!s.wants_val_loss());
+    }
+
+    #[test]
+    fn make_policy_dispatches_on_config() {
+        for kind in FfPolicyKind::ALL {
+            let cfg = FfConfig { policy: kind, ..FfConfig::default() };
+            let p = make_policy(&cfg);
+            assert_eq!(p.position().kind(), kind);
+        }
+    }
+}

@@ -61,7 +61,9 @@ fn usage() -> &'static str {
                  [--runs K] [--jobs N]   (K seed-replica runs on N scheduler workers;\n\
                  --jobs only applies when --runs > 1)\n\
      experiment: <id>|--all [--full] [--jobs N] [--queue]   (ids: fastforward list\n\
-                 --experiments; --queue routes grid cells through the run queue)\n\
+                 --experiments; --queue routes grid cells through the run queue;\n\
+                 --policies is shorthand for the 'policies' id: FF trigger\n\
+                 policies × optimizer backends × batch/streaming grid)\n\
                  --emit-manifest [--full] [--name NAME]   write a versioned grid\n\
                  manifest plus a .lock pinning artifact content hashes\n\
                  --manifest FILE [--shard i/N] [--store DIR] [--jobs N]   run the\n\
@@ -76,13 +78,16 @@ fn usage() -> &'static str {
                  bytes accounting. manifest lines: tenant priority artifact task\n\
                  steps seed on|off)\n\
      pretrain:   --model NAME [--steps N]\n\
-     selftest:   [--jobs N] [--queue] [--churn] [--shard]   (N > 1 exercises the\n\
-                 concurrent scheduler; --queue adds run-queue legs: priorities,\n\
-                 cancel, tenant totals, and batched same-artifact packing vs solo\n\
-                 bit-identity; --churn adds the deterministic churn storm plus\n\
-                 quantum park/resume accounting, and implies --queue; --shard\n\
-                 adds the cross-host grid leg: 2 shards + store vs unsharded,\n\
-                 merged report byte-identical, warm shard all store hits)\n\
+     selftest:   [--jobs N] [--queue] [--churn] [--shard] [--policies]   (N > 1\n\
+                 exercises the concurrent scheduler; --queue adds run-queue legs:\n\
+                 priorities, cancel, tenant totals, and batched same-artifact\n\
+                 packing vs solo bit-identity; --churn adds the deterministic\n\
+                 churn storm plus quantum park/resume accounting, and implies\n\
+                 --queue; --shard adds the cross-host grid leg: 2 shards + store\n\
+                 vs unsharded, merged report byte-identical, warm shard all store\n\
+                 hits; --policies adds the FF-policy leg: per-policy park/resume\n\
+                 bit-identity, IntervalPolicy == legacy controller path, LoFT\n\
+                 backend, and streaming-run byte accounting)\n\
      note: --jobs > 1 needs a build with --features xla-shared-client (pinned,\n\
            audited xla rev — see rust/XLA_AUDIT); otherwise the pool runs\n\
            sequentially and the queue drains inline at join, in priority order\n"
@@ -240,7 +245,13 @@ fn cmd_experiment(args: &mut Args, artifacts: PathBuf, reports: PathBuf) -> anyh
     // b.json; a bare trailing `--merge` parses as a flag.
     let merge_head = args.opt("merge");
     let merge = merge_head.is_some() || args.flag("merge");
-    let id = args.positional.first().cloned();
+    // `--policies` is CLI sugar for the registry id of the same name.
+    let policies = args.flag("policies");
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| policies.then(|| "policies".to_string()));
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     if merge {
@@ -591,6 +602,7 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     let with_churn = args.flag("churn");
     let with_queue = args.flag("queue") || with_churn;
     let with_shard = args.flag("shard");
+    let with_policies = args.flag("policies");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     let mut total = if with_churn {
         8
@@ -599,6 +611,9 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
     } else {
         5
     };
+    if with_policies {
+        total += 1;
+    }
     if with_shard {
         total += 1;
     }
@@ -1025,6 +1040,147 @@ fn cmd_selftest(args: &mut Args, artifacts: PathBuf) -> anyhow::Result<()> {
             "      ok: {parked} parked slots; resumed runs bit-identical to the \
              uninterrupted reference with full step counts; tenant bytes (incl. \
              park/resume overhead) sum exactly to the global delta ({})",
+            delta.report()
+        );
+    }
+
+    if with_policies {
+        // Printed before the shard leg, which always claims the last slot.
+        let leg = total - usize::from(with_shard);
+        println!(
+            "[{leg}/{total}] FF policies: per-policy park/resume bit-identity, \
+             IntervalPolicy vs controller path, LoFT backend, streaming accounting"
+        );
+        use fastforward::config::{FfPolicyKind, OptimBackend};
+        const STEPS: usize = 8;
+        // warmup 3 + T_interval 3 guarantee FF stages inside the 8-step
+        // budget, so park/resume crosses *policy state*, not just weights.
+        let ff_spec = |tag: &str, kind: FfPolicyKind, backend: OptimBackend| -> RunSpec {
+            let mut c = presets::train_config("ff-tiny_lora_r8", "medical", 1).unwrap();
+            c.train_examples = 256;
+            c.test_examples = 32;
+            c.backend = backend;
+            c.ff =
+                FfConfig { warmup_steps: 3, t_interval: 3, policy: kind, ..FfConfig::default() };
+            RunSpec {
+                label: format!("{tag}/{}-{}", kind.as_str(), backend.as_str()),
+                cfg: c,
+                stop: StopRule::MaxSteps(STEPS),
+                base: Some(Arc::clone(&base)),
+                drain_interval: None,
+            }
+        };
+
+        // (a) Every policy (plus the LoFT backend) must survive quantum-2
+        // park/resume bit-identically: the tagged FfPosition snapshot is
+        // what round-trips here, per policy.
+        let mut pairs: Vec<(FfPolicyKind, OptimBackend)> =
+            FfPolicyKind::ALL.iter().map(|&k| (k, OptimBackend::Adam)).collect();
+        pairs.push((FfPolicyKind::Interval, OptimBackend::Loft));
+        let mut refs = Vec::new();
+        for &(kind, backend) in &pairs {
+            let rq = RunQueue::new(1);
+            let h = rq.submit_run(&rt, &cache, ff_spec("ref", kind, backend), 0, "pol")?;
+            let reference = match h.join()? {
+                RunResult::Done(o) => o,
+                RunResult::Cancelled(_) => anyhow::bail!("policy reference cancelled"),
+            };
+            let cq = RunQueue::new_paused(requested);
+            cq.set_step_quantum(2);
+            let h = cq.submit_run(&rt, &cache, ff_spec("churn", kind, backend), 0, "pol")?;
+            cq.release();
+            let churned = match h.join()? {
+                RunResult::Done(o) => o,
+                RunResult::Cancelled(_) => anyhow::bail!("policy churn run cancelled"),
+            };
+            anyhow::ensure!(
+                reference.bit_identical(&churned)
+                    && churned.summary.adam_steps == reference.summary.adam_steps,
+                "park/resume changed a {}/{} run",
+                kind.as_str(),
+                backend.as_str()
+            );
+            let parked: u64 = cq.tenants().values().map(|t| t.parked).sum();
+            anyhow::ensure!(
+                parked >= 1,
+                "quantum 2 over an {STEPS}-step {}/{} run never parked",
+                kind.as_str(),
+                backend.as_str()
+            );
+            refs.push(reference);
+        }
+        anyhow::ensure!(
+            !refs[0].stages.is_empty(),
+            "interval reference ran no FF stage — the leg proved nothing"
+        );
+
+        // (b) The IntervalPolicy trait path (queue) against the legacy
+        // FfController entry (direct Trainer::run): same decisions, same
+        // bits.
+        let spec = ff_spec("direct", FfPolicyKind::Interval, OptimBackend::Adam);
+        let mut dt = Trainer::new(&rt, &artifacts, spec.cfg, Some(base.as_ref()))?;
+        let direct = dt.run(&StopRule::MaxSteps(STEPS))?;
+        anyhow::ensure!(
+            direct.final_test_loss.to_bits() == refs[0].summary.final_test_loss.to_bits()
+                && direct.adam_steps == refs[0].summary.adam_steps
+                && direct.sim_steps == refs[0].summary.sim_steps,
+            "IntervalPolicy (queue path) diverged from the FfController trainer path"
+        );
+        drop(dt);
+
+        // (c) LoFT with decay 1.0 realigns the moments by exactly 1 —
+        // a bit-exact no-op, so the whole run must match plain Adam.
+        let mut loft_spec = ff_spec("loft1", FfPolicyKind::Interval, OptimBackend::Loft);
+        loft_spec.cfg.loft_decay = 1.0;
+        let rq = RunQueue::new(1);
+        let loft1 = match rq.submit_run(&rt, &cache, loft_spec, 0, "pol")?.join()? {
+            RunResult::Done(o) => o,
+            RunResult::Cancelled(_) => anyhow::bail!("loft decay-1 run cancelled"),
+        };
+        anyhow::ensure!(
+            loft1.bit_identical(&refs[0]),
+            "LoFT(decay=1) must match the Adam backend bit-for-bit"
+        );
+
+        // (d) Streaming run: the tenant feeds one step's worth of
+        // examples at a time, then closes the stream. The run must be
+        // bit-identical to its batch twin, and the streaming tenant's
+        // byte totals must still sum exactly to the global meter delta
+        // (holds and resumes included).
+        let before = rt.stats.snapshot();
+        let sq = RunQueue::new(requested);
+        let spec = ff_spec("stream", FfPolicyKind::Interval, OptimBackend::Adam);
+        let gb = spec.cfg.global_batch as u64;
+        let (h, stream) = sq.submit_stream(&rt, &cache, spec, 0, "erin")?;
+        for _ in 0..STEPS {
+            stream.feed(gb);
+        }
+        stream.finish();
+        let streamed = match h.join()? {
+            RunResult::Done(o) => o,
+            RunResult::Cancelled(_) => anyhow::bail!("streaming run cancelled"),
+        };
+        anyhow::ensure!(
+            streamed.bit_identical(&refs[0])
+                && streamed.summary.adam_steps == refs[0].summary.adam_steps,
+            "streaming run diverged from its batch twin"
+        );
+        let delta = rt.stats.snapshot().since(&before);
+        let mut summed = fastforward::runtime::TransferSnapshot::default();
+        for t in sq.tenants().values() {
+            summed = summed.plus(&t.transfers);
+        }
+        anyhow::ensure!(
+            summed == delta,
+            "streaming tenant bytes ({summed:?}) != global delta ({delta:?})"
+        );
+        println!(
+            "      ok: {} policy/backend pairs park/resume bit-identical ({} FF \
+             stages on the interval reference); trait path == controller path; \
+             LoFT(decay=1) == Adam; streamed run bit-identical with exact tenant \
+             bytes ({})",
+            pairs.len(),
+            refs[0].stages.len(),
             delta.report()
         );
     }

@@ -233,17 +233,22 @@ pub mod model {
     //! trainer step boundary with its cancel-then-park check order,
     //! `Cancel` is `RunHandle::cancel`'s flag+transient-claim,
     //! `ClaimMate` is a pack leader's `Queued → Running` sibling claim,
-    //! and the terminal gate (`finish_handle`) — publish outcome,
-    //! decrement `live`, feed the completions stream — runs as one unit
-    //! because the real code funnels every terminal path through that
-    //! single function.
+    //! `Feed` is `StreamHandle::finish`'s publish-remaining-data +
+    //! held-continuation re-enqueue (a streaming submission's
+    //! data-starved slot parks itself *off* the ready list —
+    //! `JobYield::Held` — and only a feed brings it back), and the
+    //! terminal gate (`finish_handle`) — publish outcome, decrement
+    //! `live`, feed the completions stream — runs as one unit because
+    //! the real code funnels every terminal path through that single
+    //! function.
     //!
     //! Scope: the worker condvar (`Shared::cv`) and its wakeup tokens
     //! are modeled; the delivery-side condvars (`done_cv`, `space_cv`)
     //! are not — model consumers poll. The queue's admission layer
-    //! (capacity/quota/rate windows) and shutdown path are out of
-    //! scope; they sit in front of / behind the state machine modeled
-    //! here and are covered by the unit tests in `queue.rs`.
+    //! (capacity/quota/rate windows) and shutdown path (including the
+    //! drop-drain of held streaming continuations) are out of scope;
+    //! they sit in front of / behind the state machine modeled here and
+    //! are covered by the unit tests in `queue.rs`.
 
     use std::collections::VecDeque;
 
@@ -269,6 +274,12 @@ pub mod model {
         /// running one of these may claim another still-`Queued` one as
         /// a group mate (publishing its outcome at the group end).
         pub packables: Vec<usize>,
+        /// Streaming submissions (`RunQueue::submit_stream`): they start
+        /// data-starved — the first slot to claim one parks it *off* the
+        /// ready list (`JobYield::Held`) — and stay held until the
+        /// environment `Feed`s them (one-shot each, modeling
+        /// `StreamHandle::finish` closing the stream).
+        pub streams: Vec<usize>,
         /// Property-test mode: start with every worker already claiming
         /// its same-indexed submission and expose **only** `Step`
         /// actions (workers retire after their run, no deliveries).
@@ -302,6 +313,12 @@ pub mod model {
         Cancel(usize),
         /// Environment asks submission `i` to park at its next boundary.
         ParkRequest(usize),
+        /// Tenant closes streaming submission `i`'s stream
+        /// (`StreamHandle::finish`): all remaining data arrives and, if
+        /// the continuation is held data-starved off the ready list, it
+        /// re-enters the ready list + notify — even as a terminal husk
+        /// (a cancel raced the hold; `Pop` reaps it).
+        Feed(usize),
         /// Consumer pops the completions stream once.
         DeliverStream,
         /// Joiner takes submission `i`'s outcome directly.
@@ -324,6 +341,12 @@ pub mod model {
         ClaimOverlap { sub: usize },
         /// A worker owns a submission that is not `Running`.
         OwnerStateMismatch { sub: usize, phase: Phase },
+        /// A submission sits in the held (data-starved) set without
+        /// being `Parked` or a terminal husk — the hold published the
+        /// continuation before parking the handle, so a racing feed
+        /// could re-enqueue a still-`Running` entry whose claim then
+        /// fails and strands the joiner.
+        HeldNotParked { sub: usize, phase: Phase },
     }
 
     #[derive(Clone, Debug, PartialEq, Eq)]
@@ -339,6 +362,13 @@ pub mod model {
         cancel: bool,
         park_req: bool,
         steps_left: u8,
+        /// Streaming submission (config-constant).
+        streaming: bool,
+        /// Its stream was closed (`Feed` fired) — data is no longer
+        /// starved.
+        fed: bool,
+        /// Continuation parked off the ready list in `Shared::streams`.
+        held: bool,
     }
 
     impl Sub {
@@ -349,6 +379,9 @@ pub mod model {
                 cancel: self.cancel,
                 park_req: self.park_req,
                 steps_left: self.steps_left,
+                streaming: self.streaming,
+                fed: self.fed,
+                held: self.held,
             }
         }
     }
@@ -368,21 +401,30 @@ pub mod model {
         cancels_left: Vec<bool>,
         parks_left: Vec<bool>,
         joins_left: Vec<bool>,
+        feeds_left: Vec<bool>,
     }
 
     impl QueueModel {
         pub fn new(cfg: &Config) -> QueueModel {
             let n = cfg.steps.len();
+            assert!(
+                cfg.streams.iter().all(|s| !cfg.packables.contains(s)),
+                "streaming submissions are never packable (submit_stream has no pack variant)"
+            );
             let mut m = QueueModel {
                 subs: cfg
                     .steps
                     .iter()
-                    .map(|&s| Sub {
+                    .enumerate()
+                    .map(|(i, &s)| Sub {
                         life: Lifecycle::new(),
                         submitted: false,
                         cancel: false,
                         park_req: false,
                         steps_left: s.max(1),
+                        streaming: cfg.streams.contains(&i),
+                        fed: false,
+                        held: false,
                     })
                     .collect(),
                 ready: VecDeque::new(),
@@ -394,9 +436,11 @@ pub mod model {
                 cancels_left: (0..n).map(|i| cfg.cancels.contains(&i)).collect(),
                 parks_left: (0..n).map(|i| cfg.parks.contains(&i)).collect(),
                 joins_left: (0..n).map(|i| cfg.joins.contains(&i)).collect(),
+                feeds_left: (0..n).map(|i| cfg.streams.contains(&i)).collect(),
             };
             if cfg.pure_steps {
                 assert_eq!(cfg.workers, n, "pure_steps pre-claims sub w on worker w");
+                assert!(cfg.streams.is_empty(), "pure_steps exposes Step actions only");
                 for w in 0..n {
                     // Reach the pre-claimed state through the real
                     // transitions, not by writing states directly.
@@ -421,6 +465,7 @@ pub mod model {
                 cancels_left: self.cancels_left.clone(),
                 parks_left: self.parks_left.clone(),
                 joins_left: self.joins_left.clone(),
+                feeds_left: self.feeds_left.clone(),
             }
         }
 
@@ -470,6 +515,9 @@ pub mod model {
                 }
                 if self.joins_left[i] && s.life.is_finished() {
                     out.push(Action::Join(i));
+                }
+                if self.feeds_left[i] && s.submitted {
+                    out.push(Action::Feed(i));
                 }
             }
             if !self.done.is_empty() {
@@ -539,6 +587,25 @@ pub mod model {
                             }
                             self.workers[w] = Worker::Idle;
                         }
+                    } else if self.subs[sub].streaming && !self.subs[sub].fed {
+                        // run_stream_slot's data-starved hold: park the
+                        // handle *first* (the order whose inversion is
+                        // the HeldNotParked bug), move the continuation
+                        // off the ready list into the held set, and let
+                        // run_entry's Held arm reap a cancel that raced
+                        // the hold (the claim comes from Parked; no
+                        // output exists yet, so it ends Cancelled(None)).
+                        self.subs[sub].life.park();
+                        self.subs[sub].held = true;
+                        if self.subs[sub].cancel {
+                            self.subs[sub].held = false;
+                            assert_eq!(
+                                self.subs[sub].life.try_claim(),
+                                Some(ClaimedFrom::Parked)
+                            );
+                            self.gate(sub, Outcome::Cancelled(None));
+                        }
+                        self.workers[w] = Worker::Idle;
                     } else {
                         let s = &self.subs[sub];
                         let (cancel_now, park_now) = if cfg.buggy_park_before_cancel {
@@ -601,6 +668,21 @@ pub mod model {
                     self.parks_left[i] = false;
                     self.subs[i].park_req = true;
                 }
+                Action::Feed(i) => {
+                    self.feeds_left[i] = false;
+                    self.subs[i].fed = true;
+                    // StreamHandle::finish: under the feed lock, a held
+                    // continuation is removed from Shared::streams and
+                    // re-enqueued + notify. This includes a terminal
+                    // husk (cancel's transient claim beat the feed; the
+                    // entry stayed behind in the map) — Pop's claim
+                    // fails on it and reaps, exactly like the real path.
+                    if self.subs[i].held {
+                        self.subs[i].held = false;
+                        self.ready.push_back(i);
+                        self.notifies += 1;
+                    }
+                }
                 Action::DeliverStream => {
                     let h = self.done.pop_front().expect("enabled() checked");
                     // claim_completion: None = a join got there first —
@@ -639,6 +721,12 @@ pub mod model {
             for (i, s) in self.subs.iter().enumerate() {
                 if s.life.phase() == Phase::Parked && s.cancel {
                     return Err(Violation::ParkBeatCancel { sub: i });
+                }
+                if s.held {
+                    let phase = s.life.phase();
+                    if phase != Phase::Parked && !s.life.is_finished() {
+                        return Err(Violation::HeldNotParked { sub: i, phase });
+                    }
                 }
             }
             let mut owned = vec![false; self.subs.len()];
@@ -682,7 +770,9 @@ pub mod model {
                 out.push(
                     (s.submitted as u8)
                         | (s.cancel as u8) << 1
-                        | (s.park_req as u8) << 2,
+                        | (s.park_req as u8) << 2
+                        | (s.fed as u8) << 3
+                        | (s.held as u8) << 4,
                 );
                 out.push(s.steps_left);
             }
@@ -711,6 +801,7 @@ pub mod model {
             out.push(pack_bools(&self.cancels_left));
             out.push(pack_bools(&self.parks_left));
             out.push(pack_bools(&self.joins_left));
+            out.push(pack_bools(&self.feeds_left));
             out
         }
 

@@ -75,8 +75,8 @@ use crate::train::checkpoint::ParkState;
 use crate::train::trainer::{RunSummary, StopRule, Trainer};
 
 pub use queue::{
-    join_all, CancelToken, Completion, RunHandle, RunPoll, RunQueue, RunResult, SubmitError,
-    TenantQuota, TenantStats,
+    join_all, CancelToken, Completion, RunHandle, RunPoll, RunQueue, RunResult, StreamHandle,
+    SubmitError, TenantQuota, TenantStats,
 };
 
 /// Whether this build may actually fan runs out over host threads. False

@@ -33,6 +33,26 @@
 //! dropping the queue **fails** parked handles loudly (their progress is
 //! discarded — never silently) and removes their park files.
 //!
+//! # Streaming runs
+//!
+//! [`RunQueue::submit_stream`] admits a long-lived training run whose
+//! data arrives **after** submission: the tenant appends examples
+//! through the returned [`StreamHandle`] (`feed`), and the run consumes
+//! one SGD step per `global_batch` examples fed. A slot that catches up
+//! with the feed does not busy-wait: it checkpoints exactly like a park
+//! and *holds* — its continuation moves off the ready queue into a side
+//! map keyed by submission, and the next `feed`/`finish` re-enqueues it
+//! (the hold and the wake are serialized on the stream's feed lock, so
+//! a feed can never slip between "observe starved" and "hold").
+//! Park, preempt, cancel, quota, and fair-share semantics are unchanged
+//! — a streaming slot is billed through the same park/final folds as
+//! any park-aware run, so tenant byte totals still sum exactly to the
+//! global meter delta. [`StreamHandle::finish`] closes the stream: the
+//! run consumes whatever remains and ends with the normal final eval,
+//! so a streamed run's losses and final test loss are **bit-identical**
+//! to a batch run over the same example sequence (asserted in
+//! `rust/tests/sched_queue.rs`).
+//!
 //! # Completion-order streaming
 //!
 //! [`RunQueue::completions`] / [`RunQueue::next_completion`] yield
@@ -152,6 +172,11 @@ enum JobYield<R> {
     Done(R),
     Cancelled(R),
     Parked { next: Job<R>, front: bool },
+    /// The job checkpointed and parked its continuation **off the ready
+    /// queue** into [`Shared::streams`] (a data-starved streaming run,
+    /// [`RunQueue::submit_stream`]): nothing to re-enqueue here —
+    /// [`StreamHandle::feed`]/[`StreamHandle::finish`] wakes it.
+    Held,
 }
 
 /// One queued job: takes the submission's [`CancelToken`] (so
@@ -484,6 +509,16 @@ struct Shared<R> {
     /// source — see `pack_signature`). Lock order: `pack_pool` before
     /// any `HandleShared::state`, never the other way.
     pack_pool: Mutex<BTreeMap<String, Vec<PackMate<R>>>>,
+    /// Streaming submissions ([`RunQueue::submit_stream`]) whose next
+    /// slot is **data-starved**: the continuation waits here, keyed by
+    /// seq, off the ready queue (workers never busy-poll it) until
+    /// [`StreamHandle::feed`]/[`finish`] re-enqueues it. Insertions and
+    /// removals happen under the owning stream's `StreamCtl::feed`
+    /// lock (acquired first), so a feed either lands before the slot
+    /// observes starvation or finds the held entry — never between.
+    /// Queue drop drains this map and fails the held runs loudly, the
+    /// same policy as parked entries.
+    streams: Mutex<BTreeMap<u64, Entry<R>>>,
 }
 
 /// Plain-closure cancel classification ([`RunQueue::submit`]): the best
@@ -691,6 +726,24 @@ fn run_entry<R>(shared: &Shared<R>, entry: Entry<R>) {
             repark_entry(shared, handle, next, front);
             return;
         }
+        Ok(Ok(JobYield::Held)) => {
+            // Not terminal: the job parked its continuation into
+            // `shared.streams`; a feed/finish re-enqueues it. A cancel
+            // that raced the hold (flag raised while the job was still
+            // Running, so cancel()'s claim lost) is honored here —
+            // mirroring repark_entry — by taking the held entry back
+            // out and finishing Cancelled; a feed that got the entry
+            // first just re-enqueues it, and the resumed slot observes
+            // the flag cooperatively instead.
+            if handle.cancel.load(Ordering::SeqCst)
+                && lock(&shared.streams).remove(&handle.seq).is_some()
+                && lock(&handle.state).try_claim().is_some()
+            {
+                lock(&shared.tenants).entry(handle.tenant.clone()).or_default().cancelled += 1;
+                finish_handle(shared, &handle, Outcome::Cancelled(None));
+            }
+            return;
+        }
         Ok(Ok(JobYield::Cancelled(out))) => Outcome::Cancelled(Some(out)),
         Ok(Ok(JobYield::Done(out))) => Outcome::Done(out),
     };
@@ -762,6 +815,7 @@ fn new_shared<R>(paused: bool) -> Arc<Shared<R>> {
         quantum: Mutex::new(None),
         running: Mutex::new(BTreeMap::new()),
         pack_pool: Mutex::new(BTreeMap::new()),
+        streams: Mutex::new(BTreeMap::new()),
     })
 }
 
@@ -1393,6 +1447,144 @@ fn run_park_aware(
     }
 }
 
+/// Shared feed ledger between a [`StreamHandle`] and its run's execution
+/// slots: how many examples the tenant has appended, and whether the
+/// stream is closed. The owning [`StreamCtl::feed`] mutex also
+/// serializes the starved-hold handshake (see [`Shared::streams`]).
+struct StreamFeed {
+    fed_examples: u64,
+    finished: bool,
+}
+
+/// Control block of one streaming submission
+/// ([`RunQueue::submit_stream`]), shared by the [`StreamHandle`] and the
+/// job's slots.
+struct StreamCtl {
+    feed: Mutex<StreamFeed>,
+}
+
+/// The body of one **streaming** submission's execution slot
+/// ([`RunQueue::submit_stream`]): like [`run_park_aware`], but the run
+/// may only consume examples its tenant has already fed (one SGD step
+/// per `global_batch` examples). With no consumable step and the stream
+/// still open, the slot **holds**: it publishes `Parked` and moves its
+/// continuation into [`Shared::streams`] under the feed lock — so a
+/// racing `feed` either lands before starvation is observed or finds
+/// the held entry to re-enqueue, never between — and yields the worker
+/// without constructing a trainer. With data available it runs with the
+/// step quantum clamped to the consumable budget, parking at exactly
+/// the data horizon through the ordinary park machinery (same billing
+/// folds, same park files). Once the stream is finished the remaining
+/// steps run as a plain bounded slot ending in the normal final eval,
+/// so the streamed run's losses and final loss are bit-identical to a
+/// batch run over the same example sequence.
+fn run_stream_slot(
+    rt: Arc<Runtime>,
+    artifacts: Arc<ArtifactCache>,
+    shared: Arc<Shared<RunOutput>>,
+    spec: RunSpec,
+    tenant: String,
+    billed: Billed,
+    ctl: Arc<StreamCtl>,
+    handle: Arc<HandleShared<RunOutput>>,
+    token: &CancelToken,
+) -> Result<JobYield<RunOutput>> {
+    let max_steps = match &spec.stop {
+        StopRule::MaxSteps(n) => *n,
+        _ => unreachable!("submit_stream admits StopRule::MaxSteps only"),
+    };
+    let resume_file = token.park_file();
+    let resume_state = match &resume_file {
+        Some(path) => Some(load_park_state(path).with_context(|| {
+            format!(
+                "resuming streaming run '{}' from parked state {}",
+                spec.label,
+                path.display()
+            )
+        })?),
+        None => None,
+    };
+    let consumed = resume_state.as_ref().map_or(0, |s| s.adam_steps);
+    let per_step = (spec.cfg.global_batch.max(1)) as u64;
+    let (target, finished) = {
+        let feed = lock(&ctl.feed);
+        let target = ((feed.fed_examples / per_step) as usize).min(max_steps);
+        if target <= consumed && !feed.finished {
+            // Data-starved: hold. Publish Parked *before* registering
+            // the continuation — a feed may re-enqueue it the instant
+            // it lands in `streams`, and a popped entry whose handle
+            // were still Running would lose its claim and strand the
+            // joiner. The feed lock is held throughout, so the wake
+            // cannot be lost.
+            lock(&handle.state).park();
+            let next: Job<RunOutput> = {
+                let rt = Arc::clone(&rt);
+                let artifacts = Arc::clone(&artifacts);
+                let sh = Arc::clone(&shared);
+                let ctl = Arc::clone(&ctl);
+                let h = Arc::clone(&handle);
+                Box::new(move |tok: &CancelToken| {
+                    run_stream_slot(rt, artifacts, sh, spec, tenant, billed, ctl, h, tok)
+                })
+            };
+            lock(&shared.streams)
+                .insert(handle.seq, Entry { job: next, handle: Arc::clone(&handle) });
+            return Ok(JobYield::Held);
+        }
+        (target, feed.finished)
+    };
+    // A finished stream runs out its fed total and ends with the normal
+    // final eval; an open stream keeps the full stop bound but clamps
+    // the slot's quantum to the consumable budget so it parks exactly
+    // at the data horizon.
+    let slot_spec = RunSpec {
+        label: spec.label.clone(),
+        cfg: spec.cfg.clone(),
+        stop: StopRule::MaxSteps(if finished { target } else { max_steps }),
+        base: spec.base.clone(),
+        drain_interval: spec.drain_interval,
+    };
+    let quantum = {
+        let q = *lock(&shared.quantum);
+        if finished {
+            q
+        } else {
+            Some(q.map_or(target - consumed, |q| q.min(target - consumed)))
+        }
+    };
+    let slot = execute_run_resumable(
+        &rt,
+        &artifacts,
+        &slot_spec,
+        Some(token.flag()),
+        Some(token.park_flag()),
+        quantum,
+        resume_state.as_ref(),
+    )?;
+    match slot {
+        SlotOutcome::Parked { state, preempted, seconds } => {
+            let path = resume_file.unwrap_or_else(fresh_park_path);
+            save_park_state(&path, &state).with_context(|| {
+                format!("parking streaming run '{}' to {}", spec.label, path.display())
+            })?;
+            token.set_park_file(path);
+            let billed = fold_park_progress(&shared, &tenant, billed, &state, seconds);
+            let next: Job<RunOutput> = Box::new(move |tok: &CancelToken| {
+                run_stream_slot(rt, artifacts, shared, spec, tenant, billed, ctl, handle, tok)
+            });
+            Ok(JobYield::Parked { next, front: preempted })
+        }
+        SlotOutcome::Finished(out) => {
+            fold_final(&shared, &tenant, billed, &out);
+            if out.summary.cancelled {
+                Ok(JobYield::Cancelled(out))
+            } else {
+                Ok(JobYield::Done(out))
+            }
+        }
+    }
+}
+
 /// The pack key two submissions must share to ride one batched dispatch:
 /// same artifact (same programs and batch geometry), same priority (the
 /// leader must not pull work ahead of its class), same step count
@@ -1572,6 +1764,181 @@ impl RunQueue<RunOutput> {
             .push(PackMate { handle: Arc::clone(&handle.handle), data: slot });
         Ok(handle)
     }
+
+    /// Submit a **streaming** training run (module docs, §Streaming
+    /// runs): admitted now, but it may only consume examples its tenant
+    /// appends afterwards through the returned [`StreamHandle`] — one
+    /// SGD step per `cfg.global_batch` examples fed. The spec's stop
+    /// rule must be [`StopRule::MaxSteps`] (the stream's upper bound);
+    /// [`StreamHandle::finish`] ends the run earlier, at whatever was
+    /// fed. Admission (capacity, quotas, rate windows) and the handle
+    /// contract (poll/join/cancel/park, completions stream, fair share,
+    /// preemption) are identical to [`RunQueue::submit_run`].
+    ///
+    /// Unlike `submit_run` this is a bespoke submit path: the job
+    /// closure needs its *own* handle (to hold itself in
+    /// [`Shared::streams`] when starved), so handle construction and
+    /// enqueue happen in one state-lock critical section — a worker
+    /// popping the entry the instant it lands still finds a complete
+    /// closure.
+    pub fn submit_stream(
+        &self,
+        rt: &Arc<Runtime>,
+        artifacts: &Arc<ArtifactCache>,
+        spec: RunSpec,
+        priority: i32,
+        tenant: &str,
+    ) -> Result<(RunHandle<RunOutput>, StreamHandle)> {
+        if !matches!(spec.stop, StopRule::MaxSteps(_)) {
+            anyhow::bail!(
+                "submit_stream requires StopRule::MaxSteps (the stream's upper bound); \
+                 run '{}' uses a different stop rule — close the stream with \
+                 StreamHandle::finish to end it early",
+                spec.label
+            );
+        }
+        if let Some(err) = self.admission_error(tenant) {
+            return Err(err.into());
+        }
+        let ctl = Arc::new(StreamCtl {
+            feed: Mutex::new(StreamFeed { fed_examples: 0, finished: false }),
+        });
+        let rt = Arc::clone(rt);
+        let artifacts = Arc::clone(artifacts);
+        let shared = Arc::clone(&self.shared);
+        let tenant_name = tenant.to_string();
+        let handle = {
+            let mut st = lock(&self.shared.state);
+            if let Some(cap) = st.capacity {
+                if st.live >= cap {
+                    return Err(anyhow::Error::from(SubmitError::Full { capacity: cap }));
+                }
+            }
+            let handle = Arc::new(HandleShared {
+                seq: st.next_seq,
+                tenant: tenant.to_string(),
+                priority,
+                cancel: Arc::new(AtomicBool::new(false)),
+                park: Arc::new(AtomicBool::new(false)),
+                park_file: Arc::new(Mutex::new(None)),
+                preemptible: true, // park-aware, same as submit_run
+                state: Mutex::new(Lifecycle::new()),
+                cv: Condvar::new(),
+            });
+            st.next_seq += 1;
+            let job: Job<RunOutput> = {
+                let ctl = Arc::clone(&ctl);
+                let h = Arc::clone(&handle);
+                Box::new(move |token: &CancelToken| {
+                    run_stream_slot(
+                        rt,
+                        artifacts,
+                        shared,
+                        spec,
+                        tenant_name,
+                        Billed::default(),
+                        ctl,
+                        h,
+                        token,
+                    )
+                })
+            };
+            st.ready
+                .entry(priority)
+                .or_default()
+                .push_back(Entry { job, handle: Arc::clone(&handle) });
+            st.queued += 1;
+            st.live += 1;
+            handle
+        };
+        lock(&self.shared.tenants).entry(tenant.to_string()).or_default().submitted += 1;
+        self.shared.cv.notify_one();
+        #[cfg(feature = "xla-shared-client")]
+        self.maybe_preempt(priority);
+        Ok((
+            RunHandle { handle: Arc::clone(&handle), shared: Arc::clone(&self.shared) },
+            StreamHandle { ctl, handle, shared: Arc::clone(&self.shared) },
+        ))
+    }
+}
+
+/// The tenant's side of one streaming submission
+/// ([`RunQueue::submit_stream`]): append examples with
+/// [`StreamHandle::feed`], close the stream with
+/// [`StreamHandle::finish`]. Both wake the run if its slot is holding
+/// for data. Feeding a finished stream is a no-op (the run's step
+/// budget is already fixed), as is feeding after cancel — the husk is
+/// reaped at the next pop.
+pub struct StreamHandle {
+    ctl: Arc<StreamCtl>,
+    handle: Arc<HandleShared<RunOutput>>,
+    shared: Arc<Shared<RunOutput>>,
+}
+
+impl StreamHandle {
+    /// Append `examples` training examples to the stream. The run may
+    /// take one more SGD step per `cfg.global_batch` examples fed
+    /// (a partial batch stays buffered until topped up).
+    pub fn feed(&self, examples: u64) {
+        self.push(examples, false);
+    }
+
+    /// Close the stream: the run consumes whatever remains fed (capped
+    /// by its `MaxSteps` bound) and finishes with the normal final
+    /// eval. Idempotent.
+    pub fn finish(&self) {
+        self.push(0, true);
+    }
+
+    /// Total examples fed so far.
+    pub fn fed(&self) -> u64 {
+        lock(&self.ctl.feed).fed_examples
+    }
+
+    fn push(&self, examples: u64, finish: bool) {
+        let held = {
+            let mut feed = lock(&self.ctl.feed);
+            if feed.finished {
+                return; // the step budget is already fixed
+            }
+            feed.fed_examples += examples;
+            if finish {
+                feed.finished = true;
+            }
+            // Under the same feed lock the starved hold uses: either
+            // the slot saw this feed's total, or its held entry is here.
+            lock(&self.shared.streams).remove(&self.handle.seq)
+        };
+        let Some(entry) = held else { return };
+        // Re-enqueue the held continuation at the back of its class —
+        // shutdown-aware, mirroring repark_entry: joiners must never
+        // hang on a queue nobody drains.
+        {
+            let mut st = lock(&self.shared.state);
+            if st.shutdown {
+                drop(st);
+                if lock(&entry.handle.state).try_claim().is_some() {
+                    lock(&self.shared.tenants)
+                        .entry(entry.handle.tenant.clone())
+                        .or_default()
+                        .failed += 1;
+                    finish_handle(
+                        &self.shared,
+                        &entry.handle,
+                        Outcome::Failed(anyhow::anyhow!(
+                            "queue shut down while streaming run #{} was waiting for data \
+                             — its checkpointed progress is discarded",
+                            entry.handle.seq
+                        )),
+                    );
+                }
+                return;
+            }
+            st.ready.entry(entry.handle.priority).or_default().push_back(entry);
+            st.queued += 1;
+        }
+        self.shared.cv.notify_one();
+    }
 }
 
 /// The body of a packable submission's job: reclaim the spec from the
@@ -1750,9 +2117,18 @@ impl<R> Drop for RunQueue<R> {
             }
             out
         };
+        // Held streaming continuations are parked runs waiting for data
+        // nobody will ever feed now: fail them with the same loudness
+        // as parked entries. Shutdown is already published, so a feed
+        // racing this drain either loses the removal (and is a no-op)
+        // or wins it and fails the run itself on the shutdown check.
+        let held: Vec<Entry<R>> = {
+            let mut streams = lock(&self.shared.streams);
+            std::mem::take(&mut *streams).into_values().collect()
+        };
         self.shared.cv.notify_all();
         self.shared.space_cv.notify_all();
-        for e in leftovers {
+        for e in leftovers.into_iter().chain(held) {
             // Claim Queued/Parked entries with a transient Running (the
             // same exclusivity transition cancel() and the workers use)
             // so a racing claim settles exactly one owner. A lost claim
@@ -1924,7 +2300,21 @@ impl<R: 'static> RunHandle<R> {
                      submission #{} until RunQueue::release() is called",
                     self.handle.seq
                 ),
-                None => return Ok(()),
+                None => {
+                    if lock(&self.handle.state).is_finished() {
+                        return Ok(());
+                    }
+                    // The only way an unfinished submission has nothing
+                    // runnable behind it is a data-starved streaming
+                    // run held in `streams` — and this thread is the
+                    // only executor, so waiting would deadlock.
+                    anyhow::bail!(
+                        "join would hang: streaming run #{} is waiting for data and this \
+                         build has no worker threads (xla-shared-client off) — feed() or \
+                         finish() its StreamHandle before joining",
+                        self.handle.seq
+                    )
+                }
             }
         }
     }
@@ -2519,6 +2909,131 @@ mod tests {
         // silently report it cancelled-before-start.
         let q: RunQueue<usize> = RunQueue::new(1);
         let h = park_one(&q);
+        drop(q);
+        let err = h.join().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("parked"), "{msg}");
+        assert!(msg.contains("discarded"), "{msg}");
+    }
+
+    /// Bespoke submit mirroring [`RunQueue::submit_stream`]'s shape for
+    /// plain closures: the job captures its own handle, parks itself
+    /// into `shared.streams` on its first slot (what a data-starved
+    /// streaming slot does), and completes on its second.
+    fn submit_held(q: &RunQueue<usize>) -> RunHandle<usize> {
+        let shared = Arc::clone(&q.shared);
+        let handle = {
+            let mut st = lock(&q.shared.state);
+            let handle = Arc::new(HandleShared {
+                seq: st.next_seq,
+                tenant: "t".to_string(),
+                priority: 0,
+                cancel: Arc::new(AtomicBool::new(false)),
+                park: Arc::new(AtomicBool::new(false)),
+                park_file: Arc::new(Mutex::new(None)),
+                preemptible: false,
+                state: Mutex::new(Lifecycle::new()),
+                cv: Condvar::new(),
+            });
+            st.next_seq += 1;
+            let job: Job<usize> = {
+                let sh = Arc::clone(&shared);
+                let h = Arc::clone(&handle);
+                Box::new(move |_| {
+                    lock(&h.state).park();
+                    let done: Job<usize> = Box::new(|_| Ok(JobYield::Done(7usize)));
+                    lock(&sh.streams).insert(h.seq, Entry { job: done, handle: Arc::clone(&h) });
+                    Ok(JobYield::Held)
+                })
+            };
+            st.ready.entry(0).or_default().push_back(Entry { job, handle: Arc::clone(&handle) });
+            st.queued += 1;
+            st.live += 1;
+            handle
+        };
+        lock(&q.shared.tenants).entry("t".to_string()).or_default().submitted += 1;
+        q.shared.cv.notify_one();
+        RunHandle { handle, shared }
+    }
+
+    /// Run the held submission's first slot (inline in the default
+    /// build; the worker gets there on its own in the gated build).
+    fn drive_to_held(q: &RunQueue<usize>, h: &RunHandle<usize>) {
+        #[cfg(not(feature = "xla-shared-client"))]
+        {
+            let entry = {
+                let mut st = lock(&q.shared.state);
+                take_next(&q.shared, &mut st).expect("one entry queued")
+            };
+            run_entry(&q.shared, entry);
+        }
+        #[cfg(feature = "xla-shared-client")]
+        while h.poll() != RunPoll::Parked {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(h.poll(), RunPoll::Parked);
+    }
+
+    #[test]
+    fn held_submission_waits_off_queue_and_resumes_on_requeue() {
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = submit_held(&q);
+        drive_to_held(&q, &h);
+        assert_eq!(q.live(), 1, "held stays admitted");
+        assert_eq!(q.pending(), 0, "held is off the ready queue — workers never busy-poll it");
+        // What StreamHandle::feed does once data arrives: take the held
+        // entry back out and re-enqueue it at the back of its class.
+        let entry =
+            lock(&q.shared.streams).remove(&h.handle.seq).expect("held entry registered");
+        {
+            let mut st = lock(&q.shared.state);
+            st.ready.entry(entry.handle.priority).or_default().push_back(entry);
+            st.queued += 1;
+        }
+        q.shared.cv.notify_one();
+        assert_eq!(h.join().unwrap().done(), Some(7));
+        assert_eq!(q.tenant("t").completed, 1);
+    }
+
+    #[test]
+    fn cancel_racing_a_hold_finishes_the_submission() {
+        // A cancel whose claim lost to the running job (flag up, nothing
+        // claimed) must be honored when the job holds — run_entry's Held
+        // arm reaps the held entry instead of leaving the joiner waiting
+        // on a feed that will never matter.
+        let q: RunQueue<usize> = RunQueue::new_paused(1);
+        let h = submit_held(&q);
+        h.handle.cancel.store(true, Ordering::SeqCst);
+        q.release();
+        match h.join().unwrap() {
+            RunResult::Cancelled(None) => {}
+            _ => panic!("a cancel racing the hold must finish Cancelled(None)"),
+        }
+        assert!(lock(&q.shared.streams).is_empty(), "held entry reaped");
+        assert_eq!(q.live(), 0);
+        assert_eq!(q.tenant("t").cancelled, 1);
+    }
+
+    #[cfg(not(feature = "xla-shared-client"))]
+    #[test]
+    fn joining_a_starved_held_submission_errors_instead_of_hanging() {
+        // Inline-drain build: the joining thread is the only executor,
+        // and a held stream has nothing runnable until its tenant feeds
+        // it — the join must fail loudly, not deadlock.
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = submit_held(&q);
+        drive_to_held(&q, &h);
+        let err = h.join().unwrap_err();
+        assert!(format!("{err:#}").contains("waiting for data"), "{err:#}");
+    }
+
+    #[test]
+    fn dropping_the_queue_fails_held_streaming_submissions() {
+        // Same policy as parked entries: a held stream is an interrupted
+        // run whose silent loss would read as success.
+        let q: RunQueue<usize> = RunQueue::new(1);
+        let h = submit_held(&q);
+        drive_to_held(&q, &h);
         drop(q);
         let err = h.join().unwrap_err();
         let msg = format!("{err:#}");

@@ -390,7 +390,9 @@ fn row_json(cell: &CellSpec, out: &RunOutput) -> String {
     let t = &out.summary.transfers;
     Json::obj()
         .set("adam_steps", out.summary.adam_steps)
-        .set("final_loss", out.summary.final_test_loss as f64)
+        // null, not the invalid `NaN` token, when the run never ran its
+        // final eval (a parked summary) — see Json::num_or_null.
+        .set("final_loss", Json::num_or_null(out.summary.final_test_loss as f64))
         .set("flops", out.summary.flops.total() as i64)
         .set("index", cell.index)
         .set("label", cell.label.as_str())

@@ -25,7 +25,10 @@
 //!
 //! Every read re-verifies content: a corrupt entry is *loudly* moved to
 //! `quarantine/` and reported as a miss so the caller rebuilds — never
-//! silently reused. All writes are temp-then-rename (the PR-4 checkpoint
+//! silently reused. Quarantining also drops any `refs/*` pointer still
+//! naming the corrupt hash ([`ArtifactStore::drop_ref`]): a dangling ref
+//! would turn every later resolution into an object-missing dead end
+//! instead of a clean, rebuildable miss. All writes are temp-then-rename (the PR-4 checkpoint
 //! idiom), so concurrent hosts racing on the same object converge on one
 //! valid blob. Store traffic is host-disk I/O only; it never touches the
 //! device transfer meters (`docs/transfer-contract.md`).
@@ -411,6 +414,14 @@ impl ArtifactStore {
         atomic_write(&self.root.join("refs").join(name), format!("{hash}\n").as_bytes())
     }
 
+    /// Remove a name -> hash pointer. Callers drop a ref when the object
+    /// it names was quarantined **and the ref still points at that hash**
+    /// — unconditionally dropping would race a concurrent re-publish that
+    /// already repointed the name at a fresh object.
+    pub fn drop_ref(&self, name: &str) {
+        let _ = fs::remove_file(self.root.join("refs").join(name));
+    }
+
     // -- W0 checkpoints -----------------------------------------------------
 
     /// Publish a local checkpoint under a named ref. Idempotent: if the ref
@@ -446,6 +457,12 @@ impl ArtifactStore {
                  quarantined, will rebuild"
             );
             self.quarantine_object(&hash);
+            // The ref now names an object that no longer exists at its
+            // address; drop it (unless a racing re-publish already
+            // repointed it) so the next fetch is a clean miss.
+            if self.read_ref(name).as_deref() == Some(hash.as_str()) {
+                self.drop_ref(name);
+            }
             StoreStats::bump(&self.stats.w0_misses, 1);
             return Ok(None);
         }
@@ -538,6 +555,13 @@ impl ArtifactStore {
             Err(e) => {
                 eprintln!("store: artifact object {hash} ('{key}') failed verification — quarantined");
                 self.quarantine_object(&hash);
+                // Drop the key's ref only when it still names the
+                // quarantined hash — under a lockfile pin the ref may
+                // legitimately point at a different (healthy) object.
+                let ref_name = format!("artifact/{key}");
+                if self.read_ref(&ref_name).as_deref() == Some(hash.as_str()) {
+                    self.drop_ref(&ref_name);
+                }
                 StoreStats::bump(&self.stats.artifact_misses, 1);
                 return Err(e.context(format!(
                     "store object {hash} for artifact '{key}' is corrupt (quarantined, never \
@@ -712,6 +736,49 @@ mod tests {
     }
 
     #[test]
+    fn quarantine_drops_stale_refs_but_not_repointed_ones() {
+        let root = tmp_dir("staleref");
+        let art = root.join("art");
+        fake_artifact(&art, b"AAAA", b"BBBB");
+        let store = ArtifactStore::open(root.join("store")).unwrap();
+        let corrupt = |hash: &str| {
+            let obj = store.object_path(hash);
+            let mut bytes = fs::read(&obj).unwrap();
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0x01;
+            fs::write(&obj, &bytes).unwrap();
+        };
+        let hash = store.ingest_artifact("fake", &art).unwrap();
+        assert_eq!(store.read_ref("artifact/fake").as_deref(), Some(hash.as_str()));
+        // Corrupt + resolve via the ref: quarantine must also drop the
+        // now-dangling ref, so later resolutions report "no ref — build
+        // it" (rebuildable) instead of an object-missing dead end.
+        corrupt(&hash);
+        let dest = root.join("host2").join("fake");
+        store.materialize_artifact("fake", None, &dest).unwrap_err();
+        assert!(store.read_ref("artifact/fake").is_none(), "stale ref must go");
+        let err = store.materialize_artifact("fake", None, &dest).unwrap_err();
+        assert!(err.to_string().contains("no pin or ref"), "{err:#}");
+        // Recovery: re-ingest recreates both object and ref.
+        store.ingest_artifact("fake", &art).unwrap();
+        assert_eq!(store.read_ref("artifact/fake").as_deref(), Some(hash.as_str()));
+        store.materialize_artifact("fake", None, &dest).unwrap();
+        // A pin-resolved quarantine must only drop the ref while it still
+        // names the corrupt hash — a racing re-publish that repointed the
+        // name at another object must survive.
+        corrupt(&hash);
+        let other = "0".repeat(64);
+        store.write_ref("artifact/fake", &other).unwrap();
+        store.materialize_artifact("fake", Some(&hash), &dest).unwrap_err();
+        assert_eq!(
+            store.read_ref("artifact/fake").as_deref(),
+            Some(other.as_str()),
+            "a repointed ref must survive another object's quarantine"
+        );
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
     fn lockfile_pin_mismatch_fails_fast() {
         let root = tmp_dir("pin");
         let art = root.join("art");
@@ -746,6 +813,10 @@ mod tests {
         fs::write(&obj, &bytes).unwrap();
         assert_eq!(store.fetch_checkpoint("w0/ff-tiny-120").unwrap(), None);
         assert!(!obj.exists());
+        assert!(
+            store.read_ref("w0/ff-tiny-120").is_none(),
+            "quarantine must drop the stale w0 ref, not leave it dangling"
+        );
         let s = store.stats.snapshot();
         assert_eq!((s.quarantined, s.w0_hits, s.w0_misses), (1, 1, 2));
         store.publish_checkpoint("w0/ff-tiny-120", &blob).unwrap();

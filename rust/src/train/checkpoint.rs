@@ -20,7 +20,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::ff::controller::{FfPosition, FfStageStats};
+use crate::ff::controller::FfStageStats;
+use crate::ff::policy::FfPosition;
 use crate::flops::FlopsCounter;
 use crate::metrics::{StepKind, StepRecord};
 use crate::model::tensor::Tensor;
@@ -43,6 +44,14 @@ pub struct ParkState {
     pub v: Vec<Tensor>,
     pub adam_steps: usize,
     pub ff: FfPosition,
+    /// Bulk tensor state owned by the FF policy (payload group `fa/`),
+    /// e.g. the cosine policy's previous Δ_W. Empty for most policies.
+    pub ff_aux: Vec<Tensor>,
+    /// `FfConfig::fingerprint()` of the config the snapshot was taken
+    /// under. A resume under an edited config fails loudly instead of
+    /// silently running with stale scheduling state. Empty = legacy park
+    /// file from before the fingerprint existed (check skipped).
+    pub ff_fingerprint: String,
     pub stages: Vec<FfStageStats>,
     pub records: Vec<StepRecord>,
     /// `(loss, step, flops, seconds)` rows, as in `RunLog::test_evals`.
@@ -182,6 +191,9 @@ pub fn save_park_state(path: &Path, state: &ParkState) -> Result<()> {
         params.insert(format!("m/{i:04}"), &state.m[i]);
         params.insert(format!("v/{i:04}"), &state.v[i]);
     }
+    for (i, t) in state.ff_aux.iter().enumerate() {
+        params.insert(format!("fa/{i:04}"), t);
+    }
     write_ffck(path, &params, Some(park_meta(state)))
 }
 
@@ -200,6 +212,7 @@ pub fn load_park_state(path: &Path) -> Result<ParkState> {
     let mut trainables: Vec<Tensor> = Vec::new();
     let mut m: Vec<Tensor> = Vec::new();
     let mut v: Vec<Tensor> = Vec::new();
+    let mut ff_aux: Vec<Tensor> = Vec::new();
     for (name, t) in params {
         let (group, idx) = name
             .split_once('/')
@@ -211,6 +224,7 @@ pub fn load_park_state(path: &Path) -> Result<ParkState> {
             "tr" => &mut trainables,
             "m" => &mut m,
             "v" => &mut v,
+            "fa" => &mut ff_aux,
             other => bail!("unexpected payload group '{other}' in park state"),
         };
         // BTreeMap order within a group is index order, so each group
@@ -240,13 +254,43 @@ pub fn load_park_state(path: &Path) -> Result<ParkState> {
     }
 
     let ffj = meta.get("ff");
-    let ff = FfPosition {
-        sgd_since_ff: req_usize(ffj, "sgd_since_ff")?,
-        total_sgd: req_usize(ffj, "total_sgd")?,
-        interval: req_usize(ffj, "interval")?,
-        consecutive_failures: req_usize(ffj, "consecutive_failures")?,
-        permanently_off: req_bool(ffj, "permanently_off")?,
+    // The snapshot is tagged per policy; a pre-PR-10 park file has no
+    // "policy" key and is an interval snapshot by construction.
+    let ff = match ffj.get("policy").as_str().unwrap_or("interval") {
+        "interval" => FfPosition::Interval {
+            sgd_since_ff: req_usize(ffj, "sgd_since_ff")?,
+            total_sgd: req_usize(ffj, "total_sgd")?,
+            interval: req_usize(ffj, "interval")?,
+            consecutive_failures: req_usize(ffj, "consecutive_failures")?,
+            permanently_off: req_bool(ffj, "permanently_off")?,
+        },
+        "loss_slope" => FfPosition::LossSlope {
+            sgd_since_ff: req_usize(ffj, "sgd_since_ff")?,
+            total_sgd: req_usize(ffj, "total_sgd")?,
+            consecutive_failures: req_usize(ffj, "consecutive_failures")?,
+            permanently_off: req_bool(ffj, "permanently_off")?,
+            window: ffj
+                .get("window")
+                .as_arr()
+                .context("park meta: loss-slope 'window' missing")?
+                .iter()
+                .map(|v| {
+                    // widened f32 → f64 on save, so narrowing is exact
+                    v.as_f64().map(|x| x as f32).context("park meta: invalid 'window' entry")
+                })
+                .collect::<Result<Vec<f32>>>()?,
+        },
+        "cosine" => FfPosition::Cosine {
+            sgd_since_ff: req_usize(ffj, "sgd_since_ff")?,
+            total_sgd: req_usize(ffj, "total_sgd")?,
+            consecutive_failures: req_usize(ffj, "consecutive_failures")?,
+            permanently_off: req_bool(ffj, "permanently_off")?,
+            last_cosine: req_f64(ffj, "last_cosine")?,
+            has_cosine: req_bool(ffj, "has_cosine")?,
+        },
+        other => bail!("park meta: unknown FF policy tag '{other}'"),
     };
+    let ff_fingerprint = meta.get("ff_fingerprint").as_str().unwrap_or("").to_string();
     let flj = meta.get("flops");
     let flops = FlopsCounter {
         train_fwd_bwd: req_u64(flj, "train_fwd_bwd")?,
@@ -309,6 +353,8 @@ pub fn load_park_state(path: &Path) -> Result<ParkState> {
         v,
         adam_steps: req_usize(meta, "adam_steps")?,
         ff,
+        ff_aux,
+        ff_fingerprint,
         stages,
         records,
         test_evals,
@@ -322,12 +368,49 @@ pub fn load_park_state(path: &Path) -> Result<ParkState> {
 /// the codec's f64), floats as-is: the codec prints shortest-round-trip,
 /// so every value read back is bit-identical.
 fn park_meta(state: &ParkState) -> Json {
-    let ff = Json::obj()
-        .set("sgd_since_ff", state.ff.sgd_since_ff)
-        .set("total_sgd", state.ff.total_sgd)
-        .set("interval", state.ff.interval)
-        .set("consecutive_failures", state.ff.consecutive_failures)
-        .set("permanently_off", state.ff.permanently_off);
+    let ff = match &state.ff {
+        FfPosition::Interval {
+            sgd_since_ff,
+            total_sgd,
+            interval,
+            consecutive_failures,
+            permanently_off,
+        } => Json::obj()
+            .set("policy", "interval")
+            .set("sgd_since_ff", *sgd_since_ff)
+            .set("total_sgd", *total_sgd)
+            .set("interval", *interval)
+            .set("consecutive_failures", *consecutive_failures)
+            .set("permanently_off", *permanently_off),
+        FfPosition::LossSlope {
+            sgd_since_ff,
+            total_sgd,
+            consecutive_failures,
+            permanently_off,
+            window,
+        } => Json::obj()
+            .set("policy", "loss_slope")
+            .set("sgd_since_ff", *sgd_since_ff)
+            .set("total_sgd", *total_sgd)
+            .set("consecutive_failures", *consecutive_failures)
+            .set("permanently_off", *permanently_off)
+            .set("window", window.iter().map(|&x| x as f64).collect::<Vec<f64>>()),
+        FfPosition::Cosine {
+            sgd_since_ff,
+            total_sgd,
+            consecutive_failures,
+            permanently_off,
+            last_cosine,
+            has_cosine,
+        } => Json::obj()
+            .set("policy", "cosine")
+            .set("sgd_since_ff", *sgd_since_ff)
+            .set("total_sgd", *total_sgd)
+            .set("consecutive_failures", *consecutive_failures)
+            .set("permanently_off", *permanently_off)
+            .set("last_cosine", *last_cosine)
+            .set("has_cosine", *has_cosine),
+    };
     let flops = Json::obj()
         .set("train_fwd_bwd", state.flops.train_fwd_bwd as i64)
         .set("adam_updates", state.flops.adam_updates as i64)
@@ -386,6 +469,7 @@ fn park_meta(state: &ParkState) -> Json {
         .set("adam_steps", state.adam_steps)
         .set("train_seconds", state.train_seconds)
         .set("ff", ff)
+        .set("ff_fingerprint", state.ff_fingerprint.as_str())
         .set("flops", flops)
         .set("transfers", transfers)
         .set("records", Json::Arr(records))
@@ -493,13 +577,15 @@ mod tests {
             m,
             v,
             adam_steps: rng.below(10_000),
-            ff: FfPosition {
+            ff: FfPosition::Interval {
                 sgd_since_ff: rng.below(50),
                 total_sgd: rng.below(10_000),
                 interval: 1 + rng.below(24),
                 consecutive_failures: rng.below(4),
                 permanently_off: seed % 2 == 0,
             },
+            ff_aux: Vec::new(),
+            ff_fingerprint: format!("v1|fixture|{seed}"),
             stages: vec![FfStageStats {
                 stage: 0,
                 at_step: 7,
@@ -552,6 +638,8 @@ mod tests {
         assert_eq!(a.v, b.v);
         assert_eq!(a.adam_steps, b.adam_steps);
         assert_eq!(a.ff, b.ff);
+        assert_eq!(a.ff_aux, b.ff_aux);
+        assert_eq!(a.ff_fingerprint, b.ff_fingerprint);
         assert_eq!(a.train_seconds.to_bits(), b.train_seconds.to_bits());
         assert_eq!(a.transfers, b.transfers);
         // FlopsCounter has no PartialEq: compare field by field
@@ -597,6 +685,97 @@ mod tests {
             let raw = load_params(&path).unwrap();
             assert_eq!(raw.len(), 3 * state.trainables.len());
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_policy_positions_and_aux_round_trip_bit_exactly() {
+        let dir = test_dir("park-policy");
+        // loss-slope: window floats must survive exactly, extremes included
+        let mut slope = park_fixture(11);
+        slope.ff = FfPosition::LossSlope {
+            sgd_since_ff: 3,
+            total_sgd: 17,
+            consecutive_failures: 1,
+            permanently_off: false,
+            window: vec![1.25, f32::MIN_POSITIVE, 0.333_333_34, -0.0, 1e30],
+        };
+        let path = dir.join("slope.ffpk");
+        save_park_state(&path, &slope).unwrap();
+        assert_park_eq(&slope, &load_park_state(&path).unwrap());
+
+        // cosine: scalar position plus the previous Δ_W through `fa/`
+        let mut cos = park_fixture(12);
+        cos.ff = FfPosition::Cosine {
+            sgd_since_ff: 2,
+            total_sgd: 9,
+            consecutive_failures: 0,
+            permanently_off: false,
+            last_cosine: 0.912_345_678_901_234_5,
+            has_cosine: true,
+        };
+        cos.ff_aux = vec![
+            Tensor::from_vec(&[2, 2], vec![0.5, -1.5, f32::MIN_POSITIVE, 3.0]),
+            Tensor::from_vec(&[3], vec![1.0, 2.0, -0.0]),
+        ];
+        let path = dir.join("cosine.ffpk");
+        save_park_state(&path, &cos).unwrap();
+        let loaded = load_park_state(&path).unwrap();
+        assert_park_eq(&cos, &loaded);
+        // the aux tensors are ordinary payload entries alongside tr/m/v
+        let raw = load_params(&path).unwrap();
+        assert_eq!(raw.len(), 3 * cos.trainables.len() + 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_park_header_parses_as_interval_with_no_fingerprint() {
+        // A pre-PR-10 park file has a flat untagged `ff` object and no
+        // `ff_fingerprint`; it must load as an Interval snapshot with an
+        // empty fingerprint (resume-time config check skipped).
+        let dir = test_dir("park-legacy");
+        let state = park_fixture(13);
+        let mut params: BTreeMap<String, &Tensor> = BTreeMap::new();
+        for (i, t) in state.trainables.iter().enumerate() {
+            params.insert(format!("tr/{i:04}"), t);
+            params.insert(format!("m/{i:04}"), &state.m[i]);
+            params.insert(format!("v/{i:04}"), &state.v[i]);
+        }
+        let mut meta = park_meta(&state);
+        if let Json::Obj(map) = &mut meta {
+            map.remove("ff_fingerprint");
+            if let Some(Json::Obj(ff)) = map.get_mut("ff") {
+                ff.remove("policy");
+            }
+        }
+        let path = dir.join("legacy.ffpk");
+        write_ffck(&path, &params, Some(meta)).unwrap();
+        let loaded = load_park_state(&path).unwrap();
+        assert_eq!(loaded.ff, state.ff);
+        assert!(loaded.ff_fingerprint.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_policy_tag_fails_loudly() {
+        let dir = test_dir("park-badtag");
+        let state = park_fixture(14);
+        let mut params: BTreeMap<String, &Tensor> = BTreeMap::new();
+        for (i, t) in state.trainables.iter().enumerate() {
+            params.insert(format!("tr/{i:04}"), t);
+            params.insert(format!("m/{i:04}"), &state.m[i]);
+            params.insert(format!("v/{i:04}"), &state.v[i]);
+        }
+        let mut meta = park_meta(&state);
+        if let Json::Obj(map) = &mut meta {
+            if let Some(Json::Obj(ff)) = map.get_mut("ff") {
+                ff.insert("policy".into(), Json::Str("bogus".into()));
+            }
+        }
+        let path = dir.join("badtag.ffpk");
+        write_ffck(&path, &params, Some(meta)).unwrap();
+        let err = load_park_state(&path).unwrap_err();
+        assert!(err.to_string().contains("unknown FF policy tag"), "got: {err:#}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -172,6 +172,13 @@ pub trait Engine {
     fn frozen_count(&self) -> usize;
     /// Total frozen elements (sync-free; resume byte accounting).
     fn frozen_numel(&self) -> usize;
+    /// LoFT-style optimizer-state realignment (`OptimBackend::Loft`,
+    /// applied by the trainer after each FF stage): `m *= decay`,
+    /// `v *= decay²`. Dispatches the artifact's `loft_realign` program
+    /// with both moment sets donated in place when the manifest carries
+    /// it; otherwise falls back to a host-side scale (the next dispatch
+    /// re-uploads the moments — correct, just not transfer-free).
+    fn loft_realign(&mut self, decay: f32) -> Result<()>;
 }
 
 /// How a step's micro losses come back: deferred device buffers (device
@@ -682,6 +689,46 @@ impl Engine for StepEngine {
 
     fn frozen_numel(&self) -> usize {
         self.fr.numel()
+    }
+
+    fn loft_realign(&mut self, decay: f32) -> Result<()> {
+        if self.art.manifest.has_program("loft_realign") {
+            // Device path: donated in place, zero state bytes moved. The
+            // program is fetched lazily — baseline Adam runs on the same
+            // artifact never compile it.
+            let prog = self.art.program("loft_realign")?;
+            let decay_buf = self.meter.upload_scalar(&self.rt, decay)?;
+            let m_bufs = self.m.take_device_buffers()?;
+            let v_bufs = self.v.take_device_buffers()?;
+            let mut inputs: Vec<InputBuf> = Vec::with_capacity(prog.spec.inputs.len());
+            inputs.extend(m_bufs.into_iter().map(InputBuf::Donated));
+            inputs.extend(v_bufs.into_iter().map(InputBuf::Donated));
+            inputs.push(InputBuf::Borrowed(&decay_buf));
+            let outs = prog.execute_raw_donated_metered(inputs, Some(&self.meter))?;
+            let mut outs = outs.into_iter();
+            self.m.adopt_all(&mut outs)?;
+            self.v.adopt_all(&mut outs)?;
+        } else {
+            // Host fallback for artifacts emitted before the program
+            // existed: scale the synced moment tensors; the restore makes
+            // the host authoritative, so the next dispatch re-uploads.
+            self.m.sync_host()?;
+            self.v.sync_host()?;
+            let scale = |ts: &[Tensor], k: f32| -> Vec<Tensor> {
+                ts.iter()
+                    .map(|t| {
+                        let mut t = t.clone();
+                        t.data.iter_mut().for_each(|x| *x *= k);
+                        t
+                    })
+                    .collect()
+            };
+            let m_scaled = scale(self.m.tensors(), decay);
+            let v_scaled = scale(self.v.tensors(), decay * decay);
+            self.m.restore(&m_scaled);
+            self.v.restore(&v_scaled);
+        }
+        Ok(())
     }
 }
 

@@ -125,6 +125,8 @@ pub fn ensure_pretrained_via(
         seed: 0x11e, // fixed: W0 must be identical across experiments
         ff: FfConfig { enabled: false, ..FfConfig::default() },
         adam: Default::default(),
+        backend: Default::default(),
+        loft_decay: 0.5,
         train_examples: tp.train_examples,
         test_examples: 64,
     };

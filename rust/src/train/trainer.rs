@@ -39,7 +39,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::analysis::linalg::mean_condition_number;
-use crate::config::TrainConfig;
+use crate::config::{OptimBackend, TrainConfig};
 use crate::data::batcher::eval_batches;
 use crate::data::corpus::{make_dataset, Dataset};
 use crate::data::pipeline::Pipeline;
@@ -524,7 +524,17 @@ impl Trainer {
             let mut target = TrainerSearchTarget { trainer: self, delta: &delta };
             line_search_thresholded(&mut target, baseline, max_tau, min_rel)?
         };
-        self.record_ff(&result, grad_norm, grad_cond)
+        let stats = self.record_ff(&result, grad_norm, grad_cond)?;
+        // LoFT-style backend: the stage just jumped the weights far along
+        // Δ_W, so the Adam moments describe pre-jump curvature. Decay them
+        // (m *= d, v *= d²) so the next steps are not mis-scaled by stale
+        // second-moment estimates. The realign's FLOPs (2·|trainables|
+        // multiplies) are charged as FF parameter updates.
+        if self.cfg.backend == OptimBackend::Loft {
+            self.engine.loft_realign(self.cfg.loft_decay)?;
+            self.flops.ff_param_updates += 2 * self.trainable_numel() as u64;
+        }
+        Ok(stats)
     }
 
     /// Fig 10 probe: run exactly `n_steps` simulated steps with *no* stop
@@ -551,6 +561,29 @@ impl Trainer {
         }
         self.engine.restore_trainables(&snap);
         Ok(losses)
+    }
+
+    /// Feed the active FF policy whichever signals it requested after an
+    /// SGD step. The default `IntervalPolicy` requests nothing, so this
+    /// is a no-op on the default path — zero extra evals, zero extra
+    /// transfers — which is what keeps the default run loop bit-identical
+    /// to the pre-policy controller. Signal-hungry policies run on the
+    /// synchronous path: observing Δ_W or a tiny-val loss forces a drain
+    /// at each step boundary (the val eval is charged as FF-probe FLOPs,
+    /// exactly like a line-search probe).
+    fn observe_policy_signals(&mut self) -> Result<()> {
+        if self.ffc.wants_delta() {
+            self.drain_pending(SyncReason::StepResult)?;
+            if let Some(d) = self.engine.delta() {
+                let d = d.to_vec();
+                self.ffc.observe_delta(&d);
+            }
+        }
+        if self.ffc.wants_val_loss() {
+            let loss = self.eval_val()?;
+            self.ffc.observe_val_loss(loss);
+        }
+        Ok(())
     }
 
     fn record_ff(
@@ -646,6 +679,7 @@ impl Trainer {
             let did_ff = match decision {
                 FfDecision::Sgd => {
                     self.dispatch_sgd_step()?;
+                    self.observe_policy_signals()?;
                     false
                 }
                 FfDecision::FastForward => {
@@ -717,6 +751,8 @@ impl Trainer {
             v,
             adam_steps: self.adam_steps(),
             ff: self.ffc.position(),
+            ff_aux: self.ffc.aux_state(),
+            ff_fingerprint: self.cfg.ff.fingerprint(),
             stages: self.ffc.stages.clone(),
             records: self.log.records.clone(),
             test_evals: self.log.test_evals.clone(),
@@ -759,11 +795,25 @@ impl Trainer {
                 shapes[i]
             );
         }
+        // A snapshot is only meaningful under the FfConfig it was taken
+        // with: an edited config (different policy, interval bounds,
+        // thresholds…) would silently run with stale scheduling state.
+        // Legacy park files (empty fingerprint) skip the check; the
+        // policy-kind tag on the position still guards the worst case.
+        ensure!(
+            park.ff_fingerprint.is_empty() || park.ff_fingerprint == self.cfg.ff.fingerprint(),
+            "park state was taken under a different FfConfig \
+             (snapshot '{}' vs current '{}') — refusing to resume; \
+             re-submit with the original config",
+            park.ff_fingerprint,
+            self.cfg.ff.fingerprint()
+        );
         self.engine.restore_state(&park.trainables, &park.m, &park.v, park.adam_steps);
         // The pipeline replays deterministically from the seed: discard
         // the batches the parked run already consumed (one per Adam step).
         self.engine.skip_batches(park.adam_steps)?;
-        self.ffc.restore_position(park.ff);
+        self.ffc.restore_position(&park.ff)?;
+        self.ffc.restore_aux(&park.ff_aux)?;
         self.ffc.stages = park.stages.clone();
         self.flops = park.flops;
         for r in &park.records {

@@ -120,6 +120,20 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// `Json::Num` for a finite value, `Json::Null` otherwise. The
+    /// serializer formats `Num` with `{}`, so a NaN or ±inf smuggled into
+    /// a report prints the invalid tokens `NaN`/`inf` that no JSON parser
+    /// (including [`Json::parse`]) accepts. Parked runs carry
+    /// `final_test_loss = NaN` (`RunSummary` docs) — every emitter of a
+    /// possibly-non-finite metric must route it through here.
+    pub fn num_or_null(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
+    }
+
     pub fn set(mut self, key: &str, v: impl Into<Json>) -> Json {
         if let Json::Obj(ref mut o) = self {
             o.insert(key.to_string(), v.into());
@@ -477,6 +491,20 @@ mod tests {
         let v = Json::parse("123456789012").unwrap();
         assert_eq!(v.to_string(), "123456789012");
         assert_eq!(v.as_i64(), Some(123456789012));
+    }
+
+    #[test]
+    fn non_finite_nums_serialize_as_null_not_nan_tokens() {
+        assert_eq!(Json::num_or_null(f64::NAN), Json::Null);
+        assert_eq!(Json::num_or_null(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num_or_null(f64::NEG_INFINITY), Json::Null);
+        assert_eq!(Json::num_or_null(2.125), Json::Num(2.125));
+        // The guard exists because a raw Num(NaN) emits the invalid
+        // token `NaN` that parse() itself rejects.
+        assert!(Json::parse(&Json::Num(f64::NAN).to_string()).is_err());
+        let row = Json::obj().set("final_loss", Json::num_or_null(f64::NAN));
+        assert_eq!(row.to_string(), r#"{"final_loss":null}"#);
+        assert_eq!(Json::parse(&row.to_string()).unwrap(), row);
     }
 
     #[test]

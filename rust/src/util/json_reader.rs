@@ -311,6 +311,27 @@ mod tests {
     }
 
     #[test]
+    fn parked_run_rows_round_trip_with_null_loss() {
+        // A parked run's summary carries final_test_loss = NaN; the shard
+        // row writer must emit `null` (Json::num_or_null), never a bare
+        // `NaN` token — which this reader (and Json::parse) rejects.
+        use crate::util::json::Json;
+        let row = Json::obj()
+            .set("adam_steps", 12usize)
+            .set("final_loss", Json::num_or_null(f64::NAN))
+            .to_string();
+        assert_eq!(row, r#"{"adam_steps":12,"final_loss":null}"#);
+        let mut saw_null = false;
+        scan(&row, &mut |_, ev| saw_null |= ev == Event::Null).unwrap();
+        assert!(saw_null, "the NaN loss must surface as a Null token");
+        assert_eq!(Json::parse(&row).unwrap().to_string(), row);
+        // The pre-fix emission is invalid to both parsers.
+        let bad = format!("{{\"final_loss\":{}}}", f64::NAN);
+        assert_eq!(scan(&bad, &mut |_, _| {}).unwrap_err().msg, "unexpected character");
+        assert!(Json::parse(&bad).is_err());
+    }
+
+    #[test]
     fn agrees_with_the_tree_parser_on_real_rows() {
         // A row exactly as the shard report writer emits it (compact,
         // sorted keys): the reader must tokenize it and the offsets must

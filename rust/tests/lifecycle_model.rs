@@ -16,6 +16,9 @@
 //!   as `Parked`),
 //! * **claims are exclusive** (no submission is ever owned by two
 //!   executors — worker pop vs pack leader vs transient cancel claim),
+//! * **held continuations are parked** (a streaming submission sitting
+//!   data-starved off the ready list is `Parked` or a terminal husk,
+//!   never `Running` — the stranded-joiner ordering bug),
 //!
 //! and that no reachable state is **stuck** (work remains but every
 //! worker is asleep with no wakeup pending — a lost wakeup).
@@ -161,6 +164,47 @@ fn cancel_vs_park_races_on_every_submission() {
         steps: vec![2, 2],
         cancels: vec![0, 1],
         parks: vec![0, 1],
+        ..Config::default()
+    };
+    assert_passes(&cfg);
+}
+
+#[test]
+fn streaming_hold_feed_with_cancel_and_join() {
+    // Stream-feed lifecycle: submission 0 is streaming — its first slot
+    // finds no data, parks its continuation *off* the ready list
+    // (`JobYield::Held`), and only the tenant's `Feed` brings it back.
+    // The feed may land before the first pop, between hold and re-pop,
+    // or after a cancel already reaped the held run (re-enqueueing a
+    // husk the next pop must reap); a joiner races the completions
+    // stream on the batch submission throughout. No interleaving may
+    // strand the held run, double-own it, or lose its single delivery.
+    let cfg = Config {
+        workers: 2,
+        steps: vec![2, 1],
+        streams: vec![0],
+        cancels: vec![0],
+        joins: vec![1],
+        ..Config::default()
+    };
+    let stats = assert_passes(&cfg);
+    assert!(stats.states > 200, "suspiciously small space: {stats:?}");
+}
+
+#[test]
+fn two_streams_race_feeds_parks_and_a_cancel() {
+    // Two streaming submissions against two workers: both hold, feeds
+    // land in either order, a park request targets one stream (the park
+    // flag must survive the hold and fire on the post-feed slot) and a
+    // cancel targets the other (racing the hold, the held state, and
+    // the resumed run). Exercises two continuations coexisting in the
+    // held set and every feed/requeue/claim interleaving between them.
+    let cfg = Config {
+        workers: 2,
+        steps: vec![2, 2],
+        streams: vec![0, 1],
+        parks: vec![0],
+        cancels: vec![1],
         ..Config::default()
     };
     assert_passes(&cfg);

@@ -16,7 +16,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use fastforward::config::{presets, FfConfig, TrainConfig};
+use fastforward::config::{presets, FfConfig, FfPolicyKind, OptimBackend, TrainConfig};
 use fastforward::metrics::StepKind;
 use fastforward::runtime::{Runtime, TransferSnapshot};
 use fastforward::sched::{
@@ -536,4 +536,145 @@ fn queue_quantum_parks_and_resumes_with_exact_tenant_accounting() {
         summed = summed.plus(&stats.transfers);
     }
     assert_eq!(summed, delta, "park/resume billing must stay exact");
+}
+
+/// An FF-enabled spec with an explicit trigger policy and optimizer
+/// backend (warmup 3 + T_interval 3 from [`cfg`], so an 8-step run is
+/// guaranteed to cross FF stages — park/resume round-trips policy state,
+/// not just weights).
+fn policy_spec(
+    rig: &Rig,
+    label: &str,
+    kind: FfPolicyKind,
+    backend: OptimBackend,
+    steps: usize,
+) -> RunSpec {
+    let mut c = cfg(23, true);
+    c.backend = backend;
+    c.ff.policy = kind;
+    RunSpec {
+        label: label.to_string(),
+        cfg: c,
+        stop: StopRule::MaxSteps(steps),
+        base: Some(Arc::clone(&rig.base)),
+        drain_interval: None,
+    }
+}
+
+#[test]
+fn every_policy_survives_park_resume_bit_identically() {
+    // The FfPosition snapshot is tagged per policy: for each trigger
+    // policy (and the LoFT backend on top), a quantum-2 churned run must
+    // reproduce the uninterrupted reference bit-for-bit with whole-run
+    // step counts.
+    let r = rig();
+    let mut pairs: Vec<(FfPolicyKind, OptimBackend)> =
+        FfPolicyKind::ALL.iter().map(|&k| (k, OptimBackend::Adam)).collect();
+    pairs.push((FfPolicyKind::Interval, OptimBackend::Loft));
+    for (kind, backend) in pairs {
+        let tag = format!("{}-{}", kind.as_str(), backend.as_str());
+        let reference = RunQueue::new(1)
+            .submit_run(&r.rt, &r.cache, policy_spec(&r, &format!("ref/{tag}"), kind, backend, 8), 0, "t")
+            .unwrap()
+            .join()
+            .unwrap()
+            .done()
+            .expect("reference completes");
+        if kind == FfPolicyKind::Interval {
+            assert!(!reference.stages.is_empty(), "interval must fast-forward within 8 steps");
+        }
+        let q = RunQueue::new_paused(1);
+        q.set_step_quantum(2);
+        let h = q
+            .submit_run(&r.rt, &r.cache, policy_spec(&r, &format!("churn/{tag}"), kind, backend, 8), 0, "t")
+            .unwrap();
+        q.release();
+        let churned = h.join().unwrap().done().expect("churned run resumes to completion");
+        assert!(reference.bit_identical(&churned), "{tag}: park/resume changed the losses");
+        assert_eq!(reference.summary.adam_steps, churned.summary.adam_steps, "{tag}");
+        assert_eq!(reference.summary.sim_steps, churned.summary.sim_steps, "{tag}");
+        assert!(q.tenant("t").parked >= 1, "{tag}: quantum 2 over 8 steps must park");
+    }
+}
+
+#[test]
+fn loft_decay_one_is_bit_identical_to_adam_backend() {
+    // decay = 1 scales the Adam moments by exactly 1.0 (m·1, v·1²): the
+    // realignment dispatches but cannot perturb the trajectory, so the
+    // whole run must match the plain-Adam backend bit-for-bit. A real
+    // decay must leave a trace — at minimum the charged realign FLOPs.
+    let r = rig();
+    let run = |label: &str, backend: OptimBackend, decay: f32| {
+        let mut s = policy_spec(&r, label, FfPolicyKind::Interval, backend, 8);
+        s.cfg.loft_decay = decay;
+        RunQueue::new(1)
+            .submit_run(&r.rt, &r.cache, s, 0, "t")
+            .unwrap()
+            .join()
+            .unwrap()
+            .done()
+            .expect("run completes")
+    };
+    let adam = run("adam", OptimBackend::Adam, 0.5);
+    let noop = run("loft-noop", OptimBackend::Loft, 1.0);
+    assert!(adam.bit_identical(&noop), "decay-1 realignment must be a bit-exact no-op");
+    let loft = run("loft", OptimBackend::Loft, 0.5);
+    assert!(
+        loft.summary.flops.total() > adam.summary.flops.total(),
+        "the LoFT backend must charge its realignment FLOPs"
+    );
+}
+
+#[test]
+fn streaming_run_matches_its_batch_twin_with_exact_tenant_bytes() {
+    // submit_stream: the tenant feeds examples in uneven chunks and then
+    // closes the stream. The trainer consumes them under the same
+    // park/resume machinery as any queue run, so the result must be
+    // bit-identical to a batch submission of the same spec — and the
+    // streaming tenant's byte totals (data-starved holds and resumes
+    // included) must still sum exactly to the global meter delta.
+    let r = rig();
+    let steps = 6;
+    let batch = RunQueue::new(1)
+        .submit_run(&r.rt, &r.cache, spec(&r, "batch", 51, true, steps), 0, "t")
+        .unwrap()
+        .join()
+        .unwrap()
+        .done()
+        .expect("batch twin completes");
+
+    let before = r.rt.stats.snapshot();
+    let q = RunQueue::new(1);
+    let s = spec(&r, "stream", 51, true, steps);
+    let gb = s.cfg.global_batch as u64;
+    let total = gb * steps as u64;
+    let (h, stream) = q.submit_stream(&r.rt, &r.cache, s, 0, "erin").unwrap();
+    stream.feed(gb / 2); // less than one step's worth: starved at first
+    stream.feed(total - gb / 2);
+    assert_eq!(stream.fed(), total);
+    stream.finish();
+    stream.feed(999); // after finish: a no-op, the step budget is fixed
+    assert_eq!(stream.fed(), total, "feeds after finish must not change the budget");
+    let out = h.join().unwrap().done().expect("stream completes after finish");
+    assert!(batch.bit_identical(&out), "streamed run diverged from its batch twin");
+    assert_eq!(out.summary.adam_steps, steps, "the stream fed exactly the step budget");
+
+    let delta = r.rt.stats.snapshot().since(&before);
+    let mut summed = TransferSnapshot::default();
+    for stats in q.tenants().values() {
+        summed = summed.plus(&stats.transfers);
+    }
+    assert_eq!(summed, delta, "streaming tenant bytes must stay exact");
+}
+
+#[test]
+fn submit_stream_rejects_non_maxsteps_stop_rules() {
+    // A stream's upper bound is its MaxSteps rule; target-loss rules
+    // would race the feed and must be refused at submission, loudly.
+    let r = rig();
+    let q = RunQueue::new(1);
+    let mut s = spec(&r, "bad", 1, false, 4);
+    s.stop = StopRule::TargetLoss { target: 0.0, eps: 1e-3, eval_every: 2, max_steps: 8 };
+    let err = q.submit_stream(&r.rt, &r.cache, s, 0, "t").unwrap_err();
+    assert!(format!("{err:#}").contains("MaxSteps"), "{err:#}");
 }

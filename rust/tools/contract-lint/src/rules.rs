@@ -406,6 +406,8 @@ fn lock_name(rel: &str, expr: &str) -> Option<(&'static str, u8)> {
             "pack_pool" => Some(("queue.pack_pool", 10)),
             "tenants" => Some(("queue.tenants", 30)),
             "running" => Some(("queue.running", 32)),
+            "feed" => Some(("stream.feed", 33)),
+            "streams" => Some(("queue.streams", 34)),
             "data" | "slot" => Some(("queue.pack_data", 38)),
             "windows" => Some(("queue.windows", 41)),
             "quotas" => Some(("queue.quotas", 42)),
@@ -434,6 +436,8 @@ fn registry_level(name: &str) -> Option<u8> {
         ("queue.state", 20),
         ("queue.tenants", 30),
         ("queue.running", 32),
+        ("stream.feed", 33),
+        ("queue.streams", 34),
         ("handle.state", 35),
         ("queue.pack_data", 38),
         ("queue.windows", 41),
@@ -586,6 +590,8 @@ fn registry_static(name: &str) -> &'static str {
         "queue.state" => "queue.state",
         "queue.tenants" => "queue.tenants",
         "queue.running" => "queue.running",
+        "stream.feed" => "stream.feed",
+        "queue.streams" => "queue.streams",
         "handle.state" => "handle.state",
         "queue.pack_data" => "queue.pack_data",
         "queue.windows" => "queue.windows",
